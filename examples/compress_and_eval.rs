@@ -1,0 +1,101 @@
+//! End-to-end driver (the repo's flagship example; results recorded in
+//! EXPERIMENTS.md §E2E):
+//!
+//!   1. trains a sim transformer from scratch **through the AOT train-step
+//!      artifact** (Rust drives, HLO computes), logging the loss curve;
+//!   2. compresses it with the full SLiM pipeline (SLiM-Quant → Wanda 2:4 →
+//!      SLiM-LoRA) and the main baselines;
+//!   3. evaluates perplexity + 6-task zero-shot accuracy for each;
+//!   4. runs the paper's PEFT fine-tuning on the SLiM model.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example compress_and_eval
+//! ```
+
+use slim::compress::Preset;
+use slim::data::{Corpus, CorpusSpec};
+use slim::eval;
+use slim::experiments::Ctx;
+use slim::model::Batch;
+use slim::runtime::Runtime;
+use slim::sparse::SparsityPattern;
+use slim::train;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "sim-350m".to_string());
+    let rt = Runtime::load(Runtime::default_dir())?;
+    let corpus = Corpus::generate(CorpusSpec::SynthWeb, 120_000);
+    let cfg = slim::model::by_name(&model).expect("known model");
+
+    // ── 1. pretraining through the AOT artifact ─────────────────────────
+    let steps = 500;
+    println!("[1/4] training {model} for {steps} steps via train_step_{model}.hlo.txt");
+    let t0 = std::time::Instant::now();
+    let report = train::pretrain(&rt, &cfg, &corpus, steps, 0xe2e)?;
+    println!(
+        "      done in {:.1}s — loss curve (every 50): {}",
+        t0.elapsed().as_secs_f64(),
+        report
+            .losses
+            .iter()
+            .step_by(50)
+            .map(|l| format!("{l:.2}"))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    );
+    let weights = report.weights;
+
+    // ── 2+3. compress with each method and evaluate ──────────────────────
+    println!("[2/4] calibrating ({} sequences) and compressing", 8);
+    let mut rng = slim::rng::Pcg32::seeded(1);
+    let toks = corpus.calibration(8, cfg.max_seq, &mut rng);
+    let batch = Batch::new(toks, 8, cfg.max_seq);
+    let mut taps = slim::model::ActivationTap::new();
+    slim::model::forward(&cfg, &weights, &batch, Some(&mut taps), None);
+
+    let dense_ppl = eval::perplexity(&cfg, &weights, None, &corpus, 10);
+    let dense_acc = eval::zero_shot(&cfg, &weights, None, &corpus, 60);
+    println!("[3/4] dense:            ppl {:6.2}  acc {:5.2}%", dense_ppl, dense_acc.average);
+
+    let pattern = SparsityPattern::TWO_FOUR;
+    let mut slim_cm = None;
+    for preset in [
+        Preset::MagnitudeGroupAbsMax,
+        Preset::WandaGroupAbsMax,
+        Preset::SparseGptGroupOptq,
+        Preset::NaiveLora,
+        Preset::SlimLora,
+        Preset::SlimLoraQ,
+    ] {
+        let ccfg = preset.config(Some(pattern), 4);
+        let cm = slim::model::compress_model(&cfg, &weights, &taps, &ccfg);
+        let ppl = eval::perplexity(&cfg, &weights, Some(&cm.overrides), &corpus, 10);
+        let acc = eval::zero_shot(&cfg, &weights, Some(&cm.overrides), &corpus, 60);
+        let (m, q) = preset.label();
+        println!("      {m:<22} {q:<14} ppl {ppl:6.2}  acc {:5.2}%", acc.average);
+        if preset == Preset::SlimLora {
+            slim_cm = Some(cm);
+        }
+    }
+
+    // ── 4. the paper's PEFT recipe on the SLiM model ─────────────────────
+    println!("[4/4] fine-tuning SLiM-LoRA adapters (frozen base, paper §3.4)");
+    let mut cm = slim_cm.unwrap();
+    let losses = train::finetune_adapters(&rt, &cfg, &weights, &mut cm, &corpus, 40, false)?;
+    let ppl_ft = eval::perplexity(&cfg, &weights, Some(&cm.overrides), &corpus, 10);
+    let acc_ft = eval::zero_shot(&cfg, &weights, Some(&cm.overrides), &corpus, 60);
+    println!(
+        "      FT loss {:.3} → {:.3} | SLiM-LoRA + FT: ppl {:6.2}  acc {:5.2}%",
+        losses.first().unwrap_or(&0.0),
+        losses.last().unwrap_or(&0.0),
+        ppl_ft,
+        acc_ft.average
+    );
+    println!("\nper-task accuracy (SLiM-LoRA + FT):");
+    for (task, acc) in &acc_ft.per_task {
+        println!("      {task:<22} {acc:5.1}%");
+    }
+    // Keep the Ctx type exercised for docs discoverability.
+    let _ = Ctx::new(true);
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Pareto sweep (paper Figure 2): accuracy vs model bytes across the sim
+//! family and compression methods, via the public API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example pareto_sweep
+//! ```
+//!
+//! The paper's claim: at equal byte budget, a larger SLiM-compressed model
+//! beats a smaller dense one. The example prints the (bytes, accuracy)
+//! points and checks the claim pairwise.
+
+use slim::compress::Preset;
+use slim::experiments::Ctx;
+use slim::model::size::{model_bytes, SizeSpec};
+use slim::sparse::SparsityPattern;
+use slim::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(true)?;
+    let models = ["sim-125m", "sim-350m", "sim-llama-7b"];
+
+    #[derive(Debug)]
+    struct Point {
+        model: &'static str,
+        method: &'static str,
+        bytes: u64,
+        acc: f64,
+    }
+    let mut points = Vec::new();
+
+    for name in models {
+        let b = ctx.bundle(name)?;
+        points.push(Point {
+            model: name,
+            method: "dense",
+            bytes: model_bytes(&b.cfg, &SizeSpec::dense()),
+            acc: ctx.acc(&b, None),
+        });
+        let cm = ctx.compress(&b, Preset::SlimLoraQ, Some(SparsityPattern::TWO_FOUR), 4);
+        points.push(Point {
+            model: name,
+            method: "SLiM-LoRA^Q",
+            bytes: model_bytes(&b.cfg, &SizeSpec::slim(true)),
+            acc: ctx.acc(&b, Some(&cm.overrides)),
+        });
+    }
+
+    points.sort_by_key(|p| p.bytes);
+    println!("{:<14} {:<12} {:>10} {:>8}", "model", "method", "bytes", "acc%");
+    for p in &points {
+        println!("{:<14} {:<12} {:>10} {:>8.2}", p.model, p.method, fmt_bytes(p.bytes), p.acc);
+    }
+
+    // Pareto check: compressed larger model vs dense smaller model at
+    // comparable-or-smaller bytes.
+    let mut wins = 0;
+    let mut comparisons = 0;
+    for big in points.iter().filter(|p| p.method != "dense") {
+        for small in points.iter().filter(|p| p.method == "dense") {
+            if big.bytes <= small.bytes * 11 / 10 && big.model != small.model {
+                comparisons += 1;
+                if big.acc >= small.acc {
+                    wins += 1;
+                }
+            }
+        }
+    }
+    println!("\nPareto: compressed-model wins {wins}/{comparisons} comparable-budget matchups");
+    Ok(())
+}

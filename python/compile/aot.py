@@ -1,0 +1,231 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts + manifest.
+
+The interchange format is HLO *text*, not serialized HloModuleProto: the
+image's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Per model config we emit:
+  train_step_<name>   — fused AdamW pretraining step
+  lm_loss_<name>      — mean next-token NLL (perplexity eval)
+  lm_fwd_<name>       — dense logits
+  clm_fwd_<name>      — compressed logits (L1 Pallas kernel on every linear)
+  ft_step_<name>      — PEFT AdamW on adapters (paper §3.4)
+plus the standalone kernels:
+  layer_fwd_<m>x<din>x<dout>r<rank> — the fused compressed-linear kernel
+  quant_scan          — SLiM-Quant alpha error scan
+
+`manifest.json` records, for every entry, the positional input/output specs
+(name, shape, dtype) that rust/src/runtime uses to marshal Weights into HLO
+arguments.
+
+Usage: python -m compile.aot --out ../artifacts [--configs sim-125m,...]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.quant_scan import quant_scan
+from .kernels.slim_matmul import slim_matmul
+
+# Fixed AOT batch geometries (documented in the manifest).
+TRAIN_B, EVAL_B, FWD_B, FT_B, SEQ = 16, 8, 4, 8, 64
+
+# Configs that get the (larger) compressed/FT graphs.
+QUICK = ["sim-125m", "sim-350m", "sim-1.3b", "sim-llama-7b"]
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def zeros_like_specs(specs):
+    return [jnp.zeros(tuple(s["shape"]),
+                      jnp.int32 if s["dtype"] == "i32" else jnp.float32)
+            for s in specs]
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, in_specs, meta=None):
+        """Lower fn(*example_args) and write <name>.hlo.txt."""
+        args = zeros_like_specs(in_specs)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        flat, _ = jax.tree_util.tree_flatten(out_avals)
+        outputs = [spec(f"out{i}", a.shape,
+                        "i32" if str(a.dtype).startswith("int") else "f32")
+                   for i, a in enumerate(flat)]
+        self.entries.append({
+            "name": name, "file": fname,
+            "inputs": in_specs, "outputs": outputs,
+            "meta": meta or {},
+        })
+        print(f"  wrote {fname} ({len(text)//1024} KiB, "
+              f"{len(in_specs)} inputs, {len(outputs)} outputs)")
+
+    def finish(self):
+        manifest = {"version": 1, "entries": self.entries}
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"manifest: {len(self.entries)} entries")
+
+
+def dense_param_inspecs(cfg):
+    return [spec(n, s) for n, s in M.param_specs(cfg)]
+
+
+def compressed_param_inspecs(cfg):
+    return [spec(n, s) for n, s in M.compressed_param_specs(cfg)]
+
+
+def emit_model(em, cfg, with_compressed):
+    pspecs = dense_param_inspecs(cfg)
+    n_params = len(pspecs)
+    tok = lambda b: spec("tokens", (b, SEQ), "i32")
+    meta = {"config": cfg.name, "seq": SEQ, "n_params": n_params}
+
+    # train_step(params, m, v, step, lr, tokens)
+    def _train(*args):
+        params = list(args[:n_params])
+        m = list(args[n_params:2 * n_params])
+        v = list(args[2 * n_params:3 * n_params])
+        step, lr, tokens = args[3 * n_params], args[3 * n_params + 1], args[3 * n_params + 2]
+        new_p, new_m, new_v, l = M.train_step(cfg, params, m, v, step, lr, tokens)
+        return (*new_p, *new_m, *new_v, l)
+
+    train_in = (pspecs
+                + [spec(f"m.{s['name']}", s["shape"]) for s in pspecs]
+                + [spec(f"v.{s['name']}", s["shape"]) for s in pspecs]
+                + [spec("step", (1, 1)), spec("lr", (1, 1)), tok(TRAIN_B)])
+
+    def _train_wrap(*args):
+        step = args[3 * n_params][0, 0]
+        lr = args[3 * n_params + 1][0, 0]
+        tokens = args[3 * n_params + 2]
+        return _train(*args[:3 * n_params], step, lr, tokens)
+
+    em.emit(f"train_step_{cfg.name}", _train_wrap, train_in,
+            {**meta, "batch": TRAIN_B, "kind": "train_step"})
+
+    # lm_loss(params, tokens)
+    def _loss(*args):
+        return (M.loss(cfg, list(args[:n_params]), args[n_params]),)
+
+    em.emit(f"lm_loss_{cfg.name}", _loss, pspecs + [tok(EVAL_B)],
+            {**meta, "batch": EVAL_B, "kind": "lm_loss"})
+
+    # lm_fwd(params, tokens)
+    def _fwd(*args):
+        return (M.fwd(cfg, list(args[:n_params]), args[n_params]),)
+
+    em.emit(f"lm_fwd_{cfg.name}", _fwd, pspecs + [tok(FWD_B)],
+            {**meta, "batch": FWD_B, "kind": "lm_fwd"})
+
+    if not with_compressed:
+        return
+
+    cspecs = compressed_param_inspecs(cfg)
+    n_c = len(cspecs)
+
+    # clm_fwd(cparams, tokens) — Pallas kernel on every linear.
+    def _cfwd(*args):
+        return (M.clm_fwd(cfg, list(args[:n_c]), args[n_c]),)
+
+    em.emit(f"clm_fwd_{cfg.name}", _cfwd, cspecs + [tok(FWD_B)],
+            {**meta, "batch": FWD_B, "kind": "clm_fwd", "n_cparams": n_c})
+
+    # ft_step(cparams, m, v, step, lr, tokens) over adapters only.
+    t_idx = M.trainable_adapter_indices(cfg)
+    n_t = len(t_idx)
+    tspecs = [cspecs[i] for i in t_idx]
+    ft_in = (cspecs
+             + [spec(f"m.{s['name']}", s["shape"]) for s in tspecs]
+             + [spec(f"v.{s['name']}", s["shape"]) for s in tspecs]
+             + [spec("step", (1, 1)), spec("lr", (1, 1)), tok(FT_B)])
+
+    def _ft(*args):
+        cparams = list(args[:n_c])
+        m = list(args[n_c:n_c + n_t])
+        v = list(args[n_c + n_t:n_c + 2 * n_t])
+        step = args[n_c + 2 * n_t][0, 0]
+        lr = args[n_c + 2 * n_t + 1][0, 0]
+        tokens = args[n_c + 2 * n_t + 2]
+        new_t, new_m, new_v, l = M.ft_step(cfg, cparams, m, v, step, lr, tokens)
+        return (*new_t, *new_m, *new_v, l)
+
+    em.emit(f"ft_step_{cfg.name}", _ft, ft_in,
+            {**meta, "batch": FT_B, "kind": "ft_step", "n_cparams": n_c,
+             "n_trainable": n_t, "trainable_indices": t_idx})
+
+
+def emit_kernels(em):
+    # Standalone fused compressed-linear kernel at two representative shapes.
+    for (m, din, dout) in [(64, 256, 256), (64, 256, 1024)]:
+        rank = max(1, round(0.1 * min(din, dout)))
+        ins = [
+            spec("x", (m, din)), spec("wq", (din, dout)), spec("scale", (1, 1)),
+            spec("mask", (din, dout)), spec("l", (din, rank)), spec("r", (rank, dout)),
+        ]
+
+        def _k(x, wq, scale, mask, l, r):
+            return (slim_matmul(x, wq, scale, mask, l, r),)
+
+        em.emit(f"layer_fwd_{m}x{din}x{dout}r{rank}", _k, ins,
+                {"kind": "layer_fwd", "m": m, "d_in": din, "d_out": dout, "rank": rank})
+
+    # SLiM-Quant error scan.
+    nbins, k = 2048, 64
+    ins = [spec("centers", (1, nbins)), spec("pdf", (1, nbins)), spec("alphas", (1, k))]
+
+    def _q(centers, pdf, alphas):
+        return (quant_scan(centers, pdf, alphas),)
+
+    em.emit("quant_scan", _q, ins, {"kind": "quant_scan", "nbins": nbins, "k": k})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(c.name for c in M.FAMILY),
+                    help="comma-separated config names")
+    ap.add_argument("--compressed", default=",".join(QUICK),
+                    help="configs that also get clm_fwd/ft_step graphs")
+    args = ap.parse_args()
+
+    em = Emitter(args.out)
+    want_comp = set(filter(None, args.compressed.split(",")))
+    for name in filter(None, args.configs.split(",")):
+        cfg = M.by_name(name)
+        print(f"[{name}]")
+        emit_model(em, cfg, with_compressed=name in want_comp)
+    print("[kernels]")
+    emit_kernels(em)
+    em.finish()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: SLiM-Quant error scan (paper Alg. 1 `EstimateError`).
+
+Evaluates the probabilistic quantization objective
+
+    E_Q(alpha) = E_quant(alpha) + E_clip(alpha)
+               = sum_bins pdf(c) * err(c; alpha)^2
+
+for a whole grid of candidate alphas in one launch. Each grid step owns one
+alpha tile and reduces over the histogram (resident in VMEM — histograms are
+<= 20k bins = 80KB, well under budget). The multigrid search in the Rust
+pipeline calls this through the AOT artifact when offloading is enabled.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_A = 32  # alphas per grid step
+
+
+def _kernel(centers_ref, pdf_ref, alphas_ref, o_ref, *, levels):
+    centers = centers_ref[...]          # [1, nbins]
+    pdf = pdf_ref[...]                  # [1, nbins]
+    alphas = alphas_ref[...]            # [1, ba]
+    # Broadcast: [ba, nbins]
+    c = centers
+    a = alphas.reshape(-1, 1)
+    step = a / levels
+    # In-range quantization error vs clip error (paper Eq. 5/6).
+    q = jnp.round(c / jnp.maximum(step, 1e-30)) * step
+    e_quant = jnp.where(c <= a, c - q, 0.0)
+    e_clip = jnp.where(c > a, c - a, 0.0)
+    err = (e_quant + e_clip) ** 2
+    o_ref[...] = jnp.sum(err * pdf, axis=1).reshape(1, -1)
+
+
+def quant_scan(centers, pdf, alphas, *, bits=4, block_a=BLOCK_A):
+    """Expected reconstruction error per candidate alpha.
+
+    Args:
+      centers: [1, nbins] f32 histogram bin centers of |W|.
+      pdf:     [1, nbins] f32 normalized bin mass.
+      alphas:  [1, k] f32 candidate scales (must be > 0).
+    Returns:
+      [1, k] f32 errors E_quant + E_clip.
+    """
+    _, nbins = centers.shape
+    _, k = alphas.shape
+    levels = float(2 ** (bits - 1) - 1)
+    ba = min(block_a, k)
+    grid = (pl.cdiv(k, ba),)
+    return pl.pallas_call(
+        functools.partial(_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, nbins), lambda i: (0, 0)),
+            pl.BlockSpec((1, nbins), lambda i: (0, 0)),
+            pl.BlockSpec((1, ba), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, ba), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, k), jnp.float32),
+        interpret=True,
+    )(centers, pdf, alphas)

@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: fused compressed linear layer.
+
+The paper's inference hot-spot (its Sparse-Marlin CUDA kernel) re-thought
+for TPU-style execution (DESIGN.md §Hardware-Adaptation):
+
+    y = x @ (dequant(Wq) * mask) + (x @ L) @ R
+
+* ``wq`` arrives as integer codes stored in f32 (symmetric, codes in
+  [-(2^{q-1}-1), 2^{q-1}-1]); dequant is a fused elementwise prologue on the
+  VPU: ``w = wq * (alpha / levels) * mask``.
+* The dense core targets the MXU: a [bm, d_in] x [d_in, bn] tile matmul with
+  f32 accumulation (bf16-ready on real TPU).
+* The low-rank branch reuses the same x tile: ``(x @ L) @ R`` adds two small
+  MXU matmuls — rank r = 0.1 d keeps them <2% of the FLOPs.
+* BlockSpec tiles: grid over (M/bm, N/bn); x and w tiles stream HBM→VMEM per
+  grid step, exactly the role threadblock tiling plays in Marlin. With the
+  default bm=bn=128 the VMEM footprint is x-tile 64KB + w-tile 64KB + out
+  64KB + L/R ≪ 16MB.
+
+CPU PJRT cannot execute Mosaic custom-calls, so ``interpret=True`` is
+mandatory here; correctness is asserted against ``ref.py`` in pytest and the
+kernel lowers into the same HLO the Rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (clamped to the problem size at call time).
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _kernel(x_ref, wq_ref, scale_ref, mask_ref, l_ref, r_ref, o_ref, *, levels):
+    """One (bm, bn) output tile."""
+    x = x_ref[...]                      # [bm, d_in]
+    wq = wq_ref[...]                    # [d_in, bn]  (codes as f32)
+    mask = mask_ref[...]                # [d_in, bn]
+    alpha = scale_ref[0, 0]
+    # Fused dequant prologue (VPU): codes -> weights, sparsity applied.
+    w = wq * (alpha / levels) * mask
+    # Dense MXU tile matmul, f32 accumulation.
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    # Low-rank branch shares the x tile: two skinny MXU matmuls.
+    xl = jnp.dot(x, l_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + jnp.dot(xl, r_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _slim_matmul_vjp(x, wq, scale, mask, l, r, bits):
+    return _slim_matmul_impl(x, wq, scale, mask, l, r, bits=bits)
+
+
+def _vjp_fwd(x, wq, scale, mask, l, r, bits):
+    y = _slim_matmul_impl(x, wq, scale, mask, l, r, bits=bits)
+    return y, (x, wq, scale, mask, l, r)
+
+
+def _vjp_bwd(bits, res, g):
+    """Backward in plain jnp (the pallas_call primitive has no transpose
+    rule in interpret mode). The compressed base weights get straight-
+    through zero grads — they are frozen during PEFT (paper §3.4); the
+    adapters get exact grads."""
+    x, wq, scale, mask, l, r = res
+    levels = float(2 ** (bits - 1) - 1)
+    w = wq * (scale[0, 0] / levels) * mask
+    dx = g @ w.T + (g @ r.T) @ l.T
+    dl = x.T @ (g @ r.T)
+    dr = (x @ l).T @ g
+    zero = lambda a: jnp.zeros_like(a)
+    return dx, zero(wq), zero(scale), zero(mask), dl, dr
+
+
+_slim_matmul_vjp.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def slim_matmul(x, wq, scale, mask, l, r, *, bits=4, block_m=BLOCK_M, block_n=BLOCK_N):
+    """Fused compressed linear: ``x @ (dequant(wq)*mask) + (x@l)@r``.
+
+    Differentiable w.r.t. (x, l, r) via a custom VJP; the forward always
+    runs the Pallas kernel.
+
+    Args:
+      x:     [m, d_in] f32 activations.
+      wq:    [d_in, d_out] f32 integer codes.
+      scale: [1, 1] f32 per-tensor scale (alpha).
+      mask:  [d_in, d_out] f32 0/1 sparsity mask.
+      l:     [d_in, rank] f32 left adapter.
+      r:     [rank, d_out] f32 right adapter.
+      bits:  quantization bit-width (levels = 2^{bits-1} - 1).
+    Returns:
+      [m, d_out] f32.
+    """
+    return _slim_matmul_vjp(x, wq, scale, mask, l, r, bits)
+
+
+def _slim_matmul_impl(x, wq, scale, mask, l, r, *, bits=4, block_m=BLOCK_M, block_n=BLOCK_N):
+    """The raw Pallas call (forward only)."""
+    m, d_in = x.shape
+    d_in2, d_out = wq.shape
+    assert d_in == d_in2, (x.shape, wq.shape)
+    rank = l.shape[1]
+    assert l.shape == (d_in, rank) and r.shape == (rank, d_out)
+    levels = float(2 ** (bits - 1) - 1)
+
+    bm = min(block_m, m)
+    bn = min(block_n, d_out)
+    grid = (pl.cdiv(m, bm), pl.cdiv(d_out, bn))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_in), lambda i, j: (i, 0)),       # x row tile
+            pl.BlockSpec((d_in, bn), lambda i, j: (0, j)),       # w col tile
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),           # alpha
+            pl.BlockSpec((d_in, bn), lambda i, j: (0, j)),       # mask tile
+            pl.BlockSpec((d_in, rank), lambda i, j: (0, 0)),     # L (resident)
+            pl.BlockSpec((rank, bn), lambda i, j: (0, j)),       # R col tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d_out), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, wq, scale, mask, l, r)
+
+
+def dense_matmul_ref_shape(m, d_in, d_out, rank):
+    """Shape helper used by aot.py manifests."""
+    return dict(
+        x=(m, d_in),
+        wq=(d_in, d_out),
+        scale=(1, 1),
+        mask=(d_in, d_out),
+        l=(d_in, rank),
+        r=(rank, d_out),
+        out=(m, d_out),
+    )

@@ -1,0 +1,312 @@
+"""L2: the sim-family transformer in JAX (build-time only).
+
+Matches ``rust/src/model/transformer.rs`` op-for-op (pre-LN, tanh-GELU,
+LN eps 1e-5, causal softmax, tied embeddings, no attention biases) so the
+native Rust forward and the AOT HLO agree numerically.
+
+Entry points lowered by aot.py:
+  * ``fwd(params, tokens)``        — logits [B, S, V] (dense weights)
+  * ``loss(params, tokens)``       — mean next-token NLL
+  * ``train_step(...)``            — fused AdamW pretraining step
+  * ``clm_fwd(cparams, tokens)``   — compressed forward; every linear runs
+    through the L1 Pallas kernel (quantized codes + mask + adapters)
+  * ``ft_step(...)``               — PEFT: AdamW on adapters only, frozen
+    compressed base weights (paper §3.4)
+
+Parameter orders are mirrored in ``rust/src/model/weights.rs::param_order``
+and ``runtime::marshal``; aot.py records them in the manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.slim_matmul import slim_matmul
+
+LN_EPS = 1e-5
+
+
+# ───────────────────────── configs (mirror rust model::config) ──────────
+
+class Config:
+    def __init__(self, name, d_model, n_layers, n_heads, d_ff_ratio=4,
+                 vocab=512, max_seq=64):
+        self.name = name
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.d_ff_ratio = d_ff_ratio
+        self.vocab = vocab
+        self.max_seq = max_seq
+
+    @property
+    def d_ff(self):
+        return self.d_model * self.d_ff_ratio
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+FAMILY = [
+    Config("sim-125m", 64, 2, 2),
+    Config("sim-350m", 96, 3, 3),
+    Config("sim-1.3b", 128, 4, 4),
+    Config("sim-2.7b", 160, 4, 4),
+    Config("sim-6.7b", 192, 5, 4),
+    Config("sim-13b", 224, 6, 4),
+    Config("sim-llama-7b", 208, 5, 4),
+    Config("sim-llama-13b", 256, 6, 4),
+]
+
+
+def by_name(name):
+    for c in FAMILY:
+        if c.name == name:
+            return c
+    raise KeyError(name)
+
+
+LINEARS = ["attn.wq", "attn.wk", "attn.wv", "attn.wo", "mlp.fc1", "mlp.fc2"]
+
+
+def linear_shape(cfg, suffix):
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "attn.wq": (d, d), "attn.wk": (d, d), "attn.wv": (d, d),
+        "attn.wo": (d, d), "mlp.fc1": (d, ff), "mlp.fc2": (ff, d),
+    }[suffix]
+
+
+def adapter_rank(cfg, suffix):
+    d_in, d_out = linear_shape(cfg, suffix)
+    return max(1, round(0.1 * min(d_in, d_out)))
+
+
+def param_specs(cfg):
+    """Dense parameter order: [(name, shape)] — matches rust param_order."""
+    d, ff = cfg.d_model, cfg.d_ff
+    specs = [("embed.tok", (cfg.vocab, d)), ("embed.pos", (cfg.max_seq, d))]
+    for b in range(cfg.n_layers):
+        p = f"block{b}."
+        specs += [
+            (p + "ln1.g", (1, d)), (p + "ln1.b", (1, d)),
+            (p + "attn.wq", (d, d)), (p + "attn.wk", (d, d)),
+            (p + "attn.wv", (d, d)), (p + "attn.wo", (d, d)),
+            (p + "ln2.g", (1, d)), (p + "ln2.b", (1, d)),
+            (p + "mlp.fc1", (d, ff)), (p + "mlp.fc1_b", (1, ff)),
+            (p + "mlp.fc2", (ff, d)), (p + "mlp.fc2_b", (1, d)),
+        ]
+    specs += [("final_ln.g", (1, d)), ("final_ln.b", (1, d))]
+    return specs
+
+
+def compressed_param_specs(cfg):
+    """Compressed parameter order: each linear becomes 5 tensors
+    (wq codes, scale, mask, l, r); everything else stays dense."""
+    d, ff = cfg.d_model, cfg.d_ff
+    specs = [("embed.tok", (cfg.vocab, d)), ("embed.pos", (cfg.max_seq, d))]
+    for b in range(cfg.n_layers):
+        p = f"block{b}."
+        specs += [(p + "ln1.g", (1, d)), (p + "ln1.b", (1, d))]
+        for lin in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"]:
+            din, dout = linear_shape(cfg, lin)
+            r = adapter_rank(cfg, lin)
+            specs += [
+                (p + lin + ".wq", (din, dout)), (p + lin + ".scale", (1, 1)),
+                (p + lin + ".mask", (din, dout)),
+                (p + lin + ".l", (din, r)), (p + lin + ".r", (r, dout)),
+            ]
+        specs += [(p + "ln2.g", (1, d)), (p + "ln2.b", (1, d))]
+        for lin, bias in [("mlp.fc1", (1, ff)), ("mlp.fc2", (1, d))]:
+            din, dout = linear_shape(cfg, lin)
+            r = adapter_rank(cfg, lin)
+            specs += [
+                (p + lin + ".wq", (din, dout)), (p + lin + ".scale", (1, 1)),
+                (p + lin + ".mask", (din, dout)),
+                (p + lin + ".l", (din, r)), (p + lin + ".r", (r, dout)),
+            ]
+            specs += [(p + lin + "_b", bias)]
+    specs += [("final_ln.g", (1, d)), ("final_ln.b", (1, d))]
+    return specs
+
+
+def trainable_adapter_indices(cfg):
+    """Indices into compressed_param_specs that are adapters (l, r) — the
+    only tensors ft_step updates."""
+    return [i for i, (n, _) in enumerate(compressed_param_specs(cfg))
+            if n.endswith(".l") or n.endswith(".r")]
+
+
+# ─────────────────────────── model ops ──────────────────────────────────
+
+def layernorm(x, g, b):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + LN_EPS) * g[0] + b[0]
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def attention(cfg, h, wq, wk, wv, wo):
+    """h: [B, S, d] (already layer-normed)."""
+    B, S, d = h.shape
+    nh, dh = cfg.n_heads, cfg.d_head
+
+    def split(m):
+        return m.reshape(B, S, nh, dh).transpose(0, 2, 1, 3)  # [B,nh,S,dh]
+
+    q, k, v = split(h @ wq), split(h @ wk), split(h @ wv)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(float(dh))
+    causal = jnp.tril(jnp.ones((S, S), dtype=bool))
+    scores = jnp.where(causal, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,bhtd->bhsd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(B, S, d)
+    return ctx @ wo
+
+
+def _block_dense(cfg, x, p):
+    h = layernorm(x, p["ln1.g"], p["ln1.b"])
+    x = x + attention(cfg, h, p["attn.wq"], p["attn.wk"], p["attn.wv"], p["attn.wo"])
+    h2 = layernorm(x, p["ln2.g"], p["ln2.b"])
+    u = gelu(h2 @ p["mlp.fc1"] + p["mlp.fc1_b"][0])
+    x = x + (u @ p["mlp.fc2"] + p["mlp.fc2_b"][0])
+    return x
+
+
+def fwd(cfg, params, tokens):
+    """Dense forward. params: flat list in param_specs order. tokens: i32
+    [B, S]. Returns logits [B, S, V]."""
+    specs = param_specs(cfg)
+    named = dict(zip([n for n, _ in specs], params))
+    B, S = tokens.shape
+    x = named["embed.tok"][tokens] + named["embed.pos"][:S][None, :, :]
+    for b in range(cfg.n_layers):
+        p = {k[len(f"block{b}."):]: v for k, v in named.items()
+             if k.startswith(f"block{b}.")}
+        x = _block_dense(cfg, x, p)
+    x = layernorm(x, named["final_ln.g"], named["final_ln.b"])
+    return x @ named["embed.tok"].T
+
+
+def loss(cfg, params, tokens):
+    """Mean next-token NLL (positions 0..S-2 predict 1..S-1)."""
+    logits = fwd(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ─────────────────────── AdamW pretraining step ─────────────────────────
+
+ADAM_B1, ADAM_B2, ADAM_EPS, WEIGHT_DECAY = 0.9, 0.999, 1e-8, 0.01
+
+
+def train_step(cfg, params, m, v, step, lr, tokens):
+    """One fused AdamW step. All of (params, m, v) are flat lists; `step`
+    is the 1-based step count as f32 scalar; `lr` f32 scalar.
+    Returns (new_params, new_m, new_v, loss)."""
+    lval, grads = jax.value_and_grad(lambda ps: loss(cfg, ps, tokens))(params)
+    b1t = ADAM_B1 ** step
+    b2t = ADAM_B2 ** step
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1 - ADAM_B2) * g * g
+        mhat = mi / (1 - b1t)
+        vhat = vi / (1 - b2t)
+        upd = mhat / (jnp.sqrt(vhat) + ADAM_EPS) + WEIGHT_DECAY * p
+        new_p.append(p - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, lval
+
+
+# ─────────────────── compressed forward (L1 kernel path) ────────────────
+
+def _clinear(named, name, x2d, bits=4):
+    """Apply one compressed linear via the Pallas kernel."""
+    return slim_matmul(
+        x2d,
+        named[name + ".wq"], named[name + ".scale"], named[name + ".mask"],
+        named[name + ".l"], named[name + ".r"], bits=bits,
+    )
+
+
+def clm_fwd(cfg, cparams, tokens, bits=4):
+    """Compressed forward: logits [B, S, V]. Every linear layer runs the
+    fused dequant+mask+low-rank Pallas kernel."""
+    specs = compressed_param_specs(cfg)
+    named = dict(zip([n for n, _ in specs], cparams))
+    B, S = tokens.shape
+    d = cfg.d_model
+    x = named["embed.tok"][tokens] + named["embed.pos"][:S][None, :, :]
+
+    def lin(name, h):
+        out = _clinear(named, name, h.reshape(B * S, -1), bits=bits)
+        return out.reshape(B, S, -1)
+
+    for b in range(cfg.n_layers):
+        p = f"block{b}."
+        h = layernorm(x, named[p + "ln1.g"], named[p + "ln1.b"])
+        q, k, v = lin(p + "attn.wq", h), lin(p + "attn.wk", h), lin(p + "attn.wv", h)
+        nh, dh = cfg.n_heads, cfg.d_head
+
+        def split(mm):
+            return mm.reshape(B, S, nh, dh).transpose(0, 2, 1, 3)
+
+        scores = jnp.einsum("bhsd,bhtd->bhst", split(q), split(k)) / jnp.sqrt(float(dh))
+        causal = jnp.tril(jnp.ones((S, S), dtype=bool))
+        scores = jnp.where(causal, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,bhtd->bhsd", probs, split(v))
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(B, S, d)
+        x = x + lin(p + "attn.wo", ctx)
+
+        h2 = layernorm(x, named[p + "ln2.g"], named[p + "ln2.b"])
+        u = gelu(lin(p + "mlp.fc1", h2) + named[p + "mlp.fc1_b"][0])
+        x = x + lin(p + "mlp.fc2", u) + named[p + "mlp.fc2_b"][0]
+    x = layernorm(x, named["final_ln.g"], named["final_ln.b"])
+    return x @ named["embed.tok"].T
+
+
+def clm_loss(cfg, cparams, tokens, bits=4):
+    logits = clm_fwd(cfg, cparams, tokens, bits=bits)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ───────────────── PEFT fine-tuning step (paper §3.4) ───────────────────
+
+def ft_step(cfg, cparams, m, v, step, lr, tokens, bits=4):
+    """AdamW on the adapters (l, r) only; compressed base weights frozen.
+    `m`/`v` are optimizer state lists over the *trainable* subset, in the
+    order of trainable_adapter_indices. Returns
+    (new_trainables, new_m, new_v, loss)."""
+    t_idx = trainable_adapter_indices(cfg)
+
+    def loss_of(trainables):
+        full = list(cparams)
+        for i, t in zip(t_idx, trainables):
+            full[i] = t
+        return clm_loss(cfg, full, tokens, bits=bits)
+
+    trainables = [cparams[i] for i in t_idx]
+    lval, grads = jax.value_and_grad(loss_of)(trainables)
+    b1t = ADAM_B1 ** step
+    b2t = ADAM_B2 ** step
+    new_t, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(trainables, grads, m, v):
+        mi = ADAM_B1 * mi + (1 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1 - ADAM_B2) * g * g
+        mhat = mi / (1 - b1t)
+        vhat = vi / (1 - b2t)
+        new_t.append(p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS)))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_t, new_m, new_v, lval

@@ -1,0 +1,68 @@
+"""AOT manifest + HLO text round-trip tests.
+
+Lowers a small entry in-process, checks the HLO text parses structurally,
+and validates manifest invariants the Rust runtime depends on.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_produces_parseable_module():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+
+
+def test_emitter_writes_manifest(tmp_path):
+    em = aot.Emitter(str(tmp_path))
+
+    def fn(x):
+        return (x * 2.0,)
+
+    em.emit("double", fn, [aot.spec("x", (3, 3))], {"kind": "test"})
+    em.finish()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    entry = manifest["entries"][0]
+    assert entry["name"] == "double"
+    assert entry["inputs"] == [{"name": "x", "shape": [3, 3], "dtype": "f32"}]
+    assert entry["outputs"][0]["shape"] == [3, 3]
+    assert (tmp_path / "double.hlo.txt").exists()
+
+
+def test_train_step_entry_shapes(tmp_path):
+    """The train_step artifact must expose params+m+v+step+lr+tokens inputs
+    and params+m+v+loss outputs in the documented order."""
+    em = aot.Emitter(str(tmp_path))
+    cfg = M.by_name("sim-125m")
+    aot.emit_model(em, cfg, with_compressed=False)
+    em.finish()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    entries = {e["name"]: e for e in manifest["entries"]}
+    n = len(M.param_specs(cfg))
+    ts = entries[f"train_step_{cfg.name}"]
+    assert len(ts["inputs"]) == 3 * n + 3
+    assert len(ts["outputs"]) == 3 * n + 1
+    assert ts["inputs"][-1]["dtype"] == "i32"
+    assert ts["meta"]["n_params"] == n
+    # loss entry: single scalar output
+    ll = entries[f"lm_loss_{cfg.name}"]
+    assert ll["outputs"][0]["shape"] == []
+
+
+def test_quick_configs_subset_of_family():
+    names = {c.name for c in M.FAMILY}
+    assert set(aot.QUICK) <= names

@@ -1,0 +1,129 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the core signal).
+
+Hypothesis sweeps shapes, ranks, bitwidths and block sizes; fixed cases pin
+edge geometries (ragged tiles, rank 1, single row).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import fake_quant_ref, quant_scan_ref, slim_matmul_ref
+from compile.kernels.quant_scan import quant_scan
+from compile.kernels.slim_matmul import slim_matmul
+
+
+def make_inputs(rng, m, d_in, d_out, rank, bits):
+    levels = 2 ** (bits - 1) - 1
+    x = jnp.asarray(rng.normal(0, 1, (m, d_in)).astype(np.float32))
+    wq = jnp.asarray(rng.integers(-levels, levels + 1, (d_in, d_out)).astype(np.float32))
+    scale = jnp.asarray(rng.uniform(0.05, 0.5, (1, 1)).astype(np.float32))
+    mask = jnp.asarray((rng.random((d_in, d_out)) > 0.5).astype(np.float32))
+    l = jnp.asarray(rng.normal(0, 0.1, (d_in, rank)).astype(np.float32))
+    r = jnp.asarray(rng.normal(0, 0.1, (rank, d_out)).astype(np.float32))
+    return x, wq, scale, mask, l, r
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    d_in=st.integers(2, 96),
+    d_out=st.integers(2, 160),
+    rank=st.integers(1, 16),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_slim_matmul_matches_ref(m, d_in, d_out, rank, bits, seed):
+    rng = np.random.default_rng(seed)
+    args = make_inputs(rng, m, d_in, d_out, rank, bits)
+    got = slim_matmul(*args, bits=bits)
+    want = slim_matmul_ref(*args, bits=bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,d_in,d_out,rank",
+    [(1, 4, 4, 1), (128, 64, 64, 6), (130, 64, 257, 7), (64, 256, 1024, 26)],
+)
+def test_slim_matmul_fixed_geometries(m, d_in, d_out, rank):
+    rng = np.random.default_rng(7)
+    args = make_inputs(rng, m, d_in, d_out, rank, 4)
+    got = slim_matmul(*args, bits=4)
+    want = slim_matmul_ref(*args, bits=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_slim_matmul_block_sizes_equal():
+    rng = np.random.default_rng(3)
+    args = make_inputs(rng, 96, 48, 80, 5, 4)
+    a = slim_matmul(*args, bits=4, block_m=32, block_n=16)
+    b = slim_matmul(*args, bits=4, block_m=128, block_n=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_slim_matmul_zero_mask_leaves_only_adapters():
+    rng = np.random.default_rng(4)
+    x, wq, scale, mask, l, r = make_inputs(rng, 8, 16, 12, 3, 4)
+    mask = jnp.zeros_like(mask)
+    got = slim_matmul(x, wq, scale, mask, l, r, bits=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray((x @ l) @ r), rtol=1e-5, atol=1e-6)
+
+
+def test_slim_matmul_grad_matches_ref():
+    """Custom VJP vs autodiff of the jnp reference (adapters + input)."""
+    rng = np.random.default_rng(5)
+    x, wq, scale, mask, l, r = make_inputs(rng, 12, 24, 20, 4, 4)
+
+    def f_kernel(x, l, r):
+        return jnp.sum(slim_matmul(x, wq, scale, mask, l, r, bits=4) ** 2)
+
+    def f_ref(x, l, r):
+        return jnp.sum(slim_matmul_ref(x, wq, scale, mask, l, r, bits=4) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, l, r)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, l, r)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+# ───────────────────────── quant_scan ────────────────────────────────────
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nbins=st.integers(8, 600),
+    k=st.integers(1, 80),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_scan_matches_ref(nbins, k, bits, seed):
+    rng = np.random.default_rng(seed)
+    centers = jnp.asarray(np.sort(rng.uniform(0.001, 1.0, (1, nbins))).astype(np.float32))
+    pdf = rng.random((1, nbins)).astype(np.float32)
+    pdf = jnp.asarray(pdf / pdf.sum())
+    alphas = jnp.asarray(rng.uniform(0.01, 1.2, (1, k)).astype(np.float32))
+    got = quant_scan(centers, pdf, alphas, bits=bits)
+    want = quant_scan_ref(centers, pdf, alphas, bits=bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-7)
+
+
+def test_quant_scan_error_shape_has_interior_minimum():
+    """Bell-shaped |W| → E(alpha) dips in the interior (paper Fig. 1 logic)."""
+    rng = np.random.default_rng(11)
+    data = np.abs(rng.normal(0, 1, 200_000)).astype(np.float32)
+    hist, edges = np.histogram(data, bins=512)
+    centers = jnp.asarray(((edges[:-1] + edges[1:]) / 2).reshape(1, -1).astype(np.float32))
+    pdf = jnp.asarray((hist / hist.sum()).reshape(1, -1).astype(np.float32))
+    alphas = jnp.asarray(np.linspace(0.05, data.max(), 64).reshape(1, -1).astype(np.float32))
+    errs = np.asarray(quant_scan(centers, pdf, alphas, bits=4))[0]
+    best = errs.argmin()
+    assert 0 < best < 63, f"interior optimum expected, got {best}"
+    assert errs[best] < errs[0] and errs[best] < errs[-1]
+
+
+def test_fake_quant_ref_idempotent():
+    w = jnp.asarray(np.linspace(-2, 2, 41).astype(np.float32))
+    q1 = fake_quant_ref(w, 1.5, 4)
+    q2 = fake_quant_ref(q1, 1.5, 4)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)

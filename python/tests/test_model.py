@@ -1,0 +1,157 @@
+"""L2 model tests: shapes, causality, loss behavior, train/ft steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def dense_params(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in M.param_specs(cfg):
+        if name.endswith(".g"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(".b") or name.endswith("_b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(jnp.asarray(rng.normal(0, 0.02, shape).astype(np.float32)))
+    return out
+
+
+def compressed_params(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in M.compressed_param_specs(cfg):
+        if name.endswith(".scale"):
+            out.append(jnp.full(shape, 0.08, jnp.float32))
+        elif name.endswith(".mask"):
+            out.append(jnp.asarray((rng.random(shape) > 0.5).astype(np.float32)))
+        elif name.endswith(".wq"):
+            out.append(jnp.asarray(rng.integers(-7, 8, shape).astype(np.float32)))
+        elif name.endswith(".g"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(".b") or name.endswith("_b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(jnp.asarray(rng.normal(0, 0.02, shape).astype(np.float32)))
+    return out
+
+
+CFG = M.by_name("sim-125m")
+
+
+def toks(b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab, (b, s)), dtype=jnp.int32)
+
+
+def test_fwd_shape_and_finite():
+    params = dense_params(CFG)
+    logits = M.fwd(CFG, params, toks(2, 16))
+    assert logits.shape == (2, 16, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_untrained_loss_near_uniform():
+    params = dense_params(CFG)
+    l = float(M.loss(CFG, params, toks(4, 32)))
+    assert abs(l - np.log(CFG.vocab)) < 0.5
+
+
+def test_causality():
+    params = dense_params(CFG)
+    t1 = toks(1, 16, seed=1)
+    t2 = t1.at[0, 15].set((t1[0, 15] + 1) % CFG.vocab)
+    l1 = M.fwd(CFG, params, t1)
+    l2 = M.fwd(CFG, params, t2)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, :14]), np.asarray(l2[0, :14]), atol=1e-5
+    )
+
+
+def test_train_step_reduces_loss():
+    params = dense_params(CFG)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    batch = toks(8, 32, seed=2)
+    losses = []
+    step_fn = jax.jit(lambda p, m, v, s, t: M.train_step(CFG, p, m, v, s, 3e-3, t))
+    for step in range(12):
+        params, m, v, l = step_fn(params, m, v, float(step + 1), batch)
+        losses.append(float(l))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_clm_fwd_matches_dense_when_uncompressed():
+    """With mask=1 and wq = round(w/alpha*levels) at 8 bits, clm_fwd must
+    approximate the dense fwd closely."""
+    params = dense_params(CFG, seed=3)
+    named = dict(zip([n for n, _ in M.param_specs(CFG)], params))
+    bits, levels = 8, 127.0
+    cps = []
+    for name, shape in M.compressed_param_specs(CFG):
+        if name.endswith(".wq"):
+            w = named[name[:-3]]
+            alpha = float(jnp.max(jnp.abs(w)))
+            cps.append(jnp.round(jnp.clip(w / alpha, -1, 1) * levels))
+        elif name.endswith(".scale"):
+            w = named[name[:-6]]
+            cps.append(jnp.full((1, 1), float(jnp.max(jnp.abs(w))), jnp.float32))
+        elif name.endswith(".mask"):
+            cps.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(".l") or name.endswith(".r"):
+            cps.append(jnp.zeros(shape, jnp.float32))
+        else:
+            cps.append(named[name])
+    dense = M.fwd(CFG, params, toks(1, 16))
+    comp = M.clm_fwd(CFG, cps, toks(1, 16), bits=bits)
+    np.testing.assert_allclose(np.asarray(comp), np.asarray(dense), rtol=0.05, atol=0.05)
+
+
+def test_ft_step_only_updates_adapters():
+    cps = compressed_params(CFG, seed=4)
+    t_idx = M.trainable_adapter_indices(CFG)
+    m = [jnp.zeros_like(cps[i]) for i in t_idx]
+    v = [jnp.zeros_like(cps[i]) for i in t_idx]
+    new_t, _, _, l = M.ft_step(CFG, cps, m, v, 1.0, 1e-2, toks(2, 16, seed=5))
+    assert np.isfinite(float(l))
+    changed = sum(
+        float(jnp.abs(nt - cps[i]).max()) > 0 for nt, i in zip(new_t, t_idx)
+    )
+    assert changed == len(t_idx), f"only {changed}/{len(t_idx)} adapters updated"
+
+
+def test_ft_steps_reduce_loss():
+    cps = compressed_params(CFG, seed=6)
+    t_idx = M.trainable_adapter_indices(CFG)
+    m = [jnp.zeros_like(cps[i]) for i in t_idx]
+    v = [jnp.zeros_like(cps[i]) for i in t_idx]
+    batch = toks(4, 32, seed=7)
+    step_fn = jax.jit(lambda c, m, v, s, t: M.ft_step(CFG, c, m, v, s, 1e-2, t))
+    l0 = None
+    for step in range(8):
+        new_t, m, v, l = step_fn(cps, m, v, float(step + 1), batch)
+        for i, t in zip(t_idx, new_t):
+            cps[i] = t
+        l0 = float(l) if l0 is None else l0
+    assert float(l) < l0, (float(l), l0)
+
+
+def test_param_spec_orders_cover_family():
+    for cfg in M.FAMILY:
+        specs = M.param_specs(cfg)
+        names = [n for n, _ in specs]
+        assert len(set(names)) == len(names)
+        assert names[0] == "embed.tok" and names[-1] == "final_ln.b"
+        cspecs = M.compressed_param_specs(cfg)
+        lin_tensors = [n for n, _ in cspecs if n.endswith(".wq")]
+        assert len(lin_tensors) == 6 * cfg.n_layers
+
+
+@pytest.mark.parametrize("name", ["sim-125m", "sim-350m"])
+def test_adapter_rank_rule(name):
+    cfg = M.by_name(name)
+    assert M.adapter_rank(cfg, "mlp.fc1") == max(1, round(0.1 * cfg.d_model))

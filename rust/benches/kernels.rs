@@ -1,0 +1,77 @@
+//! Kernel benchmark (cargo bench --bench kernels): dense f32 vs packed int4
+//! vs 2:4-sparse int4 vs group-int4 at decode-regime shapes.
+//!
+//! This regenerates the measured halves of Figure 3/4 and Table 23.
+//! Hand-rolled harness (no criterion in the vendored set): median-of-N
+//! wall-clock with warmup.
+
+use slim::kernels::{DenseKernel, GroupInt4Kernel, Int4Kernel, MatmulKernel, Sparse24Kernel};
+use slim::quant::{group_absmax, slim_quant};
+use slim::rng::Pcg32;
+use slim::sparse::{mask::SparsityPattern, wanda};
+use slim::tensor::Matrix;
+
+fn bench(k: &dyn MatmulKernel, x: &Matrix, reps: usize) -> f64 {
+    std::hint::black_box(k.matmul(x)); // warmup
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(k.matmul(x));
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let shapes: Vec<(&str, usize, usize)> = if quick {
+        vec![("o-proj", 512, 512), ("down-proj", 1376, 512)]
+    } else {
+        vec![
+            ("qkv-proj", 1024, 3072),
+            ("o-proj", 1024, 1024),
+            ("up-proj", 1024, 2752),
+            ("down-proj", 2752, 1024),
+        ]
+    };
+    let batch = 8;
+    let reps = if quick { 9 } else { 21 };
+    let mut rng = Pcg32::seeded(0xbe9c);
+
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>12} {:>8} {:>8} {:>8}",
+        "layer", "dense-f32", "int4", "int4-2:4", "int4-group", "q-x", "total-x", "grp-x"
+    );
+    for (label, d_in, d_out) in shapes {
+        let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.05));
+        let x = Matrix::randn(batch, d_in, 1.0, &mut rng);
+        let q = slim_quant::quantize(&w, 4);
+        let qg = group_absmax::quantize(&w, 4, 128);
+        let (_, mask) = wanda::prune(&q.wq, &vec![1.0; d_in], SparsityPattern::TWO_FOUR);
+
+        let dense = DenseKernel::new(w.clone());
+        let int4 = Int4Kernel::from_quantized(&q);
+        let sp24 = Sparse24Kernel::from_parts(&q, &mask);
+        let grp = GroupInt4Kernel::from_quantized(&qg);
+
+        let td = bench(&dense, &x, reps);
+        let ti = bench(&int4, &x, reps);
+        let ts = bench(&sp24, &x, reps);
+        let tg = bench(&grp, &x, reps);
+        println!(
+            "{:<10} {:>10.1}µs {:>10.1}µs {:>10.1}µs {:>10.1}µs {:>8.2} {:>8.2} {:>8.2}",
+            label,
+            td * 1e6,
+            ti * 1e6,
+            ts * 1e6,
+            tg * 1e6,
+            td / ti,
+            td / ts,
+            ti / tg
+        );
+    }
+    println!("\n(q-x: int4 vs dense; total-x: 2:4+int4 vs dense — the Fig.3 decomposition;");
+    println!(" grp-x: per-tensor vs group-128 int4 — Table 23's slow-down, expect <1 ≈ 0.9)");
+}

@@ -1,0 +1,56 @@
+//! Compression-pipeline benchmark (cargo bench --bench pipeline): stage
+//! timing (SLiM-Quant / pruning / SVD adapters) per layer size — the data
+//! behind Table 21's method-cost comparison.
+
+use slim::compress::{compress_layer, CompressConfig, LayerCalib};
+use slim::lowrank::LoraMethod;
+use slim::quant::{slim_quant, QuantMethod};
+use slim::rng::Pcg32;
+use slim::sparse::{sparsegpt, wanda, PruneMethod, SparsityPattern};
+use slim::tensor::Matrix;
+use slim::util::{fmt_secs, timed};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: Vec<usize> = if quick { vec![256, 512] } else { vec![256, 512, 1024] };
+    let mut rng = Pcg32::seeded(0xbe9c);
+
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12} {:>14}",
+        "d", "slim-quant", "wanda", "sparsegpt", "slim-lora", "full-pipeline"
+    );
+    for d in sizes {
+        let w = Matrix::from_fn(d, d, |_, _| rng.laplace(0.04));
+        let x = Matrix::randn(128, d, 1.0, &mut rng);
+        let calib = LayerCalib::from_activations(x.clone());
+
+        let (_, t_quant) = timed(|| slim_quant::quantize(&w, 4));
+        let (_, t_wanda) = timed(|| wanda::prune(&w, &calib.x_l2, SparsityPattern::TWO_FOUR));
+        let (_, t_sgpt) = timed(|| sparsegpt::prune(&w, &x, SparsityPattern::TWO_FOUR));
+        let (_, t_lora) = timed(|| {
+            let wc = w.map(|v| if v.abs() < 0.02 { 0.0 } else { v });
+            slim::lowrank::slim_lora::adapters(&w, &wc, &calib.x_abs_mean, d / 10)
+        });
+        let cfg = CompressConfig {
+            quant: QuantMethod::SlimQuantW,
+            bits: 4,
+            prune: PruneMethod::Wanda,
+            pattern: Some(SparsityPattern::TWO_FOUR),
+            lora: LoraMethod::Slim,
+            rank_ratio: 0.1,
+            quantize_adapters: false,
+        };
+        let (_, t_full) = timed(|| compress_layer(&w, &calib, &cfg));
+        println!(
+            "{:>6} {:>12} {:>12} {:>12} {:>12} {:>14}",
+            d,
+            fmt_secs(t_quant),
+            fmt_secs(t_wanda),
+            fmt_secs(t_sgpt),
+            fmt_secs(t_lora),
+            fmt_secs(t_full)
+        );
+    }
+    println!("\n(expected shape, as in paper Table 21: wanda ≪ sparsegpt ≈ slim-lora;");
+    println!(" the SVD dominates SLiM's cost, SLiM ≈ Wanda-SVD)");
+}

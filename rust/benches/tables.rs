@@ -1,0 +1,27 @@
+//! End-to-end experiment smoke bench (cargo bench --bench tables): runs the
+//! analytic + measured tables that don't need trained checkpoints, plus a
+//! mini Table-1 on the smallest model if artifacts are present.
+//!
+//! Heavier experiment regeneration is `repro exp all` (see README).
+
+use slim::experiments::{self, Ctx};
+
+fn main() {
+    let ctx = match Ctx::new(true) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts` first.");
+            eprintln!("running artifact-free tables only is not possible — exiting OK.");
+            return;
+        }
+    };
+    // Training-free tables only — trained-model experiments run via
+    // `repro exp all` (benches must stay CI-scale).
+    for id in ["table19", "table20", "table23", "fig3", "fig4"] {
+        println!("\n━━━ {id} ━━━");
+        if let Err(e) = experiments::run(&ctx, id) {
+            eprintln!("{id} failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Calibration statistics collection (paper Apx T: 128 sequences of C4).
+//!
+//! Runs the model forward over a calibration batch and records, per linear
+//! layer, the input-activation statistics every compression method needs:
+//! mean |x| per channel (SLiM saliency), ‖x‖₂ per channel (Wanda), and
+//! optionally the raw activation matrix (SparseGPT / OPTQ Hessians,
+//! MaskLLM search).
+
+use crate::tensor::Matrix;
+
+/// Per-layer activation statistics.
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    /// Layer name (e.g. `block3.mlp.fc1`).
+    pub name: String,
+    /// Raw activations (tokens × d_in) if retained.
+    pub x: Option<Matrix>,
+    /// Per-channel mean |x|.
+    pub x_abs_mean: Vec<f32>,
+    /// Per-channel ‖x‖₂.
+    pub x_l2: Vec<f32>,
+}
+
+impl LayerStats {
+    /// Summarize a raw activation matrix.
+    pub fn from_activations(name: &str, x: Matrix, keep_raw: bool) -> Self {
+        let x_abs_mean = x.col_abs_mean();
+        let x_l2 = x.col_l2_norm();
+        LayerStats {
+            name: name.to_string(),
+            x: keep_raw.then_some(x),
+            x_abs_mean,
+            x_l2,
+        }
+    }
+}
+
+/// Incremental accumulator so calibration can stream batches without
+/// holding every token in memory (raw retention caps at `max_raw_rows`).
+pub struct StatsAccumulator {
+    name: String,
+    d_in: usize,
+    abs_sum: Vec<f64>,
+    sq_sum: Vec<f64>,
+    rows_seen: usize,
+    raw: Vec<f32>,
+    max_raw_rows: usize,
+}
+
+impl StatsAccumulator {
+    pub fn new(name: &str, d_in: usize, max_raw_rows: usize) -> Self {
+        StatsAccumulator {
+            name: name.to_string(),
+            d_in,
+            abs_sum: vec![0.0; d_in],
+            sq_sum: vec![0.0; d_in],
+            rows_seen: 0,
+            raw: Vec::new(),
+            max_raw_rows,
+        }
+    }
+
+    /// Feed one batch of activations (rows = tokens).
+    pub fn update(&mut self, x: &Matrix) {
+        assert_eq!(x.cols(), self.d_in);
+        for i in 0..x.rows() {
+            let row = x.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                self.abs_sum[j] += v.abs() as f64;
+                self.sq_sum[j] += (v as f64) * (v as f64);
+            }
+            if self.rows_seen + i < self.max_raw_rows {
+                self.raw.extend_from_slice(row);
+            }
+        }
+        self.rows_seen += x.rows();
+    }
+
+    /// Finalize into [`LayerStats`].
+    pub fn finish(self) -> LayerStats {
+        let n = self.rows_seen.max(1) as f64;
+        let x_abs_mean = self.abs_sum.iter().map(|&s| (s / n) as f32).collect();
+        let x_l2 = self.sq_sum.iter().map(|&s| s.sqrt() as f32).collect();
+        let raw_rows = self.raw.len() / self.d_in;
+        let x = (raw_rows > 0).then(|| Matrix::from_vec(raw_rows, self.d_in, self.raw));
+        LayerStats { name: self.name, x, x_abs_mean, x_l2 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn accumulator_matches_direct() {
+        let mut rng = Pcg32::seeded(1);
+        let x = Matrix::randn(100, 16, 1.0, &mut rng);
+        let direct = LayerStats::from_activations("l", x.clone(), false);
+        let mut acc = StatsAccumulator::new("l", 16, 0);
+        // Feed in 3 uneven chunks.
+        acc.update(&x.block(0, 30, 0, 16));
+        acc.update(&x.block(30, 77, 0, 16));
+        acc.update(&x.block(77, 100, 0, 16));
+        let streamed = acc.finish();
+        for j in 0..16 {
+            assert!((streamed.x_abs_mean[j] - direct.x_abs_mean[j]).abs() < 1e-4);
+            assert!((streamed.x_l2[j] - direct.x_l2[j]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn raw_retention_cap() {
+        let mut rng = Pcg32::seeded(2);
+        let x = Matrix::randn(50, 8, 1.0, &mut rng);
+        let mut acc = StatsAccumulator::new("l", 8, 20);
+        acc.update(&x);
+        let stats = acc.finish();
+        assert_eq!(stats.x.unwrap().rows(), 20);
+        let mut acc2 = StatsAccumulator::new("l", 8, 0);
+        acc2.update(&x);
+        assert!(acc2.finish().x.is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! The SLiM compression pipeline (paper Fig. 1) and method presets.
+//!
+//! [`pipeline`] wires the three stages — SLiM-Quant → pruning → SLiM-LoRA —
+//! over a single layer, with per-stage error bookkeeping (`E_Q`, `E_S`,
+//! final). [`jsq`] implements the Joint Sparsification-and-Quantization
+//! baseline. [`presets`] names the exact method combinations that appear as
+//! rows in the paper's tables.
+
+pub mod jsq;
+pub mod pipeline;
+pub mod presets;
+
+pub use pipeline::{compress_layer, CompressConfig, CompressedLayer, LayerCalib};
+pub use presets::Preset;

@@ -1,0 +1,291 @@
+//! Per-layer compression pipeline: quantize → prune → low-rank compensate.
+//!
+//! Mirrors paper Fig. 1: `W → (SLiM-Quant) → W^Q → (pruner) → W^C →
+//! (SLiM-LoRA) → W^C + L·R`, with the quantization error `E_Q = W − W^Q`
+//! and sparsity error `E_S = W^Q − W^C` tracked explicitly so experiment
+//! drivers can report the error budget per stage.
+
+use crate::calib::LayerStats;
+use crate::lowrank::{adapter_quant, l2qer, naive, slim_lora, Adapters, LoraMethod};
+use crate::quant::{quantize, QuantMethod};
+use crate::sparse::{prune, Mask, PruneMethod, SparsityPattern};
+use crate::tensor::Matrix;
+
+/// Calibration inputs for one layer. Usually produced by
+/// [`crate::calib::collect`]; tests construct it directly.
+#[derive(Clone, Debug)]
+pub struct LayerCalib {
+    /// Raw calibration activations (b × d_in) — needed by SparseGPT/OPTQ/
+    /// MaskLLM; optional for the cheap pruners.
+    pub x: Option<Matrix>,
+    /// Per-channel mean |x| (SLiM saliency, AWQ scaling).
+    pub x_abs_mean: Vec<f32>,
+    /// Per-channel ‖x‖₂ (Wanda metric).
+    pub x_l2: Vec<f32>,
+}
+
+impl LayerCalib {
+    /// Build from raw activations.
+    pub fn from_activations(x: Matrix) -> Self {
+        let x_abs_mean = x.col_abs_mean();
+        let x_l2 = x.col_l2_norm();
+        LayerCalib { x: Some(x), x_abs_mean, x_l2 }
+    }
+
+    /// Build from a [`LayerStats`] summary (when raw activations weren't
+    /// retained).
+    pub fn from_stats(stats: &LayerStats) -> Self {
+        LayerCalib {
+            x: stats.x.clone(),
+            x_abs_mean: stats.x_abs_mean.clone(),
+            x_l2: stats.x_l2.clone(),
+        }
+    }
+
+    /// Uniform statistics fallback (degrades saliency methods gracefully).
+    pub fn uniform(d_in: usize) -> Self {
+        LayerCalib { x: None, x_abs_mean: vec![1.0; d_in], x_l2: vec![1.0; d_in] }
+    }
+
+    fn hessian(&self) -> Option<Matrix> {
+        self.x.as_ref().map(|x| crate::tensor::matmul_at_b(x, x))
+    }
+}
+
+/// Full pipeline configuration — one of these per table row.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressConfig {
+    pub quant: QuantMethod,
+    pub bits: u8,
+    pub prune: PruneMethod,
+    /// None → no sparsity (quant-only experiments).
+    pub pattern: Option<SparsityPattern>,
+    pub lora: LoraMethod,
+    /// Adapter rank as a fraction of min(d_in, d_out); paper default 0.1.
+    pub rank_ratio: f32,
+    /// §3.3: group-quantize the adapters (`…^Q` variants).
+    pub quantize_adapters: bool,
+}
+
+impl CompressConfig {
+    /// Dense pass-through (for baselines rows).
+    pub fn dense() -> Self {
+        CompressConfig {
+            quant: QuantMethod::None,
+            bits: 32,
+            prune: PruneMethod::None,
+            pattern: None,
+            lora: LoraMethod::None,
+            rank_ratio: 0.1,
+            quantize_adapters: false,
+        }
+    }
+
+    /// The paper's flagship config: SLiM-Quant^W + Wanda 2:4 + SLiM-LoRA.
+    pub fn slim(pattern: SparsityPattern) -> Self {
+        CompressConfig {
+            quant: QuantMethod::SlimQuantW,
+            bits: 4,
+            prune: PruneMethod::Wanda,
+            pattern: Some(pattern),
+            lora: LoraMethod::Slim,
+            rank_ratio: 0.1,
+            quantize_adapters: false,
+        }
+    }
+}
+
+/// Result of compressing one layer.
+#[derive(Clone, Debug)]
+pub struct CompressedLayer {
+    /// Compressed base weights W^C (fake-quant values, zeros at mask).
+    pub wc: Matrix,
+    /// Sparsity mask.
+    pub mask: Mask,
+    /// Adapters, if configured.
+    pub adapters: Option<Adapters>,
+    /// ‖E_Q‖² = ‖W − W^Q‖² — quantization-stage error.
+    pub e_quant: f64,
+    /// ‖E_S‖² = ‖W^Q − W^C‖² — sparsity-stage error.
+    pub e_sparse: f64,
+    /// ‖W − (W^C + L·R)‖² — final reconstruction error.
+    pub e_final: f64,
+    /// Weight bits (4 for int4, 32 for none).
+    pub bits: u8,
+    /// Per-group quantization scales (for the packed kernels).
+    pub scales: Vec<f32>,
+    /// Quantization group size (0 = per-tensor).
+    pub group_size: usize,
+}
+
+impl CompressedLayer {
+    /// The effective dense weight the model sees: `W^C + L·R`.
+    pub fn effective(&self) -> Matrix {
+        match &self.adapters {
+            Some(a) => self.wc.add(&a.product()),
+            None => self.wc.clone(),
+        }
+    }
+
+    /// Adapter rank (0 if none).
+    pub fn rank(&self) -> usize {
+        self.adapters.as_ref().map(|a| a.rank()).unwrap_or(0)
+    }
+}
+
+/// Run the full pipeline on one layer.
+pub fn compress_layer(w: &Matrix, calib: &LayerCalib, cfg: &CompressConfig) -> CompressedLayer {
+    let (d_in, d_out) = w.shape();
+    assert_eq!(calib.x_abs_mean.len(), d_in);
+
+    // ── Stage 1: quantization (paper §3.1) ───────────────────────────────
+    let hessian = if cfg.quant == QuantMethod::GroupOptq { calib.hessian() } else { None };
+    let q = quantize(w, cfg.quant, cfg.bits, Some(&calib.x_abs_mean), hessian.as_ref());
+    let wq = q.wq;
+    let e_quant = wq.sub(w).fro_norm_sq();
+
+    // ── Stage 2: pruning on the quantized weights (paper §3.2 intro) ─────
+    let (wc, mask) = match cfg.pattern {
+        Some(pattern) => prune(
+            &wq,
+            cfg.prune,
+            pattern,
+            Some(&calib.x_l2),
+            calib.x.as_ref(),
+        ),
+        None => (wq.clone(), Mask::ones(d_in, d_out)),
+    };
+    let e_sparse = wc.sub(&wq).fro_norm_sq();
+
+    // ── Stage 3: low-rank error compensation (paper §3.2) ────────────────
+    let rank = ((d_in.min(d_out) as f32 * cfg.rank_ratio).round() as usize).max(1);
+    let adapters = match cfg.lora {
+        LoraMethod::None => None,
+        LoraMethod::Naive => Some(naive::adapters(w, &wc, rank)),
+        LoraMethod::Slim => Some(slim_lora::adapters(w, &wc, &calib.x_abs_mean, rank)),
+        // L²QER compensates only the quantization error (pre-pruning).
+        LoraMethod::L2qer => Some(l2qer::adapters(w, &wq, &calib.x_abs_mean, rank)),
+    };
+    let adapters = match (adapters, cfg.quantize_adapters) {
+        (Some(a), true) => Some(adapter_quant::quantize(&a)),
+        (a, _) => a,
+    };
+
+    let effective = match &adapters {
+        Some(a) => wc.add(&a.product()),
+        None => wc.clone(),
+    };
+    let e_final = effective.sub(w).fro_norm_sq();
+
+    CompressedLayer {
+        wc,
+        mask,
+        adapters,
+        e_quant,
+        e_sparse,
+        e_final,
+        bits: cfg.bits,
+        scales: q.scales,
+        group_size: q.group_size,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn layer(seed: u64) -> (Matrix, LayerCalib) {
+        let mut rng = Pcg32::seeded(seed);
+        let d_in = 128;
+        let d_out = 96;
+        let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.04));
+        let mut x = Matrix::randn(96, d_in, 1.0, &mut rng);
+        for i in 0..96 {
+            for j in 0..10 {
+                let v = x.get(i, j) * 6.0;
+                x.set(i, j, v);
+            }
+        }
+        (w, LayerCalib::from_activations(x))
+    }
+
+    #[test]
+    fn slim_pipeline_error_budget() {
+        let (w, calib) = layer(1);
+        let out = compress_layer(&w, &calib, &CompressConfig::slim(SparsityPattern::TWO_FOUR));
+        // Stage errors are positive and the adapters reduce the total error
+        // below the raw compressed error.
+        assert!(out.e_quant > 0.0);
+        assert!(out.e_sparse > 0.0);
+        let e_compressed = out.wc.sub(&w).fro_norm_sq();
+        assert!(out.e_final < e_compressed, "{} !< {}", out.e_final, e_compressed);
+        assert!(out.mask.satisfies_nofm(2, 4));
+        assert!((out.wc.sparsity() - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn dense_config_is_identity() {
+        let (w, calib) = layer(2);
+        let out = compress_layer(&w, &calib, &CompressConfig::dense());
+        assert_eq!(out.effective(), w);
+        assert_eq!(out.e_final, 0.0);
+        assert_eq!(out.rank(), 0);
+    }
+
+    #[test]
+    fn slim_beats_naive_on_saliency_error() {
+        let (w, calib) = layer(3);
+        let mut cfg = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+        let slim = compress_layer(&w, &calib, &cfg);
+        cfg.lora = LoraMethod::Naive;
+        let naive_out = compress_layer(&w, &calib, &cfg);
+        let e_slim =
+            crate::lowrank::slim_lora::saliency_error(&w, &slim.effective(), &calib.x_abs_mean);
+        let e_naive = crate::lowrank::slim_lora::saliency_error(
+            &w,
+            &naive_out.effective(),
+            &calib.x_abs_mean,
+        );
+        assert!(e_slim < e_naive, "slim {e_slim} vs naive {e_naive}");
+    }
+
+    #[test]
+    fn adapter_quantization_small_penalty() {
+        let (w, calib) = layer(4);
+        let mut cfg = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+        let plain = compress_layer(&w, &calib, &cfg);
+        cfg.quantize_adapters = true;
+        let quanted = compress_layer(&w, &calib, &cfg);
+        // ^Q variant should be within a few percent of the fp adapter error.
+        assert!(quanted.e_final < plain.e_final * 1.25, "{} vs {}", quanted.e_final, plain.e_final);
+    }
+
+    #[test]
+    fn quant_only_and_sparse_only_paths() {
+        let (w, calib) = layer(5);
+        // Quant-only.
+        let mut cfg = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+        cfg.pattern = None;
+        cfg.prune = PruneMethod::None;
+        let q_only = compress_layer(&w, &calib, &cfg);
+        assert_eq!(q_only.e_sparse, 0.0);
+        assert_eq!(q_only.mask.density(), 1.0);
+        // Sparse-only.
+        let mut cfg2 = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+        cfg2.quant = QuantMethod::None;
+        cfg2.bits = 32;
+        let s_only = compress_layer(&w, &calib, &cfg2);
+        assert_eq!(s_only.e_quant, 0.0);
+        assert!(s_only.e_sparse > 0.0);
+    }
+
+    #[test]
+    fn rank_ratio_scales_rank() {
+        let (w, calib) = layer(6);
+        let mut cfg = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+        cfg.rank_ratio = 0.25;
+        let out = compress_layer(&w, &calib, &cfg);
+        assert_eq!(out.rank(), 24); // 0.25 * min(128, 96)
+    }
+}

@@ -1,0 +1,187 @@
+//! Named method presets — one per row of the paper's tables.
+//!
+//! Each [`Preset`] maps to the exact (`quant`, `prune`, `lora`) combination
+//! the paper evaluates, so experiment drivers iterate over presets and
+//! render rows with the paper's own labels.
+
+use super::pipeline::CompressConfig;
+use crate::lowrank::LoraMethod;
+use crate::quant::QuantMethod;
+use crate::sparse::{PruneMethod, SparsityPattern};
+
+/// A named table row from the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// Uncompressed reference.
+    Dense,
+    /// Magnitude pruning + Group AbsMax (Table 1 worst baseline).
+    MagnitudeGroupAbsMax,
+    /// SparseGPT + Group OPTQ (designed-together baseline).
+    SparseGptGroupOptq,
+    /// Wanda + Group AbsMax ("Best Method*" stand-in; strongest of the
+    /// simple quantizer pairings we implement).
+    WandaGroupAbsMax,
+    /// JSQ joint baseline.
+    Jsq,
+    /// L²QER adapters over Group AbsMax quant + Wanda pruning.
+    L2qer,
+    /// Naive-LoRA over SLiM-Quant^W + Wanda.
+    NaiveLora,
+    /// SLiM-LoRA over SLiM-Quant^W + Wanda (the paper's method).
+    SlimLora,
+    /// SLiM-LoRA with quantized adapters (SLiM-LoRA^Q).
+    SlimLoraQ,
+    /// SLiM-LoRA over SLiM-Quant^O (activation-aware; Apx C).
+    SlimLoraQuantO,
+    /// MaskLLM-style masks, no adapters (Table 3).
+    MaskLlm,
+    /// MaskLLM masks + SLiM-LoRA (Table 3).
+    MaskLlmSlimLora,
+}
+
+impl Preset {
+    /// All Table 1 rows, in the paper's order.
+    pub fn table1() -> Vec<Preset> {
+        vec![
+            Preset::MagnitudeGroupAbsMax,
+            Preset::SparseGptGroupOptq,
+            Preset::WandaGroupAbsMax,
+            Preset::Jsq,
+            Preset::L2qer,
+            Preset::NaiveLora,
+            Preset::SlimLora,
+            Preset::SlimLoraQ,
+        ]
+    }
+
+    /// Row label matching the paper (pruning/LoRA method, quantizer).
+    pub fn label(&self) -> (&'static str, &'static str) {
+        match self {
+            Preset::Dense => ("Dense", "-"),
+            Preset::MagnitudeGroupAbsMax => ("Magnitude", "Group AbsMax"),
+            Preset::SparseGptGroupOptq => ("SparseGPT", "Group OPTQ"),
+            Preset::WandaGroupAbsMax => ("Wanda", "Group AbsMax"),
+            Preset::Jsq => ("JSQ", "JSQ"),
+            Preset::L2qer => ("L2QER", "Group AbsMax"),
+            Preset::NaiveLora => ("Naive-LoRA", "SLiM-Quant^W"),
+            Preset::SlimLora => ("SLiM-LoRA", "SLiM-Quant^W"),
+            Preset::SlimLoraQ => ("SLiM-LoRA^Q", "SLiM-Quant^W"),
+            Preset::SlimLoraQuantO => ("SLiM-LoRA", "SLiM-Quant^O"),
+            Preset::MaskLlm => ("MaskLLM*", "-"),
+            Preset::MaskLlmSlimLora => ("MaskLLM* + SLiM-LoRA", "SLiM-Quant^W"),
+        }
+    }
+
+    /// Whether the JSQ special path applies (joint loop instead of staged).
+    pub fn is_jsq(&self) -> bool {
+        matches!(self, Preset::Jsq)
+    }
+
+    /// Build the pipeline config for this preset at the given sparsity
+    /// pattern (None → quant-only) and weight bit-width.
+    pub fn config(&self, pattern: Option<SparsityPattern>, bits: u8) -> CompressConfig {
+        let base = CompressConfig {
+            quant: QuantMethod::None,
+            bits,
+            prune: PruneMethod::None,
+            pattern,
+            lora: LoraMethod::None,
+            rank_ratio: 0.1,
+            quantize_adapters: false,
+        };
+        match self {
+            Preset::Dense => CompressConfig::dense(),
+            Preset::MagnitudeGroupAbsMax => CompressConfig {
+                quant: QuantMethod::GroupAbsMax,
+                prune: PruneMethod::Magnitude,
+                ..base
+            },
+            Preset::SparseGptGroupOptq => CompressConfig {
+                quant: QuantMethod::GroupOptq,
+                prune: PruneMethod::SparseGpt,
+                ..base
+            },
+            Preset::WandaGroupAbsMax => CompressConfig {
+                quant: QuantMethod::GroupAbsMax,
+                prune: PruneMethod::Wanda,
+                ..base
+            },
+            // JSQ is handled by the joint loop in `compress::jsq`; the
+            // config here is only used for bookkeeping.
+            Preset::Jsq => CompressConfig {
+                quant: QuantMethod::AbsMax,
+                prune: PruneMethod::Wanda,
+                ..base
+            },
+            Preset::L2qer => CompressConfig {
+                quant: QuantMethod::GroupAbsMax,
+                prune: PruneMethod::Wanda,
+                lora: LoraMethod::L2qer,
+                ..base
+            },
+            Preset::NaiveLora => CompressConfig {
+                quant: QuantMethod::SlimQuantW,
+                prune: PruneMethod::Wanda,
+                lora: LoraMethod::Naive,
+                ..base
+            },
+            Preset::SlimLora => CompressConfig {
+                quant: QuantMethod::SlimQuantW,
+                prune: PruneMethod::Wanda,
+                lora: LoraMethod::Slim,
+                ..base
+            },
+            Preset::SlimLoraQ => CompressConfig {
+                quant: QuantMethod::SlimQuantW,
+                prune: PruneMethod::Wanda,
+                lora: LoraMethod::Slim,
+                quantize_adapters: true,
+                ..base
+            },
+            Preset::SlimLoraQuantO => CompressConfig {
+                quant: QuantMethod::SlimQuantO,
+                prune: PruneMethod::Wanda,
+                lora: LoraMethod::Slim,
+                ..base
+            },
+            Preset::MaskLlm => CompressConfig {
+                quant: QuantMethod::None,
+                bits: 32,
+                prune: PruneMethod::MaskLlm,
+                ..base
+            },
+            Preset::MaskLlmSlimLora => CompressConfig {
+                quant: QuantMethod::SlimQuantW,
+                prune: PruneMethod::MaskLlm,
+                lora: LoraMethod::Slim,
+                ..base
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_paper_rows() {
+        let rows = Preset::table1();
+        assert_eq!(rows.len(), 8);
+        assert_eq!(rows[0].label().0, "Magnitude");
+        assert_eq!(rows[7].label().0, "SLiM-LoRA^Q");
+    }
+
+    #[test]
+    fn configs_are_consistent() {
+        let p = SparsityPattern::TWO_FOUR;
+        let cfg = Preset::SlimLora.config(Some(p), 4);
+        assert_eq!(cfg.quant, QuantMethod::SlimQuantW);
+        assert_eq!(cfg.lora, LoraMethod::Slim);
+        assert!(!cfg.quantize_adapters);
+        let cfgq = Preset::SlimLoraQ.config(Some(p), 4);
+        assert!(cfgq.quantize_adapters);
+        let dense = Preset::Dense.config(None, 4);
+        assert_eq!(dense.quant, QuantMethod::None);
+    }
+}

@@ -1,0 +1,291 @@
+//! The "synthlang" corpus generator.
+//!
+//! Token space (V = 512):
+//! * `0` BOS, `1` SEP (sentence break), `2` REL1, `3` REL2 — special.
+//! * `8..136` — 128 entity tokens `e`.
+//! * `136..264` — attribute-1 tokens (`attr1(e)` is a seeded bijection).
+//! * `264..392` — attribute-2 tokens (`attr2(e)` likewise).
+//! * `392..512` — filler tokens with a Zipfian unigram prior and a sparse
+//!   first-order Markov transition table.
+//!
+//! Sentences are drawn from four templates (facts about `attr1`/`attr2`,
+//! Markov filler phrases, alternating patterns). Two named corpora —
+//! `synth-web` and `synth-pajama` — share the fact mappings and the Markov
+//! backbone (same "language") but differ in template mix and sampling seed,
+//! mirroring C4 vs SlimPajama for the calibration-sensitivity study (T22).
+
+use crate::rng::{Pcg32, Zipf};
+
+pub const VOCAB: usize = 512;
+pub const BOS: u32 = 0;
+pub const SEP: u32 = 1;
+pub const REL1: u32 = 2;
+pub const REL2: u32 = 3;
+pub const N_ENTITIES: usize = 128;
+pub const ENTITY_BASE: u32 = 8;
+pub const ATTR1_BASE: u32 = 136;
+pub const ATTR2_BASE: u32 = 264;
+pub const FILLER_BASE: u32 = 392;
+pub const N_FILLER: usize = VOCAB - FILLER_BASE as usize;
+
+/// Which named corpus to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusSpec {
+    /// Primary corpus (C4 stand-in): balanced template mix.
+    SynthWeb,
+    /// Alternate corpus (SlimPajama stand-in): filler-heavy mix, different
+    /// sampling stream.
+    SynthPajama,
+}
+
+impl CorpusSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorpusSpec::SynthWeb => "synth-web",
+            CorpusSpec::SynthPajama => "synth-pajama",
+        }
+    }
+
+    fn sample_seed(&self) -> u64 {
+        match self {
+            CorpusSpec::SynthWeb => 0xC0FFEE,
+            CorpusSpec::SynthPajama => 0xBADCAB,
+        }
+    }
+
+    /// Template probabilities: (fact1, fact2, filler, pattern).
+    fn mix(&self) -> [f32; 4] {
+        match self {
+            CorpusSpec::SynthWeb => [0.22, 0.22, 0.41, 0.15],
+            CorpusSpec::SynthPajama => [0.15, 0.15, 0.55, 0.15],
+        }
+    }
+}
+
+/// Shared language structure (same across corpora — seeded independently
+/// of the sampling stream).
+pub struct Language {
+    /// attr1 bijection: entity index → attribute-1 token.
+    pub attr1: Vec<u32>,
+    /// attr2 bijection.
+    pub attr2: Vec<u32>,
+    /// Markov successor table: filler index → (succ tokens, probs).
+    pub successors: Vec<(Vec<u32>, Vec<f32>)>,
+    /// Zipf sampler over filler ranks.
+    zipf: Zipf,
+    /// Zipf rank → filler token (seeded permutation).
+    rank_to_filler: Vec<u32>,
+}
+
+impl Language {
+    /// Build the shared language (fixed seed — it IS the language).
+    pub fn shared() -> Language {
+        let mut rng = Pcg32::seeded(0x11a6_0a6e);
+        let mut perm1: Vec<u32> = (0..N_ENTITIES as u32).collect();
+        let mut perm2: Vec<u32> = (0..N_ENTITIES as u32).collect();
+        rng.shuffle(&mut perm1);
+        rng.shuffle(&mut perm2);
+        let attr1 = perm1.iter().map(|&i| ATTR1_BASE + i).collect();
+        let attr2 = perm2.iter().map(|&i| ATTR2_BASE + i).collect();
+        // Sparse Markov chain: each filler has 3 successors with peaked
+        // probabilities (0.6 / 0.3 / 0.1) — learnable bigram structure.
+        let mut successors = Vec::with_capacity(N_FILLER);
+        for _ in 0..N_FILLER {
+            let mut succ = Vec::with_capacity(3);
+            while succ.len() < 3 {
+                let cand = FILLER_BASE + rng.below(N_FILLER as u32);
+                if !succ.contains(&cand) {
+                    succ.push(cand);
+                }
+            }
+            successors.push((succ, vec![0.6, 0.3, 0.1]));
+        }
+        let mut rank_to_filler: Vec<u32> =
+            (0..N_FILLER as u32).map(|i| FILLER_BASE + i).collect();
+        rng.shuffle(&mut rank_to_filler);
+        Language { attr1, attr2, successors, zipf: Zipf::new(N_FILLER, 1.05), rank_to_filler }
+    }
+
+    /// attr1 of entity index.
+    pub fn attr1_of(&self, ent: usize) -> u32 {
+        self.attr1[ent]
+    }
+
+    pub fn attr2_of(&self, ent: usize) -> u32 {
+        self.attr2[ent]
+    }
+
+    /// The most likely successor of a filler token.
+    pub fn top_successor(&self, filler: u32) -> u32 {
+        self.successors[(filler - FILLER_BASE) as usize].0[0]
+    }
+
+    /// The least likely listed successor.
+    pub fn weak_successor(&self, filler: u32) -> u32 {
+        self.successors[(filler - FILLER_BASE) as usize].0[2]
+    }
+
+    fn sample_filler(&self, rng: &mut Pcg32) -> u32 {
+        self.rank_to_filler[self.zipf.sample(rng)]
+    }
+}
+
+/// A generated token stream with train/eval splits.
+pub struct Corpus {
+    pub spec: CorpusSpec,
+    pub lang: Language,
+    pub train: Vec<u32>,
+    pub eval: Vec<u32>,
+}
+
+impl Corpus {
+    /// Generate `n_tokens` of training text plus 1/8 of that for eval.
+    pub fn generate(spec: CorpusSpec, n_tokens: usize) -> Corpus {
+        let lang = Language::shared();
+        let mut rng = Pcg32::seeded(spec.sample_seed());
+        let train = gen_stream(&lang, spec, n_tokens, &mut rng);
+        let eval = gen_stream(&lang, spec, n_tokens / 8 + 256, &mut rng);
+        Corpus { spec, lang, train, eval }
+    }
+
+    /// Sample a training batch of `batch` windows of length `seq`.
+    pub fn batch(&self, batch: usize, seq: usize, rng: &mut Pcg32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let start = rng.below_usize(self.train.len() - seq);
+            out.extend_from_slice(&self.train[start..start + seq]);
+        }
+        out
+    }
+
+    /// Deterministic eval windows (for perplexity).
+    pub fn eval_windows(&self, seq: usize, max_windows: usize) -> Vec<Vec<u32>> {
+        self.eval
+            .chunks_exact(seq)
+            .take(max_windows)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+
+    /// Calibration windows from the train stream (paper: 128 sequences).
+    pub fn calibration(&self, n_seqs: usize, seq: usize, rng: &mut Pcg32) -> Vec<u32> {
+        self.batch(n_seqs, seq, rng)
+    }
+}
+
+fn gen_stream(lang: &Language, spec: CorpusSpec, n_tokens: usize, rng: &mut Pcg32) -> Vec<u32> {
+    let mix = spec.mix();
+    let mut out = Vec::with_capacity(n_tokens + 16);
+    out.push(BOS);
+    while out.len() < n_tokens {
+        match rng.categorical(&mix) {
+            0 => {
+                // fact1: e REL1 attr1(e) SEP
+                let e = rng.below_usize(N_ENTITIES);
+                out.extend_from_slice(&[ENTITY_BASE + e as u32, REL1, lang.attr1_of(e), SEP]);
+            }
+            1 => {
+                let e = rng.below_usize(N_ENTITIES);
+                out.extend_from_slice(&[ENTITY_BASE + e as u32, REL2, lang.attr2_of(e), SEP]);
+            }
+            2 => {
+                // Markov filler phrase of length 4..=10.
+                let len = 4 + rng.below_usize(7);
+                let mut t = lang.sample_filler(rng);
+                out.push(t);
+                for _ in 1..len {
+                    let (succ, probs) = &lang.successors[(t - FILLER_BASE) as usize];
+                    t = succ[rng.categorical(probs)];
+                    out.push(t);
+                }
+                out.push(SEP);
+            }
+            _ => {
+                // Alternating pattern a b a b a b SEP.
+                let a = lang.sample_filler(rng);
+                let mut b = lang.sample_filler(rng);
+                if b == a {
+                    b = lang.top_successor(a);
+                }
+                for k in 0..6 {
+                    out.push(if k % 2 == 0 { a } else { b });
+                }
+                out.push(SEP);
+            }
+        }
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = Corpus::generate(CorpusSpec::SynthWeb, 5_000);
+        assert!(c.train.iter().all(|&t| (t as usize) < VOCAB));
+        assert_eq!(c.train.len(), 5_000);
+        assert!(c.eval.len() >= 256);
+    }
+
+    #[test]
+    fn deterministic_per_spec() {
+        let a = Corpus::generate(CorpusSpec::SynthWeb, 2_000);
+        let b = Corpus::generate(CorpusSpec::SynthWeb, 2_000);
+        assert_eq!(a.train, b.train);
+    }
+
+    #[test]
+    fn corpora_differ_but_share_language() {
+        let a = Corpus::generate(CorpusSpec::SynthWeb, 2_000);
+        let b = Corpus::generate(CorpusSpec::SynthPajama, 2_000);
+        assert_ne!(a.train, b.train);
+        assert_eq!(a.lang.attr1, b.lang.attr1); // same facts
+    }
+
+    #[test]
+    fn facts_are_consistent() {
+        // Every (e, REL1, x) trigram in the stream must satisfy x=attr1(e).
+        let c = Corpus::generate(CorpusSpec::SynthWeb, 20_000);
+        let mut checked = 0;
+        for w in c.train.windows(3) {
+            if w[1] == REL1 && (ENTITY_BASE..ATTR1_BASE).contains(&w[0]) {
+                let e = (w[0] - ENTITY_BASE) as usize;
+                assert_eq!(w[2], c.lang.attr1_of(e));
+                checked += 1;
+            }
+        }
+        assert!(checked > 100, "checked only {checked} facts");
+    }
+
+    #[test]
+    fn batches_have_right_shape() {
+        let c = Corpus::generate(CorpusSpec::SynthWeb, 10_000);
+        let mut rng = Pcg32::seeded(1);
+        let b = c.batch(4, 32, &mut rng);
+        assert_eq!(b.len(), 128);
+        let windows = c.eval_windows(64, 10);
+        assert_eq!(windows.len(), 10);
+        assert!(windows.iter().all(|w| w.len() == 64));
+    }
+
+    #[test]
+    fn zipf_profile_on_fillers() {
+        let c = Corpus::generate(CorpusSpec::SynthWeb, 50_000);
+        let mut counts = vec![0usize; VOCAB];
+        for &t in &c.train {
+            counts[t as usize] += 1;
+        }
+        let filler_counts: Vec<usize> =
+            counts[FILLER_BASE as usize..].iter().copied().collect();
+        let max = *filler_counts.iter().max().unwrap();
+        let median = {
+            let mut s = filler_counts.clone();
+            s.sort();
+            s[s.len() / 2]
+        };
+        assert!(max > median * 3, "long tail expected: max {max} median {median}");
+    }
+}

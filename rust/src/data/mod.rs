@@ -1,0 +1,14 @@
+//! Synthetic language data (the C4 / WikiText2 / zero-shot-suite stand-ins).
+//!
+//! See DESIGN.md §2: real corpora aren't available in this environment, so
+//! [`corpus`] defines a seeded stochastic language ("synthlang") with
+//! learnable structure — Zipfian unigrams, a bigram Markov backbone,
+//! deterministic entity→attribute facts and repeating patterns — and
+//! [`tasks`] derives a 6-task multiple-choice suite from it (likelihood
+//! ranking, lm-eval style) mirroring the paper's 6-task zero-shot average.
+
+pub mod corpus;
+pub mod tasks;
+
+pub use corpus::{Corpus, CorpusSpec};
+pub use tasks::{accuracy, task_suite, TaskItem, ZeroShotTask};

@@ -1,0 +1,233 @@
+//! Six-task synthetic zero-shot suite (the MMLU/PiQA/ARC/WinoGrande/OBQA
+//! stand-in; see DESIGN.md §2).
+//!
+//! Each task is a set of two-way multiple-choice items scored by likelihood
+//! ranking, exactly as the Language Model Evaluation Harness scores
+//! multiple-choice zero-shot tasks: the model is correct when it assigns
+//! the true continuation a higher log-probability than the distractor.
+//! Chance is 50%; a trained dense sim model scores well above it, and
+//! compression degrades the score — giving the same dynamic range the
+//! paper's accuracy tables rely on.
+
+use super::corpus::{Language, BOS, ENTITY_BASE, N_ENTITIES, REL1, REL2, SEP};
+use crate::rng::Pcg32;
+
+/// One two-way multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub prefix: Vec<u32>,
+    pub correct: Vec<u32>,
+    pub distractor: Vec<u32>,
+}
+
+/// A named task with its items.
+#[derive(Clone, Debug)]
+pub struct ZeroShotTask {
+    pub name: &'static str,
+    pub items: Vec<TaskItem>,
+}
+
+/// Build the full 6-task suite with `n` items per task.
+pub fn task_suite(lang: &Language, n: usize, seed: u64) -> Vec<ZeroShotTask> {
+    let mut rng = Pcg32::seeded(seed);
+    vec![
+        fact_recall_1(lang, n, &mut rng),
+        fact_recall_2(lang, n, &mut rng),
+        bigram_choice(lang, n, &mut rng),
+        pattern_completion(lang, n, &mut rng),
+        contextual_recall(lang, n, &mut rng),
+        phrase_plausibility(lang, n, &mut rng),
+    ]
+}
+
+fn two_entities(rng: &mut Pcg32) -> (usize, usize) {
+    let e = rng.below_usize(N_ENTITIES);
+    let mut o = rng.below_usize(N_ENTITIES);
+    while o == e {
+        o = rng.below_usize(N_ENTITIES);
+    }
+    (e, o)
+}
+
+/// Task 1 — "fact-recall-1" (MMLU-ish): `e REL1 → attr1(e)` vs attr1(e').
+fn fact_recall_1(lang: &Language, n: usize, rng: &mut Pcg32) -> ZeroShotTask {
+    let items = (0..n)
+        .map(|_| {
+            let (e, o) = two_entities(rng);
+            TaskItem {
+                prefix: vec![BOS, ENTITY_BASE + e as u32, REL1],
+                correct: vec![lang.attr1_of(e)],
+                distractor: vec![lang.attr1_of(o)],
+            }
+        })
+        .collect();
+    ZeroShotTask { name: "fact-recall-1", items }
+}
+
+/// Task 2 — "fact-recall-2": same over the REL2/attr2 mapping.
+fn fact_recall_2(lang: &Language, n: usize, rng: &mut Pcg32) -> ZeroShotTask {
+    let items = (0..n)
+        .map(|_| {
+            let (e, o) = two_entities(rng);
+            TaskItem {
+                prefix: vec![BOS, ENTITY_BASE + e as u32, REL2],
+                correct: vec![lang.attr2_of(e)],
+                distractor: vec![lang.attr2_of(o)],
+            }
+        })
+        .collect();
+    ZeroShotTask { name: "fact-recall-2", items }
+}
+
+/// Task 3 — "bigram-choice" (PiQA-ish plausibility): strong successor vs
+/// weak successor of a filler token.
+fn bigram_choice(lang: &Language, n: usize, rng: &mut Pcg32) -> ZeroShotTask {
+    let items = (0..n)
+        .map(|_| {
+            let f = super::corpus::FILLER_BASE + rng.below(super::corpus::N_FILLER as u32);
+            TaskItem {
+                prefix: vec![BOS, f],
+                correct: vec![lang.top_successor(f)],
+                distractor: vec![lang.weak_successor(f)],
+            }
+        })
+        .collect();
+    ZeroShotTask { name: "bigram-choice", items }
+}
+
+/// Task 4 — "pattern-completion" (WinoGrande-ish): `a b a b a → b` vs a
+/// random filler.
+fn pattern_completion(lang: &Language, n: usize, rng: &mut Pcg32) -> ZeroShotTask {
+    let items = (0..n)
+        .map(|_| {
+            let base = super::corpus::FILLER_BASE;
+            let a = base + rng.below(super::corpus::N_FILLER as u32);
+            let mut b = base + rng.below(super::corpus::N_FILLER as u32);
+            if b == a {
+                b = lang.top_successor(a);
+            }
+            let mut d = base + rng.below(super::corpus::N_FILLER as u32);
+            while d == b || d == a {
+                d = base + rng.below(super::corpus::N_FILLER as u32);
+            }
+            TaskItem {
+                prefix: vec![BOS, a, b, a, b, a],
+                correct: vec![b],
+                distractor: vec![d],
+            }
+        })
+        .collect();
+    ZeroShotTask { name: "pattern-completion", items }
+}
+
+/// Task 5 — "contextual-recall" (ARC-ish): the fact appears in context,
+/// then is queried again: `e REL1 attr1(e) SEP e REL1 → attr1(e)`.
+fn contextual_recall(lang: &Language, n: usize, rng: &mut Pcg32) -> ZeroShotTask {
+    let items = (0..n)
+        .map(|_| {
+            let (e, o) = two_entities(rng);
+            let et = ENTITY_BASE + e as u32;
+            TaskItem {
+                prefix: vec![BOS, et, REL1, lang.attr1_of(e), SEP, et, REL1],
+                correct: vec![lang.attr1_of(e)],
+                distractor: vec![lang.attr1_of(o)],
+            }
+        })
+        .collect();
+    ZeroShotTask { name: "contextual-recall", items }
+}
+
+/// Task 6 — "phrase-plausibility" (OBQA-ish): a 3-step Markov phrase vs the
+/// same phrase with the last step replaced by a non-successor.
+fn phrase_plausibility(lang: &Language, n: usize, rng: &mut Pcg32) -> ZeroShotTask {
+    let items = (0..n)
+        .map(|_| {
+            let base = super::corpus::FILLER_BASE;
+            let a = base + rng.below(super::corpus::N_FILLER as u32);
+            let b = lang.top_successor(a);
+            let c = lang.top_successor(b);
+            let mut d = base + rng.below(super::corpus::N_FILLER as u32);
+            while d == c {
+                d = base + rng.below(super::corpus::N_FILLER as u32);
+            }
+            TaskItem { prefix: vec![BOS, a, b], correct: vec![c], distractor: vec![d] }
+        })
+        .collect();
+    ZeroShotTask { name: "phrase-plausibility", items }
+}
+
+/// Score one task given a log-probability oracle: returns accuracy in
+/// percent. `logprob(prefix, continuation)` must return the summed
+/// continuation log-probability.
+pub fn accuracy(task: &ZeroShotTask, mut logprob: impl FnMut(&[u32], &[u32]) -> f64) -> f64 {
+    if task.items.is_empty() {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for item in &task.items {
+        let lp_c = logprob(&item.prefix, &item.correct);
+        let lp_d = logprob(&item.prefix, &item.distractor);
+        if lp_c > lp_d {
+            correct += 1;
+        }
+    }
+    100.0 * correct as f64 / task.items.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_six_tasks() {
+        let lang = Language::shared();
+        let suite = task_suite(&lang, 20, 7);
+        assert_eq!(suite.len(), 6);
+        for t in &suite {
+            assert_eq!(t.items.len(), 20);
+            for item in &t.items {
+                assert_ne!(item.correct, item.distractor);
+                assert!(!item.prefix.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn suite_is_deterministic() {
+        let lang = Language::shared();
+        let a = task_suite(&lang, 10, 3);
+        let b = task_suite(&lang, 10, 3);
+        assert_eq!(a[0].items[0].prefix, b[0].items[0].prefix);
+    }
+
+    #[test]
+    fn accuracy_with_perfect_oracle_is_100() {
+        let lang = Language::shared();
+        let suite = task_suite(&lang, 25, 9);
+        // Oracle: knows the language — score correct continuations higher.
+        for t in &suite {
+            let truth: std::collections::HashSet<(Vec<u32>, Vec<u32>)> = t
+                .items
+                .iter()
+                .map(|i| (i.prefix.clone(), i.correct.clone()))
+                .collect();
+            let acc = accuracy(t, |p, c| {
+                if truth.contains(&(p.to_vec(), c.to_vec())) {
+                    -1.0
+                } else {
+                    -2.0
+                }
+            });
+            assert_eq!(acc, 100.0, "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn accuracy_with_random_oracle_near_50() {
+        let lang = Language::shared();
+        let suite = task_suite(&lang, 400, 11);
+        let mut rng = Pcg32::seeded(1);
+        let acc = accuracy(&suite[0], |_, _| rng.f64());
+        assert!((acc - 50.0).abs() < 10.0, "acc {acc}");
+    }
+}

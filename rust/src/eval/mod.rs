@@ -1,0 +1,173 @@
+//! Evaluation: perplexity (WikiText2 stand-in) and the 6-task zero-shot
+//! suite, over dense or compressed models.
+//!
+//! Perplexity runs either natively (with weight overrides — the compressed
+//! path) or through the AOT `lm_loss` artifact (dense validation that the
+//! Rust and HLO forward agree). Zero-shot accuracy is likelihood ranking
+//! via the native forward.
+
+use crate::data::{accuracy, task_suite, Corpus};
+use crate::model::{nll, Batch, ModelConfig, Overrides, Weights};
+use crate::quant::fp8::InputQuant;
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+
+/// Perplexity over the corpus eval split using the native forward.
+pub fn perplexity(
+    cfg: &ModelConfig,
+    w: &Weights,
+    overrides: Option<&Overrides>,
+    corpus: &Corpus,
+    max_windows: usize,
+) -> f64 {
+    perplexity_iq(cfg, w, overrides, corpus, max_windows, InputQuant::None)
+}
+
+/// [`perplexity`] with activation quantization (paper Apx B / Table 12).
+pub fn perplexity_iq(
+    cfg: &ModelConfig,
+    w: &Weights,
+    overrides: Option<&Overrides>,
+    corpus: &Corpus,
+    max_windows: usize,
+    iq: InputQuant,
+) -> f64 {
+    let windows = corpus.eval_windows(cfg.max_seq, max_windows);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for win in &windows {
+        let batch = Batch::new(win.clone(), 1, win.len());
+        let logits = crate::model::transformer::forward_iq(cfg, w, &batch, None, overrides, iq);
+        total += nll(cfg, &logits, &batch) * (win.len() - 1) as f64;
+        count += win.len() - 1;
+    }
+    (total / count.max(1) as f64).exp()
+}
+
+/// Perplexity via the AOT `lm_loss` artifact (dense weights only).
+pub fn perplexity_aot(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    w: &Weights,
+    corpus: &Corpus,
+    max_batches: usize,
+) -> Result<f64> {
+    let entry_name = format!("lm_loss_{}", cfg.name);
+    let entry = rt.entry(&entry_name)?.clone();
+    let b = entry.meta_usize("batch").ok_or_else(|| anyhow!("no batch"))?;
+    let seq = entry.meta_usize("seq").ok_or_else(|| anyhow!("no seq"))?;
+    let windows = corpus.eval_windows(seq, max_batches * b);
+    if windows.len() < b {
+        return Err(anyhow!("not enough eval windows"));
+    }
+    let order = crate::model::param_order(cfg);
+    let params: Vec<&crate::tensor::Matrix> = order.iter().map(|n| w.expect(n)).collect();
+    let mut total = 0.0f64;
+    let mut batches = 0usize;
+    for chunk in windows.chunks_exact(b).take(max_batches) {
+        let toks: Vec<u32> = chunk.iter().flatten().copied().collect();
+        let outs = rt.execute_matrices(&entry_name, &params, Some((&toks, b, seq)))?;
+        total += outs[0].get(0, 0) as f64;
+        batches += 1;
+    }
+    Ok((total / batches.max(1) as f64).exp())
+}
+
+/// Per-task and average zero-shot accuracy (percent).
+pub struct ZeroShotReport {
+    pub per_task: Vec<(String, f64)>,
+    pub average: f64,
+}
+
+/// Run the 6-task suite with `items` items per task.
+pub fn zero_shot(
+    cfg: &ModelConfig,
+    w: &Weights,
+    overrides: Option<&Overrides>,
+    corpus: &Corpus,
+    items: usize,
+) -> ZeroShotReport {
+    zero_shot_iq(cfg, w, overrides, corpus, items, InputQuant::None)
+}
+
+/// [`zero_shot`] with activation quantization (paper Apx B / Table 5).
+pub fn zero_shot_iq(
+    cfg: &ModelConfig,
+    w: &Weights,
+    overrides: Option<&Overrides>,
+    corpus: &Corpus,
+    items: usize,
+    iq: InputQuant,
+) -> ZeroShotReport {
+    let suite = task_suite(&corpus.lang, items, 0x5u64);
+    let mut per_task = Vec::with_capacity(suite.len());
+    let mut sum = 0.0;
+    for task in &suite {
+        let acc = accuracy(task, |prefix, cont| {
+            continuation_logprob_iq(cfg, w, prefix, cont, overrides, iq)
+        });
+        sum += acc;
+        per_task.push((task.name.to_string(), acc));
+    }
+    ZeroShotReport { average: sum / suite.len() as f64, per_task }
+}
+
+/// Continuation log-probability with input quantization.
+fn continuation_logprob_iq(
+    cfg: &ModelConfig,
+    w: &Weights,
+    prefix: &[u32],
+    continuation: &[u32],
+    overrides: Option<&Overrides>,
+    iq: InputQuant,
+) -> f64 {
+    let mut toks = prefix.to_vec();
+    toks.extend_from_slice(continuation);
+    let seq = toks.len().min(cfg.max_seq);
+    let toks = &toks[toks.len() - seq..];
+    let batch = Batch::new(toks.to_vec(), 1, seq);
+    let logits = crate::model::transformer::forward_iq(cfg, w, &batch, None, overrides, iq);
+    let start = seq - continuation.len().min(seq);
+    let mut lp = 0.0f64;
+    for s in start..seq {
+        if s == 0 {
+            continue;
+        }
+        let row = logits.row(s - 1);
+        let target = toks[s] as usize;
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let lse: f32 = row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+        lp += (row[target] - lse) as f64;
+    }
+    lp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CorpusSpec;
+    use crate::model::{by_name, init};
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn untrained_model_ppl_near_vocab() {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let w = init(&cfg, &mut rng);
+        let corpus = Corpus::generate(CorpusSpec::SynthWeb, 20_000);
+        let ppl = perplexity(&cfg, &w, None, &corpus, 4);
+        // Untrained ≈ uniform over V=512.
+        assert!(ppl > 300.0 && ppl < 800.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn untrained_zero_shot_near_chance() {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let w = init(&cfg, &mut rng);
+        let corpus = Corpus::generate(CorpusSpec::SynthWeb, 5_000);
+        let report = zero_shot(&cfg, &w, None, &corpus, 20);
+        assert_eq!(report.per_task.len(), 6);
+        assert!((report.average - 50.0).abs() < 25.0, "avg {}", report.average);
+    }
+}

@@ -1,0 +1,222 @@
+//! Figure drivers: F2 (Pareto), F3/F4 (layer-wise speedup, measured CPU +
+//! GPU roofline), F5a (rank sweep), F5b (calibration count sweep), F6
+//! (sparsity-ratio sweep).
+
+use super::harness::Ctx;
+use crate::compress::{CompressConfig, Preset};
+use crate::kernels::{DenseKernel, Int4Kernel, MatmulKernel, Sparse24Kernel};
+use crate::lowrank::LoraMethod;
+use crate::model::size::{model_bytes, SizeSpec};
+use crate::model::{self};
+use crate::quant::{slim_quant, QuantMethod};
+use crate::rng::Pcg32;
+use crate::sparse::{wanda, PruneMethod, SparsityPattern};
+use crate::tensor::Matrix;
+use crate::util::fmt_bytes;
+use crate::util::table::{fnum, Table};
+use anyhow::Result;
+
+/// Figure 2: accuracy vs parameter size Pareto across the model family.
+pub fn fig2(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Figure 2 — accuracy vs parameter size (Pareto; ↑ acc at = size wins)",
+        &["Model", "Method", "Size", "Acc (%)"],
+    );
+    let models = ctx.table_models();
+    for name in &models {
+        let b = ctx.bundle(name)?;
+        // Dense point.
+        t.row(vec![
+            name.to_string(),
+            "Dense (fp16)".into(),
+            fmt_bytes(model_bytes(&b.cfg, &SizeSpec::dense())),
+            fnum(ctx.acc(&b, None), 2),
+        ]);
+        // Wanda+AbsMax (no adapters).
+        let cm = ctx.compress(&b, Preset::WandaGroupAbsMax, Some(SparsityPattern::TWO_FOUR), 4);
+        t.row(vec![
+            name.to_string(),
+            "Wanda + AbsMax".into(),
+            fmt_bytes(model_bytes(&b.cfg, &SizeSpec { rank_ratio: 0.0, ..SizeSpec::slim(false) })),
+            fnum(ctx.acc(&b, Some(&cm.overrides)), 2),
+        ]);
+        // SLiM-LoRA and ^Q.
+        for (preset, label, spec) in [
+            (Preset::SlimLora, "SLiM-LoRA", SizeSpec::slim(false)),
+            (Preset::SlimLoraQ, "SLiM-LoRA^Q", SizeSpec::slim(true)),
+        ] {
+            let cm = ctx.compress(&b, preset, Some(SparsityPattern::TWO_FOUR), 4);
+            t.row(vec![
+                name.to_string(),
+                label.into(),
+                fmt_bytes(model_bytes(&b.cfg, &spec)),
+                fnum(ctx.acc(&b, Some(&cm.overrides)), 2),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "(Pareto check: at comparable bytes, SLiM-LoRA^Q points should sit above dense \
+         points of the next-smaller model — compare rows across sizes.)"
+    );
+    Ok(())
+}
+
+/// Measured CPU layer speedups at LLaMA-style shapes (scaled), plus the
+/// roofline projection for the target GPU. Shared by F3/F4.
+fn speedup_figure(ctx: &Ctx, gpu: &crate::perfmodel::Gpu, title: &str) -> Result<()> {
+    // Measured CPU part.
+    let shapes: Vec<(&str, usize, usize)> = if ctx.quick {
+        vec![("qkv-proj", 512, 1536), ("o-proj", 512, 512), ("up-proj", 512, 1376), ("down-proj", 1376, 512)]
+    } else {
+        vec![
+            ("qkv-proj", 1024, 3072),
+            ("o-proj", 1024, 1024),
+            ("up-proj", 1024, 2752),
+            ("down-proj", 2752, 1024),
+        ]
+    };
+    let mut t = Table::new(
+        &format!("{title} — measured CPU kernels (decode batch 8)"),
+        &["Layer", "dense f32", "int4 (quant)", "int4+2:4 (total)", "quant x", "total x"],
+    );
+    let mut rng = Pcg32::seeded(0xf16);
+    for (label, d_in, d_out) in &shapes {
+        let w = Matrix::from_fn(*d_in, *d_out, |_, _| rng.laplace(0.05));
+        let x = Matrix::randn(8, *d_in, 1.0, &mut rng);
+        let q = slim_quant::quantize(&w, 4);
+        let x_l2 = vec![1.0f32; *d_in];
+        let (_, mask) = wanda::prune(&q.wq, &x_l2, SparsityPattern::TWO_FOUR);
+        let dense = DenseKernel::new(w.clone());
+        let int4 = Int4Kernel::from_quantized(&q);
+        let sp = Sparse24Kernel::from_parts(&q, &mask);
+        let reps = if ctx.quick { 12 } else { 40 };
+        let time = |k: &dyn MatmulKernel| {
+            // warmup
+            std::hint::black_box(k.matmul(&x));
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(k.matmul(&x));
+            }
+            t0.elapsed().as_secs_f64() / reps as f64
+        };
+        let (td, ti, ts) = (time(&dense), time(&int4), time(&sp));
+        t.row(vec![
+            label.to_string(),
+            crate::util::fmt_secs(td),
+            crate::util::fmt_secs(ti),
+            crate::util::fmt_secs(ts),
+            fnum(td / ti, 2),
+            fnum(td / ts, 2),
+        ]);
+    }
+    t.print();
+
+    // GPU roofline projection (the paper's actual device).
+    let mut tp = Table::new(
+        &format!("{title} — {} roofline projection (paper device)", gpu.name),
+        &["Model", "Layer", "quant-only x", "quant+2:4 x"],
+    );
+    for model in ["llama-2-7b", "llama-2-13b"] {
+        for bar in crate::perfmodel::speedup_bars(gpu, model, 8) {
+            tp.row(vec![
+                model.to_string(),
+                bar.layer.clone(),
+                fnum(bar.quant_only, 2),
+                fnum(bar.total, 2),
+            ]);
+        }
+    }
+    tp.print();
+    Ok(())
+}
+
+/// Figure 3: layer-wise speedup, RTX 3060.
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    speedup_figure(ctx, &crate::perfmodel::RTX3060, "Figure 3 — layer-wise speedup (↑)")
+}
+
+/// Figure 4 (Apx J): layer-wise speedup, A100-40GB.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    speedup_figure(ctx, &crate::perfmodel::A100, "Figure 4 — layer-wise speedup (↑)")
+}
+
+/// Figure 5a (Apx O): adapter-rank sensitivity.
+pub fn fig5a(ctx: &Ctx) -> Result<()> {
+    let b = ctx.bundle("sim-llama-7b")?;
+    let mut t = Table::new(
+        "Figure 5a — adapter rank sweep, 2:4 + 4-bit on sim-llama-7b (acc ↑)",
+        &["rank ratio", "Naive-LoRA", "SLiM-LoRA"],
+    );
+    for ratio in [0.025f32, 0.05, 0.1, 0.2, 0.4] {
+        let mut row = vec![format!("{ratio}")];
+        for lora in [LoraMethod::Naive, LoraMethod::Slim] {
+            let mut cfg = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+            cfg.lora = lora;
+            cfg.rank_ratio = ratio;
+            let cm = ctx.compress_cfg(&b, &cfg);
+            row.push(fnum(ctx.acc(&b, Some(&cm.overrides)), 2));
+        }
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Figure 5b (Apx P): calibration sample-count sensitivity.
+pub fn fig5b(ctx: &Ctx) -> Result<()> {
+    let b = ctx.bundle("sim-llama-7b")?;
+    let mut t = Table::new(
+        "Figure 5b — calibration sample count sweep on sim-llama-7b (ppl ↓)",
+        &["calib seqs", "Wanda", "SparseGPT+OPTQ", "SLiM-LoRA"],
+    );
+    for n_seqs in [2usize, 4, 8, 16] {
+        let mut rng = Pcg32::seeded(0xca11b + n_seqs as u64);
+        let toks = ctx.corpus.calibration(n_seqs, b.cfg.max_seq, &mut rng);
+        let batch = model::Batch::new(toks, n_seqs, b.cfg.max_seq);
+        let mut taps = model::ActivationTap::new();
+        model::forward(&b.cfg, &b.weights, &batch, Some(&mut taps), None);
+        let mut row = vec![n_seqs.to_string()];
+        for preset in [Preset::WandaGroupAbsMax, Preset::SparseGptGroupOptq, Preset::SlimLora] {
+            let ccfg = preset.config(Some(SparsityPattern::TWO_FOUR), 4);
+            let cm = model::compress_model(&b.cfg, &b.weights, &taps, &ccfg);
+            row.push(fnum(ctx.ppl(&b, Some(&cm.overrides)), 2));
+        }
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Figure 6 (Apx R): sparsity-ratio sweep on the 13B stand-in.
+pub fn fig6(ctx: &Ctx) -> Result<()> {
+    let b = ctx.bundle(if ctx.quick { "sim-llama-7b" } else { "sim-llama-13b" })?;
+    let mut t = Table::new(
+        &format!("Figure 6 — sparsity sweep with 4-bit quant on {} (ppl ↓)", b.cfg.name),
+        &["sparsity", "Wanda+GroupAbsMax", "SparseGPT+OPTQ", "SLiM-LoRA+SLiM-Quant"],
+    );
+    for ratio in [0.4f32, 0.5, 0.6, 0.7, 0.8] {
+        let pattern = SparsityPattern::Unstructured(ratio);
+        let mut row = vec![format!("{:.0}%", ratio * 100.0)];
+        for (quant, prune, lora) in [
+            (QuantMethod::GroupAbsMax, PruneMethod::Wanda, LoraMethod::None),
+            (QuantMethod::GroupOptq, PruneMethod::SparseGpt, LoraMethod::None),
+            (QuantMethod::SlimQuantW, PruneMethod::Wanda, LoraMethod::Slim),
+        ] {
+            let cfg = CompressConfig {
+                quant,
+                bits: 4,
+                prune,
+                pattern: Some(pattern),
+                lora,
+                rank_ratio: 0.1,
+                quantize_adapters: false,
+            };
+            let cm = ctx.compress_cfg(&b, &cfg);
+            row.push(fnum(ctx.ppl(&b, Some(&cm.overrides)), 2));
+        }
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! Shared experiment harness: trained-model cache, compression dispatch,
+//! evaluation helpers, and the preset-grid runner every table reuses.
+
+use crate::compress::{CompressConfig, Preset};
+use crate::data::{Corpus, CorpusSpec};
+use crate::eval;
+use crate::model::{self, ActivationTap, Batch, CompressedModel, ModelConfig, Overrides, Weights};
+use crate::quant::fp8::InputQuant;
+use crate::rng::Pcg32;
+use crate::runtime::Runtime;
+use crate::sparse::SparsityPattern;
+use crate::train;
+use crate::util::table::{fnum, Table};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// A trained model + its calibration taps.
+pub struct ModelBundle {
+    pub cfg: ModelConfig,
+    pub weights: Weights,
+    pub taps: ActivationTap,
+}
+
+/// Shared state across experiment drivers.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub corpus: Corpus,
+    pub quick: bool,
+    cache: Mutex<HashMap<String, Arc<ModelBundle>>>,
+}
+
+impl Ctx {
+    /// Load runtime + corpus. `quick` trims model count / eval sizes so a
+    /// full `exp all` pass stays in CI-scale wall-clock.
+    pub fn new(quick: bool) -> Result<Ctx> {
+        let rt = Runtime::load(Runtime::default_dir())?;
+        let corpus = Corpus::generate(CorpusSpec::SynthWeb, 120_000);
+        Ok(Ctx { rt, corpus, quick, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Models included in cross-model tables. (The single-model drivers —
+    /// Table 3, Fig 5/6 — use the LLaMA stand-ins directly.)
+    pub fn table_models(&self) -> Vec<&'static str> {
+        if self.quick {
+            vec!["sim-125m", "sim-350m", "sim-1.3b"]
+        } else {
+            vec!["sim-125m", "sim-350m", "sim-1.3b", "sim-llama-7b"]
+        }
+    }
+
+    /// Pretraining steps for a model — larger models need more steps to
+    /// reach the converged regime where compression deltas are meaningful.
+    pub fn train_steps_for(&self, cfg: &ModelConfig) -> usize {
+        let base = if self.quick { 500 } else { 1000 };
+        // Scale with width: sim-125m (d=64) gets base, sim-llama-7b
+        // (d=208) roughly 2x base.
+        base + base * (cfg.d_model.saturating_sub(64)) / 144
+    }
+
+    /// Zero-shot items per task (paper tasks have 1k+ items; 100 keeps the
+    /// binomial noise ≈ ±1.5% on the 6-task average).
+    pub fn eval_items(&self) -> usize {
+        if self.quick {
+            100
+        } else {
+            250
+        }
+    }
+
+    /// Perplexity eval windows.
+    pub fn ppl_windows(&self) -> usize {
+        if self.quick {
+            8
+        } else {
+            20
+        }
+    }
+
+    /// Fine-tuning steps (paper: 300k tokens ≈ scaled down here).
+    pub fn ft_steps(&self) -> usize {
+        if self.quick {
+            25
+        } else {
+            80
+        }
+    }
+
+    /// Calibration sequences (paper: 128 C4 sequences; scaled).
+    pub fn calib_seqs(&self) -> usize {
+        if self.quick {
+            8
+        } else {
+            16
+        }
+    }
+
+    /// Get (train + calibrate, cached) a model bundle.
+    pub fn bundle(&self, name: &str) -> Result<Arc<ModelBundle>> {
+        if let Some(b) = self.cache.lock().unwrap().get(name) {
+            return Ok(b.clone());
+        }
+        let cfg = model::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+        let steps = self.train_steps_for(&cfg);
+        let weights = train::pretrain_cached(&self.rt, &cfg, &self.corpus, steps)?;
+        let taps = self.collect_taps(&cfg, &weights, &self.corpus);
+        let bundle = Arc::new(ModelBundle { cfg, weights, taps });
+        self.cache.lock().unwrap().insert(name.to_string(), bundle.clone());
+        Ok(bundle)
+    }
+
+    /// Calibration taps from a given corpus (T22 passes synth-pajama).
+    pub fn collect_taps(&self, cfg: &ModelConfig, w: &Weights, corpus: &Corpus) -> ActivationTap {
+        let mut rng = Pcg32::seeded(0xca11b);
+        let n = self.calib_seqs();
+        let toks = corpus.calibration(n, cfg.max_seq, &mut rng);
+        let batch = Batch::new(toks, n, cfg.max_seq);
+        let mut taps = ActivationTap::new();
+        model::forward(cfg, w, &batch, Some(&mut taps), None);
+        taps
+    }
+
+    /// Average zero-shot accuracy (percent).
+    pub fn acc(&self, b: &ModelBundle, ov: Option<&Overrides>) -> f64 {
+        eval::zero_shot(&b.cfg, &b.weights, ov, &self.corpus, self.eval_items()).average
+    }
+
+    /// Accuracy with input quantization (Table 5).
+    pub fn acc_iq(&self, b: &ModelBundle, ov: Option<&Overrides>, iq: InputQuant) -> f64 {
+        eval::zero_shot_iq(&b.cfg, &b.weights, ov, &self.corpus, self.eval_items(), iq).average
+    }
+
+    /// Perplexity on the eval split.
+    pub fn ppl(&self, b: &ModelBundle, ov: Option<&Overrides>) -> f64 {
+        eval::perplexity(&b.cfg, &b.weights, ov, &self.corpus, self.ppl_windows())
+    }
+
+    /// Perplexity with input quantization (Table 12).
+    pub fn ppl_iq(&self, b: &ModelBundle, ov: Option<&Overrides>, iq: InputQuant) -> f64 {
+        eval::perplexity_iq(&b.cfg, &b.weights, ov, &self.corpus, self.ppl_windows(), iq)
+    }
+
+    /// Compress a model with a preset (dispatching JSQ's joint loop).
+    pub fn compress(
+        &self,
+        b: &ModelBundle,
+        preset: Preset,
+        pattern: Option<SparsityPattern>,
+        bits: u8,
+    ) -> CompressedModel {
+        if preset.is_jsq() {
+            let pat = pattern.unwrap_or(SparsityPattern::TWO_FOUR);
+            return model::compress_model_jsq(&b.cfg, &b.weights, &b.taps, bits, pat);
+        }
+        let cfg = preset.config(pattern, bits);
+        model::compress_model(&b.cfg, &b.weights, &b.taps, &cfg)
+    }
+
+    /// Compress with an explicit pipeline config.
+    pub fn compress_cfg(&self, b: &ModelBundle, cfg: &CompressConfig) -> CompressedModel {
+        model::compress_model(&b.cfg, &b.weights, &b.taps, cfg)
+    }
+
+    /// Fine-tune a compressed model's adapters (paper §3.4).
+    pub fn finetune(
+        &self,
+        b: &ModelBundle,
+        cm: &mut CompressedModel,
+        requantize: bool,
+    ) -> Result<()> {
+        train::finetune_adapters(
+            &self.rt,
+            &b.cfg,
+            &b.weights,
+            cm,
+            &self.corpus,
+            self.ft_steps(),
+            requantize,
+        )?;
+        Ok(())
+    }
+}
+
+/// Which metric a grid reports.
+#[derive(Clone, Copy, PartialEq)]
+pub enum Metric {
+    /// Zero-shot accuracy, higher better.
+    Accuracy,
+    /// WikiText2-style perplexity, lower better.
+    Perplexity,
+}
+
+impl Metric {
+    pub fn header(&self) -> &'static str {
+        match self {
+            Metric::Accuracy => "avg zero-shot acc (%) ↑",
+            Metric::Perplexity => "perplexity ↓",
+        }
+    }
+}
+
+/// Run a preset grid over the ctx's table models and render paper-style
+/// rows. The FT presets are handled by `with_ft`.
+pub fn preset_grid(
+    ctx: &Ctx,
+    title: &str,
+    presets: &[Preset],
+    pattern: Option<SparsityPattern>,
+    bits: u8,
+    metric: Metric,
+) -> Result<Table> {
+    let models = ctx.table_models();
+    let mut headers: Vec<&str> = vec!["Pruning/LoRA", "Quantization"];
+    headers.extend(models.iter().copied());
+    let mut table = Table::new(title, &headers);
+
+    // Dense reference row.
+    let mut row = vec!["Dense".to_string(), "-".to_string()];
+    for name in &models {
+        let b = ctx.bundle(name)?;
+        let v = match metric {
+            Metric::Accuracy => ctx.acc(&b, None),
+            Metric::Perplexity => ctx.ppl(&b, None),
+        };
+        row.push(fnum(v, 2));
+    }
+    table.row(row);
+
+    for &preset in presets {
+        let (method, quant) = preset.label();
+        let mut row = vec![method.to_string(), quant.to_string()];
+        for name in &models {
+            let b = ctx.bundle(name)?;
+            let cm = ctx.compress(&b, preset, pattern, bits);
+            let v = match metric {
+                Metric::Accuracy => ctx.acc(&b, Some(&cm.overrides)),
+                Metric::Perplexity => ctx.ppl(&b, Some(&cm.overrides)),
+            };
+            row.push(fnum(v, 2));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}
+
+/// Grid of SLiM FT variants (Tables 2/9): presets × {no-FT, +FT}.
+pub fn ft_grid(
+    ctx: &Ctx,
+    title: &str,
+    pattern: SparsityPattern,
+    metric: Metric,
+) -> Result<Table> {
+    let models = ctx.table_models();
+    let mut headers: Vec<&str> = vec!["Pruning/LoRA", "Quantization"];
+    headers.extend(models.iter().copied());
+    let mut table = Table::new(title, &headers);
+
+    let variants: Vec<(Preset, bool, &str)> = vec![
+        (Preset::NaiveLora, false, "Naive-LoRA"),
+        (Preset::NaiveLora, true, "Naive-LoRA + FT"),
+        (Preset::SlimLora, false, "SLiM-LoRA"),
+        (Preset::SlimLora, true, "SLiM-LoRA + FT"),
+        (Preset::SlimLoraQ, false, "SLiM-LoRA^Q"),
+        (Preset::SlimLoraQ, true, "SLiM-LoRA^Q + FT"),
+    ];
+    for (preset, ft, label) in variants {
+        let mut row = vec![label.to_string(), "SLiM-Quant^W".to_string()];
+        for name in &models {
+            let b = ctx.bundle(name)?;
+            let mut cm = ctx.compress(&b, preset, Some(pattern), 4);
+            if ft {
+                ctx.finetune(&b, &mut cm, preset == Preset::SlimLoraQ)?;
+            }
+            let v = match metric {
+                Metric::Accuracy => ctx.acc(&b, Some(&cm.overrides)),
+                Metric::Perplexity => ctx.ppl(&b, Some(&cm.overrides)),
+            };
+            row.push(fnum(v, 2));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}

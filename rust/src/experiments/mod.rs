@@ -1,0 +1,55 @@
+//! Experiment drivers — one per table/figure in the paper (DESIGN.md §4).
+//!
+//! `repro exp <id>` runs a single experiment; `repro exp all` regenerates
+//! everything. The `--full` flag widens the model set and eval sizes.
+
+pub mod figures;
+pub mod harness;
+pub mod tables_analytic;
+pub mod tables_appendix;
+pub mod tables_main;
+
+pub use harness::Ctx;
+
+use anyhow::{anyhow, Result};
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "table2", "table3", "fig2", "fig3", "fig4", "table5", "table6", "table7",
+    "table8", "table9", "table10", "table11", "table12", "table13", "table14", "table16",
+    "table17", "table19", "table20", "table21", "table22", "table23", "fig5a", "fig5b",
+    "fig6",
+];
+
+/// Run one experiment by id, printing its table(s) to stdout.
+pub fn run(ctx: &Ctx, id: &str) -> Result<()> {
+    match id {
+        "table1" => tables_main::table1(ctx),
+        "table2" => tables_main::table2(ctx),
+        "table3" => tables_main::table3(ctx),
+        "fig2" => figures::fig2(ctx),
+        "fig3" => figures::fig3(ctx),
+        "fig4" => figures::fig4(ctx),
+        "table5" => tables_appendix::table5(ctx),
+        "table6" => tables_appendix::table6(ctx),
+        "table7" => tables_appendix::table7(ctx),
+        "table8" => tables_appendix::table8(ctx),
+        "table9" => tables_main::table9(ctx),
+        "table10" => tables_appendix::table10(ctx),
+        "table11" => tables_appendix::table11(ctx),
+        "table12" => tables_appendix::table12(ctx),
+        "table13" => tables_appendix::table13(ctx),
+        "table14" => tables_appendix::table14(ctx),
+        "table16" => tables_appendix::table16(ctx),
+        "table17" => tables_appendix::table17(ctx),
+        "table19" => tables_analytic::table19(ctx),
+        "table20" => tables_analytic::table20(ctx),
+        "table21" => tables_analytic::table21(ctx),
+        "table22" => tables_analytic::table22(ctx),
+        "table23" => tables_analytic::table23(ctx),
+        "fig5a" => figures::fig5a(ctx),
+        "fig5b" => figures::fig5b(ctx),
+        "fig6" => figures::fig6(ctx),
+        other => Err(anyhow!("unknown experiment {other}; known: {ALL:?}")),
+    }
+}

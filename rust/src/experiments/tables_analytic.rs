@@ -1,0 +1,177 @@
+//! Analytic + measured system tables: memory (T19, Eq. 12), FLOPs (T20,
+//! Eq. 13), compression wall-clock (T21), calibration-corpus sensitivity
+//! (T22), group-quantization slow-down (T23).
+
+use super::harness::Ctx;
+use crate::compress::Preset;
+use crate::data::{Corpus, CorpusSpec};
+use crate::kernels::{GroupInt4Kernel, Int4Kernel, MatmulKernel};
+use crate::model::size::{flop_reduction_eq13, memory_ratio_eq12, SizeSpec};
+use crate::model::{self};
+use crate::quant::{group_absmax, slim_quant};
+use crate::rng::Pcg32;
+use crate::sparse::SparsityPattern;
+use crate::tensor::Matrix;
+use crate::util::table::{fnum, Table};
+use crate::util::{fmt_secs, timed};
+use anyhow::Result;
+
+/// The compression schemes Table 19/20 compare.
+fn schemes() -> Vec<(&'static str, SizeSpec)> {
+    vec![
+        (
+            "SparseGPT + OPTQ",
+            SizeSpec { rank_ratio: 0.0, ..SizeSpec::slim(false) },
+        ),
+        (
+            "Wanda + AbsMax",
+            SizeSpec { rank_ratio: 0.0, ..SizeSpec::slim(false) },
+        ),
+        ("Naive-LoRA + AbsMax", SizeSpec::slim(false)),
+        ("SLiM-LoRA + SLiM-Quant", SizeSpec::slim(false)),
+        ("SLiM-LoRA^Q + SLiM-Quant", SizeSpec::slim(true)),
+    ]
+}
+
+/// Table 19 (Apx L): theoretical memory-reduction ratios (Eq. 12, ↓).
+pub fn table19(_ctx: &Ctx) -> Result<()> {
+    let family = model::family();
+    let mut headers = vec!["Compression Method"];
+    let names: Vec<&str> = family.iter().map(|c| c.name.as_str()).collect();
+    headers.extend(names.iter().copied());
+    let mut t = Table::new("Table 19 — memory reduction ratio, Eq. 12 (↓)", &headers);
+    for (label, spec) in schemes() {
+        let mut row = vec![label.to_string()];
+        for cfg in &family {
+            row.push(fnum(memory_ratio_eq12(cfg, &spec), 2));
+        }
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Table 20 (Apx M): FLOP-reduction ratios (Eq. 13, ↑).
+pub fn table20(_ctx: &Ctx) -> Result<()> {
+    let family = model::family();
+    let mut headers = vec!["Compression Method"];
+    let names: Vec<&str> = family.iter().map(|c| c.name.as_str()).collect();
+    headers.extend(names.iter().copied());
+    let mut t = Table::new("Table 20 — FLOP reduction ratio, Eq. 13 (↑)", &headers);
+    for (label, spec) in schemes() {
+        let mut row = vec![label.to_string()];
+        for cfg in &family {
+            row.push(fnum(flop_reduction_eq13(cfg, &spec), 2));
+        }
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Table 21 (Apx N): measured compression wall-clock per method × model.
+pub fn table21(ctx: &Ctx) -> Result<()> {
+    let models = ctx.table_models();
+    let mut headers = vec!["Pruning", "Quantization"];
+    headers.extend(models.iter().copied());
+    let mut t = Table::new("Table 21 — compression wall-clock (↓)", &headers);
+    let rows: Vec<(&str, &str, Preset)> = vec![
+        ("Magnitude", "AbsMax", Preset::MagnitudeGroupAbsMax),
+        ("SparseGPT", "OPTQ", Preset::SparseGptGroupOptq),
+        ("Wanda", "SLiM-Quant", Preset::WandaGroupAbsMax),
+        ("Wanda-SVD (Naive)", "SLiM-Quant", Preset::NaiveLora),
+        ("SLiM", "SLiM-Quant", Preset::SlimLora),
+    ];
+    for (plabel, qlabel, preset) in rows {
+        let mut row = vec![plabel.to_string(), qlabel.to_string()];
+        for name in &models {
+            let b = ctx.bundle(name)?;
+            let (_, secs) = timed(|| ctx.compress(&b, preset, Some(SparsityPattern::TWO_FOUR), 4));
+            row.push(fmt_secs(secs));
+        }
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Table 22 (Apx Q): calibration-dataset sensitivity (synth-web vs
+/// synth-pajama), perplexity of SLiM-LoRA + SLiM-Quant.
+pub fn table22(ctx: &Ctx) -> Result<()> {
+    let models = ctx.table_models();
+    let pajama = Corpus::generate(CorpusSpec::SynthPajama, 60_000);
+    let mut headers = vec!["Calibration Dataset"];
+    headers.extend(models.iter().copied());
+    for pattern in [SparsityPattern::TWO_FOUR, SparsityPattern::Unstructured(0.5)] {
+        let mut t = Table::new(
+            &format!("Table 22 — calibration sensitivity, {} (ppl ↓)", pattern.name()),
+            &headers,
+        );
+        for (label, alt_corpus) in [("synth-web (C4*)", None), ("synth-pajama (SlimPajama*)", Some(&pajama))] {
+            let mut row = vec![label.to_string()];
+            for name in &models {
+                let b = ctx.bundle(name)?;
+                let cm = match alt_corpus {
+                    None => ctx.compress(&b, Preset::SlimLora, Some(pattern), 4),
+                    Some(corpus) => {
+                        // Re-collect taps on the alternate corpus, same model.
+                        let taps = ctx.collect_taps(&b.cfg, &b.weights, corpus);
+                        let ccfg = Preset::SlimLora.config(Some(pattern), 4);
+                        model::compress_model(&b.cfg, &b.weights, &taps, &ccfg)
+                    }
+                };
+                row.push(fnum(ctx.ppl(&b, Some(&cm.overrides)), 2));
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+/// Table 23 (Apx U): measured group-quantization slow-down on the CPU
+/// int4 kernels at LLaMA-style down-projection shapes (scaled).
+pub fn table23(ctx: &Ctx) -> Result<()> {
+    let shapes: Vec<(&str, usize, usize)> = if ctx.quick {
+        vec![("llama-2-7b*", 1376, 512), ("llama-2-13b*", 1728, 640)]
+    } else {
+        vec![
+            ("llama-2-7b*", 2752, 1024),
+            ("llama-2-13b*", 3456, 1280),
+            ("llama-2-70b*", 3584, 2048),
+        ]
+    };
+    let mut t = Table::new(
+        "Table 23 — group-quantization slow-down, measured int4 kernels (↓ = worse)",
+        &["Model (down-proj, scaled)", "per-tensor", "group-128", "slow-down (x)"],
+    );
+    let mut rng = Pcg32::seeded(0x6e0);
+    for (label, d_in, d_out) in shapes {
+        let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.05));
+        let x = Matrix::randn(16, d_in, 1.0, &mut rng);
+        let q_pt = slim_quant::quantize(&w, 4);
+        let q_gr = group_absmax::quantize(&w, 4, 128);
+        let k_pt = Int4Kernel::from_quantized(&q_pt);
+        let k_gr = GroupInt4Kernel::from_quantized(&q_gr);
+        let reps = if ctx.quick { 10 } else { 30 };
+        let (_, t_pt) = timed(|| {
+            for _ in 0..reps {
+                std::hint::black_box(k_pt.matmul(&x));
+            }
+        });
+        let (_, t_gr) = timed(|| {
+            for _ in 0..reps {
+                std::hint::black_box(k_gr.matmul(&x));
+            }
+        });
+        t.row(vec![
+            label.to_string(),
+            fmt_secs(t_pt / reps as f64),
+            fmt_secs(t_gr / reps as f64),
+            fnum(t_pt / t_gr, 2),
+        ]);
+    }
+    t.print();
+    println!("(paper reports ~0.94-0.95x, i.e. group quantization is slightly slower)");
+    Ok(())
+}

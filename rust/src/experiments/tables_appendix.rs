@@ -1,0 +1,316 @@
+//! Appendix tables: input quantization (T5/T12), quantizer variants (T6),
+//! sparse-only (T7/T13), quant-only (T8/T14), perplexity grids (T10/T11),
+//! sparsity-vs-quantization (T16/T17).
+
+use super::harness::{preset_grid, Ctx, Metric};
+use crate::compress::{CompressConfig, Preset};
+use crate::lowrank::LoraMethod;
+use crate::quant::fp8::InputQuant;
+use crate::quant::QuantMethod;
+use crate::sparse::{PruneMethod, SparsityPattern};
+use crate::util::table::{fnum, Table};
+use anyhow::Result;
+
+fn iq_row(
+    ctx: &Ctx,
+    table: &mut Table,
+    label: &str,
+    preset: Preset,
+    pattern: SparsityPattern,
+    ft: bool,
+    iq: InputQuant,
+    metric: Metric,
+) -> Result<()> {
+    let mut row = vec![label.to_string(), "SLiM-Quant^W".to_string()];
+    for name in ctx.table_models() {
+        let b = ctx.bundle(name)?;
+        let mut cm = ctx.compress(&b, preset, Some(pattern), 4);
+        if ft {
+            ctx.finetune(&b, &mut cm, preset == Preset::SlimLoraQ)?;
+        }
+        let v = match metric {
+            Metric::Accuracy => ctx.acc_iq(&b, Some(&cm.overrides), iq),
+            Metric::Perplexity => ctx.ppl_iq(&b, Some(&cm.overrides), iq),
+        };
+        row.push(fnum(v, 2));
+    }
+    table.row(row);
+    Ok(())
+}
+
+fn iq_table(ctx: &Ctx, title: &str, iq: InputQuant, metric: Metric) -> Result<()> {
+    let models = ctx.table_models();
+    let mut headers = vec!["Pruning/LoRA", "Quantization"];
+    headers.extend(models.iter().copied());
+    for pattern in [SparsityPattern::TWO_FOUR, SparsityPattern::Unstructured(0.5)] {
+        let mut t = Table::new(&format!("{title} — {}", pattern.name()), &headers);
+        iq_row(ctx, &mut t, "SLiM-LoRA", Preset::SlimLora, pattern, false, iq, metric)?;
+        iq_row(ctx, &mut t, "SLiM-LoRA + FT", Preset::SlimLora, pattern, true, iq, metric)?;
+        iq_row(ctx, &mut t, "SLiM-LoRA^Q", Preset::SlimLoraQ, pattern, false, iq, metric)?;
+        iq_row(ctx, &mut t, "SLiM-LoRA^Q + FT", Preset::SlimLoraQ, pattern, true, iq, metric)?;
+        t.print();
+    }
+    Ok(())
+}
+
+/// Table 5 (Apx B): accuracy with 8-bit input quantization.
+pub fn table5(ctx: &Ctx) -> Result<()> {
+    iq_table(
+        ctx,
+        "Table 5 — accuracy with int8 input quantization + 4-bit weights (↑)",
+        InputQuant::Int8AbsMax,
+        Metric::Accuracy,
+    )
+}
+
+/// Table 12 (Apx G): perplexity with input quantization.
+pub fn table12(ctx: &Ctx) -> Result<()> {
+    iq_table(
+        ctx,
+        "Table 12 — perplexity with int8 input quantization + 4-bit weights (↓)",
+        InputQuant::Int8AbsMax,
+        Metric::Perplexity,
+    )
+}
+
+/// Table 6 (Apx C): SLiM-Quant^W vs SLiM-Quant^O.
+pub fn table6(ctx: &Ctx) -> Result<()> {
+    let models = ctx.table_models();
+    let mut headers = vec!["Pruning/LoRA", "Quantization"];
+    headers.extend(models.iter().copied());
+    for pattern in [SparsityPattern::TWO_FOUR, SparsityPattern::Unstructured(0.5)] {
+        let mut t = Table::new(
+            &format!("Table 6 — SLiM-Quant^W vs ^O, {} + 4-bit (acc ↑)", pattern.name()),
+            &headers,
+        );
+        for (preset, qname) in [
+            (Preset::SlimLora, "SLiM-Quant^W"),
+            (Preset::SlimLoraQuantO, "SLiM-Quant^O"),
+        ] {
+            let mut row = vec!["SLiM-LoRA".to_string(), qname.to_string()];
+            for name in &models {
+                let b = ctx.bundle(name)?;
+                let cm = ctx.compress(&b, preset, Some(pattern), 4);
+                row.push(fnum(ctx.acc(&b, Some(&cm.overrides)), 2));
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn sparse_only_grid(ctx: &Ctx, title: &str, metric: Metric) -> Result<()> {
+    let models = ctx.table_models();
+    let mut headers = vec!["Pruning/LoRA"];
+    headers.extend(models.iter().copied());
+    for pattern in [SparsityPattern::TWO_FOUR, SparsityPattern::Unstructured(0.5)] {
+        let mut t = Table::new(&format!("{title} — {}", pattern.name()), &headers);
+        let rows: Vec<(&str, PruneMethod, LoraMethod, bool)> = vec![
+            ("Magnitude", PruneMethod::Magnitude, LoraMethod::None, false),
+            ("SparseGPT", PruneMethod::SparseGpt, LoraMethod::None, false),
+            ("Wanda", PruneMethod::Wanda, LoraMethod::None, false),
+            ("SLiM-Naive", PruneMethod::Wanda, LoraMethod::Naive, false),
+            ("SLiM-Naive + FT", PruneMethod::Wanda, LoraMethod::Naive, true),
+            ("SLiM-LoRA", PruneMethod::Wanda, LoraMethod::Slim, false),
+            ("SLiM-LoRA + FT", PruneMethod::Wanda, LoraMethod::Slim, true),
+        ];
+        // Dense reference.
+        let mut drow = vec!["Dense".to_string()];
+        for name in &models {
+            let b = ctx.bundle(name)?;
+            let v = match metric {
+                Metric::Accuracy => ctx.acc(&b, None),
+                Metric::Perplexity => ctx.ppl(&b, None),
+            };
+            drow.push(fnum(v, 2));
+        }
+        t.row(drow);
+        for (label, prune, lora, ft) in rows {
+            let cfg = CompressConfig {
+                quant: QuantMethod::None,
+                bits: 32,
+                prune,
+                pattern: Some(pattern),
+                lora,
+                rank_ratio: 0.1,
+                quantize_adapters: false,
+            };
+            let mut row = vec![label.to_string()];
+            for name in &models {
+                let b = ctx.bundle(name)?;
+                let mut cm = ctx.compress_cfg(&b, &cfg);
+                if ft {
+                    ctx.finetune(&b, &mut cm, false)?;
+                }
+                let v = match metric {
+                    Metric::Accuracy => ctx.acc(&b, Some(&cm.overrides)),
+                    Metric::Perplexity => ctx.ppl(&b, Some(&cm.overrides)),
+                };
+                row.push(fnum(v, 2));
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+/// Table 7 (Apx D): sparse-only accuracy.
+pub fn table7(ctx: &Ctx) -> Result<()> {
+    sparse_only_grid(ctx, "Table 7 — sparse-only accuracy (↑)", Metric::Accuracy)
+}
+
+/// Table 13 (Apx G): sparse-only perplexity.
+pub fn table13(ctx: &Ctx) -> Result<()> {
+    sparse_only_grid(ctx, "Table 13 — sparse-only perplexity (↓)", Metric::Perplexity)
+}
+
+fn quant_only_grid(ctx: &Ctx, title: &str, metric: Metric) -> Result<()> {
+    let models = ctx.table_models();
+    let mut headers = vec!["Quantization", "Low-rank Adapter"];
+    headers.extend(models.iter().copied());
+    let mut t = Table::new(title, &headers);
+    let rows: Vec<(&str, &str, QuantMethod, LoraMethod, bool)> = vec![
+        ("OPTQ", "-", QuantMethod::GroupOptq, LoraMethod::None, false),
+        ("AbsMax", "-", QuantMethod::AbsMax, LoraMethod::None, false),
+        ("Group AbsMax", "-", QuantMethod::GroupAbsMax, LoraMethod::None, false),
+        ("Group AbsMax", "L2QER", QuantMethod::GroupAbsMax, LoraMethod::L2qer, false),
+        ("Group AbsMax", "SLiM-Naive", QuantMethod::GroupAbsMax, LoraMethod::Naive, false),
+        ("Group AbsMax", "SLiM-LoRA", QuantMethod::GroupAbsMax, LoraMethod::Slim, false),
+        ("SLiM-Quant^W", "-", QuantMethod::SlimQuantW, LoraMethod::None, false),
+        ("SLiM-Quant^W", "SLiM-Naive", QuantMethod::SlimQuantW, LoraMethod::Naive, false),
+        ("SLiM-Quant^W", "SLiM-LoRA", QuantMethod::SlimQuantW, LoraMethod::Slim, false),
+        ("SLiM-Quant^W", "SLiM-LoRA + FT", QuantMethod::SlimQuantW, LoraMethod::Slim, true),
+    ];
+    // Dense reference.
+    let mut drow = vec!["Dense".to_string(), "-".to_string()];
+    for name in &models {
+        let b = ctx.bundle(name)?;
+        let v = match metric {
+            Metric::Accuracy => ctx.acc(&b, None),
+            Metric::Perplexity => ctx.ppl(&b, None),
+        };
+        drow.push(fnum(v, 2));
+    }
+    t.row(drow);
+    for (qlabel, alabel, quant, lora, ft) in rows {
+        let cfg = CompressConfig {
+            quant,
+            bits: 4,
+            prune: PruneMethod::None,
+            pattern: None,
+            lora,
+            rank_ratio: 0.1,
+            quantize_adapters: false,
+        };
+        let mut row = vec![qlabel.to_string(), alabel.to_string()];
+        for name in &models {
+            let b = ctx.bundle(name)?;
+            let mut cm = ctx.compress_cfg(&b, &cfg);
+            if ft {
+                ctx.finetune(&b, &mut cm, false)?;
+            }
+            let v = match metric {
+                Metric::Accuracy => ctx.acc(&b, Some(&cm.overrides)),
+                Metric::Perplexity => ctx.ppl(&b, Some(&cm.overrides)),
+            };
+            row.push(fnum(v, 2));
+        }
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Table 8 (Apx E): quant-only accuracy.
+pub fn table8(ctx: &Ctx) -> Result<()> {
+    quant_only_grid(ctx, "Table 8 — quantization-only accuracy (↑)", Metric::Accuracy)
+}
+
+/// Table 14 (Apx G): quant-only perplexity.
+pub fn table14(ctx: &Ctx) -> Result<()> {
+    quant_only_grid(ctx, "Table 14 — quantization-only perplexity (↓)", Metric::Perplexity)
+}
+
+/// Table 10 (Apx G): perplexity, 2:4 + 4-bit (the Table 1 grid in PPL).
+pub fn table10(ctx: &Ctx) -> Result<()> {
+    preset_grid(
+        ctx,
+        "Table 10 — perplexity, 2:4 + 4-bit (↓)",
+        &Preset::table1(),
+        Some(SparsityPattern::TWO_FOUR),
+        4,
+        Metric::Perplexity,
+    )?
+    .print();
+    Ok(())
+}
+
+/// Table 11 (Apx G): perplexity, 50% unstructured + 4-bit.
+pub fn table11(ctx: &Ctx) -> Result<()> {
+    preset_grid(
+        ctx,
+        "Table 11 — perplexity, 50% unstructured + 4-bit (↓)",
+        &Preset::table1(),
+        Some(SparsityPattern::Unstructured(0.5)),
+        4,
+        Metric::Perplexity,
+    )?
+    .print();
+    Ok(())
+}
+
+fn sparsity_vs_quant(ctx: &Ctx, metric: Metric, title: &str) -> Result<()> {
+    let models = ctx.table_models();
+    let mut headers = vec!["Quantization", "Sparsity"];
+    headers.extend(models.iter().copied());
+    let mut t = Table::new(title, &headers);
+    let rows: Vec<(&str, &str, u8, Option<SparsityPattern>)> = vec![
+        ("2-bit", "-", 2, None),
+        ("4-bit", "2:4", 4, Some(SparsityPattern::TWO_FOUR)),
+        ("4-bit", "50% unstructured", 4, Some(SparsityPattern::Unstructured(0.5))),
+    ];
+    for (qlabel, slabel, bits, pattern) in rows {
+        let cfg = CompressConfig {
+            quant: QuantMethod::SlimQuantW,
+            bits,
+            prune: if pattern.is_some() { PruneMethod::Wanda } else { PruneMethod::None },
+            pattern,
+            lora: LoraMethod::Slim,
+            rank_ratio: 0.1,
+            quantize_adapters: false,
+        };
+        let mut row = vec![qlabel.to_string(), slabel.to_string()];
+        for name in &models {
+            let b = ctx.bundle(name)?;
+            let cm = ctx.compress_cfg(&b, &cfg);
+            let v = match metric {
+                Metric::Accuracy => ctx.acc(&b, Some(&cm.overrides)),
+                Metric::Perplexity => ctx.ppl(&b, Some(&cm.overrides)),
+            };
+            row.push(fnum(v, 2));
+        }
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Table 16 (Apx I): sparsity+4-bit vs 2-bit-only, accuracy (~8× compression each).
+pub fn table16(ctx: &Ctx) -> Result<()> {
+    sparsity_vs_quant(
+        ctx,
+        Metric::Accuracy,
+        "Table 16 — equal-budget (~8x): 2-bit dense vs 4-bit sparse, accuracy (↑)",
+    )
+}
+
+/// Table 17 (Apx I): the same in perplexity.
+pub fn table17(ctx: &Ctx) -> Result<()> {
+    sparsity_vs_quant(
+        ctx,
+        Metric::Perplexity,
+        "Table 17 — equal-budget (~8x): 2-bit dense vs 4-bit sparse, perplexity (↓)",
+    )
+}

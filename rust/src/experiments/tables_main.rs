@@ -1,0 +1,141 @@
+//! Main-body tables: Table 1 (the headline grid), Table 2 (FT effects),
+//! Table 3 (MaskLLM + SLiM), Table 9 (full FT grid, Apx F).
+
+use super::harness::{ft_grid, preset_grid, Ctx, Metric};
+use crate::compress::Preset;
+use crate::sparse::SparsityPattern;
+use crate::util::table::{fnum, Table};
+use anyhow::Result;
+
+/// Table 1: average zero-shot accuracy, 2:4 and 50% unstructured, 4-bit.
+pub fn table1(ctx: &Ctx) -> Result<()> {
+    let presets = Preset::table1();
+    preset_grid(
+        ctx,
+        "Table 1a — avg zero-shot accuracy, 2:4 sparsity + 4-bit weights (↑)",
+        &presets,
+        Some(SparsityPattern::TWO_FOUR),
+        4,
+        Metric::Accuracy,
+    )?
+    .print();
+    preset_grid(
+        ctx,
+        "Table 1b — avg zero-shot accuracy, 50% unstructured + 4-bit weights (↑)",
+        &presets,
+        Some(SparsityPattern::Unstructured(0.5)),
+        4,
+        Metric::Accuracy,
+    )?
+    .print();
+    Ok(())
+}
+
+/// Table 2: fine-tuning effects (2:4 and unstructured), accuracy.
+pub fn table2(ctx: &Ctx) -> Result<()> {
+    ft_grid(
+        ctx,
+        "Table 2a — FT effects on accuracy, 2:4 + 4-bit (↑)",
+        SparsityPattern::TWO_FOUR,
+        Metric::Accuracy,
+    )?
+    .print();
+    ft_grid(
+        ctx,
+        "Table 2b — FT effects on accuracy, 50% unstructured + 4-bit (↑)",
+        SparsityPattern::Unstructured(0.5),
+        Metric::Accuracy,
+    )?
+    .print();
+    Ok(())
+}
+
+/// Table 9 (Apx F) — same grid as Table 2 but reported per the appendix
+/// format (identical computation at sim scale; kept as its own driver so
+/// the per-experiment index stays 1:1 with the paper).
+pub fn table9(ctx: &Ctx) -> Result<()> {
+    ft_grid(
+        ctx,
+        "Table 9 — full FT grid, 2:4 + 4-bit (↑)",
+        SparsityPattern::TWO_FOUR,
+        Metric::Accuracy,
+    )?
+    .print();
+    Ok(())
+}
+
+/// Table 3: MaskLLM-style optimized masks ± SLiM adapters ± FT ± quant,
+/// accuracy and perplexity on the LLaMA-7B stand-in.
+pub fn table3(ctx: &Ctx) -> Result<()> {
+    let b = ctx.bundle("sim-llama-7b")?;
+    let mut t = Table::new(
+        "Table 3 — MaskLLM* + SLiM on sim-llama-7b (acc ↑ / ppl ↓)",
+        &["Pruning/LoRA", "Quantization", "Acc", "PPL"],
+    );
+    t.row(vec![
+        "Dense".into(),
+        "-".into(),
+        fnum(ctx.acc(&b, None), 1),
+        fnum(ctx.ppl(&b, None), 2),
+    ]);
+
+    // Unquantized block: MaskLLM masks, ± adapters, ± FT.
+    let pat = SparsityPattern::TWO_FOUR;
+    {
+        let cm = ctx.compress(&b, Preset::MaskLlm, Some(pat), 4);
+        t.row(vec![
+            "MaskLLM*".into(),
+            "-".into(),
+            fnum(ctx.acc(&b, Some(&cm.overrides)), 1),
+            fnum(ctx.ppl(&b, Some(&cm.overrides)), 2),
+        ]);
+    }
+    for (lora, label) in [
+        (crate::lowrank::LoraMethod::Naive, "Naive-LoRA"),
+        (crate::lowrank::LoraMethod::Slim, "SLiM-LoRA"),
+    ] {
+        let mut cfg = Preset::MaskLlm.config(Some(pat), 4);
+        cfg.lora = lora;
+        let cm = ctx.compress_cfg(&b, &cfg);
+        t.row(vec![
+            label.into(),
+            "-".into(),
+            fnum(ctx.acc(&b, Some(&cm.overrides)), 1),
+            fnum(ctx.ppl(&b, Some(&cm.overrides)), 2),
+        ]);
+    }
+
+    // Quantized block: MaskLLM masks over SLiM-Quant, ± SLiM-LoRA, ± FT.
+    {
+        let mut cfg = Preset::MaskLlmSlimLora.config(Some(pat), 4);
+        cfg.lora = crate::lowrank::LoraMethod::None;
+        let cm = ctx.compress_cfg(&b, &cfg);
+        t.row(vec![
+            "MaskLLM*".into(),
+            "SLiM-Quant".into(),
+            fnum(ctx.acc(&b, Some(&cm.overrides)), 1),
+            fnum(ctx.ppl(&b, Some(&cm.overrides)), 2),
+        ]);
+    }
+    for (lora, ft, label) in [
+        (crate::lowrank::LoraMethod::Naive, false, "Naive-LoRA"),
+        (crate::lowrank::LoraMethod::Slim, false, "SLiM-LoRA"),
+        (crate::lowrank::LoraMethod::Naive, true, "Naive-LoRA + FT"),
+        (crate::lowrank::LoraMethod::Slim, true, "SLiM-LoRA + FT"),
+    ] {
+        let mut cfg = Preset::MaskLlmSlimLora.config(Some(pat), 4);
+        cfg.lora = lora;
+        let mut cm = ctx.compress_cfg(&b, &cfg);
+        if ft {
+            ctx.finetune(&b, &mut cm, false)?;
+        }
+        t.row(vec![
+            label.into(),
+            "SLiM-Quant".into(),
+            fnum(ctx.acc(&b, Some(&cm.overrides)), 1),
+            fnum(ctx.ppl(&b, Some(&cm.overrides)), 2),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Dense f32 baseline kernel (what the paper's "dense unquantized" bars
+//! measure against).
+
+use super::MatmulKernel;
+use crate::tensor::Matrix;
+
+/// Plain dense matmul over an owned f32 weight matrix.
+pub struct DenseKernel {
+    w: Matrix,
+}
+
+impl DenseKernel {
+    pub fn new(w: Matrix) -> Self {
+        DenseKernel { w }
+    }
+
+    pub fn weights(&self) -> &Matrix {
+        &self.w
+    }
+}
+
+impl MatmulKernel for DenseKernel {
+    fn name(&self) -> &'static str {
+        "dense-f32"
+    }
+
+    fn matmul(&self, x: &Matrix) -> Matrix {
+        x.matmul(&self.w)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.w.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn matches_matrix_matmul() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Matrix::randn(64, 48, 1.0, &mut rng);
+        let x = Matrix::randn(4, 64, 1.0, &mut rng);
+        let k = DenseKernel::new(w.clone());
+        assert_eq!(k.matmul(&x), x.matmul(&w));
+        assert_eq!(k.weight_bytes(), 64 * 48 * 4);
+    }
+}

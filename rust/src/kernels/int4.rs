@@ -1,0 +1,244 @@
+//! Packed int4 dense matmul kernels.
+//!
+//! Weights are stored two codes per byte (⅛ the bytes of f32). The
+//! per-tensor variant accumulates in code space — `acc_j = Σ_k x_k·c_kj` —
+//! and applies `α/levels` once at the end, so the inner loop is pure
+//! unpack-and-FMA. The group variant ([`GroupInt4Kernel`]) must fold a
+//! per-(group, column) scale inside the loop; the measured difference
+//! between the two is exactly the paper's Table 23 group-quantization
+//! slow-down.
+
+use super::MatmulKernel;
+use crate::quant::pack::{pack_int4, PackedInt4};
+use crate::quant::{levels, Quantized};
+use crate::tensor::Matrix;
+
+/// Per-tensor-scale packed int4 kernel.
+pub struct Int4Kernel {
+    packed: PackedInt4,
+    alpha: f32,
+    bits: u8,
+    d_in: usize,
+    d_out: usize,
+}
+
+impl Int4Kernel {
+    /// Build from a [`Quantized`] weight (per-tensor scale expected).
+    pub fn from_quantized(q: &Quantized) -> Self {
+        assert_eq!(q.scales.len(), 1, "Int4Kernel expects a per-tensor scale");
+        let (d_in, d_out) = q.wq.shape();
+        Int4Kernel {
+            packed: pack_int4(&q.codes),
+            alpha: q.scales[0],
+            bits: q.bits,
+            d_in,
+            d_out,
+        }
+    }
+}
+
+impl MatmulKernel for Int4Kernel {
+    fn name(&self) -> &'static str {
+        "int4-dense"
+    }
+
+    fn matmul(&self, x: &Matrix) -> Matrix {
+        // Tile-decode strategy (§Perf log in EXPERIMENTS.md): decode a
+        // [KT × n] tile of codes into an f32 scratch once, then run m
+        // vectorizable axpys over it. The decode cost amortizes over the
+        // batch (1 unpack per m FMAs) and the packed bytes stream at ⅛ the
+        // dense f32 traffic. Accumulation stays in code space; the
+        // per-tensor dequant multiplies y once at the end.
+        let (m, d_in) = x.shape();
+        assert_eq!(d_in, self.d_in);
+        let n = self.d_out;
+        let mut y = Matrix::zeros(m, n);
+        let dequant = self.alpha / levels(self.bits);
+        const KT: usize = 32;
+        let mut scratch = vec![0.0f32; KT * n];
+        let even = n % 2 == 0;
+        for k0 in (0..d_in).step_by(KT) {
+            let kt = KT.min(d_in - k0);
+            // Decode tile rows [k0, k0+kt) into scratch.
+            for kk in 0..kt {
+                let start_elem = (k0 + kk) * n;
+                let srow = &mut scratch[kk * n..kk * n + n];
+                if even {
+                    let row_bytes =
+                        &self.packed.bytes[start_elem / 2..start_elem / 2 + n / 2];
+                    for (jj, &b) in row_bytes.iter().enumerate() {
+                        srow[2 * jj] = ((b & 0x0F) as i32 - 8) as f32;
+                        srow[2 * jj + 1] = ((b >> 4) as i32 - 8) as f32;
+                    }
+                } else {
+                    for (j, s) in srow.iter_mut().enumerate() {
+                        let e = start_elem + j;
+                        let b = self.packed.bytes[e / 2];
+                        *s = if e % 2 == 0 {
+                            ((b & 0x0F) as i32 - 8) as f32
+                        } else {
+                            ((b >> 4) as i32 - 8) as f32
+                        };
+                    }
+                }
+            }
+            // FMA pass: y[i] += x[i][k0+kk] * scratch[kk].
+            for i in 0..m {
+                let xrow = &x.row(i)[k0..k0 + kt];
+                let yrow = y.row_mut(i);
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let srow = &scratch[kk * n..kk * n + n];
+                    for (yv, &sv) in yrow.iter_mut().zip(srow.iter()) {
+                        *yv += xv * sv;
+                    }
+                }
+            }
+        }
+        for v in y.data_mut() {
+            *v *= dequant;
+        }
+        y
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.packed.bytes.len()
+    }
+}
+
+/// Group-scale packed int4 kernel (group size along d_in).
+pub struct GroupInt4Kernel {
+    packed: PackedInt4,
+    /// One scale per (group, column): `scales[g*d_out + j] / levels`.
+    dequant: Vec<f32>,
+    group_size: usize,
+    d_in: usize,
+    d_out: usize,
+}
+
+impl GroupInt4Kernel {
+    /// Build from a group-quantized weight.
+    pub fn from_quantized(q: &Quantized) -> Self {
+        assert!(q.group_size > 0, "GroupInt4Kernel expects group scales");
+        let (d_in, d_out) = q.wq.shape();
+        let lv = levels(q.bits);
+        GroupInt4Kernel {
+            packed: pack_int4(&q.codes),
+            dequant: q.scales.iter().map(|&s| s / lv).collect(),
+            group_size: q.group_size,
+            d_in,
+            d_out,
+        }
+    }
+}
+
+impl MatmulKernel for GroupInt4Kernel {
+    fn name(&self) -> &'static str {
+        "int4-group"
+    }
+
+    fn matmul(&self, x: &Matrix) -> Matrix {
+        // Same tile-decode structure as the per-tensor kernel, but the
+        // per-(group, column) scale must be folded in *during decode* —
+        // one extra multiply + scale load per weight element. That is the
+        // measured group-quantization overhead Table 23 reports.
+        let (m, d_in) = x.shape();
+        assert_eq!(d_in, self.d_in);
+        let n = self.d_out;
+        let mut y = Matrix::zeros(m, n);
+        const KT: usize = 32;
+        let mut scratch = vec![0.0f32; KT * n];
+        let even = n % 2 == 0;
+        for k0 in (0..d_in).step_by(KT) {
+            let kt = KT.min(d_in - k0);
+            for kk in 0..kt {
+                let k = k0 + kk;
+                let g = k / self.group_size;
+                let scales = &self.dequant[g * n..(g + 1) * n];
+                let start_elem = k * n;
+                let srow = &mut scratch[kk * n..kk * n + n];
+                if even {
+                    let row_bytes =
+                        &self.packed.bytes[start_elem / 2..start_elem / 2 + n / 2];
+                    for (jj, &b) in row_bytes.iter().enumerate() {
+                        srow[2 * jj] = ((b & 0x0F) as i32 - 8) as f32 * scales[2 * jj];
+                        srow[2 * jj + 1] = ((b >> 4) as i32 - 8) as f32 * scales[2 * jj + 1];
+                    }
+                } else {
+                    for (j, s) in srow.iter_mut().enumerate() {
+                        let e = start_elem + j;
+                        let b = self.packed.bytes[e / 2];
+                        let c = if e % 2 == 0 {
+                            (b & 0x0F) as i32 - 8
+                        } else {
+                            (b >> 4) as i32 - 8
+                        };
+                        *s = c as f32 * scales[j];
+                    }
+                }
+            }
+            for i in 0..m {
+                let xrow = &x.row(i)[k0..k0 + kt];
+                let yrow = y.row_mut(i);
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let srow = &scratch[kk * n..kk * n + n];
+                    for (yv, &sv) in yrow.iter_mut().zip(srow.iter()) {
+                        *yv += xv * sv;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.packed.bytes.len() + self.dequant.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{group_absmax, slim_quant};
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn int4_matches_fake_quant_dense() {
+        let mut rng = Pcg32::seeded(1);
+        for &(d_in, d_out) in &[(64usize, 64usize), (96, 33), (31, 48)] {
+            let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.05));
+            let q = slim_quant::quantize(&w, 4);
+            let x = Matrix::randn(5, d_in, 1.0, &mut rng);
+            let k = Int4Kernel::from_quantized(&q);
+            let err = k.matmul(&x).rel_err(&x.matmul(&q.wq));
+            assert!(err < 1e-5, "{d_in}x{d_out}: err {err}");
+        }
+    }
+
+    #[test]
+    fn group_matches_fake_quant_dense() {
+        let mut rng = Pcg32::seeded(2);
+        for &(d_in, d_out, gs) in &[(128usize, 64usize, 32usize), (100, 40, 128)] {
+            let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.05));
+            let q = group_absmax::quantize(&w, 4, gs);
+            let x = Matrix::randn(4, d_in, 1.0, &mut rng);
+            let k = GroupInt4Kernel::from_quantized(&q);
+            let err = k.matmul(&x).rel_err(&x.matmul(&q.wq));
+            assert!(err < 1e-5, "{d_in}x{d_out}@{gs}: err {err}");
+        }
+    }
+
+    #[test]
+    fn weight_bytes_are_one_eighth() {
+        let mut rng = Pcg32::seeded(3);
+        let w = Matrix::from_fn(256, 256, |_, _| rng.laplace(0.05));
+        let q = slim_quant::quantize(&w, 4);
+        let k = Int4Kernel::from_quantized(&q);
+        assert_eq!(k.weight_bytes(), 256 * 256 / 2);
+    }
+}

@@ -1,0 +1,81 @@
+//! CPU inference kernels — the measured speedup substrate (our "Marlin").
+//!
+//! The paper's speedups (Fig. 3/4) come from Sparse Marlin on NVIDIA GPUs:
+//! 4-bit weights quarter the memory traffic and 2:4 sparsity halves it
+//! again, which is decisive in the memory-bound decode regime. The same
+//! mechanism exists on CPU: these kernels store weights packed (int4 /
+//! 2:4-compressed int4) and measure real wall-clock speedups against the
+//! dense f32 baseline at small decode batch sizes. The experiment drivers
+//! (F3/F4/T23) report these measurements alongside the GPU roofline
+//! projections in [`crate::perfmodel`].
+//!
+//! All kernels compute `y = x · W (+ x·L·R)` for row-major `x: m×d_in`.
+
+pub mod dense;
+pub mod int4;
+pub mod lowrank;
+pub mod sparse24;
+
+pub use dense::DenseKernel;
+pub use int4::{GroupInt4Kernel, Int4Kernel};
+pub use lowrank::LowRankApply;
+pub use sparse24::Sparse24Kernel;
+
+use crate::tensor::Matrix;
+
+/// Common interface so the bench harness can sweep kernels uniformly.
+pub trait MatmulKernel {
+    /// Kernel display name.
+    fn name(&self) -> &'static str;
+    /// y = x · W.
+    fn matmul(&self, x: &Matrix) -> Matrix;
+    /// Bytes of weight data touched per call (the traffic model).
+    fn weight_bytes(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::slim_quant;
+    use crate::rng::Pcg32;
+    use crate::sparse::{mask::SparsityPattern, wanda};
+
+    /// All kernels must agree with the dense reference on the same
+    /// effective weights.
+    #[test]
+    fn kernels_agree_with_dense_reference() {
+        let mut rng = Pcg32::seeded(1);
+        let (d_in, d_out, m) = (128, 96, 8);
+        let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.05));
+        let x = Matrix::randn(m, d_in, 1.0, &mut rng);
+
+        // int4 per-tensor.
+        let q = slim_quant::quantize(&w, 4);
+        let k_int4 = Int4Kernel::from_quantized(&q);
+        let dense_ref = DenseKernel::new(q.wq.clone());
+        let err = k_int4.matmul(&x).rel_err(&dense_ref.matmul(&x));
+        assert!(err < 1e-5, "int4 err {err}");
+
+        // 2:4 sparse int4.
+        let x_l2 = vec![1.0f32; d_in];
+        let (wc, mask) = wanda::prune(&q.wq, &x_l2, SparsityPattern::TWO_FOUR);
+        let k_sp = Sparse24Kernel::from_parts(&q, &mask);
+        let dense_sp = DenseKernel::new(wc);
+        let err = k_sp.matmul(&x).rel_err(&dense_sp.matmul(&x));
+        assert!(err < 1e-5, "sparse24 err {err}");
+    }
+
+    #[test]
+    fn traffic_ordering() {
+        let mut rng = Pcg32::seeded(2);
+        let w = Matrix::from_fn(256, 256, |_, _| rng.laplace(0.05));
+        let q = slim_quant::quantize(&w, 4);
+        let dense = DenseKernel::new(w.clone());
+        let int4 = Int4Kernel::from_quantized(&q);
+        let x_l2 = vec![1.0f32; 256];
+        let (_, mask) = wanda::prune(&q.wq, &x_l2, SparsityPattern::TWO_FOUR);
+        let sp = Sparse24Kernel::from_parts(&q, &mask);
+        assert!(int4.weight_bytes() < dense.weight_bytes() / 7);
+        assert!(sp.weight_bytes() < int4.weight_bytes());
+    }
+}

@@ -1,0 +1,219 @@
+//! 2:4 semi-structured sparse int4 kernel.
+//!
+//! Storage mirrors NVIDIA's sparse tensor-core format: for every group of 4
+//! input dims per output column, only the 2 kept codes are stored (packed
+//! int4) plus a 4-bit metadata nibble carrying the two 2-bit in-group
+//! indices. Weight traffic = d_in·d_out·(4/2 bits values + 2 bits meta)/8 =
+//! ¼ of the already-packed int4 dense kernel — the second halving the
+//! paper's Fig. 3 decomposes out of the total speedup.
+
+use super::MatmulKernel;
+use crate::quant::{levels, Quantized};
+use crate::sparse::Mask;
+use crate::tensor::Matrix;
+
+/// 2:4 compressed, per-tensor-scale int4 kernel.
+pub struct Sparse24Kernel {
+    /// Packed kept codes: layout [group-major, slot, column] — for group g,
+    /// columns j: vals[(g*2+slot)*d_out + j], two codes per byte.
+    vals: Vec<u8>,
+    /// Metadata nibbles: for (g, j) packed two-per-byte along j:
+    /// low nibble = idx0 | idx1<<2 of column j (even), high of j+1.
+    meta: Vec<u8>,
+    alpha: f32,
+    bits: u8,
+    d_in: usize,
+    d_out: usize,
+}
+
+impl Sparse24Kernel {
+    /// Build from a per-tensor-quantized weight and its 2:4 mask.
+    pub fn from_parts(q: &Quantized, mask: &Mask) -> Self {
+        assert_eq!(q.scales.len(), 1, "Sparse24Kernel expects a per-tensor scale");
+        let (d_in, d_out) = q.wq.shape();
+        assert_eq!((mask.rows(), mask.cols()), (d_in, d_out));
+        assert_eq!(d_in % 4, 0, "d_in must be a multiple of 4 for 2:4");
+        let n_groups = d_in / 4;
+        // Gather kept codes + indices per (group, column).
+        let mut codes: Vec<i8> = Vec::with_capacity(n_groups * 2 * d_out);
+        let mut meta = vec![0u8; (n_groups * d_out).div_ceil(2)];
+        for g in 0..n_groups {
+            // slot-major: first all slot-0 codes for this group, then slot-1
+            let mut slot_codes = [vec![0i8; d_out], vec![0i8; d_out]];
+            for j in 0..d_out {
+                let mut idxs = [0u8; 2];
+                let mut cs = [0i8; 2];
+                let mut found = 0;
+                for r in 0..4 {
+                    let i = g * 4 + r;
+                    if mask.get(i, j) {
+                        if found < 2 {
+                            idxs[found] = r as u8;
+                            cs[found] = q.codes[i * d_out + j];
+                        }
+                        found += 1;
+                    }
+                }
+                assert!(found <= 2, "mask violates 2:4 at group {g} col {j}");
+                // Guarantee distinct slot indices so the decode scatter is
+                // branchless: park missing slots (value 0) on a pruned row.
+                if found < 2 {
+                    idxs[1] = (idxs[0] + 1) % 4;
+                    cs[1] = 0;
+                }
+                slot_codes[0][j] = cs[0];
+                slot_codes[1][j] = cs[1];
+                let nib = idxs[0] | (idxs[1] << 2);
+                let mpos = g * d_out + j;
+                if mpos % 2 == 0 {
+                    meta[mpos / 2] |= nib;
+                } else {
+                    meta[mpos / 2] |= nib << 4;
+                }
+            }
+            codes.extend_from_slice(&slot_codes[0]);
+            codes.extend_from_slice(&slot_codes[1]);
+        }
+        let vals = crate::quant::pack::pack_int4(&codes).bytes;
+        Sparse24Kernel { vals, meta, alpha: q.scales[0], bits: q.bits, d_in, d_out }
+    }
+}
+
+impl MatmulKernel for Sparse24Kernel {
+    fn name(&self) -> &'static str {
+        "int4-2:4"
+    }
+
+    fn matmul(&self, x: &Matrix) -> Matrix {
+        // Tile-decode strategy (§Perf log in EXPERIMENTS.md): decompress a
+        // tile of groups into a dense f32 scratch (zeros at pruned slots,
+        // scatter by the 2-bit metadata), then run vectorizable axpys. The
+        // decode touches only the compressed stream (2 codes + 1 metadata
+        // nibble per 4 weights ≈ 2.25 bits/element) and amortizes over the
+        // batch; accumulation stays in code space with one dequant at the
+        // end.
+        let (m, d_in) = x.shape();
+        assert_eq!(d_in, self.d_in);
+        let n = self.d_out;
+        let n_groups = d_in / 4;
+        let mut y = Matrix::zeros(m, n);
+        let dequant = self.alpha / levels(self.bits);
+        const GT: usize = 8; // groups per tile → 32 scratch rows
+        let mut scratch = vec![0.0f32; GT * 4 * n];
+        let mut c0row = vec![0.0f32; n];
+        let mut c1row = vec![0.0f32; n];
+        let unpack_row = |start: usize, out: &mut [f32]| {
+            if start % 2 == 0 && n % 2 == 0 {
+                let bytes = &self.vals[start / 2..start / 2 + n / 2];
+                for (jj, &b) in bytes.iter().enumerate() {
+                    out[2 * jj] = ((b & 0x0F) as i32 - 8) as f32;
+                    out[2 * jj + 1] = ((b >> 4) as i32 - 8) as f32;
+                }
+            } else {
+                for (j, o) in out.iter_mut().enumerate() {
+                    let e = start + j;
+                    let b = self.vals[e / 2];
+                    *o = if e % 2 == 0 {
+                        ((b & 0x0F) as i32 - 8) as f32
+                    } else {
+                        ((b >> 4) as i32 - 8) as f32
+                    };
+                }
+            }
+        };
+        for g0 in (0..n_groups).step_by(GT) {
+            let gt = GT.min(n_groups - g0);
+            scratch[..gt * 4 * n].fill(0.0);
+            for gg in 0..gt {
+                let g = g0 + gg;
+                // Pass 1: bulk-unpack the two slot rows (vectorizable).
+                unpack_row((g * 2) * n, &mut c0row);
+                unpack_row((g * 2 + 1) * n, &mut c1row);
+                // Pass 2: metadata-driven scatter (branchless — slot
+                // indices are distinct by construction).
+                let base = gg * 4;
+                let meta_base = g * n;
+                for j in 0..n {
+                    let mb = self.meta[(meta_base + j) / 2];
+                    let nib = if (meta_base + j) % 2 == 0 { mb & 0x0F } else { mb >> 4 };
+                    let i0 = (nib & 0x03) as usize;
+                    let i1 = ((nib >> 2) & 0x03) as usize;
+                    scratch[(base + i0) * n + j] = c0row[j];
+                    scratch[(base + i1) * n + j] = c1row[j];
+                }
+            }
+            for i in 0..m {
+                let xrow = &x.row(i)[g0 * 4..g0 * 4 + gt * 4];
+                let yrow = y.row_mut(i);
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let srow = &scratch[kk * n..kk * n + n];
+                    for (yv, &sv) in yrow.iter_mut().zip(srow.iter()) {
+                        *yv += xv * sv;
+                    }
+                }
+            }
+        }
+        for v in y.data_mut() {
+            *v *= dequant;
+        }
+        y
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.vals.len() + self.meta.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::slim_quant;
+    use crate::rng::Pcg32;
+    use crate::sparse::{mask::SparsityPattern, wanda};
+
+    fn setup(d_in: usize, d_out: usize, seed: u64) -> (Quantized, Mask, Matrix) {
+        let mut rng = Pcg32::seeded(seed);
+        let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.05));
+        let q = slim_quant::quantize(&w, 4);
+        let x_l2: Vec<f32> = (0..d_in).map(|_| 0.5 + rng.f32()).collect();
+        let (wc, mask) = wanda::prune(&q.wq, &x_l2, SparsityPattern::TWO_FOUR);
+        let dense = wc;
+        (q, mask, dense)
+    }
+
+    #[test]
+    fn matches_masked_dense() {
+        for &(d_in, d_out) in &[(64usize, 64usize), (128, 96), (64, 33)] {
+            let (q, mask, dense) = setup(d_in, d_out, 1);
+            let k = Sparse24Kernel::from_parts(&q, &mask);
+            let mut rng = Pcg32::seeded(2);
+            let x = Matrix::randn(6, d_in, 1.0, &mut rng);
+            let err = k.matmul(&x).rel_err(&x.matmul(&dense));
+            assert!(err < 1e-5, "{d_in}x{d_out}: err {err}");
+        }
+    }
+
+    #[test]
+    fn bytes_are_quarter_of_int4_dense() {
+        let (q, mask, _) = setup(256, 256, 3);
+        let k = Sparse24Kernel::from_parts(&q, &mask);
+        // values: 256*256/2 codes → /2 bytes = 16384; meta: 256/4*256/2 = 8192
+        assert_eq!(k.weight_bytes(), 16384 + 8192);
+        let dense_int4_bytes = 256 * 256 / 2;
+        assert!(k.weight_bytes() < dense_int4_bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "2:4")]
+    fn rejects_non_nofm_mask() {
+        let (q, mut mask, _) = setup(64, 16, 4);
+        // Violate the pattern: keep 3 in one group.
+        for r in 0..3 {
+            mask.set(r, 0, true);
+        }
+        let _ = Sparse24Kernel::from_parts(&q, &mask);
+    }
+}

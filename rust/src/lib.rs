@@ -1,0 +1,39 @@
+//! # SLiM reproduction library
+//!
+//! A full-system reproduction of *"SLiM: One-shot Quantization and Sparsity
+//! with Low-rank Approximation for LLM Weight Compression"* (Mozaffari,
+//! Yazdanbakhsh, Mehri Dehnavi — ICML 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the compression pipeline (SLiM-Quant, pruning,
+//!   SLiM-LoRA and all baselines), model registry, training/fine-tuning
+//!   drivers, evaluation harness, CPU hot-path kernels, serving router and
+//!   the experiment drivers that regenerate every table/figure of the paper.
+//! * **L2 (JAX, build-time)** — the transformer compute graph, AOT-lowered
+//!   to HLO text, executed here through PJRT (`runtime`).
+//! * **L1 (Pallas, build-time)** — the fused compressed-linear kernel and
+//!   the SLiM-Quant error-scan kernel, lowered into the same HLO.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod calib;
+pub mod compress;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod kernels;
+pub mod linalg;
+pub mod lowrank;
+pub mod model;
+pub mod perfmodel;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod sparse;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,149 @@
+//! Numerical linear algebra on [`Matrix`]: Householder QR, one-sided Jacobi
+//! SVD, randomized truncated SVD, and SPD solves.
+//!
+//! SLiM-LoRA (paper Alg. 2), Naive-LoRA and L²QER all reduce to a truncated
+//! SVD of an error matrix; SparseGPT/OPTQ need Cholesky factorizations of a
+//! damped Hessian. The vendored crate set has no LAPACK binding, so these are
+//! implemented natively.
+
+mod qr;
+mod svd;
+
+pub use qr::{qr_thin, QrThin};
+pub use svd::{jacobi_svd, randomized_svd, Svd};
+
+use crate::tensor::Matrix;
+
+/// Cholesky factorization of an SPD matrix: returns lower-triangular `L`
+/// with `A = L·Lᵀ`. Fails (None) if the matrix is not positive definite.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky needs a square matrix");
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j) as f64;
+            for k in 0..j {
+                sum -= l.get(i, k) as f64 * l.get(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l.set(i, j, sum.sqrt() as f32);
+            } else {
+                l.set(i, j, (sum / l.get(j, j) as f64) as f32);
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Invert an SPD matrix via Cholesky (A⁻¹ = L⁻ᵀ·L⁻¹). Used for the
+/// SparseGPT inverse-Hessian. Returns None if not SPD.
+pub fn spd_inverse(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    // Solve L·Y = I column by column (forward), then Lᵀ·X = Y (backward).
+    let mut inv = Matrix::zeros(n, n);
+    let mut y = vec![0.0f64; n];
+    let mut x = vec![0.0f64; n];
+    for col in 0..n {
+        for i in 0..n {
+            let mut sum = if i == col { 1.0f64 } else { 0.0 };
+            for k in 0..i {
+                sum -= l.get(i, k) as f64 * y[k];
+            }
+            y[i] = sum / l.get(i, i) as f64;
+        }
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= l.get(k, i) as f64 * x[k];
+            }
+            x[i] = sum / l.get(i, i) as f64;
+        }
+        for i in 0..n {
+            inv.set(i, col, x[i] as f32);
+        }
+    }
+    Some(inv)
+}
+
+/// Solve the SPD system `A·x = b` via Cholesky.
+pub fn spd_solve(a: &Matrix, b: &[f32]) -> Option<Vec<f32>> {
+    let n = a.rows();
+    assert_eq!(b.len(), n);
+    let l = cholesky(a)?;
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l.get(i, k) as f64 * y[k];
+        }
+        y[i] = sum / l.get(i, i) as f64;
+    }
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l.get(k, i) as f64 * x[k];
+        }
+        x[i] = sum / l.get(i, i) as f64;
+    }
+    Some(x.iter().map(|&v| v as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::tensor::matmul_at_b;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::seeded(seed);
+        let g = Matrix::randn(n + 5, n, 1.0, &mut rng);
+        let mut a = matmul_at_b(&g, &g);
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + 0.1);
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(12, 1);
+        let l = cholesky(&a).expect("spd");
+        let rec = l.matmul(&l.transpose());
+        assert!(rec.rel_err(&a) < 1e-4);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Matrix::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let a = random_spd(10, 2);
+        let inv = spd_inverse(&a).expect("spd");
+        let id = a.matmul(&inv);
+        assert!(id.rel_err(&Matrix::eye(10)) < 1e-3);
+    }
+
+    #[test]
+    fn spd_solve_solves() {
+        let a = random_spd(8, 3);
+        let mut rng = Pcg32::seeded(4);
+        let x_true: Vec<f32> = (0..8).map(|_| rng.gauss()).collect();
+        let b: Vec<f32> = (0..8)
+            .map(|i| (0..8).map(|j| a.get(i, j) * x_true[j]).sum())
+            .collect();
+        let x = spd_solve(&a, &b).expect("spd");
+        for (xs, xt) in x.iter().zip(x_true.iter()) {
+            assert!((xs - xt).abs() < 1e-3, "{xs} vs {xt}");
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Thin QR via Householder reflections.
+//!
+//! Used by the randomized SVD to orthonormalize the sampled range basis.
+
+use crate::tensor::Matrix;
+
+/// Thin QR factorization result: `A = Q · R` with `Q` m×k orthonormal and
+/// `R` k×k upper triangular (k = min(m, n) = n for tall inputs).
+pub struct QrThin {
+    pub q: Matrix,
+    pub r: Matrix,
+}
+
+/// Householder thin QR of a tall (m ≥ n) matrix.
+pub fn qr_thin(a: &Matrix) -> QrThin {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin expects a tall matrix, got {m}x{n}");
+    // Work in f64 for stability; these matrices are small (n ≤ rank+overs).
+    let mut r: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    // Householder vectors stored column-by-column in `vs`.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the Householder vector for column k below the diagonal.
+        let mut norm = 0.0f64;
+        for i in k..m {
+            norm += r[i * n + k] * r[i * n + k];
+        }
+        let norm = norm.sqrt();
+        let mut v = vec![0.0f64; m - k];
+        if norm == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r[k * n + k] >= 0.0 { -norm } else { norm };
+        for i in k..m {
+            v[i - k] = r[i * n + k];
+        }
+        v[0] -= alpha;
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm_sq > 0.0 {
+            // Apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..].
+            for j in k..n {
+                let mut dot = 0.0f64;
+                for i in k..m {
+                    dot += v[i - k] * r[i * n + j];
+                }
+                let s = 2.0 * dot / vnorm_sq;
+                for i in k..m {
+                    r[i * n + j] -= s * v[i - k];
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // Extract R (n×n upper triangular).
+    let mut rm = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rm.set(i, j, r[i * n + j] as f32);
+        }
+    }
+    // Form Q by applying reflectors to the first n columns of I (backward).
+    let mut q: Vec<f64> = vec![0.0; m * n];
+    for j in 0..n {
+        q[j * n + j] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm_sq == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0f64;
+            for i in k..m {
+                dot += v[i - k] * q[i * n + j];
+            }
+            let s = 2.0 * dot / vnorm_sq;
+            for i in k..m {
+                q[i * n + j] -= s * v[i - k];
+            }
+        }
+    }
+    let qm = Matrix::from_vec(m, n, q.iter().map(|&x| x as f32).collect());
+    QrThin { q: qm, r: rm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::tensor::matmul_at_b;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg32::seeded(10);
+        for &(m, n) in &[(20usize, 5usize), (50, 50), (100, 12)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let QrThin { q, r } = qr_thin(&a);
+            assert!(q.matmul(&r).rel_err(&a) < 1e-4, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Pcg32::seeded(11);
+        let a = Matrix::randn(60, 10, 1.0, &mut rng);
+        let QrThin { q, .. } = qr_thin(&a);
+        let qtq = matmul_at_b(&q, &q);
+        assert!(qtq.rel_err(&Matrix::eye(10)) < 1e-4);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Pcg32::seeded(12);
+        let a = Matrix::randn(30, 8, 1.0, &mut rng);
+        let QrThin { r, .. } = qr_thin(&a);
+        for i in 0..8 {
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_does_not_panic() {
+        // Two identical columns.
+        let a = Matrix::from_fn(10, 3, |i, j| if j == 2 { i as f32 } else { i as f32 });
+        let QrThin { q, r } = qr_thin(&a);
+        assert!(q.matmul(&r).rel_err(&a) < 1e-4);
+    }
+}

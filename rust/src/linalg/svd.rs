@@ -1,0 +1,236 @@
+//! Singular value decompositions.
+//!
+//! Two routes:
+//! * [`jacobi_svd`] — exact one-sided Jacobi SVD for small/square matrices
+//!   (the k×n projected matrix inside the randomized route, and tests).
+//! * [`randomized_svd`] — Halko–Martinsson–Tropp randomized truncated SVD
+//!   with subspace (power) iteration; this is what the adapter computations
+//!   use, since they only need the top `r = 0.1·d` singular triplets.
+
+use super::qr::qr_thin;
+use crate::rng::Pcg32;
+use crate::tensor::{matmul_at_b, Matrix};
+
+/// Truncated SVD result: `A ≈ U · diag(S) · Vt` with `U` m×k, `S` len k
+/// (descending), `Vt` k×n.
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f32>,
+    pub vt: Matrix,
+}
+
+impl Svd {
+    /// Reconstruct `U · diag(S) · Vt`.
+    pub fn reconstruct(&self) -> Matrix {
+        self.u.scale_cols(&self.s).matmul(&self.vt)
+    }
+
+    /// Truncate to the top-`k` triplets.
+    pub fn truncate(mut self, k: usize) -> Svd {
+        let k = k.min(self.s.len());
+        let u = self.u.block(0, self.u.rows(), 0, k);
+        let vt = self.vt.block(0, k, 0, self.vt.cols());
+        self.s.truncate(k);
+        Svd { u, s: self.s, vt }
+    }
+
+    /// Split into `(L, R)` with `L = U·diag(√S)`, `R = diag(√S)·Vt` so that
+    /// `L·R = U·diag(S)·Vt` — the balanced adapter factorization.
+    pub fn split_balanced(&self) -> (Matrix, Matrix) {
+        let sqrt_s: Vec<f32> = self.s.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        let l = self.u.scale_cols(&sqrt_s);
+        let r = self.vt.scale_rows(&sqrt_s);
+        (l, r)
+    }
+}
+
+/// One-sided Jacobi SVD of `a` (m×n, any aspect). Exact up to convergence
+/// tolerance; O(n²·m) per sweep so intended for small matrices.
+pub fn jacobi_svd(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        // Work on the transpose and swap U/V at the end.
+        let svd_t = jacobi_svd(&a.transpose());
+        return Svd { u: svd_t.vt.transpose(), s: svd_t.s, vt: svd_t.u.transpose() };
+    }
+    // Work array G (m×n, f64): columns get rotated until mutually orthogonal.
+    let mut g: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    // V accumulates the right rotations (n×n).
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 60;
+    let eps = 1e-12f64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                // Compute the 2x2 Gram entries for columns p,q.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let gp = g[i * n + p];
+                    let gq = g[i * n + q];
+                    app += gp * gp;
+                    aqq += gq * gq;
+                    apq += gp * gq;
+                }
+                off += apq * apq;
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation that zeroes the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let gp = g[i * n + p];
+                    let gq = g[i * n + q];
+                    g[i * n + p] = c * gp - s * gq;
+                    g[i * n + q] = s * gp + c * gq;
+                }
+                for i in 0..n {
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = c * vp - s * vq;
+                    v[i * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off.sqrt() < 1e-14 {
+            break;
+        }
+    }
+    // Singular values = column norms; U = normalized columns.
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm: f64 = (0..m).map(|i| g[i * n + j] * g[i * n + j]).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut u = Matrix::zeros(m, n);
+    let mut vt = Matrix::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (rank, &(norm, j)) in sv.iter().enumerate() {
+        s.push(norm as f32);
+        if norm > 0.0 {
+            for i in 0..m {
+                u.set(i, rank, (g[i * n + j] / norm) as f32);
+            }
+        }
+        for i in 0..n {
+            vt.set(rank, i, v[i * n + j] as f32);
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Randomized truncated SVD of rank `k` with `oversample` extra probes and
+/// `power_iters` subspace iterations (2 is plenty for adapter use — the
+/// compression-error spectra decay fast).
+pub fn randomized_svd(a: &Matrix, k: usize, oversample: usize, power_iters: usize, rng: &mut Pcg32) -> Svd {
+    let (m, n) = a.shape();
+    let k = k.min(m.min(n));
+    let probes = (k + oversample).min(m.min(n)).max(1);
+    // Range finder: Y = A·Ω, then power iterations with re-orthonormalization.
+    let omega = Matrix::randn(n, probes, 1.0, rng);
+    let mut y = a.matmul(&omega);
+    let mut q = qr_thin(&y).q;
+    for _ in 0..power_iters {
+        let z = matmul_at_b(a, &q); // n×p = Aᵀ·Q
+        let qz = qr_thin(&z).q;
+        y = a.matmul(&qz);
+        q = qr_thin(&y).q;
+    }
+    // Project: B = Qᵀ·A (p×n); exact SVD of the small B.
+    let b = matmul_at_b(&q, a);
+    let svd_b = jacobi_svd(&b);
+    let u = q.matmul(&svd_b.u);
+    Svd { u, s: svd_b.s, vt: svd_b.vt }.truncate(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_at_b;
+
+    fn low_rank_matrix(m: usize, n: usize, r: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::seeded(seed);
+        let u = Matrix::randn(m, r, 1.0, &mut rng);
+        let v = Matrix::randn(r, n, 1.0, &mut rng);
+        u.matmul(&v)
+    }
+
+    #[test]
+    fn jacobi_reconstructs_exactly() {
+        let mut rng = Pcg32::seeded(20);
+        for &(m, n) in &[(12usize, 12usize), (20, 8), (8, 20)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let svd = jacobi_svd(&a);
+            assert!(svd.reconstruct().rel_err(&a) < 1e-4, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn jacobi_singular_values_descending() {
+        let mut rng = Pcg32::seeded(21);
+        let a = Matrix::randn(15, 10, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn jacobi_u_orthonormal() {
+        let mut rng = Pcg32::seeded(22);
+        let a = Matrix::randn(18, 9, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        let utu = matmul_at_b(&svd.u, &svd.u);
+        assert!(utu.rel_err(&Matrix::eye(9)) < 1e-4);
+    }
+
+    #[test]
+    fn randomized_recovers_low_rank() {
+        let a = low_rank_matrix(80, 60, 5, 23);
+        let mut rng = Pcg32::seeded(24);
+        let svd = randomized_svd(&a, 5, 8, 2, &mut rng);
+        assert!(svd.reconstruct().rel_err(&a) < 1e-3);
+        assert_eq!(svd.s.len(), 5);
+    }
+
+    #[test]
+    fn randomized_truncation_error_decreases_with_rank() {
+        let mut rng = Pcg32::seeded(25);
+        let a = Matrix::randn(64, 64, 1.0, &mut rng);
+        let mut prev = f32::INFINITY;
+        for k in [4usize, 16, 32, 64] {
+            let mut r2 = Pcg32::seeded(26);
+            let svd = randomized_svd(&a, k, 10, 3, &mut r2);
+            let err = svd.reconstruct().rel_err(&a);
+            assert!(err <= prev + 1e-3, "rank {k}: {err} > {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn split_balanced_multiplies_back() {
+        let a = low_rank_matrix(30, 40, 6, 27);
+        let mut rng = Pcg32::seeded(28);
+        let svd = randomized_svd(&a, 6, 6, 2, &mut rng);
+        let (l, r) = svd.split_balanced();
+        assert!(l.matmul(&r).rel_err(&a) < 1e-3);
+        assert_eq!(l.shape(), (30, 6));
+        assert_eq!(r.shape(), (6, 40));
+    }
+
+    #[test]
+    fn zero_matrix_svd() {
+        let a = Matrix::zeros(10, 7);
+        let svd = jacobi_svd(&a);
+        assert!(svd.s.iter().all(|&s| s == 0.0));
+        assert!(svd.reconstruct().fro_norm() == 0.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! L²QER (Zhang et al. 2024a) — one-shot low-rank *quantization*-error
+//! reconstruction.
+//!
+//! Structurally like SLiM-LoRA's saliency SVD, but the adapters compensate
+//! only the quantization error `W − W^Q`, not the joint error `W − W^C`.
+//! Under quant-only settings this works well (Table 8); under joint
+//! sparsity+quantization the un-modeled sparsity error dominates and the
+//! method falls behind (Table 1) — which this module lets the experiment
+//! drivers demonstrate.
+
+use super::{slim_lora, Adapters};
+use crate::tensor::Matrix;
+
+/// Compute rank-`r` L²QER adapters from the quantization error only.
+///
+/// * `w` — original weights
+/// * `wq` — quantized (NOT pruned) weights
+pub fn adapters(w: &Matrix, wq: &Matrix, x_abs_mean: &[f32], rank: usize) -> Adapters {
+    // Same saliency-SVD machinery, but on the quant error alone.
+    slim_lora::adapters(w, wq, x_abs_mean, rank)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::sparse::{mask::SparsityPattern, wanda};
+
+    #[test]
+    fn good_for_quant_only() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Matrix::randn(64, 48, 0.1, &mut rng);
+        let wq = w.map(|v| (v * 6.0).round() / 6.0);
+        let x = vec![1.0f32; 64];
+        let a = adapters(&w, &wq, &x, 8);
+        let before = wq.sub(&w).fro_norm_sq();
+        let after = wq.add(&a.product()).sub(&w).fro_norm_sq();
+        assert!(after < before * 0.8);
+    }
+
+    #[test]
+    fn underperforms_slim_lora_with_sparsity() {
+        // Reproduces the paper's Table 1 story in miniature: adapters that
+        // ignore the sparsity error lose to adapters on the joint error.
+        let mut rng = Pcg32::seeded(2);
+        let d_in = 96;
+        let w = Matrix::randn(d_in, 64, 0.1, &mut rng);
+        let wq = w.map(|v| (v * 6.0).round() / 6.0);
+        let x_l2: Vec<f32> = (0..d_in).map(|_| 1.0 + rng.f32()).collect();
+        let (wc, _) = wanda::prune(&wq, &x_l2, SparsityPattern::TWO_FOUR);
+        let x_mean: Vec<f32> = x_l2.iter().map(|v| v / 10.0).collect();
+        let rank = 10;
+        // L²QER: compensates W−Wq but is applied on top of the sparse Wc.
+        let a_l2 = adapters(&w, &wq, &x_mean, rank);
+        // SLiM-LoRA: compensates the full W−Wc.
+        let a_slim = slim_lora::adapters(&w, &wc, &x_mean, rank);
+        let err = |a: &Adapters| wc.add(&a.product()).sub(&w).fro_norm_sq();
+        assert!(
+            err(&a_slim) < err(&a_l2),
+            "slim {} vs l2qer {}",
+            err(&a_slim),
+            err(&a_l2)
+        );
+    }
+}

@@ -1,0 +1,101 @@
+//! One-shot low-rank adapters (paper §3.2–§3.3) — the core contribution.
+//!
+//! Given original weights `W` and compressed weights `W^C` (quantized +
+//! pruned), all methods compute `L ∈ R^{d_in×r}, R ∈ R^{r×d_out}` such that
+//! `W ≈ W^C + L·R`, without any training:
+//!
+//! * [`naive`] — **Naive-LoRA**: truncated SVD of the raw error `W − W^C`.
+//! * [`slim_lora`] — **SLiM-LoRA** (Alg. 2): truncated SVD of the
+//!   *saliency-transformed* error `F(W − W^C) = diag(x)(W − W^C)`, then the
+//!   inverse transform recovers `L`. `F` is invertible and additive, which
+//!   is what makes the closed form valid (Eq. 8–11).
+//! * [`l2qer`] — **L²QER**: like SLiM-LoRA but compensating *only* the
+//!   quantization error — the reason it underperforms under joint
+//!   sparsity+quantization in Table 1.
+//! * [`adapter_quant`] — §3.3: group-AbsMax 4-bit quantization of L and R
+//!   (`SLiM-LoRA^Q`).
+
+pub mod adapter_quant;
+pub mod l2qer;
+pub mod naive;
+pub mod slim_lora;
+
+use crate::tensor::Matrix;
+
+/// Which adapter method to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoraMethod {
+    /// No adapters.
+    None,
+    /// Naive-LoRA: plain SVD of the error.
+    Naive,
+    /// SLiM-LoRA: saliency-weighted SVD (the paper's method).
+    Slim,
+    /// L²QER: saliency SVD of the quantization error only.
+    L2qer,
+}
+
+impl LoraMethod {
+    pub fn parse(s: &str) -> Option<LoraMethod> {
+        Some(match s {
+            "none" => LoraMethod::None,
+            "naive" | "naive-lora" => LoraMethod::Naive,
+            "slim" | "slim-lora" => LoraMethod::Slim,
+            "l2qer" => LoraMethod::L2qer,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoraMethod::None => "none",
+            LoraMethod::Naive => "Naive-LoRA",
+            LoraMethod::Slim => "SLiM-LoRA",
+            LoraMethod::L2qer => "L2QER",
+        }
+    }
+}
+
+/// A computed adapter pair.
+#[derive(Clone, Debug)]
+pub struct Adapters {
+    /// Left adapter, d_in × r.
+    pub l: Matrix,
+    /// Right adapter, r × d_out.
+    pub r: Matrix,
+}
+
+impl Adapters {
+    /// The dense correction `L·R`.
+    pub fn product(&self) -> Matrix {
+        self.l.matmul(&self.r)
+    }
+
+    /// Adapter rank.
+    pub fn rank(&self) -> usize {
+        self.l.cols()
+    }
+
+    /// Parameter count of both factors.
+    pub fn param_count(&self) -> usize {
+        self.l.len() + self.r.len()
+    }
+}
+
+/// Paper default: adapter rank = 10% of the hidden dimension (Apx T).
+pub fn default_rank(d_in: usize, d_out: usize) -> usize {
+    ((d_in.min(d_out) as f64) * 0.1).round().max(1.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_rank_defaults() {
+        assert_eq!(LoraMethod::parse("slim-lora"), Some(LoraMethod::Slim));
+        assert_eq!(LoraMethod::parse("x"), None);
+        assert_eq!(default_rank(256, 512), 26);
+        assert_eq!(default_rank(4, 4), 1);
+    }
+}

@@ -1,0 +1,61 @@
+//! Naive-LoRA: adapters from the plain SVD of the compression error.
+//!
+//! Minimizes `‖W − (W^C + L·R)‖_F` — optimal in the unweighted norm by
+//! Eckart–Young, but blind to which weights matter for the model's outputs
+//! (the paper's motivation for SLiM-LoRA).
+
+use super::Adapters;
+use crate::linalg::randomized_svd;
+use crate::rng::Pcg32;
+use crate::tensor::Matrix;
+
+/// Compute rank-`r` adapters for error `W − W^C`.
+pub fn adapters(w: &Matrix, wc: &Matrix, rank: usize) -> Adapters {
+    let err = w.sub(wc);
+    let mut rng = Pcg32::seeded(0x4e41_49e5);
+    let svd = randomized_svd(&err, rank, 8, 2, &mut rng);
+    let (l, r) = svd.split_balanced();
+    Adapters { l, r }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduces_error() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Matrix::randn(64, 48, 0.1, &mut rng);
+        let wc = w.map(|x| if x.abs() < 0.05 { 0.0 } else { x }); // fake compression
+        let a = adapters(&w, &wc, 8);
+        let before = wc.sub(&w).fro_norm_sq();
+        let after = wc.add(&a.product()).sub(&w).fro_norm_sq();
+        assert!(after < before, "after {after} before {before}");
+    }
+
+    #[test]
+    fn exact_when_error_is_low_rank() {
+        let mut rng = Pcg32::seeded(2);
+        let w = Matrix::randn(40, 30, 0.1, &mut rng);
+        let u = Matrix::randn(40, 3, 0.1, &mut rng);
+        let v = Matrix::randn(3, 30, 0.1, &mut rng);
+        let wc = w.sub(&u.matmul(&v)); // error is exactly rank 3
+        let a = adapters(&w, &wc, 3);
+        let resid = wc.add(&a.product()).rel_err(&w);
+        assert!(resid < 1e-3, "resid {resid}");
+    }
+
+    #[test]
+    fn higher_rank_monotone() {
+        let mut rng = Pcg32::seeded(3);
+        let w = Matrix::randn(64, 64, 0.1, &mut rng);
+        let wc = w.map(|x| (x * 8.0).round() / 8.0); // quantization-ish error
+        let mut prev = f64::INFINITY;
+        for rank in [2usize, 6, 16, 32] {
+            let a = adapters(&w, &wc, rank);
+            let e = wc.add(&a.product()).sub(&w).fro_norm_sq();
+            assert!(e <= prev * 1.02, "rank {rank}: {e} vs {prev}");
+            prev = e;
+        }
+    }
+}

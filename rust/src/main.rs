@@ -1,0 +1,293 @@
+//! `repro` — the SLiM reproduction CLI (L3 entrypoint).
+//!
+//! Commands:
+//!   repro exp <id>|all [--full]      regenerate a paper table/figure
+//!   repro train <model> [--steps N]  pretrain a sim model (cached)
+//!   repro compress <model> [--preset P] [--pattern 2:4|50%] [--bits B]
+//!   repro eval <model> [--preset P] [--pattern ...] [--ft]
+//!   repro serve [--model M] [--addr A] [--compressed]
+//!   repro models                     list the sim family
+//!
+//! Hand-rolled arg parsing (no clap in the vendored crate set).
+
+use anyhow::{anyhow, bail, Result};
+use slim::compress::Preset;
+use slim::data::{Corpus, CorpusSpec};
+use slim::experiments::{self, Ctx};
+use slim::model;
+use slim::runtime::Runtime;
+use slim::server::{api, BatchPolicy, Engine, Router};
+use slim::sparse::SparsityPattern;
+use slim::train;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Flags {
+    positional: Vec<String>,
+    named: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+fn parse_flags(args: &[String]) -> Flags {
+    let mut f = Flags {
+        positional: vec![],
+        named: Default::default(),
+        switches: Default::default(),
+    };
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                f.named.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                f.switches.insert(name.to_string());
+                i += 1;
+            }
+        } else {
+            f.positional.push(a.clone());
+            i += 1;
+        }
+    }
+    f
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "exp" => cmd_exp(&flags),
+        "train" => cmd_train(&flags),
+        "compress" => cmd_compress(&flags),
+        "eval" => cmd_eval(&flags),
+        "serve" => cmd_serve(&flags),
+        "models" => {
+            for c in model::family() {
+                println!(
+                    "{:<16} d={:<4} layers={} heads={} params={} (stands for {})",
+                    c.name,
+                    c.d_model,
+                    c.n_layers,
+                    c.n_heads,
+                    c.param_count(),
+                    c.stands_for
+                );
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other}; try `repro help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — SLiM (ICML 2025) reproduction\n\
+         \n\
+           repro exp <id>|all [--full]     regenerate paper tables/figures\n\
+                                           ids: {}\n\
+           repro train <model> [--steps N]\n\
+           repro compress <model> [--preset slim-lora] [--pattern 2:4] [--bits 4]\n\
+           repro eval <model> [--preset P] [--pattern 2:4] [--ft]\n\
+           repro serve [--model sim-125m] [--addr 127.0.0.1:7433] [--compressed]\n\
+           repro models",
+        experiments::ALL.join(",")
+    );
+}
+
+fn parse_preset(s: &str) -> Result<Preset> {
+    Ok(match s {
+        "dense" => Preset::Dense,
+        "magnitude" => Preset::MagnitudeGroupAbsMax,
+        "sparsegpt" => Preset::SparseGptGroupOptq,
+        "wanda" => Preset::WandaGroupAbsMax,
+        "jsq" => Preset::Jsq,
+        "l2qer" => Preset::L2qer,
+        "naive-lora" => Preset::NaiveLora,
+        "slim-lora" => Preset::SlimLora,
+        "slim-lora-q" => Preset::SlimLoraQ,
+        "slim-lora-o" => Preset::SlimLoraQuantO,
+        "maskllm" => Preset::MaskLlm,
+        other => bail!("unknown preset {other}"),
+    })
+}
+
+fn cmd_exp(flags: &Flags) -> Result<()> {
+    let id = flags
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: repro exp <id>|all"))?;
+    let quick = !flags.switches.contains("full");
+    let ctx = Ctx::new(quick)?;
+    if id == "all" {
+        for exp in experiments::ALL {
+            println!("\n━━━ {exp} ━━━");
+            experiments::run(&ctx, exp)?;
+        }
+    } else {
+        experiments::run(&ctx, id)?;
+    }
+    Ok(())
+}
+
+fn cmd_train(flags: &Flags) -> Result<()> {
+    let name = flags
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: repro train <model>"))?;
+    let steps: usize = flags
+        .named
+        .get("steps")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(400);
+    let cfg = model::by_name(name).ok_or_else(|| anyhow!("unknown model {name}"))?;
+    let rt = Runtime::load(Runtime::default_dir())?;
+    let corpus = Corpus::generate(CorpusSpec::SynthWeb, 120_000);
+    let report = train::pretrain(&rt, &cfg, &corpus, steps, 0x7a11)?;
+    println!(
+        "trained {name} for {steps} steps: loss {:.3} -> {:.3}",
+        report.losses.first().unwrap_or(&0.0),
+        report.losses.last().unwrap_or(&0.0)
+    );
+    let path = train::checkpoint_path(&cfg);
+    report.weights.save(&path)?;
+    println!("saved {}", path.display());
+    Ok(())
+}
+
+fn setup_model(flags: &Flags) -> Result<(Ctx, Arc<experiments::harness::ModelBundle>)> {
+    let name = flags
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("missing <model>"))?;
+    let ctx = Ctx::new(true)?;
+    let bundle = ctx.bundle(name)?;
+    Ok((ctx, bundle))
+}
+
+fn pattern_of(flags: &Flags) -> Result<Option<SparsityPattern>> {
+    match flags.named.get("pattern") {
+        None => Ok(Some(SparsityPattern::TWO_FOUR)),
+        Some(s) if s == "none" => Ok(None),
+        Some(s) => SparsityPattern::parse(s)
+            .map(Some)
+            .ok_or_else(|| anyhow!("bad pattern {s}")),
+    }
+}
+
+fn cmd_compress(flags: &Flags) -> Result<()> {
+    let (ctx, b) = setup_model(flags)?;
+    let preset =
+        parse_preset(flags.named.get("preset").map(|s| s.as_str()).unwrap_or("slim-lora"))?;
+    let pattern = pattern_of(flags)?;
+    let bits: u8 = flags.named.get("bits").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let (cm, secs) = slim::util::timed(|| ctx.compress(&b, preset, pattern, bits));
+    let mut e_q = 0.0;
+    let mut e_s = 0.0;
+    let mut e_f = 0.0;
+    for layer in cm.layers.values() {
+        e_q += layer.e_quant;
+        e_s += layer.e_sparse;
+        e_f += layer.e_final;
+    }
+    println!(
+        "compressed {} with {:?} in {}: layers={} E_Q={:.4} E_S={:.4} E_final={:.4}",
+        b.cfg.name,
+        preset,
+        slim::util::fmt_secs(secs),
+        cm.layers.len(),
+        e_q,
+        e_s,
+        e_f
+    );
+    Ok(())
+}
+
+fn cmd_eval(flags: &Flags) -> Result<()> {
+    let (ctx, b) = setup_model(flags)?;
+    let dense_acc = ctx.acc(&b, None);
+    let dense_ppl = ctx.ppl(&b, None);
+    println!("{} dense: acc {:.2}% ppl {:.2}", b.cfg.name, dense_acc, dense_ppl);
+    if let Some(p) = flags.named.get("preset") {
+        let preset = parse_preset(p)?;
+        let pattern = pattern_of(flags)?;
+        let mut cm = ctx.compress(&b, preset, pattern, 4);
+        if flags.switches.contains("ft") {
+            ctx.finetune(&b, &mut cm, preset == Preset::SlimLoraQ)?;
+        }
+        let acc = ctx.acc(&b, Some(&cm.overrides));
+        let ppl = ctx.ppl(&b, Some(&cm.overrides));
+        println!("{} {:?}: acc {:.2}% ppl {:.2}", b.cfg.name, preset, acc, ppl);
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let name = flags
+        .named
+        .get("model")
+        .map(|s| s.as_str())
+        .unwrap_or("sim-125m");
+    let addr = flags
+        .named
+        .get("addr")
+        .map(|s| s.as_str())
+        .unwrap_or("127.0.0.1:7433");
+    let ctx = Ctx::new(true)?;
+    let b = ctx.bundle(name)?;
+    let overrides = if flags.switches.contains("compressed") {
+        let cm = ctx.compress(&b, Preset::SlimLora, Some(SparsityPattern::TWO_FOUR), 4);
+        println!("serving SLiM-compressed weights (2:4 + 4-bit + adapters)");
+        Some(Arc::new(cm.overrides))
+    } else {
+        None
+    };
+    let weights = Arc::new(b.weights.clone());
+    let engine = Engine::new(name, b.cfg.clone(), weights, overrides);
+    let mut router = Router::new();
+    router.register(engine, BatchPolicy::default());
+    let router = Arc::new(router);
+    println!("listening on {addr} — protocol: one JSON per line");
+    println!(
+        r#"  try: echo '{{"model":"{name}","prompt":[8,2],"max_new":8}}' | nc 127.0.0.1 7433"#
+    );
+    api::serve(router, addr, |bound| println!("bound {bound}"))?;
+    Ok(())
+}
+
+// Quick smoke of CLI plumbing (no artifacts needed).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_parse() {
+        let args: Vec<String> =
+            ["sim-125m", "--steps", "10", "--full"].iter().map(|s| s.to_string()).collect();
+        let f = parse_flags(&args);
+        assert_eq!(f.positional, vec!["sim-125m"]);
+        assert_eq!(f.named.get("steps").unwrap(), "10");
+        assert!(f.switches.contains("full"));
+    }
+
+    #[test]
+    fn preset_names() {
+        assert!(parse_preset("slim-lora").is_ok());
+        assert!(parse_preset("nope").is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Transformer configurations — the "sim" model family.
+//!
+//! The paper evaluates OPT-125M…13B and LLaMA-2-7B/13B. Those checkpoints
+//! are not available here, so we train a scaled-down family from scratch
+//! (see DESIGN.md §2): same architecture skeleton (decoder-only,
+//! pre-LayerNorm, learned positions, tied embeddings), with widths/depths
+//! chosen so the whole family trains on CPU in minutes while preserving the
+//! size ordering the paper's cross-model tables rely on.
+
+/// Architecture + size description of one model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Registry name, e.g. `sim-125m`.
+    pub name: String,
+    /// Hidden width d.
+    pub d_model: usize,
+    /// Number of transformer blocks n.
+    pub n_layers: usize,
+    /// Attention heads (d_model % n_heads == 0).
+    pub n_heads: usize,
+    /// MLP expansion ratio `a` (paper's up/down-projection ratio).
+    pub d_ff_ratio: usize,
+    /// Vocabulary size V.
+    pub vocab: usize,
+    /// Maximum (and training) sequence length.
+    pub max_seq: usize,
+    /// Which paper model this stands in for (for table labels).
+    pub stands_for: String,
+}
+
+impl ModelConfig {
+    /// MLP hidden width.
+    pub fn d_ff(&self) -> usize {
+        self.d_model * self.d_ff_ratio
+    }
+
+    /// Head dimension.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (tied embeddings; LayerNorm and biases
+    /// included).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_block = 4 * d * d            // Wq, Wk, Wv, Wo
+            + 2 * d * self.d_ff()            // fc1, fc2
+            + 4 * d                          // attn/mlp biases folded: ln scales+biases
+            + d + self.d_ff();               // fc biases
+        let embed = self.vocab * d + self.max_seq * d;
+        let final_ln = 2 * d;
+        embed + self.n_layers * per_block + final_ln
+    }
+
+    /// The six compressible linear layers per block, with shapes.
+    /// (name, d_in, d_out)
+    pub fn linear_layers(&self) -> Vec<(String, usize, usize)> {
+        let d = self.d_model;
+        let ff = self.d_ff();
+        let mut out = Vec::new();
+        for b in 0..self.n_layers {
+            for (suffix, din, dout) in [
+                ("attn.wq", d, d),
+                ("attn.wk", d, d),
+                ("attn.wv", d, d),
+                ("attn.wo", d, d),
+                ("mlp.fc1", d, ff),
+                ("mlp.fc2", ff, d),
+            ] {
+                out.push((format!("block{b}.{suffix}"), din, dout));
+            }
+        }
+        out
+    }
+}
+
+/// The full sim family, ordered by size (mirrors OPT-125M…13B +
+/// LLaMA-2-7B/13B in the paper's tables).
+pub fn family() -> Vec<ModelConfig> {
+    let mk = |name: &str, d: usize, l: usize, h: usize, stands_for: &str| ModelConfig {
+        name: name.to_string(),
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        d_ff_ratio: 4,
+        vocab: 512,
+        max_seq: 64,
+        stands_for: stands_for.to_string(),
+    };
+    vec![
+        mk("sim-125m", 64, 2, 2, "OPT-125M"),
+        mk("sim-350m", 96, 3, 3, "OPT-350M"),
+        mk("sim-1.3b", 128, 4, 4, "OPT-1.3B"),
+        mk("sim-2.7b", 160, 4, 4, "OPT-2.7B"),
+        mk("sim-6.7b", 192, 5, 4, "OPT-6.7B"),
+        mk("sim-13b", 224, 6, 4, "OPT-13B"),
+        mk("sim-llama-7b", 208, 5, 4, "LLaMA-2-7B"),
+        mk("sim-llama-13b", 256, 6, 4, "LLaMA-2-13B"),
+    ]
+}
+
+/// Look up a config by name.
+pub fn by_name(name: &str) -> Option<ModelConfig> {
+    family().into_iter().find(|c| c.name == name)
+}
+
+/// The subset used by quick experiment runs (keeps table wall-clock low).
+pub fn quick_family() -> Vec<ModelConfig> {
+    family()
+        .into_iter()
+        .filter(|c| matches!(c.name.as_str(), "sim-125m" | "sim-350m" | "sim-1.3b" | "sim-llama-7b"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_ordered_by_params() {
+        let fam: Vec<ModelConfig> =
+            family().into_iter().filter(|c| c.name.starts_with("sim-1") || c.name.starts_with("sim-3") || c.name.starts_with("sim-2") || c.name.starts_with("sim-6")).collect();
+        for w in fam.windows(2) {
+            assert!(w[0].param_count() < w[1].param_count(), "{} vs {}", w[0].name, w[1].name);
+        }
+    }
+
+    #[test]
+    fn lookup_works() {
+        assert!(by_name("sim-125m").is_some());
+        assert!(by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn heads_divide_width() {
+        for c in family() {
+            assert_eq!(c.d_model % c.n_heads, 0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn linear_layer_inventory() {
+        let c = by_name("sim-125m").unwrap();
+        let layers = c.linear_layers();
+        assert_eq!(layers.len(), 6 * c.n_layers);
+        assert!(layers.iter().any(|(n, _, _)| n == "block0.mlp.fc1"));
+        let (_, din, dout) = layers.iter().find(|(n, _, _)| n == "block1.mlp.fc2").unwrap().clone();
+        assert_eq!((din, dout), (c.d_ff(), c.d_model));
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let c = by_name("sim-125m").unwrap();
+        // embed 512*64 + pos 64*64 + 2 blocks*(4*64²+2*64*256+...) ≈ 150k
+        let p = c.param_count();
+        assert!(p > 100_000 && p < 300_000, "params {p}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Model definitions: the sim transformer family, weight containers,
+//! the native forward pass, and size/FLOP accounting.
+
+pub mod config;
+pub mod size;
+pub mod transformer;
+pub mod weights;
+
+pub use config::{by_name, family, quick_family, ModelConfig};
+pub use transformer::{forward, nll, ActivationTap, Batch, Overrides};
+pub use weights::{init, param_order, Weights};
+
+use crate::compress::{compress_layer, CompressConfig, CompressedLayer, LayerCalib};
+use std::collections::HashMap;
+
+/// A fully compressed model: per-layer compression results + the override
+/// map for evaluation.
+pub struct CompressedModel {
+    pub layers: HashMap<String, CompressedLayer>,
+    pub overrides: Overrides,
+}
+
+/// Compress every linear layer of a model given per-layer calibration taps.
+pub fn compress_model(
+    cfg: &ModelConfig,
+    w: &Weights,
+    taps: &ActivationTap,
+    ccfg: &CompressConfig,
+) -> CompressedModel {
+    let mut layers = HashMap::new();
+    let mut overrides = Overrides::new();
+    for (name, d_in, _d_out) in cfg.linear_layers() {
+        let calib = match taps.get(&name) {
+            Some(x) => LayerCalib::from_activations(x.clone()),
+            None => LayerCalib::uniform(d_in),
+        };
+        let out = compress_layer(w.expect(&name), &calib, ccfg);
+        overrides.insert(name.clone(), out.effective());
+        layers.insert(name, out);
+    }
+    CompressedModel { layers, overrides }
+}
+
+/// JSQ has its own joint loop; compress a model with it.
+pub fn compress_model_jsq(
+    cfg: &ModelConfig,
+    w: &Weights,
+    taps: &ActivationTap,
+    bits: u8,
+    pattern: crate::sparse::SparsityPattern,
+) -> CompressedModel {
+    let mut layers = HashMap::new();
+    let mut overrides = Overrides::new();
+    for (name, d_in, d_out) in cfg.linear_layers() {
+        let calib = match taps.get(&name) {
+            Some(x) => LayerCalib::from_activations(x.clone()),
+            None => LayerCalib::uniform(d_in),
+        };
+        let (wc, mask) = crate::compress::jsq::compress(w.expect(&name), &calib.x_l2, bits, pattern);
+        let e_final = wc.sub(w.expect(&name)).fro_norm_sq();
+        let layer = CompressedLayer {
+            wc: wc.clone(),
+            mask,
+            adapters: None,
+            e_quant: 0.0,
+            e_sparse: 0.0,
+            e_final,
+            bits,
+            scales: vec![],
+            group_size: 0,
+        };
+        overrides.insert(name.clone(), wc);
+        layers.insert(name, layer);
+        let _ = d_out;
+    }
+    CompressedModel { layers, overrides }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::sparse::SparsityPattern;
+
+    #[test]
+    fn compress_model_covers_all_layers() {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let w = init(&cfg, &mut rng);
+        let toks: Vec<u32> = (0..64).map(|_| rng.below(cfg.vocab as u32)).collect();
+        let batch = Batch::new(toks, 2, 32);
+        let mut taps = ActivationTap::new();
+        forward(&cfg, &w, &batch, Some(&mut taps), None);
+        let cm = compress_model(
+            &cfg,
+            &w,
+            &taps,
+            &CompressConfig::slim(SparsityPattern::TWO_FOUR),
+        );
+        assert_eq!(cm.layers.len(), 6 * cfg.n_layers);
+        // Compressed model still produces finite logits.
+        let logits = forward(&cfg, &w, &batch, None, Some(&cm.overrides));
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn jsq_model_compression() {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let w = init(&cfg, &mut rng);
+        let toks: Vec<u32> = (0..64).map(|_| rng.below(cfg.vocab as u32)).collect();
+        let batch = Batch::new(toks, 2, 32);
+        let mut taps = ActivationTap::new();
+        forward(&cfg, &w, &batch, Some(&mut taps), None);
+        let cm = compress_model_jsq(&cfg, &w, &taps, 4, SparsityPattern::TWO_FOUR);
+        for (name, layer) in &cm.layers {
+            assert!(layer.mask.satisfies_nofm(2, 4), "{name}");
+        }
+    }
+}

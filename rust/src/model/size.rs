@@ -1,0 +1,200 @@
+//! Parameter-size, memory-reduction and FLOP-reduction accounting
+//! (paper Apx L Eq. 12, Apx M Eq. 13, and Figure 2's x-axis).
+//!
+//! The paper's closed forms, with `d` = hidden dim, `n` = blocks, `V` =
+//! vocab, `a` = MLP up/down ratio, `r` = adapter rank ratio:
+//!
+//! ```text
+//! mem ratio  = [n(4d² + 2d²a) + dV]
+//!            / [n(4d²/2 + 4·2d²r + 2d²a/2 + 2d(dr + dra)) + dV]   (Eq. 12)
+//! flop ratio = same structure over b-batched matmuls                (Eq. 13)
+//! ```
+//!
+//! We additionally provide exact byte-level accounting for our sim models
+//! (used for the Figure 2 Pareto x-axis), which includes scales, masks and
+//! adapter bit-widths.
+
+use super::config::ModelConfig;
+
+/// Compression scheme descriptor for size accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct SizeSpec {
+    /// Weight bits (4, 2, or 16/32 for none).
+    pub weight_bits: f64,
+    /// Kept fraction after pruning (0.5 for 50%; 1.0 dense).
+    pub density: f64,
+    /// Adapter rank ratio r (0 = no adapters).
+    pub rank_ratio: f64,
+    /// Adapter bits (16 for fp16 adapters, 4 for quantized; ignored if r=0).
+    pub adapter_bits: f64,
+    /// 2:4 metadata overhead (2 bits per kept element) — true for
+    /// semi-structured sparse storage.
+    pub two_four_metadata: bool,
+}
+
+impl SizeSpec {
+    pub fn dense() -> Self {
+        SizeSpec {
+            weight_bits: 16.0,
+            density: 1.0,
+            rank_ratio: 0.0,
+            adapter_bits: 16.0,
+            two_four_metadata: false,
+        }
+    }
+
+    /// The paper's SLiM config: 4-bit, 50% 2:4, r=0.1, fp16 adapters.
+    pub fn slim(quantize_adapters: bool) -> Self {
+        SizeSpec {
+            weight_bits: 4.0,
+            density: 0.5,
+            rank_ratio: 0.1,
+            adapter_bits: if quantize_adapters { 4.0 } else { 16.0 },
+            two_four_metadata: true,
+        }
+    }
+}
+
+/// Paper Eq. 12 — memory ratio (compressed / dense); lower is better.
+///
+/// The paper's equation assumes 4-bit weights (the /2 terms are vs fp16…
+/// actually 2× from sparsity and implicit 4× from bits folded as in the
+/// paper's table); we parameterize it faithfully: each linear's cost is
+/// `bits/16 × density` of its dense fp16 cost, adapters cost
+/// `2·d·(dr + dra)`-style terms at their own bits.
+pub fn memory_ratio_eq12(cfg: &ModelConfig, spec: &SizeSpec) -> f64 {
+    let d = cfg.d_model as f64;
+    let n = cfg.n_layers as f64;
+    let v = cfg.vocab as f64;
+    let a = cfg.d_ff_ratio as f64;
+    let r = spec.rank_ratio;
+
+    // Dense numerator: attention 4d² + MLP 2d²a per block, plus embeddings.
+    let dense = n * (4.0 * d * d + 2.0 * d * d * a) + d * v;
+
+    // Compressed weights: bits/16 × density of each linear.
+    let wfrac = spec.weight_bits / 16.0 * spec.density
+        + if spec.two_four_metadata { 2.0 / 16.0 * spec.density } else { 0.0 };
+    let base = n * (4.0 * d * d + 2.0 * d * d * a) * wfrac;
+    // Adapters: attention side 4 matrices of 2·d·(dr); MLP side L∈d×(dr·?),
+    // following Eq. 12's 2d(dr + dra) per block times adapter bits.
+    let afrac = spec.adapter_bits / 16.0;
+    let adapters = if r > 0.0 {
+        n * (4.0 * 2.0 * d * d * r + 2.0 * d * (d * r + d * r * a)) * afrac
+    } else {
+        0.0
+    };
+    let compressed = base + adapters + d * v; // embeddings stay fp16
+    compressed / dense
+}
+
+/// Paper Eq. 13 — FLOP ratio (dense / compressed); higher is better.
+/// Quantization does not reduce FLOPs (computation stays floating point,
+/// per Apx M); sparsity halves the matmul FLOPs; adapters add theirs.
+pub fn flop_reduction_eq13(cfg: &ModelConfig, spec: &SizeSpec) -> f64 {
+    let d = cfg.d_model as f64;
+    let n = cfg.n_layers as f64;
+    let v = cfg.vocab as f64;
+    let a = cfg.d_ff_ratio as f64;
+    let r = spec.rank_ratio;
+
+    let dense = n * (4.0 * d * d + 2.0 * d * d * a) + d * v;
+    let base = n * (4.0 * d * d + 2.0 * d * d * a) * spec.density;
+    let adapters = if r > 0.0 {
+        n * (4.0 * 2.0 * d * d * r + 2.0 * (d * d * r + d * d * r * a))
+    } else {
+        0.0
+    };
+    let compressed = base + adapters + d * v;
+    dense / compressed
+}
+
+/// Exact storage bytes of a compressed sim model (Figure 2 x-axis).
+pub fn model_bytes(cfg: &ModelConfig, spec: &SizeSpec) -> u64 {
+    let mut bits = 0.0f64;
+    // Embeddings (+positions) stay fp16.
+    bits += ((cfg.vocab + cfg.max_seq) * cfg.d_model) as f64 * 16.0;
+    for (_, d_in, d_out) in cfg.linear_layers() {
+        let numel = (d_in * d_out) as f64;
+        bits += numel * spec.density * spec.weight_bits;
+        if spec.two_four_metadata {
+            bits += numel * spec.density * 2.0; // 2-bit index per kept elem
+        }
+        // group scales: one fp16 per 128 elements when quantized
+        if spec.weight_bits < 16.0 {
+            bits += numel / 128.0 * 16.0;
+        }
+        if spec.rank_ratio > 0.0 {
+            let rank = (d_in.min(d_out) as f64 * spec.rank_ratio).round();
+            bits += (d_in as f64 + d_out as f64) * rank * spec.adapter_bits;
+        }
+    }
+    // LN params fp16.
+    bits += (cfg.n_layers * 4 * cfg.d_model + 2 * cfg.d_model) as f64 * 16.0;
+    (bits / 8.0).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::by_name;
+
+    #[test]
+    fn eq12_matches_paper_ballpark() {
+        // Paper Table 19: SLiM-LoRA + SLiM-Quant ≈ 0.29–0.31 for large
+        // models; SLiM-LoRA^Q ≈ 0.18–0.19; Wanda+AbsMax ≈ 0.14–0.15.
+        let cfg = by_name("sim-llama-7b").unwrap();
+        let slim = memory_ratio_eq12(&cfg, &SizeSpec::slim(false));
+        let slim_q = memory_ratio_eq12(&cfg, &SizeSpec::slim(true));
+        let wanda = memory_ratio_eq12(
+            &cfg,
+            &SizeSpec { rank_ratio: 0.0, ..SizeSpec::slim(false) },
+        );
+        assert!((0.2..0.45).contains(&slim), "slim {slim}");
+        assert!((0.1..0.3).contains(&slim_q), "slim_q {slim_q}");
+        assert!(wanda < slim_q, "wanda {wanda} must be smallest");
+        assert!(slim_q < slim);
+    }
+
+    #[test]
+    fn eq13_flop_ordering() {
+        // Paper Table 20: pruned-only ≈ 1.95×, with adapters ≈ 1.49×.
+        let cfg = by_name("sim-llama-7b").unwrap();
+        let no_adapter =
+            flop_reduction_eq13(&cfg, &SizeSpec { rank_ratio: 0.0, ..SizeSpec::slim(false) });
+        let with_adapter = flop_reduction_eq13(&cfg, &SizeSpec::slim(false));
+        assert!(no_adapter > with_adapter);
+        assert!(no_adapter > 1.4 && no_adapter < 2.05, "{no_adapter}");
+        assert!(with_adapter > 1.1, "{with_adapter}");
+    }
+
+    #[test]
+    fn dense_ratios_are_identity() {
+        let cfg = by_name("sim-125m").unwrap();
+        let m = memory_ratio_eq12(&cfg, &SizeSpec::dense());
+        let f = flop_reduction_eq13(&cfg, &SizeSpec::dense());
+        assert!((m - 1.0).abs() < 1e-9);
+        assert!((f - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bytes_shrink_with_compression() {
+        let cfg = by_name("sim-1.3b").unwrap();
+        let dense = model_bytes(&cfg, &SizeSpec::dense());
+        let slim = model_bytes(&cfg, &SizeSpec::slim(false));
+        let slim_q = model_bytes(&cfg, &SizeSpec::slim(true));
+        assert!(slim < dense);
+        assert!(slim_q < slim);
+    }
+
+    #[test]
+    fn smaller_models_less_reduction() {
+        // Embeddings dominate small models → less relative reduction,
+        // exactly the trend in paper Table 19 (0.50 at 125M → 0.30 at 13B).
+        let small = by_name("sim-125m").unwrap();
+        let large = by_name("sim-13b").unwrap();
+        let rs = memory_ratio_eq12(&small, &SizeSpec::slim(false));
+        let rl = memory_ratio_eq12(&large, &SizeSpec::slim(false));
+        assert!(rs > rl, "small {rs} vs large {rl}");
+    }
+}

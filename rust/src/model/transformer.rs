@@ -1,0 +1,364 @@
+//! Native Rust transformer forward pass.
+//!
+//! A decoder-only pre-LN transformer matching `python/compile/model.py`
+//! op-for-op (LN ε, tanh-GELU, causal softmax, tied embeddings), so the AOT
+//! path can be validated against this one. Used for:
+//!
+//! * calibration — capturing the input activations of every linear layer,
+//! * evaluation fallbacks and tests,
+//! * the compressed-model accuracy path (effective weights substituted).
+
+use std::collections::HashMap;
+
+use super::config::ModelConfig;
+use super::weights::Weights;
+use crate::tensor::{matmul_a_bt, Matrix};
+
+/// LayerNorm epsilon (matches jax default in model.py).
+pub const LN_EPS: f32 = 1e-5;
+
+/// tanh-approximated GELU (jax.nn.gelu default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Row-wise LayerNorm with gain/bias (1 × d each).
+pub fn layernorm(x: &Matrix, g: &Matrix, b: &Matrix) -> Matrix {
+    let (rows, d) = x.shape();
+    assert_eq!(g.cols(), d);
+    let mut out = Matrix::zeros(rows, d);
+    for i in 0..rows {
+        let row = x.row(i);
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..d {
+            orow[j] = (row[j] - mean) * inv * g.get(0, j) + b.get(0, j);
+        }
+    }
+    out
+}
+
+/// In-place numerically-stable softmax over a slice.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let max = xs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut sum = 0.0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum.max(1e-30);
+    for v in xs.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Token batch: `tokens[b][s]`, all rows of length `seq`.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<u32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    pub fn new(tokens: Vec<u32>, batch: usize, seq: usize) -> Self {
+        assert_eq!(tokens.len(), batch * seq);
+        Batch { tokens, batch, seq }
+    }
+
+    #[inline]
+    pub fn tok(&self, b: usize, s: usize) -> u32 {
+        self.tokens[b * self.seq + s]
+    }
+}
+
+/// Optional hook to capture the inputs to each linear layer (for
+/// calibration). Keyed by layer name (`block0.attn.wq`, …); values are the
+/// activation matrices fed to that weight.
+pub type ActivationTap = HashMap<String, Matrix>;
+
+/// Weight-override map: layer name → effective weight (used to evaluate
+/// compressed models without materializing a full `Weights` clone).
+pub type Overrides = HashMap<String, Matrix>;
+
+/// Forward pass producing logits `[(batch·seq) × vocab]`.
+///
+/// * `taps` — if `Some`, records the input activations of every linear.
+/// * `overrides` — replaces named linear weights (compressed eval).
+pub fn forward(
+    cfg: &ModelConfig,
+    w: &Weights,
+    batch: &Batch,
+    taps: Option<&mut ActivationTap>,
+    overrides: Option<&Overrides>,
+) -> Matrix {
+    forward_iq(cfg, w, batch, taps, overrides, crate::quant::fp8::InputQuant::None)
+}
+
+/// [`forward`] with activation (input) quantization applied to the inputs
+/// of every linear layer — the paper's Apx B evaluation mode.
+pub fn forward_iq(
+    cfg: &ModelConfig,
+    w: &Weights,
+    batch: &Batch,
+    mut taps: Option<&mut ActivationTap>,
+    overrides: Option<&Overrides>,
+    iq: crate::quant::fp8::InputQuant,
+) -> Matrix {
+    use crate::quant::fp8::quantize_input;
+    let d = cfg.d_model;
+    let n = batch.batch * batch.seq;
+    assert!(batch.seq <= cfg.max_seq, "seq {} > max {}", batch.seq, cfg.max_seq);
+    let pick = |name: &str| -> &Matrix {
+        if let Some(ov) = overrides {
+            if let Some(m) = ov.get(name) {
+                return m;
+            }
+        }
+        w.expect(name)
+    };
+
+    // Embedding lookup + learned positions.
+    let tok_emb = w.expect("embed.tok");
+    let pos_emb = w.expect("embed.pos");
+    let mut x = Matrix::zeros(n, d);
+    for b in 0..batch.batch {
+        for s in 0..batch.seq {
+            let t = batch.tok(b, s) as usize;
+            assert!(t < cfg.vocab, "token {t} out of vocab");
+            let row = x.row_mut(b * batch.seq + s);
+            for j in 0..d {
+                row[j] = tok_emb.get(t, j) + pos_emb.get(s, j);
+            }
+        }
+    }
+
+    let scale = 1.0 / (cfg.d_head() as f32).sqrt();
+    for blk in 0..cfg.n_layers {
+        let p = |s: &str| format!("block{blk}.{s}");
+        // ── Attention ────────────────────────────────────────────────
+        let h = layernorm(&x, w.expect(&p("ln1.g")), w.expect(&p("ln1.b")));
+        if let Some(t) = taps.as_deref_mut() {
+            t.insert(p("attn.wq"), h.clone());
+            t.insert(p("attn.wk"), h.clone());
+            t.insert(p("attn.wv"), h.clone());
+        }
+        let hq = quantize_input(&h, iq);
+        let q = hq.matmul(pick(&p("attn.wq")));
+        let k = hq.matmul(pick(&p("attn.wk")));
+        let v = hq.matmul(pick(&p("attn.wv")));
+        let mut ctx = Matrix::zeros(n, d);
+        let dh = cfg.d_head();
+        for b in 0..batch.batch {
+            let base = b * batch.seq;
+            for head in 0..cfg.n_heads {
+                let c0 = head * dh;
+                for s in 0..batch.seq {
+                    // Causal scores over positions 0..=s.
+                    let qrow = &q.row(base + s)[c0..c0 + dh];
+                    let mut scores = vec![0.0f32; s + 1];
+                    for (t, sc) in scores.iter_mut().enumerate() {
+                        let krow = &k.row(base + t)[c0..c0 + dh];
+                        let mut dot = 0.0f32;
+                        for (a, b2) in qrow.iter().zip(krow.iter()) {
+                            dot += a * b2;
+                        }
+                        *sc = dot * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    let crow = ctx.row_mut(base + s);
+                    for (t, &pr) in scores.iter().enumerate() {
+                        let vrow = &v.row(base + t)[c0..c0 + dh];
+                        for j in 0..dh {
+                            crow[c0 + j] += pr * vrow[j];
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(t) = taps.as_deref_mut() {
+            t.insert(p("attn.wo"), ctx.clone());
+        }
+        let attn_out = quantize_input(&ctx, iq).matmul(pick(&p("attn.wo")));
+        x = x.add(&attn_out);
+
+        // ── MLP ──────────────────────────────────────────────────────
+        let h2 = layernorm(&x, w.expect(&p("ln2.g")), w.expect(&p("ln2.b")));
+        if let Some(t) = taps.as_deref_mut() {
+            t.insert(p("mlp.fc1"), h2.clone());
+        }
+        let mut u = quantize_input(&h2, iq).matmul(pick(&p("mlp.fc1")));
+        let b1 = w.expect(&p("mlp.fc1_b"));
+        for i in 0..n {
+            let row = u.row_mut(i);
+            for (j, v2) in row.iter_mut().enumerate() {
+                *v2 = gelu(*v2 + b1.get(0, j));
+            }
+        }
+        if let Some(t) = taps.as_deref_mut() {
+            t.insert(p("mlp.fc2"), u.clone());
+        }
+        let mut mlp_out = quantize_input(&u, iq).matmul(pick(&p("mlp.fc2")));
+        let b2 = w.expect(&p("mlp.fc2_b"));
+        for i in 0..n {
+            let row = mlp_out.row_mut(i);
+            for (j, v2) in row.iter_mut().enumerate() {
+                *v2 += b2.get(0, j);
+            }
+        }
+        x = x.add(&mlp_out);
+    }
+
+    // Final LN + tied-embedding logits.
+    let xf = layernorm(&x, w.expect("final_ln.g"), w.expect("final_ln.b"));
+    matmul_a_bt(&xf, tok_emb)
+}
+
+/// Mean next-token negative log-likelihood over the batch (positions
+/// 0..seq-1 predict 1..seq).
+pub fn nll(cfg: &ModelConfig, logits: &Matrix, batch: &Batch) -> f64 {
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for b in 0..batch.batch {
+        for s in 0..batch.seq - 1 {
+            let row = logits.row(b * batch.seq + s);
+            let target = batch.tok(b, s + 1) as usize;
+            // log-softmax at the target index.
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let lse: f32 = row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+            total += (lse - row[target]) as f64;
+            count += 1;
+        }
+    }
+    let _ = cfg;
+    total / count.max(1) as f64
+}
+
+/// Sum of log-probabilities the model assigns to `continuation` given
+/// `prefix` (for the zero-shot likelihood-ranking tasks).
+pub fn continuation_logprob(
+    cfg: &ModelConfig,
+    w: &Weights,
+    prefix: &[u32],
+    continuation: &[u32],
+    overrides: Option<&Overrides>,
+) -> f64 {
+    let mut toks = prefix.to_vec();
+    toks.extend_from_slice(continuation);
+    let seq = toks.len().min(cfg.max_seq);
+    let toks = &toks[toks.len() - seq..];
+    let batch = Batch::new(toks.to_vec(), 1, seq);
+    let logits = forward(cfg, w, &batch, None, overrides);
+    let start = seq - continuation.len().min(seq);
+    let mut lp = 0.0f64;
+    for s in start..seq {
+        if s == 0 {
+            continue;
+        }
+        let row = logits.row(s - 1);
+        let target = toks[s] as usize;
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let lse: f32 = row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+        lp += (row[target] - lse) as f64;
+    }
+    lp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::by_name;
+    use crate::model::weights::init;
+    use crate::rng::Pcg32;
+
+    fn setup() -> (ModelConfig, Weights, Batch) {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let w = init(&cfg, &mut rng);
+        let toks: Vec<u32> = (0..2 * 16).map(|_| rng.below(cfg.vocab as u32)).collect();
+        (cfg.clone(), w, Batch::new(toks, 2, 16))
+    }
+
+    #[test]
+    fn logits_shape_and_finiteness() {
+        let (cfg, w, batch) = setup();
+        let logits = forward(&cfg, &w, &batch, None, None);
+        assert_eq!(logits.shape(), (32, cfg.vocab));
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn untrained_nll_near_uniform() {
+        let (cfg, w, batch) = setup();
+        let logits = forward(&cfg, &w, &batch, None, None);
+        let loss = nll(&cfg, &logits, &batch);
+        let uniform = (cfg.vocab as f64).ln();
+        assert!((loss - uniform).abs() < 0.5, "loss {loss} vs uniform {uniform}");
+    }
+
+    #[test]
+    fn taps_capture_all_linear_inputs() {
+        let (cfg, w, batch) = setup();
+        let mut taps = ActivationTap::new();
+        forward(&cfg, &w, &batch, Some(&mut taps), None);
+        for (name, d_in, _) in cfg.linear_layers() {
+            let x = taps.get(&name).unwrap_or_else(|| panic!("missing tap {name}"));
+            assert_eq!(x.cols(), d_in, "{name}");
+            assert_eq!(x.rows(), 32);
+        }
+    }
+
+    #[test]
+    fn overrides_change_output() {
+        let (cfg, w, batch) = setup();
+        let base = forward(&cfg, &w, &batch, None, None);
+        let mut ov = Overrides::new();
+        ov.insert("block0.mlp.fc1".into(), Matrix::zeros(cfg.d_model, cfg.d_ff()));
+        let changed = forward(&cfg, &w, &batch, None, Some(&ov));
+        assert!(changed.rel_err(&base) > 1e-4);
+    }
+
+    #[test]
+    fn causality() {
+        // Changing a future token must not affect earlier logits.
+        let (cfg, w, batch) = setup();
+        let logits = forward(&cfg, &w, &batch, None, None);
+        let mut toks2 = batch.tokens.clone();
+        toks2[15] = (toks2[15] + 1) % cfg.vocab as u32; // last pos of sample 0
+        let batch2 = Batch::new(toks2, 2, 16);
+        let logits2 = forward(&cfg, &w, &batch2, None, None);
+        for s in 0..14 {
+            let a = logits.row(s);
+            let b = logits2.row(s);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!((x - y).abs() < 1e-5, "pos {s} leaked");
+            }
+        }
+    }
+
+    #[test]
+    fn continuation_logprob_is_negative_and_finite() {
+        let (cfg, w, _) = setup();
+        let lp = continuation_logprob(&cfg, &w, &[1, 2, 3], &[4, 5], None);
+        assert!(lp.is_finite() && lp < 0.0);
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0f32, 2.0, 3.0, 1e4];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(xs[3] > 0.99);
+    }
+}

@@ -1,0 +1,232 @@
+//! Named weight containers + binary checkpoint IO.
+//!
+//! Checkpoints use a tiny self-describing format (`SLIMW001`): tensor count,
+//! then per tensor `name | rows | cols | f32 LE data`. Both the Rust trainer
+//! and the examples read/write it; Python never needs weights (shapes are
+//! static at AOT time), so no interop format is required.
+
+use crate::rng::Pcg32;
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::config::ModelConfig;
+
+const MAGIC: &[u8; 8] = b"SLIMW001";
+
+/// Ordered, named tensor collection.
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    tensors: Vec<(String, Matrix)>,
+    index: HashMap<String, usize>,
+}
+
+impl Weights {
+    pub fn new() -> Self {
+        Weights::default()
+    }
+
+    /// Insert (or replace) a tensor.
+    pub fn set(&mut self, name: &str, m: Matrix) {
+        if let Some(&i) = self.index.get(name) {
+            self.tensors[i].1 = m;
+        } else {
+            self.index.insert(name.to_string(), self.tensors.len());
+            self.tensors.push((name.to_string(), m));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Matrix> {
+        self.index.get(name).map(|&i| &self.tensors[i].1)
+    }
+
+    /// Like `get` but panics with the tensor name on miss (model code path).
+    pub fn expect(&self, name: &str) -> &Matrix {
+        self.get(name).unwrap_or_else(|| panic!("missing tensor {name}"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.iter().map(|(n, _)| n.as_str())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Matrix)> {
+        self.tensors.iter().map(|(n, m)| (n.as_str(), m))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total f32 parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|(_, m)| m.len()).sum()
+    }
+
+    /// Save to disk.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, m) in &self.tensors {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(m.rows() as u32).to_le_bytes())?;
+            f.write_all(&(m.cols() as u32).to_le_bytes())?;
+            for &v in m.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from disk.
+    pub fn load(path: &Path) -> Result<Weights> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a SLIMW001 checkpoint", path.display());
+        }
+        let mut buf4 = [0u8; 4];
+        f.read_exact(&mut buf4)?;
+        let count = u32::from_le_bytes(buf4) as usize;
+        let mut out = Weights::new();
+        for _ in 0..count {
+            let mut buf2 = [0u8; 2];
+            f.read_exact(&mut buf2)?;
+            let nlen = u16::from_le_bytes(buf2) as usize;
+            let mut nb = vec![0u8; nlen];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            f.read_exact(&mut buf4)?;
+            let rows = u32::from_le_bytes(buf4) as usize;
+            f.read_exact(&mut buf4)?;
+            let cols = u32::from_le_bytes(buf4) as usize;
+            let mut data = vec![0f32; rows * cols];
+            let mut raw = vec![0u8; rows * cols * 4];
+            f.read_exact(&mut raw)?;
+            for (i, chunk) in raw.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            out.set(&name, Matrix::from_vec(rows, cols, data));
+        }
+        Ok(out)
+    }
+}
+
+/// Random initialization of the full parameter set for a config
+/// (truncated-normal-ish scaled init, LN at identity).
+pub fn init(cfg: &ModelConfig, rng: &mut Pcg32) -> Weights {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff();
+    let std = 0.02f32;
+    let proj_std = std / (2.0 * cfg.n_layers as f32).sqrt();
+    let mut w = Weights::new();
+    w.set("embed.tok", Matrix::randn(cfg.vocab, d, std, rng));
+    w.set("embed.pos", Matrix::randn(cfg.max_seq, d, std, rng));
+    for b in 0..cfg.n_layers {
+        let p = |s: &str| format!("block{b}.{s}");
+        w.set(&p("ln1.g"), Matrix::from_fn(1, d, |_, _| 1.0));
+        w.set(&p("ln1.b"), Matrix::zeros(1, d));
+        w.set(&p("attn.wq"), Matrix::randn(d, d, std, rng));
+        w.set(&p("attn.wk"), Matrix::randn(d, d, std, rng));
+        w.set(&p("attn.wv"), Matrix::randn(d, d, std, rng));
+        w.set(&p("attn.wo"), Matrix::randn(d, d, proj_std, rng));
+        w.set(&p("ln2.g"), Matrix::from_fn(1, d, |_, _| 1.0));
+        w.set(&p("ln2.b"), Matrix::zeros(1, d));
+        w.set(&p("mlp.fc1"), Matrix::randn(d, ff, std, rng));
+        w.set(&p("mlp.fc1_b"), Matrix::zeros(1, ff));
+        w.set(&p("mlp.fc2"), Matrix::randn(ff, d, proj_std, rng));
+        w.set(&p("mlp.fc2_b"), Matrix::zeros(1, d));
+    }
+    w.set("final_ln.g", Matrix::from_fn(1, d, |_, _| 1.0));
+    w.set("final_ln.b", Matrix::zeros(1, d));
+    w
+}
+
+/// The canonical tensor ordering used by the AOT artifacts: the python side
+/// declares the same order in `model.py::param_order`, so Rust can marshal
+/// `Weights` → positional HLO arguments.
+pub fn param_order(cfg: &ModelConfig) -> Vec<String> {
+    let mut names = vec!["embed.tok".to_string(), "embed.pos".to_string()];
+    for b in 0..cfg.n_layers {
+        for s in [
+            "ln1.g", "ln1.b", "attn.wq", "attn.wk", "attn.wv", "attn.wo", "ln2.g", "ln2.b",
+            "mlp.fc1", "mlp.fc1_b", "mlp.fc2", "mlp.fc2_b",
+        ] {
+            names.push(format!("block{b}.{s}"));
+        }
+    }
+    names.push("final_ln.g".to_string());
+    names.push("final_ln.b".to_string());
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::by_name;
+
+    #[test]
+    fn init_has_all_ordered_params() {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let w = init(&cfg, &mut rng);
+        for name in param_order(&cfg) {
+            assert!(w.get(&name).is_some(), "missing {name}");
+        }
+        assert_eq!(w.len(), param_order(&cfg).len());
+    }
+
+    #[test]
+    fn param_count_matches_config() {
+        let cfg = by_name("sim-350m").unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let w = init(&cfg, &mut rng);
+        assert_eq!(w.param_count(), cfg.param_count());
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let w = init(&cfg, &mut rng);
+        let path = std::env::temp_dir().join("slim_test_ckpt.bin");
+        w.save(&path).unwrap();
+        let loaded = Weights::load(&path).unwrap();
+        assert_eq!(loaded.len(), w.len());
+        for (name, m) in w.iter() {
+            assert_eq!(loaded.expect(name), m, "{name}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let path = std::env::temp_dir().join("slim_bad_magic.bin");
+        std::fs::write(&path, b"NOTSLIMW....").unwrap();
+        assert!(Weights::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn set_replaces() {
+        let mut w = Weights::new();
+        w.set("a", Matrix::zeros(2, 2));
+        w.set("a", Matrix::eye(3));
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.expect("a").shape(), (3, 3));
+    }
+}

@@ -1,0 +1,183 @@
+//! GPU roofline model → paper-style speedup projections (Fig. 3, Fig. 4).
+//!
+//! The environment has no NVIDIA GPUs, so per DESIGN.md §2 we project the
+//! paper's layer-wise speedups with a two-resource roofline: a matmul of
+//! `m×k×n` on weights stored at `bits_w` bits with density `ρ` takes
+//!
+//! ```text
+//!   t = max( flops / peak_flops , bytes / mem_bw )
+//!   flops = 2·m·k·n·ρ  (sparse tensor cores skip zeros)
+//!   bytes = k·n·(ρ·bits_w + meta)/8 + activations
+//! ```
+//!
+//! In the decode regime (m ≤ 32) every LLM linear is memory-bound, so the
+//! projected speedup ≈ weight-traffic ratio — the same mechanism the Rust
+//! CPU kernels *measure*. Fig. 3/4 report both, and the crossovers (bigger
+//! layers → bigger speedup; quantization contributes ~¾ of it, sparsity the
+//! rest) match the paper's bars.
+
+use crate::util::table::fnum;
+
+/// A GPU spec for the roofline.
+#[derive(Clone, Copy, Debug)]
+pub struct Gpu {
+    pub name: &'static str,
+    /// Dense fp16 tensor-core peak, TFLOP/s.
+    pub peak_tflops: f64,
+    /// 2:4 sparse tensor-core peak (2× dense on Ampere).
+    pub sparse_tflops: f64,
+    /// Memory bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+}
+
+/// NVIDIA RTX 3060 (Fig. 3's device).
+pub const RTX3060: Gpu = Gpu {
+    name: "RTX 3060",
+    peak_tflops: 51.2,
+    sparse_tflops: 102.4,
+    mem_bw_gbs: 360.0,
+};
+
+/// NVIDIA A100-40GB (Fig. 4's device).
+pub const A100: Gpu = Gpu {
+    name: "A100-40GB",
+    peak_tflops: 312.0,
+    sparse_tflops: 624.0,
+    mem_bw_gbs: 1555.0,
+};
+
+/// Weight storage scheme for the projection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scheme {
+    pub bits_w: f64,
+    /// Kept fraction (1.0 dense, 0.5 for 2:4).
+    pub density: f64,
+    /// Metadata bits per (original) element (2:4 → 2 bits per kept = 1.0
+    /// per original element).
+    pub meta_bits: f64,
+    /// Whether sparse tensor cores apply.
+    pub sparse_cores: bool,
+}
+
+impl Scheme {
+    pub const DENSE_FP16: Scheme =
+        Scheme { bits_w: 16.0, density: 1.0, meta_bits: 0.0, sparse_cores: false };
+    pub const INT4: Scheme =
+        Scheme { bits_w: 4.0, density: 1.0, meta_bits: 0.0, sparse_cores: false };
+    pub const INT4_24: Scheme =
+        Scheme { bits_w: 4.0, density: 0.5, meta_bits: 1.0, sparse_cores: true };
+}
+
+/// Projected execution time (seconds) of an `m×k×n` linear.
+pub fn layer_time(gpu: &Gpu, scheme: &Scheme, m: usize, k: usize, n: usize) -> f64 {
+    let (m, k, n) = (m as f64, k as f64, n as f64);
+    let flops = 2.0 * m * k * n * scheme.density;
+    let peak = if scheme.sparse_cores { gpu.sparse_tflops } else { gpu.peak_tflops } * 1e12;
+    let weight_bytes = k * n * (scheme.density * scheme.bits_w + scheme.meta_bits) / 8.0;
+    let act_bytes = (m * k + m * n) * 2.0; // fp16 activations
+    let t_compute = flops / peak;
+    let t_memory = (weight_bytes + act_bytes) / (gpu.mem_bw_gbs * 1e9);
+    t_compute.max(t_memory)
+}
+
+/// Projected speedup of a compressed scheme vs dense fp16.
+pub fn layer_speedup(gpu: &Gpu, scheme: &Scheme, m: usize, k: usize, n: usize) -> f64 {
+    layer_time(gpu, &Scheme::DENSE_FP16, m, k, n) / layer_time(gpu, scheme, m, k, n)
+}
+
+/// The LLaMA-2 layer shapes the paper's Fig. 3/4 sweep (k = d_in, n = d_out).
+pub fn llama2_layers(model: &str) -> Vec<(String, usize, usize)> {
+    let (d, ff) = match model {
+        "llama-2-7b" => (4096, 11008),
+        "llama-2-13b" => (5120, 13824),
+        "llama-2-70b" => (8192, 28672),
+        "llama-3.1-405b" => (16384, 53248),
+        _ => panic!("unknown model {model}"),
+    };
+    vec![
+        ("qkv-proj".to_string(), d, 3 * d),
+        ("o-proj".to_string(), d, d),
+        ("up-proj".to_string(), d, ff),
+        ("down-proj".to_string(), ff, d),
+    ]
+}
+
+/// One Fig. 3/4 bar: layer name, quant-only speedup (bright), total
+/// quant+sparse speedup (dark).
+#[derive(Debug, Clone)]
+pub struct SpeedupBar {
+    pub layer: String,
+    pub quant_only: f64,
+    pub total: f64,
+}
+
+/// Compute all bars for a model at decode batch `m`.
+pub fn speedup_bars(gpu: &Gpu, model: &str, m: usize) -> Vec<SpeedupBar> {
+    llama2_layers(model)
+        .into_iter()
+        .map(|(layer, k, n)| SpeedupBar {
+            layer,
+            quant_only: layer_speedup(gpu, &Scheme::INT4, m, k, n),
+            total: layer_speedup(gpu, &Scheme::INT4_24, m, k, n),
+        })
+        .collect()
+}
+
+/// Render a bar as text (for the experiment drivers).
+pub fn render_bar(b: &SpeedupBar) -> String {
+    format!(
+        "{:<10} quant {}x + sparsity -> total {}x",
+        b.layer,
+        fnum(b.quant_only, 2),
+        fnum(b.total, 2)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_is_memory_bound() {
+        // At m=8 the dense time must equal the memory term.
+        let t = layer_time(&A100, &Scheme::DENSE_FP16, 8, 4096, 4096);
+        let bytes = 4096.0 * 4096.0 * 2.0 + (8.0 * 4096.0 * 2.0) * 2.0;
+        assert!((t - bytes / (A100.mem_bw_gbs * 1e9)).abs() / t < 1e-9);
+    }
+
+    #[test]
+    fn speedups_in_paper_range() {
+        // Paper: up to 4.3× (RTX3060) and 3.8× (A100) layer-wise.
+        for gpu in [&RTX3060, &A100] {
+            for model in ["llama-2-7b", "llama-2-13b"] {
+                for b in speedup_bars(gpu, model, 8) {
+                    assert!(b.total > 2.0 && b.total < 6.0, "{} {:?}", gpu.name, b);
+                    assert!(b.quant_only > 1.5 && b.quant_only < b.total);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_layers_bigger_speedup() {
+        // The paper's observed trend: feed-forward (larger) layers win more.
+        let bars = speedup_bars(&RTX3060, "llama-2-7b", 8);
+        let o_proj = bars.iter().find(|b| b.layer == "o-proj").unwrap().total;
+        let up_proj = bars.iter().find(|b| b.layer == "up-proj").unwrap().total;
+        assert!(up_proj >= o_proj * 0.99, "up {up_proj} vs o {o_proj}");
+    }
+
+    #[test]
+    fn large_batch_becomes_compute_bound() {
+        // At m=4096 the int4 advantage should shrink (compute-bound).
+        let small = layer_speedup(&A100, &Scheme::INT4, 8, 4096, 4096);
+        let large = layer_speedup(&A100, &Scheme::INT4, 4096, 4096, 4096);
+        assert!(large < small, "large-batch speedup {large} < decode {small}");
+        assert!(large < 1.5);
+    }
+
+    #[test]
+    fn known_shapes() {
+        assert_eq!(llama2_layers("llama-2-7b").len(), 4);
+    }
+}

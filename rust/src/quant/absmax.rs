@@ -1,0 +1,81 @@
+//! Per-tensor AbsMax symmetric quantization (round-to-nearest).
+//!
+//! The simplest baseline: α = max|W|. Highly outlier-sensitive — a single
+//! large weight inflates α and collapses the bulk of the distribution onto
+//! few levels, which is exactly the failure mode SLiM-Quant fixes.
+
+use super::{fake_quant_value, quant_code, Quantized};
+use crate::tensor::Matrix;
+
+/// AbsMax-quantize the whole tensor with one scale.
+pub fn quantize(w: &Matrix, bits: u8) -> Quantized {
+    let alpha = w.max_abs();
+    quantize_with_alpha(w, bits, alpha)
+}
+
+/// Symmetric per-tensor quantization at a caller-chosen scale (shared by
+/// SLiM-Quant, which only differs in how α is picked).
+pub fn quantize_with_alpha(w: &Matrix, bits: u8, alpha: f32) -> Quantized {
+    let wq = w.map(|x| fake_quant_value(x, alpha, bits));
+    let codes = w.data().iter().map(|&x| quant_code(x, alpha, bits)).collect();
+    Quantized { wq, codes, scales: vec![alpha], group_size: 0, bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn preserves_shape_and_range() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Matrix::randn(32, 48, 0.1, &mut rng);
+        let q = quantize(&w, 4);
+        assert_eq!(q.wq.shape(), w.shape());
+        let alpha = q.scales[0];
+        assert!(q.wq.max_abs() <= alpha + 1e-6);
+        assert!(q.codes.iter().all(|&c| (-7..=7).contains(&c)));
+    }
+
+    #[test]
+    fn error_is_bounded_by_half_step() {
+        let mut rng = Pcg32::seeded(2);
+        let w = Matrix::randn(16, 16, 1.0, &mut rng);
+        let q = quantize(&w, 8);
+        let step = q.scales[0] / super::super::levels(8);
+        for (orig, deq) in w.data().iter().zip(q.wq.data().iter()) {
+            assert!((orig - deq).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn outlier_sensitivity() {
+        // The documented failure mode: one huge outlier destroys precision
+        // for the bulk at 4 bits.
+        let mut rng = Pcg32::seeded(3);
+        let mut w = Matrix::randn(64, 64, 0.02, &mut rng);
+        let clean_mse = quantize(&w, 4).mse(&w);
+        w.set(0, 0, 5.0); // inject outlier
+        let dirty = quantize(&w, 4);
+        // Most small weights now quantize to zero.
+        let zeros = dirty.wq.data().iter().filter(|&&x| x == 0.0).count();
+        assert!(zeros as f32 / w.len() as f32 > 0.5, "zeros {zeros}");
+        assert!(dirty.mse(&w) > clean_mse * 5.0);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let w = Matrix::zeros(4, 4);
+        let q = quantize(&w, 4);
+        assert_eq!(q.wq.fro_norm(), 0.0);
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let mut rng = Pcg32::seeded(4);
+        let w = Matrix::randn(64, 64, 0.5, &mut rng);
+        let e4 = quantize(&w, 4).mse(&w);
+        let e8 = quantize(&w, 8).mse(&w);
+        assert!(e8 < e4 / 10.0);
+    }
+}

@@ -1,0 +1,173 @@
+//! Input (activation) quantization — paper Apx B.
+//!
+//! The paper evaluates SLiM with 8-bit inputs: AbsMax uniform int8 with one
+//! scale per tensor, and FP8 (E4M3 / E5M2 per Micikevicius et al. 2022),
+//! choosing E5M2 when the tensor's max exceeds E4M3's range. Both are
+//! implemented as fake-quant transforms applied to activations on the eval
+//! path.
+
+use crate::tensor::Matrix;
+
+/// E4M3 max finite value (per the FP8 spec: 1.75 × 2^8 = 448).
+pub const E4M3_MAX: f32 = 448.0;
+/// E5M2 max finite value (1.75 × 2^15 = 57344).
+pub const E5M2_MAX: f32 = 57344.0;
+
+/// Round a value to the nearest representable FP8 number with `mant_bits`
+/// mantissa bits and exponent bias chosen per format.
+fn fp8_round(x: f32, mant_bits: u32, min_exp: i32, max_val: f32) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        return if x.is_finite() { 0.0 } else { max_val.copysign(x) };
+    }
+    let sign = x.signum();
+    let a = x.abs().min(max_val);
+    // Decompose into mantissa × 2^exp with mantissa in [1, 2).
+    let exp = a.log2().floor() as i32;
+    let exp = exp.max(min_exp);
+    let scale = (exp as f32).exp2();
+    let mant = a / scale; // in [1,2) for normals, [0,1) for subnormals
+    let steps = (1u32 << mant_bits) as f32;
+    let q_mant = (mant * steps).round() / steps;
+    sign * (q_mant * scale).min(max_val)
+}
+
+/// Fake-quantize to FP8 E4M3 (4 exponent bits, 3 mantissa bits).
+pub fn e4m3(x: f32) -> f32 {
+    fp8_round(x, 3, -6, E4M3_MAX)
+}
+
+/// Fake-quantize to FP8 E5M2 (5 exponent bits, 2 mantissa bits).
+pub fn e5m2(x: f32) -> f32 {
+    fp8_round(x, 2, -14, E5M2_MAX)
+}
+
+/// Activation-quantization mode for the eval path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputQuant {
+    /// Full precision (default).
+    None,
+    /// int8 AbsMax, one scale per tensor (paper Apx B main setting).
+    Int8AbsMax,
+    /// FP8 with automatic E4M3→E5M2 fallback on range (paper Apx B).
+    Fp8Auto,
+}
+
+impl InputQuant {
+    pub fn parse(s: &str) -> Option<InputQuant> {
+        Some(match s {
+            "none" => InputQuant::None,
+            "int8" => InputQuant::Int8AbsMax,
+            "fp8" => InputQuant::Fp8Auto,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InputQuant::None => "fp32",
+            InputQuant::Int8AbsMax => "int8-absmax",
+            InputQuant::Fp8Auto => "fp8",
+        }
+    }
+}
+
+/// Apply input quantization to an activation tensor.
+pub fn quantize_input(x: &Matrix, mode: InputQuant) -> Matrix {
+    match mode {
+        InputQuant::None => x.clone(),
+        InputQuant::Int8AbsMax => {
+            let alpha = x.max_abs();
+            if alpha == 0.0 {
+                return x.clone();
+            }
+            x.map(|v| {
+                let c = ((v / alpha) * 127.0).round().clamp(-127.0, 127.0);
+                c * alpha / 127.0
+            })
+        }
+        InputQuant::Fp8Auto => {
+            let max = x.max_abs();
+            if max > E4M3_MAX {
+                x.map(e5m2)
+            } else {
+                x.map(e4m3)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn e4m3_exact_values() {
+        // Powers of two and small integers are exactly representable.
+        for &v in &[0.0f32, 1.0, 2.0, 0.5, -4.0, 448.0, 1.5, 1.25] {
+            assert_eq!(e4m3(v), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn e4m3_rounds_to_3_mantissa_bits() {
+        // 1.0625 = 1 + 1/16 needs 4 mantissa bits → rounds to 1.0 or 1.125.
+        let r = e4m3(1.0625);
+        assert!(r == 1.0 || r == 1.125);
+        // relative error bounded by half ULP = 2^-4.
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..1000 {
+            let v = rng.range_f32(-400.0, 400.0);
+            let r = e4m3(v);
+            if v.abs() > 0.02 {
+                assert!(((r - v) / v).abs() <= 0.0625 + 1e-6, "v={v} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn e4m3_saturates() {
+        assert_eq!(e4m3(1e6), E4M3_MAX);
+        assert_eq!(e4m3(-1e6), -E4M3_MAX);
+    }
+
+    #[test]
+    fn e5m2_wider_range_coarser_precision() {
+        assert_eq!(e5m2(1024.0), 1024.0);
+        assert_eq!(e5m2(57344.0), E5M2_MAX);
+        let mut rng = Pcg32::seeded(2);
+        for _ in 0..1000 {
+            let v = rng.range_f32(-5e4, 5e4);
+            let r = e5m2(v);
+            if v.abs() > 1.0 {
+                assert!(((r - v) / v).abs() <= 0.125 + 1e-6, "v={v} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_fallback_selects_format() {
+        let small = Matrix::from_vec(1, 2, vec![1.3, -2.7]);
+        let q = quantize_input(&small, InputQuant::Fp8Auto);
+        // In e4m3 range → e4m3 rounding (1/16 rel err max)
+        assert!((q.get(0, 0) - 1.3).abs() < 1.3 * 0.07);
+        let big = Matrix::from_vec(1, 2, vec![1000.0, -2.7]);
+        let qb = quantize_input(&big, InputQuant::Fp8Auto);
+        assert_eq!(qb.get(0, 0), 1024.0); // e5m2 rounding of 1000
+    }
+
+    #[test]
+    fn int8_absmax_small_relative_error() {
+        let mut rng = Pcg32::seeded(3);
+        let x = Matrix::randn(32, 32, 1.0, &mut rng);
+        let q = quantize_input(&x, InputQuant::Int8AbsMax);
+        assert!(q.rel_err(&x) < 0.02, "err {}", q.rel_err(&x));
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let mut rng = Pcg32::seeded(4);
+        let x = Matrix::randn(8, 8, 1.0, &mut rng);
+        assert_eq!(quantize_input(&x, InputQuant::None), x);
+    }
+}

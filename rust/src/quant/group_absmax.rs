@@ -1,0 +1,109 @@
+//! Group AbsMax quantization (paper Apx U; the strong uniform baseline).
+//!
+//! Each group of `group_size` consecutive input-dim elements within one
+//! output column shares an AbsMax scale. Captures local magnitude variation
+//! (beats per-tensor AbsMax) at the cost of storing one scale per group and
+//! a slower dequant path (Table 23 measures that slow-down on our kernels).
+
+use super::{fake_quant_value, quant_code, Quantized};
+use crate::tensor::Matrix;
+
+/// Group-AbsMax quantize `w` (d_in × d_out) with groups running down the
+/// input dimension of each output column.
+pub fn quantize(w: &Matrix, bits: u8, group_size: usize) -> Quantized {
+    assert!(group_size > 0);
+    let (d_in, d_out) = w.shape();
+    let n_groups_per_col = d_in.div_ceil(group_size);
+    let mut scales = vec![0.0f32; n_groups_per_col * d_out];
+    // Pass 1: scales = max |w| per (group, col).
+    for i in 0..d_in {
+        let g = i / group_size;
+        let row = w.row(i);
+        for (j, &x) in row.iter().enumerate() {
+            let s = &mut scales[g * d_out + j];
+            *s = s.max(x.abs());
+        }
+    }
+    // Pass 2: fake-quant + codes.
+    let mut wq = Matrix::zeros(d_in, d_out);
+    let mut codes = vec![0i8; d_in * d_out];
+    for i in 0..d_in {
+        let g = i / group_size;
+        for j in 0..d_out {
+            let alpha = scales[g * d_out + j];
+            let x = w.get(i, j);
+            wq.set(i, j, fake_quant_value(x, alpha, bits));
+            codes[i * d_out + j] = quant_code(x, alpha, bits);
+        }
+    }
+    Quantized { wq, codes, scales, group_size, bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::absmax;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn shapes_and_scale_count() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Matrix::randn(256, 64, 0.1, &mut rng);
+        let q = quantize(&w, 4, 128);
+        assert_eq!(q.scales.len(), 2 * 64);
+        assert_eq!(q.group_size, 128);
+    }
+
+    #[test]
+    fn ragged_group_handled() {
+        let mut rng = Pcg32::seeded(2);
+        let w = Matrix::randn(100, 8, 0.1, &mut rng); // 100 = 128-group ragged
+        let q = quantize(&w, 4, 128);
+        assert_eq!(q.scales.len(), 8);
+        assert_eq!(q.wq.shape(), (100, 8));
+    }
+
+    #[test]
+    fn beats_per_tensor_on_outliers() {
+        let mut rng = Pcg32::seeded(3);
+        let mut w = Matrix::randn(256, 32, 0.02, &mut rng);
+        w.set(0, 0, 4.0); // outlier poisons only its own group here
+        let per_tensor = absmax::quantize(&w, 4).mse(&w);
+        let grouped = quantize(&w, 4, 128).mse(&w);
+        assert!(grouped < per_tensor / 4.0, "group {grouped} vs tensor {per_tensor}");
+    }
+
+    #[test]
+    fn group_error_bounded_by_group_scale() {
+        let mut rng = Pcg32::seeded(4);
+        let w = Matrix::randn(64, 16, 1.0, &mut rng);
+        let q = quantize(&w, 4, 16);
+        let l = crate::quant::levels(4);
+        for i in 0..64 {
+            let g = i / 16;
+            for j in 0..16 {
+                let alpha = q.scales[g * 16 + j];
+                let err = (w.get(i, j) - q.wq.get(i, j)).abs();
+                assert!(err <= alpha / l / 2.0 + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn smaller_groups_lower_error() {
+        let mut rng = Pcg32::seeded(5);
+        let w = Matrix::randn(256, 32, 0.5, &mut rng);
+        let e128 = quantize(&w, 4, 128).mse(&w);
+        let e32 = quantize(&w, 4, 32).mse(&w);
+        assert!(e32 <= e128 + 1e-9);
+    }
+
+    #[test]
+    fn bits_per_element_accounting() {
+        let mut rng = Pcg32::seeded(6);
+        let w = Matrix::randn(256, 16, 0.1, &mut rng);
+        let q = quantize(&w, 4, 128);
+        // 4 bits + 16-bit scale per 128 elements = 4.125
+        assert!((q.bits_per_element() - 4.125).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,210 @@
+//! Weight and activation quantizers (paper §3.1, Apx B/E/U).
+//!
+//! All weight quantizers produce *fake-quant* matrices (quantize →
+//! dequantize in f32) for the accuracy path — exactly how the paper
+//! evaluates accuracy — plus integer codes + scales for the packed
+//! inference kernels in [`crate::kernels`].
+//!
+//! Implemented methods:
+//! * [`absmax`] — per-tensor AbsMax symmetric RTN (the weak baseline).
+//! * [`group_absmax`] — AbsMax per group of 128 input-dim elements
+//!   (the strong uniform baseline, also used for adapter quantization §3.3).
+//! * [`slim_quant`] — SLiM-Quant (paper Alg. 1): per-tensor scale α found by
+//!   minimizing `E_quant(α)+E_clip(α)` via numerical integration over the
+//!   |W| histogram with multigrid refinement; `W` and activation-aware `O`
+//!   variants.
+//! * [`optq`] — OPTQ/GPTQ-style Hessian-aware quantization with error
+//!   feedback (the SparseGPT companion in Table 1).
+//! * [`fp8`] — FP8 (E4M3/E5M2) + int8 AbsMax input quantization (Apx B).
+//! * [`pack`] — int4/int2 bit-packing for the runtime kernels.
+
+pub mod absmax;
+pub mod fp8;
+pub mod group_absmax;
+pub mod optq;
+pub mod pack;
+pub mod slim_quant;
+
+use crate::tensor::Matrix;
+
+/// Number of symmetric levels on each side for q-bit quantization
+/// (4-bit → 7, i.e. codes in [-7, 7]).
+#[inline]
+pub fn levels(bits: u8) -> f32 {
+    ((1i32 << (bits - 1)) - 1) as f32
+}
+
+/// Fake-quantize a single value with scale `alpha` and `bits` (Eq. 2 of the
+/// paper, with the conventional symmetric-level parameterization: codes in
+/// `[-L, L]`, `L = 2^{q-1}-1`, dequant `= code·α/L`).
+#[inline]
+pub fn fake_quant_value(x: f32, alpha: f32, bits: u8) -> f32 {
+    if alpha <= 0.0 {
+        return 0.0;
+    }
+    let l = levels(bits);
+    let t = (x / alpha).clamp(-1.0, 1.0);
+    (t * l).round() * alpha / l
+}
+
+/// Integer code for a value (for packing).
+#[inline]
+pub fn quant_code(x: f32, alpha: f32, bits: u8) -> i8 {
+    if alpha <= 0.0 {
+        return 0;
+    }
+    let l = levels(bits);
+    ((x / alpha).clamp(-1.0, 1.0) * l).round() as i8
+}
+
+/// Which weight quantizer to run — the pipeline and experiment drivers
+/// select by this enum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMethod {
+    /// No quantization (sparse-only experiments).
+    None,
+    /// Per-tensor AbsMax RTN.
+    AbsMax,
+    /// Group AbsMax, group size 128 over the input dimension.
+    GroupAbsMax,
+    /// SLiM-Quant weight-error minimization (paper's `SLiM-Quant^W`).
+    SlimQuantW,
+    /// SLiM-Quant with AWQ-style activation-aware channel scaling
+    /// (paper's `SLiM-Quant^O`).
+    SlimQuantO,
+    /// OPTQ with per-group scales (the SparseGPT companion).
+    GroupOptq,
+}
+
+impl QuantMethod {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<QuantMethod> {
+        Some(match s {
+            "none" => QuantMethod::None,
+            "absmax" => QuantMethod::AbsMax,
+            "group-absmax" => QuantMethod::GroupAbsMax,
+            "slim-quant" | "slim-quant-w" => QuantMethod::SlimQuantW,
+            "slim-quant-o" => QuantMethod::SlimQuantO,
+            "group-optq" | "optq" => QuantMethod::GroupOptq,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantMethod::None => "none",
+            QuantMethod::AbsMax => "AbsMax",
+            QuantMethod::GroupAbsMax => "Group AbsMax",
+            QuantMethod::SlimQuantW => "SLiM-Quant^W",
+            QuantMethod::SlimQuantO => "SLiM-Quant^O",
+            QuantMethod::GroupOptq => "Group OPTQ",
+        }
+    }
+}
+
+/// A quantized weight matrix: fake-quant values for the accuracy path and
+/// codes/scales for the packed kernels.
+#[derive(Clone, Debug)]
+pub struct Quantized {
+    /// Dequantized (fake-quant) weights, same shape as the input.
+    pub wq: Matrix,
+    /// Integer codes, row-major, same shape.
+    pub codes: Vec<i8>,
+    /// Scales: one per tensor (`group_size == 0`) or one per group.
+    pub scales: Vec<f32>,
+    /// 0 for per-tensor, otherwise the group length over the input dim.
+    pub group_size: usize,
+    /// Bit width.
+    pub bits: u8,
+}
+
+impl Quantized {
+    /// Mean squared reconstruction error vs the original weights.
+    pub fn mse(&self, w: &Matrix) -> f64 {
+        self.wq.sub(w).fro_norm_sq() / w.len() as f64
+    }
+
+    /// Bits per stored element including scale overhead (f16 scales assumed,
+    /// matching the paper's memory accounting).
+    pub fn bits_per_element(&self) -> f64 {
+        let scale_bits = self.scales.len() as f64 * 16.0;
+        (self.codes.len() as f64 * self.bits as f64 + scale_bits) / self.codes.len() as f64
+    }
+}
+
+/// Quantize with the given method. `x_abs_mean` (per input-channel mean |x|
+/// from calibration) is required by `SlimQuantO`; `hessian` (XᵀX) by
+/// `GroupOptq`.
+pub fn quantize(
+    w: &Matrix,
+    method: QuantMethod,
+    bits: u8,
+    x_abs_mean: Option<&[f32]>,
+    hessian: Option<&Matrix>,
+) -> Quantized {
+    match method {
+        QuantMethod::None => Quantized {
+            wq: w.clone(),
+            codes: vec![0; w.len()],
+            scales: vec![0.0],
+            group_size: 0,
+            bits: 32,
+        },
+        QuantMethod::AbsMax => absmax::quantize(w, bits),
+        QuantMethod::GroupAbsMax => group_absmax::quantize(w, bits, 128),
+        QuantMethod::SlimQuantW => slim_quant::quantize(w, bits),
+        QuantMethod::SlimQuantO => {
+            let x = x_abs_mean.expect("SlimQuantO requires calibration activation stats");
+            slim_quant::quantize_activation_aware(w, bits, x)
+        }
+        QuantMethod::GroupOptq => {
+            let h = hessian.expect("GroupOptq requires the layer Hessian XᵀX");
+            optq::quantize(w, bits, h, 128)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_match_bitwidth() {
+        assert_eq!(levels(4), 7.0);
+        assert_eq!(levels(8), 127.0);
+        assert_eq!(levels(2), 1.0);
+    }
+
+    #[test]
+    fn fake_quant_is_idempotent() {
+        let alpha = 2.0;
+        for &x in &[-3.0f32, -1.9, -0.3, 0.0, 0.7, 1.4, 2.5] {
+            let q1 = fake_quant_value(x, alpha, 4);
+            let q2 = fake_quant_value(q1, alpha, 4);
+            assert!((q1 - q2).abs() < 1e-6, "x={x}");
+        }
+    }
+
+    #[test]
+    fn fake_quant_clips() {
+        assert_eq!(fake_quant_value(100.0, 1.0, 4), 1.0);
+        assert_eq!(fake_quant_value(-100.0, 1.0, 4), -1.0);
+    }
+
+    #[test]
+    fn codes_round_trip_dequant() {
+        let alpha = 1.5;
+        for &x in &[-1.2f32, 0.0, 0.4, 1.49] {
+            let c = quant_code(x, alpha, 4);
+            let deq = c as f32 * alpha / levels(4);
+            assert!((deq - fake_quant_value(x, alpha, 4)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(QuantMethod::parse("slim-quant"), Some(QuantMethod::SlimQuantW));
+        assert_eq!(QuantMethod::parse("group-absmax"), Some(QuantMethod::GroupAbsMax));
+        assert_eq!(QuantMethod::parse("bogus"), None);
+    }
+}

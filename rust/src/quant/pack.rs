@@ -1,0 +1,112 @@
+//! Bit-packing of quantized codes for the runtime kernels.
+//!
+//! Signed codes are biased to unsigned and packed two-per-byte (int4) or
+//! four-per-byte (int2). The packed layout is row-major over the logical
+//! matrix; the 2:4-sparse kernel additionally compresses the zeroed lanes
+//! (see [`crate::kernels::sparse24`]).
+
+/// Packed 4-bit codes (two per byte, low nibble first).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedInt4 {
+    pub bytes: Vec<u8>,
+    pub len: usize,
+}
+
+/// Pack signed 4-bit codes in [-8, 7] (we only produce [-7, 7]).
+pub fn pack_int4(codes: &[i8]) -> PackedInt4 {
+    let mut bytes = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let lo = (pair[0] + 8) as u8 & 0x0F;
+        let hi = if pair.len() > 1 { (pair[1] + 8) as u8 & 0x0F } else { 0 };
+        bytes.push(lo | (hi << 4));
+    }
+    PackedInt4 { bytes, len: codes.len() }
+}
+
+/// Unpack back to signed codes.
+pub fn unpack_int4(p: &PackedInt4) -> Vec<i8> {
+    let mut out = Vec::with_capacity(p.len);
+    for &b in &p.bytes {
+        out.push((b & 0x0F) as i8 - 8);
+        if out.len() < p.len {
+            out.push((b >> 4) as i8 - 8);
+        }
+    }
+    out.truncate(p.len);
+    out
+}
+
+/// Packed 2-bit codes (four per byte).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedInt2 {
+    pub bytes: Vec<u8>,
+    pub len: usize,
+}
+
+/// Pack signed 2-bit codes in [-2, 1] (we produce [-1, 1]).
+pub fn pack_int2(codes: &[i8]) -> PackedInt2 {
+    let mut bytes = Vec::with_capacity(codes.len().div_ceil(4));
+    for quad in codes.chunks(4) {
+        let mut b = 0u8;
+        for (k, &c) in quad.iter().enumerate() {
+            b |= (((c + 2) as u8) & 0x03) << (2 * k);
+        }
+        bytes.push(b);
+    }
+    PackedInt2 { bytes, len: codes.len() }
+}
+
+/// Unpack 2-bit codes.
+pub fn unpack_int2(p: &PackedInt2) -> Vec<i8> {
+    let mut out = Vec::with_capacity(p.len);
+    for &b in &p.bytes {
+        for k in 0..4 {
+            if out.len() < p.len {
+                out.push(((b >> (2 * k)) & 0x03) as i8 - 2);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn int4_round_trip() {
+        let mut rng = Pcg32::seeded(1);
+        let codes: Vec<i8> = (0..1001).map(|_| rng.below(15) as i8 - 7).collect();
+        let p = pack_int4(&codes);
+        assert_eq!(p.bytes.len(), 501);
+        assert_eq!(unpack_int4(&p), codes);
+    }
+
+    #[test]
+    fn int4_even_length() {
+        let codes: Vec<i8> = vec![-7, 7, 0, 3];
+        assert_eq!(unpack_int4(&pack_int4(&codes)), codes);
+    }
+
+    #[test]
+    fn int2_round_trip() {
+        let mut rng = Pcg32::seeded(2);
+        let codes: Vec<i8> = (0..1003).map(|_| rng.below(3) as i8 - 1).collect();
+        let p = pack_int2(&codes);
+        assert_eq!(p.bytes.len(), 251);
+        assert_eq!(unpack_int2(&p), codes);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(unpack_int4(&pack_int4(&[])), Vec::<i8>::new());
+        assert_eq!(unpack_int2(&pack_int2(&[])), Vec::<i8>::new());
+    }
+
+    #[test]
+    fn int4_memory_is_half() {
+        let codes = vec![0i8; 4096];
+        assert_eq!(pack_int4(&codes).bytes.len(), 2048);
+    }
+}

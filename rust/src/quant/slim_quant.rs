@@ -1,0 +1,278 @@
+//! SLiM-Quant (paper §3.1, Algorithm 1).
+//!
+//! Symmetric per-tensor quantization whose scale α minimizes the expected
+//! reconstruction error, written probabilistically (paper Eq. 4–7) as
+//!
+//! ```text
+//!   E_Q(α) = E_quant(α) + E_clip(α)
+//!   E_quant(α) = ∫₀^α f_abs(x) · (fq(x; α) − x)² dx     (in-range error)
+//!   E_clip(α)  = ∫_α^∞ f_abs(x) · (α − x)² dx            (clipping error)
+//! ```
+//!
+//! The weight PDF `f_abs` has no closed form, so the integrals are evaluated
+//! numerically over the |W| histogram (bin count per Apx T) and the argmin
+//! is found by the multigrid search of Algorithm 1: a coarse scan over
+//! `(0, max|W|]` followed by iterative refinement around the incumbent.
+//!
+//! The activation-aware variant (`SLiM-Quant^O`) additionally protects the
+//! most salient input channels — saliency `|x̄_i|·mean_j|W_ij|` as in §3.1 —
+//! by scaling them up in the weights (and down in the activations) before
+//! quantizing, AWQ-style.
+
+use super::absmax::quantize_with_alpha;
+use super::{levels, Quantized};
+use crate::tensor::{histogram, Histogram, Matrix};
+
+/// Expected error `E_quant(α) + E_clip(α)` for one candidate α, integrated
+/// over the histogram (this is `EstimateError` in Algorithm 1).
+pub fn estimate_error(hist: &Histogram, alpha: f32, bits: u8) -> f64 {
+    if alpha <= 0.0 {
+        // Everything clips to 0 → error = E[x²].
+        return hist
+            .centers
+            .iter()
+            .zip(hist.pdf.iter())
+            .map(|(&c, &p)| (c as f64) * (c as f64) * p as f64)
+            .sum();
+    }
+    let l = levels(bits) as f64;
+    let step = alpha as f64 / l;
+    let mut err = 0.0f64;
+    for (&c, &p) in hist.centers.iter().zip(hist.pdf.iter()) {
+        if p == 0.0 {
+            continue;
+        }
+        let x = c as f64;
+        let e = if x <= alpha as f64 {
+            // In-range: distance to the nearest level (E_quant term).
+            let q = (x / step).round() * step;
+            x - q
+        } else {
+            // Clipped to ±α (E_clip term).
+            x - alpha as f64
+        };
+        err += p as f64 * e * e;
+    }
+    err
+}
+
+/// Multigrid α search of Algorithm 1: `coarse` samples over `(0, max]`,
+/// then `refine_iters` rounds of 10-point refinement around the incumbent.
+pub fn find_alpha(hist: &Histogram, bits: u8) -> f32 {
+    if hist.max <= 0.0 {
+        return 0.0;
+    }
+    let coarse = 10usize;
+    let mut lo = 0.0f32;
+    let mut hi = hist.max;
+    let mut best_alpha = hist.max;
+    let mut best_err = f64::INFINITY;
+    for _level in 0..6 {
+        let step = (hi - lo) / coarse as f32;
+        if step <= f32::EPSILON * hist.max {
+            break;
+        }
+        let mut level_best = best_alpha;
+        for k in 1..=coarse {
+            let alpha = lo + step * k as f32;
+            let e = estimate_error(hist, alpha, bits);
+            if e < best_err {
+                best_err = e;
+                level_best = alpha;
+            }
+        }
+        best_alpha = level_best;
+        // Refine around the incumbent (Algorithm 1 lines 13–15).
+        lo = (best_alpha - step).max(0.0);
+        hi = (best_alpha + step).min(hist.max);
+    }
+    best_alpha
+}
+
+/// SLiM-Quant^W: weight-error-minimizing per-tensor quantization.
+pub fn quantize(w: &Matrix, bits: u8) -> Quantized {
+    let hist = histogram(w);
+    let alpha = find_alpha(&hist, bits);
+    quantize_with_alpha(w, bits, alpha)
+}
+
+/// Fraction of channels protected by the activation-aware variant (the
+/// paper scales "approximately 1% of the channels").
+pub const SALIENT_FRACTION: f64 = 0.01;
+/// Up-scaling factor for salient channels (weights ×s, activations ×1/s).
+pub const SALIENT_SCALE: f32 = 2.0;
+
+/// SLiM-Quant^O: activation-aware output-error minimization.
+///
+/// Channels with the top `SALIENT_FRACTION` saliency `|x̄_i|·mean_j|W_ij|`
+/// are scaled by `s` in the weights before quantization; the returned
+/// `channel_scale` must be applied as `x_i / s_i` to activations at
+/// inference. For the fake-quant accuracy path we fold the inverse back into
+/// `wq`, which is numerically identical to scaling the activations.
+pub fn quantize_activation_aware(w: &Matrix, bits: u8, x_abs_mean: &[f32]) -> Quantized {
+    let (d_in, _d_out) = w.shape();
+    assert_eq!(x_abs_mean.len(), d_in, "activation stats must match d_in");
+    // Per-input-channel saliency = |x̄_i| · mean_j |W_ij|.
+    let mut saliency: Vec<(f32, usize)> = (0..d_in)
+        .map(|i| {
+            let wmean = w.row(i).iter().map(|x| x.abs()).sum::<f32>() / w.cols() as f32;
+            (x_abs_mean[i].abs() * wmean, i)
+        })
+        .collect();
+    saliency.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let n_salient = ((d_in as f64 * SALIENT_FRACTION).ceil() as usize).clamp(1, d_in);
+    // Clip-aware scaling: pick s ≤ SALIENT_SCALE such that the scaled row
+    // stays inside the (unscaled) optimal α — otherwise the salient
+    // channel's weights clip and the protection backfires. (With per-tensor
+    // scales this is the analogue of AWQ's grid-searched s.)
+    let alpha0 = find_alpha(&histogram(w), bits).max(1e-12);
+    let mut channel_scale = vec![1.0f32; d_in];
+    for &(_, i) in saliency.iter().take(n_salient) {
+        let row_max = w.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s_max = if row_max > 0.0 { alpha0 / row_max } else { SALIENT_SCALE };
+        channel_scale[i] = SALIENT_SCALE.min(s_max).max(1.0);
+    }
+    // Quantize the scaled weights, then fold the activation-side 1/s into wq
+    // so downstream consumers see an ordinary weight matrix.
+    let w_scaled = w.scale_rows(&channel_scale);
+    let mut q = quantize(&w_scaled, bits);
+    let inv: Vec<f32> = channel_scale.iter().map(|&s| 1.0 / s).collect();
+    q.wq = q.wq.scale_rows(&inv);
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::absmax;
+    use crate::rng::Pcg32;
+    use crate::tensor::histogram_with_bins;
+
+    #[test]
+    fn estimate_error_zero_alpha_is_energy() {
+        let data = vec![1.0f32; 100];
+        let h = histogram_with_bins(&data, 64);
+        let e = estimate_error(&h, 0.0, 4);
+        // E[x²] with all mass at the top bin center (≈ 0.9921875²).
+        assert!((e - (h.centers[63] as f64).powi(2)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn estimate_error_decreases_then_increases() {
+        // For a bell-shaped distribution the error has an interior optimum:
+        // α too small → clipping dominates; α too large → step dominates.
+        let mut rng = Pcg32::seeded(1);
+        let data: Vec<f32> = (0..100_000).map(|_| rng.gauss()).collect();
+        let h = histogram_with_bins(&data, 2000);
+        let e_tiny = estimate_error(&h, 0.1, 4);
+        let e_best = estimate_error(&h, find_alpha(&h, 4), 4);
+        let e_max = estimate_error(&h, h.max, 4);
+        assert!(e_best < e_tiny);
+        assert!(e_best < e_max);
+    }
+
+    #[test]
+    fn find_alpha_beats_absmax_scale() {
+        let mut rng = Pcg32::seeded(2);
+        // Heavy-tailed weights: Laplace — α* should clip the tail.
+        let data: Vec<f32> = (0..50_000).map(|_| rng.laplace(0.05)).collect();
+        let h = histogram_with_bins(&data, 1000);
+        let alpha = find_alpha(&h, 4);
+        assert!(alpha < h.max, "optimal alpha should clip the tail");
+        assert!(estimate_error(&h, alpha, 4) <= estimate_error(&h, h.max, 4));
+    }
+
+    #[test]
+    fn slim_quant_mse_not_worse_than_absmax() {
+        // The whole point of SLiM-Quant (paper Table 8's premise): for
+        // realistic bell-curved weights its per-tensor MSE ≤ AbsMax's.
+        let mut rng = Pcg32::seeded(3);
+        for trial in 0..5 {
+            let w = Matrix::from_fn(128, 128, |_, _| rng.laplace(0.03));
+            let slim = quantize(&w, 4).mse(&w);
+            let amax = absmax::quantize(&w, 4).mse(&w);
+            assert!(slim <= amax * 1.01, "trial {trial}: slim {slim} vs absmax {amax}");
+        }
+    }
+
+    #[test]
+    fn slim_quant_on_gaussian_big_gain() {
+        let mut rng = Pcg32::seeded(4);
+        let mut w = Matrix::randn(256, 256, 0.02, &mut rng);
+        w.set(0, 0, 2.0); // single outlier
+        let slim = quantize(&w, 4).mse(&w);
+        let amax = absmax::quantize(&w, 4).mse(&w);
+        assert!(slim < amax / 4.0, "slim {slim} absmax {amax}");
+    }
+
+    #[test]
+    fn multigrid_close_to_dense_grid() {
+        let mut rng = Pcg32::seeded(5);
+        let data: Vec<f32> = (0..40_000).map(|_| rng.gauss() * 0.1).collect();
+        let h = histogram_with_bins(&data, 1000);
+        let fast = find_alpha(&h, 4);
+        // Dense reference scan.
+        let mut best = (f64::INFINITY, 0.0f32);
+        for k in 1..=4000 {
+            let a = h.max * k as f32 / 4000.0;
+            let e = estimate_error(&h, a, 4);
+            if e < best.0 {
+                best = (e, a);
+            }
+        }
+        let e_fast = estimate_error(&h, fast, 4);
+        assert!(
+            e_fast <= best.0 * 1.05,
+            "multigrid {e_fast} vs dense {} (alpha {} vs {})",
+            best.0,
+            fast,
+            best.1
+        );
+    }
+
+    #[test]
+    fn activation_aware_protects_salient_channels() {
+        let mut rng = Pcg32::seeded(6);
+        let mut w = Matrix::from_fn(200, 64, |_, _| rng.laplace(0.03));
+        // Channel 7 has huge activations → its weights are salient. Its
+        // weights are small (headroom below α), the regime where AWQ-style
+        // up-scaling pays off.
+        for j in 0..64 {
+            w.set(7, j, w.get(7, j) * 0.3);
+        }
+        let mut x_mean = vec![0.1f32; 200];
+        x_mean[7] = 50.0;
+        let qo = quantize_activation_aware(&w, 4, &x_mean);
+        let qw = quantize(&w, 4);
+        // Output-error proxy: saliency-weighted reconstruction error.
+        let werr = |q: &Quantized| -> f64 {
+            let diff = q.wq.sub(&w);
+            (0..200)
+                .map(|i| {
+                    let rowerr: f64 =
+                        diff.row(i).iter().map(|&e| (e as f64) * (e as f64)).sum();
+                    rowerr * (x_mean[i] as f64) * (x_mean[i] as f64)
+                })
+                .sum()
+        };
+        assert!(werr(&qo) < werr(&qw), "O-variant should cut salient-channel error");
+    }
+
+    #[test]
+    fn zero_weights() {
+        let w = Matrix::zeros(8, 8);
+        let q = quantize(&w, 4);
+        assert_eq!(q.wq.fro_norm(), 0.0);
+    }
+
+    #[test]
+    fn two_bit_mode_works() {
+        // Table 16/17 need 2-bit quantization.
+        let mut rng = Pcg32::seeded(7);
+        let w = Matrix::from_fn(128, 128, |_, _| rng.laplace(0.05));
+        let q2 = quantize(&w, 2);
+        let q4 = quantize(&w, 4);
+        assert!(q2.mse(&w) > q4.mse(&w));
+        assert!(q2.codes.iter().all(|&c| (-1..=1).contains(&c)));
+    }
+}

@@ -1,0 +1,176 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Shape + dtype of one positional input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Does a Matrix (2-D) fit this spec? Scalars ([]) accept 1×1; 1-D
+    /// accepts 1×n.
+    pub fn matches_matrix(&self, m: &Matrix) -> bool {
+        match self.shape.len() {
+            0 => m.shape() == (1, 1),
+            1 => m.rows() == 1 && m.cols() == self.shape[0],
+            2 => m.shape() == (self.shape[0], self.shape[1]),
+            _ => m.len() == self.numel(),
+        }
+    }
+}
+
+/// One AOT entry (an executable).
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Raw metadata object (config name, batch geometry, …).
+    pub meta: Json,
+}
+
+impl Entry {
+    /// Metadata field as usize.
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key)?.as_usize()
+    }
+
+    /// Metadata field as str.
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key)?.as_str()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<Entry>,
+}
+
+fn parse_spec(v: &Json) -> Result<TensorSpec> {
+    let name = v.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("spec missing shape"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = v.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string();
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    /// Parse from a JSON document.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .iter()
+            .map(|e| {
+                let name = e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string();
+                let file = e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .to_string();
+                let inputs = e
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_spec)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = e
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_spec)
+                    .collect::<Result<Vec<_>>>()?;
+                let meta = e.get("meta").cloned().unwrap_or(Json::Null);
+                Ok(Entry { name, file, inputs, outputs, meta })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { entries })
+    }
+
+    /// Load + parse from a file.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        Manifest::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Names of all entries of a given `meta.kind`.
+    pub fn entries_of_kind(&self, kind: &str) -> Vec<&Entry> {
+        self.entries
+            .iter()
+            .filter(|e| e.meta_str("kind") == Some(kind))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "foo", "file": "foo.hlo.txt",
+         "inputs": [{"name": "x", "shape": [2, 3], "dtype": "f32"},
+                    {"name": "t", "shape": [4, 8], "dtype": "i32"}],
+         "outputs": [{"name": "out0", "shape": [], "dtype": "f32"}],
+         "meta": {"kind": "lm_loss", "batch": 4, "config": "sim-125m"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries[0];
+        assert_eq!(e.name, "foo");
+        assert_eq!(e.inputs[0].shape, vec![2, 3]);
+        assert_eq!(e.inputs[1].dtype, "i32");
+        assert_eq!(e.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(e.meta_usize("batch"), Some(4));
+        assert_eq!(e.meta_str("config"), Some("sim-125m"));
+        assert_eq!(m.entries_of_kind("lm_loss").len(), 1);
+        assert_eq!(m.entries_of_kind("train_step").len(), 0);
+    }
+
+    #[test]
+    fn spec_matching() {
+        let scalar = TensorSpec { name: "s".into(), shape: vec![], dtype: "f32".into() };
+        assert!(scalar.matches_matrix(&Matrix::zeros(1, 1)));
+        assert!(!scalar.matches_matrix(&Matrix::zeros(1, 2)));
+        let mat = TensorSpec { name: "m".into(), shape: vec![3, 4], dtype: "f32".into() };
+        assert!(mat.matches_matrix(&Matrix::zeros(3, 4)));
+        assert!(!mat.matches_matrix(&Matrix::zeros(4, 3)));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("[]").is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Literal ↔ Matrix marshalling.
+//!
+//! HLO artifacts take positional typed literals; our numeric substrate is
+//! the 2-D [`Matrix`]. Manifest shapes may be 0-D (scalars), 1-D, 2-D, or
+//! 3-D (logits [B, S, V]); everything maps onto a row-major Matrix whose
+//! trailing dimension is the matrix column count.
+
+use super::manifest::TensorSpec;
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+
+/// Matrix → f32 literal with the manifest's target shape.
+pub fn matrix_to_literal(m: &Matrix, shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(m.data());
+    let dims: Vec<i64> = if shape.is_empty() {
+        vec![] // scalar
+    } else {
+        shape.iter().map(|&d| d as i64).collect()
+    };
+    if shape.is_empty() {
+        // reshape to rank-0
+        return lit.reshape(&[]).map_err(|e| anyhow!("reshape scalar: {e:?}"));
+    }
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+/// Token slice → i32 literal [b, s].
+pub fn tokens_to_literal(tokens: &[u32], b: usize, s: usize) -> Result<xla::Literal> {
+    if tokens.len() != b * s {
+        return Err(anyhow!("tokens len {} != {}x{}", tokens.len(), b, s));
+    }
+    let as_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    xla::Literal::vec1(&as_i32)
+        .reshape(&[b as i64, s as i64])
+        .map_err(|e| anyhow!("reshape tokens: {e:?}"))
+}
+
+/// Literal → Matrix. Rank-0 → 1×1; rank-1 → 1×n; rank-2 → r×c; rank-3
+/// [a, b, c] → (a·b)×c (row-major flattening).
+pub fn literal_to_matrix(lit: &xla::Literal, spec: &TensorSpec) -> Result<Matrix> {
+    let data: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal read: {e:?}"))?;
+    let (rows, cols) = match spec.shape.len() {
+        0 => (1, 1),
+        1 => (1, spec.shape[0]),
+        2 => (spec.shape[0], spec.shape[1]),
+        n => {
+            let cols = spec.shape[n - 1];
+            (spec.numel() / cols, cols)
+        }
+    };
+    if data.len() != rows * cols {
+        return Err(anyhow!(
+            "literal numel {} != spec {:?}",
+            data.len(),
+            spec.shape
+        ));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_round_trip() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let lit = matrix_to_literal(&m, &[3, 4]).unwrap();
+        let spec = TensorSpec { name: "x".into(), shape: vec![3, 4], dtype: "f32".into() };
+        let back = literal_to_matrix(&lit, &spec).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn scalar_round_trip() {
+        let m = Matrix::from_vec(1, 1, vec![42.0]);
+        let lit = matrix_to_literal(&m, &[]).unwrap();
+        let spec = TensorSpec { name: "s".into(), shape: vec![], dtype: "f32".into() };
+        let back = literal_to_matrix(&lit, &spec).unwrap();
+        assert_eq!(back.get(0, 0), 42.0);
+    }
+
+    #[test]
+    fn rank3_flattens() {
+        let m = Matrix::from_fn(6, 5, |i, j| (i * 5 + j) as f32); // (2·3)×5
+        let lit = matrix_to_literal(&m, &[2, 3, 5]).unwrap();
+        let spec =
+            TensorSpec { name: "l".into(), shape: vec![2, 3, 5], dtype: "f32".into() };
+        let back = literal_to_matrix(&lit, &spec).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn token_literal_shape_checked() {
+        assert!(tokens_to_literal(&[1, 2, 3], 2, 2).is_err());
+        assert!(tokens_to_literal(&[1, 2, 3, 4], 2, 2).is_ok());
+    }
+}

@@ -1,0 +1,262 @@
+//! PJRT runtime: load AOT artifacts and execute them from the Rust hot path.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute`). Entries are discovered through
+//! `artifacts/manifest.json` (written by `python -m compile.aot`); compiled
+//! executables are cached per runtime instance. Python never runs here —
+//! the HLO text is the only thing that crosses the language boundary.
+
+mod manifest;
+pub mod marshal;
+
+pub use manifest::{Entry, Manifest, TensorSpec};
+
+use crate::tensor::Matrix;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A loaded artifact directory + PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (compiles nothing yet).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifact directory (repo-root/artifacts, overridable with
+    /// SLIM_ARTIFACTS).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SLIM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Entry metadata by name.
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no artifact entry named {name}"))
+    }
+
+    /// Compile (or fetch from cache) the executable for an entry.
+    fn compiled(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.entry(name)?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Upload a literal to a device buffer.
+    pub fn to_buffer(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Execute an entry over device buffers (the zero-copy hot path —
+    /// training keeps its state resident this way). Returns the output
+    /// buffers of replica 0.
+    ///
+    /// NOTE: the literal-input `c_lib::execute` path leaks its internally
+    /// created device buffers (observed ~50 MB/step on the train loop), so
+    /// every execution in this crate goes through `execute_b` with
+    /// self-managed buffers.
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let entry = self.entry(name)?;
+        if inputs.len() != entry.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", entry.inputs.len(), inputs.len());
+        }
+        self.compiled(name)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).unwrap();
+        let mut result = exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        Ok(result.swap_remove(0))
+    }
+
+    /// Execute an entry with positional literal inputs; returns the
+    /// flattened tuple outputs. (Uploads to buffers internally so the
+    /// inputs are freed deterministically — see `execute_buffers`.)
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let entry = self.entry(name)?.clone();
+        let bufs: Vec<xla::PjRtBuffer> =
+            inputs.iter().map(|l| self.to_buffer(l)).collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let out_bufs = self.execute_buffers(name, &refs)?;
+        // aot.py lowers with return_tuple=True → single tuple output buffer.
+        let lit = out_bufs[0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let outs = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if outs.len() != entry.outputs.len() {
+            bail!("{name}: manifest lists {} outputs, got {}", entry.outputs.len(), outs.len());
+        }
+        Ok(outs)
+    }
+
+    /// Execute with Matrix/token inputs marshalled per the manifest specs.
+    /// `f32_inputs` fill the f32 slots in order; the (single) i32 slot is
+    /// filled from `tokens`.
+    pub fn execute_matrices(
+        &self,
+        name: &str,
+        f32_inputs: &[&Matrix],
+        tokens: Option<(&[u32], usize, usize)>,
+    ) -> Result<Vec<Matrix>> {
+        let entry = self.entry(name)?.clone();
+        let mut lits = Vec::with_capacity(entry.inputs.len());
+        let mut fi = 0usize;
+        for spec in &entry.inputs {
+            if spec.dtype == "i32" {
+                let (toks, b, s) =
+                    tokens.ok_or_else(|| anyhow!("{name}: entry needs tokens"))?;
+                lits.push(marshal::tokens_to_literal(toks, b, s)?);
+            } else {
+                let m = f32_inputs
+                    .get(fi)
+                    .ok_or_else(|| anyhow!("{name}: missing f32 input {}", spec.name))?;
+                if !spec.matches_matrix(m) {
+                    bail!(
+                        "{name}: input {} expects shape {:?}, got {:?}",
+                        spec.name,
+                        spec.shape,
+                        m.shape()
+                    );
+                }
+                lits.push(marshal::matrix_to_literal(m, &spec.shape)?);
+                fi += 1;
+            }
+        }
+        if fi != f32_inputs.len() {
+            bail!("{name}: {} f32 inputs supplied, {} consumed", f32_inputs.len(), fi);
+        }
+        let outs = self.execute(name, &lits)?;
+        outs.iter()
+            .zip(entry.outputs.iter())
+            .map(|(lit, spec)| marshal::literal_to_matrix(lit, spec))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Runtime::default_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_and_run_quant_scan() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        let entry = rt.entry("quant_scan").unwrap();
+        let nbins = entry.inputs[0].shape[1];
+        let k = entry.inputs[2].shape[1];
+        // Bell histogram; verify the returned error curve has an interior
+        // minimum — same invariant the python tests assert.
+        let mut rng = crate::rng::Pcg32::seeded(5);
+        let data: Vec<f32> = (0..100_000).map(|_| rng.gauss()).collect();
+        let hist = crate::tensor::histogram_with_bins(&data, nbins);
+        let centers = Matrix::from_vec(1, nbins, hist.centers.clone());
+        let pdf = Matrix::from_vec(1, nbins, hist.pdf.clone());
+        let alphas =
+            Matrix::from_fn(1, k, |_, j| hist.max * (j as f32 + 1.0) / k as f32);
+        let outs = rt
+            .execute_matrices("quant_scan", &[&centers, &pdf, &alphas], None)
+            .unwrap();
+        let errs = &outs[0];
+        assert_eq!(errs.shape(), (1, k));
+        let best = (0..k)
+            .min_by(|&a, &b| errs.get(0, a).partial_cmp(&errs.get(0, b)).unwrap())
+            .unwrap();
+        assert!(best > 0 && best < k - 1, "interior minimum expected, got {best}");
+        // And it matches the native implementation's error estimates.
+        for j in [best, 0, k - 1] {
+            let native = crate::quant::slim_quant::estimate_error(&hist, alphas.get(0, j), 4);
+            let aot = errs.get(0, j) as f64;
+            assert!(
+                (native - aot).abs() <= 1e-3 * native.max(1e-9) + 1e-6,
+                "alpha {j}: native {native} vs aot {aot}"
+            );
+        }
+    }
+
+    #[test]
+    fn layer_fwd_matches_native_kernel_math() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        let name = "layer_fwd_64x256x256r26";
+        let entry = rt.entry(name).unwrap().clone();
+        let (m, din) = (entry.inputs[0].shape[0], entry.inputs[0].shape[1]);
+        let dout = entry.inputs[1].shape[1];
+        let rank = entry.inputs[4].shape[1];
+        let mut rng = crate::rng::Pcg32::seeded(7);
+        let x = Matrix::randn(m, din, 1.0, &mut rng);
+        let wq = Matrix::from_fn(din, dout, |_, _| (rng.below(15) as f32) - 7.0);
+        let scale = Matrix::from_vec(1, 1, vec![0.1]);
+        let mask = Matrix::from_fn(din, dout, |_, _| (rng.below(2)) as f32);
+        let l = Matrix::randn(din, rank, 0.1, &mut rng);
+        let r = Matrix::randn(rank, dout, 0.1, &mut rng);
+        let outs = rt
+            .execute_matrices(name, &[&x, &wq, &scale, &mask, &l, &r], None)
+            .unwrap();
+        // Native reference: x @ (wq*alpha/7*mask) + x@l@r.
+        let w = wq.scale(0.1 / 7.0).hadamard(&mask);
+        let want = x.matmul(&w).add(&x.matmul(&l).matmul(&r));
+        assert!(outs[0].rel_err(&want) < 1e-4, "err {}", outs[0].rel_err(&want));
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        assert!(rt.entry("nonexistent").is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! TCP front-end: newline-delimited JSON over std::net.
+//!
+//! Request:  `{"model": "...", "prompt": [ints], "max_new": n}`
+//! Response: `{"ok": true, "tokens": [ints]}` or `{"ok": false, "error": "..."}`
+//! Special:  `{"cmd": "metrics"}` → one-line summary; `{"cmd": "models"}`.
+//!
+//! One thread per connection (the engines are the bottleneck, not the
+//! accept loop), with the router's batcher coalescing across connections.
+
+use super::router::Router;
+use crate::util::json::{n, obj, s, Json};
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Serve until the listener errors. Binds to `addr` ("127.0.0.1:0" picks a
+/// free port); returns the bound address via callback before blocking.
+pub fn serve(router: Arc<Router>, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    on_bound(listener.local_addr()?);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let router = router.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(router, stream);
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(router: Arc<Router>, stream: TcpStream) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let response = handle_line(&router, line.trim());
+        writer.write_all(response.to_string_compact().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+/// Process one request line (exposed for tests).
+pub fn handle_line(router: &Router, line: &str) -> Json {
+    match process(router, line) {
+        Ok(v) => v,
+        Err(e) => obj(vec![("ok", Json::Bool(false)), ("error", s(&e.to_string()))]),
+    }
+}
+
+fn process(router: &Router, line: &str) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "metrics" => Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("metrics", s(&router.metrics.summary())),
+            ])),
+            "models" => Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "models",
+                    Json::Arr(router.models().iter().map(|m| s(m)).collect()),
+                ),
+            ])),
+            other => Err(anyhow!("unknown cmd {other}")),
+        };
+    }
+    let model = req
+        .get("model")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing model"))?;
+    let prompt: Vec<u32> = req
+        .get("prompt")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing prompt"))?
+        .iter()
+        .map(|v| v.as_usize().map(|u| u as u32).ok_or_else(|| anyhow!("bad token")))
+        .collect::<Result<_>>()?;
+    let max_new = req.get("max_new").and_then(Json::as_usize).unwrap_or(16);
+    let result = router.generate(model, prompt, max_new.min(256))?;
+    Ok(obj(vec![
+        ("ok", Json::Bool(true)),
+        ("tokens", Json::Arr(result.tokens.iter().map(|&t| n(t as f64)).collect())),
+    ]))
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Send one JSON request, get one JSON response.
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string_compact().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim()).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    /// Convenience generate call.
+    pub fn generate(&mut self, model: &str, prompt: &[u32], max_new: usize) -> Result<Vec<u32>> {
+        let req = obj(vec![
+            ("model", s(model)),
+            ("prompt", Json::Arr(prompt.iter().map(|&t| n(t as f64)).collect())),
+            ("max_new", n(max_new as f64)),
+        ]);
+        let resp = self.call(&req)?;
+        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(anyhow!(
+                "server error: {}",
+                resp.get("error").and_then(Json::as_str).unwrap_or("?")
+            ));
+        }
+        Ok(resp
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_usize().map(|u| u as u32))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{by_name, init};
+    use crate::rng::Pcg32;
+    use crate::server::{BatchPolicy, Engine};
+
+    fn router() -> Arc<Router> {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let w = init(&cfg, &mut rng);
+        let mut r = Router::new();
+        r.register(
+            Engine::new("sim-125m", cfg, Arc::new(w), None),
+            BatchPolicy::default(),
+        );
+        Arc::new(r)
+    }
+
+    #[test]
+    fn handle_line_generate() {
+        let r = router();
+        let resp = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":3}"#);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(resp.get("tokens").and_then(Json::as_arr).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn handle_line_errors() {
+        let r = router();
+        let resp = handle_line(&r, "not json");
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        let resp = handle_line(&r, r#"{"model":"nope","prompt":[1]}"#);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn metrics_and_models_cmds() {
+        let r = router();
+        let resp = handle_line(&r, r#"{"cmd":"models"}"#);
+        assert!(resp.to_string_compact().contains("sim-125m"));
+        let resp = handle_line(&r, r#"{"cmd":"metrics"}"#);
+        assert!(resp.to_string_compact().contains("requests="));
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        let r = router();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let r2 = r.clone();
+        std::thread::spawn(move || {
+            let _ = serve(r2, "127.0.0.1:0", move |addr| {
+                let _ = tx.send(addr);
+            });
+        });
+        let addr = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        let mut client = Client::connect(addr).unwrap();
+        let tokens = client.generate("sim-125m", &[9, 10, 11], 4).unwrap();
+        assert_eq!(tokens.len(), 4);
+    }
+}

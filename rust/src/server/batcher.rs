@@ -1,0 +1,189 @@
+//! Dynamic batcher: collect concurrent requests into decode batches.
+//!
+//! Policy: dispatch when `max_batch` requests are queued OR the oldest
+//! queued request has waited `max_wait`; never dispatch empty. Small decode
+//! batches are the paper's serving regime (§4 Speedup).
+
+use super::engine::{GenRequest, GenResult};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+struct Queued {
+    req: GenRequest,
+    enqueued: Instant,
+    result_slot: std::sync::mpsc::Sender<GenResult>,
+}
+
+/// Thread-safe request queue with batch-forming semantics.
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: Mutex<VecDeque<Queued>>,
+    notify: Condvar,
+    closed: Mutex<bool>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            queue: Mutex::new(VecDeque::new()),
+            notify: Condvar::new(),
+            closed: Mutex::new(false),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Submit a request; returns a receiver for its result.
+    pub fn submit(&self, req: GenRequest) -> std::sync::mpsc::Receiver<GenResult> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        {
+            let mut q = self.queue.lock().unwrap();
+            q.push_back(Queued { req, enqueued: Instant::now(), result_slot: tx });
+        }
+        self.notify.notify_all();
+        rx
+    }
+
+    /// Stop the batcher; pending `next_batch` calls return None.
+    pub fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+        self.notify.notify_all();
+    }
+
+    /// Queue depth (for metrics).
+    pub fn depth(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    /// Block until a batch is ready (policy-driven) or closed.
+    /// Returns the requests plus their result senders.
+    #[allow(clippy::type_complexity)]
+    pub fn next_batch(
+        &self,
+    ) -> Option<(Vec<GenRequest>, Vec<std::sync::mpsc::Sender<GenResult>>)> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if *self.closed.lock().unwrap() && q.is_empty() {
+                return None;
+            }
+            if !q.is_empty() {
+                let oldest_wait = q.front().unwrap().enqueued.elapsed();
+                if q.len() >= self.policy.max_batch || oldest_wait >= self.policy.max_wait {
+                    let take = q.len().min(self.policy.max_batch);
+                    let mut reqs = Vec::with_capacity(take);
+                    let mut slots = Vec::with_capacity(take);
+                    for _ in 0..take {
+                        let item = q.pop_front().unwrap();
+                        reqs.push(item.req);
+                        slots.push(item.result_slot);
+                    }
+                    return Some((reqs, slots));
+                }
+                // Wait out the remaining deadline of the oldest request.
+                let remaining = self.policy.max_wait - oldest_wait;
+                let (guard, _) = self.notify.wait_timeout(q, remaining).unwrap();
+                q = guard;
+            } else {
+                let (guard, _) = self
+                    .notify
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = guard;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> GenRequest {
+        GenRequest { id, prompt: vec![1], max_new: 1 }
+    }
+
+    #[test]
+    fn batches_fill_to_max() {
+        let b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(5) });
+        for i in 0..3 {
+            let _rx = b.submit(req(i));
+        }
+        let (reqs, slots) = b.next_batch().unwrap();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(slots.len(), 3);
+        assert_eq!(reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) });
+        let _rx = b.submit(req(7));
+        let t0 = Instant::now();
+        let (reqs, _) = b.next_batch().unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(8));
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn close_unblocks() {
+        let b = Arc::new(Batcher::new(BatchPolicy::default()));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn no_request_lost_under_concurrency() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        }));
+        let n = 40;
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            rxs.push(b.submit(req(i)));
+        }
+        let b2 = b.clone();
+        let worker = std::thread::spawn(move || {
+            let mut served = 0;
+            while served < n {
+                if let Some((reqs, slots)) = b2.next_batch() {
+                    for (r, s) in reqs.iter().zip(slots) {
+                        let _ = s.send(GenResult { id: r.id, tokens: vec![] });
+                        served += 1;
+                    }
+                } else {
+                    break;
+                }
+            }
+        });
+        let mut ids: Vec<u64> = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(5)).unwrap().id)
+            .collect();
+        worker.join().unwrap();
+        ids.sort();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>());
+    }
+}

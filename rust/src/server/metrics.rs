@@ -1,0 +1,129 @@
+//! Serving metrics: request/batch counters + latency aggregates.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Lock-light metrics registry shared by router + workers.
+pub struct Metrics {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    tokens: AtomicU64,
+    /// Recent request latencies (seconds), capped ring.
+    latencies: Mutex<Vec<f64>>,
+    /// Total engine-busy seconds.
+    busy: Mutex<f64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            tokens: AtomicU64::new(0),
+            latencies: Mutex::new(Vec::new()),
+            busy: Mutex::new(0.0),
+        }
+    }
+
+    pub fn record_request(&self, latency_s: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() >= 10_000 {
+            l.remove(0);
+        }
+        l.push(latency_s);
+    }
+
+    pub fn record_batch(&self, batch_size: usize, new_tokens: usize, elapsed_s: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.tokens.fetch_add(new_tokens as u64, Ordering::Relaxed);
+        *self.busy.lock().unwrap() += elapsed_s;
+        let _ = batch_size;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens.load(Ordering::Relaxed)
+    }
+
+    /// Mean batch size so far.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches().max(1);
+        self.requests() as f64 / b as f64
+    }
+
+    /// Latency percentile (0..100) over the recent window.
+    pub fn latency_pct(&self, pct: f64) -> f64 {
+        let mut l = self.latencies.lock().unwrap().clone();
+        if l.is_empty() {
+            return 0.0;
+        }
+        l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((pct / 100.0) * (l.len() - 1) as f64).round() as usize;
+        l[idx.min(l.len() - 1)]
+    }
+
+    /// Decode throughput: generated tokens per engine-busy second.
+    pub fn tokens_per_busy_second(&self) -> f64 {
+        let busy = *self.busy.lock().unwrap();
+        if busy <= 0.0 {
+            return 0.0;
+        }
+        self.tokens() as f64 / busy
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.2} tokens={} p50={:.1}ms p99={:.1}ms tok/s={:.1}",
+            self.requests(),
+            self.batches(),
+            self.mean_batch_size(),
+            self.tokens(),
+            self.latency_pct(50.0) * 1e3,
+            self.latency_pct(99.0) * 1e3,
+            self.tokens_per_busy_second(),
+        )
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(0.010);
+        m.record_request(0.030);
+        m.record_batch(2, 8, 0.040);
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.batches(), 1);
+        assert_eq!(m.tokens(), 8);
+        assert_eq!(m.mean_batch_size(), 2.0);
+        assert!(m.latency_pct(50.0) >= 0.010);
+        assert!(m.latency_pct(99.0) <= 0.031);
+        assert!((m.tokens_per_busy_second() - 200.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_pct(99.0), 0.0);
+        assert_eq!(m.tokens_per_busy_second(), 0.0);
+        assert!(m.summary().contains("requests=0"));
+    }
+}

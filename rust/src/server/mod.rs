@@ -1,0 +1,23 @@
+//! Serving stack: request router + dynamic batcher + TCP front-end.
+//!
+//! The L3 coordination layer for deploying compressed models (vLLM-router
+//! flavored, std-thread based — the vendored crate set has no tokio):
+//!
+//! * [`engine`] — greedy-decode generation over a (compressed) model.
+//! * [`batcher`] — collects concurrent requests into decode batches under
+//!   a max-batch/max-wait policy (the paper serves with small decode
+//!   batches, per Xia et al. / Zheng et al.).
+//! * [`router`] — routes requests to named engines (model registry).
+//! * [`api`] — newline-delimited-JSON TCP protocol + a blocking client.
+//! * [`metrics`] — latency/throughput counters the benches read.
+
+pub mod api;
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{Engine, GenRequest, GenResult};
+pub use metrics::Metrics;
+pub use router::Router;

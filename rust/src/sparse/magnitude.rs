@@ -1,0 +1,41 @@
+//! Magnitude pruning (Han et al. 2015) — score = |W|.
+//!
+//! The weakest baseline in every table of the paper; kept faithful so the
+//! reproduction shows the same large gap to Wanda/SparseGPT.
+
+use super::mask::{mask_from_scores, Mask, SparsityPattern};
+use crate::tensor::Matrix;
+
+/// Prune by absolute weight magnitude.
+pub fn prune(w: &Matrix, pattern: SparsityPattern) -> (Matrix, Mask) {
+    let scores = w.map(f32::abs);
+    let mask = mask_from_scores(&scores, pattern);
+    (mask.apply(w), mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn drops_smallest() {
+        let w = Matrix::from_vec(4, 1, vec![0.1, -5.0, 0.2, 3.0]);
+        let (wp, mask) = prune(&w, SparsityPattern::TWO_FOUR);
+        assert_eq!(wp.data(), &[0.0, -5.0, 0.0, 3.0]);
+        assert!(mask.satisfies_nofm(2, 4));
+    }
+
+    #[test]
+    fn unstructured_ratio() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Matrix::randn(100, 100, 1.0, &mut rng);
+        let (wp, mask) = prune(&w, SparsityPattern::Unstructured(0.5));
+        assert!((wp.sparsity() - 0.5).abs() < 0.01);
+        assert!((mask.density() - 0.5).abs() < 0.01);
+        // Error should equal norm of dropped (smallest) entries: smaller
+        // than half the total norm for a Gaussian.
+        let err = wp.sub(&w).fro_norm_sq();
+        assert!(err < w.fro_norm_sq() * 0.25);
+    }
+}

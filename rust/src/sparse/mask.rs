@@ -1,0 +1,250 @@
+//! Sparsity patterns and masks.
+//!
+//! A [`Mask`] is a dense 0/1 byte matrix; [`SparsityPattern`] describes the
+//! constraint: unstructured at a target ratio, or n:m semi-structured
+//! (keep n of every m consecutive input-dim elements in a column's row
+//! group — 2:4 is NVIDIA's hardware-accelerated pattern, Mishra et al.
+//! 2021). Masks are built from per-element *scores* (higher = keep), so all
+//! pruners share the same selection code and only differ in scoring.
+
+use crate::tensor::Matrix;
+
+/// Sparsity constraint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SparsityPattern {
+    /// Keep the top (1−ratio) fraction of entries per layer.
+    Unstructured(f32),
+    /// Keep `n` of every `m` consecutive elements along the input dim.
+    NofM(usize, usize),
+}
+
+impl SparsityPattern {
+    /// The canonical 2:4 pattern.
+    pub const TWO_FOUR: SparsityPattern = SparsityPattern::NofM(2, 4);
+
+    /// Nominal zero fraction.
+    pub fn ratio(&self) -> f32 {
+        match self {
+            SparsityPattern::Unstructured(r) => *r,
+            SparsityPattern::NofM(n, m) => 1.0 - *n as f32 / *m as f32,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            SparsityPattern::Unstructured(r) => format!("{:.0}% unstructured", r * 100.0),
+            SparsityPattern::NofM(n, m) => format!("{n}:{m}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SparsityPattern> {
+        if let Some((n, m)) = s.split_once(':') {
+            let n = n.parse().ok()?;
+            let m = m.parse().ok()?;
+            if n > m || m == 0 {
+                return None;
+            }
+            return Some(SparsityPattern::NofM(n, m));
+        }
+        let r: f32 = s.strip_suffix('%').unwrap_or(s).parse().ok()?;
+        let r = if r > 1.0 { r / 100.0 } else { r };
+        (0.0..1.0).contains(&r).then_some(SparsityPattern::Unstructured(r))
+    }
+}
+
+/// Binary keep-mask over a weight matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    rows: usize,
+    cols: usize,
+    keep: Vec<u8>,
+}
+
+impl Mask {
+    /// All-ones (keep everything).
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Mask { rows, cols, keep: vec![1; rows * cols] }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        self.keep[i * self.cols + j] != 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        self.keep[i * self.cols + j] = v as u8;
+    }
+
+    /// Raw bytes (1 = keep).
+    pub fn bytes(&self) -> &[u8] {
+        &self.keep
+    }
+
+    /// Fraction of kept entries.
+    pub fn density(&self) -> f32 {
+        if self.keep.is_empty() {
+            return 1.0;
+        }
+        self.keep.iter().map(|&b| b as usize).sum::<usize>() as f32 / self.keep.len() as f32
+    }
+
+    /// Apply to a matrix: zero out dropped entries.
+    pub fn apply(&self, w: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), w.shape());
+        let mut out = w.clone();
+        for (x, &k) in out.data_mut().iter_mut().zip(self.keep.iter()) {
+            if k == 0 {
+                *x = 0.0;
+            }
+        }
+        out
+    }
+
+    /// As an f32 matrix of 0/1 (for HLO inputs).
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.keep.iter().map(|&b| b as f32).collect())
+    }
+
+    /// Check an exact n:m pattern along the input dimension (columns of a
+    /// d_in × d_out layout means groups run down each column).
+    pub fn satisfies_nofm(&self, n: usize, m: usize) -> bool {
+        for j in 0..self.cols {
+            let mut i = 0;
+            while i < self.rows {
+                let end = (i + m).min(self.rows);
+                let kept: usize = (i..end).map(|r| self.get(r, j) as usize).sum();
+                let expect = if end - i == m { n } else { ((end - i) * n).div_ceil(m).min(end - i) };
+                if end - i == m && kept != expect {
+                    return false;
+                }
+                i = end;
+            }
+        }
+        true
+    }
+}
+
+/// Build a mask from per-element scores under a pattern (higher score =
+/// more important = keep). The shared selection backend for all pruners.
+pub fn mask_from_scores(scores: &Matrix, pattern: SparsityPattern) -> Mask {
+    let (rows, cols) = scores.shape();
+    let mut mask = Mask { rows, cols, keep: vec![0; rows * cols] };
+    match pattern {
+        SparsityPattern::Unstructured(ratio) => {
+            let n_total = rows * cols;
+            let n_drop = ((n_total as f64) * ratio as f64).round() as usize;
+            // Partial selection: sort indices by score ascending, drop first.
+            let mut idx: Vec<u32> = (0..n_total as u32).collect();
+            let data = scores.data();
+            idx.sort_unstable_by(|&a, &b| {
+                data[a as usize].partial_cmp(&data[b as usize]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for &i in &idx[n_drop.min(n_total)..] {
+                mask.keep[i as usize] = 1;
+            }
+        }
+        SparsityPattern::NofM(n, m) => {
+            // Groups run down the input dimension (rows) of each column.
+            for j in 0..cols {
+                let mut i = 0;
+                while i < rows {
+                    let end = (i + m).min(rows);
+                    let glen = end - i;
+                    let keep_k = if glen == m { n } else { (glen * n).div_ceil(m) };
+                    // Top-keep_k scores in the group.
+                    let mut g: Vec<(f32, usize)> =
+                        (i..end).map(|r| (scores.get(r, j), r)).collect();
+                    g.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+                    for &(_, r) in g.iter().take(keep_k) {
+                        mask.keep[r * cols + j] = 1;
+                    }
+                    i = end;
+                }
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn pattern_parse() {
+        assert_eq!(SparsityPattern::parse("2:4"), Some(SparsityPattern::NofM(2, 4)));
+        assert_eq!(SparsityPattern::parse("50%"), Some(SparsityPattern::Unstructured(0.5)));
+        assert_eq!(SparsityPattern::parse("0.6"), Some(SparsityPattern::Unstructured(0.6)));
+        assert_eq!(SparsityPattern::parse("5:4"), None);
+    }
+
+    #[test]
+    fn unstructured_hits_ratio() {
+        let mut rng = Pcg32::seeded(1);
+        let scores = Matrix::randn(64, 64, 1.0, &mut rng);
+        for &r in &[0.3f32, 0.5, 0.7] {
+            let mask = mask_from_scores(&scores, SparsityPattern::Unstructured(r));
+            assert!((mask.density() - (1.0 - r)).abs() < 0.01, "ratio {r}");
+        }
+    }
+
+    #[test]
+    fn two_four_is_exact() {
+        let mut rng = Pcg32::seeded(2);
+        let scores = Matrix::randn(128, 32, 1.0, &mut rng);
+        let mask = mask_from_scores(&scores, SparsityPattern::TWO_FOUR);
+        assert!(mask.satisfies_nofm(2, 4));
+        assert!((mask.density() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nofm_keeps_top_scores() {
+        // Group scores 0,1,2,3 → keep rows with 2,3.
+        let scores = Matrix::from_vec(4, 1, vec![0.0, 1.0, 2.0, 3.0]);
+        let mask = mask_from_scores(&scores, SparsityPattern::TWO_FOUR);
+        assert!(!mask.get(0, 0));
+        assert!(!mask.get(1, 0));
+        assert!(mask.get(2, 0));
+        assert!(mask.get(3, 0));
+    }
+
+    #[test]
+    fn ragged_nofm_group() {
+        let scores = Matrix::from_vec(6, 1, vec![5.0, 1.0, 2.0, 3.0, 9.0, 0.0]);
+        let mask = mask_from_scores(&scores, SparsityPattern::TWO_FOUR);
+        // First full group keeps 2; trailing group of 2 keeps 1.
+        let kept: usize = (0..6).map(|i| mask.get(i, 0) as usize).sum();
+        assert_eq!(kept, 3);
+        assert!(mask.get(4, 0));
+    }
+
+    #[test]
+    fn apply_zeroes_dropped() {
+        let w = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut mask = Mask::ones(2, 2);
+        mask.set(0, 1, false);
+        let wp = mask.apply(&w);
+        assert_eq!(wp.data(), &[1.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn one_three_pattern() {
+        let mut rng = Pcg32::seeded(3);
+        let scores = Matrix::randn(99, 7, 1.0, &mut rng);
+        let mask = mask_from_scores(&scores, SparsityPattern::NofM(1, 3));
+        assert!(mask.satisfies_nofm(1, 3));
+        assert!((mask.density() - 1.0 / 3.0).abs() < 0.02);
+    }
+}

@@ -1,0 +1,179 @@
+//! MaskLLM-style optimized 2:4 masks (Fang et al. 2024), by local search.
+//!
+//! MaskLLM learns 2:4 masks with Gumbel-softmax against the end-to-end loss
+//! on GPUs. The reproduction substitutes a greedy local-search optimizer of
+//! the *layer-wise* output error `‖X(W⊙M − W)‖²` over the discrete space of
+//! valid n:m group choices: starting from the Wanda mask, it repeatedly
+//! proposes swapping a kept/dropped pair inside one group and accepts
+//! improvements. This captures the paper's point (Table 3): masks optimized
+//! beyond one-shot ranking beat Wanda's, and SLiM-LoRA stacks on top.
+//!
+//! The weights are *not* updated (MaskLLM keeps original weights intact).
+
+use super::mask::{Mask, SparsityPattern};
+use super::wanda;
+use crate::rng::Pcg32;
+use crate::tensor::Matrix;
+
+/// Number of proposal sweeps over all (column, group) cells.
+pub const SWEEPS: usize = 4;
+
+/// Optimize a 2:4 (or n:m) mask by local search on layer output error.
+pub fn prune(w: &Matrix, x: &Matrix, pattern: SparsityPattern) -> (Matrix, Mask) {
+    let (n, m) = match pattern {
+        SparsityPattern::NofM(n, m) => (n, m),
+        // Unstructured falls back to Wanda (MaskLLM targets semi-structured).
+        SparsityPattern::Unstructured(_) => {
+            return wanda::prune(w, &x.col_l2_norm(), pattern);
+        }
+    };
+    let (d_in, d_out) = w.shape();
+    assert_eq!(x.cols(), d_in);
+    let b = x.rows();
+
+    // Start from the Wanda mask.
+    let (_, mut mask) = wanda::prune(w, &x.col_l2_norm(), pattern);
+
+    // Per-column residual r_j = X · (w_j ⊙ m_j − w_j) = −X · (w_j ⊙ (1−m_j)).
+    // Maintained incrementally: flipping entry (i, j) from drop→keep adds
+    // X[:, i]·w_ij to r_j; keep→drop subtracts it.
+    let xt = x.transpose(); // d_in × b, rows are channel activation vectors
+    let mut resid = vec![vec![0.0f32; b]; d_out];
+    for j in 0..d_out {
+        let r = &mut resid[j];
+        for i in 0..d_in {
+            if !mask.get(i, j) {
+                let wij = w.get(i, j);
+                if wij != 0.0 {
+                    for (rv, &xv) in r.iter_mut().zip(xt.row(i)) {
+                        *rv -= wij * xv;
+                    }
+                }
+            }
+        }
+    }
+    let norm_sq = |v: &[f32]| v.iter().map(|&t| (t as f64) * (t as f64)).sum::<f64>();
+
+    let mut rng = Pcg32::seeded(0x5eed_11f3);
+    let n_groups = d_in / m;
+    for _sweep in 0..SWEEPS {
+        let mut improved = 0usize;
+        for j in 0..d_out {
+            for g in 0..n_groups {
+                let base = g * m;
+                // Collect kept / dropped rows in this group.
+                let kept: Vec<usize> = (base..base + m).filter(|&i| mask.get(i, j)).collect();
+                let dropped: Vec<usize> = (base..base + m).filter(|&i| !mask.get(i, j)).collect();
+                if kept.len() != n || dropped.is_empty() {
+                    continue;
+                }
+                // Propose swapping a random kept with a random dropped row.
+                let ik = kept[rng.below_usize(kept.len())];
+                let id = dropped[rng.below_usize(dropped.len())];
+                let (wk, wd) = (w.get(ik, j), w.get(id, j));
+                let cur = norm_sq(&resid[j]);
+                // Candidate residual: drop ik (subtract X_ik·wk), keep id
+                // (add X_id·wd).
+                let r = &mut resid[j];
+                let xk = xt.row(ik);
+                let xd = xt.row(id);
+                for idx in 0..b {
+                    r[idx] += -wk * xk[idx] + wd * xd[idx];
+                }
+                let cand = norm_sq(r);
+                if cand + 1e-12 < cur {
+                    mask.set(ik, j, false);
+                    mask.set(id, j, true);
+                    improved += 1;
+                } else {
+                    // Revert.
+                    for idx in 0..b {
+                        r[idx] -= -wk * xk[idx] + wd * xd[idx];
+                    }
+                }
+            }
+        }
+        if improved == 0 {
+            break;
+        }
+    }
+
+    (mask.apply(w), mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::mask::SparsityPattern;
+
+    fn calib(b: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::seeded(seed);
+        let mut x = Matrix::randn(b, d, 1.0, &mut rng);
+        for i in 0..b {
+            for j in 0..d / 8 {
+                let v = x.get(i, j) * 4.0;
+                x.set(i, j, v);
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn preserves_two_four() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Matrix::randn(64, 24, 0.1, &mut rng);
+        let x = calib(48, 64, 2);
+        let (_, mask) = prune(&w, &x, SparsityPattern::TWO_FOUR);
+        assert!(mask.satisfies_nofm(2, 4));
+    }
+
+    #[test]
+    fn not_worse_than_wanda() {
+        // The whole point: optimized masks should match or beat the Wanda
+        // starting point on layer output error.
+        let mut rng = Pcg32::seeded(3);
+        let w = Matrix::randn(96, 48, 0.1, &mut rng);
+        let x = calib(64, 96, 4);
+        let err = |wp: &Matrix| x.matmul(&wp.sub(&w)).fro_norm_sq();
+        let (wp_mask, _) = prune(&w, &x, SparsityPattern::TWO_FOUR);
+        let (wp_wanda, _) = wanda::prune(&w, &x.col_l2_norm(), SparsityPattern::TWO_FOUR);
+        assert!(
+            err(&wp_mask) <= err(&wp_wanda) + 1e-9,
+            "maskllm {} vs wanda {}",
+            err(&wp_mask),
+            err(&wp_wanda)
+        );
+    }
+
+    #[test]
+    fn strictly_improves_on_adversarial_case() {
+        // Construct correlated activations where Wanda's myopic ranking is
+        // suboptimal; local search must find a better mask.
+        let mut rng = Pcg32::seeded(5);
+        let b = 40;
+        let d = 32;
+        let mut x = Matrix::randn(b, d, 1.0, &mut rng);
+        // Strongly correlate adjacent channel pairs.
+        for i in 0..b {
+            for j in (0..d).step_by(2) {
+                let v = x.get(i, j);
+                x.set(i, j + 1, v * 0.95 + x.get(i, j + 1) * 0.05);
+            }
+        }
+        let w = Matrix::randn(d, 16, 0.2, &mut rng);
+        let err = |wp: &Matrix| x.matmul(&wp.sub(&w)).fro_norm_sq();
+        let (wp_mask, _) = prune(&w, &x, SparsityPattern::TWO_FOUR);
+        let (wp_wanda, _) = wanda::prune(&w, &x.col_l2_norm(), SparsityPattern::TWO_FOUR);
+        assert!(err(&wp_mask) < err(&wp_wanda), "should strictly improve");
+    }
+
+    #[test]
+    fn unstructured_falls_back() {
+        let mut rng = Pcg32::seeded(7);
+        let w = Matrix::randn(32, 16, 0.1, &mut rng);
+        let x = calib(32, 32, 8);
+        let (wp, mask) = prune(&w, &x, SparsityPattern::Unstructured(0.5));
+        assert!((mask.density() - 0.5).abs() < 0.02);
+        assert!(wp.sparsity() > 0.45);
+    }
+}

@@ -1,0 +1,113 @@
+//! One-shot pruning methods (paper §3.2 precondition, Apx D/R, Table 1).
+//!
+//! SLiM applies an off-the-shelf one-shot pruner *after* quantization; the
+//! paper uses Wanda by default and compares against magnitude pruning,
+//! SparseGPT, and (Table 3) MaskLLM. All of them are implemented here over
+//! a common [`SparsityPattern`] abstraction covering unstructured, n:m
+//! semi-structured (2:4 being the hardware-accelerated case), and arbitrary
+//! ratios.
+
+pub mod magnitude;
+pub mod mask;
+pub mod maskllm;
+pub mod sparsegpt;
+pub mod wanda;
+
+pub use mask::{Mask, SparsityPattern};
+
+use crate::tensor::Matrix;
+
+/// Which pruner to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PruneMethod {
+    /// No pruning (quant-only experiments).
+    None,
+    /// Global magnitude pruning (Han et al. 2015).
+    Magnitude,
+    /// Wanda: score = |W| · ‖x‖₂ per column (Sun et al. 2023).
+    Wanda,
+    /// SparseGPT: OBS-based with Hessian error feedback.
+    SparseGpt,
+    /// MaskLLM-like: local-search mask optimization of the layer-wise
+    /// output error (stands in for MaskLLM's learned masks).
+    MaskLlm,
+}
+
+impl PruneMethod {
+    pub fn parse(s: &str) -> Option<PruneMethod> {
+        Some(match s {
+            "none" => PruneMethod::None,
+            "magnitude" => PruneMethod::Magnitude,
+            "wanda" => PruneMethod::Wanda,
+            "sparsegpt" => PruneMethod::SparseGpt,
+            "maskllm" => PruneMethod::MaskLlm,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PruneMethod::None => "none",
+            PruneMethod::Magnitude => "Magnitude",
+            PruneMethod::Wanda => "Wanda",
+            PruneMethod::SparseGpt => "SparseGPT",
+            PruneMethod::MaskLlm => "MaskLLM*",
+        }
+    }
+}
+
+/// Prune `w` with the given method and pattern.
+///
+/// * `x_l2` — per-input-channel activation L2 norms (Wanda's metric).
+/// * `x_calib` — calibration activations (SparseGPT / MaskLLM need them).
+///
+/// Returns the pruned weights (zeros in masked positions) and the mask.
+pub fn prune(
+    w: &Matrix,
+    method: PruneMethod,
+    pattern: SparsityPattern,
+    x_l2: Option<&[f32]>,
+    x_calib: Option<&Matrix>,
+) -> (Matrix, Mask) {
+    match method {
+        PruneMethod::None => {
+            let mask = Mask::ones(w.rows(), w.cols());
+            (w.clone(), mask)
+        }
+        PruneMethod::Magnitude => magnitude::prune(w, pattern),
+        PruneMethod::Wanda => {
+            let x = x_l2.expect("Wanda requires activation norms");
+            wanda::prune(w, x, pattern)
+        }
+        PruneMethod::SparseGpt => {
+            let x = x_calib.expect("SparseGPT requires calibration activations");
+            sparsegpt::prune(w, x, pattern)
+        }
+        PruneMethod::MaskLlm => {
+            let x = x_calib.expect("MaskLLM requires calibration activations");
+            maskllm::prune(w, x, pattern)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(PruneMethod::parse("wanda"), Some(PruneMethod::Wanda));
+        assert_eq!(PruneMethod::parse("nope"), None);
+        assert_eq!(PruneMethod::SparseGpt.name(), "SparseGPT");
+    }
+
+    #[test]
+    fn none_keeps_everything() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Matrix::randn(8, 8, 1.0, &mut rng);
+        let (wp, mask) = prune(&w, PruneMethod::None, SparsityPattern::Unstructured(0.5), None, None);
+        assert_eq!(wp, w);
+        assert_eq!(mask.density(), 1.0);
+    }
+}

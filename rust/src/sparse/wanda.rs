@@ -1,0 +1,82 @@
+//! Wanda pruning (Sun et al. 2023) — score(i,j) = |W_ij| · ‖x_i‖₂.
+//!
+//! The pruner SLiM uses by default (paper §3.1 end). No weight updates, only
+//! activation-weighted magnitude scoring; the activation norms come from the
+//! calibration pass ([`crate::calib`]).
+
+use super::mask::{mask_from_scores, Mask, SparsityPattern};
+use crate::tensor::Matrix;
+
+/// Prune with Wanda scores. `x_l2[i]` is the L2 norm of input channel `i`
+/// over the calibration set.
+pub fn prune(w: &Matrix, x_l2: &[f32], pattern: SparsityPattern) -> (Matrix, Mask) {
+    assert_eq!(x_l2.len(), w.rows(), "activation norms must match d_in");
+    let scores = Matrix::from_fn(w.rows(), w.cols(), |i, j| w.get(i, j).abs() * x_l2[i]);
+    let mask = mask_from_scores(&scores, pattern);
+    (mask.apply(w), mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::sparse::magnitude;
+
+    #[test]
+    fn activation_weighting_changes_selection() {
+        // Small weight on a hot channel should beat a bigger weight on a
+        // cold channel.
+        let w = Matrix::from_vec(4, 1, vec![0.5, 0.6, 0.55, 0.58]);
+        let x = vec![10.0, 0.1, 0.1, 0.1];
+        let (_, mask) = prune(&w, &x, SparsityPattern::TWO_FOUR);
+        assert!(mask.get(0, 0), "hot-channel weight must survive");
+    }
+
+    #[test]
+    fn reduces_output_error_vs_magnitude() {
+        // Wanda's claim: lower ‖X(W − W^C)‖ than magnitude pruning when
+        // activations are non-uniform.
+        let mut rng = Pcg32::seeded(1);
+        let d_in = 96;
+        let d_out = 64;
+        let w = Matrix::randn(d_in, d_out, 0.1, &mut rng);
+        let mut x = Matrix::randn(128, d_in, 1.0, &mut rng);
+        // Make every 4th channel hot so hotness varies *within* each 2:4
+        // group — the regime where activation-weighted scoring matters.
+        for i in 0..128 {
+            for j in (0..d_in).step_by(4) {
+                let v = x.get(i, j) * 8.0;
+                x.set(i, j, v);
+            }
+        }
+        let x_l2 = x.col_l2_norm();
+        let (wp_wanda, _) = prune(&w, &x_l2, SparsityPattern::TWO_FOUR);
+        let (wp_mag, _) = magnitude::prune(&w, SparsityPattern::TWO_FOUR);
+        let err = |wp: &Matrix| x.matmul(&wp.sub(&w)).fro_norm_sq();
+        assert!(
+            err(&wp_wanda) < err(&wp_mag),
+            "wanda {} vs magnitude {}",
+            err(&wp_wanda),
+            err(&wp_mag)
+        );
+    }
+
+    #[test]
+    fn uniform_activations_reduce_to_magnitude() {
+        let mut rng = Pcg32::seeded(2);
+        let w = Matrix::randn(32, 16, 1.0, &mut rng);
+        let x = vec![1.0; 32];
+        let (wp_w, _) = prune(&w, &x, SparsityPattern::Unstructured(0.5));
+        let (wp_m, _) = magnitude::prune(&w, SparsityPattern::Unstructured(0.5));
+        assert_eq!(wp_w, wp_m);
+    }
+
+    #[test]
+    fn exact_two_four() {
+        let mut rng = Pcg32::seeded(3);
+        let w = Matrix::randn(64, 48, 1.0, &mut rng);
+        let x: Vec<f32> = (0..64).map(|_| rng.f32() + 0.1).collect();
+        let (_, mask) = prune(&w, &x, SparsityPattern::TWO_FOUR);
+        assert!(mask.satisfies_nofm(2, 4));
+    }
+}

@@ -1,0 +1,399 @@
+//! Dense row-major f32 matrices — the numeric substrate for the whole
+//! compression pipeline.
+//!
+//! The vendored crate set has no ndarray/nalgebra, so this module carries a
+//! small, fast `Matrix` type: row-major `Vec<f32>` storage, a blocked and
+//! threaded matmul tuned for the sizes the pipeline uses (≤ a few thousand),
+//! and the reductions the compression algorithms need (norms, column stats,
+//! histograms).
+
+mod ops;
+mod stats;
+
+pub use ops::{matmul, matmul_at_b, matmul_a_bt};
+pub use stats::{histogram, histogram_with_bins, kurtosis, paper_bin_count, summary, Histogram, Summary};
+
+use crate::rng::Pcg32;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Matrix({}x{}, ‖·‖={:.4})", self.rows, self.cols, self.fro_norm())
+    }
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix from existing row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape {}x{} vs len {}", rows, cols, data.len());
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity-like matrix (1.0 on the main diagonal).
+    pub fn eye(n: usize) -> Self {
+        Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Gaussian random matrix with the given std.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg32) -> Self {
+        let data = (0..rows * cols).map(|_| rng.gauss() * std).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// (rows, cols).
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw row-major buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Borrow row `i` mutably.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise map in place.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in self.data.iter_mut() {
+            *x = f(*x);
+        }
+    }
+
+    /// Elementwise binary op into a new matrix.
+    pub fn zip(&self, other: &Matrix, f: impl Fn(f32, f32) -> f32) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    /// self + other.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        self.zip(other, |a, b| a + b)
+    }
+
+    /// self - other.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        self.zip(other, |a, b| a - b)
+    }
+
+    /// Elementwise (Hadamard) product.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        self.zip(other, |a, b| a * b)
+    }
+
+    /// Scale by a constant.
+    pub fn scale(&self, s: f32) -> Matrix {
+        self.map(|x| x * s)
+    }
+
+    /// In-place `self += s * other` (axpy).
+    pub fn axpy(&mut self, s: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Squared Frobenius norm (f64 accumulation).
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+    }
+
+    /// Maximum |x| over all elements.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64) as f32
+    }
+
+    /// Per-column mean of |x| (activation statistics use this).
+    pub fn col_abs_mean(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (a, &x) in acc.iter_mut().zip(row.iter()) {
+                *a += x.abs() as f64;
+            }
+        }
+        acc.iter().map(|&a| (a / self.rows as f64) as f32).collect()
+    }
+
+    /// Per-column L2 norm (Wanda's activation metric).
+    pub fn col_l2_norm(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (a, &x) in acc.iter_mut().zip(row.iter()) {
+                *a += (x as f64) * (x as f64);
+            }
+        }
+        acc.iter().map(|&a| a.sqrt() as f32).collect()
+    }
+
+    /// Multiply each row i by `d[i]` — i.e. `diag(d) · self`.
+    pub fn scale_rows(&self, d: &[f32]) -> Matrix {
+        assert_eq!(d.len(), self.rows);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let s = d[i];
+            for x in out.row_mut(i) {
+                *x *= s;
+            }
+        }
+        out
+    }
+
+    /// Multiply each column j by `d[j]` — i.e. `self · diag(d)`.
+    pub fn scale_cols(&self, d: &[f32]) -> Matrix {
+        assert_eq!(d.len(), self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for (x, &s) in out.row_mut(i).iter_mut().zip(d.iter()) {
+                *x *= s;
+            }
+        }
+        out
+    }
+
+    /// Extract a sub-block (row range, col range) as a copy.
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Matrix::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.row_mut(i - r0).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write a sub-block starting at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Matrix) {
+        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols);
+        for i in 0..b.rows {
+            self.row_mut(r0 + i)[c0..c0 + b.cols].copy_from_slice(b.row(i));
+        }
+    }
+
+    /// Fraction of exactly-zero entries.
+    pub fn sparsity(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0.0).count() as f32 / self.data.len() as f32
+    }
+
+    /// Matrix product `self · other` (threaded, blocked).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        ops::matmul(self, other)
+    }
+
+    /// Relative Frobenius distance ‖self − other‖ / ‖other‖.
+    pub fn rel_err(&self, other: &Matrix) -> f32 {
+        let denom = other.fro_norm().max(1e-12);
+        self.sub(other).fro_norm() / denom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m.get(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Pcg32::seeded(1);
+        let m = Matrix::randn(37, 53, 1.0, &mut rng);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (53, 37));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(a.add(&b).data(), &[5.0, 5.0, 5.0, 5.0]);
+        assert_eq!(a.sub(&b).data(), &[-3.0, -1.0, 1.0, 3.0]);
+        assert_eq!(a.hadamard(&b).data(), &[4.0, 6.0, 6.0, 4.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn norms_and_stats() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(m.max_abs(), 4.0);
+        assert_eq!(m.sparsity(), 0.5);
+        assert!((m.mean() - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn col_stats() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, -2.0, 2.0, -3.0, 2.0, 0.0]);
+        let am = m.col_abs_mean();
+        assert_eq!(am, vec![2.0, 2.0, 1.0]);
+        let l2 = m.col_l2_norm();
+        assert!((l2[0] - (10f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn diag_scaling() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let r = m.scale_rows(&[2.0, 10.0]);
+        assert_eq!(r.data(), &[2.0, 4.0, 30.0, 40.0]);
+        let c = m.scale_cols(&[2.0, 10.0]);
+        assert_eq!(c.data(), &[2.0, 20.0, 6.0, 40.0]);
+    }
+
+    #[test]
+    fn blocks() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let b = m.block(1, 3, 2, 4);
+        assert_eq!(b.data(), &[6.0, 7.0, 10.0, 11.0]);
+        let mut m2 = Matrix::zeros(4, 4);
+        m2.set_block(1, 2, &b);
+        assert_eq!(m2.get(2, 3), 11.0);
+        assert_eq!(m2.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Matrix::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[1.5, 2.5, 3.5]);
+    }
+}

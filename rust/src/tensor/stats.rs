@@ -1,0 +1,187 @@
+//! Histograms and distribution statistics.
+//!
+//! SLiM-Quant (paper Alg. 1) works on the histogram of |W|: the error
+//! integrals `E_quant`/`E_clip` are evaluated by numerical integration over
+//! the histogram bins, which shares error computation between all elements
+//! falling into the same bin (paper Apx T). This module provides that
+//! histogram plus a few generic summary statistics.
+
+use super::Matrix;
+
+/// Uniform-bin histogram over `[0, max]`.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Bin centers, `len = bins`.
+    pub centers: Vec<f32>,
+    /// Normalized mass per bin (sums to 1 unless the input was empty).
+    pub pdf: Vec<f32>,
+    /// Bin width.
+    pub width: f32,
+    /// Upper edge of the histogram (max observed value).
+    pub max: f32,
+}
+
+/// Histogram of `|x|` over the matrix with the paper's bin-count rule:
+/// `max(512, min(numel/1000, 20_000))`.
+pub fn histogram(w: &Matrix) -> Histogram {
+    let bins = paper_bin_count(w.len());
+    histogram_with_bins(w.data(), bins)
+}
+
+/// The bin-count rule from paper Apx T.
+pub fn paper_bin_count(numel: usize) -> usize {
+    (numel / 1000).clamp(512, 20_000)
+}
+
+/// Histogram of `|x|` with an explicit bin count.
+pub fn histogram_with_bins(data: &[f32], bins: usize) -> Histogram {
+    assert!(bins > 0);
+    let max = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max == 0.0 || data.is_empty() {
+        return Histogram {
+            centers: (0..bins).map(|i| (i as f32 + 0.5) / bins as f32).collect(),
+            pdf: vec![0.0; bins],
+            width: 1.0 / bins as f32,
+            max: 0.0,
+        };
+    }
+    let width = max / bins as f32;
+    let mut counts = vec![0u64; bins];
+    for &x in data {
+        let b = ((x.abs() / width) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    let n = data.len() as f32;
+    Histogram {
+        centers: (0..bins).map(|i| (i as f32 + 0.5) * width).collect(),
+        pdf: counts.iter().map(|&c| c as f32 / n).collect(),
+        width,
+        max,
+    }
+}
+
+impl Histogram {
+    /// Number of bins.
+    pub fn bins(&self) -> usize {
+        self.centers.len()
+    }
+
+    /// Mean of the represented |x| distribution.
+    pub fn mean(&self) -> f32 {
+        self.centers
+            .iter()
+            .zip(self.pdf.iter())
+            .map(|(&c, &p)| c * p)
+            .sum()
+    }
+}
+
+/// Summary statistics over a slice (mean, std, min, max) with f64
+/// accumulation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub mean: f32,
+    pub std: f32,
+    pub min: f32,
+    pub max: f32,
+}
+
+/// Compute [`Summary`] statistics.
+pub fn summary(data: &[f32]) -> Summary {
+    if data.is_empty() {
+        return Summary { mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+    }
+    let n = data.len() as f64;
+    let mean = data.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = data.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in data {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    Summary { mean: mean as f32, std: var.sqrt() as f32, min: lo, max: hi }
+}
+
+/// Kurtosis (Fisher, excess) — used to characterize weight-tail heaviness in
+/// the quantizer diagnostics.
+pub fn kurtosis(data: &[f32]) -> f32 {
+    let s = summary(data);
+    if s.std == 0.0 || data.is_empty() {
+        return 0.0;
+    }
+    let n = data.len() as f64;
+    let m = s.mean as f64;
+    let sd = s.std as f64;
+    let m4 = data.iter().map(|&x| ((x as f64 - m) / sd).powi(4)).sum::<f64>() / n;
+    (m4 - 3.0) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn bin_count_rule() {
+        assert_eq!(paper_bin_count(1000), 512);
+        assert_eq!(paper_bin_count(1_000_000), 1000);
+        assert_eq!(paper_bin_count(100_000_000), 20_000);
+    }
+
+    #[test]
+    fn histogram_mass_sums_to_one() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Matrix::randn(100, 100, 0.5, &mut rng);
+        let h = histogram(&w);
+        let total: f32 = h.pdf.iter().sum();
+        assert!((total - 1.0).abs() < 1e-4, "total {total}");
+        assert!(h.max > 0.0);
+    }
+
+    #[test]
+    fn histogram_locates_mass() {
+        // All values equal → all mass in the last bin.
+        let data = vec![2.0f32; 100];
+        let h = histogram_with_bins(&data, 10);
+        assert!((h.pdf[9] - 1.0).abs() < 1e-6);
+        assert_eq!(h.max, 2.0);
+    }
+
+    #[test]
+    fn histogram_of_zeros() {
+        let h = histogram_with_bins(&[0.0; 10], 8);
+        assert_eq!(h.max, 0.0);
+        assert!(h.pdf.iter().all(|&p| p == 0.0));
+    }
+
+    #[test]
+    fn histogram_mean_close_to_abs_mean() {
+        let mut rng = Pcg32::seeded(2);
+        let data: Vec<f32> = (0..100_000).map(|_| rng.gauss()).collect();
+        let h = histogram_with_bins(&data, 1000);
+        let abs_mean = data.iter().map(|x| x.abs()).sum::<f32>() / data.len() as f32;
+        assert!((h.mean() - abs_mean).abs() < 0.01, "{} vs {}", h.mean(), abs_mean);
+    }
+
+    #[test]
+    fn summary_basic() {
+        let s = summary(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-6);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn gaussian_kurtosis_near_zero() {
+        let mut rng = Pcg32::seeded(3);
+        let data: Vec<f32> = (0..50_000).map(|_| rng.gauss()).collect();
+        assert!(kurtosis(&data).abs() < 0.15);
+    }
+
+    #[test]
+    fn laplace_kurtosis_positive() {
+        let mut rng = Pcg32::seeded(4);
+        let data: Vec<f32> = (0..50_000).map(|_| rng.laplace(1.0)).collect();
+        assert!(kurtosis(&data) > 1.5, "laplace excess kurtosis should be ~3");
+    }
+}

@@ -1,0 +1,302 @@
+//! Training drivers: Rust owns the loop, the AOT HLO owns the math.
+//!
+//! * [`pretrain`] — drives the fused `train_step_<cfg>` artifact (forward +
+//!   backward + AdamW in one executable) over synthetic-corpus batches to
+//!   produce the sim-family checkpoints. Parameters live as device literals
+//!   across steps — no per-step marshalling.
+//! * [`finetune_adapters`] — the paper's PEFT recipe (§3.4): drives
+//!   `ft_step_<cfg>`, which updates only the low-rank adapters with frozen
+//!   compressed base weights. For `…^Q` variants the adapters are
+//!   re-quantized after fine-tuning (post-hoc STE approximation; see
+//!   DESIGN.md).
+
+use crate::data::Corpus;
+use crate::model::{self, CompressedModel, ModelConfig, Weights};
+use crate::rng::Pcg32;
+use crate::runtime::{marshal, Runtime};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+
+/// Default pretraining hyperparameters.
+pub const PRETRAIN_LR: f32 = 3e-3;
+pub const FT_LR: f32 = 1e-3;
+
+fn scalar_lit(v: f32) -> Result<xla::Literal> {
+    marshal::matrix_to_literal(&Matrix::from_vec(1, 1, vec![v]), &[1, 1])
+}
+
+/// Result of a pretraining run.
+pub struct TrainReport {
+    pub weights: Weights,
+    pub losses: Vec<f64>,
+}
+
+/// Pretrain a config from scratch on the corpus for `steps` steps.
+pub fn pretrain(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    corpus: &Corpus,
+    steps: usize,
+    seed: u64,
+) -> Result<TrainReport> {
+    let entry_name = format!("train_step_{}", cfg.name);
+    let entry = rt.entry(&entry_name)?.clone();
+    let batch = entry.meta_usize("batch").ok_or_else(|| anyhow!("no batch meta"))?;
+    let seq = entry.meta_usize("seq").ok_or_else(|| anyhow!("no seq meta"))?;
+    let n_params = entry.meta_usize("n_params").ok_or_else(|| anyhow!("no n_params"))?;
+
+    let mut rng = Pcg32::seeded(seed);
+    let init = model::init(cfg, &mut rng);
+    let order = model::param_order(cfg);
+
+    // Initial device literals: params + zeroed m/v.
+    let mut state: Vec<xla::Literal> = Vec::with_capacity(3 * n_params);
+    for name in &order {
+        let m = init.expect(name);
+        state.push(marshal::matrix_to_literal(m, &[m.rows(), m.cols()])?);
+    }
+    for name in &order {
+        let m = init.expect(name);
+        let z = Matrix::zeros(m.rows(), m.cols());
+        state.push(marshal::matrix_to_literal(&z, &[m.rows(), m.cols()])?);
+    }
+    for name in &order {
+        let m = init.expect(name);
+        let z = Matrix::zeros(m.rows(), m.cols());
+        state.push(marshal::matrix_to_literal(&z, &[m.rows(), m.cols()])?);
+    }
+
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let toks = corpus.batch(batch, seq, &mut rng);
+        let mut inputs = std::mem::take(&mut state);
+        inputs.push(scalar_lit((step + 1) as f32)?);
+        inputs.push(scalar_lit(PRETRAIN_LR)?);
+        inputs.push(marshal::tokens_to_literal(&toks, batch, seq)?);
+        let mut outs = rt.execute(&entry_name, &inputs)?;
+        let loss_lit = outs.pop().ok_or_else(|| anyhow!("missing loss output"))?;
+        let loss: Vec<f32> = loss_lit.to_vec().map_err(|e| anyhow!("loss read: {e:?}"))?;
+        losses.push(loss[0] as f64);
+        state = outs; // params+m+v roll forward as literals
+    }
+
+    // Unpack final params.
+    let mut weights = Weights::new();
+    for (i, name) in order.iter().enumerate() {
+        let spec = &entry.outputs[i];
+        let m = marshal::literal_to_matrix(&state[i], spec)?;
+        weights.set(name, m);
+    }
+    Ok(TrainReport { weights, losses })
+}
+
+/// Where cached checkpoints live.
+pub fn checkpoint_path(cfg: &ModelConfig) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("runs/weights")
+        .join(format!("{}.bin", cfg.name))
+}
+
+/// Pretrain unless a cached checkpoint exists (experiments share these).
+pub fn pretrain_cached(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    corpus: &Corpus,
+    steps: usize,
+) -> Result<Weights> {
+    let path = checkpoint_path(cfg);
+    if path.exists() {
+        return Weights::load(&path);
+    }
+    crate::info!("pretraining {} for {} steps", cfg.name, steps);
+    let report = pretrain(rt, cfg, corpus, steps, 0x7a11)?;
+    crate::info!(
+        "{}: loss {:.3} -> {:.3}",
+        cfg.name,
+        report.losses.first().copied().unwrap_or(0.0),
+        report.losses.last().copied().unwrap_or(0.0)
+    );
+    report.weights.save(&path)?;
+    Ok(report.weights)
+}
+
+/// Fine-tune the adapters of a compressed model (paper §3.4). Mutates the
+/// compressed model's adapters and refreshed overrides in place; returns
+/// the loss curve.
+pub fn finetune_adapters(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    weights: &Weights,
+    cm: &mut CompressedModel,
+    corpus: &Corpus,
+    steps: usize,
+    requantize_adapters: bool,
+) -> Result<Vec<f64>> {
+    let entry_name = format!("ft_step_{}", cfg.name);
+    let entry = rt.entry(&entry_name)?.clone();
+    let batch = entry.meta_usize("batch").ok_or_else(|| anyhow!("no batch meta"))?;
+    let seq = entry.meta_usize("seq").ok_or_else(|| anyhow!("no seq meta"))?;
+    let n_c = entry.meta_usize("n_cparams").ok_or_else(|| anyhow!("no n_cparams"))?;
+    let n_t = entry.meta_usize("n_trainable").ok_or_else(|| anyhow!("no n_trainable"))?;
+
+    // Build the compressed parameter list in manifest order.
+    let cspecs = &entry.inputs[..n_c];
+    let mut cparams: Vec<Matrix> = Vec::with_capacity(n_c);
+    for spec in cspecs {
+        let m = compressed_tensor(cfg, weights, cm, &spec.name, &spec.shape)?;
+        cparams.push(m);
+    }
+
+    // Trainable slots (adapters), per manifest order within cspecs.
+    let trainable_idx: Vec<usize> = (0..n_c)
+        .filter(|&i| cspecs[i].name.ends_with(".l") || cspecs[i].name.ends_with(".r"))
+        .collect();
+    if trainable_idx.len() != n_t {
+        return Err(anyhow!("trainable count mismatch: {} vs {n_t}", trainable_idx.len()));
+    }
+
+    // Optimizer state starts at zero; adapters update in `cparams` each
+    // step (frozen tensors are re-marshalled — they are tiny at sim scale).
+    let mut opt_m: Vec<Matrix> = trainable_idx
+        .iter()
+        .map(|&i| Matrix::zeros(cparams[i].rows(), cparams[i].cols()))
+        .collect();
+    let mut opt_v: Vec<Matrix> = opt_m.clone();
+
+    let mut rng = Pcg32::seeded(0xf17e);
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let toks = corpus.batch(batch, seq, &mut rng);
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(n_c + 2 * n_t + 3);
+        for (m, s) in cparams.iter().zip(cspecs.iter()) {
+            inputs.push(marshal::matrix_to_literal(m, &s.shape)?);
+        }
+        for m in opt_m.iter().chain(opt_v.iter()) {
+            inputs.push(marshal::matrix_to_literal(m, &[m.rows(), m.cols()])?);
+        }
+        inputs.push(scalar_lit((step + 1) as f32)?);
+        inputs.push(scalar_lit(FT_LR)?);
+        inputs.push(marshal::tokens_to_literal(&toks, batch, seq)?);
+        let mut outs = rt.execute(&entry_name, &inputs)?;
+        let loss_lit = outs.pop().ok_or_else(|| anyhow!("missing loss"))?;
+        let loss: Vec<f32> = loss_lit.to_vec().map_err(|e| anyhow!("loss read: {e:?}"))?;
+        losses.push(loss[0] as f64);
+        // Outputs: new_t (n_t), new_m (n_t), new_v (n_t).
+        let out_specs = &entry.outputs;
+        for (k, lit) in outs.iter().enumerate() {
+            let mat = marshal::literal_to_matrix(lit, &out_specs[k])?;
+            if k < n_t {
+                cparams[trainable_idx[k]] = mat;
+            } else if k < 2 * n_t {
+                opt_m[k - n_t] = mat;
+            } else {
+                opt_v[k - 2 * n_t] = mat;
+            }
+        }
+    }
+
+    // Write the tuned adapters back into the compressed model and refresh
+    // the effective-weight overrides.
+    for (i, spec) in cspecs.iter().enumerate() {
+        let (is_l, base) = if let Some(b) = spec.name.strip_suffix(".l") {
+            (true, b.to_string())
+        } else if let Some(b) = spec.name.strip_suffix(".r") {
+            (false, b.to_string())
+        } else {
+            continue;
+        };
+        if let Some(layer) = cm.layers.get_mut(&base) {
+            if let Some(ad) = layer.adapters.as_mut() {
+                if is_l {
+                    ad.l = cparams[i].clone();
+                } else {
+                    ad.r = cparams[i].clone();
+                }
+            }
+        }
+    }
+    if requantize_adapters {
+        for layer in cm.layers.values_mut() {
+            if let Some(ad) = layer.adapters.as_mut() {
+                *ad = crate::lowrank::adapter_quant::quantize(ad);
+            }
+        }
+    }
+    for (name, layer) in cm.layers.iter() {
+        cm.overrides.insert(name.clone(), layer.effective());
+    }
+    Ok(losses)
+}
+
+/// Resolve one compressed-parameter tensor by manifest name.
+fn compressed_tensor(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    cm: &CompressedModel,
+    name: &str,
+    shape: &[usize],
+) -> Result<Matrix> {
+    let _ = cfg;
+    // Linear-derived tensors end in .wq/.scale/.mask/.l/.r.
+    for suffix in [".wq", ".scale", ".mask", ".l", ".r"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if let Some(layer) = cm.layers.get(base) {
+                let (r, c) = (shape[0], shape.get(1).copied().unwrap_or(1));
+                return Ok(match suffix {
+                    ".wq" => codes_matrix(layer, r, c),
+                    ".scale" => Matrix::from_vec(1, 1, vec![per_tensor_scale(layer)]),
+                    ".mask" => layer.mask.to_matrix(),
+                    ".l" => adapter_part(layer, true, r, c),
+                    ".r" => adapter_part(layer, false, r, c),
+                    _ => unreachable!(),
+                });
+            }
+        }
+    }
+    // Everything else is a dense (frozen) tensor.
+    weights
+        .get(name)
+        .cloned()
+        .ok_or_else(|| anyhow!("no tensor for compressed param {name}"))
+}
+
+fn per_tensor_scale(layer: &crate::compress::CompressedLayer) -> f32 {
+    if layer.scales.len() == 1 {
+        layer.scales[0]
+    } else {
+        // Group-quantized bases can't be represented by one scale; the FT
+        // path is only used with per-tensor SLiM-Quant (paper's FT rows).
+        layer.scales.iter().fold(0.0f32, |m, &s| m.max(s))
+    }
+}
+
+fn codes_matrix(layer: &crate::compress::CompressedLayer, r: usize, c: usize) -> Matrix {
+    // Reconstruct integer codes from the fake-quant weights: codes =
+    // wc / (alpha/levels). Exact for per-tensor quantization.
+    let alpha = per_tensor_scale(layer);
+    let levels = crate::quant::levels(layer.bits.min(8));
+    if alpha <= 0.0 {
+        return Matrix::zeros(r, c);
+    }
+    layer.wc.map(|v| (v * levels / alpha).round())
+}
+
+fn adapter_part(layer: &crate::compress::CompressedLayer, left: bool, r: usize, c: usize) -> Matrix {
+    match &layer.adapters {
+        Some(a) => {
+            let m = if left { &a.l } else { &a.r };
+            if m.shape() == (r, c) {
+                return m.clone();
+            }
+            // Rank mismatch (config rank_ratio != AOT default): pad/trim.
+            let mut out = Matrix::zeros(r, c);
+            for i in 0..r.min(m.rows()) {
+                let cols = c.min(m.cols());
+                out.row_mut(i)[..cols].copy_from_slice(&m.row(i)[..cols]);
+            }
+            out
+        }
+        None => Matrix::zeros(r, c),
+    }
+}

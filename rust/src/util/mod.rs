@@ -1,0 +1,98 @@
+//! Small shared utilities: a minimal JSON parser/writer (the vendored crate
+//! set has no serde_json — this backs the artifact manifest and the server's
+//! wire format), wall-clock timing helpers, and a markdown table builder used
+//! by every experiment driver.
+
+pub mod json;
+pub mod table;
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Human-readable duration.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 90.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.1}m", s / 60.0)
+    }
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+/// Simple stderr logger honoring `RUST_LOG`-ish verbosity via `SLIM_LOG`
+/// (0=quiet, 1=info [default], 2=debug).
+pub fn log_level() -> u8 {
+    std::env::var("SLIM_LOG").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// Log at info level.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 1 {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Log at debug level.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 2 {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(0.0000005).ends_with("µs"));
+        assert!(fmt_secs(0.005).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+        assert!(fmt_secs(600.0).ends_with('m'));
+    }
+
+    #[test]
+    fn fmt_bytes_ranges() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.00KiB");
+        assert!(fmt_bytes(3 * 1024 * 1024).starts_with("3.00MiB"));
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, s) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! End-to-end integration: AOT training → compression → adapters → eval.
+//!
+//! These tests require `make artifacts`; they skip (with a notice) when the
+//! manifest is missing so `cargo test` stays green on a fresh clone.
+
+use slim::compress::{CompressConfig, Preset};
+use slim::data::{Corpus, CorpusSpec};
+use slim::eval;
+use slim::model::{self, by_name, ActivationTap, Batch};
+use slim::rng::Pcg32;
+use slim::runtime::Runtime;
+use slim::sparse::SparsityPattern;
+use slim::train;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping integration test: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime loads"))
+}
+
+#[test]
+fn native_and_aot_forward_agree() {
+    let Some(rt) = runtime() else { return };
+    let cfg = by_name("sim-125m").unwrap();
+    let mut rng = Pcg32::seeded(3);
+    let w = model::init(&cfg, &mut rng);
+    let entry = rt.entry("lm_fwd_sim-125m").unwrap().clone();
+    let b = entry.meta_usize("batch").unwrap();
+    let seq = entry.meta_usize("seq").unwrap();
+    let toks: Vec<u32> = (0..b * seq).map(|_| rng.below(cfg.vocab as u32)).collect();
+
+    let order = model::param_order(&cfg);
+    let params: Vec<&slim::tensor::Matrix> = order.iter().map(|n| w.expect(n)).collect();
+    let outs = rt
+        .execute_matrices("lm_fwd_sim-125m", &params, Some((&toks, b, seq)))
+        .unwrap();
+    let batch = Batch::new(toks, b, seq);
+    let native = model::forward(&cfg, &w, &batch, None, None);
+    let rel = outs[0].rel_err(&native);
+    assert!(rel < 2e-3, "AOT vs native logits rel err {rel}");
+}
+
+#[test]
+fn aot_training_reduces_loss_and_beats_chance() {
+    let Some(rt) = runtime() else { return };
+    let cfg = by_name("sim-125m").unwrap();
+    let corpus = Corpus::generate(CorpusSpec::SynthWeb, 60_000);
+    let report = train::pretrain(&rt, &cfg, &corpus, 120, 42).expect("training runs");
+    let first = report.losses[..10].iter().sum::<f64>() / 10.0;
+    let last = report.losses[report.losses.len() - 10..].iter().sum::<f64>() / 10.0;
+    assert!(
+        last < first - 1.0,
+        "training should cut loss by >1 nat: {first:.3} -> {last:.3}"
+    );
+
+    // The briefly-trained model must already beat chance on the suite and
+    // beat the untrained model on perplexity.
+    let ppl = eval::perplexity(&cfg, &report.weights, None, &corpus, 6);
+    assert!(ppl < 250.0, "trained ppl {ppl}");
+    let zs = eval::zero_shot(&cfg, &report.weights, None, &corpus, 30);
+    assert!(zs.average > 55.0, "zero-shot avg {}", zs.average);
+
+    // Native ppl ≈ AOT ppl (validates the lm_loss artifact path).
+    let ppl_aot = eval::perplexity_aot(&rt, &cfg, &report.weights, &corpus, 3).unwrap();
+    let ratio = ppl / ppl_aot;
+    assert!(
+        (0.7..1.4).contains(&ratio),
+        "native {ppl:.2} vs aot {ppl_aot:.2}"
+    );
+}
+
+#[test]
+fn compression_pipeline_and_ft_improve_compressed_model() {
+    let Some(rt) = runtime() else { return };
+    let cfg = by_name("sim-125m").unwrap();
+    let corpus = Corpus::generate(CorpusSpec::SynthWeb, 60_000);
+    let weights = train::pretrain(&rt, &cfg, &corpus, 150, 7).expect("train").weights;
+
+    // Calibration taps (paper: 128 sequences).
+    let mut rng = Pcg32::seeded(9);
+    let calib_toks = corpus.calibration(8, cfg.max_seq, &mut rng);
+    let batch = Batch::new(calib_toks, 8, cfg.max_seq);
+    let mut taps = ActivationTap::new();
+    model::forward(&cfg, &weights, &batch, Some(&mut taps), None);
+
+    let dense_ppl = eval::perplexity(&cfg, &weights, None, &corpus, 6);
+
+    // Wanda-only (no adapters) vs SLiM-LoRA: adapters must recover ppl.
+    let cfg_no_lora = Preset::WandaGroupAbsMax.config(Some(SparsityPattern::TWO_FOUR), 4);
+    let cm_no_lora = model::compress_model(&cfg, &weights, &taps, &cfg_no_lora);
+    let ppl_no_lora =
+        eval::perplexity(&cfg, &weights, Some(&cm_no_lora.overrides), &corpus, 6);
+
+    let slim_cfg = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+    let mut cm_slim = model::compress_model(&cfg, &weights, &taps, &slim_cfg);
+    let ppl_slim = eval::perplexity(&cfg, &weights, Some(&cm_slim.overrides), &corpus, 6);
+
+    assert!(dense_ppl < ppl_slim, "compression must cost some ppl");
+    assert!(
+        ppl_slim < ppl_no_lora,
+        "SLiM adapters should beat no-adapters: {ppl_slim:.2} vs {ppl_no_lora:.2}"
+    );
+
+    // PEFT fine-tuning (paper §3.4) should further improve (or at least not
+    // hurt) the compressed model.
+    let losses = train::finetune_adapters(
+        &rt, &cfg, &weights, &mut cm_slim, &corpus, 30, false,
+    )
+    .expect("ft runs");
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let ppl_ft = eval::perplexity(&cfg, &weights, Some(&cm_slim.overrides), &corpus, 6);
+    assert!(
+        ppl_ft < ppl_slim * 1.05,
+        "FT should not regress: {ppl_ft:.2} vs {ppl_slim:.2}"
+    );
+}

@@ -1,0 +1,239 @@
+//! Property-based invariant sweeps (hand-rolled generators — no proptest in
+//! the vendored set). Each test draws many random instances and asserts an
+//! invariant the paper's math depends on.
+
+use slim::compress::{compress_layer, CompressConfig, LayerCalib};
+use slim::lowrank::{naive, slim_lora, LoraMethod};
+use slim::quant::pack::{pack_int2, pack_int4, unpack_int2, unpack_int4};
+use slim::quant::{absmax, group_absmax, slim_quant, QuantMethod};
+use slim::rng::Pcg32;
+use slim::sparse::mask::{mask_from_scores, SparsityPattern};
+use slim::sparse::PruneMethod;
+use slim::tensor::{histogram, Matrix};
+use slim::util::json::Json;
+
+fn rand_dims(rng: &mut Pcg32) -> (usize, usize) {
+    (8 + 4 * rng.below_usize(24), 8 + rng.below_usize(96))
+}
+
+#[test]
+fn prop_masks_satisfy_patterns() {
+    let mut rng = Pcg32::seeded(101);
+    for trial in 0..40 {
+        let (d_in, d_out) = rand_dims(&mut rng);
+        let scores = Matrix::randn(d_in, d_out, 1.0, &mut rng);
+        // n:m patterns are exact.
+        for &(n, m) in &[(2usize, 4usize), (1, 4), (3, 4), (1, 2)] {
+            let mask = mask_from_scores(&scores, SparsityPattern::NofM(n, m));
+            assert!(mask.satisfies_nofm(n, m), "trial {trial} {n}:{m}");
+        }
+        // Unstructured ratios hit their targets within 2%.
+        for &r in &[0.25f32, 0.5, 0.75] {
+            let mask = mask_from_scores(&scores, SparsityPattern::Unstructured(r));
+            assert!(
+                (mask.density() - (1.0 - r)).abs() < 0.02,
+                "trial {trial} ratio {r}: density {}",
+                mask.density()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_quantizer_error_ordering() {
+    // For any weight distribution: more bits → lower error; group ≤
+    // per-tensor AbsMax error; SLiM-Quant ≤ AbsMax error (that's its
+    // optimality claim, paper Eq. 7).
+    let mut rng = Pcg32::seeded(202);
+    for trial in 0..25 {
+        let (d_in, d_out) = rand_dims(&mut rng);
+        let heavy = trial % 2 == 0;
+        let w = Matrix::from_fn(d_in, d_out, |_, _| {
+            if heavy {
+                rng.laplace(0.05)
+            } else {
+                rng.gauss() * 0.05
+            }
+        });
+        let e_absmax4 = absmax::quantize(&w, 4).mse(&w);
+        let e_absmax8 = absmax::quantize(&w, 8).mse(&w);
+        let e_group4 = group_absmax::quantize(&w, 4, 32).mse(&w);
+        let e_slim4 = slim_quant::quantize(&w, 4).mse(&w);
+        assert!(e_absmax8 <= e_absmax4, "trial {trial}: bits monotonicity");
+        assert!(e_group4 <= e_absmax4 + 1e-12, "trial {trial}: group beats tensor");
+        assert!(e_slim4 <= e_absmax4 * 1.001, "trial {trial}: slim-quant optimality");
+    }
+}
+
+#[test]
+fn prop_slim_quant_alpha_is_argmin_on_grid() {
+    // find_alpha must be within 5% error of a dense grid scan.
+    let mut rng = Pcg32::seeded(303);
+    for trial in 0..10 {
+        let data: Vec<f32> = (0..20_000)
+            .map(|_| if trial % 2 == 0 { rng.laplace(0.1) } else { rng.gauss() * 0.2 })
+            .collect();
+        let h = slim::tensor::histogram_with_bins(&data, 512);
+        let alpha = slim_quant::find_alpha(&h, 4);
+        let e_found = slim_quant::estimate_error(&h, alpha, 4);
+        let mut e_best = f64::INFINITY;
+        for k in 1..=800 {
+            let a = h.max * k as f32 / 800.0;
+            e_best = e_best.min(slim_quant::estimate_error(&h, a, 4));
+        }
+        assert!(e_found <= e_best * 1.05, "trial {trial}: {e_found} vs {e_best}");
+    }
+}
+
+#[test]
+fn prop_adapters_never_hurt_reconstruction() {
+    // For any (W, W^C): adding the computed adapters must not increase
+    // ‖W − Ŵ‖ (Eckart–Young for naive; saliency-norm argument for SLiM).
+    let mut rng = Pcg32::seeded(404);
+    for trial in 0..20 {
+        let (d_in, d_out) = rand_dims(&mut rng);
+        let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.05));
+        let wc = w.map(|v| {
+            let q = (v * 10.0).round() / 10.0;
+            if q.abs() < 0.03 {
+                0.0
+            } else {
+                q
+            }
+        });
+        let rank = (d_in.min(d_out) / 10).max(1);
+        let x: Vec<f32> = (0..d_in).map(|_| 0.05 + rng.f32()).collect();
+        let before = wc.sub(&w).fro_norm_sq();
+        let a_naive = naive::adapters(&w, &wc, rank);
+        let after_naive = wc.add(&a_naive.product()).sub(&w).fro_norm_sq();
+        assert!(after_naive <= before * 1.001, "trial {trial} naive");
+        let a_slim = slim_lora::adapters(&w, &wc, &x, rank);
+        let sal_before = slim_lora::saliency_error(&w, &wc, &x);
+        let sal_after = slim_lora::saliency_error(&w, &wc.add(&a_slim.product()), &x);
+        assert!(sal_after <= sal_before * 1.001, "trial {trial} slim");
+    }
+}
+
+#[test]
+fn prop_saliency_function_axioms() {
+    // Additivity + invertibility for arbitrary activation vectors,
+    // including zeros and huge outliers (paper §3.2's requirements).
+    let mut rng = Pcg32::seeded(505);
+    for _ in 0..30 {
+        let d = 4 + rng.below_usize(60);
+        let mut x: Vec<f32> = (0..d).map(|_| rng.f32() * 10.0).collect();
+        if rng.below(3) == 0 {
+            x[rng.below_usize(d)] = 0.0; // zero channel
+        }
+        if rng.below(3) == 0 {
+            x[rng.below_usize(d)] = 1e6; // outlier channel
+        }
+        let s = slim_lora::saliency_vector(&x);
+        assert!(s.iter().all(|&v| v > 0.0), "invertibility requires positivity");
+        let a = Matrix::randn(d, 8, 1.0, &mut rng);
+        let b = Matrix::randn(d, 8, 1.0, &mut rng);
+        let lhs = a.add(&b).scale_rows(&s);
+        let rhs = a.scale_rows(&s).add(&b.scale_rows(&s));
+        assert!(lhs.rel_err(&rhs) < 1e-5, "additivity");
+        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        assert!(a.scale_rows(&s).scale_rows(&inv).rel_err(&a) < 1e-4, "invertibility");
+    }
+}
+
+#[test]
+fn prop_pack_round_trips() {
+    let mut rng = Pcg32::seeded(606);
+    for _ in 0..50 {
+        let len = rng.below_usize(2000);
+        let c4: Vec<i8> = (0..len).map(|_| rng.below(15) as i8 - 7).collect();
+        assert_eq!(unpack_int4(&pack_int4(&c4)), c4);
+        let c2: Vec<i8> = (0..len).map(|_| rng.below(3) as i8 - 1).collect();
+        assert_eq!(unpack_int2(&pack_int2(&c2)), c2);
+    }
+}
+
+#[test]
+fn prop_pipeline_error_decomposition() {
+    // e_final ≤ ‖W − W^C‖² always (adapters only help), and the staged
+    // errors are consistent with the intermediate matrices.
+    let mut rng = Pcg32::seeded(707);
+    for trial in 0..12 {
+        let d_in = 32 + 4 * rng.below_usize(16);
+        let d_out = 24 + rng.below_usize(48);
+        let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.04));
+        let acts = Matrix::randn(48, d_in, 1.0, &mut rng);
+        let calib = LayerCalib::from_activations(acts);
+        let cfg = CompressConfig {
+            quant: QuantMethod::SlimQuantW,
+            bits: 4,
+            prune: PruneMethod::Wanda,
+            pattern: Some(SparsityPattern::TWO_FOUR),
+            lora: LoraMethod::Slim,
+            rank_ratio: 0.1,
+            quantize_adapters: trial % 2 == 0,
+        };
+        let out = compress_layer(&w, &calib, &cfg);
+        let raw = out.wc.sub(&w).fro_norm_sq();
+        assert!(out.e_final <= raw * 1.05, "trial {trial}: {0} vs {raw}", out.e_final);
+        assert!(out.mask.satisfies_nofm(2, 4));
+        assert!(out.e_quant > 0.0 && out.e_sparse > 0.0);
+    }
+}
+
+#[test]
+fn prop_json_round_trip_fuzz() {
+    // Generate random JSON values, serialize, reparse, compare.
+    let mut rng = Pcg32::seeded(808);
+    fn gen(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.f64() * 2e6).round() / 100.0 - 5000.0),
+            3 => Json::Str(
+                (0..rng.below_usize(12))
+                    .map(|_| char::from(32 + rng.below(90) as u8))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below_usize(5)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below_usize(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for _ in 0..200 {
+        let v = gen(&mut rng, 0);
+        let text = v.to_string_compact();
+        let re = Json::parse(&text).unwrap_or_else(|e| panic!("{e}: {text}"));
+        assert_eq!(v, re, "{text}");
+    }
+}
+
+#[test]
+fn prop_histogram_integral_matches_direct_mse() {
+    // estimate_error over the histogram must approximate the direct MSE of
+    // fake-quantizing the data (validates the numerical integration).
+    let mut rng = Pcg32::seeded(909);
+    for trial in 0..8 {
+        let data: Vec<f32> = (0..30_000).map(|_| rng.gauss() * 0.1).collect();
+        let w = Matrix::from_vec(100, 300, data.clone());
+        let h = histogram(&w);
+        let alpha = 0.05 + 0.05 * trial as f32;
+        let est = slim_quant::estimate_error(&h, alpha, 4);
+        let direct: f64 = data
+            .iter()
+            .map(|&x| {
+                let q = slim::quant::fake_quant_value(x, alpha, 4);
+                ((x - q) as f64).powi(2)
+            })
+            .sum::<f64>()
+            / data.len() as f64;
+        // The histogram integrates |x| with finite bins; expect a few
+        // percent agreement.
+        assert!(
+            (est - direct).abs() <= direct * 0.2 + 1e-8,
+            "trial {trial}: est {est} direct {direct}"
+        );
+    }
+}
