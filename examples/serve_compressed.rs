@@ -24,11 +24,21 @@ fn main() -> anyhow::Result<()> {
     let b = ctx.bundle(model)?;
     let cm = ctx.compress(&b, Preset::SlimLora, Some(SparsityPattern::TWO_FOUR), 4);
 
-    let engine = Engine::new(
+    // Kernel-backed serving: decode matmuls run on packed int4-2:4 kernels
+    // through the KV-cached forward pass (not dense f32 overrides).
+    let kernels = slim::model::CompressedWeights::from_model(&cm);
+    let census: Vec<String> =
+        kernels.kernel_census().iter().map(|(k, n)| format!("{n}x {k}")).collect();
+    println!(
+        "[setup] packed kernels: {} ({} weight bytes/step)",
+        census.join(", "),
+        kernels.weight_bytes()
+    );
+    let engine = Engine::with_kernels(
         model,
         b.cfg.clone(),
         Arc::new(b.weights.clone()),
-        Some(Arc::new(cm.overrides)),
+        Arc::new(kernels),
     );
     let mut router = Router::new();
     router.register(

@@ -7,6 +7,11 @@
 //! per-(group, column) scale inside the loop; the measured difference
 //! between the two is exactly the paper's Table 23 group-quantization
 //! slow-down.
+//!
+//! Both kernels partition their output columns across `std::thread::scope`
+//! workers via [`super::parallel_columns`]; each worker tile-decodes into
+//! private scratch, so the packed kernels scale with cores like the dense
+//! `tensor::ops::matmul` baseline they are measured against.
 
 use super::MatmulKernel;
 use crate::quant::pack::{pack_int4, PackedInt4};
@@ -35,6 +40,45 @@ impl Int4Kernel {
             d_out,
         }
     }
+
+    /// Compute columns `[j0, j1)` of `x·W` into `out` (row-major
+    /// `m × (j1-j0)`, zero-initialized), accumulating in code space.
+    ///
+    /// Tile-decode strategy (§Perf log in EXPERIMENTS.md): decode a
+    /// [KT × bw] tile of codes into an f32 scratch once, then run m
+    /// vectorizable axpys over it. The decode cost amortizes over the
+    /// batch (1 unpack per m FMAs) and the packed bytes stream at ⅛ the
+    /// dense f32 traffic.
+    fn decode_block(&self, x: &Matrix, j0: usize, j1: usize, out: &mut [f32]) {
+        let (m, d_in) = x.shape();
+        let n = self.d_out;
+        let bw = j1 - j0;
+        const KT: usize = 32;
+        let mut scratch = vec![0.0f32; KT * bw];
+        for k0 in (0..d_in).step_by(KT) {
+            let kt = KT.min(d_in - k0);
+            for kk in 0..kt {
+                super::unpack_int4_row(
+                    &self.packed.bytes,
+                    (k0 + kk) * n + j0,
+                    &mut scratch[kk * bw..(kk + 1) * bw],
+                );
+            }
+            for i in 0..m {
+                let xrow = &x.row(i)[k0..k0 + kt];
+                let yrow = &mut out[i * bw..(i + 1) * bw];
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let srow = &scratch[kk * bw..(kk + 1) * bw];
+                    for (yv, &sv) in yrow.iter_mut().zip(srow.iter()) {
+                        *yv += xv * sv;
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl MatmulKernel for Int4Kernel {
@@ -43,60 +87,14 @@ impl MatmulKernel for Int4Kernel {
     }
 
     fn matmul(&self, x: &Matrix) -> Matrix {
-        // Tile-decode strategy (§Perf log in EXPERIMENTS.md): decode a
-        // [KT × n] tile of codes into an f32 scratch once, then run m
-        // vectorizable axpys over it. The decode cost amortizes over the
-        // batch (1 unpack per m FMAs) and the packed bytes stream at ⅛ the
-        // dense f32 traffic. Accumulation stays in code space; the
-        // per-tensor dequant multiplies y once at the end.
         let (m, d_in) = x.shape();
         assert_eq!(d_in, self.d_in);
         let n = self.d_out;
-        let mut y = Matrix::zeros(m, n);
+        let mut y = super::parallel_columns(m, n, m * d_in * n, |j0, j1, out| {
+            self.decode_block(x, j0, j1, out)
+        });
+        // Accumulation stays in code space; one per-tensor dequant at the end.
         let dequant = self.alpha / levels(self.bits);
-        const KT: usize = 32;
-        let mut scratch = vec![0.0f32; KT * n];
-        let even = n % 2 == 0;
-        for k0 in (0..d_in).step_by(KT) {
-            let kt = KT.min(d_in - k0);
-            // Decode tile rows [k0, k0+kt) into scratch.
-            for kk in 0..kt {
-                let start_elem = (k0 + kk) * n;
-                let srow = &mut scratch[kk * n..kk * n + n];
-                if even {
-                    let row_bytes =
-                        &self.packed.bytes[start_elem / 2..start_elem / 2 + n / 2];
-                    for (jj, &b) in row_bytes.iter().enumerate() {
-                        srow[2 * jj] = ((b & 0x0F) as i32 - 8) as f32;
-                        srow[2 * jj + 1] = ((b >> 4) as i32 - 8) as f32;
-                    }
-                } else {
-                    for (j, s) in srow.iter_mut().enumerate() {
-                        let e = start_elem + j;
-                        let b = self.packed.bytes[e / 2];
-                        *s = if e % 2 == 0 {
-                            ((b & 0x0F) as i32 - 8) as f32
-                        } else {
-                            ((b >> 4) as i32 - 8) as f32
-                        };
-                    }
-                }
-            }
-            // FMA pass: y[i] += x[i][k0+kk] * scratch[kk].
-            for i in 0..m {
-                let xrow = &x.row(i)[k0..k0 + kt];
-                let yrow = y.row_mut(i);
-                for (kk, &xv) in xrow.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let srow = &scratch[kk * n..kk * n + n];
-                    for (yv, &sv) in yrow.iter_mut().zip(srow.iter()) {
-                        *yv += xv * sv;
-                    }
-                }
-            }
-        }
         for v in y.data_mut() {
             *v *= dequant;
         }
@@ -132,6 +130,44 @@ impl GroupInt4Kernel {
             d_out,
         }
     }
+
+    /// Same tile-decode structure as the per-tensor kernel, but the
+    /// per-(group, column) scale must be folded in *during decode* —
+    /// one extra multiply + scale load per weight element. That is the
+    /// measured group-quantization overhead Table 23 reports.
+    fn decode_block(&self, x: &Matrix, j0: usize, j1: usize, out: &mut [f32]) {
+        let (m, d_in) = x.shape();
+        let n = self.d_out;
+        let bw = j1 - j0;
+        const KT: usize = 32;
+        let mut scratch = vec![0.0f32; KT * bw];
+        for k0 in (0..d_in).step_by(KT) {
+            let kt = KT.min(d_in - k0);
+            for kk in 0..kt {
+                let k = k0 + kk;
+                let g = k / self.group_size;
+                let srow = &mut scratch[kk * bw..(kk + 1) * bw];
+                super::unpack_int4_row(&self.packed.bytes, k * n + j0, srow);
+                let scales = &self.dequant[g * n + j0..g * n + j1];
+                for (s, &sc) in srow.iter_mut().zip(scales.iter()) {
+                    *s *= sc;
+                }
+            }
+            for i in 0..m {
+                let xrow = &x.row(i)[k0..k0 + kt];
+                let yrow = &mut out[i * bw..(i + 1) * bw];
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let srow = &scratch[kk * bw..(kk + 1) * bw];
+                    for (yv, &sv) in yrow.iter_mut().zip(srow.iter()) {
+                        *yv += xv * sv;
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl MatmulKernel for GroupInt4Kernel {
@@ -140,60 +176,12 @@ impl MatmulKernel for GroupInt4Kernel {
     }
 
     fn matmul(&self, x: &Matrix) -> Matrix {
-        // Same tile-decode structure as the per-tensor kernel, but the
-        // per-(group, column) scale must be folded in *during decode* —
-        // one extra multiply + scale load per weight element. That is the
-        // measured group-quantization overhead Table 23 reports.
         let (m, d_in) = x.shape();
         assert_eq!(d_in, self.d_in);
         let n = self.d_out;
-        let mut y = Matrix::zeros(m, n);
-        const KT: usize = 32;
-        let mut scratch = vec![0.0f32; KT * n];
-        let even = n % 2 == 0;
-        for k0 in (0..d_in).step_by(KT) {
-            let kt = KT.min(d_in - k0);
-            for kk in 0..kt {
-                let k = k0 + kk;
-                let g = k / self.group_size;
-                let scales = &self.dequant[g * n..(g + 1) * n];
-                let start_elem = k * n;
-                let srow = &mut scratch[kk * n..kk * n + n];
-                if even {
-                    let row_bytes =
-                        &self.packed.bytes[start_elem / 2..start_elem / 2 + n / 2];
-                    for (jj, &b) in row_bytes.iter().enumerate() {
-                        srow[2 * jj] = ((b & 0x0F) as i32 - 8) as f32 * scales[2 * jj];
-                        srow[2 * jj + 1] = ((b >> 4) as i32 - 8) as f32 * scales[2 * jj + 1];
-                    }
-                } else {
-                    for (j, s) in srow.iter_mut().enumerate() {
-                        let e = start_elem + j;
-                        let b = self.packed.bytes[e / 2];
-                        let c = if e % 2 == 0 {
-                            (b & 0x0F) as i32 - 8
-                        } else {
-                            (b >> 4) as i32 - 8
-                        };
-                        *s = c as f32 * scales[j];
-                    }
-                }
-            }
-            for i in 0..m {
-                let xrow = &x.row(i)[k0..k0 + kt];
-                let yrow = y.row_mut(i);
-                for (kk, &xv) in xrow.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let srow = &scratch[kk * n..kk * n + n];
-                    for (yv, &sv) in yrow.iter_mut().zip(srow.iter()) {
-                        *yv += xv * sv;
-                    }
-                }
-            }
-        }
-        y
+        super::parallel_columns(m, n, m * d_in * n, |j0, j1, out| {
+            self.decode_block(x, j0, j1, out)
+        })
     }
 
     fn weight_bytes(&self) -> usize {

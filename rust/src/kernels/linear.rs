@@ -1,0 +1,228 @@
+//! [`LinearOp`] — one servable linear layer: a packed matmul kernel plus
+//! the optional low-rank adapter term.
+//!
+//! This is the dispatch point that lets the KV-cached forward pass
+//! (`model::forward_cached`) run compressed models on packed kernels
+//! instead of dense f32 "effective weight" overrides: `y = kernel(x)
+//! (+ x·L·R)`, where the kernel streams ⅛ (int4) or ~¹⁄₁₄ (int4-2:4) of
+//! the dense weight bytes. [`LinearOp::from_compressed`] picks the best
+//! kernel for a [`CompressedLayer`] produced by the compression pipeline:
+//!
+//! * per-tensor int4 + exact 2:4 mask → [`Sparse24Kernel`]
+//! * per-tensor int4                  → [`Int4Kernel`]
+//! * group-scale int4                 → [`GroupInt4Kernel`]
+//! * anything else (fp32, odd bits)   → [`DenseKernel`] fallback
+
+use super::{DenseKernel, GroupInt4Kernel, Int4Kernel, LowRankApply, MatmulKernel, Sparse24Kernel};
+use crate::compress::CompressedLayer;
+use crate::quant::Quantized;
+use crate::sparse::Mask;
+use crate::tensor::Matrix;
+
+/// The kernel backing one linear layer.
+pub enum KernelKind {
+    Dense(DenseKernel),
+    Int4(Int4Kernel),
+    GroupInt4(GroupInt4Kernel),
+    Sparse24(Sparse24Kernel),
+}
+
+impl KernelKind {
+    fn as_kernel(&self) -> &dyn MatmulKernel {
+        match self {
+            KernelKind::Dense(k) => k,
+            KernelKind::Int4(k) => k,
+            KernelKind::GroupInt4(k) => k,
+            KernelKind::Sparse24(k) => k,
+        }
+    }
+}
+
+/// A prepared linear layer: packed kernel + optional adapters.
+pub struct LinearOp {
+    kernel: KernelKind,
+    adapter: Option<LowRankApply>,
+}
+
+impl LinearOp {
+    /// Plain dense layer (baseline / fallback).
+    pub fn dense(w: Matrix) -> Self {
+        LinearOp { kernel: KernelKind::Dense(DenseKernel::new(w)), adapter: None }
+    }
+
+    /// Per-tensor packed int4 layer.
+    pub fn int4(q: &Quantized, adapter: Option<LowRankApply>) -> Self {
+        LinearOp { kernel: KernelKind::Int4(Int4Kernel::from_quantized(q)), adapter }
+    }
+
+    /// 2:4-compressed per-tensor int4 layer.
+    pub fn sparse24(q: &Quantized, mask: &Mask, adapter: Option<LowRankApply>) -> Self {
+        LinearOp { kernel: KernelKind::Sparse24(Sparse24Kernel::from_parts(q, mask)), adapter }
+    }
+
+    /// Group-scale packed int4 layer.
+    pub fn group_int4(q: &Quantized, adapter: Option<LowRankApply>) -> Self {
+        LinearOp { kernel: KernelKind::GroupInt4(GroupInt4Kernel::from_quantized(q)), adapter }
+    }
+
+    /// Build the best packed kernel for a compression-pipeline output.
+    /// Output matches `x · layer.effective()` within fp tolerance — the
+    /// dense-override accuracy path and this serving path agree.
+    pub fn from_compressed(layer: &CompressedLayer) -> Self {
+        let adapter = layer.adapters.as_ref().map(LowRankApply::new);
+        let (d_in, _) = layer.wc.shape();
+        let per_tensor =
+            layer.group_size == 0 && layer.scales.len() == 1 && layer.scales[0] > 0.0;
+        let grouped = layer.group_size > 0 && !layer.scales.is_empty();
+        if layer.bits != 4 || !(per_tensor || grouped) {
+            return LinearOp { kernel: KernelKind::Dense(DenseKernel::new(layer.wc.clone())), adapter };
+        }
+        // `None` means the values are off the code·α/L grid (SLiM-Quant^O's
+        // folded channel scaling): packed codes would not reproduce them.
+        let Some(q) = Quantized::try_from_fake_quant(
+            &layer.wc,
+            layer.scales.clone(),
+            layer.group_size,
+            layer.bits,
+        ) else {
+            return LinearOp {
+                kernel: KernelKind::Dense(DenseKernel::new(layer.wc.clone())),
+                adapter,
+            };
+        };
+        let kernel = if per_tensor && d_in % 4 == 0 && layer.mask.satisfies_nofm(2, 4) {
+            KernelKind::Sparse24(Sparse24Kernel::from_parts(&q, &layer.mask))
+        } else if per_tensor {
+            KernelKind::Int4(Int4Kernel::from_quantized(&q))
+        } else {
+            KernelKind::GroupInt4(GroupInt4Kernel::from_quantized(&q))
+        };
+        LinearOp { kernel, adapter }
+    }
+
+    /// y = x·W (+ x·L·R).
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        let mut y = self.kernel.as_kernel().matmul(x);
+        if let Some(a) = &self.adapter {
+            a.apply(x, &mut y);
+        }
+        y
+    }
+
+    /// Display name of the backing kernel.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.as_kernel().name()
+    }
+
+    /// Weight bytes streamed per call (kernel + adapters) — the traffic
+    /// model behind the decode-regime speedups.
+    pub fn weight_bytes(&self) -> usize {
+        self.kernel.as_kernel().weight_bytes()
+            + self.adapter.as_ref().map(|a| a.weight_bytes()).unwrap_or(0)
+    }
+
+    /// Adapter rank (0 if none).
+    pub fn rank(&self) -> usize {
+        self.adapter.as_ref().map(|a| a.rank()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_layer, CompressConfig, LayerCalib};
+    use crate::rng::Pcg32;
+    use crate::sparse::SparsityPattern;
+    use crate::tensor::Matrix;
+
+    fn layer(seed: u64, cfg: &CompressConfig) -> (CompressedLayer, Matrix) {
+        let mut rng = Pcg32::seeded(seed);
+        let (d_in, d_out) = (64, 48);
+        let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.05));
+        let x = Matrix::randn(96, d_in, 1.0, &mut rng);
+        let calib = LayerCalib::from_activations(x);
+        let out = compress_layer(&w, &calib, cfg);
+        let probe = Matrix::randn(6, d_in, 1.0, &mut rng);
+        (out, probe)
+    }
+
+    /// The kernel-backed op must match the dense-override eval path
+    /// (`x · effective()`) for every pipeline configuration.
+    #[test]
+    fn matches_dense_override_path() {
+        // Flagship: per-tensor int4 + 2:4 + adapters → sparse24 kernel.
+        let slim = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+        let (out, x) = layer(1, &slim);
+        let op = LinearOp::from_compressed(&out);
+        assert_eq!(op.kernel_name(), "int4-2:4");
+        assert!(op.rank() > 0);
+        let err = op.matmul(&x).rel_err(&x.matmul(&out.effective()));
+        assert!(err < 1e-5, "sparse24 op err {err}");
+
+        // Quant-only → int4 kernel.
+        let mut qonly = slim;
+        qonly.pattern = None;
+        qonly.prune = crate::sparse::PruneMethod::None;
+        let (out, x) = layer(2, &qonly);
+        let op = LinearOp::from_compressed(&out);
+        assert_eq!(op.kernel_name(), "int4-dense");
+        let err = op.matmul(&x).rel_err(&x.matmul(&out.effective()));
+        assert!(err < 1e-5, "int4 op err {err}");
+
+        // Group quantization → group kernel.
+        let mut grp = slim;
+        grp.quant = crate::quant::QuantMethod::GroupAbsMax;
+        let (out, x) = layer(3, &grp);
+        let op = LinearOp::from_compressed(&out);
+        assert_eq!(op.kernel_name(), "int4-group");
+        let err = op.matmul(&x).rel_err(&x.matmul(&out.effective()));
+        assert!(err < 1e-5, "group op err {err}");
+
+        // Dense pass-through → dense kernel, exact.
+        let (out, x) = layer(4, &CompressConfig::dense());
+        let op = LinearOp::from_compressed(&out);
+        assert_eq!(op.kernel_name(), "dense-f32");
+        assert_eq!(op.matmul(&x), x.matmul(&out.effective()));
+    }
+
+    /// Off-grid fake-quant values (SLiM-Quant^O folds per-channel scaling
+    /// into wq, so values are no longer `code·α/L`) must fall back to the
+    /// dense kernel — packing them would corrupt salient channels.
+    #[test]
+    fn off_grid_fake_quant_falls_back_to_dense() {
+        // Simulate the folded channel scaling deterministically: move one
+        // row of the fake-quant weights off the grid.
+        let slim = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+        let (mut out, x) = layer(6, &slim);
+        for v in out.wc.row_mut(0) {
+            *v *= 0.5;
+        }
+        let op = LinearOp::from_compressed(&out);
+        assert_eq!(op.kernel_name(), "dense-f32");
+        let err = op.matmul(&x).rel_err(&x.matmul(&out.effective()));
+        assert!(err < 1e-5, "off-grid op err {err}");
+
+        // And the real ^O preset must stay numerically faithful to the
+        // dense-override path whichever kernel the builder picks.
+        let mut cfg = slim;
+        cfg.quant = crate::quant::QuantMethod::SlimQuantO;
+        let (out, x) = layer(7, &cfg);
+        let op = LinearOp::from_compressed(&out);
+        let err = op.matmul(&x).rel_err(&x.matmul(&out.effective()));
+        assert!(err < 1e-5, "slim-quant-o op err {err}");
+    }
+
+    #[test]
+    fn compressed_op_streams_fewer_bytes() {
+        let slim = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+        let (out, _) = layer(5, &slim);
+        let op = LinearOp::from_compressed(&out);
+        let dense_bytes = out.wc.len() * 4;
+        assert!(
+            op.weight_bytes() < dense_bytes / 2,
+            "{} !< {}",
+            op.weight_bytes(),
+            dense_bytes / 2
+        );
+    }
+}

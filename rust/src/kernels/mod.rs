@@ -5,19 +5,34 @@
 //! again, which is decisive in the memory-bound decode regime. The same
 //! mechanism exists on CPU: these kernels store weights packed (int4 /
 //! 2:4-compressed int4) and measure real wall-clock speedups against the
-//! dense f32 baseline at small decode batch sizes. The experiment drivers
-//! (F3/F4/T23) report these measurements alongside the GPU roofline
-//! projections in [`crate::perfmodel`].
+//! dense f32 baseline at small decode batch sizes.
+//!
+//! Two layers of API:
+//!
+//! * [`MatmulKernel`] — raw packed matmuls ([`DenseKernel`], [`Int4Kernel`],
+//!   [`GroupInt4Kernel`], [`Sparse24Kernel`]). The packed kernels partition
+//!   their output columns across `std::thread::scope` workers (each worker
+//!   tile-decodes into private scratch), so they scale with cores like the
+//!   dense `tensor::ops::matmul` baseline they are benchmarked against.
+//! * [`LinearOp`] — one servable linear layer: a kernel plus the optional
+//!   low-rank adapter term `x·L·R`. Built from the compression pipeline's
+//!   [`crate::compress::CompressedLayer`] output, and dispatched by the
+//!   KV-cached forward pass (`model::forward_cached`) so the serving hot
+//!   loop runs on packed weights instead of dense f32 overrides. The
+//!   end-to-end decode speedup is measured by `benches/decode.rs`
+//!   (the Fig. 3/4 decomposition, now at the token-generation level).
 //!
 //! All kernels compute `y = x · W (+ x·L·R)` for row-major `x: m×d_in`.
 
 pub mod dense;
 pub mod int4;
+pub mod linear;
 pub mod lowrank;
 pub mod sparse24;
 
 pub use dense::DenseKernel;
 pub use int4::{GroupInt4Kernel, Int4Kernel};
+pub use linear::{KernelKind, LinearOp};
 pub use lowrank::LowRankApply;
 pub use sparse24::Sparse24Kernel;
 
@@ -31,6 +46,80 @@ pub trait MatmulKernel {
     fn matmul(&self, x: &Matrix) -> Matrix;
     /// Bytes of weight data touched per call (the traffic model).
     fn weight_bytes(&self) -> usize;
+}
+
+/// Below this many multiply-adds the thread fan-out costs more than it
+/// saves — the same threshold the dense `tensor::ops` baseline uses.
+pub(crate) use crate::tensor::PAR_THRESHOLD;
+
+/// Unpack `out.len()` consecutive int4 codes starting at logical element
+/// `start` into f32. Takes the bulk two-codes-per-byte path when aligned,
+/// the per-element path otherwise (odd widths / offsets).
+pub(crate) fn unpack_int4_row(bytes: &[u8], start: usize, out: &mut [f32]) {
+    if start % 2 == 0 && out.len() % 2 == 0 {
+        let row = &bytes[start / 2..start / 2 + out.len() / 2];
+        for (jj, &b) in row.iter().enumerate() {
+            out[2 * jj] = ((b & 0x0F) as i32 - 8) as f32;
+            out[2 * jj + 1] = ((b >> 4) as i32 - 8) as f32;
+        }
+    } else {
+        for (j, o) in out.iter_mut().enumerate() {
+            let e = start + j;
+            let b = bytes[e / 2];
+            *o = if e % 2 == 0 {
+                ((b & 0x0F) as i32 - 8) as f32
+            } else {
+                ((b >> 4) as i32 - 8) as f32
+            };
+        }
+    }
+}
+
+/// Run `block(j0, j1, out)` over column ranges of an `m × n` output,
+/// partitioned across threads. Each worker fills a private contiguous
+/// `m × (j1-j0)` row-major block (so packed kernels can decode into
+/// worker-local scratch without write contention); the blocks are stitched
+/// into the final row-major matrix afterwards (an O(m·n) copy, negligible
+/// next to the O(d_in·n) decode). Falls back to a single serial call when
+/// `work` (multiply-adds) is below [`PAR_THRESHOLD`].
+pub(crate) fn parallel_columns<F>(m: usize, n: usize, work: usize, block: F) -> Matrix
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let nt = if work < PAR_THRESHOLD { 1 } else { crate::tensor::num_threads().min(n) };
+    let mut y = Matrix::zeros(m, n);
+    if nt <= 1 || m == 0 || n == 0 {
+        // The full range in block layout IS row-major.
+        block(0, n, y.data_mut());
+        return y;
+    }
+    let chunk = n.div_ceil(nt);
+    let mut buf = vec![0.0f32; m * n];
+    std::thread::scope(|s| {
+        let blk = &block;
+        let mut rest = buf.as_mut_slice();
+        let mut j0 = 0usize;
+        while j0 < n {
+            let j1 = (j0 + chunk).min(n);
+            let (head, tail) = rest.split_at_mut(m * (j1 - j0));
+            rest = tail;
+            s.spawn(move || blk(j0, j1, head));
+            j0 = j1;
+        }
+    });
+    // Stitch the column blocks back into row-major order.
+    let mut off = 0usize;
+    let mut j0 = 0usize;
+    while j0 < n {
+        let j1 = (j0 + chunk).min(n);
+        let bw = j1 - j0;
+        for i in 0..m {
+            y.row_mut(i)[j0..j1].copy_from_slice(&buf[off + i * bw..off + (i + 1) * bw]);
+        }
+        off += m * bw;
+        j0 = j1;
+    }
+    y
 }
 
 #[cfg(test)]
@@ -63,6 +152,49 @@ mod tests {
         let dense_sp = DenseKernel::new(wc);
         let err = k_sp.matmul(&x).rel_err(&dense_sp.matmul(&x));
         assert!(err < 1e-5, "sparse24 err {err}");
+    }
+
+    /// Same agreement at shapes big enough to cross the threading threshold
+    /// (exercises the column-partitioned multi-worker path).
+    #[test]
+    fn threaded_kernels_agree_with_dense_reference() {
+        let mut rng = Pcg32::seeded(5);
+        let (d_in, d_out, m) = (256, 513, 8); // odd d_out: unaligned blocks
+        assert!(m * d_in * d_out >= PAR_THRESHOLD);
+        let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.05));
+        let x = Matrix::randn(m, d_in, 1.0, &mut rng);
+
+        let q = slim_quant::quantize(&w, 4);
+        let k_int4 = Int4Kernel::from_quantized(&q);
+        let dense_ref = DenseKernel::new(q.wq.clone());
+        let err = k_int4.matmul(&x).rel_err(&dense_ref.matmul(&x));
+        assert!(err < 1e-5, "threaded int4 err {err}");
+
+        let x_l2 = vec![1.0f32; d_in];
+        let (wc, mask) = wanda::prune(&q.wq, &x_l2, SparsityPattern::TWO_FOUR);
+        let k_sp = Sparse24Kernel::from_parts(&q, &mask);
+        let err = k_sp.matmul(&x).rel_err(&DenseKernel::new(wc).matmul(&x));
+        assert!(err < 1e-5, "threaded sparse24 err {err}");
+
+        let qg = crate::quant::group_absmax::quantize(&w, 4, 64);
+        let k_grp = GroupInt4Kernel::from_quantized(&qg);
+        let err = k_grp.matmul(&x).rel_err(&DenseKernel::new(qg.wq.clone()).matmul(&x));
+        assert!(err < 1e-5, "threaded group err {err}");
+    }
+
+    #[test]
+    fn unpack_row_handles_offsets() {
+        let codes: Vec<i8> = (0..16).map(|i| ((i % 15) - 7) as i8).collect();
+        let packed = crate::quant::pack::pack_int4(&codes);
+        for start in 0..8 {
+            for width in 1..=(16 - start) {
+                let mut out = vec![0.0f32; width];
+                unpack_int4_row(&packed.bytes, start, &mut out);
+                for (j, &v) in out.iter().enumerate() {
+                    assert_eq!(v, codes[start + j] as f32, "start {start} width {width} j {j}");
+                }
+            }
+        }
     }
 
     #[test]

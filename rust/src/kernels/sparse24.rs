@@ -77,6 +77,61 @@ impl Sparse24Kernel {
         let vals = crate::quant::pack::pack_int4(&codes).bytes;
         Sparse24Kernel { vals, meta, alpha: q.scales[0], bits: q.bits, d_in, d_out }
     }
+
+    /// Compute columns `[j0, j1)` of `x·W` into `out` (row-major
+    /// `m × (j1-j0)`, zero-initialized), accumulating in code space.
+    ///
+    /// Tile-decode strategy (§Perf log in EXPERIMENTS.md): decompress a
+    /// tile of groups into a dense f32 scratch (zeros at pruned slots,
+    /// scatter by the 2-bit metadata), then run vectorizable axpys. The
+    /// decode touches only the compressed stream (2 codes + 1 metadata
+    /// nibble per 4 weights ≈ 2.25 bits/element) and amortizes over the
+    /// batch.
+    fn decode_block(&self, x: &Matrix, j0: usize, j1: usize, out: &mut [f32]) {
+        let (m, d_in) = x.shape();
+        let n = self.d_out;
+        let bw = j1 - j0;
+        let n_groups = d_in / 4;
+        const GT: usize = 8; // groups per tile → 32 scratch rows
+        let mut scratch = vec![0.0f32; GT * 4 * bw];
+        let mut c0row = vec![0.0f32; bw];
+        let mut c1row = vec![0.0f32; bw];
+        for g0 in (0..n_groups).step_by(GT) {
+            let gt = GT.min(n_groups - g0);
+            scratch[..gt * 4 * bw].fill(0.0);
+            for gg in 0..gt {
+                let g = g0 + gg;
+                // Pass 1: bulk-unpack the two slot rows (vectorizable).
+                super::unpack_int4_row(&self.vals, (g * 2) * n + j0, &mut c0row);
+                super::unpack_int4_row(&self.vals, (g * 2 + 1) * n + j0, &mut c1row);
+                // Pass 2: metadata-driven scatter (branchless — slot
+                // indices are distinct by construction).
+                let base = gg * 4;
+                let meta_base = g * n;
+                for (jj, j) in (j0..j1).enumerate() {
+                    let mb = self.meta[(meta_base + j) / 2];
+                    let nib = if (meta_base + j) % 2 == 0 { mb & 0x0F } else { mb >> 4 };
+                    let i0 = (nib & 0x03) as usize;
+                    let i1 = ((nib >> 2) & 0x03) as usize;
+                    scratch[(base + i0) * bw + jj] = c0row[jj];
+                    scratch[(base + i1) * bw + jj] = c1row[jj];
+                }
+            }
+            for i in 0..m {
+                let xrow = &x.row(i)[g0 * 4..g0 * 4 + gt * 4];
+                let yrow = &mut out[i * bw..(i + 1) * bw];
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let srow = &scratch[kk * bw..(kk + 1) * bw];
+                    for (yv, &sv) in yrow.iter_mut().zip(srow.iter()) {
+                        *yv += xv * sv;
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl MatmulKernel for Sparse24Kernel {
@@ -85,77 +140,15 @@ impl MatmulKernel for Sparse24Kernel {
     }
 
     fn matmul(&self, x: &Matrix) -> Matrix {
-        // Tile-decode strategy (§Perf log in EXPERIMENTS.md): decompress a
-        // tile of groups into a dense f32 scratch (zeros at pruned slots,
-        // scatter by the 2-bit metadata), then run vectorizable axpys. The
-        // decode touches only the compressed stream (2 codes + 1 metadata
-        // nibble per 4 weights ≈ 2.25 bits/element) and amortizes over the
-        // batch; accumulation stays in code space with one dequant at the
-        // end.
+        // Column-partitioned across workers (each decodes its own scratch
+        // tile); one per-tensor dequant over the assembled output.
         let (m, d_in) = x.shape();
         assert_eq!(d_in, self.d_in);
         let n = self.d_out;
-        let n_groups = d_in / 4;
-        let mut y = Matrix::zeros(m, n);
+        let mut y = super::parallel_columns(m, n, m * d_in * n, |j0, j1, out| {
+            self.decode_block(x, j0, j1, out)
+        });
         let dequant = self.alpha / levels(self.bits);
-        const GT: usize = 8; // groups per tile → 32 scratch rows
-        let mut scratch = vec![0.0f32; GT * 4 * n];
-        let mut c0row = vec![0.0f32; n];
-        let mut c1row = vec![0.0f32; n];
-        let unpack_row = |start: usize, out: &mut [f32]| {
-            if start % 2 == 0 && n % 2 == 0 {
-                let bytes = &self.vals[start / 2..start / 2 + n / 2];
-                for (jj, &b) in bytes.iter().enumerate() {
-                    out[2 * jj] = ((b & 0x0F) as i32 - 8) as f32;
-                    out[2 * jj + 1] = ((b >> 4) as i32 - 8) as f32;
-                }
-            } else {
-                for (j, o) in out.iter_mut().enumerate() {
-                    let e = start + j;
-                    let b = self.vals[e / 2];
-                    *o = if e % 2 == 0 {
-                        ((b & 0x0F) as i32 - 8) as f32
-                    } else {
-                        ((b >> 4) as i32 - 8) as f32
-                    };
-                }
-            }
-        };
-        for g0 in (0..n_groups).step_by(GT) {
-            let gt = GT.min(n_groups - g0);
-            scratch[..gt * 4 * n].fill(0.0);
-            for gg in 0..gt {
-                let g = g0 + gg;
-                // Pass 1: bulk-unpack the two slot rows (vectorizable).
-                unpack_row((g * 2) * n, &mut c0row);
-                unpack_row((g * 2 + 1) * n, &mut c1row);
-                // Pass 2: metadata-driven scatter (branchless — slot
-                // indices are distinct by construction).
-                let base = gg * 4;
-                let meta_base = g * n;
-                for j in 0..n {
-                    let mb = self.meta[(meta_base + j) / 2];
-                    let nib = if (meta_base + j) % 2 == 0 { mb & 0x0F } else { mb >> 4 };
-                    let i0 = (nib & 0x03) as usize;
-                    let i1 = ((nib >> 2) & 0x03) as usize;
-                    scratch[(base + i0) * n + j] = c0row[j];
-                    scratch[(base + i1) * n + j] = c1row[j];
-                }
-            }
-            for i in 0..m {
-                let xrow = &x.row(i)[g0 * 4..g0 * 4 + gt * 4];
-                let yrow = y.row_mut(i);
-                for (kk, &xv) in xrow.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let srow = &scratch[kk * n..kk * n + n];
-                    for (yv, &sv) in yrow.iter_mut().zip(srow.iter()) {
-                        *yv += xv * sv;
-                    }
-                }
-            }
-        }
         for v in y.data_mut() {
             *v *= dequant;
         }

@@ -5,7 +5,7 @@
 //!   repro train <model> [--steps N]  pretrain a sim model (cached)
 //!   repro compress <model> [--preset P] [--pattern 2:4|50%] [--bits B]
 //!   repro eval <model> [--preset P] [--pattern ...] [--ft]
-//!   repro serve [--model M] [--addr A] [--compressed]
+//!   repro serve [--model M] [--addr A] [--compressed [--overrides]]
 //!   repro models                     list the sim family
 //!
 //! Hand-rolled arg parsing (no clap in the vendored crate set).
@@ -103,7 +103,7 @@ fn print_help() {
            repro train <model> [--steps N]\n\
            repro compress <model> [--preset slim-lora] [--pattern 2:4] [--bits 4]\n\
            repro eval <model> [--preset P] [--pattern 2:4] [--ft]\n\
-           repro serve [--model sim-125m] [--addr 127.0.0.1:7433] [--compressed]\n\
+           repro serve [--model sim-125m] [--addr 127.0.0.1:7433] [--compressed [--overrides]]\n\
            repro models",
         experiments::ALL.join(",")
     );
@@ -250,15 +250,27 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         .unwrap_or("127.0.0.1:7433");
     let ctx = Ctx::new(true)?;
     let b = ctx.bundle(name)?;
-    let overrides = if flags.switches.contains("compressed") {
-        let cm = ctx.compress(&b, Preset::SlimLora, Some(SparsityPattern::TWO_FOUR), 4);
-        println!("serving SLiM-compressed weights (2:4 + 4-bit + adapters)");
-        Some(Arc::new(cm.overrides))
-    } else {
-        None
-    };
     let weights = Arc::new(b.weights.clone());
-    let engine = Engine::new(name, b.cfg.clone(), weights, overrides);
+    let engine = if flags.switches.contains("compressed") {
+        let cm = ctx.compress(&b, Preset::SlimLora, Some(SparsityPattern::TWO_FOUR), 4);
+        if flags.switches.contains("overrides") {
+            // Legacy dense-override eval path (accuracy-identical, slower).
+            println!("serving SLiM-compressed weights via dense overrides");
+            Engine::new(name, b.cfg.clone(), weights, Some(Arc::new(cm.overrides)))
+        } else {
+            let cw = slim::model::CompressedWeights::from_model(&cm);
+            let census: Vec<String> =
+                cw.kernel_census().iter().map(|(k, n)| format!("{n}x {k}")).collect();
+            println!(
+                "serving SLiM-compressed weights on packed kernels ({}; {} weight bytes/step)",
+                census.join(", "),
+                cw.weight_bytes()
+            );
+            Engine::with_kernels(name, b.cfg.clone(), weights, Arc::new(cw))
+        }
+    } else {
+        Engine::new(name, b.cfg.clone(), weights, None)
+    };
     let mut router = Router::new();
     router.register(engine, BatchPolicy::default());
     let router = Arc::new(router);

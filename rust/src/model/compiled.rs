@@ -1,0 +1,108 @@
+//! Kernel-backed compressed model weights.
+//!
+//! [`CompressedWeights`] maps layer names to prepared [`LinearOp`]s so the
+//! KV-cached forward pass ([`super::transformer::forward_cached`]) and the
+//! serving engine dispatch matmuls straight to packed kernels (int4,
+//! int4-2:4, group-int4 + low-rank adapters) instead of materializing dense
+//! f32 "effective weight" override matrices. This is where the compression
+//! pipeline's measured kernel speedups become end-to-end decode speedups
+//! (benches/decode.rs).
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::CompressedModel;
+use crate::kernels::LinearOp;
+
+/// Name → packed linear op for every compressed layer of a model.
+#[derive(Default)]
+pub struct CompressedWeights {
+    ops: HashMap<String, LinearOp>,
+}
+
+impl CompressedWeights {
+    /// Empty map (populate with [`CompressedWeights::insert`]).
+    pub fn new() -> Self {
+        CompressedWeights { ops: HashMap::new() }
+    }
+
+    /// Build packed kernels from a compression-pipeline output — the
+    /// constructor the serving path uses after `compress_model`.
+    pub fn from_model(cm: &CompressedModel) -> Self {
+        CompressedWeights {
+            ops: cm
+                .layers
+                .iter()
+                .map(|(name, layer)| (name.clone(), LinearOp::from_compressed(layer)))
+                .collect(),
+        }
+    }
+
+    pub fn insert(&mut self, name: &str, op: LinearOp) {
+        self.ops.insert(name.to_string(), op);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LinearOp> {
+        self.ops.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Total weight bytes streamed per full forward step — the traffic
+    /// model behind the decode-regime speedup.
+    pub fn weight_bytes(&self) -> usize {
+        self.ops.values().map(|op| op.weight_bytes()).sum()
+    }
+
+    /// Kernel name → layer count (for serving logs and benches).
+    pub fn kernel_census(&self) -> BTreeMap<&'static str, usize> {
+        let mut census = BTreeMap::new();
+        for op in self.ops.values() {
+            *census.entry(op.kernel_name()).or_insert(0) += 1;
+        }
+        census
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CompressConfig;
+    use crate::model::{by_name, compress_model, forward, init, ActivationTap, Batch};
+    use crate::rng::Pcg32;
+    use crate::sparse::SparsityPattern;
+
+    #[test]
+    fn builds_sparse24_kernels_for_slim_pipeline() {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let w = init(&cfg, &mut rng);
+        let toks: Vec<u32> = (0..64).map(|_| rng.below(cfg.vocab as u32)).collect();
+        let batch = Batch::new(toks, 2, 32);
+        let mut taps = ActivationTap::new();
+        forward(&cfg, &w, &batch, Some(&mut taps), None);
+        let cm = compress_model(&cfg, &w, &taps, &CompressConfig::slim(SparsityPattern::TWO_FOUR));
+        let cw = CompressedWeights::from_model(&cm);
+        assert_eq!(cw.len(), 6 * cfg.n_layers);
+        // The flagship config packs every layer as int4-2:4.
+        let census = cw.kernel_census();
+        assert_eq!(census.get("int4-2:4").copied(), Some(6 * cfg.n_layers));
+        // Kernel ops agree with the dense-override eval path per layer.
+        let x = crate::tensor::Matrix::randn(4, cfg.d_model, 1.0, &mut rng);
+        let xf = crate::tensor::Matrix::randn(4, cfg.d_ff(), 1.0, &mut rng);
+        for (name, layer) in &cm.layers {
+            let op = cw.get(name).unwrap();
+            let probe = if layer.wc.rows() == cfg.d_model { &x } else { &xf };
+            let err = op.matmul(probe).rel_err(&probe.matmul(&layer.effective()));
+            assert!(err < 1e-5, "{name}: err {err}");
+        }
+        // And stream far fewer bytes than dense f32 weights.
+        let dense_bytes: usize = cm.layers.values().map(|l| l.wc.len() * 4).sum();
+        assert!(cw.weight_bytes() < dense_bytes / 2);
+    }
+}

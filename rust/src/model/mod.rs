@@ -1,13 +1,17 @@
 //! Model definitions: the sim transformer family, weight containers,
 //! the native forward pass, and size/FLOP accounting.
 
+pub mod compiled;
 pub mod config;
 pub mod size;
 pub mod transformer;
 pub mod weights;
 
+pub use compiled::CompressedWeights;
 pub use config::{by_name, family, quick_family, ModelConfig};
-pub use transformer::{forward, nll, ActivationTap, Batch, Overrides};
+pub use transformer::{
+    forward, forward_cached, nll, ActivationTap, Batch, KvCache, Linears, Overrides,
+};
 pub use weights::{init, param_order, Weights};
 
 use crate::compress::{compress_layer, CompressConfig, CompressedLayer, LayerCalib};

@@ -7,9 +7,20 @@
 //! * calibration — capturing the input activations of every linear layer,
 //! * evaluation fallbacks and tests,
 //! * the compressed-model accuracy path (effective weights substituted).
+//!
+//! Two entry points:
+//!
+//! * [`forward`] — full forward over a whole batch (prefill / reference /
+//!   calibration path).
+//! * [`forward_cached`] — incremental forward over only the *new*
+//!   position(s), attending over a [`KvCache`] — the serving decode path.
+//!   Linear layers dispatch through [`Linears`], which can route matmuls to
+//!   packed compressed kernels ([`crate::kernels::LinearOp`]) instead of
+//!   dense f32 overrides.
 
 use std::collections::HashMap;
 
+use super::compiled::CompressedWeights;
 use super::config::ModelConfig;
 use super::weights::Weights;
 use crate::tensor::{matmul_a_bt, Matrix};
@@ -84,6 +95,219 @@ pub type ActivationTap = HashMap<String, Matrix>;
 /// Weight-override map: layer name → effective weight (used to evaluate
 /// compressed models without materializing a full `Weights` clone).
 pub type Overrides = HashMap<String, Matrix>;
+
+/// How a forward pass resolves each linear layer's matmul.
+pub enum Linears<'a> {
+    /// Plain dense weights from the [`Weights`] map.
+    Dense,
+    /// Dense effective-weight overrides (the accuracy-eval path).
+    Overrides(&'a Overrides),
+    /// Packed compressed kernels (the serving hot path).
+    Kernels(&'a CompressedWeights),
+}
+
+impl Linears<'_> {
+    /// `y = x · W(name)` through the configured backend; layers without an
+    /// override/kernel entry fall back to the dense weight.
+    pub fn apply(&self, w: &Weights, name: &str, x: &Matrix) -> Matrix {
+        match self {
+            Linears::Dense => x.matmul(w.expect(name)),
+            Linears::Overrides(ov) => match ov.get(name) {
+                Some(m) => x.matmul(m),
+                None => x.matmul(w.expect(name)),
+            },
+            Linears::Kernels(cw) => match cw.get(name) {
+                Some(op) => op.matmul(x),
+                None => x.matmul(w.expect(name)),
+            },
+        }
+    }
+}
+
+/// Per-layer K/V tensors for incremental (KV-cached) decoding.
+///
+/// Rows are laid out `b * max_seq + t`, so each sequence's cache is
+/// contiguous and pre-allocated at the model's context length.
+/// [`forward_cached`] appends the new positions' K/V each step and attends
+/// over the cached prefix, making per-token decode cost linear in the
+/// sequence length instead of quadratic (the full-reforward serving path
+/// this replaces).
+pub struct KvCache {
+    k: Vec<Matrix>,
+    v: Vec<Matrix>,
+    batch: usize,
+    max_seq: usize,
+    len: usize,
+}
+
+impl KvCache {
+    /// Empty cache for `batch` concurrent sequences.
+    pub fn new(cfg: &ModelConfig, batch: usize) -> Self {
+        assert!(batch > 0, "KvCache needs at least one sequence");
+        let mk = || -> Vec<Matrix> {
+            (0..cfg.n_layers)
+                .map(|_| Matrix::zeros(batch * cfg.max_seq, cfg.d_model))
+                .collect()
+        };
+        KvCache { k: mk(), v: mk(), batch, max_seq: cfg.max_seq, len: 0 }
+    }
+
+    /// Positions cached so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of concurrent sequences.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Maximum cacheable positions (the model's context length).
+    pub fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Forget all cached positions (rows are overwritten by later appends).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Copy freshly computed K/V rows (`batch × s_new` layout) for layer
+    /// `blk` into positions `len .. len + s_new`.
+    fn append(&mut self, blk: usize, k: &Matrix, v: &Matrix) {
+        let s_new = k.rows() / self.batch;
+        for b in 0..self.batch {
+            for s in 0..s_new {
+                let dst = b * self.max_seq + self.len + s;
+                self.k[blk].row_mut(dst).copy_from_slice(k.row(b * s_new + s));
+                self.v[blk].row_mut(dst).copy_from_slice(v.row(b * s_new + s));
+            }
+        }
+    }
+}
+
+/// Incremental forward pass: process only the `s_new = tokens.len()/batch`
+/// new position(s) per sequence, attending over the cached K/V prefix, and
+/// return logits `[(batch·s_new) × vocab]` for the new positions only.
+///
+/// `tokens` is batch-major (`tokens[b*s_new + s]`); the new tokens occupy
+/// absolute positions `cache.len() .. cache.len()+s_new`. Calling this with
+/// a full prompt on an empty cache is the prefill; calling it with one
+/// token per sequence afterwards is a decode step. The per-step logits
+/// reproduce the full [`forward`] logits at the same positions within fp
+/// tolerance (exactly, for the dense path).
+pub fn forward_cached(
+    cfg: &ModelConfig,
+    w: &Weights,
+    tokens: &[u32],
+    cache: &mut KvCache,
+    linears: &Linears,
+) -> Matrix {
+    let d = cfg.d_model;
+    let bsz = cache.batch();
+    assert!(
+        !tokens.is_empty() && tokens.len() % bsz == 0,
+        "token count {} not divisible by cache batch {bsz}",
+        tokens.len()
+    );
+    let s_new = tokens.len() / bsz;
+    let p0 = cache.len();
+    assert!(
+        p0 + s_new <= cfg.max_seq,
+        "kv cache overflow: {p0} cached + {s_new} new > max_seq {}",
+        cfg.max_seq
+    );
+    let n = bsz * s_new;
+
+    // Embedding lookup + learned positions (offset by the cached prefix).
+    let tok_emb = w.expect("embed.tok");
+    let pos_emb = w.expect("embed.pos");
+    let mut x = Matrix::zeros(n, d);
+    for b in 0..bsz {
+        for s in 0..s_new {
+            let t = tokens[b * s_new + s] as usize;
+            assert!(t < cfg.vocab, "token {t} out of vocab");
+            let row = x.row_mut(b * s_new + s);
+            for j in 0..d {
+                row[j] = tok_emb.get(t, j) + pos_emb.get(p0 + s, j);
+            }
+        }
+    }
+
+    let scale = 1.0 / (cfg.d_head() as f32).sqrt();
+    let dh = cfg.d_head();
+    for blk in 0..cfg.n_layers {
+        let p = |s: &str| format!("block{blk}.{s}");
+        // ── Attention over cache + new positions ─────────────────────
+        let h = layernorm(&x, w.expect(&p("ln1.g")), w.expect(&p("ln1.b")));
+        let q = linears.apply(w, &p("attn.wq"), &h);
+        let k = linears.apply(w, &p("attn.wk"), &h);
+        let v = linears.apply(w, &p("attn.wv"), &h);
+        cache.append(blk, &k, &v);
+        let mut ctx = Matrix::zeros(n, d);
+        let kc = &cache.k[blk];
+        let vc = &cache.v[blk];
+        for b in 0..bsz {
+            let cbase = b * cache.max_seq;
+            for head in 0..cfg.n_heads {
+                let c0 = head * dh;
+                for s in 0..s_new {
+                    // Causal scores over cached positions 0..=p0+s.
+                    let gp = p0 + s;
+                    let qrow = &q.row(b * s_new + s)[c0..c0 + dh];
+                    let mut scores = vec![0.0f32; gp + 1];
+                    for (t, sc) in scores.iter_mut().enumerate() {
+                        let krow = &kc.row(cbase + t)[c0..c0 + dh];
+                        let mut dot = 0.0f32;
+                        for (a, b2) in qrow.iter().zip(krow.iter()) {
+                            dot += a * b2;
+                        }
+                        *sc = dot * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    let crow = ctx.row_mut(b * s_new + s);
+                    for (t, &pr) in scores.iter().enumerate() {
+                        let vrow = &vc.row(cbase + t)[c0..c0 + dh];
+                        for j in 0..dh {
+                            crow[c0 + j] += pr * vrow[j];
+                        }
+                    }
+                }
+            }
+        }
+        let attn_out = linears.apply(w, &p("attn.wo"), &ctx);
+        x = x.add(&attn_out);
+
+        // ── MLP ──────────────────────────────────────────────────────
+        let h2 = layernorm(&x, w.expect(&p("ln2.g")), w.expect(&p("ln2.b")));
+        let mut u = linears.apply(w, &p("mlp.fc1"), &h2);
+        let b1 = w.expect(&p("mlp.fc1_b"));
+        for i in 0..n {
+            let row = u.row_mut(i);
+            for (j, v2) in row.iter_mut().enumerate() {
+                *v2 = gelu(*v2 + b1.get(0, j));
+            }
+        }
+        let mut mlp_out = linears.apply(w, &p("mlp.fc2"), &u);
+        let b2 = w.expect(&p("mlp.fc2_b"));
+        for i in 0..n {
+            let row = mlp_out.row_mut(i);
+            for (j, v2) in row.iter_mut().enumerate() {
+                *v2 += b2.get(0, j);
+            }
+        }
+        x = x.add(&mlp_out);
+    }
+    cache.len += s_new;
+
+    // Final LN + tied-embedding logits.
+    let xf = layernorm(&x, w.expect("final_ln.g"), w.expect("final_ln.b"));
+    matmul_a_bt(&xf, tok_emb)
+}
 
 /// Forward pass producing logits `[(batch·seq) × vocab]`.
 ///
@@ -345,6 +569,103 @@ mod tests {
         let (cfg, w, _) = setup();
         let lp = continuation_logprob(&cfg, &w, &[1, 2, 3], &[4, 5], None);
         assert!(lp.is_finite() && lp < 0.0);
+    }
+
+    /// Assert every per-step cached-decode logit row matches the full
+    /// forward's row at the same position within `tol` relative error.
+    fn assert_cached_parity(
+        cfg: &ModelConfig,
+        w: &Weights,
+        batch: &Batch,
+        full: &Matrix,
+        linears: &Linears,
+        tol: f32,
+    ) {
+        let prefill = 8usize;
+        let mut cache = KvCache::new(cfg, batch.batch);
+        let row_err = |got: &[f32], want: &[f32]| {
+            let a = Matrix::from_vec(1, got.len(), got.to_vec());
+            let b = Matrix::from_vec(1, want.len(), want.to_vec());
+            a.rel_err(&b)
+        };
+        // Multi-token prefill covers positions 0..prefill at once.
+        let toks: Vec<u32> = (0..batch.batch)
+            .flat_map(|b| (0..prefill).map(move |s| batch.tok(b, s)))
+            .collect();
+        let lg = forward_cached(cfg, w, &toks, &mut cache, linears);
+        for b in 0..batch.batch {
+            for s in 0..prefill {
+                let err = row_err(lg.row(b * prefill + s), full.row(b * batch.seq + s));
+                assert!(err < tol, "prefill b{b} s{s}: err {err}");
+            }
+        }
+        // Then decode the remaining positions one token at a time.
+        for s in prefill..batch.seq {
+            let step: Vec<u32> = (0..batch.batch).map(|b| batch.tok(b, s)).collect();
+            let lg = forward_cached(cfg, w, &step, &mut cache, linears);
+            assert_eq!(lg.rows(), batch.batch);
+            for b in 0..batch.batch {
+                let err = row_err(lg.row(b), full.row(b * batch.seq + s));
+                assert!(err < tol, "decode b{b} s{s}: err {err}");
+            }
+        }
+        assert_eq!(cache.len(), batch.seq);
+    }
+
+    #[test]
+    fn cached_decode_matches_full_forward_dense() {
+        let (cfg, w, batch) = setup();
+        let full = forward(&cfg, &w, &batch, None, None);
+        assert_cached_parity(&cfg, &w, &batch, &full, &Linears::Dense, 1e-4);
+    }
+
+    #[test]
+    fn cached_decode_matches_full_forward_compressed() {
+        use crate::compress::CompressConfig;
+        use crate::model::compiled::CompressedWeights;
+        use crate::sparse::SparsityPattern;
+        let (cfg, w, batch) = setup();
+        let mut taps = ActivationTap::new();
+        forward(&cfg, &w, &batch, Some(&mut taps), None);
+        let cm = crate::model::compress_model(
+            &cfg,
+            &w,
+            &taps,
+            &CompressConfig::slim(SparsityPattern::TWO_FOUR),
+        );
+        let full = forward(&cfg, &w, &batch, None, Some(&cm.overrides));
+        // Dense-override linears reproduce the override eval path...
+        assert_cached_parity(&cfg, &w, &batch, &full, &Linears::Overrides(&cm.overrides), 1e-4);
+        // ...and the packed-kernel path agrees with it too.
+        let cw = CompressedWeights::from_model(&cm);
+        assert_cached_parity(&cfg, &w, &batch, &full, &Linears::Kernels(&cw), 1e-4);
+    }
+
+    #[test]
+    fn kv_cache_reset_allows_reprefill() {
+        let (cfg, w, batch) = setup();
+        let full = forward(&cfg, &w, &batch, None, None);
+        let mut cache = KvCache::new(&cfg, batch.batch);
+        let bt = &batch;
+        let toks: Vec<u32> = (0..bt.batch)
+            .flat_map(|b| (0..bt.seq).map(move |s| bt.tok(b, s)))
+            .collect();
+        let a = forward_cached(&cfg, &w, &toks, &mut cache, &Linears::Dense);
+        cache.reset();
+        assert!(cache.is_empty());
+        let b = forward_cached(&cfg, &w, &toks, &mut cache, &Linears::Dense);
+        assert_eq!(a, b);
+        assert!(a.rel_err(&full) < 1e-5);
+        assert_eq!(cache.capacity(), cfg.max_seq);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv cache overflow")]
+    fn kv_cache_overflow_panics() {
+        let (cfg, w, _) = setup();
+        let mut cache = KvCache::new(&cfg, 1);
+        let toks = vec![1u32; cfg.max_seq + 1];
+        forward_cached(&cfg, &w, &toks, &mut cache, &Linears::Dense);
     }
 
     #[test]

@@ -119,6 +119,40 @@ pub struct Quantized {
 }
 
 impl Quantized {
+    /// Reconstruct a `Quantized` from a fake-quant matrix plus its scales —
+    /// the bridge from the compression pipeline's dense output
+    /// ([`crate::compress::CompressedLayer`] keeps `wc` + `scales`, not the
+    /// codes) back to the packed serving kernels. Exact when fake-quant
+    /// values are `code·α/L` grid points (all plain quantizers; pruned
+    /// entries are 0.0 → code 0): `round(x/α·L)` recovers the original
+    /// code. Returns `None` at the first off-grid value (beyond a
+    /// thousandth of a quantization step) — the case for activation-aware
+    /// variants (SLiM-Quant^O), which fold per-channel scaling into the
+    /// fake-quant values; packing those would corrupt salient channels.
+    pub fn try_from_fake_quant(
+        wq: &Matrix,
+        scales: Vec<f32>,
+        group_size: usize,
+        bits: u8,
+    ) -> Option<Quantized> {
+        let (d_in, d_out) = wq.shape();
+        let lv = levels(bits);
+        let mut codes = vec![0i8; d_in * d_out];
+        for i in 0..d_in {
+            let row = wq.row(i);
+            let g = if group_size == 0 { 0 } else { i / group_size };
+            for (j, &x) in row.iter().enumerate() {
+                let alpha = if group_size == 0 { scales[0] } else { scales[g * d_out + j] };
+                let c = quant_code(x, alpha, bits);
+                if (c as f32 * alpha / lv - x).abs() > alpha / lv * 1e-3 + 1e-12 {
+                    return None;
+                }
+                codes[i * d_out + j] = c;
+            }
+        }
+        Some(Quantized { wq: wq.clone(), codes, scales, group_size, bits })
+    }
+
     /// Mean squared reconstruction error vs the original weights.
     pub fn mse(&self, w: &Matrix) -> f64 {
         self.wq.sub(w).fro_norm_sq() / w.len() as f64
@@ -199,6 +233,27 @@ mod tests {
             let deq = c as f32 * alpha / levels(4);
             assert!((deq - fake_quant_value(x, alpha, 4)).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn try_from_fake_quant_recovers_codes() {
+        use crate::rng::Pcg32;
+        let mut rng = Pcg32::seeded(7);
+        let w = Matrix::from_fn(64, 48, |_, _| rng.laplace(0.05));
+        // Per-tensor (SLiM-Quant) round trip.
+        let q = slim_quant::quantize(&w, 4);
+        let r = Quantized::try_from_fake_quant(&q.wq, q.scales.clone(), 0, 4).unwrap();
+        assert_eq!(r.codes, q.codes);
+        // Group round trip.
+        let qg = group_absmax::quantize(&w, 4, 16);
+        let rg = Quantized::try_from_fake_quant(&qg.wq, qg.scales.clone(), 16, 4).unwrap();
+        assert_eq!(rg.codes, qg.codes);
+        // Off-grid values (folded channel scaling) are rejected.
+        let mut off = q.wq.clone();
+        for v in off.row_mut(0) {
+            *v *= 0.5;
+        }
+        assert!(Quantized::try_from_fake_quant(&off, q.scales.clone(), 0, 4).is_none());
     }
 
     #[test]

@@ -4,6 +4,14 @@
 //! flavored, std-thread based — the vendored crate set has no tokio):
 //!
 //! * [`engine`] — greedy-decode generation over a (compressed) model.
+//!   Generation is split into the standard serving phases: the prompt is
+//!   *prefilled* once into a `model::KvCache`, then each token is a
+//!   single-position incremental *decode* step (`model::forward_cached`),
+//!   so per-token cost is linear — not quadratic — in sequence length.
+//!   Compressed engines can dispatch every linear matmul to packed kernels
+//!   (`Engine::with_kernels` → `kernels::LinearOp`); `benches/decode.rs`
+//!   measures the resulting end-to-end prefill/decode speedups — the
+//!   paper's Fig. 3/4 decomposition at the token-generation level.
 //! * [`batcher`] — collects concurrent requests into decode batches under
 //!   a max-batch/max-wait policy (the paper serves with small decode
 //!   batches, per Xia et al. / Zheng et al.).

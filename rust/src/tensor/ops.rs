@@ -9,15 +9,16 @@
 use super::Matrix;
 
 /// Threshold (in f32 multiply-adds) below which threading is not worth it.
-const PAR_THRESHOLD: usize = 64 * 64 * 64;
+/// Shared with the packed kernels in [`crate::kernels`] so they parallelize
+/// at the same sizes as this dense baseline.
+pub(crate) const PAR_THRESHOLD: usize = 64 * 64 * 64;
 
-fn num_threads() -> usize {
+pub(crate) fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// C = A · B.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols(), b.cols() * 0 + a.cols());
     assert_eq!(
         a.cols(),
         b.rows(),
