@@ -10,7 +10,8 @@ pub mod weights;
 pub use compiled::CompressedWeights;
 pub use config::{by_name, family, quick_family, ModelConfig};
 pub use transformer::{
-    forward, forward_cached, nll, ActivationTap, Batch, KvCache, Linears, Overrides,
+    forward, forward_cached, forward_slots, nll, ActivationTap, Batch, KvCache, KvCachePool,
+    Linears, Overrides,
 };
 pub use weights::{init, param_order, Weights};
 

@@ -12,11 +12,18 @@
 //!
 //! * [`forward`] — full forward over a whole batch (prefill / reference /
 //!   calibration path).
-//! * [`forward_cached`] — incremental forward over only the *new*
-//!   position(s), attending over a [`KvCache`] — the serving decode path.
-//!   Linear layers dispatch through [`Linears`], which can route matmuls to
-//!   packed compressed kernels ([`crate::kernels::LinearOp`]) instead of
-//!   dense f32 overrides.
+//! * [`forward_slots`] — incremental forward over only the *new*
+//!   position(s) of each sequence, attending over per-sequence cache slots
+//!   in a [`KvCachePool`] — the continuous-batching serving path. Entries
+//!   may mix span lengths (a prompt prefill batched with one-token decode
+//!   steps of other sequences), and each sequence's logits are independent
+//!   of its batchmates.
+//! * [`forward_cached`] — equal-length wrapper over [`forward_slots`]
+//!   through the lockstep [`KvCache`] view (benches, scoring, tests).
+//!
+//! Linear layers dispatch through [`Linears`], which can route matmuls to
+//! packed compressed kernels ([`crate::kernels::LinearOp`]) instead of
+//! dense f32 overrides.
 
 use std::collections::HashMap;
 
@@ -124,41 +131,133 @@ impl Linears<'_> {
     }
 }
 
-/// Per-layer K/V tensors for incremental (KV-cached) decoding.
+/// Slot-based per-layer K/V storage for continuous batching.
 ///
-/// Rows are laid out `b * max_seq + t`, so each sequence's cache is
-/// contiguous and pre-allocated at the model's context length.
-/// [`forward_cached`] appends the new positions' K/V each step and attends
-/// over the cached prefix, making per-token decode cost linear in the
-/// sequence length instead of quadratic (the full-reforward serving path
-/// this replaces).
-pub struct KvCache {
+/// The pool owns `n_slots` stripes of `max_seq` rows per layer (row
+/// `slot * max_seq + t` holds position `t` of the sequence occupying
+/// `slot`). Each slot has its own cached length, so sequences of different
+/// lengths coexist in one pool: a scheduler allocates a slot per admitted
+/// request ([`KvCachePool::alloc`]), [`forward_slots`] appends new K/V rows
+/// and attends over each slot's own prefix, and retiring a sequence returns
+/// its slot to the free-list ([`KvCachePool::free`]) for the next request —
+/// no lockstep batches, no left-padding.
+pub struct KvCachePool {
     k: Vec<Matrix>,
     v: Vec<Matrix>,
-    batch: usize,
+    n_slots: usize,
     max_seq: usize,
-    len: usize,
+    /// Cached positions per slot.
+    lens: Vec<usize>,
+    /// Slot occupancy (true between `alloc` and `free`).
+    live: Vec<bool>,
+    /// LIFO free-list, so retired slots are reused first.
+    free_list: Vec<usize>,
+}
+
+impl KvCachePool {
+    /// Empty pool with `slots` sequence slots, all free.
+    pub fn new(cfg: &ModelConfig, slots: usize) -> Self {
+        assert!(slots > 0, "KvCachePool needs at least one slot");
+        let mk = || -> Vec<Matrix> {
+            (0..cfg.n_layers)
+                .map(|_| Matrix::zeros(slots * cfg.max_seq, cfg.d_model))
+                .collect()
+        };
+        KvCachePool {
+            k: mk(),
+            v: mk(),
+            n_slots: slots,
+            max_seq: cfg.max_seq,
+            lens: vec![0; slots],
+            live: vec![false; slots],
+            free_list: (0..slots).rev().collect(),
+        }
+    }
+
+    /// Total slots in the pool.
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Slots currently free for admission.
+    pub fn free_slots(&self) -> usize {
+        self.free_list.len()
+    }
+
+    /// Maximum cacheable positions per slot (the model's context length).
+    pub fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Claim a free slot (empty, length 0), or `None` if the pool is full.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free_list.pop()?;
+        self.lens[slot] = 0;
+        self.live[slot] = true;
+        Some(slot)
+    }
+
+    /// Return a slot to the free-list. Its rows are overwritten by the next
+    /// occupant's appends.
+    pub fn free(&mut self, slot: usize) {
+        assert!(self.live[slot], "free of non-live slot {slot}");
+        self.live[slot] = false;
+        self.free_list.push(slot);
+    }
+
+    /// Cached positions in `slot`.
+    pub fn len(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    /// Whether `slot` is currently allocated.
+    pub fn is_live(&self, slot: usize) -> bool {
+        self.live[slot]
+    }
+
+    /// Forget `slot`'s cached positions without freeing it (used by the
+    /// context-overflow sliding-window re-prefill).
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.lens[slot] = 0;
+    }
+
+    /// Write one freshly computed K/V row for layer `blk` at `pos` within
+    /// `slot`'s stripe.
+    fn write(&mut self, blk: usize, slot: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        let dst = slot * self.max_seq + pos;
+        self.k[blk].row_mut(dst).copy_from_slice(krow);
+        self.v[blk].row_mut(dst).copy_from_slice(vrow);
+    }
+}
+
+/// Fixed-batch KV cache: `batch` pool slots advanced in lockstep.
+///
+/// Kept as the simple API for equal-length batched decode ([`forward_cached`],
+/// `Engine::score`, benches); it is now a thin view over a [`KvCachePool`]
+/// whose slots `0..batch` all hold the same number of positions.
+pub struct KvCache {
+    pool: KvCachePool,
+    batch: usize,
 }
 
 impl KvCache {
     /// Empty cache for `batch` concurrent sequences.
     pub fn new(cfg: &ModelConfig, batch: usize) -> Self {
         assert!(batch > 0, "KvCache needs at least one sequence");
-        let mk = || -> Vec<Matrix> {
-            (0..cfg.n_layers)
-                .map(|_| Matrix::zeros(batch * cfg.max_seq, cfg.d_model))
-                .collect()
-        };
-        KvCache { k: mk(), v: mk(), batch, max_seq: cfg.max_seq, len: 0 }
+        let mut pool = KvCachePool::new(cfg, batch);
+        for _ in 0..batch {
+            pool.alloc().unwrap();
+        }
+        KvCache { pool, batch }
     }
 
     /// Positions cached so far.
     pub fn len(&self) -> usize {
-        self.len
+        self.pool.len(0)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.len() == 0
     }
 
     /// Number of concurrent sequences.
@@ -168,70 +267,71 @@ impl KvCache {
 
     /// Maximum cacheable positions (the model's context length).
     pub fn capacity(&self) -> usize {
-        self.max_seq
+        self.pool.capacity()
     }
 
     /// Forget all cached positions (rows are overwritten by later appends).
     pub fn reset(&mut self) {
-        self.len = 0;
-    }
-
-    /// Copy freshly computed K/V rows (`batch × s_new` layout) for layer
-    /// `blk` into positions `len .. len + s_new`.
-    fn append(&mut self, blk: usize, k: &Matrix, v: &Matrix) {
-        let s_new = k.rows() / self.batch;
-        for b in 0..self.batch {
-            for s in 0..s_new {
-                let dst = b * self.max_seq + self.len + s;
-                self.k[blk].row_mut(dst).copy_from_slice(k.row(b * s_new + s));
-                self.v[blk].row_mut(dst).copy_from_slice(v.row(b * s_new + s));
-            }
+        for slot in 0..self.batch {
+            self.pool.reset_slot(slot);
         }
     }
 }
 
-/// Incremental forward pass: process only the `s_new = tokens.len()/batch`
-/// new position(s) per sequence, attending over the cached K/V prefix, and
-/// return logits `[(batch·s_new) × vocab]` for the new positions only.
+/// Incremental forward pass over per-sequence cache slots — the serving
+/// hot path for continuous batching.
 ///
-/// `tokens` is batch-major (`tokens[b*s_new + s]`); the new tokens occupy
-/// absolute positions `cache.len() .. cache.len()+s_new`. Calling this with
-/// a full prompt on an empty cache is the prefill; calling it with one
-/// token per sequence afterwards is a decode step. The per-step logits
-/// reproduce the full [`forward`] logits at the same positions within fp
-/// tolerance (exactly, for the dense path).
-pub fn forward_cached(
+/// `seqs` is a list of `(slot, new_tokens)` entries: each sequence feeds
+/// its own span of new tokens (any length ≥ 1), occupying absolute
+/// positions `pool.len(slot) .. pool.len(slot) + new_tokens.len()` within
+/// its slot. Mixed spans are fine — a long prompt prefill can share one
+/// batched pass with single-token decode steps of other sequences, which
+/// keeps the compressed kernels saturated across request churn. Returns
+/// logits for the new positions only, rows packed in `seqs` order (entry
+/// `i`'s rows start at the sum of earlier entries' span lengths).
+///
+/// Every per-sequence computation (embedding offsets, causal attention over
+/// the slot's own prefix, LN/MLP rows) is independent of the other entries,
+/// so greedy decoding through this function is batching-invariant: a
+/// sequence produces bit-identical logits whether it runs solo or packed
+/// with arbitrary other sequences.
+pub fn forward_slots(
     cfg: &ModelConfig,
     w: &Weights,
-    tokens: &[u32],
-    cache: &mut KvCache,
+    seqs: &[(usize, Vec<u32>)],
+    pool: &mut KvCachePool,
     linears: &Linears,
 ) -> Matrix {
+    assert!(!seqs.is_empty(), "forward_slots needs at least one sequence");
     let d = cfg.d_model;
-    let bsz = cache.batch();
-    assert!(
-        !tokens.is_empty() && tokens.len() % bsz == 0,
-        "token count {} not divisible by cache batch {bsz}",
-        tokens.len()
-    );
-    let s_new = tokens.len() / bsz;
-    let p0 = cache.len();
-    assert!(
-        p0 + s_new <= cfg.max_seq,
-        "kv cache overflow: {p0} cached + {s_new} new > max_seq {}",
-        cfg.max_seq
-    );
-    let n = bsz * s_new;
+    // Row base of each entry within the packed activation matrix.
+    let mut bases = Vec::with_capacity(seqs.len());
+    let mut n = 0usize;
+    for (slot, toks) in seqs {
+        assert!(*slot < pool.n_slots, "slot {slot} out of range");
+        assert!(pool.live[*slot], "slot {slot} not allocated");
+        assert!(!toks.is_empty(), "empty token span for slot {slot}");
+        let p0 = pool.lens[*slot];
+        assert!(
+            p0 + toks.len() <= cfg.max_seq,
+            "kv cache overflow: {p0} cached + {} new > max_seq {} (slot {slot})",
+            toks.len(),
+            cfg.max_seq
+        );
+        bases.push(n);
+        n += toks.len();
+    }
 
-    // Embedding lookup + learned positions (offset by the cached prefix).
+    // Embedding lookup + learned positions (offset by each slot's prefix).
     let tok_emb = w.expect("embed.tok");
     let pos_emb = w.expect("embed.pos");
     let mut x = Matrix::zeros(n, d);
-    for b in 0..bsz {
-        for s in 0..s_new {
-            let t = tokens[b * s_new + s] as usize;
+    for (i, (slot, toks)) in seqs.iter().enumerate() {
+        let p0 = pool.lens[*slot];
+        for (s, &tk) in toks.iter().enumerate() {
+            let t = tk as usize;
             assert!(t < cfg.vocab, "token {t} out of vocab");
-            let row = x.row_mut(b * s_new + s);
+            let row = x.row_mut(bases[i] + s);
             for j in 0..d {
                 row[j] = tok_emb.get(t, j) + pos_emb.get(p0 + s, j);
             }
@@ -242,23 +342,29 @@ pub fn forward_cached(
     let dh = cfg.d_head();
     for blk in 0..cfg.n_layers {
         let p = |s: &str| format!("block{blk}.{s}");
-        // ── Attention over cache + new positions ─────────────────────
+        // ── Attention over each slot's cache + its new positions ─────
         let h = layernorm(&x, w.expect(&p("ln1.g")), w.expect(&p("ln1.b")));
         let q = linears.apply(w, &p("attn.wq"), &h);
         let k = linears.apply(w, &p("attn.wk"), &h);
         let v = linears.apply(w, &p("attn.wv"), &h);
-        cache.append(blk, &k, &v);
+        for (i, (slot, toks)) in seqs.iter().enumerate() {
+            let p0 = pool.lens[*slot];
+            for s in 0..toks.len() {
+                pool.write(blk, *slot, p0 + s, k.row(bases[i] + s), v.row(bases[i] + s));
+            }
+        }
         let mut ctx = Matrix::zeros(n, d);
-        let kc = &cache.k[blk];
-        let vc = &cache.v[blk];
-        for b in 0..bsz {
-            let cbase = b * cache.max_seq;
+        let kc = &pool.k[blk];
+        let vc = &pool.v[blk];
+        for (i, (slot, toks)) in seqs.iter().enumerate() {
+            let cbase = *slot * pool.max_seq;
+            let p0 = pool.lens[*slot];
             for head in 0..cfg.n_heads {
                 let c0 = head * dh;
-                for s in 0..s_new {
-                    // Causal scores over cached positions 0..=p0+s.
+                for s in 0..toks.len() {
+                    // Causal scores over the slot's positions 0..=p0+s.
                     let gp = p0 + s;
-                    let qrow = &q.row(b * s_new + s)[c0..c0 + dh];
+                    let qrow = &q.row(bases[i] + s)[c0..c0 + dh];
                     let mut scores = vec![0.0f32; gp + 1];
                     for (t, sc) in scores.iter_mut().enumerate() {
                         let krow = &kc.row(cbase + t)[c0..c0 + dh];
@@ -269,7 +375,7 @@ pub fn forward_cached(
                         *sc = dot * scale;
                     }
                     softmax_inplace(&mut scores);
-                    let crow = ctx.row_mut(b * s_new + s);
+                    let crow = ctx.row_mut(bases[i] + s);
                     for (t, &pr) in scores.iter().enumerate() {
                         let vrow = &vc.row(cbase + t)[c0..c0 + dh];
                         for j in 0..dh {
@@ -302,11 +408,46 @@ pub fn forward_cached(
         }
         x = x.add(&mlp_out);
     }
-    cache.len += s_new;
+    // Advance every slot's cached length once, after all layers appended at
+    // the same positions.
+    for (slot, toks) in seqs {
+        pool.lens[*slot] += toks.len();
+    }
 
     // Final LN + tied-embedding logits.
     let xf = layernorm(&x, w.expect("final_ln.g"), w.expect("final_ln.b"));
     matmul_a_bt(&xf, tok_emb)
+}
+
+/// Incremental forward pass: process only the `s_new = tokens.len()/batch`
+/// new position(s) per sequence, attending over the cached K/V prefix, and
+/// return logits `[(batch·s_new) × vocab]` for the new positions only.
+///
+/// `tokens` is batch-major (`tokens[b*s_new + s]`); the new tokens occupy
+/// absolute positions `cache.len() .. cache.len()+s_new`. Calling this with
+/// a full prompt on an empty cache is the prefill; calling it with one
+/// token per sequence afterwards is a decode step. The per-step logits
+/// reproduce the full [`forward`] logits at the same positions within fp
+/// tolerance (exactly, for the dense path). Equal-length wrapper over
+/// [`forward_slots`].
+pub fn forward_cached(
+    cfg: &ModelConfig,
+    w: &Weights,
+    tokens: &[u32],
+    cache: &mut KvCache,
+    linears: &Linears,
+) -> Matrix {
+    let bsz = cache.batch();
+    assert!(
+        !tokens.is_empty() && tokens.len() % bsz == 0,
+        "token count {} not divisible by cache batch {bsz}",
+        tokens.len()
+    );
+    let s_new = tokens.len() / bsz;
+    let seqs: Vec<(usize, Vec<u32>)> = (0..bsz)
+        .map(|b| (b, tokens[b * s_new..(b + 1) * s_new].to_vec()))
+        .collect();
+    forward_slots(cfg, w, &seqs, &mut cache.pool, linears)
 }
 
 /// Forward pass producing logits `[(batch·seq) × vocab]`.
@@ -666,6 +807,104 @@ mod tests {
         let mut cache = KvCache::new(&cfg, 1);
         let toks = vec![1u32; cfg.max_seq + 1];
         forward_cached(&cfg, &w, &toks, &mut cache, &Linears::Dense);
+    }
+
+    #[test]
+    fn pool_alloc_free_reuses_slots() {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut pool = KvCachePool::new(&cfg, 2);
+        assert_eq!(pool.n_slots(), 2);
+        assert_eq!(pool.free_slots(), 2);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_eq!((a, b), (0, 1));
+        assert!(pool.alloc().is_none());
+        assert!(pool.is_live(a));
+        pool.free(a);
+        assert!(!pool.is_live(a));
+        assert_eq!(pool.free_slots(), 1);
+        // The retired slot is handed out again, empty.
+        let c = pool.alloc().unwrap();
+        assert_eq!(c, a);
+        assert_eq!(pool.len(c), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "free of non-live slot")]
+    fn pool_double_free_panics() {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut pool = KvCachePool::new(&cfg, 1);
+        let s = pool.alloc().unwrap();
+        pool.free(s);
+        pool.free(s);
+    }
+
+    #[test]
+    fn slot_forward_matches_full_forward_mixed_lengths() {
+        // Three prompts of different lengths prefilled in ONE forward_slots
+        // call must reproduce each prompt's solo full-forward logits — the
+        // no-padding property the continuous scheduler relies on.
+        let (cfg, w, _) = setup();
+        let mut rng = Pcg32::seeded(9);
+        let prompts: Vec<Vec<u32>> = [5usize, 9, 1]
+            .iter()
+            .map(|&len| (0..len).map(|_| rng.below(cfg.vocab as u32)).collect())
+            .collect();
+        let mut pool = KvCachePool::new(&cfg, 3);
+        let entries: Vec<(usize, Vec<u32>)> =
+            prompts.iter().map(|p| (pool.alloc().unwrap(), p.clone())).collect();
+        let lg = forward_slots(&cfg, &w, &entries, &mut pool, &Linears::Dense);
+        let mut base = 0usize;
+        for p in &prompts {
+            let full =
+                forward(&cfg, &w, &Batch::new(p.clone(), 1, p.len()), None, None);
+            for s in 0..p.len() {
+                let got = Matrix::from_vec(1, cfg.vocab, lg.row(base + s).to_vec());
+                let want = Matrix::from_vec(1, cfg.vocab, full.row(s).to_vec());
+                assert!(got.rel_err(&want) < 1e-5, "prefill row {s}");
+            }
+            base += p.len();
+        }
+        // One decode step per sequence at three different cache depths,
+        // batched together, still matches the solo full forward.
+        let nexts: Vec<u32> = prompts.iter().map(|p| p[0] ^ 1).collect();
+        let steps: Vec<(usize, Vec<u32>)> = entries
+            .iter()
+            .zip(nexts.iter())
+            .map(|(&(slot, _), &t)| (slot, vec![t]))
+            .collect();
+        let lg2 = forward_slots(&cfg, &w, &steps, &mut pool, &Linears::Dense);
+        for (i, (p, &t)) in prompts.iter().zip(nexts.iter()).enumerate() {
+            let mut ext = p.clone();
+            ext.push(t);
+            let full =
+                forward(&cfg, &w, &Batch::new(ext.clone(), 1, ext.len()), None, None);
+            let got = Matrix::from_vec(1, cfg.vocab, lg2.row(i).to_vec());
+            let want = Matrix::from_vec(1, cfg.vocab, full.row(ext.len() - 1).to_vec());
+            assert!(got.rel_err(&want) < 1e-5, "decode seq {i}");
+            assert_eq!(pool.len(entries[i].0), ext.len());
+        }
+    }
+
+    #[test]
+    fn slot_forward_is_batching_invariant() {
+        // Bit-identical logits whether a sequence runs solo or packed with
+        // others — the property that makes continuous batching safe.
+        let (cfg, w, _) = setup();
+        let a: Vec<u32> = vec![5, 6, 7, 8];
+        let b: Vec<u32> = vec![9, 10];
+        let mut solo_pool = KvCachePool::new(&cfg, 1);
+        let sa = solo_pool.alloc().unwrap();
+        let solo = forward_slots(&cfg, &w, &[(sa, a.clone())], &mut solo_pool, &Linears::Dense);
+        let mut pool = KvCachePool::new(&cfg, 2);
+        let s1 = pool.alloc().unwrap();
+        let s2 = pool.alloc().unwrap();
+        let both =
+            forward_slots(&cfg, &w, &[(s2, b.clone()), (s1, a.clone())], &mut pool, &Linears::Dense);
+        // Entry 1 (= sequence a) occupies rows b.len().. in the packed output.
+        for s in 0..a.len() {
+            assert_eq!(solo.row(s), both.row(b.len() + s), "row {s} differs");
+        }
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! TCP front-end: newline-delimited JSON over std::net.
 //!
-//! Request:  `{"model": "...", "prompt": [ints], "max_new": n}`
+//! Request:  `{"model": "...", "prompt": [ints], "max_new": n, "stop": t?}`
+//!           (`stop` is optional: generation retires early once token `t`
+//!           is produced, included in the output)
 //! Response: `{"ok": true, "tokens": [ints]}` or `{"ok": false, "error": "..."}`
 //! Special:  `{"cmd": "metrics"}` → one-line summary; `{"cmd": "models"}`.
 //!
@@ -82,7 +84,8 @@ fn process(router: &Router, line: &str) -> Result<Json> {
         .map(|v| v.as_usize().map(|u| u as u32).ok_or_else(|| anyhow!("bad token")))
         .collect::<Result<_>>()?;
     let max_new = req.get("max_new").and_then(Json::as_usize).unwrap_or(16);
-    let result = router.generate(model, prompt, max_new.min(256))?;
+    let stop = req.get("stop").and_then(Json::as_usize).map(|u| u as u32);
+    let result = router.generate_opts(model, prompt, max_new.min(256), stop)?;
     Ok(obj(vec![
         ("ok", Json::Bool(true)),
         ("tokens", Json::Arr(result.tokens.iter().map(|&t| n(t as f64)).collect())),
@@ -168,6 +171,33 @@ mod tests {
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
         let resp = handle_line(&r, r#"{"model":"nope","prompt":[1]}"#);
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn stop_field_retires_generation_early() {
+        let r = router();
+        let free = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":5}"#);
+        let free_toks: Vec<usize> = free
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let stop = free_toks[1];
+        let resp = handle_line(
+            &r,
+            &format!(r#"{{"model":"sim-125m","prompt":[5,6],"max_new":5,"stop":{stop}}}"#),
+        );
+        let got: Vec<usize> = resp
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let cut = free_toks.iter().position(|&t| t == stop).unwrap() + 1;
+        assert_eq!(got, free_toks[..cut].to_vec());
     }
 
     #[test]

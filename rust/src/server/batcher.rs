@@ -1,8 +1,16 @@
-//! Dynamic batcher: collect concurrent requests into decode batches.
+//! Request queue: collect concurrent requests for the serving workers.
 //!
-//! Policy: dispatch when `max_batch` requests are queued OR the oldest
-//! queued request has waited `max_wait`; never dispatch empty. Small decode
-//! batches are the paper's serving regime (§4 Speedup).
+//! Two consumption styles share one thread-safe queue:
+//!
+//! * [`Batcher::next_batch`] — fixed batches: dispatch when `max_batch`
+//!   requests are queued OR the oldest queued request has waited
+//!   `max_wait`; never dispatch empty. Small decode batches are the
+//!   paper's serving regime (§4 Speedup).
+//! * [`Batcher::try_take`] / [`Batcher::wait_pending`] — continuous
+//!   admission: the scheduler (`server::scheduler`) drains whatever is
+//!   queued up to its free cache slots between decode steps, and parks on
+//!   the condvar (untimed — submit/close notify it, so an idle server
+//!   does not wake on a poll interval) only when nothing is in flight.
 
 use super::engine::{GenRequest, GenResult};
 use std::collections::VecDeque;
@@ -22,16 +30,19 @@ impl Default for BatchPolicy {
     }
 }
 
-struct Queued {
-    req: GenRequest,
-    enqueued: Instant,
-    result_slot: std::sync::mpsc::Sender<GenResult>,
+/// A queued request plus its submit-time metadata, handed to consumers.
+pub struct Pending {
+    pub req: GenRequest,
+    /// When the request entered the queue (for TTFT / latency metrics).
+    pub enqueued: Instant,
+    /// Where the finished [`GenResult`] goes.
+    pub result_slot: std::sync::mpsc::Sender<GenResult>,
 }
 
 /// Thread-safe request queue with batch-forming semantics.
 pub struct Batcher {
     policy: BatchPolicy,
-    queue: Mutex<VecDeque<Queued>>,
+    queue: Mutex<VecDeque<Pending>>,
     notify: Condvar,
     closed: Mutex<bool>,
 }
@@ -55,14 +66,24 @@ impl Batcher {
         let (tx, rx) = std::sync::mpsc::channel();
         {
             let mut q = self.queue.lock().unwrap();
-            q.push_back(Queued { req, enqueued: Instant::now(), result_slot: tx });
+            q.push_back(Pending { req, enqueued: Instant::now(), result_slot: tx });
         }
         self.notify.notify_all();
         rx
     }
 
-    /// Stop the batcher; pending `next_batch` calls return None.
+    /// Stop the batcher; pending `next_batch`/`wait_pending` calls return
+    /// None/false once the queue drains.
+    ///
+    /// Holds the queue lock while flipping the flag and notifying: a
+    /// consumer that just read `closed == false` under the queue lock is
+    /// either still holding it (we block until it parks in `wait`, which
+    /// releases the lock atomically — then our notify reaches it) or will
+    /// re-check and see `true`. Without this, close() could slip between a
+    /// consumer's check and its untimed park, leaving it asleep forever
+    /// (the old 50 ms poll masked that window).
     pub fn close(&self) {
+        let _queue_held = self.queue.lock().unwrap();
         *self.closed.lock().unwrap() = true;
         self.notify.notify_all();
     }
@@ -72,12 +93,32 @@ impl Batcher {
         self.queue.lock().unwrap().len()
     }
 
+    /// Pop up to `max` queued requests without blocking (continuous
+    /// admission between decode steps).
+    pub fn try_take(&self, max: usize) -> Vec<Pending> {
+        let mut q = self.queue.lock().unwrap();
+        let take = q.len().min(max);
+        q.drain(..take).collect()
+    }
+
+    /// Block until the queue is non-empty (true) or the batcher is closed
+    /// with nothing left to serve (false). Untimed condvar park: an idle
+    /// consumer wakes only on submit/close.
+    pub fn wait_pending(&self) -> bool {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if !q.is_empty() {
+                return true;
+            }
+            if *self.closed.lock().unwrap() {
+                return false;
+            }
+            q = self.notify.wait(q).unwrap();
+        }
+    }
+
     /// Block until a batch is ready (policy-driven) or closed.
-    /// Returns the requests plus their result senders.
-    #[allow(clippy::type_complexity)]
-    pub fn next_batch(
-        &self,
-    ) -> Option<(Vec<GenRequest>, Vec<std::sync::mpsc::Sender<GenResult>>)> {
+    pub fn next_batch(&self) -> Option<Vec<Pending>> {
         let mut q = self.queue.lock().unwrap();
         loop {
             if *self.closed.lock().unwrap() && q.is_empty() {
@@ -87,25 +128,16 @@ impl Batcher {
                 let oldest_wait = q.front().unwrap().enqueued.elapsed();
                 if q.len() >= self.policy.max_batch || oldest_wait >= self.policy.max_wait {
                     let take = q.len().min(self.policy.max_batch);
-                    let mut reqs = Vec::with_capacity(take);
-                    let mut slots = Vec::with_capacity(take);
-                    for _ in 0..take {
-                        let item = q.pop_front().unwrap();
-                        reqs.push(item.req);
-                        slots.push(item.result_slot);
-                    }
-                    return Some((reqs, slots));
+                    return Some(q.drain(..take).collect());
                 }
                 // Wait out the remaining deadline of the oldest request.
                 let remaining = self.policy.max_wait - oldest_wait;
                 let (guard, _) = self.notify.wait_timeout(q, remaining).unwrap();
                 q = guard;
             } else {
-                let (guard, _) = self
-                    .notify
-                    .wait_timeout(q, Duration::from_millis(50))
-                    .unwrap();
-                q = guard;
+                // Idle: park untimed — submit/close notify the condvar, so
+                // an empty queue no longer wakes on a 50 ms poll loop.
+                q = self.notify.wait(q).unwrap();
             }
         }
     }
@@ -117,7 +149,7 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64) -> GenRequest {
-        GenRequest { id, prompt: vec![1], max_new: 1 }
+        GenRequest { id, prompt: vec![1], max_new: 1, stop: None }
     }
 
     #[test]
@@ -126,10 +158,9 @@ mod tests {
         for i in 0..3 {
             let _rx = b.submit(req(i));
         }
-        let (reqs, slots) = b.next_batch().unwrap();
-        assert_eq!(reqs.len(), 3);
-        assert_eq!(slots.len(), 3);
-        assert_eq!(reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![0, 1, 2]);
     }
 
     #[test]
@@ -137,8 +168,8 @@ mod tests {
         let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) });
         let _rx = b.submit(req(7));
         let t0 = Instant::now();
-        let (reqs, _) = b.next_batch().unwrap();
-        assert_eq!(reqs.len(), 1);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(8));
         assert!(t0.elapsed() < Duration::from_millis(500));
     }
@@ -151,6 +182,40 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         b.close();
         assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn try_take_is_nonblocking_and_bounded() {
+        let b = Batcher::new(BatchPolicy::default());
+        assert!(b.try_take(4).is_empty());
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            rxs.push(b.submit(req(i)));
+        }
+        assert!(b.wait_pending());
+        let first = b.try_take(2);
+        assert_eq!(first.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![0, 1]);
+        let rest = b.try_take(4);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].req.id, 2);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn wait_pending_unblocks_on_close() {
+        let b = Arc::new(Batcher::new(BatchPolicy::default()));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.wait_pending());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(!h.join().unwrap());
+        // Closed but non-empty still reports pending work (drain first).
+        let b3 = Batcher::new(BatchPolicy::default());
+        let _rx = b3.submit(req(1));
+        b3.close();
+        assert!(b3.wait_pending());
+        let _ = b3.try_take(1);
+        assert!(!b3.wait_pending());
     }
 
     #[test]
@@ -168,9 +233,9 @@ mod tests {
         let worker = std::thread::spawn(move || {
             let mut served = 0;
             while served < n {
-                if let Some((reqs, slots)) = b2.next_batch() {
-                    for (r, s) in reqs.iter().zip(slots) {
-                        let _ = s.send(GenResult { id: r.id, tokens: vec![] });
+                if let Some(batch) = b2.next_batch() {
+                    for p in batch {
+                        let _ = p.result_slot.send(GenResult { id: p.req.id, tokens: vec![] });
                         served += 1;
                     }
                 } else {

@@ -1,16 +1,23 @@
-//! Generation engine: batched greedy decoding over a (compressed) model.
+//! Generation engine: greedy decoding over a (compressed) model, exposed
+//! as explicit serving phases.
 //!
-//! Serving is split into the standard prefill/decode phases: the prompt is
-//! prefilled once through [`forward_cached`] (populating a [`KvCache`]),
-//! then each generated token is a single-position incremental step — no
-//! more quadratic full-sequence re-forward per token. Compressed models can
-//! run kernel-backed ([`Engine::with_kernels`]): every linear matmul
-//! dispatches to packed int4 / int4-2:4 kernels, which is where the paper's
-//! Fig. 3/4 kernel speedups reach end-to-end token throughput
-//! (measured by `benches/decode.rs`).
+//! [`Engine::prefill`] admits one request into a [`KvCachePool`] slot
+//! (windowed prompt pass + first token); [`Engine::decode_step`] advances
+//! every in-flight sequence one token in a single batched forward
+//! ([`forward_slots`]) regardless of how long each has been running — the
+//! primitives the continuous scheduler (`server::scheduler`) drives.
+//! [`Engine::generate_batch`] is the run-to-completion wrapper over the
+//! same primitives: because each sequence owns a slot, prompts are never
+//! left-padded and batched greedy output is token-for-token identical to
+//! solo output, even for mixed-length prompts. Compressed models can run
+//! kernel-backed ([`Engine::with_kernels`]): every linear matmul dispatches
+//! to packed int4 / int4-2:4 kernels, which is where the paper's Fig. 3/4
+//! kernel speedups reach end-to-end token throughput (measured by
+//! `benches/decode.rs` and `benches/serve.rs`).
 
 use crate::model::{
-    forward_cached, CompressedWeights, KvCache, Linears, ModelConfig, Overrides, Weights,
+    forward_cached, forward_slots, CompressedWeights, KvCache, KvCachePool, Linears, ModelConfig,
+    Overrides, Weights,
 };
 use crate::tensor::Matrix;
 use std::sync::Arc;
@@ -21,6 +28,9 @@ pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new: usize,
+    /// Optional stop token: generation retires early the moment this token
+    /// is produced (it is included in the output).
+    pub stop: Option<u32>,
 }
 
 /// Completed generation.
@@ -28,6 +38,39 @@ pub struct GenRequest {
 pub struct GenResult {
     pub id: u64,
     pub tokens: Vec<u32>,
+}
+
+/// One in-flight sequence: its cache slot, token history and stop state.
+///
+/// Produced by [`Engine::prefill`], advanced by [`Engine::decode_step`];
+/// whoever owns the [`KvCachePool`] frees `slot` after retiring the
+/// sequence.
+#[derive(Clone, Debug)]
+pub struct SeqState {
+    pub id: u64,
+    pub slot: usize,
+    pub max_new: usize,
+    pub stop: Option<u32>,
+    /// True once the sequence produced `max_new` tokens or its stop token;
+    /// done sequences are skipped by [`Engine::decode_step`].
+    pub done: bool,
+    /// Prompt (BOS if empty) + generated tokens.
+    seq: Vec<u32>,
+    prompt_len: usize,
+}
+
+impl SeqState {
+    /// Tokens generated so far (one more per decode step).
+    pub fn generated(&self) -> &[u32] {
+        &self.seq[self.prompt_len..]
+    }
+
+    fn push_token(&mut self, t: u32) {
+        self.seq.push(t);
+        if self.seq.len() - self.prompt_len >= self.max_new || self.stop == Some(t) {
+            self.done = true;
+        }
+    }
 }
 
 /// A servable model: config + weights (+ compression overrides or packed
@@ -76,73 +119,119 @@ impl Engine {
         }
     }
 
-    /// Greedy-decode a batch of requests together. Prompts are left-padded
-    /// with BOS(0) to a common length, prefilled once into a [`KvCache`],
-    /// then decoding runs `max(max_new)` single-token steps with
-    /// per-request result truncation to each request's own `max_new`.
+    /// Admit one request: claim a cache slot, prefill its (windowed) prompt
+    /// and generate its first token. Panics if the pool has no free slot —
+    /// callers gate admission on [`KvCachePool::free_slots`]. A
+    /// `max_new == 0` request comes back already `done` without touching
+    /// the forward pass.
+    pub fn prefill(&self, req: &GenRequest, pool: &mut KvCachePool) -> SeqState {
+        self.prefill_batch(std::slice::from_ref(req), pool).pop().unwrap()
+    }
+
+    /// Admit several requests at once: every prompt prefills in ONE
+    /// batched forward pass ([`forward_slots`] packs the mixed-length
+    /// spans), claiming one cache slot each and generating each sequence's
+    /// first token. Panics if the pool lacks free slots for all of them.
+    pub fn prefill_batch(&self, reqs: &[GenRequest], pool: &mut KvCachePool) -> Vec<SeqState> {
+        let mut states: Vec<SeqState> = reqs
+            .iter()
+            .map(|req| {
+                let slot = pool.alloc().expect("no free KV cache slot");
+                let seq = if req.prompt.is_empty() { vec![0u32] } else { req.prompt.clone() };
+                let prompt_len = seq.len();
+                SeqState {
+                    id: req.id,
+                    slot,
+                    max_new: req.max_new,
+                    stop: req.stop,
+                    done: req.max_new == 0,
+                    seq,
+                    prompt_len,
+                }
+            })
+            .collect();
+        let entries: Vec<(usize, Vec<u32>)> = states
+            .iter()
+            .filter(|s| !s.done)
+            .map(|s| {
+                let win = s.seq.len().min(self.cfg.max_seq);
+                (s.slot, s.seq[s.seq.len() - win..].to_vec())
+            })
+            .collect();
+        if !entries.is_empty() {
+            let logits = forward_slots(&self.cfg, &self.weights, &entries, pool, &self.linears());
+            let mut row = 0usize;
+            // Same lazy filter as above: an element's `done` only flips via
+            // its own push_token after it has been yielded, so the order
+            // matches `entries`.
+            for (st, e) in states.iter_mut().filter(|s| !s.done).zip(entries.iter()) {
+                row += e.1.len();
+                st.push_token(argmax(logits.row(row - 1)) as u32);
+            }
+        }
+        states
+    }
+
+    /// One continuous decode step: feed every non-done sequence its latest
+    /// token in a single batched forward — sequences at any cache depth mix
+    /// freely — and append each sequence's next greedy token. A sequence
+    /// whose slot has hit the context length gets its cache dropped and its
+    /// sliding window re-prefilled inside the same batched pass (the legacy
+    /// full-reforward outputs, now per slot instead of per batch). Marks
+    /// sequences `done` when they reach `max_new` or their stop token;
+    /// returns the number of tokens generated.
+    pub fn decode_step(&self, states: &mut [&mut SeqState], pool: &mut KvCachePool) -> usize {
+        let mut entries: Vec<(usize, Vec<u32>)> = Vec::new();
+        let mut who: Vec<usize> = Vec::new();
+        for (i, st) in states.iter().enumerate() {
+            if st.done {
+                continue;
+            }
+            if pool.len(st.slot) == self.cfg.max_seq {
+                // Context overflow: re-prefill this slot's sliding window.
+                pool.reset_slot(st.slot);
+                entries.push((st.slot, st.seq[st.seq.len() - self.cfg.max_seq..].to_vec()));
+            } else {
+                entries.push((st.slot, vec![*st.seq.last().unwrap()]));
+            }
+            who.push(i);
+        }
+        if entries.is_empty() {
+            return 0;
+        }
+        let logits = forward_slots(&self.cfg, &self.weights, &entries, pool, &self.linears());
+        let mut row = 0usize;
+        for (e, &i) in entries.iter().zip(who.iter()) {
+            row += e.1.len();
+            states[i].push_token(argmax(logits.row(row - 1)) as u32);
+        }
+        who.len()
+    }
+
+    /// Greedy-decode a batch of requests to completion: a thin wrapper that
+    /// drives [`Engine::prefill`] / [`Engine::decode_step`] over a private
+    /// [`KvCachePool`]. Each request owns a slot, so prompts are never
+    /// left-padded (batched output is token-for-token identical to solo
+    /// output for mixed-length prompts) and each sequence retires the
+    /// moment it reaches its own `max_new` or stop token instead of riding
+    /// along to the batch maximum.
     pub fn generate_batch(&self, reqs: &[GenRequest]) -> Vec<GenResult> {
         if reqs.is_empty() {
             return vec![];
         }
-        let max_prompt = reqs.iter().map(|r| r.prompt.len()).max().unwrap().max(1);
-        let max_new = reqs.iter().map(|r| r.max_new).max().unwrap_or(0);
-        let mut seqs: Vec<Vec<u32>> = reqs
-            .iter()
-            .map(|r| {
-                let mut s = vec![0u32; max_prompt - r.prompt.len()];
-                s.extend_from_slice(&r.prompt);
-                s
-            })
-            .collect();
-
-        if max_new > 0 {
-            let linears = self.linears();
-            let mut cache = KvCache::new(&self.cfg, seqs.len());
-
-            // Prefill the trailing `win` tokens of every sequence into the
-            // cache and greedily append each sequence's next token. Used
-            // once for the prompt and again by the overflow path below.
-            let prefill = |cache: &mut KvCache, seqs: &mut Vec<Vec<u32>>, win: usize| {
-                let toks: Vec<u32> = seqs
-                    .iter()
-                    .flat_map(|s| s[s.len() - win..].iter().copied())
-                    .collect();
-                let logits = forward_cached(&self.cfg, &self.weights, &toks, cache, &linears);
-                for (bi, seq) in seqs.iter_mut().enumerate() {
-                    seq.push(argmax(logits.row(bi * win + win - 1)) as u32);
-                }
-            };
-
-            // ── Prefill: one pass over the (windowed) prompts ─────────
-            prefill(&mut cache, &mut seqs, max_prompt.min(self.cfg.max_seq));
-
-            // ── Decode: one incremental step per generated token ──────
-            for _ in 1..max_new {
-                if cache.len() == self.cfg.max_seq {
-                    // Context overflow: re-prefill the full sliding window.
-                    // This costs a prompt-sized pass per token — exactly the
-                    // legacy full-reforward behavior (and its outputs), paid
-                    // only in the rare generate-past-context regime.
-                    cache.reset();
-                    prefill(&mut cache, &mut seqs, self.cfg.max_seq);
-                } else {
-                    // Feed only the tokens appended last step.
-                    let toks: Vec<u32> = seqs.iter().map(|s| *s.last().unwrap()).collect();
-                    let logits =
-                        forward_cached(&self.cfg, &self.weights, &toks, &mut cache, &linears);
-                    for (bi, seq) in seqs.iter_mut().enumerate() {
-                        seq.push(argmax(logits.row(bi)) as u32);
-                    }
-                }
+        let mut pool = KvCachePool::new(&self.cfg, reqs.len());
+        let mut states = self.prefill_batch(reqs, &mut pool);
+        loop {
+            let mut active: Vec<&mut SeqState> =
+                states.iter_mut().filter(|s| !s.done).collect();
+            if active.is_empty() {
+                break;
             }
+            self.decode_step(&mut active, &mut pool);
         }
-
-        reqs.iter()
-            .zip(seqs.iter())
-            .map(|(r, s)| GenResult {
-                id: r.id,
-                tokens: s[max_prompt..max_prompt + r.max_new].to_vec(),
-            })
+        states
+            .iter()
+            .map(|s| GenResult { id: s.id, tokens: s.generated().to_vec() })
             .collect()
     }
 
@@ -208,8 +297,8 @@ mod tests {
     fn generates_requested_counts() {
         let e = engine();
         let reqs = vec![
-            GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 4 },
-            GenRequest { id: 2, prompt: vec![9], max_new: 4 },
+            GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 4, stop: None },
+            GenRequest { id: 2, prompt: vec![9], max_new: 4, stop: None },
         ];
         let out = e.generate_batch(&reqs);
         assert_eq!(out.len(), 2);
@@ -226,15 +315,15 @@ mod tests {
         // test pins it against the rewritten decode loop.)
         let e = engine();
         let reqs = vec![
-            GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 2 },
-            GenRequest { id: 2, prompt: vec![8, 9, 10], max_new: 6 },
+            GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 2, stop: None },
+            GenRequest { id: 2, prompt: vec![8, 9, 10], max_new: 6, stop: None },
         ];
         let out = e.generate_batch(&reqs);
         assert_eq!(out[0].tokens.len(), 2);
         assert_eq!(out[1].tokens.len(), 6);
         // The shorter request's tokens are a prefix of what it would have
         // produced alone.
-        let solo = e.generate_batch(&[GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 6 }]);
+        let solo = e.generate_batch(&[GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 6, stop: None }]);
         assert_eq!(solo[0].tokens[..2], out[0].tokens[..]);
     }
 
@@ -244,7 +333,7 @@ mod tests {
         let prompt = vec![5u32, 6, 7, 11];
         let want = legacy_generate(&e, &prompt, 6);
         let got =
-            e.generate_batch(&[GenRequest { id: 1, prompt: prompt.clone(), max_new: 6 }]);
+            e.generate_batch(&[GenRequest { id: 1, prompt: prompt.clone(), max_new: 6, stop: None }]);
         assert_eq!(got[0].tokens, want);
     }
 
@@ -253,8 +342,8 @@ mod tests {
         // Greedy decoding must be batching-invariant when prompts share a
         // length (no padding effects).
         let e = engine();
-        let r1 = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 3 };
-        let r2 = GenRequest { id: 2, prompt: vec![8, 9, 10], max_new: 3 };
+        let r1 = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 3, stop: None };
+        let r2 = GenRequest { id: 2, prompt: vec![8, 9, 10], max_new: 3, stop: None };
         let both = e.generate_batch(&[r1.clone(), r2.clone()]);
         let solo1 = e.generate_batch(&[r1]);
         let solo2 = e.generate_batch(&[r2]);
@@ -271,7 +360,7 @@ mod tests {
         let max_seq = e.config().max_seq;
         let prompt = vec![3u32, 4, 5];
         let max_new = max_seq + 5;
-        let out = e.generate_batch(&[GenRequest { id: 1, prompt: prompt.clone(), max_new }]);
+        let out = e.generate_batch(&[GenRequest { id: 1, prompt: prompt.clone(), max_new, stop: None }]);
         assert_eq!(out[0].tokens.len(), max_new);
         assert_eq!(out[0].tokens, legacy_generate(&e, &prompt, max_new));
     }
@@ -298,7 +387,7 @@ mod tests {
         let score_kn = e_kn.score(&[5, 6, 7, 8]);
         assert!(score_kn.rel_err(&score_ov) < 1e-4, "err {}", score_kn.rel_err(&score_ov));
         // And the kernel engine generates well-formed batches.
-        let out = e_kn.generate_batch(&[GenRequest { id: 1, prompt: vec![5, 6], max_new: 4 }]);
+        let out = e_kn.generate_batch(&[GenRequest { id: 1, prompt: vec![5, 6], max_new: 4, stop: None }]);
         assert_eq!(out[0].tokens.len(), 4);
     }
 
@@ -306,5 +395,98 @@ mod tests {
     fn empty_batch_ok() {
         let e = engine();
         assert!(e.generate_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn mixed_length_batched_equals_single() {
+        // Regression for the left-padding correctness gap: prompts of
+        // different lengths used to attend to pad BOS tokens, so batched
+        // greedy output could differ from solo output. Per-slot prefill
+        // removes the padding entirely.
+        let e = engine();
+        let reqs = vec![
+            GenRequest { id: 1, prompt: vec![9], max_new: 4, stop: None },
+            GenRequest { id: 2, prompt: vec![5, 6, 7], max_new: 4, stop: None },
+            GenRequest { id: 3, prompt: vec![20, 21, 22, 23, 24, 25, 26], max_new: 4, stop: None },
+        ];
+        let both = e.generate_batch(&reqs);
+        for (req, got) in reqs.iter().zip(both.iter()) {
+            let solo = e.generate_batch(&[req.clone()]);
+            assert_eq!(
+                got.tokens, solo[0].tokens,
+                "request {} diverged from its solo decode",
+                req.id
+            );
+        }
+    }
+
+    #[test]
+    fn stop_token_retires_early() {
+        let e = engine();
+        // Discover what the model generates unconstrained, then stop at the
+        // second token.
+        let free = e.generate_batch(&[GenRequest {
+            id: 1,
+            prompt: vec![5, 6, 7],
+            max_new: 6,
+            stop: None,
+        }]);
+        assert_eq!(free[0].tokens.len(), 6);
+        let stop = free[0].tokens[1];
+        let stopped = e.generate_batch(&[GenRequest {
+            id: 1,
+            prompt: vec![5, 6, 7],
+            max_new: 6,
+            stop: Some(stop),
+        }]);
+        // Output is the unconstrained prefix up to and including the FIRST
+        // occurrence of the stop token (greedy decoding is deterministic,
+        // so the prefix matches).
+        let cut = free[0].tokens.iter().position(|&t| t == stop).unwrap() + 1;
+        assert_eq!(stopped[0].tokens, free[0].tokens[..cut].to_vec());
+        assert_eq!(*stopped[0].tokens.last().unwrap(), stop);
+    }
+
+    #[test]
+    fn retired_slot_is_reused_for_new_request() {
+        // Drive the prefill/decode primitives directly on a 1-slot pool:
+        // after the first sequence retires and frees its slot, a second
+        // request must get the same slot and still decode exactly like a
+        // solo run.
+        let e = engine();
+        let mut pool = KvCachePool::new(e.config(), 1);
+        let r1 = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 3, stop: None };
+        let r2 = GenRequest { id: 2, prompt: vec![40, 41], max_new: 4, stop: None };
+        let mut s1 = e.prefill(&r1, &mut pool);
+        loop {
+            let mut active: Vec<&mut SeqState> = vec![&mut s1];
+            if e.decode_step(&mut active, &mut pool) == 0 {
+                break;
+            }
+        }
+        assert!(s1.done);
+        pool.free(s1.slot);
+        let mut s2 = e.prefill(&r2, &mut pool);
+        assert_eq!(s2.slot, s1.slot, "freed slot must be reused");
+        while !s2.done {
+            let mut active: Vec<&mut SeqState> = vec![&mut s2];
+            e.decode_step(&mut active, &mut pool);
+        }
+        let solo = e.generate_batch(&[r2.clone()]);
+        assert_eq!(s2.generated(), &solo[0].tokens[..]);
+        assert_eq!(s1.generated(), &e.generate_batch(&[r1])[0].tokens[..]);
+    }
+
+    #[test]
+    fn max_new_zero_is_done_without_forward() {
+        let e = engine();
+        let mut pool = KvCachePool::new(e.config(), 1);
+        let st = e.prefill(
+            &GenRequest { id: 7, prompt: vec![5], max_new: 0, stop: None },
+            &mut pool,
+        );
+        assert!(st.done);
+        assert!(st.generated().is_empty());
+        assert_eq!(pool.len(st.slot), 0);
     }
 }

@@ -1,15 +1,47 @@
-//! Serving metrics: request/batch counters + latency aggregates.
+//! Serving metrics: request/batch counters, latency aggregates, and the
+//! continuous-scheduler gauges (queue depth, time-to-first-token and
+//! per-token decode latency percentiles).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Samples kept per latency window.
+const WINDOW: usize = 10_000;
+
+fn push_capped(samples: &Mutex<Vec<f64>>, v: f64) {
+    let mut l = samples.lock().unwrap();
+    if l.len() >= WINDOW {
+        l.remove(0);
+    }
+    l.push(v);
+}
+
+fn percentile(samples: &Mutex<Vec<f64>>, pct: f64) -> f64 {
+    let mut l = samples.lock().unwrap().clone();
+    if l.is_empty() {
+        return 0.0;
+    }
+    l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((pct / 100.0) * (l.len() - 1) as f64).round() as usize;
+    l[idx.min(l.len() - 1)]
+}
 
 /// Lock-light metrics registry shared by router + workers.
 pub struct Metrics {
     requests: AtomicU64,
     batches: AtomicU64,
     tokens: AtomicU64,
+    /// Most recent queue depth observed at admission.
+    queue_depth: AtomicU64,
+    /// High-water mark of the queue depth.
+    max_queue_depth: AtomicU64,
     /// Recent request latencies (seconds), capped ring.
     latencies: Mutex<Vec<f64>>,
+    /// Recent submit→first-token latencies (seconds), capped ring.
+    ttfts: Mutex<Vec<f64>>,
+    /// Recent decode-step durations (seconds) — the per-token decode
+    /// latency every active sequence paid for that step.
+    decode_steps: Mutex<Vec<f64>>,
     /// Total engine-busy seconds.
     busy: Mutex<f64>,
 }
@@ -20,18 +52,18 @@ impl Metrics {
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             tokens: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            max_queue_depth: AtomicU64::new(0),
             latencies: Mutex::new(Vec::new()),
+            ttfts: Mutex::new(Vec::new()),
+            decode_steps: Mutex::new(Vec::new()),
             busy: Mutex::new(0.0),
         }
     }
 
     pub fn record_request(&self, latency_s: f64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
-        if l.len() >= 10_000 {
-            l.remove(0);
-        }
-        l.push(latency_s);
+        push_capped(&self.latencies, latency_s);
     }
 
     pub fn record_batch(&self, batch_size: usize, new_tokens: usize, elapsed_s: f64) {
@@ -39,6 +71,33 @@ impl Metrics {
         self.tokens.fetch_add(new_tokens as u64, Ordering::Relaxed);
         *self.busy.lock().unwrap() += elapsed_s;
         let _ = batch_size;
+    }
+
+    /// Record the queue depth observed when a request was admitted.
+    pub fn record_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+        self.max_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Record one request's submit→first-token latency.
+    pub fn record_ttft(&self, ttft_s: f64) {
+        push_capped(&self.ttfts, ttft_s);
+    }
+
+    /// Record prefill work: tokens count toward throughput and the elapsed
+    /// time toward engine-busy, but NOT into the decode-latency histogram
+    /// (prefill passes are prompt-sized, decode steps are single-token).
+    pub fn record_prefill(&self, new_tokens: usize, elapsed_s: f64) {
+        self.tokens.fetch_add(new_tokens as u64, Ordering::Relaxed);
+        *self.busy.lock().unwrap() += elapsed_s;
+    }
+
+    /// Record one continuous decode step: `new_tokens` sequences each got
+    /// one token, and each paid `elapsed_s` of per-token decode latency.
+    pub fn record_decode_step(&self, new_tokens: usize, elapsed_s: f64) {
+        self.tokens.fetch_add(new_tokens as u64, Ordering::Relaxed);
+        *self.busy.lock().unwrap() += elapsed_s;
+        push_capped(&self.decode_steps, elapsed_s);
     }
 
     pub fn requests(&self) -> u64 {
@@ -53,21 +112,39 @@ impl Metrics {
         self.tokens.load(Ordering::Relaxed)
     }
 
-    /// Mean batch size so far.
+    /// Queue depth at the most recent admission.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed) as usize
+    }
+
+    /// Deepest queue observed so far.
+    pub fn max_queue_depth(&self) -> usize {
+        self.max_queue_depth.load(Ordering::Relaxed) as usize
+    }
+
+    /// Mean batch size so far (fixed-batch routes; 0 when no batches were
+    /// recorded, e.g. on continuous routes).
     pub fn mean_batch_size(&self) -> f64 {
-        let b = self.batches().max(1);
+        let b = self.batches();
+        if b == 0 {
+            return 0.0;
+        }
         self.requests() as f64 / b as f64
     }
 
-    /// Latency percentile (0..100) over the recent window.
+    /// Request-latency percentile (0..100) over the recent window.
     pub fn latency_pct(&self, pct: f64) -> f64 {
-        let mut l = self.latencies.lock().unwrap().clone();
-        if l.is_empty() {
-            return 0.0;
-        }
-        l.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((pct / 100.0) * (l.len() - 1) as f64).round() as usize;
-        l[idx.min(l.len() - 1)]
+        percentile(&self.latencies, pct)
+    }
+
+    /// Time-to-first-token percentile (0..100) over the recent window.
+    pub fn ttft_pct(&self, pct: f64) -> f64 {
+        percentile(&self.ttfts, pct)
+    }
+
+    /// Per-token decode-latency percentile (0..100) over the recent window.
+    pub fn decode_pct(&self, pct: f64) -> f64 {
+        percentile(&self.decode_steps, pct)
     }
 
     /// Decode throughput: generated tokens per engine-busy second.
@@ -82,13 +159,21 @@ impl Metrics {
     /// One-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} mean_batch={:.2} tokens={} p50={:.1}ms p99={:.1}ms tok/s={:.1}",
+            "requests={} batches={} mean_batch={:.2} tokens={} queue={}(max {}) \
+             p50={:.1}ms p99={:.1}ms ttft_p50={:.1}ms ttft_p95={:.1}ms \
+             decode_p50={:.2}ms decode_p95={:.2}ms tok/s={:.1}",
             self.requests(),
             self.batches(),
             self.mean_batch_size(),
             self.tokens(),
+            self.queue_depth(),
+            self.max_queue_depth(),
             self.latency_pct(50.0) * 1e3,
             self.latency_pct(99.0) * 1e3,
+            self.ttft_pct(50.0) * 1e3,
+            self.ttft_pct(95.0) * 1e3,
+            self.decode_pct(50.0) * 1e3,
+            self.decode_pct(95.0) * 1e3,
             self.tokens_per_busy_second(),
         )
     }
@@ -123,7 +208,41 @@ mod tests {
     fn empty_metrics_safe() {
         let m = Metrics::new();
         assert_eq!(m.latency_pct(99.0), 0.0);
+        assert_eq!(m.ttft_pct(50.0), 0.0);
+        assert_eq!(m.decode_pct(95.0), 0.0);
         assert_eq!(m.tokens_per_busy_second(), 0.0);
         assert!(m.summary().contains("requests=0"));
+    }
+
+    #[test]
+    fn scheduler_gauges_and_percentiles() {
+        let m = Metrics::new();
+        m.record_queue_depth(3);
+        m.record_queue_depth(1);
+        assert_eq!(m.queue_depth(), 1);
+        assert_eq!(m.max_queue_depth(), 3);
+
+        m.record_ttft(0.010);
+        m.record_ttft(0.020);
+        m.record_ttft(0.100);
+        assert!((m.ttft_pct(50.0) - 0.020).abs() < 1e-12);
+        assert!((m.ttft_pct(95.0) - 0.100).abs() < 1e-12);
+
+        // Prefill counts tokens + busy but not decode latency.
+        m.record_prefill(1, 0.050);
+        assert_eq!(m.tokens(), 1);
+        assert_eq!(m.decode_pct(50.0), 0.0);
+
+        m.record_decode_step(4, 0.002);
+        m.record_decode_step(4, 0.004);
+        m.record_decode_step(2, 0.030);
+        assert_eq!(m.tokens(), 11);
+        assert!((m.decode_pct(50.0) - 0.004).abs() < 1e-12);
+        assert!((m.decode_pct(95.0) - 0.030).abs() < 1e-12);
+
+        let s = m.summary();
+        assert!(s.contains("ttft_p50="), "{s}");
+        assert!(s.contains("decode_p95="), "{s}");
+        assert!(s.contains("queue=1(max 3)"), "{s}");
     }
 }

@@ -1,31 +1,42 @@
-//! Serving stack: request router + dynamic batcher + TCP front-end.
+//! Serving stack: request router + schedulers + TCP front-end.
 //!
 //! The L3 coordination layer for deploying compressed models (vLLM-router
 //! flavored, std-thread based — the vendored crate set has no tokio):
 //!
-//! * [`engine`] — greedy-decode generation over a (compressed) model.
-//!   Generation is split into the standard serving phases: the prompt is
-//!   *prefilled* once into a `model::KvCache`, then each token is a
-//!   single-position incremental *decode* step (`model::forward_cached`),
-//!   so per-token cost is linear — not quadratic — in sequence length.
-//!   Compressed engines can dispatch every linear matmul to packed kernels
-//!   (`Engine::with_kernels` → `kernels::LinearOp`); `benches/decode.rs`
-//!   measures the resulting end-to-end prefill/decode speedups — the
-//!   paper's Fig. 3/4 decomposition at the token-generation level.
-//! * [`batcher`] — collects concurrent requests into decode batches under
-//!   a max-batch/max-wait policy (the paper serves with small decode
-//!   batches, per Xia et al. / Zheng et al.).
-//! * [`router`] — routes requests to named engines (model registry).
+//! * [`engine`] — greedy-decode generation over a (compressed) model,
+//!   split into explicit serving phases: [`engine::Engine::prefill`]
+//!   admits one request into a per-sequence `model::KvCachePool` slot,
+//!   [`engine::Engine::decode_step`] advances every in-flight sequence one
+//!   token in a single batched forward (`model::forward_slots`), and
+//!   `generate_batch` is the run-to-completion wrapper. Per-slot prefill
+//!   means no left-padding: batched greedy output is token-for-token
+//!   identical to solo output. Compressed engines dispatch every linear
+//!   matmul to packed kernels (`Engine::with_kernels` →
+//!   `kernels::LinearOp`) — the paper's Fig. 3/4 speedups at the
+//!   token-generation level.
+//! * [`scheduler`] — the continuous-batching step-loop: admits queued
+//!   requests into the running decode batch as cache slots free up and
+//!   retires each sequence at its own `max_new`/stop token, so no request
+//!   pays for the slowest member of a lockstep batch. `benches/serve.rs`
+//!   measures it against the fixed-batch baseline under Poisson arrivals.
+//! * [`batcher`] — the shared request queue: fixed batch formation under a
+//!   max-batch/max-wait policy for the legacy worker, non-blocking
+//!   `try_take` + untimed `wait_pending` admission for the scheduler.
+//! * [`router`] — routes requests to named engines (model registry), one
+//!   worker per engine in either serving mode.
 //! * [`api`] — newline-delimited-JSON TCP protocol + a blocking client.
-//! * [`metrics`] — latency/throughput counters the benches read.
+//! * [`metrics`] — counters, queue depth, TTFT and per-token decode
+//!   latency percentiles the benches read.
 
 pub mod api;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod router;
+pub mod scheduler;
 
-pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{Engine, GenRequest, GenResult};
+pub use batcher::{BatchPolicy, Batcher, Pending};
+pub use engine::{Engine, GenRequest, GenResult, SeqState};
 pub use metrics::Metrics;
 pub use router::Router;
+pub use scheduler::{SchedPolicy, Scheduler};

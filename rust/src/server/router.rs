@@ -1,13 +1,22 @@
-//! Request router: model registry + per-model batcher + worker threads.
+//! Request router: model registry + per-model queue + worker threads.
 //!
 //! The top of the L3 serving stack. Each registered engine gets its own
-//! [`Batcher`] and a worker thread that drains batches through
-//! [`Engine::generate_batch`]. The router dispatches by model name and
-//! records per-request latency in [`Metrics`].
+//! [`Batcher`] queue and a worker thread, in one of two serving modes:
+//!
+//! * [`Router::register_continuous`] — a [`Scheduler`] step-loop with
+//!   per-sequence KV cache slots: requests are admitted into the running
+//!   decode batch and retire individually (the default for new deploys).
+//! * [`Router::register`] — the legacy fixed-batch worker: batches drain
+//!   through [`Engine::generate_batch`] to completion before the next
+//!   batch forms (kept for comparison benches and compatibility).
+//!
+//! The router dispatches by model name; workers record per-request serve
+//! latency (queue wait + compute) in [`Metrics`].
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{Engine, GenRequest, GenResult};
 use super::metrics::Metrics;
+use super::scheduler::{SchedPolicy, Scheduler};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -16,6 +25,9 @@ use std::time::Instant;
 
 struct Route {
     batcher: Arc<Batcher>,
+    /// The engine's vocab size, kept for admission-time prompt validation
+    /// (an out-of-vocab token must be rejected here, not panic the worker).
+    vocab: usize,
     _worker: std::thread::JoinHandle<()>,
 }
 
@@ -35,25 +47,46 @@ impl Router {
         }
     }
 
-    /// Register an engine under its name, spawning its worker.
+    /// Register an engine under its name with the legacy fixed-batch
+    /// worker: each batch runs to completion via
+    /// [`Engine::generate_batch`] before the next batch is formed.
     pub fn register(&mut self, engine: Engine, policy: BatchPolicy) {
         let name = engine.name.clone();
+        let vocab = engine.config().vocab;
         let batcher = Arc::new(Batcher::new(policy));
         let metrics = self.metrics.clone();
         let worker_batcher = batcher.clone();
         let worker = std::thread::spawn(move || {
-            while let Some((reqs, slots)) = worker_batcher.next_batch() {
+            while let Some(batch) = worker_batcher.next_batch() {
                 let t0 = Instant::now();
+                let reqs: Vec<GenRequest> = batch.iter().map(|p| p.req.clone()).collect();
                 let results = engine.generate_batch(&reqs);
                 let elapsed = t0.elapsed().as_secs_f64();
                 let new_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
-                metrics.record_batch(reqs.len(), new_tokens, elapsed);
-                for (res, slot) in results.into_iter().zip(slots) {
-                    let _ = slot.send(res);
+                metrics.record_batch(batch.len(), new_tokens, elapsed);
+                for (res, pending) in results.into_iter().zip(batch) {
+                    metrics.record_request(pending.enqueued.elapsed().as_secs_f64());
+                    let _ = pending.result_slot.send(res);
                 }
             }
         });
-        self.routes.insert(name, Route { batcher, _worker: worker });
+        self.routes.insert(name, Route { batcher, vocab, _worker: worker });
+    }
+
+    /// Register an engine under its name with the continuous-batching
+    /// [`Scheduler`]: requests are admitted into the in-flight decode
+    /// batch as cache slots free up and retire individually.
+    pub fn register_continuous(&mut self, engine: Engine, policy: SchedPolicy) {
+        let name = engine.name.clone();
+        let vocab = engine.config().vocab;
+        let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+        let metrics = self.metrics.clone();
+        let worker_batcher = batcher.clone();
+        let scheduler = Scheduler::new(Arc::new(engine), policy);
+        let worker = std::thread::spawn(move || {
+            scheduler.run(&worker_batcher, &metrics);
+        });
+        self.routes.insert(name, Route { batcher, vocab, _worker: worker });
     }
 
     /// Registered model names.
@@ -63,18 +96,22 @@ impl Router {
 
     /// Submit a request; blocks until the result arrives.
     pub fn generate(&self, model: &str, prompt: Vec<u32>, max_new: usize) -> Result<GenResult> {
-        let route = self
-            .routes
-            .get(model)
-            .ok_or_else(|| anyhow!("unknown model {model}"))?;
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let t0 = Instant::now();
-        let rx = route.batcher.submit(GenRequest { id, prompt, max_new });
-        let result = rx
-            .recv_timeout(std::time::Duration::from_secs(120))
-            .map_err(|_| anyhow!("generation timed out"))?;
-        self.metrics.record_request(t0.elapsed().as_secs_f64());
-        Ok(result)
+        self.generate_opts(model, prompt, max_new, None)
+    }
+
+    /// [`Router::generate`] with an optional stop token: generation retires
+    /// early the moment the stop token is produced (it is included in the
+    /// output).
+    pub fn generate_opts(
+        &self,
+        model: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        stop: Option<u32>,
+    ) -> Result<GenResult> {
+        let rx = self.submit_opts(model, prompt, max_new, stop)?;
+        rx.recv_timeout(std::time::Duration::from_secs(120))
+            .map_err(|_| anyhow!("generation timed out"))
     }
 
     /// Non-blocking submit returning the receiver (for concurrent clients).
@@ -84,12 +121,26 @@ impl Router {
         prompt: Vec<u32>,
         max_new: usize,
     ) -> Result<std::sync::mpsc::Receiver<GenResult>> {
+        self.submit_opts(model, prompt, max_new, None)
+    }
+
+    /// [`Router::submit`] with an optional stop token.
+    pub fn submit_opts(
+        &self,
+        model: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        stop: Option<u32>,
+    ) -> Result<std::sync::mpsc::Receiver<GenResult>> {
         let route = self
             .routes
             .get(model)
             .ok_or_else(|| anyhow!("unknown model {model}"))?;
+        if let Some(&t) = prompt.iter().find(|&&t| t as usize >= route.vocab) {
+            return Err(anyhow!("token {t} out of vocab (size {})", route.vocab));
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        Ok(route.batcher.submit(GenRequest { id, prompt, max_new }))
+        Ok(route.batcher.submit(GenRequest { id, prompt, max_new, stop }))
     }
 
     /// Shut down all workers.
@@ -118,13 +169,22 @@ mod tests {
     use crate::model::{by_name, init};
     use crate::rng::Pcg32;
 
-    fn router() -> Router {
+    fn engine() -> Engine {
         let cfg = by_name("sim-125m").unwrap();
         let mut rng = Pcg32::seeded(1);
         let w = init(&cfg, &mut rng);
-        let engine = Engine::new("sim-125m", cfg, Arc::new(w), None);
+        Engine::new("sim-125m", cfg, Arc::new(w), None)
+    }
+
+    fn router() -> Router {
         let mut r = Router::new();
-        r.register(engine, BatchPolicy::default());
+        r.register(engine(), BatchPolicy::default());
+        r
+    }
+
+    fn router_continuous() -> Router {
+        let mut r = Router::new();
+        r.register_continuous(engine(), SchedPolicy { max_slots: 4 });
         r
     }
 
@@ -161,5 +221,59 @@ mod tests {
         assert_eq!(ok, 12);
         // Batching should have coalesced at least some requests.
         assert!(r.metrics.batches() <= 12);
+    }
+
+    #[test]
+    fn continuous_route_generates_and_records_serving_metrics() {
+        let r = router_continuous();
+        let out = r.generate("sim-125m", vec![3, 4, 5], 4).unwrap();
+        assert_eq!(out.tokens.len(), 4);
+        // The continuous route matches the fixed route token-for-token
+        // (both are solo-equivalent).
+        let fixed = router().generate("sim-125m", vec![3, 4, 5], 4).unwrap();
+        assert_eq!(out.tokens, fixed.tokens);
+        assert!(r.metrics.requests() >= 1);
+        assert!(r.metrics.ttft_pct(50.0) > 0.0);
+        assert!(r.metrics.tokens() >= 4);
+    }
+
+    #[test]
+    fn continuous_route_concurrent_mixed_lengths() {
+        let r = Arc::new(router_continuous());
+        let mut handles = Vec::new();
+        for i in 0..10u32 {
+            let r2 = r.clone();
+            handles.push(std::thread::spawn(move || {
+                let prompt: Vec<u32> = (0..1 + (i as usize % 4)).map(|j| 8 + i + j as u32).collect();
+                let out = r2.generate("sim-125m", prompt, 1 + (i as usize % 3)).unwrap();
+                (i, out)
+            }));
+        }
+        for h in handles {
+            let (i, out) = h.join().unwrap();
+            assert_eq!(out.tokens.len(), 1 + (i as usize % 3));
+        }
+        assert_eq!(r.metrics.requests(), 10);
+    }
+
+    #[test]
+    fn out_of_vocab_prompt_rejected_without_killing_route() {
+        for r in [router(), router_continuous()] {
+            let err = r.generate("sim-125m", vec![5, 99_999], 2);
+            assert!(err.is_err(), "out-of-vocab token must be rejected");
+            // The worker thread is still alive and serving.
+            let ok = r.generate("sim-125m", vec![5, 6], 2).unwrap();
+            assert_eq!(ok.tokens.len(), 2);
+        }
+    }
+
+    #[test]
+    fn stop_token_plumbs_through_router() {
+        let r = router();
+        let free = r.generate("sim-125m", vec![5, 6, 7], 6).unwrap();
+        let stop = free.tokens[1];
+        let stopped = r.generate_opts("sim-125m", vec![5, 6, 7], 6, Some(stop)).unwrap();
+        let cut = free.tokens.iter().position(|&t| t == stop).unwrap() + 1;
+        assert_eq!(stopped.tokens, free.tokens[..cut].to_vec());
     }
 }
