@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let mut router = Router::new();
     router.register_continuous(
         Engine::new(model, cfg.clone(), weights, None),
-        SchedPolicy { max_slots: 4 },
+        SchedPolicy { max_slots: 4, ..Default::default() },
     );
     let router = Arc::new(router);
 

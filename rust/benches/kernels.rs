@@ -49,7 +49,8 @@ fn main() {
         let x = Matrix::randn(batch, d_in, 1.0, &mut rng);
         let q = slim_quant::quantize(&w, 4);
         let qg = group_absmax::quantize(&w, 4, 128);
-        let (_, mask) = wanda::prune(&q.wq, &vec![1.0; d_in], SparsityPattern::TWO_FOUR);
+        let x_l2 = vec![1.0f32; d_in];
+        let (_, mask) = wanda::prune(&q.wq, &x_l2, SparsityPattern::TWO_FOUR);
 
         let dense = DenseKernel::new(w.clone());
         let int4 = Int4Kernel::from_quantized(&q);

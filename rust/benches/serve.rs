@@ -48,7 +48,8 @@ fn kernel_weights(cfg: &ModelConfig, w: &Weights) -> CompressedWeights {
     let mut cw = CompressedWeights::new();
     for (name, d_in, _) in cfg.linear_layers() {
         let q = slim_quant::quantize(w.expect(&name), 4);
-        let (_, mask) = wanda::prune(&q.wq, &vec![1.0; d_in], SparsityPattern::TWO_FOUR);
+        let x_l2 = vec![1.0f32; d_in];
+        let (_, mask) = wanda::prune(&q.wq, &x_l2, SparsityPattern::TWO_FOUR);
         cw.insert(&name, LinearOp::sparse24(&q, &mask, None));
     }
     cw
@@ -149,7 +150,7 @@ fn run_mode(engine: Arc<Engine>, arrivals: &[Arrival], continuous: bool, cap: us
         let e = engine.clone();
         std::thread::spawn(move || {
             if continuous {
-                Scheduler::new(e, SchedPolicy { max_slots: cap }).run(&b, &m);
+                Scheduler::new(e, SchedPolicy { max_slots: cap, ..Default::default() }).run(&b, &m);
             } else {
                 fixed_worker(&e, &b, &m, cap);
             }

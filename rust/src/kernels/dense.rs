@@ -24,8 +24,14 @@ impl MatmulKernel for DenseKernel {
         "dense-f32"
     }
 
-    fn matmul(&self, x: &Matrix) -> Matrix {
-        x.matmul(&self.w)
+    fn matmul_fused(&self, x: &Matrix, lowrank: Option<(&Matrix, &Matrix)>) -> Matrix {
+        let mut y = x.matmul(&self.w);
+        if let Some((xl, r)) = lowrank {
+            // One in-place accumulation pass — no correction matrix.
+            let n = y.cols();
+            super::add_lowrank_block(xl, r, 0, n, y.data_mut());
+        }
+        y
     }
 
     fn weight_bytes(&self) -> usize {

@@ -86,19 +86,23 @@ impl MatmulKernel for Int4Kernel {
         "int4-dense"
     }
 
-    fn matmul(&self, x: &Matrix) -> Matrix {
+    fn matmul_fused(&self, x: &Matrix, lowrank: Option<(&Matrix, &Matrix)>) -> Matrix {
         let (m, d_in) = x.shape();
         assert_eq!(d_in, self.d_in);
         let n = self.d_out;
-        let mut y = super::parallel_columns(m, n, m * d_in * n, |j0, j1, out| {
-            self.decode_block(x, j0, j1, out)
-        });
-        // Accumulation stays in code space; one per-tensor dequant at the end.
+        // Accumulation stays in code space; the per-tensor dequant and the
+        // low-rank adapter term are both folded into the column-block loop,
+        // so the output is touched exactly once per worker.
         let dequant = self.alpha / levels(self.bits);
-        for v in y.data_mut() {
-            *v *= dequant;
-        }
-        y
+        super::parallel_columns(m, n, m * d_in * n, |j0, j1, out| {
+            self.decode_block(x, j0, j1, out);
+            for v in out.iter_mut() {
+                *v *= dequant;
+            }
+            if let Some((xl, r)) = lowrank {
+                super::add_lowrank_block(xl, r, j0, j1, out);
+            }
+        })
     }
 
     fn weight_bytes(&self) -> usize {
@@ -175,12 +179,15 @@ impl MatmulKernel for GroupInt4Kernel {
         "int4-group"
     }
 
-    fn matmul(&self, x: &Matrix) -> Matrix {
+    fn matmul_fused(&self, x: &Matrix, lowrank: Option<(&Matrix, &Matrix)>) -> Matrix {
         let (m, d_in) = x.shape();
         assert_eq!(d_in, self.d_in);
         let n = self.d_out;
         super::parallel_columns(m, n, m * d_in * n, |j0, j1, out| {
-            self.decode_block(x, j0, j1, out)
+            self.decode_block(x, j0, j1, out);
+            if let Some((xl, r)) = lowrank {
+                super::add_lowrank_block(xl, r, j0, j1, out);
+            }
         })
     }
 

@@ -100,13 +100,18 @@ impl LinearOp {
         LinearOp { kernel, adapter }
     }
 
-    /// y = x·W (+ x·L·R).
+    /// y = x·W (+ x·L·R). The adapter's skinny `x·L` projection is computed
+    /// once, and the `(x·L)·R` term is fused into the kernel's
+    /// output-column loop — one pass over y instead of kernel-output +
+    /// correction + add.
     pub fn matmul(&self, x: &Matrix) -> Matrix {
-        let mut y = self.kernel.as_kernel().matmul(x);
-        if let Some(a) = &self.adapter {
-            a.apply(x, &mut y);
+        match &self.adapter {
+            None => self.kernel.as_kernel().matmul(x),
+            Some(a) => {
+                let xl = a.project(x);
+                self.kernel.as_kernel().matmul_fused(x, Some((&xl, a.r())))
+            }
         }
-        y
     }
 
     /// Display name of the backing kernel.
@@ -210,6 +215,23 @@ mod tests {
         let op = LinearOp::from_compressed(&out);
         let err = op.matmul(&x).rel_err(&x.matmul(&out.effective()));
         assert!(err < 1e-5, "slim-quant-o op err {err}");
+    }
+
+    /// The fused adapter path (xl·R inside the kernel's column loop) must
+    /// match the unfused reference (kernel output + separate apply pass).
+    #[test]
+    fn fused_adapter_matches_unfused_apply() {
+        let slim = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+        let (out, x) = layer(8, &slim);
+        let op = LinearOp::from_compressed(&out);
+        assert!(op.rank() > 0, "preset must produce adapters");
+        let fused = op.matmul(&x);
+        let adapter = LowRankApply::new(out.adapters.as_ref().unwrap());
+        let mut bare = out;
+        bare.adapters = None;
+        let mut want = LinearOp::from_compressed(&bare).matmul(&x);
+        adapter.apply(&x, &mut want);
+        assert!(fused.rel_err(&want) < 1e-6, "err {}", fused.rel_err(&want));
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Low-rank adapter application: `y += (x·L)·R`.
 //!
-//! Two skinny dense matmuls — the paper notes this adds ≤2% FLOPs at
-//! r = 0.1·d (Apx O). Supports optional int4-group-quantized factors
-//! (dequantized on construction, matching how Dense Marlin handles the
-//! adapters in the paper's setup).
+//! The paper notes this adds ≤2% FLOPs at r = 0.1·d (Apx O). The serving
+//! path computes the skinny projection `xl = x·L` once ([`LowRankApply::
+//! project`]) and fuses the `xl·R` term into the packed kernel's
+//! output-column loop (`MatmulKernel::matmul_fused`), so y is written in a
+//! single pass; [`LowRankApply::apply`] keeps the standalone two-matmul
+//! form for reference and tests.
 
 use crate::lowrank::Adapters;
 use crate::tensor::Matrix;
@@ -29,7 +31,18 @@ impl LowRankApply {
         (self.l.len() + self.r.len()) * 4
     }
 
-    /// y += (x·L)·R, in place.
+    /// The skinny down-projection `x·L` (m × rank), computed once per call
+    /// and handed to the kernel's fused column loop.
+    pub fn project(&self, x: &Matrix) -> Matrix {
+        x.matmul(&self.l)
+    }
+
+    /// The up-projection factor `R` (rank × d_out).
+    pub fn r(&self) -> &Matrix {
+        &self.r
+    }
+
+    /// y += (x·L)·R, in place — the unfused reference form.
     pub fn apply(&self, x: &Matrix, y: &mut Matrix) {
         let xl = x.matmul(&self.l);
         let corr = xl.matmul(&self.r);

@@ -15,7 +15,11 @@
 //!   tile-decodes into private scratch), so they scale with cores like the
 //!   dense `tensor::ops::matmul` baseline they are benchmarked against.
 //! * [`LinearOp`] — one servable linear layer: a kernel plus the optional
-//!   low-rank adapter term `x·L·R`. Built from the compression pipeline's
+//!   low-rank adapter term `x·L·R`, with the skinny `x·L` projection
+//!   computed once and the `(x·L)·R` correction fused into each worker's
+//!   output-column block (`MatmulKernel::matmul_fused`) — y is written in
+//!   one pass instead of kernel-output + correction + add. Built from the
+//!   compression pipeline's
 //!   [`crate::compress::CompressedLayer`] output, and dispatched by the
 //!   KV-cached forward pass (`model::forward_cached`) so the serving hot
 //!   loop runs on packed weights instead of dense f32 overrides. The
@@ -43,9 +47,41 @@ pub trait MatmulKernel {
     /// Kernel display name.
     fn name(&self) -> &'static str;
     /// y = x · W.
-    fn matmul(&self, x: &Matrix) -> Matrix;
+    fn matmul(&self, x: &Matrix) -> Matrix {
+        self.matmul_fused(x, None)
+    }
+    /// y = x · W, with an optional pre-projected low-rank term fused into
+    /// the output-column loop: `lowrank = Some((xl, r))` adds `xl · r`
+    /// (where `xl = x·L` was computed once by the caller) inside each
+    /// worker's column block — no separate correction matrix and no second
+    /// full pass over y.
+    fn matmul_fused(&self, x: &Matrix, lowrank: Option<(&Matrix, &Matrix)>) -> Matrix;
     /// Bytes of weight data touched per call (the traffic model).
     fn weight_bytes(&self) -> usize;
+}
+
+/// Accumulate the low-rank correction `xl · R` restricted to output columns
+/// `[j0, j1)` into a column block (`out`: m × (j1-j0), row-major) — the
+/// fused adapter path the packed kernels call at the end of each column
+/// block, replacing the old dense `y += (x·L)·R` extra pass.
+pub(crate) fn add_lowrank_block(xl: &Matrix, r: &Matrix, j0: usize, j1: usize, out: &mut [f32]) {
+    debug_assert_eq!(xl.cols(), r.rows());
+    let m = xl.rows();
+    let bw = j1 - j0;
+    debug_assert_eq!(out.len(), m * bw);
+    for i in 0..m {
+        let xrow = xl.row(i);
+        let orow = &mut out[i * bw..(i + 1) * bw];
+        for (rr, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let rrow = &r.row(rr)[j0..j1];
+            for (ov, &rv) in orow.iter_mut().zip(rrow.iter()) {
+                *ov += xv * rv;
+            }
+        }
+    }
 }
 
 /// Below this many multiply-adds the thread fan-out costs more than it

@@ -139,20 +139,23 @@ impl MatmulKernel for Sparse24Kernel {
         "int4-2:4"
     }
 
-    fn matmul(&self, x: &Matrix) -> Matrix {
+    fn matmul_fused(&self, x: &Matrix, lowrank: Option<(&Matrix, &Matrix)>) -> Matrix {
         // Column-partitioned across workers (each decodes its own scratch
-        // tile); one per-tensor dequant over the assembled output.
+        // tile); the per-tensor dequant and the optional low-rank adapter
+        // term are fused into each column block — one pass over y total.
         let (m, d_in) = x.shape();
         assert_eq!(d_in, self.d_in);
         let n = self.d_out;
-        let mut y = super::parallel_columns(m, n, m * d_in * n, |j0, j1, out| {
-            self.decode_block(x, j0, j1, out)
-        });
         let dequant = self.alpha / levels(self.bits);
-        for v in y.data_mut() {
-            *v *= dequant;
-        }
-        y
+        super::parallel_columns(m, n, m * d_in * n, |j0, j1, out| {
+            self.decode_block(x, j0, j1, out);
+            for v in out.iter_mut() {
+                *v *= dequant;
+            }
+            if let Some((xl, r)) = lowrank {
+                super::add_lowrank_block(xl, r, j0, j1, out);
+            }
+        })
     }
 
     fn weight_bytes(&self) -> usize {

@@ -1,0 +1,623 @@
+//! Blocked multi-head causal attention over a pluggable K/V store — the
+//! single attention implementation shared by every forward path.
+//!
+//! Before this module existed, `forward_iq` (full forward) and
+//! `forward_slots` (continuous-batching serving) each carried their own
+//! scalar per-(head, position) score/value loops. Both now route through
+//! [`attend`], which restructures the computation into blocked matmuls:
+//!
+//! * per (sequence span, head), the query tile `Q` (span × dh) is multiplied
+//!   against a contiguous K stripe via the `tensor::ops` A·Bᵀ kernel, rows
+//!   beyond the causal frontier are masked to −∞, each row is softmaxed, and
+//!   the probability tile is multiplied against the V stripe with the
+//!   `tensor::ops` A·B kernel;
+//! * the (span, head) work items are partitioned across `std::thread::scope`
+//!   workers balanced by multiply-add cost — the same threading idiom as the
+//!   packed kernels in `kernels::parallel_columns` — so decode batches
+//!   parallelize over sequences×heads and long prefills over heads.
+//!
+//! The blocked f32 path is *bit-exact* against the scalar reference
+//! ([`attend_reference`], kept only for parity tests and the
+//! `benches/decode.rs` blocking on/off comparison): the slice kernels
+//! accumulate in the same order the scalar loops did, and masked positions
+//! contribute exact zeros that the A·B kernel skips.
+//!
+//! Behind the attention kernel sits [`KvSlab`], the pluggable cache storage:
+//! K/V rows are laid out head-major (each (slot, head) owns a contiguous
+//! `max_seq × dh` stripe, so score/value tiles read contiguous memory) and
+//! are stored in one of three dtypes ([`KvDtype`]):
+//!
+//! * `F32` — full precision, zero-copy stripe borrows;
+//! * `Int8` — symmetric AbsMax int8 with one scale per (row, head), built on
+//!   the `quant` AbsMax machinery (`quant::quant_code`); ~4× fewer cache
+//!   bytes than f32;
+//! * `Fp8E4M3` — FP8 E4M3 bytes (`quant::fp8::e4m3_to_bits`), 4× fewer
+//!   bytes, no scale storage.
+//!
+//! Quantized rows are encoded once on [`KvSlab::write`] and dequantized
+//! stripe-block-wise inside the attention kernel — decode-time cache
+//! traffic, the dominant cost of serving long contexts, drops ~4×
+//! (SqueezeLLM, arxiv 2306.07629, shows generation is memory-bandwidth
+//! bound; the paper's input-quantization appendix supplies the formats).
+
+use crate::quant::fp8::{e4m3_from_bits, e4m3_to_bits};
+use crate::quant::quant_code;
+use crate::tensor::{gemm, gemm_abt, num_threads, Matrix, PAR_THRESHOLD};
+
+/// Storage dtype for cached K/V rows.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvDtype {
+    /// f32 rows (bit-exact with the uncached forward).
+    #[default]
+    F32,
+    /// Symmetric AbsMax int8 codes + one f32 scale per (row, head).
+    Int8,
+    /// FP8 E4M3 bytes (no scales).
+    Fp8E4M3,
+}
+
+impl KvDtype {
+    /// Parse from a CLI / config string.
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        Some(match s {
+            "f32" | "fp32" => KvDtype::F32,
+            "int8" => KvDtype::Int8,
+            "fp8" | "fp8-e4m3" => KvDtype::Fp8E4M3,
+            _ => return None,
+        })
+    }
+
+    /// Display / JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Int8 => "int8",
+            KvDtype::Fp8E4M3 => "fp8-e4m3",
+        }
+    }
+}
+
+/// One layer's K (or V) cache storage: `slots` sequence slots of `max_seq`
+/// positions each, laid out head-major — `stripe(slot, head)` is a
+/// contiguous `max_seq × dh` block, which is what lets the attention tiles
+/// run as blocked matmuls over (and, for f32, borrow directly from) cache
+/// memory. Rows are quantized on [`KvSlab::write`] per the slab's
+/// [`KvDtype`] and dequantized block-wise by the attention kernel.
+pub struct KvSlab {
+    dtype: KvDtype,
+    slots: usize,
+    max_seq: usize,
+    n_heads: usize,
+    dh: usize,
+    /// F32 storage (empty for quantized dtypes).
+    f32s: Vec<f32>,
+    /// Int8 codes (as raw bytes) or FP8 E4M3 bytes, same head-major layout.
+    codes: Vec<u8>,
+    /// Int8 AbsMax scales, one per (slot·position, head).
+    scales: Vec<f32>,
+}
+
+impl KvSlab {
+    /// Zeroed slab for `slots` sequences of up to `max_seq` positions of
+    /// `n_heads × dh` values each.
+    pub fn new(dtype: KvDtype, slots: usize, max_seq: usize, n_heads: usize, dh: usize) -> Self {
+        let elems = slots * max_seq * n_heads * dh;
+        let (f32s, codes, scales) = match dtype {
+            KvDtype::F32 => (vec![0.0; elems], Vec::new(), Vec::new()),
+            KvDtype::Int8 => (Vec::new(), vec![0u8; elems], vec![0.0; slots * max_seq * n_heads]),
+            KvDtype::Fp8E4M3 => (Vec::new(), vec![0u8; elems], Vec::new()),
+        };
+        KvSlab { dtype, slots, max_seq, n_heads, dh, f32s, codes, scales }
+    }
+
+    /// Storage dtype.
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// Bytes of cache storage held (codes + scales) — the traffic model the
+    /// decode bench reports.
+    pub fn bytes(&self) -> usize {
+        self.f32s.len() * 4 + self.codes.len() + self.scales.len() * 4
+    }
+
+    #[inline]
+    fn stripe_base(&self, slot: usize, head: usize) -> usize {
+        (slot * self.n_heads + head) * self.max_seq * self.dh
+    }
+
+    /// Encode one position's row (`n_heads·dh` f32 values, head-major like
+    /// the model's hidden dim) into the slab at (`slot`, `pos`).
+    pub fn write(&mut self, slot: usize, pos: usize, row: &[f32]) {
+        assert_eq!(row.len(), self.n_heads * self.dh, "kv row width mismatch");
+        assert!(slot < self.slots && pos < self.max_seq, "kv write out of range");
+        let dh = self.dh;
+        for h in 0..self.n_heads {
+            let seg = &row[h * dh..(h + 1) * dh];
+            let base = self.stripe_base(slot, h) + pos * dh;
+            match self.dtype {
+                KvDtype::F32 => self.f32s[base..base + dh].copy_from_slice(seg),
+                KvDtype::Int8 => {
+                    let alpha = seg.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                    self.scales[(slot * self.max_seq + pos) * self.n_heads + h] = alpha;
+                    for (dst, &x) in self.codes[base..base + dh].iter_mut().zip(seg.iter()) {
+                        *dst = quant_code(x, alpha, 8) as u8;
+                    }
+                }
+                KvDtype::Fp8E4M3 => {
+                    for (dst, &x) in self.codes[base..base + dh].iter_mut().zip(seg.iter()) {
+                        *dst = e4m3_to_bits(x);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The first `len` rows of the (`slot`, `head`) stripe as a contiguous
+    /// `len × dh` f32 tile: a zero-copy borrow for f32 slabs, a block
+    /// dequantization into `scratch` otherwise.
+    pub(crate) fn tile<'a>(
+        &'a self,
+        slot: usize,
+        head: usize,
+        len: usize,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        debug_assert!(len <= self.max_seq);
+        let base = self.stripe_base(slot, head);
+        let dh = self.dh;
+        match self.dtype {
+            KvDtype::F32 => &self.f32s[base..base + len * dh],
+            KvDtype::Int8 => {
+                scratch.resize(len * dh, 0.0);
+                for (t, dst) in scratch.chunks_exact_mut(dh).enumerate() {
+                    let alpha = self.scales[(slot * self.max_seq + t) * self.n_heads + head];
+                    let dq = alpha / 127.0;
+                    let src = &self.codes[base + t * dh..base + (t + 1) * dh];
+                    for (o, &c) in dst.iter_mut().zip(src.iter()) {
+                        *o = (c as i8) as f32 * dq;
+                    }
+                }
+                &scratch[..len * dh]
+            }
+            KvDtype::Fp8E4M3 => {
+                scratch.resize(len * dh, 0.0);
+                for (o, &b) in scratch.iter_mut().zip(self.codes[base..base + len * dh].iter()) {
+                    *o = e4m3_from_bits(b);
+                }
+                &scratch[..len * dh]
+            }
+        }
+    }
+}
+
+/// One sequence's attention work in a packed batch: `span` new query rows
+/// starting at row `q_base` of the packed q/ctx matrices, attending over
+/// `p0` already-stored K/V positions plus its own `span` fresh ones
+/// (query row `s` sees K/V positions `0..=p0+s`).
+#[derive(Clone, Copy, Debug)]
+pub struct AttnSpan {
+    /// First row of this span in the packed q/ctx matrices.
+    pub q_base: usize,
+    /// Number of new (query) positions.
+    pub span: usize,
+    /// K/V positions already stored before this span's rows.
+    pub p0: usize,
+    /// K/V addressing: the slot index for [`KvSource::Pool`], the row base
+    /// in the fresh K/V matrices for [`KvSource::Fresh`].
+    pub kv: usize,
+}
+
+/// Where a span's K/V rows live.
+pub enum KvSource<'a> {
+    /// Freshly projected K/V matrices, `d_model` wide, the span's positions
+    /// `0..p0+span` at rows `kv..kv+p0+span` (the full-forward path; `p0`
+    /// is 0 there).
+    Fresh { k: &'a Matrix, v: &'a Matrix },
+    /// Slot-striped cache slabs (the serving path); the span's positions
+    /// live in slot `kv`, already written for `0..p0+span`.
+    Pool { k: &'a KvSlab, v: &'a KvSlab },
+}
+
+/// In-place numerically-stable softmax over a slice (−∞ entries come out
+/// as exact zeros).
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let max = xs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut sum = 0.0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum.max(1e-30);
+    for v in xs.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Reusable per-worker tile scratch.
+#[derive(Default)]
+struct Scratch {
+    qt: Vec<f32>,
+    kt: Vec<f32>,
+    vt: Vec<f32>,
+    sc: Vec<f32>,
+}
+
+/// Copy a strided head-column block (`len` rows × `dh` cols at column `c0`)
+/// of a d_model-wide matrix into a contiguous tile.
+fn fill_cols(m: &Matrix, row0: usize, len: usize, c0: usize, dh: usize, out: &mut Vec<f32>) {
+    out.clear();
+    for t in 0..len {
+        out.extend_from_slice(&m.row(row0 + t)[c0..c0 + dh]);
+    }
+}
+
+/// Compute one (span, head) context tile (`span × dh`, zero-initialized)
+/// via blocked Q·Kᵀ → mask → softmax → P·V.
+#[allow(clippy::too_many_arguments)]
+fn run_item(
+    sp: &AttnSpan,
+    head: usize,
+    dh: usize,
+    scale: f32,
+    q: &Matrix,
+    kv: &KvSource,
+    s: &mut Scratch,
+    out: &mut [f32],
+) {
+    let span = sp.span;
+    let kvlen = sp.p0 + span;
+    let c0 = head * dh;
+    // Q tile: span × dh.
+    s.qt.clear();
+    for r in 0..span {
+        s.qt.extend_from_slice(&q.row(sp.q_base + r)[c0..c0 + dh]);
+    }
+    let (kt, vt): (&[f32], &[f32]) = match kv {
+        KvSource::Fresh { k, v } => {
+            fill_cols(k, sp.kv, kvlen, c0, dh, &mut s.kt);
+            fill_cols(v, sp.kv, kvlen, c0, dh, &mut s.vt);
+            (&s.kt, &s.vt)
+        }
+        KvSource::Pool { k, v } => (
+            k.tile(sp.kv, head, kvlen, &mut s.kt),
+            v.tile(sp.kv, head, kvlen, &mut s.vt),
+        ),
+    };
+    // Scores: span × kvlen blocked Q·Kᵀ, then causal mask + row softmax.
+    s.sc.resize(span * kvlen, 0.0);
+    gemm_abt(&s.qt, kt, span, dh, kvlen, &mut s.sc);
+    for (r, row) in s.sc.chunks_exact_mut(kvlen).enumerate() {
+        for v2 in row.iter_mut() {
+            *v2 *= scale;
+        }
+        for v2 in row[sp.p0 + r + 1..].iter_mut() {
+            *v2 = f32::NEG_INFINITY;
+        }
+        softmax_inplace(row);
+    }
+    // Context tile: span × dh blocked P·V (masked positions have exact-zero
+    // probability and are skipped by the kernel).
+    gemm(&s.sc, vt, span, kvlen, dh, out);
+}
+
+/// Blocked multi-head causal attention: for every [`AttnSpan`], compute its
+/// context rows from `q` (packed `Σspan × n_heads·dh`) against `kv`, and
+/// return them packed in the same layout as `q`.
+///
+/// Work is one item per (span, head); items are partitioned across
+/// `std::thread::scope` workers balanced by multiply-add cost (serial below
+/// the same threshold the dense matmul and packed kernels use). Results are
+/// identical regardless of threading: each item is computed independently
+/// into its own tile, and the f32 path reproduces the scalar reference
+/// ([`attend_reference`]) bit-for-bit.
+pub fn attend(
+    n_heads: usize,
+    dh: usize,
+    scale: f32,
+    spans: &[AttnSpan],
+    q: &Matrix,
+    kv: &KvSource,
+) -> Matrix {
+    let d = n_heads * dh;
+    assert_eq!(q.cols(), d, "q width {} != n_heads·dh {}", q.cols(), d);
+    let mut ctx = Matrix::zeros(q.rows(), d);
+    if spans.is_empty() {
+        return ctx;
+    }
+    // One work item per (span, head), costed in multiply-adds.
+    let mut items: Vec<(usize, usize)> = Vec::with_capacity(spans.len() * n_heads);
+    let mut total_cost = 0usize;
+    for (si, sp) in spans.iter().enumerate() {
+        for h in 0..n_heads {
+            items.push((si, h));
+        }
+        total_cost += n_heads * 2 * sp.span * (sp.p0 + sp.span) * dh;
+    }
+    let item_cost = |&(si, _): &(usize, usize)| {
+        let sp = &spans[si];
+        2 * sp.span * (sp.p0 + sp.span) * dh
+    };
+    let nt = if total_cost < PAR_THRESHOLD { 1 } else { num_threads().min(items.len()) };
+
+    // Contiguous item runs of ≈ equal cost. One shared buffer holds every
+    // item's tile (item-major); each run fills its own buffer segment —
+    // serially for one run, across `std::thread::scope` workers otherwise —
+    // and the tiles are stitched into ctx afterwards (an O(n·d) copy,
+    // negligible next to the O(n·kvlen·dh) attention math).
+    let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(nt + 1);
+    let target = total_cost.div_ceil(nt);
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for (i, it) in items.iter().enumerate() {
+        acc += item_cost(it);
+        if acc >= target || i + 1 == items.len() {
+            ranges.push((start, i + 1));
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    let tile_elems = |its: &[(usize, usize)]| -> usize {
+        its.iter().map(|&(si, _)| spans[si].span * dh).sum()
+    };
+    let run_range = |i0: usize, i1: usize, out: &mut [f32]| {
+        let mut s = Scratch::default();
+        let mut off = 0usize;
+        for &(si, h) in &items[i0..i1] {
+            let sp = &spans[si];
+            let len = sp.span * dh;
+            run_item(sp, h, dh, scale, q, kv, &mut s, &mut out[off..off + len]);
+            off += len;
+        }
+    };
+    let mut buf = vec![0.0f32; tile_elems(&items)];
+    if nt <= 1 {
+        run_range(0, items.len(), buf.as_mut_slice());
+    } else {
+        std::thread::scope(|scope| {
+            let run_range = &run_range;
+            let mut rest = buf.as_mut_slice();
+            for &(i0, i1) in &ranges {
+                let (head_buf, tail) = rest.split_at_mut(tile_elems(&items[i0..i1]));
+                rest = tail;
+                scope.spawn(move || run_range(i0, i1, head_buf));
+            }
+        });
+    }
+    let mut off = 0usize;
+    for &(si, h) in &items {
+        let sp = &spans[si];
+        let c0 = h * dh;
+        for (r, trow) in buf[off..off + sp.span * dh].chunks_exact(dh).enumerate() {
+            ctx.row_mut(sp.q_base + r)[c0..c0 + dh].copy_from_slice(trow);
+        }
+        off += sp.span * dh;
+    }
+    ctx
+}
+
+/// Scalar reference attention: the per-(head, position) dot-product loops
+/// the forwards used before the blocked kernel. Kept ONLY as the parity
+/// baseline for tests and the `benches/decode.rs` blocking on/off
+/// measurement — no forward path calls this.
+pub fn attend_reference(
+    n_heads: usize,
+    dh: usize,
+    scale: f32,
+    spans: &[AttnSpan],
+    q: &Matrix,
+    kv: &KvSource,
+) -> Matrix {
+    let d = n_heads * dh;
+    assert_eq!(q.cols(), d);
+    let mut ctx = Matrix::zeros(q.rows(), d);
+    let mut kt_s: Vec<f32> = Vec::new();
+    let mut vt_s: Vec<f32> = Vec::new();
+    for sp in spans {
+        let kvlen = sp.p0 + sp.span;
+        for h in 0..n_heads {
+            let c0 = h * dh;
+            let (kt, vt): (&[f32], &[f32]) = match kv {
+                KvSource::Fresh { k, v } => {
+                    fill_cols(k, sp.kv, kvlen, c0, dh, &mut kt_s);
+                    fill_cols(v, sp.kv, kvlen, c0, dh, &mut vt_s);
+                    (&kt_s, &vt_s)
+                }
+                KvSource::Pool { k, v } => (
+                    k.tile(sp.kv, h, kvlen, &mut kt_s),
+                    v.tile(sp.kv, h, kvlen, &mut vt_s),
+                ),
+            };
+            for r in 0..sp.span {
+                let gp = sp.p0 + r;
+                let qrow = &q.row(sp.q_base + r)[c0..c0 + dh];
+                let mut scores = vec![0.0f32; gp + 1];
+                for (t, sc) in scores.iter_mut().enumerate() {
+                    let krow = &kt[t * dh..(t + 1) * dh];
+                    let mut dot = 0.0f32;
+                    for (a, b2) in qrow.iter().zip(krow.iter()) {
+                        dot += a * b2;
+                    }
+                    *sc = dot * scale;
+                }
+                softmax_inplace(&mut scores);
+                let crow = ctx.row_mut(sp.q_base + r);
+                for (t, &pr) in scores.iter().enumerate() {
+                    let vrow = &vt[t * dh..(t + 1) * dh];
+                    for (cv, &vv) in crow[c0..c0 + dh].iter_mut().zip(vrow.iter()) {
+                        *cv += pr * vv;
+                    }
+                }
+            }
+        }
+    }
+    ctx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    /// Random slab pair + matching f32 rows for `slots` sequences at the
+    /// given depths.
+    fn filled_slabs(
+        dtype: KvDtype,
+        depths: &[usize],
+        max_seq: usize,
+        n_heads: usize,
+        dh: usize,
+        rng: &mut Pcg32,
+    ) -> (KvSlab, KvSlab) {
+        let d = n_heads * dh;
+        let mut ks = KvSlab::new(dtype, depths.len(), max_seq, n_heads, dh);
+        let mut vs = KvSlab::new(dtype, depths.len(), max_seq, n_heads, dh);
+        for (slot, &depth) in depths.iter().enumerate() {
+            for pos in 0..depth {
+                let krow: Vec<f32> = (0..d).map(|_| rng.gauss()).collect();
+                let vrow: Vec<f32> = (0..d).map(|_| rng.gauss()).collect();
+                ks.write(slot, pos, &krow);
+                vs.write(slot, pos, &vrow);
+            }
+        }
+        (ks, vs)
+    }
+
+    #[test]
+    fn blocked_matches_scalar_reference_exactly_fresh() {
+        // Full-forward shape: mixed batch, span == kvlen, p0 == 0. The f32
+        // blocked path must be bit-identical to the scalar loops.
+        let mut rng = Pcg32::seeded(1);
+        let (n_heads, dh, seq, batch) = (4usize, 8usize, 13usize, 3usize);
+        let d = n_heads * dh;
+        let n = batch * seq;
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let spans: Vec<AttnSpan> = (0..batch)
+            .map(|b| AttnSpan { q_base: b * seq, span: seq, p0: 0, kv: b * seq })
+            .collect();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let src = KvSource::Fresh { k: &k, v: &v };
+        let blocked = attend(n_heads, dh, scale, &spans, &q, &src);
+        let reference = attend_reference(n_heads, dh, scale, &spans, &q, &src);
+        assert_eq!(blocked, reference);
+    }
+
+    #[test]
+    fn blocked_matches_scalar_reference_exactly_pool() {
+        // Serving shape: mixed spans (a prefill batched with decode steps)
+        // over cached prefixes of different depths.
+        let mut rng = Pcg32::seeded(2);
+        let (n_heads, dh, max_seq) = (2usize, 16usize, 32usize);
+        let d = n_heads * dh;
+        // slot depths INCLUDE the fresh span rows (already written).
+        let depths = [9usize, 20, 1];
+        let spans = [
+            AttnSpan { q_base: 0, span: 4, p0: 5, kv: 0 }, // mid-decode burst
+            AttnSpan { q_base: 4, span: 1, p0: 19, kv: 1 }, // one-token decode
+            AttnSpan { q_base: 5, span: 1, p0: 0, kv: 2 },  // fresh prefill
+        ];
+        let (ks, vs) = filled_slabs(KvDtype::F32, &depths, max_seq, n_heads, dh, &mut rng);
+        let q = Matrix::randn(6, d, 1.0, &mut rng);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let src = KvSource::Pool { k: &ks, v: &vs };
+        let blocked = attend(n_heads, dh, scale, &spans, &q, &src);
+        let reference = attend_reference(n_heads, dh, scale, &spans, &q, &src);
+        assert_eq!(blocked, reference);
+    }
+
+    #[test]
+    fn threaded_path_matches_serial_exactly() {
+        // Big enough to cross PAR_THRESHOLD so attend() takes the
+        // scope-spawn path; the reference is fully serial.
+        let mut rng = Pcg32::seeded(3);
+        let (n_heads, dh, depth, batch) = (4usize, 64usize, 128usize, 4usize);
+        let d = n_heads * dh;
+        let depths: Vec<usize> = (0..batch).map(|_| depth).collect();
+        let (ks, vs) = filled_slabs(KvDtype::F32, &depths, depth, n_heads, dh, &mut rng);
+        let q = Matrix::randn(batch, d, 1.0, &mut rng);
+        let spans: Vec<AttnSpan> = (0..batch)
+            .map(|b| AttnSpan { q_base: b, span: 1, p0: depth - 1, kv: b })
+            .collect();
+        let total_cost: usize = spans.iter().map(|sp| n_heads * 2 * (sp.p0 + 1) * dh).sum();
+        assert!(total_cost >= crate::tensor::PAR_THRESHOLD, "test must cross the threshold");
+        let scale = 1.0 / (dh as f32).sqrt();
+        let src = KvSource::Pool { k: &ks, v: &vs };
+        let blocked = attend(n_heads, dh, scale, &spans, &q, &src);
+        let reference = attend_reference(n_heads, dh, scale, &spans, &q, &src);
+        assert_eq!(blocked, reference);
+    }
+
+    #[test]
+    fn int8_slab_small_error_and_4x_fewer_bytes() {
+        let mut rng = Pcg32::seeded(4);
+        let (n_heads, dh, max_seq) = (4usize, 32usize, 16usize);
+        let d = n_heads * dh;
+        let mut f32s = KvSlab::new(KvDtype::F32, 1, max_seq, n_heads, dh);
+        let mut int8 = KvSlab::new(KvDtype::Int8, 1, max_seq, n_heads, dh);
+        let mut fp8 = KvSlab::new(KvDtype::Fp8E4M3, 1, max_seq, n_heads, dh);
+        for pos in 0..max_seq {
+            let row: Vec<f32> = (0..d).map(|_| rng.gauss()).collect();
+            f32s.write(0, pos, &row);
+            int8.write(0, pos, &row);
+            fp8.write(0, pos, &row);
+        }
+        let mut sf = Vec::new();
+        let mut s8 = Vec::new();
+        let mut se = Vec::new();
+        for h in 0..n_heads {
+            let exact = f32s.tile(0, h, max_seq, &mut sf).to_vec();
+            let i8t = int8.tile(0, h, max_seq, &mut s8);
+            let f8t = fp8.tile(0, h, max_seq, &mut se);
+            let norm: f32 = exact.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let err8: f32 =
+                exact.iter().zip(i8t.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+            let errf: f32 =
+                exact.iter().zip(f8t.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+            assert!(err8 / norm < 0.01, "int8 head {h}: rel err {}", err8 / norm);
+            assert!(errf / norm < 0.05, "fp8 head {h}: rel err {}", errf / norm);
+        }
+        // ~4× fewer cache bytes (int8 pays a small per-(row, head) scale).
+        assert!(f32s.bytes() as f64 / int8.bytes() as f64 > 3.5, "int8 ratio");
+        assert_eq!(f32s.bytes(), 4 * fp8.bytes());
+    }
+
+    #[test]
+    fn quantized_pool_attention_close_to_f32() {
+        let mut rng = Pcg32::seeded(5);
+        let (n_heads, dh, depth) = (2usize, 16usize, 24usize);
+        let d = n_heads * dh;
+        // Same rows into an f32 and an int8 slab (clone the rng stream).
+        let mut rng2 = Pcg32::seeded(5);
+        let (kf, vf) = filled_slabs(KvDtype::F32, &[depth], depth, n_heads, dh, &mut rng);
+        let (k8, v8) = filled_slabs(KvDtype::Int8, &[depth], depth, n_heads, dh, &mut rng2);
+        let q = Matrix::randn(2, d, 1.0, &mut rng);
+        let spans = [AttnSpan { q_base: 0, span: 2, p0: depth - 2, kv: 0 }];
+        let scale = 1.0 / (dh as f32).sqrt();
+        let exact = attend(n_heads, dh, scale, &spans, &q, &KvSource::Pool { k: &kf, v: &vf });
+        let approx = attend(n_heads, dh, scale, &spans, &q, &KvSource::Pool { k: &k8, v: &v8 });
+        assert!(approx.rel_err(&exact) < 0.02, "int8 attn err {}", approx.rel_err(&exact));
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(KvDtype::parse("f32"), Some(KvDtype::F32));
+        assert_eq!(KvDtype::parse("int8"), Some(KvDtype::Int8));
+        assert_eq!(KvDtype::parse("fp8"), Some(KvDtype::Fp8E4M3));
+        assert_eq!(KvDtype::parse("bf16"), None);
+        assert_eq!(KvDtype::default(), KvDtype::F32);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0f32, 2.0, 3.0, 1e4];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(xs[3] > 0.99);
+        // Masked (−∞) entries come out as exact zeros.
+        let mut ys = vec![0.5f32, f32::NEG_INFINITY, 1.0];
+        softmax_inplace(&mut ys);
+        assert_eq!(ys[1], 0.0);
+    }
+}

@@ -1,12 +1,14 @@
 //! Model definitions: the sim transformer family, weight containers,
 //! the native forward pass, and size/FLOP accounting.
 
+pub mod attention;
 pub mod compiled;
 pub mod config;
 pub mod size;
 pub mod transformer;
 pub mod weights;
 
+pub use attention::{AttnSpan, KvDtype, KvSlab, KvSource};
 pub use compiled::CompressedWeights;
 pub use config::{by_name, family, quick_family, ModelConfig};
 pub use transformer::{

@@ -21,16 +21,27 @@
 //! * [`forward_cached`] — equal-length wrapper over [`forward_slots`]
 //!   through the lockstep [`KvCache`] view (benches, scoring, tests).
 //!
+//! Attention in every path runs through the single blocked implementation
+//! in [`super::attention`] (`attend`): per-(sequence, head) Q·Kᵀ / P·V
+//! tiles over contiguous cache stripes, threaded across spans×heads. The
+//! K/V cache itself ([`KvCachePool`]) has a pluggable storage dtype
+//! ([`KvDtype`]): f32 (bit-exact), or int8 / FP8-E4M3 quantized rows at
+//! ~4× fewer cache bytes (quantized on write, dequantized block-wise
+//! inside the attention kernel).
+//!
 //! Linear layers dispatch through [`Linears`], which can route matmuls to
 //! packed compressed kernels ([`crate::kernels::LinearOp`]) instead of
 //! dense f32 overrides.
 
 use std::collections::HashMap;
 
+use super::attention::{attend, AttnSpan, KvDtype, KvSlab, KvSource};
 use super::compiled::CompressedWeights;
 use super::config::ModelConfig;
 use super::weights::Weights;
 use crate::tensor::{matmul_a_bt, Matrix};
+
+pub use super::attention::softmax_inplace;
 
 /// LayerNorm epsilon (matches jax default in model.py).
 pub const LN_EPS: f32 = 1e-5;
@@ -38,7 +49,7 @@ pub const LN_EPS: f32 = 1e-5;
 /// tanh-approximated GELU (jax.nn.gelu default).
 #[inline]
 pub fn gelu(x: f32) -> f32 {
-    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
@@ -58,20 +69,6 @@ pub fn layernorm(x: &Matrix, g: &Matrix, b: &Matrix) -> Matrix {
         }
     }
     out
-}
-
-/// In-place numerically-stable softmax over a slice.
-pub fn softmax_inplace(xs: &mut [f32]) {
-    let max = xs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-    let mut sum = 0.0f32;
-    for v in xs.iter_mut() {
-        *v = (*v - max).exp();
-        sum += *v;
-    }
-    let inv = 1.0 / sum.max(1e-30);
-    for v in xs.iter_mut() {
-        *v *= inv;
-    }
 }
 
 /// Token batch: `tokens[b][s]`, all rows of length `seq`.
@@ -133,19 +130,21 @@ impl Linears<'_> {
 
 /// Slot-based per-layer K/V storage for continuous batching.
 ///
-/// The pool owns `n_slots` stripes of `max_seq` rows per layer (row
-/// `slot * max_seq + t` holds position `t` of the sequence occupying
-/// `slot`). Each slot has its own cached length, so sequences of different
-/// lengths coexist in one pool: a scheduler allocates a slot per admitted
-/// request ([`KvCachePool::alloc`]), [`forward_slots`] appends new K/V rows
-/// and attends over each slot's own prefix, and retiring a sequence returns
-/// its slot to the free-list ([`KvCachePool::free`]) for the next request —
-/// no lockstep batches, no left-padding.
+/// The pool owns one [`KvSlab`] pair (K and V) per layer: `n_slots`
+/// head-major sequence stripes of `max_seq` positions each, stored in the
+/// pool's [`KvDtype`] (f32, int8, or FP8-E4M3 — quantized dtypes cut cache
+/// bytes ~4×). Each slot has its own cached length, so sequences of
+/// different lengths coexist in one pool: a scheduler allocates a slot per
+/// admitted request ([`KvCachePool::alloc`]), [`forward_slots`] appends new
+/// K/V rows and attends over each slot's own prefix, and retiring a
+/// sequence returns its slot to the free-list ([`KvCachePool::free`]) for
+/// the next request — no lockstep batches, no left-padding.
 pub struct KvCachePool {
-    k: Vec<Matrix>,
-    v: Vec<Matrix>,
+    k: Vec<KvSlab>,
+    v: Vec<KvSlab>,
     n_slots: usize,
     max_seq: usize,
+    dtype: KvDtype,
     /// Cached positions per slot.
     lens: Vec<usize>,
     /// Slot occupancy (true between `alloc` and `free`).
@@ -155,12 +154,17 @@ pub struct KvCachePool {
 }
 
 impl KvCachePool {
-    /// Empty pool with `slots` sequence slots, all free.
+    /// Empty f32 pool with `slots` sequence slots, all free.
     pub fn new(cfg: &ModelConfig, slots: usize) -> Self {
+        Self::with_dtype(cfg, slots, KvDtype::F32)
+    }
+
+    /// Empty pool storing cached K/V in `dtype`.
+    pub fn with_dtype(cfg: &ModelConfig, slots: usize, dtype: KvDtype) -> Self {
         assert!(slots > 0, "KvCachePool needs at least one slot");
-        let mk = || -> Vec<Matrix> {
+        let mk = || -> Vec<KvSlab> {
             (0..cfg.n_layers)
-                .map(|_| Matrix::zeros(slots * cfg.max_seq, cfg.d_model))
+                .map(|_| KvSlab::new(dtype, slots, cfg.max_seq, cfg.n_heads, cfg.d_head()))
                 .collect()
         };
         KvCachePool {
@@ -168,6 +172,7 @@ impl KvCachePool {
             v: mk(),
             n_slots: slots,
             max_seq: cfg.max_seq,
+            dtype,
             lens: vec![0; slots],
             live: vec![false; slots],
             free_list: (0..slots).rev().collect(),
@@ -177,6 +182,23 @@ impl KvCachePool {
     /// Total slots in the pool.
     pub fn n_slots(&self) -> usize {
         self.n_slots
+    }
+
+    /// Storage dtype of the cached K/V rows.
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// Total bytes of K/V cache storage across all layers (codes + scales)
+    /// — what the decode bench reports as cache traffic.
+    pub fn cache_bytes(&self) -> usize {
+        self.k.iter().map(KvSlab::bytes).sum::<usize>()
+            + self.v.iter().map(KvSlab::bytes).sum::<usize>()
+    }
+
+    /// Layer `blk`'s (K, V) slabs, for the attention kernel.
+    pub(crate) fn layer(&self, blk: usize) -> (&KvSlab, &KvSlab) {
+        (&self.k[blk], &self.v[blk])
     }
 
     /// Slots currently free for admission.
@@ -221,12 +243,11 @@ impl KvCachePool {
         self.lens[slot] = 0;
     }
 
-    /// Write one freshly computed K/V row for layer `blk` at `pos` within
-    /// `slot`'s stripe.
+    /// Write (and, for quantized dtypes, encode) one freshly computed K/V
+    /// row for layer `blk` at `pos` within `slot`'s stripes.
     fn write(&mut self, blk: usize, slot: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
-        let dst = slot * self.max_seq + pos;
-        self.k[blk].row_mut(dst).copy_from_slice(krow);
-        self.v[blk].row_mut(dst).copy_from_slice(vrow);
+        self.k[blk].write(slot, pos, krow);
+        self.v[blk].write(slot, pos, vrow);
     }
 }
 
@@ -241,14 +262,24 @@ pub struct KvCache {
 }
 
 impl KvCache {
-    /// Empty cache for `batch` concurrent sequences.
+    /// Empty f32 cache for `batch` concurrent sequences.
     pub fn new(cfg: &ModelConfig, batch: usize) -> Self {
+        Self::with_dtype(cfg, batch, KvDtype::F32)
+    }
+
+    /// Empty cache storing K/V in `dtype`.
+    pub fn with_dtype(cfg: &ModelConfig, batch: usize, dtype: KvDtype) -> Self {
         assert!(batch > 0, "KvCache needs at least one sequence");
-        let mut pool = KvCachePool::new(cfg, batch);
+        let mut pool = KvCachePool::with_dtype(cfg, batch, dtype);
         for _ in 0..batch {
             pool.alloc().unwrap();
         }
         KvCache { pool, batch }
+    }
+
+    /// The backing pool (cache-byte accounting for benches).
+    pub fn pool(&self) -> &KvCachePool {
+        &self.pool
     }
 
     /// Positions cached so far.
@@ -298,7 +329,7 @@ impl KvCache {
 pub fn forward_slots(
     cfg: &ModelConfig,
     w: &Weights,
-    seqs: &[(usize, Vec<u32>)],
+    seqs: &[(usize, &[u32])],
     pool: &mut KvCachePool,
     linears: &Linears,
 ) -> Matrix {
@@ -321,6 +352,18 @@ pub fn forward_slots(
         bases.push(n);
         n += toks.len();
     }
+    // Attention geometry is fixed for the whole pass: slot lengths only
+    // advance after every layer has appended at the same positions.
+    let spans: Vec<AttnSpan> = seqs
+        .iter()
+        .zip(bases.iter())
+        .map(|(&(slot, toks), &base)| AttnSpan {
+            q_base: base,
+            span: toks.len(),
+            p0: pool.lens[slot],
+            kv: slot,
+        })
+        .collect();
 
     // Embedding lookup + learned positions (offset by each slot's prefix).
     let tok_emb = w.expect("embed.tok");
@@ -347,44 +390,16 @@ pub fn forward_slots(
         let q = linears.apply(w, &p("attn.wq"), &h);
         let k = linears.apply(w, &p("attn.wk"), &h);
         let v = linears.apply(w, &p("attn.wv"), &h);
-        for (i, (slot, toks)) in seqs.iter().enumerate() {
-            let p0 = pool.lens[*slot];
+        for (i, &(slot, toks)) in seqs.iter().enumerate() {
+            let p0 = spans[i].p0;
             for s in 0..toks.len() {
-                pool.write(blk, *slot, p0 + s, k.row(bases[i] + s), v.row(bases[i] + s));
+                pool.write(blk, slot, p0 + s, k.row(bases[i] + s), v.row(bases[i] + s));
             }
         }
-        let mut ctx = Matrix::zeros(n, d);
-        let kc = &pool.k[blk];
-        let vc = &pool.v[blk];
-        for (i, (slot, toks)) in seqs.iter().enumerate() {
-            let cbase = *slot * pool.max_seq;
-            let p0 = pool.lens[*slot];
-            for head in 0..cfg.n_heads {
-                let c0 = head * dh;
-                for s in 0..toks.len() {
-                    // Causal scores over the slot's positions 0..=p0+s.
-                    let gp = p0 + s;
-                    let qrow = &q.row(bases[i] + s)[c0..c0 + dh];
-                    let mut scores = vec![0.0f32; gp + 1];
-                    for (t, sc) in scores.iter_mut().enumerate() {
-                        let krow = &kc.row(cbase + t)[c0..c0 + dh];
-                        let mut dot = 0.0f32;
-                        for (a, b2) in qrow.iter().zip(krow.iter()) {
-                            dot += a * b2;
-                        }
-                        *sc = dot * scale;
-                    }
-                    softmax_inplace(&mut scores);
-                    let crow = ctx.row_mut(bases[i] + s);
-                    for (t, &pr) in scores.iter().enumerate() {
-                        let vrow = &vc.row(cbase + t)[c0..c0 + dh];
-                        for j in 0..dh {
-                            crow[c0 + j] += pr * vrow[j];
-                        }
-                    }
-                }
-            }
-        }
+        // Blocked causal attention over the freshly appended cache stripes
+        // (the one shared implementation — see `model::attention`).
+        let (ks, vs) = pool.layer(blk);
+        let ctx = attend(cfg.n_heads, dh, scale, &spans, &q, &KvSource::Pool { k: ks, v: vs });
         let attn_out = linears.apply(w, &p("attn.wo"), &ctx);
         x = x.add(&attn_out);
 
@@ -444,8 +459,9 @@ pub fn forward_cached(
         tokens.len()
     );
     let s_new = tokens.len() / bsz;
-    let seqs: Vec<(usize, Vec<u32>)> = (0..bsz)
-        .map(|b| (b, tokens[b * s_new..(b + 1) * s_new].to_vec()))
+    // Borrowed spans — the per-step decode path allocates nothing here.
+    let seqs: Vec<(usize, &[u32])> = (0..bsz)
+        .map(|b| (b, &tokens[b * s_new..(b + 1) * s_new]))
         .collect();
     forward_slots(cfg, w, &seqs, &mut cache.pool, linears)
 }
@@ -502,7 +518,12 @@ pub fn forward_iq(
         }
     }
 
-    let scale = 1.0 / (cfg.d_head() as f32).sqrt();
+    let dh = cfg.d_head();
+    let scale = 1.0 / (dh as f32).sqrt();
+    // Every sample attends causally over its own fresh K/V rows.
+    let spans: Vec<AttnSpan> = (0..batch.batch)
+        .map(|b| AttnSpan { q_base: b * batch.seq, span: batch.seq, p0: 0, kv: b * batch.seq })
+        .collect();
     for blk in 0..cfg.n_layers {
         let p = |s: &str| format!("block{blk}.{s}");
         // ── Attention ────────────────────────────────────────────────
@@ -516,35 +537,9 @@ pub fn forward_iq(
         let q = hq.matmul(pick(&p("attn.wq")));
         let k = hq.matmul(pick(&p("attn.wk")));
         let v = hq.matmul(pick(&p("attn.wv")));
-        let mut ctx = Matrix::zeros(n, d);
-        let dh = cfg.d_head();
-        for b in 0..batch.batch {
-            let base = b * batch.seq;
-            for head in 0..cfg.n_heads {
-                let c0 = head * dh;
-                for s in 0..batch.seq {
-                    // Causal scores over positions 0..=s.
-                    let qrow = &q.row(base + s)[c0..c0 + dh];
-                    let mut scores = vec![0.0f32; s + 1];
-                    for (t, sc) in scores.iter_mut().enumerate() {
-                        let krow = &k.row(base + t)[c0..c0 + dh];
-                        let mut dot = 0.0f32;
-                        for (a, b2) in qrow.iter().zip(krow.iter()) {
-                            dot += a * b2;
-                        }
-                        *sc = dot * scale;
-                    }
-                    softmax_inplace(&mut scores);
-                    let crow = ctx.row_mut(base + s);
-                    for (t, &pr) in scores.iter().enumerate() {
-                        let vrow = &v.row(base + t)[c0..c0 + dh];
-                        for j in 0..dh {
-                            crow[c0 + j] += pr * vrow[j];
-                        }
-                    }
-                }
-            }
-        }
+        // Blocked causal attention — the same implementation the serving
+        // path runs (see `model::attention`).
+        let ctx = attend(cfg.n_heads, dh, scale, &spans, &q, &KvSource::Fresh { k: &k, v: &v });
         if let Some(t) = taps.as_deref_mut() {
             t.insert(p("attn.wo"), ctx.clone());
         }
@@ -851,8 +846,8 @@ mod tests {
             .map(|&len| (0..len).map(|_| rng.below(cfg.vocab as u32)).collect())
             .collect();
         let mut pool = KvCachePool::new(&cfg, 3);
-        let entries: Vec<(usize, Vec<u32>)> =
-            prompts.iter().map(|p| (pool.alloc().unwrap(), p.clone())).collect();
+        let entries: Vec<(usize, &[u32])> =
+            prompts.iter().map(|p| (pool.alloc().unwrap(), p.as_slice())).collect();
         let lg = forward_slots(&cfg, &w, &entries, &mut pool, &Linears::Dense);
         let mut base = 0usize;
         for p in &prompts {
@@ -868,10 +863,10 @@ mod tests {
         // One decode step per sequence at three different cache depths,
         // batched together, still matches the solo full forward.
         let nexts: Vec<u32> = prompts.iter().map(|p| p[0] ^ 1).collect();
-        let steps: Vec<(usize, Vec<u32>)> = entries
+        let steps: Vec<(usize, &[u32])> = entries
             .iter()
             .zip(nexts.iter())
-            .map(|(&(slot, _), &t)| (slot, vec![t]))
+            .map(|(&(slot, _), t)| (slot, std::slice::from_ref(t)))
             .collect();
         let lg2 = forward_slots(&cfg, &w, &steps, &mut pool, &Linears::Dense);
         for (i, (p, &t)) in prompts.iter().zip(nexts.iter()).enumerate() {
@@ -895,12 +890,17 @@ mod tests {
         let b: Vec<u32> = vec![9, 10];
         let mut solo_pool = KvCachePool::new(&cfg, 1);
         let sa = solo_pool.alloc().unwrap();
-        let solo = forward_slots(&cfg, &w, &[(sa, a.clone())], &mut solo_pool, &Linears::Dense);
+        let solo = forward_slots(&cfg, &w, &[(sa, a.as_slice())], &mut solo_pool, &Linears::Dense);
         let mut pool = KvCachePool::new(&cfg, 2);
         let s1 = pool.alloc().unwrap();
         let s2 = pool.alloc().unwrap();
-        let both =
-            forward_slots(&cfg, &w, &[(s2, b.clone()), (s1, a.clone())], &mut pool, &Linears::Dense);
+        let both = forward_slots(
+            &cfg,
+            &w,
+            &[(s2, b.as_slice()), (s1, a.as_slice())],
+            &mut pool,
+            &Linears::Dense,
+        );
         // Entry 1 (= sequence a) occupies rows b.len().. in the packed output.
         for s in 0..a.len() {
             assert_eq!(solo.row(s), both.row(b.len() + s), "row {s} differs");
@@ -914,11 +914,70 @@ mod tests {
         assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
     }
 
+    /// Cached decode with a quantized KV store must track the f32 full
+    /// forward within a small logit tolerance (the quantization noise), at
+    /// ~4× fewer cache bytes.
+    fn assert_quantized_kv_close(dtype: KvDtype, tol: f32) {
+        let (cfg, w, batch) = setup();
+        let full = forward(&cfg, &w, &batch, None, None);
+        let mut cache = KvCache::with_dtype(&cfg, batch.batch, dtype);
+        let prefill = 8usize;
+        let toks: Vec<u32> = (0..batch.batch)
+            .flat_map(|b| (0..prefill).map(move |s| batch.tok(b, s)))
+            .collect();
+        let lg = forward_cached(&cfg, &w, &toks, &mut cache, &Linears::Dense);
+        for b in 0..batch.batch {
+            for s in 0..prefill {
+                let got = Matrix::from_vec(1, cfg.vocab, lg.row(b * prefill + s).to_vec());
+                let want = Matrix::from_vec(1, cfg.vocab, full.row(b * batch.seq + s).to_vec());
+                let err = got.rel_err(&want);
+                assert!(err < tol, "{} prefill b{b} s{s}: err {err}", dtype.name());
+                assert!(got.data().iter().all(|v| v.is_finite()));
+            }
+        }
+        for s in prefill..batch.seq {
+            let step: Vec<u32> = (0..batch.batch).map(|b| batch.tok(b, s)).collect();
+            let lg = forward_cached(&cfg, &w, &step, &mut cache, &Linears::Dense);
+            for b in 0..batch.batch {
+                let got = Matrix::from_vec(1, cfg.vocab, lg.row(b).to_vec());
+                let want = Matrix::from_vec(1, cfg.vocab, full.row(b * batch.seq + s).to_vec());
+                let err = got.rel_err(&want);
+                assert!(err < tol, "{} decode b{b} s{s}: err {err}", dtype.name());
+            }
+        }
+        // The quantized pool really holds ~4× fewer bytes than f32.
+        let f32_bytes = KvCache::new(&cfg, batch.batch).pool().cache_bytes();
+        let q_bytes = cache.pool().cache_bytes();
+        assert!(
+            f32_bytes as f64 / q_bytes as f64 > 3.5,
+            "{}: {f32_bytes} / {q_bytes}",
+            dtype.name()
+        );
+    }
+
     #[test]
-    fn softmax_sums_to_one() {
-        let mut xs = vec![1.0f32, 2.0, 3.0, 1e4];
-        softmax_inplace(&mut xs);
-        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
-        assert!(xs[3] > 0.99);
+    fn int8_kv_decode_tracks_full_forward() {
+        assert_quantized_kv_close(KvDtype::Int8, 0.1);
+    }
+
+    #[test]
+    fn fp8_kv_decode_tracks_full_forward() {
+        assert_quantized_kv_close(KvDtype::Fp8E4M3, 0.3);
+    }
+
+    #[test]
+    fn f32_dtype_pool_is_bit_identical_to_default() {
+        // KvDtype::F32 through the pluggable store reproduces the default
+        // pool exactly (same storage, head-major layout is transparent).
+        let (cfg, w, batch) = setup();
+        let toks: Vec<u32> = (0..batch.batch)
+            .flat_map(|b| (0..batch.seq).map(move |s| batch.tok(b, s)))
+            .collect();
+        let mut c1 = KvCache::new(&cfg, batch.batch);
+        let mut c2 = KvCache::with_dtype(&cfg, batch.batch, KvDtype::F32);
+        let a = forward_cached(&cfg, &w, &toks, &mut c1, &Linears::Dense);
+        let b = forward_cached(&cfg, &w, &toks, &mut c2, &Linears::Dense);
+        assert_eq!(a, b);
+        assert_eq!(c2.pool().dtype(), KvDtype::F32);
     }
 }

@@ -36,6 +36,40 @@ pub fn e4m3(x: f32) -> f32 {
     fp8_round(x, 3, -6, E4M3_MAX)
 }
 
+/// Encode an f32 into its 8-bit E4M3 pattern (1 sign, 4 exponent bits with
+/// bias 7, 3 mantissa bits; the OCP "FN" variant, where exponent field 15
+/// still carries normal values up to ±448 and only mantissa 111 there is
+/// reserved for NaN — never produced here). The value is rounded with
+/// [`e4m3`] first, so `e4m3_from_bits(e4m3_to_bits(x)) == e4m3(x)`.
+/// This is the byte layout the quantized KV cache stores
+/// (`model::attention::KvDtype::Fp8E4M3`).
+pub fn e4m3_to_bits(x: f32) -> u8 {
+    let r = e4m3(x);
+    if r == 0.0 {
+        return 0; // canonical +0 (−0.0 folds in too)
+    }
+    let sign = if r < 0.0 { 0x80u8 } else { 0 };
+    let a = r.abs();
+    let exp = a.log2().floor() as i32;
+    if exp < -6 {
+        // Subnormal: value = mant/8 · 2^-6 with mant in 1..=7.
+        return sign | (a * 512.0).round() as u8;
+    }
+    let mant = ((a / (exp as f32).exp2() - 1.0) * 8.0).round() as u8;
+    sign | (((exp + 7) as u8) << 3) | mant
+}
+
+/// Decode an E4M3 bit pattern produced by [`e4m3_to_bits`].
+pub fn e4m3_from_bits(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let ef = (b >> 3) & 0x0F;
+    let mant = (b & 0x07) as f32;
+    if ef == 0 {
+        return sign * mant / 8.0 * (-6.0f32).exp2();
+    }
+    sign * (1.0 + mant / 8.0) * ((ef as i32 - 7) as f32).exp2()
+}
+
 /// Fake-quantize to FP8 E5M2 (5 exponent bits, 2 mantissa bits).
 pub fn e5m2(x: f32) -> f32 {
     fp8_round(x, 2, -14, E5M2_MAX)
@@ -123,6 +157,25 @@ mod tests {
                 assert!(((r - v) / v).abs() <= 0.0625 + 1e-6, "v={v} r={r}");
             }
         }
+    }
+
+    #[test]
+    fn e4m3_bits_round_trip() {
+        // Exhaustive over interesting values: decode(encode(x)) must equal
+        // the e4m3 rounding of x, including subnormals and saturation.
+        let mut rng = Pcg32::seeded(9);
+        for _ in 0..4000 {
+            let v = rng.range_f32(-500.0, 500.0);
+            let want = e4m3(v);
+            let got = e4m3_from_bits(e4m3_to_bits(v));
+            assert_eq!(got, want, "v={v}");
+        }
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 448.0, -448.0, 0.015625, 0.001953125, 1e-4, -1e-4, 1e6] {
+            assert_eq!(e4m3_from_bits(e4m3_to_bits(v)), e4m3(v), "v={v}");
+        }
+        // Subnormal grid point: 3/8 · 2^-6.
+        let sub = 3.0 / 8.0 * (-6.0f32).exp2();
+        assert_eq!(e4m3_from_bits(e4m3_to_bits(sub)), sub);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //!   variants.
 //! * [`optq`] — OPTQ/GPTQ-style Hessian-aware quantization with error
 //!   feedback (the SparseGPT companion in Table 1).
-//! * [`fp8`] — FP8 (E4M3/E5M2) + int8 AbsMax input quantization (Apx B).
+//! * [`fp8`] — FP8 (E4M3/E5M2) + int8 AbsMax input quantization (Apx B);
+//!   the E4M3 byte codec (`e4m3_to_bits`/`e4m3_from_bits`) also backs the
+//!   quantized KV cache store (`model::attention::KvDtype::Fp8E4M3`).
 //! * [`pack`] — int4/int2 bit-packing for the runtime kernels.
 
 pub mod absmax;

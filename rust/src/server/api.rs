@@ -4,7 +4,12 @@
 //!           (`stop` is optional: generation retires early once token `t`
 //!           is produced, included in the output)
 //! Response: `{"ok": true, "tokens": [ints]}` or `{"ok": false, "error": "..."}`
-//! Special:  `{"cmd": "metrics"}` → one-line summary; `{"cmd": "models"}`.
+//! Special:  `{"cmd": "metrics"}` → one-line summary;
+//!           `{"cmd": "models"}` → `{"ok": true, "models": [{"name": "...",
+//!           "kv_dtype": "f32" | "int8" | "fp8-e4m3"}, ...]}` — `kv_dtype`
+//!           is the serving KV cache storage dtype the route was registered
+//!           with (`model::KvDtype`; quantized dtypes hold ~4× fewer cache
+//!           bytes per in-flight sequence).
 //!
 //! One thread per connection (the engines are the bottleneck, not the
 //! accept loop), with the router's batcher coalescing across connections.
@@ -66,7 +71,15 @@ fn process(router: &Router, line: &str) -> Result<Json> {
                 ("ok", Json::Bool(true)),
                 (
                     "models",
-                    Json::Arr(router.models().iter().map(|m| s(m)).collect()),
+                    Json::Arr(
+                        router
+                            .model_infos()
+                            .iter()
+                            .map(|(name, dt)| {
+                                obj(vec![("name", s(name)), ("kv_dtype", s(dt.name()))])
+                            })
+                            .collect(),
+                    ),
                 ),
             ])),
             other => Err(anyhow!("unknown cmd {other}")),
@@ -204,7 +217,11 @@ mod tests {
     fn metrics_and_models_cmds() {
         let r = router();
         let resp = handle_line(&r, r#"{"cmd":"models"}"#);
-        assert!(resp.to_string_compact().contains("sim-125m"));
+        let text = resp.to_string_compact();
+        assert!(text.contains("sim-125m"));
+        // Each model entry reports its serving KV cache dtype.
+        assert!(text.contains("kv_dtype"), "missing kv_dtype in {text}");
+        assert!(text.contains("f32"));
         let resp = handle_line(&r, r#"{"cmd":"metrics"}"#);
         assert!(resp.to_string_compact().contains("requests="));
     }

@@ -13,11 +13,13 @@
 //! kernel-backed ([`Engine::with_kernels`]): every linear matmul dispatches
 //! to packed int4 / int4-2:4 kernels, which is where the paper's Fig. 3/4
 //! kernel speedups reach end-to-end token throughput (measured by
-//! `benches/decode.rs` and `benches/serve.rs`).
+//! `benches/decode.rs` and `benches/serve.rs`). The KV cache storage dtype
+//! is pluggable too ([`Engine::with_kv_dtype`]): int8 / fp8 cached K/V cuts
+//! decode cache bytes ~4× on top of the weight compression.
 
 use crate::model::{
-    forward_cached, forward_slots, CompressedWeights, KvCache, KvCachePool, Linears, ModelConfig,
-    Overrides, Weights,
+    forward_cached, forward_slots, CompressedWeights, KvCache, KvCachePool, KvDtype, Linears,
+    ModelConfig, Overrides, Weights,
 };
 use crate::tensor::Matrix;
 use std::sync::Arc;
@@ -74,13 +76,14 @@ impl SeqState {
 }
 
 /// A servable model: config + weights (+ compression overrides or packed
-/// kernels).
+/// kernels), plus the KV cache storage dtype its private pools use.
 pub struct Engine {
     pub name: String,
     cfg: ModelConfig,
     weights: Arc<Weights>,
     overrides: Option<Arc<Overrides>>,
     kernels: Option<Arc<CompressedWeights>>,
+    kv_dtype: KvDtype,
 }
 
 impl Engine {
@@ -90,7 +93,14 @@ impl Engine {
         weights: Arc<Weights>,
         overrides: Option<Arc<Overrides>>,
     ) -> Self {
-        Engine { name: name.to_string(), cfg, weights, overrides, kernels: None }
+        Engine {
+            name: name.to_string(),
+            cfg,
+            weights,
+            overrides,
+            kernels: None,
+            kv_dtype: KvDtype::F32,
+        }
     }
 
     /// Kernel-backed engine: linear matmuls run on packed compressed
@@ -101,7 +111,28 @@ impl Engine {
         weights: Arc<Weights>,
         kernels: Arc<CompressedWeights>,
     ) -> Self {
-        Engine { name: name.to_string(), cfg, weights, overrides: None, kernels: Some(kernels) }
+        Engine {
+            name: name.to_string(),
+            cfg,
+            weights,
+            overrides: None,
+            kernels: Some(kernels),
+            kv_dtype: KvDtype::F32,
+        }
+    }
+
+    /// Store cached K/V in `dtype` (int8 / fp8 cut decode cache traffic
+    /// ~4×) in every pool this engine creates (`generate_batch`, `score`).
+    /// Scheduler-owned pools inherit this dtype too, unless the route's
+    /// `SchedPolicy::kv_dtype` explicitly overrides it.
+    pub fn with_kv_dtype(mut self, dtype: KvDtype) -> Self {
+        self.kv_dtype = dtype;
+        self
+    }
+
+    /// The KV cache storage dtype this engine's private pools use.
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.kv_dtype
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -150,22 +181,26 @@ impl Engine {
                 }
             })
             .collect();
-        let entries: Vec<(usize, Vec<u32>)> = states
+        // Windowed prompt spans borrow straight from each state's token
+        // history — no per-request copies on the admission path.
+        let entries: Vec<(usize, &[u32])> = states
             .iter()
             .filter(|s| !s.done)
             .map(|s| {
                 let win = s.seq.len().min(self.cfg.max_seq);
-                (s.slot, s.seq[s.seq.len() - win..].to_vec())
+                (s.slot, &s.seq[s.seq.len() - win..])
             })
             .collect();
         if !entries.is_empty() {
             let logits = forward_slots(&self.cfg, &self.weights, &entries, pool, &self.linears());
+            let span_lens: Vec<usize> = entries.iter().map(|e| e.1.len()).collect();
+            drop(entries); // release the immutable borrow of `states`
             let mut row = 0usize;
             // Same lazy filter as above: an element's `done` only flips via
             // its own push_token after it has been yielded, so the order
-            // matches `entries`.
-            for (st, e) in states.iter_mut().filter(|s| !s.done).zip(entries.iter()) {
-                row += e.1.len();
+            // matches the spans'.
+            for (st, len) in states.iter_mut().filter(|s| !s.done).zip(span_lens) {
+                row += len;
                 st.push_token(argmax(logits.row(row - 1)) as u32);
             }
         }
@@ -181,7 +216,10 @@ impl Engine {
     /// sequences `done` when they reach `max_new` or their stop token;
     /// returns the number of tokens generated.
     pub fn decode_step(&self, states: &mut [&mut SeqState], pool: &mut KvCachePool) -> usize {
-        let mut entries: Vec<(usize, Vec<u32>)> = Vec::new();
+        // Token spans borrow from each state's history (a one-element slice
+        // of the latest token, or the sliding window on overflow) — the
+        // per-step hot path allocates no token buffers.
+        let mut entries: Vec<(usize, &[u32])> = Vec::new();
         let mut who: Vec<usize> = Vec::new();
         for (i, st) in states.iter().enumerate() {
             if st.done {
@@ -190,9 +228,9 @@ impl Engine {
             if pool.len(st.slot) == self.cfg.max_seq {
                 // Context overflow: re-prefill this slot's sliding window.
                 pool.reset_slot(st.slot);
-                entries.push((st.slot, st.seq[st.seq.len() - self.cfg.max_seq..].to_vec()));
+                entries.push((st.slot, &st.seq[st.seq.len() - self.cfg.max_seq..]));
             } else {
-                entries.push((st.slot, vec![*st.seq.last().unwrap()]));
+                entries.push((st.slot, std::slice::from_ref(st.seq.last().unwrap())));
             }
             who.push(i);
         }
@@ -200,9 +238,11 @@ impl Engine {
             return 0;
         }
         let logits = forward_slots(&self.cfg, &self.weights, &entries, pool, &self.linears());
+        let span_lens: Vec<usize> = entries.iter().map(|e| e.1.len()).collect();
+        drop(entries); // release the immutable borrow of `states`
         let mut row = 0usize;
-        for (e, &i) in entries.iter().zip(who.iter()) {
-            row += e.1.len();
+        for (len, &i) in span_lens.iter().zip(who.iter()) {
+            row += len;
             states[i].push_token(argmax(logits.row(row - 1)) as u32);
         }
         who.len()
@@ -219,7 +259,7 @@ impl Engine {
         if reqs.is_empty() {
             return vec![];
         }
-        let mut pool = KvCachePool::new(&self.cfg, reqs.len());
+        let mut pool = KvCachePool::with_dtype(&self.cfg, reqs.len(), self.kv_dtype);
         let mut states = self.prefill_batch(reqs, &mut pool);
         loop {
             let mut active: Vec<&mut SeqState> =
@@ -243,7 +283,7 @@ impl Engine {
         if seq == 0 {
             return Matrix::zeros(0, self.cfg.vocab);
         }
-        let mut cache = KvCache::new(&self.cfg, 1);
+        let mut cache = KvCache::with_dtype(&self.cfg, 1, self.kv_dtype);
         forward_cached(
             &self.cfg,
             &self.weights,
@@ -395,6 +435,95 @@ mod tests {
     fn empty_batch_ok() {
         let e = engine();
         assert!(e.generate_batch(&[]).is_empty());
+    }
+
+    /// Build the compression-pipeline (SLiM int4-2:4 + adapters) kernel
+    /// engine pair: one with f32 KV, one with the given quantized KV dtype.
+    fn compressed_engine_pair(dtype: KvDtype) -> (Engine, Engine) {
+        use crate::compress::CompressConfig;
+        use crate::model::{compress_model, ActivationTap, CompressedWeights};
+        use crate::sparse::SparsityPattern;
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let w = init(&cfg, &mut rng);
+        let toks: Vec<u32> = (0..64).map(|_| rng.below(cfg.vocab as u32)).collect();
+        let batch = Batch::new(toks, 2, 32);
+        let mut taps = ActivationTap::new();
+        forward(&cfg, &w, &batch, Some(&mut taps), None);
+        let cm = compress_model(&cfg, &w, &taps, &CompressConfig::slim(SparsityPattern::TWO_FOUR));
+        let weights = Arc::new(w);
+        let cw = Arc::new(CompressedWeights::from_model(&cm));
+        let e_f32 = Engine::with_kernels("kv-f32", cfg.clone(), weights.clone(), cw.clone());
+        let e_q = Engine::with_kernels("kv-q", cfg, weights, cw).with_kv_dtype(dtype);
+        (e_f32, e_q)
+    }
+
+    /// int8 KV greedy decode on the compression-pipeline model reproduces
+    /// the f32-KV tokens; if quantization noise ever flips a step, it may
+    /// only be across a near-tie in the f32 logits — a divergence with a
+    /// clear greedy margin is a real bug.
+    #[test]
+    fn int8_kv_greedy_matches_f32_on_compressed_model() {
+        let (e_f32, e_int8) = compressed_engine_pair(KvDtype::Int8);
+        assert_eq!(e_int8.kv_dtype(), KvDtype::Int8);
+        let prompt = vec![5u32, 6, 7, 8];
+        // Same-input logit comparison through the scoring path.
+        let s_f = e_f32.score(&prompt);
+        let s_8 = e_int8.score(&prompt);
+        assert!(s_8.rel_err(&s_f) < 0.1, "int8 score err {}", s_8.rel_err(&s_f));
+        let max_new = 8usize;
+        let req = |id| GenRequest { id, prompt: prompt.clone(), max_new, stop: None };
+        let out_f = e_f32.generate_batch(&[req(1)]).remove(0).tokens;
+        let out_8 = e_int8.generate_batch(&[req(2)]).remove(0).tokens;
+        if out_8 != out_f {
+            let div = out_f.iter().zip(out_8.iter()).position(|(a, b)| a != b).unwrap();
+            let mut prefix = prompt.clone();
+            prefix.extend_from_slice(&out_f[..div]);
+            let lg = e_f32.score(&prefix);
+            let row = lg.row(lg.rows() - 1);
+            let mut sorted = row.to_vec();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let gap = sorted[0] - sorted[1];
+            let mean = row.iter().sum::<f32>() / row.len() as f32;
+            let spread = (row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+                / row.len() as f32)
+                .sqrt();
+            assert!(
+                gap < 0.05 * spread,
+                "int8 KV diverged at step {div} despite a clear greedy margin \
+                 (top-2 gap {gap}, logit spread {spread})"
+            );
+        }
+    }
+
+    /// fp8 KV is coarser: require logit tolerance and well-formed output.
+    #[test]
+    fn fp8_kv_decode_close_on_compressed_model() {
+        let (e_f32, e_fp8) = compressed_engine_pair(KvDtype::Fp8E4M3);
+        let prompt = vec![9u32, 10, 11];
+        let s_f = e_f32.score(&prompt);
+        let s_8 = e_fp8.score(&prompt);
+        assert!(s_8.rel_err(&s_f) < 0.3, "fp8 score err {}", s_8.rel_err(&s_f));
+        let out = e_fp8.generate_batch(&[GenRequest {
+            id: 1,
+            prompt,
+            max_new: 4,
+            stop: None,
+        }]);
+        assert_eq!(out[0].tokens.len(), 4);
+        assert!(out[0].tokens.iter().all(|&t| (t as usize) < 512));
+    }
+
+    /// Quantized-KV greedy decode is still batching-invariant: rows are
+    /// encoded per sequence, so batchmates cannot perturb each other.
+    #[test]
+    fn int8_kv_batched_equals_solo() {
+        let (_, e) = compressed_engine_pair(KvDtype::Int8);
+        let r1 = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 4, stop: None };
+        let r2 = GenRequest { id: 2, prompt: vec![8], max_new: 4, stop: None };
+        let both = e.generate_batch(&[r1.clone(), r2.clone()]);
+        assert_eq!(both[0].tokens, e.generate_batch(&[r1])[0].tokens);
+        assert_eq!(both[1].tokens, e.generate_batch(&[r2])[0].tokens);
     }
 
     #[test]

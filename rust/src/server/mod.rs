@@ -19,6 +19,11 @@
 //!   retires each sequence at its own `max_new`/stop token, so no request
 //!   pays for the slowest member of a lockstep batch. `benches/serve.rs`
 //!   measures it against the fixed-batch baseline under Poisson arrivals.
+//!   The serving KV cache pool's storage dtype follows the engine's
+//!   (`Engine::with_kv_dtype`) unless overridden per route via
+//!   `SchedPolicy::kv_dtype` (a `model::KvDtype`): int8 / fp8 cached K/V
+//!   holds ~4× fewer bytes per in-flight sequence while greedy output
+//!   stays batching-invariant.
 //! * [`batcher`] — the shared request queue: fixed batch formation under a
 //!   max-batch/max-wait policy for the legacy worker, non-blocking
 //!   `try_take` + untimed `wait_pending` admission for the scheduler.
@@ -35,6 +40,7 @@ pub mod metrics;
 pub mod router;
 pub mod scheduler;
 
+pub use crate::model::KvDtype;
 pub use batcher::{BatchPolicy, Batcher, Pending};
 pub use engine::{Engine, GenRequest, GenResult, SeqState};
 pub use metrics::Metrics;

@@ -17,6 +17,7 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{Engine, GenRequest, GenResult};
 use super::metrics::Metrics;
 use super::scheduler::{SchedPolicy, Scheduler};
+use crate::model::KvDtype;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,6 +29,9 @@ struct Route {
     /// The engine's vocab size, kept for admission-time prompt validation
     /// (an out-of-vocab token must be rejected here, not panic the worker).
     vocab: usize,
+    /// KV cache storage dtype this route serves with (reported by the JSON
+    /// api's `models` command).
+    kv_dtype: KvDtype,
     _worker: std::thread::JoinHandle<()>,
 }
 
@@ -53,6 +57,7 @@ impl Router {
     pub fn register(&mut self, engine: Engine, policy: BatchPolicy) {
         let name = engine.name.clone();
         let vocab = engine.config().vocab;
+        let kv_dtype = engine.kv_dtype();
         let batcher = Arc::new(Batcher::new(policy));
         let metrics = self.metrics.clone();
         let worker_batcher = batcher.clone();
@@ -70,7 +75,7 @@ impl Router {
                 }
             }
         });
-        self.routes.insert(name, Route { batcher, vocab, _worker: worker });
+        self.routes.insert(name, Route { batcher, vocab, kv_dtype, _worker: worker });
     }
 
     /// Register an engine under its name with the continuous-batching
@@ -79,6 +84,9 @@ impl Router {
     pub fn register_continuous(&mut self, engine: Engine, policy: SchedPolicy) {
         let name = engine.name.clone();
         let vocab = engine.config().vocab;
+        // Policy override, else the engine's own dtype — the same
+        // resolution the scheduler applies to its pool.
+        let kv_dtype = policy.kv_dtype.unwrap_or_else(|| engine.kv_dtype());
         let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
         let metrics = self.metrics.clone();
         let worker_batcher = batcher.clone();
@@ -86,12 +94,17 @@ impl Router {
         let worker = std::thread::spawn(move || {
             scheduler.run(&worker_batcher, &metrics);
         });
-        self.routes.insert(name, Route { batcher, vocab, _worker: worker });
+        self.routes.insert(name, Route { batcher, vocab, kv_dtype, _worker: worker });
     }
 
     /// Registered model names.
     pub fn models(&self) -> Vec<&str> {
         self.routes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Registered models with the KV cache dtype each route serves with.
+    pub fn model_infos(&self) -> Vec<(&str, KvDtype)> {
+        self.routes.iter().map(|(n, r)| (n.as_str(), r.kv_dtype)).collect()
     }
 
     /// Submit a request; blocks until the result arrives.
@@ -184,8 +197,32 @@ mod tests {
 
     fn router_continuous() -> Router {
         let mut r = Router::new();
-        r.register_continuous(engine(), SchedPolicy { max_slots: 4 });
+        r.register_continuous(engine(), SchedPolicy { max_slots: 4, ..Default::default() });
         r
+    }
+
+    #[test]
+    fn model_infos_report_kv_dtype() {
+        let mut r = Router::new();
+        // Engine-configured dtype is inherited when the policy leaves
+        // kv_dtype unset...
+        r.register_continuous(
+            engine().with_kv_dtype(KvDtype::Int8),
+            SchedPolicy { max_slots: 2, ..Default::default() },
+        );
+        let infos = r.model_infos();
+        assert_eq!(infos, vec![("sim-125m", KvDtype::Int8)]);
+        // ...and the int8-KV continuous route still serves correct-shape
+        // output, token-identical to its (equally int8) solo reference.
+        let out = r.generate("sim-125m", vec![3, 4, 5], 3).unwrap();
+        assert_eq!(out.tokens.len(), 3);
+        let solo = engine().with_kv_dtype(KvDtype::Int8).generate_batch(&[GenRequest {
+            id: 1,
+            prompt: vec![3, 4, 5],
+            max_new: 3,
+            stop: None,
+        }]);
+        assert_eq!(out.tokens, solo[0].tokens);
     }
 
     #[test]

@@ -29,7 +29,7 @@
 use super::batcher::Batcher;
 use super::engine::{Engine, GenResult, SeqState};
 use super::metrics::Metrics;
-use crate::model::KvCachePool;
+use crate::model::{KvCachePool, KvDtype};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
@@ -39,11 +39,18 @@ use std::time::Instant;
 pub struct SchedPolicy {
     /// Concurrent sequence slots (the decode batch cap).
     pub max_slots: usize,
+    /// Storage dtype for the serving KV cache pool: `None` (default)
+    /// inherits the engine's own dtype ([`Engine::kv_dtype`]), so the
+    /// scheduler and the engine's solo reference paths always agree;
+    /// `Some(..)` overrides it for this route. int8 / fp8 hold ~4× fewer
+    /// cache bytes per decode step, and greedy output stays
+    /// batching-invariant (quantization is per sequence row).
+    pub kv_dtype: Option<KvDtype>,
 }
 
 impl Default for SchedPolicy {
     fn default() -> Self {
-        SchedPolicy { max_slots: 8 }
+        SchedPolicy { max_slots: 8, kv_dtype: None }
     }
 }
 
@@ -70,11 +77,21 @@ impl Scheduler {
         self.policy
     }
 
+    /// The KV dtype this scheduler's pool stores (policy override, or the
+    /// engine's own dtype).
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.policy.kv_dtype.unwrap_or_else(|| self.engine.kv_dtype())
+    }
+
     /// Run the step-loop until the batcher is closed and fully drained
     /// (queued requests are still served after `close`; in-flight
     /// sequences always run to completion).
     pub fn run(&self, batcher: &Batcher, metrics: &Metrics) {
-        let mut pool = KvCachePool::new(self.engine.config(), self.policy.max_slots);
+        let mut pool = KvCachePool::with_dtype(
+            self.engine.config(),
+            self.policy.max_slots,
+            self.kv_dtype(),
+        );
         let mut flights: Vec<InFlight> = Vec::new();
         loop {
             // ── Admit ─────────────────────────────────────────────────
@@ -181,7 +198,9 @@ mod tests {
     }
 
     /// Run `reqs` through a live scheduler (staggered arrivals) and return
-    /// each request's tokens, in request order.
+    /// each request's tokens, in request order. The serving pool inherits
+    /// the engine's own KV dtype (policy `kv_dtype: None`), so solo
+    /// `generate_batch` runs are the exact reference.
     fn serve(engine: Arc<Engine>, reqs: &[GenRequest], max_slots: usize, stagger: &[u64]) -> Vec<Vec<u32>> {
         let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
         let metrics = Arc::new(Metrics::new());
@@ -189,9 +208,8 @@ mod tests {
             let b = batcher.clone();
             let m = metrics.clone();
             let e = engine.clone();
-            std::thread::spawn(move || {
-                Scheduler::new(e, SchedPolicy { max_slots }).run(&b, &m)
-            })
+            let policy = SchedPolicy { max_slots, kv_dtype: None };
+            std::thread::spawn(move || Scheduler::new(e, policy).run(&b, &m))
         };
         let mut rxs = Vec::new();
         for (i, r) in reqs.iter().enumerate() {
@@ -253,6 +271,24 @@ mod tests {
     #[test]
     fn continuous_equals_solo_kernels() {
         solo_equivalence(kernel_engine(8), 4);
+    }
+
+    /// Solo-equivalence property with a QUANTIZED serving KV cache: the
+    /// scheduler pool and the solo reference both store int8 K/V, and
+    /// per-row quantization keeps greedy decode batching-invariant, so any
+    /// arrival order still reproduces each request's solo tokens exactly.
+    #[test]
+    fn continuous_equals_solo_quantized_kv() {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(13);
+        let w = init(&cfg, &mut rng);
+        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let engine = Arc::new(
+                Engine::new("dense-qkv", cfg.clone(), Arc::new(w.clone()), None)
+                    .with_kv_dtype(dtype),
+            );
+            solo_equivalence(engine, 5);
+        }
     }
 
     #[test]
@@ -321,7 +357,7 @@ mod tests {
             let m = metrics.clone();
             let e = engine.clone();
             std::thread::spawn(move || {
-                Scheduler::new(e, SchedPolicy { max_slots: 2 }).run(&b, &m)
+                Scheduler::new(e, SchedPolicy { max_slots: 2, ..Default::default() }).run(&b, &m)
             })
         };
         for rx in rxs {

@@ -17,6 +17,52 @@ pub(crate) fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Serial row-major GEMM `out = A·B` over raw slices (`a`: m×k, `b`: k×n,
+/// `out`: m×n, assumed zero-initialized). The (i, k, j) loop order keeps the
+/// B-row and out-row accesses contiguous for auto-vectorization; exact-zero
+/// A entries are skipped (pruned weights and masked attention probabilities
+/// cost nothing). This is the inner kernel both [`matmul`]'s threaded row
+/// chunks and the blocked attention tiles (`model::attention`) run on.
+pub(crate) fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// Serial `out = A·Bᵀ` over raw slices (`a`: m×k, `b`: n×k, `out`: m×n) —
+/// dot-product form; both operands are walked row-wise, so it is
+/// cache-friendly on row-major tiles. Shared by [`matmul_a_bt`]'s threaded
+/// row chunks and the attention score tiles (`model::attention`).
+pub(crate) fn gemm_abt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
 /// C = A · B.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(
@@ -34,19 +80,7 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 
     let kernel = |rows: std::ops::Range<usize>, out: &mut [f32]| {
         // out covers rows `rows` of C, row-major, n columns each.
-        for (ri, i) in rows.clone().enumerate() {
-            let arow = &a_data[i * k..(i + 1) * k];
-            let crow = &mut out[ri * n..(ri + 1) * n];
-            for (kk, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = &b_data[kk * n..(kk + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                    *cv += aik * bv;
-                }
-            }
-        }
+        gemm(&a_data[rows.start * k..rows.end * k], b_data, rows.end - rows.start, k, n, out);
     };
 
     if flops < PAR_THRESHOLD || m < 2 {
@@ -133,17 +167,7 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
             let (head, tail) = rest.split_at_mut((end - start) * n);
             rest = tail;
             s.spawn(move || {
-                for (ri, i) in (start..end).enumerate() {
-                    let arow = &a_data[i * k..(i + 1) * k];
-                    for j in 0..n {
-                        let brow = &b_data[j * k..(j + 1) * k];
-                        let mut acc = 0.0f32;
-                        for (av, bv) in arow.iter().zip(brow.iter()) {
-                            acc += av * bv;
-                        }
-                        head[ri * n + j] = acc;
-                    }
-                }
+                gemm_abt(&a_data[start * k..end * k], b_data, end - start, k, n, head);
             });
             start = end;
         }
