@@ -76,23 +76,15 @@ fn main() -> anyhow::Result<()> {
     // Invariant: continuous batching is solo-equivalent, whatever was
     // in flight alongside each request.
     for (prompt, max_new, toks) in &served {
-        let solo = reference.generate_batch(&[GenRequest {
-            id: 0,
-            prompt: prompt.clone(),
-            max_new: *max_new,
-            stop: None,
-        }]);
+        let req = GenRequest { id: 0, prompt: prompt.clone(), max_new: *max_new, stop: None };
+        let solo = reference.generate_batch(&[req]);
         assert_eq!(toks, &solo[0].tokens, "continuous batching must match solo decode");
     }
     println!("[check] all {n_clients} outputs token-for-token equal to solo decode");
 
     // Early retirement: stop the generation at its own second token.
-    let probe = reference.generate_batch(&[GenRequest {
-        id: 0,
-        prompt: vec![5, 6, 7],
-        max_new: 8,
-        stop: None,
-    }]);
+    let probe_req = GenRequest { id: 0, prompt: vec![5, 6, 7], max_new: 8, stop: None };
+    let probe = reference.generate_batch(&[probe_req]);
     let stop = probe[0].tokens[1];
     let mut client = api::Client::connect(addr)?;
     let resp = client.call(&Json::parse(&format!(

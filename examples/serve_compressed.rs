@@ -82,7 +82,8 @@ fn main() -> anyhow::Result<()> {
     let total_tokens: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
     let wall = t0.elapsed().as_secs_f64();
 
-    println!("[done ] {total_tokens} tokens in {wall:.2}s ({:.1} tok/s end-to-end)", total_tokens as f64 / wall);
+    let tok_per_s = total_tokens as f64 / wall;
+    println!("[done ] {total_tokens} tokens in {wall:.2}s ({tok_per_s:.1} tok/s end-to-end)");
     println!("[stats] {}", router.metrics.summary());
 
     // Metrics over the wire too.
@@ -91,7 +92,8 @@ fn main() -> anyhow::Result<()> {
     println!("[wire ] {}", resp.to_string_compact());
 
     assert!(router.metrics.mean_batch_size() > 1.0, "batching should coalesce requests");
-    println!("\nOK: mean batch size {:.2} > 1 — dynamic batching engaged.", router.metrics.mean_batch_size());
+    let mean_batch = router.metrics.mean_batch_size();
+    println!("\nOK: mean batch size {mean_batch:.2} > 1 — dynamic batching engaged.");
     router.shutdown();
     Ok(())
 }

@@ -14,7 +14,7 @@
 //! first token computed), so the comparison isolates scheduling.
 //!
 //! Writes a `BENCH_serve.json` summary (throughput tok/s, p50/p95 TTFT,
-//! p50 completion) next to the console table.
+//! p50 completion) next to the console table (or under `$BENCH_OUT_DIR`).
 
 use slim::kernels::LinearOp;
 use slim::model::{init, CompressedWeights, KvCachePool, ModelConfig, Weights};
@@ -244,10 +244,10 @@ fn main() {
         ("mean_gap_ms", n(mean_gap_ms)),
         ("results", obj(json_rows)),
     ]);
-    let path = "BENCH_serve.json";
-    match std::fs::write(path, doc.to_string_compact()) {
-        Ok(()) => println!("\nwrote {path}"),
-        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    let path = slim::util::bench_out_path("BENCH_serve.json");
+    match std::fs::write(&path, doc.to_string_compact()) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
     }
 
     // Sanity: continuous should beat fixed on throughput AND p50 TTFT for

@@ -67,7 +67,12 @@ pub fn fig2(ctx: &Ctx) -> Result<()> {
 fn speedup_figure(ctx: &Ctx, gpu: &crate::perfmodel::Gpu, title: &str) -> Result<()> {
     // Measured CPU part.
     let shapes: Vec<(&str, usize, usize)> = if ctx.quick {
-        vec![("qkv-proj", 512, 1536), ("o-proj", 512, 512), ("up-proj", 512, 1376), ("down-proj", 1376, 512)]
+        vec![
+            ("qkv-proj", 512, 1536),
+            ("o-proj", 512, 512),
+            ("up-proj", 512, 1376),
+            ("down-proj", 1376, 512),
+        ]
     } else {
         vec![
             ("qkv-proj", 1024, 3072),

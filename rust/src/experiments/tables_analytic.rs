@@ -107,7 +107,8 @@ pub fn table22(ctx: &Ctx) -> Result<()> {
             &format!("Table 22 — calibration sensitivity, {} (ppl ↓)", pattern.name()),
             &headers,
         );
-        for (label, alt_corpus) in [("synth-web (C4*)", None), ("synth-pajama (SlimPajama*)", Some(&pajama))] {
+        let corpora = [("synth-web (C4*)", None), ("synth-pajama (SlimPajama*)", Some(&pajama))];
+        for (label, alt_corpus) in corpora {
             let mut row = vec![label.to_string()];
             for name in &models {
                 let b = ctx.bundle(name)?;

@@ -75,7 +75,8 @@ impl LinearOp {
             layer.group_size == 0 && layer.scales.len() == 1 && layer.scales[0] > 0.0;
         let grouped = layer.group_size > 0 && !layer.scales.is_empty();
         if layer.bits != 4 || !(per_tensor || grouped) {
-            return LinearOp { kernel: KernelKind::Dense(DenseKernel::new(layer.wc.clone())), adapter };
+            let kernel = KernelKind::Dense(DenseKernel::new(layer.wc.clone()));
+            return LinearOp { kernel, adapter };
         }
         // `None` means the values are off the code·α/L grid (SLiM-Quant^O's
         // folded channel scaling): packed codes would not reproduce them.

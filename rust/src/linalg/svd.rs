@@ -130,7 +130,13 @@ pub fn jacobi_svd(a: &Matrix) -> Svd {
 /// Randomized truncated SVD of rank `k` with `oversample` extra probes and
 /// `power_iters` subspace iterations (2 is plenty for adapter use — the
 /// compression-error spectra decay fast).
-pub fn randomized_svd(a: &Matrix, k: usize, oversample: usize, power_iters: usize, rng: &mut Pcg32) -> Svd {
+pub fn randomized_svd(
+    a: &Matrix,
+    k: usize,
+    oversample: usize,
+    power_iters: usize,
+    rng: &mut Pcg32,
+) -> Svd {
     let (m, n) = a.shape();
     let k = k.min(m.min(n));
     let probes = (k + oversample).min(m.min(n)).max(1);

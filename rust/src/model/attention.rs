@@ -39,6 +39,30 @@
 //! traffic, the dominant cost of serving long contexts, drops ~4×
 //! (SqueezeLLM, arxiv 2306.07629, shows generation is memory-bandwidth
 //! bound; the paper's input-quantization appendix supplies the formats).
+//!
+//! ## Ring addressing (logical vs physical positions)
+//!
+//! Each (slot, head) stripe is treated as a **ring buffer** over `max_seq`
+//! physical rows: the row for *logical* position `L` (the token's index in
+//! the sequence, unbounded) lives at physical row `L % max_seq`
+//! ([`KvSlab::write_logical`] with [`KvLayout::Ring`]), so a write past the
+//! context length overwrites the oldest retained position in O(1) instead
+//! of forcing the engine to re-prefill a sliding window. The attention
+//! kernel reads the retained window back **in logical order** through
+//! [`KvSlab::tile`]: the window starts at physical row [`AttnSpan::start`]
+//! and is materialized as at most two contiguous arcs
+//! (`[start..max_seq)` then `[0..start)`), so the slice GEMMs always see
+//! one contiguous logically-ordered tile. Unwrapped f32 windows stay
+//! zero-copy borrows; wrapped or quantized windows are copied/dequantized
+//! into the per-worker scratch (int8 scales are indexed by physical row,
+//! so they wrap with their rows automatically).
+//!
+//! [`KvLayout::Shift`] is the slow reference layout for the same
+//! sliding-window semantics: instead of wrapping, an overflow write
+//! memmoves every retained row (and its scales) down by one and appends at
+//! the last physical row — O(window) per token, but the stored bytes equal
+//! the ring's logical window exactly, which is what the ring/shift
+//! greedy-equivalence tests assert.
 
 use crate::quant::fp8::{e4m3_from_bits, e4m3_to_bits};
 use crate::quant::quant_code;
@@ -77,12 +101,45 @@ impl KvDtype {
     }
 }
 
+/// Eviction layout of a KV cache slot once a sequence outgrows `max_seq`.
+///
+/// Both layouts implement the same sliding-window semantics — the cache
+/// retains the most recent `max_seq` positions, stored rows are never
+/// recomputed — and produce bit-identical attention inputs; they differ
+/// only in where the retained rows physically live.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvLayout {
+    /// Ring buffer: logical position `L` lives at physical row
+    /// `L % max_seq`; an overflow write is one O(1) overwrite of the
+    /// oldest row and the window is read back as two contiguous arcs.
+    /// The serving default.
+    #[default]
+    Ring,
+    /// Shift buffer: an overflow write memmoves every retained row (and
+    /// its scales) down by one, then appends at row `max_seq - 1` —
+    /// O(window) per token. Kept as the obviously-correct legacy
+    /// sliding-window reference for equivalence tests and benches.
+    Shift,
+}
+
+impl KvLayout {
+    /// Display / JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvLayout::Ring => "ring",
+            KvLayout::Shift => "shift",
+        }
+    }
+}
+
 /// One layer's K (or V) cache storage: `slots` sequence slots of `max_seq`
 /// positions each, laid out head-major — `stripe(slot, head)` is a
 /// contiguous `max_seq × dh` block, which is what lets the attention tiles
 /// run as blocked matmuls over (and, for f32, borrow directly from) cache
 /// memory. Rows are quantized on [`KvSlab::write`] per the slab's
 /// [`KvDtype`] and dequantized block-wise by the attention kernel.
+/// Positions past `max_seq` are addressed through [`KvSlab::write_logical`]
+/// per a [`KvLayout`] (ring wrap or reference shift).
 pub struct KvSlab {
     dtype: KvDtype,
     slots: usize,
@@ -127,7 +184,7 @@ impl KvSlab {
     }
 
     /// Encode one position's row (`n_heads·dh` f32 values, head-major like
-    /// the model's hidden dim) into the slab at (`slot`, `pos`).
+    /// the model's hidden dim) into the slab at physical row (`slot`, `pos`).
     pub fn write(&mut self, slot: usize, pos: usize, row: &[f32]) {
         assert_eq!(row.len(), self.n_heads * self.dh, "kv row width mismatch");
         assert!(slot < self.slots && pos < self.max_seq, "kv write out of range");
@@ -153,39 +210,93 @@ impl KvSlab {
         }
     }
 
-    /// The first `len` rows of the (`slot`, `head`) stripe as a contiguous
-    /// `len × dh` f32 tile: a zero-copy borrow for f32 slabs, a block
-    /// dequantization into `scratch` otherwise.
+    /// Encode one *logical* position's row. Positions below `max_seq` write
+    /// straight through; positions past it evict the oldest retained row
+    /// per `layout` — an O(1) wrapped overwrite at `logical % max_seq` for
+    /// [`KvLayout::Ring`], an O(window) shift-down + append for the
+    /// [`KvLayout::Shift`] reference.
+    pub fn write_logical(&mut self, slot: usize, logical: usize, row: &[f32], layout: KvLayout) {
+        let pos = if logical < self.max_seq {
+            logical
+        } else {
+            match layout {
+                KvLayout::Ring => logical % self.max_seq,
+                KvLayout::Shift => {
+                    self.evict_front(slot);
+                    self.max_seq - 1
+                }
+            }
+        };
+        self.write(slot, pos, row);
+    }
+
+    /// Drop physical row 0 of `slot` by moving rows `1..max_seq` (codes or
+    /// f32 values, and int8 scales) down one row — the [`KvLayout::Shift`]
+    /// eviction. Scales move with their rows, preserving the (row, head)
+    /// pairing.
+    fn evict_front(&mut self, slot: usize) {
+        let (s, dh) = (self.max_seq, self.dh);
+        for h in 0..self.n_heads {
+            let base = self.stripe_base(slot, h);
+            match self.dtype {
+                KvDtype::F32 => self.f32s.copy_within(base + dh..base + s * dh, base),
+                KvDtype::Int8 | KvDtype::Fp8E4M3 => {
+                    self.codes.copy_within(base + dh..base + s * dh, base)
+                }
+            }
+        }
+        if self.dtype == KvDtype::Int8 {
+            let sb = slot * s * self.n_heads;
+            self.scales.copy_within(sb + self.n_heads..sb + s * self.n_heads, sb);
+        }
+    }
+
+    /// The `len`-row window of the (`slot`, `head`) stripe beginning at
+    /// physical row `start`, in logical order, as a contiguous `len × dh`
+    /// f32 tile. A window that reaches `max_seq` wraps to row 0 (the ring's
+    /// second arc). Unwrapped f32 windows are zero-copy borrows; wrapped or
+    /// quantized windows are copied/dequantized into `scratch` arc by arc.
     pub(crate) fn tile<'a>(
         &'a self,
         slot: usize,
         head: usize,
+        start: usize,
         len: usize,
         scratch: &'a mut Vec<f32>,
     ) -> &'a [f32] {
-        debug_assert!(len <= self.max_seq);
-        let base = self.stripe_base(slot, head);
+        debug_assert!(len <= self.max_seq && start < self.max_seq);
         let dh = self.dh;
+        if self.dtype == KvDtype::F32 && start + len <= self.max_seq {
+            let base = self.stripe_base(slot, head) + start * dh;
+            return &self.f32s[base..base + len * dh];
+        }
+        scratch.clear();
+        let first = len.min(self.max_seq - start);
+        self.fill_rows(slot, head, start, first, scratch);
+        self.fill_rows(slot, head, 0, len - first, scratch);
+        &scratch[..]
+    }
+
+    /// Append `n` rows starting at physical row `pos0` of the (`slot`,
+    /// `head`) stripe to `out`, dequantized to f32.
+    fn fill_rows(&self, slot: usize, head: usize, pos0: usize, n: usize, out: &mut Vec<f32>) {
+        if n == 0 {
+            return;
+        }
+        let dh = self.dh;
+        let base = self.stripe_base(slot, head) + pos0 * dh;
         match self.dtype {
-            KvDtype::F32 => &self.f32s[base..base + len * dh],
+            KvDtype::F32 => out.extend_from_slice(&self.f32s[base..base + n * dh]),
             KvDtype::Int8 => {
-                scratch.resize(len * dh, 0.0);
-                for (t, dst) in scratch.chunks_exact_mut(dh).enumerate() {
-                    let alpha = self.scales[(slot * self.max_seq + t) * self.n_heads + head];
+                for t in 0..n {
+                    let alpha = self.scales[(slot * self.max_seq + pos0 + t) * self.n_heads + head];
                     let dq = alpha / 127.0;
                     let src = &self.codes[base + t * dh..base + (t + 1) * dh];
-                    for (o, &c) in dst.iter_mut().zip(src.iter()) {
-                        *o = (c as i8) as f32 * dq;
-                    }
+                    out.extend(src.iter().map(|&c| (c as i8) as f32 * dq));
                 }
-                &scratch[..len * dh]
             }
             KvDtype::Fp8E4M3 => {
-                scratch.resize(len * dh, 0.0);
-                for (o, &b) in scratch.iter_mut().zip(self.codes[base..base + len * dh].iter()) {
-                    *o = e4m3_from_bits(b);
-                }
-                &scratch[..len * dh]
+                out.extend(self.codes[base..base + n * dh].iter().map(|&b| e4m3_from_bits(b)));
             }
         }
     }
@@ -193,19 +304,25 @@ impl KvSlab {
 
 /// One sequence's attention work in a packed batch: `span` new query rows
 /// starting at row `q_base` of the packed q/ctx matrices, attending over
-/// `p0` already-stored K/V positions plus its own `span` fresh ones
-/// (query row `s` sees K/V positions `0..=p0+s`).
+/// `p0` retained K/V window positions plus its own `span` fresh ones
+/// (query row `s` sees window entries `0..=p0+s`, in logical order).
 #[derive(Clone, Copy, Debug)]
 pub struct AttnSpan {
     /// First row of this span in the packed q/ctx matrices.
     pub q_base: usize,
     /// Number of new (query) positions.
     pub span: usize,
-    /// K/V positions already stored before this span's rows.
+    /// Retained K/V window positions preceding this span's rows. For an
+    /// unwrapped slot this is the cached length; once the ring has wrapped
+    /// it is the window size minus `span` (older positions are evicted).
     pub p0: usize,
     /// K/V addressing: the slot index for [`KvSource::Pool`], the row base
     /// in the fresh K/V matrices for [`KvSource::Fresh`].
     pub kv: usize,
+    /// Physical row of the window's first (oldest retained) position in
+    /// the pool slabs — the ring read wraps from `max_seq` back to row 0.
+    /// Always 0 for [`KvSource::Fresh`] and for unwrapped slots.
+    pub start: usize,
 }
 
 /// Where a span's K/V rows live.
@@ -280,11 +397,13 @@ fn run_item(
             (&s.kt, &s.vt)
         }
         KvSource::Pool { k, v } => (
-            k.tile(sp.kv, head, kvlen, &mut s.kt),
-            v.tile(sp.kv, head, kvlen, &mut s.vt),
+            k.tile(sp.kv, head, sp.start, kvlen, &mut s.kt),
+            v.tile(sp.kv, head, sp.start, kvlen, &mut s.vt),
         ),
     };
     // Scores: span × kvlen blocked Q·Kᵀ, then causal mask + row softmax.
+    // The mask is expressed in logical window positions: entry `p0 + r`
+    // is query row `r` itself, later entries are its span-mates' rows.
     s.sc.resize(span * kvlen, 0.0);
     gemm_abt(&s.qt, kt, span, dh, kvlen, &mut s.sc);
     for (r, row) in s.sc.chunks_exact_mut(kvlen).enumerate() {
@@ -424,8 +543,8 @@ pub fn attend_reference(
                     (&kt_s, &vt_s)
                 }
                 KvSource::Pool { k, v } => (
-                    k.tile(sp.kv, h, kvlen, &mut kt_s),
-                    v.tile(sp.kv, h, kvlen, &mut vt_s),
+                    k.tile(sp.kv, h, sp.start, kvlen, &mut kt_s),
+                    v.tile(sp.kv, h, sp.start, kvlen, &mut vt_s),
                 ),
             };
             for r in 0..sp.span {
@@ -495,7 +614,7 @@ mod tests {
         let k = Matrix::randn(n, d, 1.0, &mut rng);
         let v = Matrix::randn(n, d, 1.0, &mut rng);
         let spans: Vec<AttnSpan> = (0..batch)
-            .map(|b| AttnSpan { q_base: b * seq, span: seq, p0: 0, kv: b * seq })
+            .map(|b| AttnSpan { q_base: b * seq, span: seq, p0: 0, kv: b * seq, start: 0 })
             .collect();
         let scale = 1.0 / (dh as f32).sqrt();
         let src = KvSource::Fresh { k: &k, v: &v };
@@ -514,9 +633,9 @@ mod tests {
         // slot depths INCLUDE the fresh span rows (already written).
         let depths = [9usize, 20, 1];
         let spans = [
-            AttnSpan { q_base: 0, span: 4, p0: 5, kv: 0 }, // mid-decode burst
-            AttnSpan { q_base: 4, span: 1, p0: 19, kv: 1 }, // one-token decode
-            AttnSpan { q_base: 5, span: 1, p0: 0, kv: 2 },  // fresh prefill
+            AttnSpan { q_base: 0, span: 4, p0: 5, kv: 0, start: 0 }, // mid-decode burst
+            AttnSpan { q_base: 4, span: 1, p0: 19, kv: 1, start: 0 }, // one-token decode
+            AttnSpan { q_base: 5, span: 1, p0: 0, kv: 2, start: 0 },  // fresh prefill
         ];
         let (ks, vs) = filled_slabs(KvDtype::F32, &depths, max_seq, n_heads, dh, &mut rng);
         let q = Matrix::randn(6, d, 1.0, &mut rng);
@@ -538,7 +657,7 @@ mod tests {
         let (ks, vs) = filled_slabs(KvDtype::F32, &depths, depth, n_heads, dh, &mut rng);
         let q = Matrix::randn(batch, d, 1.0, &mut rng);
         let spans: Vec<AttnSpan> = (0..batch)
-            .map(|b| AttnSpan { q_base: b, span: 1, p0: depth - 1, kv: b })
+            .map(|b| AttnSpan { q_base: b, span: 1, p0: depth - 1, kv: b, start: 0 })
             .collect();
         let total_cost: usize = spans.iter().map(|sp| n_heads * 2 * (sp.p0 + 1) * dh).sum();
         assert!(total_cost >= crate::tensor::PAR_THRESHOLD, "test must cross the threshold");
@@ -567,9 +686,9 @@ mod tests {
         let mut s8 = Vec::new();
         let mut se = Vec::new();
         for h in 0..n_heads {
-            let exact = f32s.tile(0, h, max_seq, &mut sf).to_vec();
-            let i8t = int8.tile(0, h, max_seq, &mut s8);
-            let f8t = fp8.tile(0, h, max_seq, &mut se);
+            let exact = f32s.tile(0, h, 0, max_seq, &mut sf).to_vec();
+            let i8t = int8.tile(0, h, 0, max_seq, &mut s8);
+            let f8t = fp8.tile(0, h, 0, max_seq, &mut se);
             let norm: f32 = exact.iter().map(|x| x * x).sum::<f32>().sqrt();
             let err8: f32 =
                 exact.iter().zip(i8t.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
@@ -593,7 +712,7 @@ mod tests {
         let (kf, vf) = filled_slabs(KvDtype::F32, &[depth], depth, n_heads, dh, &mut rng);
         let (k8, v8) = filled_slabs(KvDtype::Int8, &[depth], depth, n_heads, dh, &mut rng2);
         let q = Matrix::randn(2, d, 1.0, &mut rng);
-        let spans = [AttnSpan { q_base: 0, span: 2, p0: depth - 2, kv: 0 }];
+        let spans = [AttnSpan { q_base: 0, span: 2, p0: depth - 2, kv: 0, start: 0 }];
         let scale = 1.0 / (dh as f32).sqrt();
         let exact = attend(n_heads, dh, scale, &spans, &q, &KvSource::Pool { k: &kf, v: &vf });
         let approx = attend(n_heads, dh, scale, &spans, &q, &KvSource::Pool { k: &k8, v: &v8 });
@@ -607,6 +726,75 @@ mod tests {
         assert_eq!(KvDtype::parse("fp8"), Some(KvDtype::Fp8E4M3));
         assert_eq!(KvDtype::parse("bf16"), None);
         assert_eq!(KvDtype::default(), KvDtype::F32);
+    }
+
+    /// Wrap-aware addressing: writing `depth > max_seq` logical rows
+    /// through the ring must read back (as a two-arc tile in logical
+    /// order) the exact bytes of a fresh slab holding only the retained
+    /// window — for every dtype, i.e. int8 scales wrap with their rows.
+    #[test]
+    fn ring_tile_matches_logical_rewrite_all_dtypes() {
+        let (n_heads, dh, max_seq) = (3usize, 8usize, 16usize);
+        let d = n_heads * dh;
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let mut rng = Pcg32::seeded(7);
+            let depth = 2 * max_seq + 5; // wraps twice, lands mid-stripe
+            let rows: Vec<Vec<f32>> =
+                (0..depth).map(|_| (0..d).map(|_| rng.gauss()).collect()).collect();
+            let mut ring = KvSlab::new(dtype, 1, max_seq, n_heads, dh);
+            let mut shift = KvSlab::new(dtype, 1, max_seq, n_heads, dh);
+            for (logical, row) in rows.iter().enumerate() {
+                ring.write_logical(0, logical, row, KvLayout::Ring);
+                shift.write_logical(0, logical, row, KvLayout::Shift);
+            }
+            // A fresh slab given only the window rows, in logical order.
+            let mut fresh = KvSlab::new(dtype, 1, max_seq, n_heads, dh);
+            for (pos, row) in rows[depth - max_seq..].iter().enumerate() {
+                fresh.write(0, pos, row);
+            }
+            let start = depth % max_seq; // physical row of the oldest retained
+            let (mut sr, mut ss, mut sf) = (Vec::new(), Vec::new(), Vec::new());
+            for h in 0..n_heads {
+                let want = fresh.tile(0, h, 0, max_seq, &mut sf).to_vec();
+                let ring_tile = ring.tile(0, h, start, max_seq, &mut sr);
+                let shift_tile = shift.tile(0, h, 0, max_seq, &mut ss);
+                assert_eq!(ring_tile, &want[..], "{} ring head {h}", dtype.name());
+                assert_eq!(shift_tile, &want[..], "{} shift head {h}", dtype.name());
+            }
+        }
+    }
+
+    /// A wrapped f32 window still reads back in logical order (the
+    /// two-arc copy path replaces the zero-copy borrow), and partial
+    /// windows starting mid-stripe work for any (start, len).
+    #[test]
+    fn f32_wrapped_tile_is_logically_ordered() {
+        let (n_heads, dh, max_seq) = (1usize, 4usize, 8usize);
+        let mut slab = KvSlab::new(KvDtype::F32, 1, max_seq, n_heads, dh);
+        // Row for logical L is filled with the value L.
+        for logical in 0..max_seq + 3 {
+            let row = vec![logical as f32; dh];
+            slab.write_logical(0, logical, &row, KvLayout::Ring);
+        }
+        // Window = logical 3..11, physically [3..8) then [0..3).
+        let mut scratch = Vec::new();
+        let tile = slab.tile(0, 0, 3, max_seq, &mut scratch);
+        let got: Vec<f32> = tile.chunks_exact(dh).map(|r| r[0]).collect();
+        assert_eq!(got, (3..11).map(|v| v as f32).collect::<Vec<_>>());
+        // Unwrapped sub-window is still the zero-copy fast path (the
+        // scratch buffer stays untouched).
+        let mut untouched = Vec::new();
+        let sub = slab.tile(0, 0, 4, 3, &mut untouched);
+        assert_eq!(sub.len(), 3 * dh);
+        assert_eq!(sub[0], 4.0);
+        assert!(untouched.is_empty());
+    }
+
+    #[test]
+    fn layout_names_and_default() {
+        assert_eq!(KvLayout::default(), KvLayout::Ring);
+        assert_eq!(KvLayout::Ring.name(), "ring");
+        assert_eq!(KvLayout::Shift.name(), "shift");
     }
 
     #[test]

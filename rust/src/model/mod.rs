@@ -8,7 +8,7 @@ pub mod size;
 pub mod transformer;
 pub mod weights;
 
-pub use attention::{AttnSpan, KvDtype, KvSlab, KvSource};
+pub use attention::{AttnSpan, KvDtype, KvLayout, KvSlab, KvSource};
 pub use compiled::CompressedWeights;
 pub use config::{by_name, family, quick_family, ModelConfig};
 pub use transformer::{
@@ -63,7 +63,8 @@ pub fn compress_model_jsq(
             Some(x) => LayerCalib::from_activations(x.clone()),
             None => LayerCalib::uniform(d_in),
         };
-        let (wc, mask) = crate::compress::jsq::compress(w.expect(&name), &calib.x_l2, bits, pattern);
+        let (wc, mask) =
+            crate::compress::jsq::compress(w.expect(&name), &calib.x_l2, bits, pattern);
         let e_final = wc.sub(w.expect(&name)).fro_norm_sq();
         let layer = CompressedLayer {
             wc: wc.clone(),

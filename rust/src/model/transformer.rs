@@ -27,7 +27,11 @@
 //! K/V cache itself ([`KvCachePool`]) has a pluggable storage dtype
 //! ([`KvDtype`]): f32 (bit-exact), or int8 / FP8-E4M3 quantized rows at
 //! ~4× fewer cache bytes (quantized on write, dequantized block-wise
-//! inside the attention kernel).
+//! inside the attention kernel). Each slot is a **ring buffer** over
+//! `max_seq` physical rows with a logical per-slot base: generation past
+//! the context length overwrites the oldest retained position and rebases
+//! the new token's position embedding to the window frame, keeping deep
+//! decode O(1) per token (see the `KvCachePool` docs).
 //!
 //! Linear layers dispatch through [`Linears`], which can route matmuls to
 //! packed compressed kernels ([`crate::kernels::LinearOp`]) instead of
@@ -35,7 +39,7 @@
 
 use std::collections::HashMap;
 
-use super::attention::{attend, AttnSpan, KvDtype, KvSlab, KvSource};
+use super::attention::{attend, AttnSpan, KvDtype, KvLayout, KvSlab, KvSource};
 use super::compiled::CompressedWeights;
 use super::config::ModelConfig;
 use super::weights::Weights;
@@ -139,13 +143,35 @@ impl Linears<'_> {
 /// K/V rows and attends over each slot's own prefix, and retiring a
 /// sequence returns its slot to the free-list ([`KvCachePool::free`]) for
 /// the next request — no lockstep batches, no left-padding.
+///
+/// ## Ring slots: logical vs physical positions
+///
+/// Slot lengths are **logical** — [`KvCachePool::len`] keeps growing past
+/// `max_seq` as a sequence decodes. The stripes only hold the most recent
+/// `window(slot) = min(len, max_seq)` positions: logical position `L`
+/// lives at physical row `L % max_seq` (the default [`KvLayout::Ring`]),
+/// so a write past the context length overwrites the oldest retained row
+/// in O(1) and `base(slot) = len − window` is the logical index of the
+/// oldest survivor. Deep decode therefore costs one quantized KV write
+/// plus one attention pass over the (two-arc) window, never a re-prefill —
+/// per-token latency is flat in generation depth. The [`KvLayout::Shift`]
+/// layout implements the same window by memmoving rows (O(window) per
+/// token) and is kept as the legacy sliding-window *cache* reference:
+/// both layouts produce bit-identical attention inputs, which the
+/// overflow greedy-equivalence tests assert. (The old overflow behavior —
+/// re-prefilling the window every token — recomputed cached rows with
+/// shifted positions; its post-overflow outputs are intentionally NOT
+/// preserved, only its window contents. Pre-overflow decoding is
+/// unchanged and still matches the full forward exactly.)
 pub struct KvCachePool {
     k: Vec<KvSlab>,
     v: Vec<KvSlab>,
     n_slots: usize,
     max_seq: usize,
     dtype: KvDtype,
-    /// Cached positions per slot.
+    layout: KvLayout,
+    /// Logical positions appended per slot (may exceed `max_seq`; only the
+    /// trailing `min(len, max_seq)` are retained in the stripes).
     lens: Vec<usize>,
     /// Slot occupancy (true between `alloc` and `free`).
     live: Vec<bool>,
@@ -159,8 +185,14 @@ impl KvCachePool {
         Self::with_dtype(cfg, slots, KvDtype::F32)
     }
 
-    /// Empty pool storing cached K/V in `dtype`.
+    /// Empty ring pool storing cached K/V in `dtype`.
     pub fn with_dtype(cfg: &ModelConfig, slots: usize, dtype: KvDtype) -> Self {
+        Self::with_layout(cfg, slots, dtype, KvLayout::Ring)
+    }
+
+    /// Empty pool with an explicit overflow layout ([`KvLayout::Shift`] is
+    /// the slow reference; serving uses the default ring).
+    pub fn with_layout(cfg: &ModelConfig, slots: usize, dtype: KvDtype, layout: KvLayout) -> Self {
         assert!(slots > 0, "KvCachePool needs at least one slot");
         let mk = || -> Vec<KvSlab> {
             (0..cfg.n_layers)
@@ -173,6 +205,7 @@ impl KvCachePool {
             n_slots: slots,
             max_seq: cfg.max_seq,
             dtype,
+            layout,
             lens: vec![0; slots],
             live: vec![false; slots],
             free_list: (0..slots).rev().collect(),
@@ -187,6 +220,11 @@ impl KvCachePool {
     /// Storage dtype of the cached K/V rows.
     pub fn dtype(&self) -> KvDtype {
         self.dtype
+    }
+
+    /// Overflow layout of the slot stripes (ring, or the shift reference).
+    pub fn layout(&self) -> KvLayout {
+        self.layout
     }
 
     /// Total bytes of K/V cache storage across all layers (codes + scales)
@@ -227,9 +265,22 @@ impl KvCachePool {
         self.free_list.push(slot);
     }
 
-    /// Cached positions in `slot`.
+    /// Logical positions appended to `slot` so far (keeps growing past
+    /// `max_seq`; the stripes retain the trailing [`KvCachePool::window`]).
     pub fn len(&self, slot: usize) -> usize {
         self.lens[slot]
+    }
+
+    /// Retained window size of `slot`: `min(len, max_seq)`.
+    pub fn window(&self, slot: usize) -> usize {
+        self.lens[slot].min(self.max_seq)
+    }
+
+    /// Logical position of the oldest retained row of `slot` (`0` until
+    /// the ring wraps) — the per-slot base that position embeddings are
+    /// rebased against.
+    pub fn base(&self, slot: usize) -> usize {
+        self.lens[slot] - self.window(slot)
     }
 
     /// Whether `slot` is currently allocated.
@@ -238,16 +289,31 @@ impl KvCachePool {
     }
 
     /// Forget `slot`'s cached positions without freeing it (used by the
-    /// context-overflow sliding-window re-prefill).
+    /// legacy re-prefill baseline in `benches/decode.rs`; serving never
+    /// resets — overflow wraps the ring instead).
     pub fn reset_slot(&mut self, slot: usize) {
         self.lens[slot] = 0;
     }
 
+    /// Attention geometry for appending a `span`-token entry to `slot`:
+    /// `(p0, start)` where `p0` is the number of retained window positions
+    /// preceding the span's first query and `start` is the physical row of
+    /// the window's oldest position after the span is written.
+    pub(crate) fn span_geometry(&self, slot: usize, span: usize) -> (usize, usize) {
+        let w = (self.lens[slot] + span).min(self.max_seq);
+        let start = match self.layout {
+            KvLayout::Shift => 0,
+            KvLayout::Ring => (self.lens[slot] + span - w) % self.max_seq,
+        };
+        (w - span, start)
+    }
+
     /// Write (and, for quantized dtypes, encode) one freshly computed K/V
-    /// row for layer `blk` at `pos` within `slot`'s stripes.
+    /// row for layer `blk` at *logical* position `pos` of `slot` — wraps
+    /// (or shifts) past `max_seq` per the pool layout.
     fn write(&mut self, blk: usize, slot: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
-        self.k[blk].write(slot, pos, krow);
-        self.v[blk].write(slot, pos, vrow);
+        self.k[blk].write_logical(slot, pos, krow, self.layout);
+        self.v[blk].write_logical(slot, pos, vrow, self.layout);
     }
 }
 
@@ -267,10 +333,16 @@ impl KvCache {
         Self::with_dtype(cfg, batch, KvDtype::F32)
     }
 
-    /// Empty cache storing K/V in `dtype`.
+    /// Empty ring cache storing K/V in `dtype`.
     pub fn with_dtype(cfg: &ModelConfig, batch: usize, dtype: KvDtype) -> Self {
+        Self::with_layout(cfg, batch, dtype, KvLayout::Ring)
+    }
+
+    /// Empty cache with an explicit overflow layout (see
+    /// [`KvCachePool::with_layout`]).
+    pub fn with_layout(cfg: &ModelConfig, batch: usize, dtype: KvDtype, layout: KvLayout) -> Self {
         assert!(batch > 0, "KvCache needs at least one sequence");
-        let mut pool = KvCachePool::with_dtype(cfg, batch, dtype);
+        let mut pool = KvCachePool::with_layout(cfg, batch, dtype, layout);
         for _ in 0..batch {
             pool.alloc().unwrap();
         }
@@ -282,7 +354,8 @@ impl KvCache {
         &self.pool
     }
 
-    /// Positions cached so far.
+    /// Logical positions appended so far (may exceed `capacity()` once the
+    /// ring has wrapped; the stripes retain the trailing window).
     pub fn len(&self) -> usize {
         self.pool.len(0)
     }
@@ -313,13 +386,30 @@ impl KvCache {
 /// hot path for continuous batching.
 ///
 /// `seqs` is a list of `(slot, new_tokens)` entries: each sequence feeds
-/// its own span of new tokens (any length ≥ 1), occupying absolute
+/// its own span of new tokens (any length ≥ 1), occupying logical
 /// positions `pool.len(slot) .. pool.len(slot) + new_tokens.len()` within
 /// its slot. Mixed spans are fine — a long prompt prefill can share one
 /// batched pass with single-token decode steps of other sequences, which
 /// keeps the compressed kernels saturated across request churn. Returns
 /// logits for the new positions only, rows packed in `seqs` order (entry
 /// `i`'s rows start at the sum of earlier entries' span lengths).
+///
+/// Logical positions may exceed `max_seq`: the write wraps the slot's ring
+/// (overwriting the oldest retained position) and the token's learned
+/// position embedding is **rebased** to its window-relative index at write
+/// time, `L − base = min(L, max_seq − 1)` — every post-overflow token
+/// embeds at the window's last position, while retained rows keep their
+/// write-time embeddings (cached K/V is never recomputed, so causal order
+/// comes from the attention mask, not from re-embedding). This is the
+/// standard cached sliding-window trade-off: post-overflow logits
+/// *differ* from the deleted re-prefill path, which re-embedded the whole
+/// window each token at O(window) cost — the semantics are pinned instead
+/// by the bit-identical [`KvLayout::Shift`] reference (see the
+/// [`KvCachePool`] docs). Context overflow therefore costs one KV write
+/// plus one window pass, never a re-prefill. Only single-token spans may
+/// wrap (a longer span would overwrite history its own earlier rows still
+/// attend to); prompt prefills always fit because callers window prompts
+/// to `max_seq`.
 ///
 /// Every per-sequence computation (embedding offsets, causal attention over
 /// the slot's own prefix, LN/MLP rows) is independent of the other entries,
@@ -344,8 +434,9 @@ pub fn forward_slots(
         assert!(!toks.is_empty(), "empty token span for slot {slot}");
         let p0 = pool.lens[*slot];
         assert!(
-            p0 + toks.len() <= cfg.max_seq,
-            "kv cache overflow: {p0} cached + {} new > max_seq {} (slot {slot})",
+            p0 + toks.len() <= cfg.max_seq || toks.len() == 1,
+            "kv cache overflow: {p0} cached + {} new > max_seq {} (slot {slot}); \
+             only single-token spans may wrap the ring",
             toks.len(),
             cfg.max_seq
         );
@@ -357,15 +448,15 @@ pub fn forward_slots(
     let spans: Vec<AttnSpan> = seqs
         .iter()
         .zip(bases.iter())
-        .map(|(&(slot, toks), &base)| AttnSpan {
-            q_base: base,
-            span: toks.len(),
-            p0: pool.lens[slot],
-            kv: slot,
+        .map(|(&(slot, toks), &base)| {
+            let (p0, start) = pool.span_geometry(slot, toks.len());
+            AttnSpan { q_base: base, span: toks.len(), p0, kv: slot, start }
         })
         .collect();
 
-    // Embedding lookup + learned positions (offset by each slot's prefix).
+    // Embedding lookup + learned positions, rebased to the slot window:
+    // logical position L embeds at min(L, max_seq − 1), so a wrapped
+    // token always sits at the window's last position.
     let tok_emb = w.expect("embed.tok");
     let pos_emb = w.expect("embed.pos");
     let mut x = Matrix::zeros(n, d);
@@ -374,9 +465,10 @@ pub fn forward_slots(
         for (s, &tk) in toks.iter().enumerate() {
             let t = tk as usize;
             assert!(t < cfg.vocab, "token {t} out of vocab");
+            let pos = (p0 + s).min(cfg.max_seq - 1);
             let row = x.row_mut(bases[i] + s);
             for j in 0..d {
-                row[j] = tok_emb.get(t, j) + pos_emb.get(p0 + s, j);
+                row[j] = tok_emb.get(t, j) + pos_emb.get(pos, j);
             }
         }
     }
@@ -391,7 +483,10 @@ pub fn forward_slots(
         let k = linears.apply(w, &p("attn.wk"), &h);
         let v = linears.apply(w, &p("attn.wv"), &h);
         for (i, &(slot, toks)) in seqs.iter().enumerate() {
-            let p0 = spans[i].p0;
+            // Write at *logical* positions — the pool wraps them into the
+            // ring (slot lengths only advance after the layer loop, so
+            // every layer writes the same positions).
+            let p0 = pool.lens[slot];
             for s in 0..toks.len() {
                 pool.write(blk, slot, p0 + s, k.row(bases[i] + s), v.row(bases[i] + s));
             }
@@ -439,12 +534,13 @@ pub fn forward_slots(
 /// return logits `[(batch·s_new) × vocab]` for the new positions only.
 ///
 /// `tokens` is batch-major (`tokens[b*s_new + s]`); the new tokens occupy
-/// absolute positions `cache.len() .. cache.len()+s_new`. Calling this with
+/// logical positions `cache.len() .. cache.len()+s_new`. Calling this with
 /// a full prompt on an empty cache is the prefill; calling it with one
-/// token per sequence afterwards is a decode step. The per-step logits
-/// reproduce the full [`forward`] logits at the same positions within fp
-/// tolerance (exactly, for the dense path). Equal-length wrapper over
-/// [`forward_slots`].
+/// token per sequence afterwards is a decode step — including past
+/// `capacity()`, where each step wraps the ring instead of overflowing.
+/// The per-step logits reproduce the full [`forward`] logits at the same
+/// positions within fp tolerance (exactly, for the dense path).
+/// Equal-length wrapper over [`forward_slots`].
 pub fn forward_cached(
     cfg: &ModelConfig,
     w: &Weights,
@@ -522,7 +618,13 @@ pub fn forward_iq(
     let scale = 1.0 / (dh as f32).sqrt();
     // Every sample attends causally over its own fresh K/V rows.
     let spans: Vec<AttnSpan> = (0..batch.batch)
-        .map(|b| AttnSpan { q_base: b * batch.seq, span: batch.seq, p0: 0, kv: b * batch.seq })
+        .map(|b| AttnSpan {
+            q_base: b * batch.seq,
+            span: batch.seq,
+            p0: 0,
+            kv: b * batch.seq,
+            start: 0,
+        })
         .collect();
     for blk in 0..cfg.n_layers {
         let p = |s: &str| format!("block{blk}.{s}");
@@ -963,6 +1065,90 @@ mod tests {
     #[test]
     fn fp8_kv_decode_tracks_full_forward() {
         assert_quantized_kv_close(KvDtype::Fp8E4M3, 0.3);
+    }
+
+    /// A small config whose ring wraps cheaply in tests.
+    fn ring_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "ring-test".to_string(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff_ratio: 2,
+            vocab: 96,
+            max_seq: 8,
+            stands_for: "ring test".to_string(),
+        }
+    }
+
+    /// Decoding past the context length through the ring must produce the
+    /// exact same logits as the shift-buffer reference at EVERY step, for
+    /// every KV dtype: the two layouts hold byte-identical windows, so this
+    /// pins the wrap addressing (two-arc reads, scales wrapping with rows)
+    /// and the position rebasing end to end.
+    #[test]
+    fn ring_decode_matches_shift_reference_past_wrap() {
+        let cfg = ring_cfg();
+        let mut rng = Pcg32::seeded(21);
+        let w = init(&cfg, &mut rng);
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let mut ring = KvCache::with_layout(&cfg, 1, dtype, KvLayout::Ring);
+            let mut shift = KvCache::with_layout(&cfg, 1, dtype, KvLayout::Shift);
+            // Prefill 3 tokens, then decode to 2.5× the context length.
+            let prompt: Vec<u32> = (0..3).map(|_| rng.below(cfg.vocab as u32)).collect();
+            let a = forward_cached(&cfg, &w, &prompt, &mut ring, &Linears::Dense);
+            let b = forward_cached(&cfg, &w, &prompt, &mut shift, &Linears::Dense);
+            assert_eq!(a, b, "{} prefill", dtype.name());
+            for step in 0..2 * cfg.max_seq + 4 {
+                let tok = [rng.below(cfg.vocab as u32)];
+                let a = forward_cached(&cfg, &w, &tok, &mut ring, &Linears::Dense);
+                let b = forward_cached(&cfg, &w, &tok, &mut shift, &Linears::Dense);
+                assert_eq!(a, b, "{} step {step}", dtype.name());
+            }
+            assert_eq!(ring.len(), shift.len());
+            assert!(ring.len() > 2 * cfg.max_seq, "the ring must have wrapped twice");
+        }
+    }
+
+    /// Logical length, retained window and base across a wrap; a freed and
+    /// reallocated slot starts logically empty again.
+    #[test]
+    fn pool_window_and_base_track_the_ring() {
+        let cfg = ring_cfg();
+        let w = {
+            let mut rng = Pcg32::seeded(22);
+            init(&cfg, &mut rng)
+        };
+        let mut pool = KvCachePool::new(&cfg, 1);
+        let slot = pool.alloc().unwrap();
+        let prompt: Vec<u32> = (0..cfg.max_seq as u32).collect();
+        forward_slots(&cfg, &w, &[(slot, &prompt[..])], &mut pool, &Linears::Dense);
+        assert_eq!((pool.len(slot), pool.window(slot), pool.base(slot)), (8, 8, 0));
+        for i in 0..5u32 {
+            forward_slots(&cfg, &w, &[(slot, &[i][..])], &mut pool, &Linears::Dense);
+        }
+        // 13 logical positions, 8 retained, base 5.
+        assert_eq!((pool.len(slot), pool.window(slot), pool.base(slot)), (13, 8, 5));
+        pool.free(slot);
+        let slot2 = pool.alloc().unwrap();
+        assert_eq!(slot2, slot);
+        assert_eq!((pool.len(slot2), pool.window(slot2), pool.base(slot2)), (0, 0, 0));
+    }
+
+    /// Multi-token spans may not wrap (they would overwrite history their
+    /// own earlier rows attend to) — single-token spans do instead.
+    #[test]
+    #[should_panic(expected = "only single-token spans may wrap")]
+    fn multi_token_span_cannot_wrap() {
+        let cfg = ring_cfg();
+        let mut rng = Pcg32::seeded(23);
+        let w = init(&cfg, &mut rng);
+        let mut pool = KvCachePool::new(&cfg, 1);
+        let slot = pool.alloc().unwrap();
+        let prompt: Vec<u32> = (0..cfg.max_seq as u32 - 1).collect();
+        forward_slots(&cfg, &w, &[(slot, &prompt[..])], &mut pool, &Linears::Dense);
+        // 7 cached + 2 new > 8 and span != 1 → refused.
+        forward_slots(&cfg, &w, &[(slot, &[1u32, 2][..])], &mut pool, &Linears::Dense);
     }
 
     #[test]

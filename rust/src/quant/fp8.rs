@@ -170,7 +170,10 @@ mod tests {
             let got = e4m3_from_bits(e4m3_to_bits(v));
             assert_eq!(got, want, "v={v}");
         }
-        for &v in &[0.0f32, -0.0, 1.0, -1.0, 448.0, -448.0, 0.015625, 0.001953125, 1e-4, -1e-4, 1e6] {
+        let specials = [
+            0.0f32, -0.0, 1.0, -1.0, 448.0, -448.0, 0.015625, 0.001953125, 1e-4, -1e-4, 1e6,
+        ];
+        for &v in &specials {
             assert_eq!(e4m3_from_bits(e4m3_to_bits(v)), e4m3(v), "v={v}");
         }
         // Subnormal grid point: 3/8 · 2^-6.

@@ -23,7 +23,11 @@ use std::sync::Arc;
 
 /// Serve until the listener errors. Binds to `addr` ("127.0.0.1:0" picks a
 /// free port); returns the bound address via callback before blocking.
-pub fn serve(router: Arc<Router>, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+pub fn serve(
+    router: Arc<Router>,
+    addr: &str,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     on_bound(listener.local_addr()?);
     for stream in listener.incoming() {

@@ -6,6 +6,11 @@
 //! every in-flight sequence one token in a single batched forward
 //! ([`forward_slots`]) regardless of how long each has been running — the
 //! primitives the continuous scheduler (`server::scheduler`) drives.
+//! Context overflow is handled by the pool itself: each slot is a ring
+//! buffer with position rebasing (`model::KvCachePool`), so a sequence
+//! deeper than `max_seq` still costs one KV write + one window attention
+//! pass per token — `decode_step` is depth-independent, with no
+//! re-prefill cliff at the context boundary.
 //! [`Engine::generate_batch`] is the run-to-completion wrapper over the
 //! same primitives: because each sequence owns a slot, prompts are never
 //! left-padded and batched greedy output is token-for-token identical to
@@ -18,8 +23,8 @@
 //! decode cache bytes ~4× on top of the weight compression.
 
 use crate::model::{
-    forward_cached, forward_slots, CompressedWeights, KvCache, KvCachePool, KvDtype, Linears,
-    ModelConfig, Overrides, Weights,
+    forward_cached, forward_slots, CompressedWeights, KvCache, KvCachePool, KvDtype, KvLayout,
+    Linears, ModelConfig, Overrides, Weights,
 };
 use crate::tensor::Matrix;
 use std::sync::Arc;
@@ -84,6 +89,7 @@ pub struct Engine {
     overrides: Option<Arc<Overrides>>,
     kernels: Option<Arc<CompressedWeights>>,
     kv_dtype: KvDtype,
+    kv_layout: KvLayout,
 }
 
 impl Engine {
@@ -100,6 +106,7 @@ impl Engine {
             overrides,
             kernels: None,
             kv_dtype: KvDtype::F32,
+            kv_layout: KvLayout::Ring,
         }
     }
 
@@ -118,6 +125,7 @@ impl Engine {
             overrides: None,
             kernels: Some(kernels),
             kv_dtype: KvDtype::F32,
+            kv_layout: KvLayout::Ring,
         }
     }
 
@@ -133,6 +141,20 @@ impl Engine {
     /// The KV cache storage dtype this engine's private pools use.
     pub fn kv_dtype(&self) -> KvDtype {
         self.kv_dtype
+    }
+
+    /// Use `layout` for every pool this engine creates. Serving always
+    /// wants the default O(1) ring; [`KvLayout::Shift`] is the slow
+    /// sliding-window reference the overflow-equivalence tests and the
+    /// decode bench compare against.
+    pub fn with_kv_layout(mut self, layout: KvLayout) -> Self {
+        self.kv_layout = layout;
+        self
+    }
+
+    /// The KV cache overflow layout this engine's pools use.
+    pub fn kv_layout(&self) -> KvLayout {
+        self.kv_layout
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -209,41 +231,35 @@ impl Engine {
 
     /// One continuous decode step: feed every non-done sequence its latest
     /// token in a single batched forward — sequences at any cache depth mix
-    /// freely — and append each sequence's next greedy token. A sequence
-    /// whose slot has hit the context length gets its cache dropped and its
-    /// sliding window re-prefilled inside the same batched pass (the legacy
-    /// full-reforward outputs, now per slot instead of per batch). Marks
-    /// sequences `done` when they reach `max_new` or their stop token;
-    /// returns the number of tokens generated.
+    /// freely — and append each sequence's next greedy token. Depth is
+    /// immaterial: a sequence past the context length wraps its slot's
+    /// ring (one overwrite of the oldest cached position, position
+    /// embedding rebased to the window frame) inside the same batched
+    /// pass, so per-token cost stays flat instead of paying a sliding-
+    /// window re-prefill every step. Marks sequences `done` when they
+    /// reach `max_new` or their stop token; returns the number of tokens
+    /// generated.
     pub fn decode_step(&self, states: &mut [&mut SeqState], pool: &mut KvCachePool) -> usize {
         // Token spans borrow from each state's history (a one-element slice
-        // of the latest token, or the sliding window on overflow) — the
-        // per-step hot path allocates no token buffers.
+        // of the latest token) — the per-step hot path allocates no token
+        // buffers.
         let mut entries: Vec<(usize, &[u32])> = Vec::new();
         let mut who: Vec<usize> = Vec::new();
         for (i, st) in states.iter().enumerate() {
             if st.done {
                 continue;
             }
-            if pool.len(st.slot) == self.cfg.max_seq {
-                // Context overflow: re-prefill this slot's sliding window.
-                pool.reset_slot(st.slot);
-                entries.push((st.slot, &st.seq[st.seq.len() - self.cfg.max_seq..]));
-            } else {
-                entries.push((st.slot, std::slice::from_ref(st.seq.last().unwrap())));
-            }
+            entries.push((st.slot, std::slice::from_ref(st.seq.last().unwrap())));
             who.push(i);
         }
         if entries.is_empty() {
             return 0;
         }
         let logits = forward_slots(&self.cfg, &self.weights, &entries, pool, &self.linears());
-        let span_lens: Vec<usize> = entries.iter().map(|e| e.1.len()).collect();
         drop(entries); // release the immutable borrow of `states`
-        let mut row = 0usize;
-        for (len, &i) in span_lens.iter().zip(who.iter()) {
-            row += len;
-            states[i].push_token(argmax(logits.row(row - 1)) as u32);
+        // Every span is one token, so entry j's logits are row j.
+        for (row, &i) in who.iter().enumerate() {
+            states[i].push_token(argmax(logits.row(row)) as u32);
         }
         who.len()
     }
@@ -259,7 +275,8 @@ impl Engine {
         if reqs.is_empty() {
             return vec![];
         }
-        let mut pool = KvCachePool::with_dtype(&self.cfg, reqs.len(), self.kv_dtype);
+        let mut pool =
+            KvCachePool::with_layout(&self.cfg, reqs.len(), self.kv_dtype, self.kv_layout);
         let mut states = self.prefill_batch(reqs, &mut pool);
         loop {
             let mut active: Vec<&mut SeqState> =
@@ -283,7 +300,7 @@ impl Engine {
         if seq == 0 {
             return Matrix::zeros(0, self.cfg.vocab);
         }
-        let mut cache = KvCache::with_dtype(&self.cfg, 1, self.kv_dtype);
+        let mut cache = KvCache::with_layout(&self.cfg, 1, self.kv_dtype, self.kv_layout);
         forward_cached(
             &self.cfg,
             &self.weights,
@@ -363,7 +380,8 @@ mod tests {
         assert_eq!(out[1].tokens.len(), 6);
         // The shorter request's tokens are a prefix of what it would have
         // produced alone.
-        let solo = e.generate_batch(&[GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 6, stop: None }]);
+        let req = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 6, stop: None };
+        let solo = e.generate_batch(&[req]);
         assert_eq!(solo[0].tokens[..2], out[0].tokens[..]);
     }
 
@@ -372,8 +390,8 @@ mod tests {
         let e = engine();
         let prompt = vec![5u32, 6, 7, 11];
         let want = legacy_generate(&e, &prompt, 6);
-        let got =
-            e.generate_batch(&[GenRequest { id: 1, prompt: prompt.clone(), max_new: 6, stop: None }]);
+        let req = GenRequest { id: 1, prompt: prompt.clone(), max_new: 6, stop: None };
+        let got = e.generate_batch(&[req]);
         assert_eq!(got[0].tokens, want);
     }
 
@@ -393,16 +411,26 @@ mod tests {
 
     #[test]
     fn long_generation_survives_context_overflow() {
-        // Generate past max_seq: the sliding-window re-prefill must keep
-        // going AND reproduce the legacy full-reforward outputs token for
-        // token across the overflow boundary.
+        // Generate to 2× max_seq and beyond: the ring must keep decoding
+        // (no overflow panic, no re-prefill), agree with the legacy
+        // full-reforward reference for every token produced before the
+        // ring first wraps, and reproduce the shift-buffer sliding-window
+        // reference token for token across the whole run.
         let e = engine();
         let max_seq = e.config().max_seq;
         let prompt = vec![3u32, 4, 5];
-        let max_new = max_seq + 5;
-        let out = e.generate_batch(&[GenRequest { id: 1, prompt: prompt.clone(), max_new, stop: None }]);
+        let max_new = 2 * max_seq + 5;
+        let req = GenRequest { id: 1, prompt: prompt.clone(), max_new, stop: None };
+        let out = e.generate_batch(std::slice::from_ref(&req));
         assert_eq!(out[0].tokens.len(), max_new);
-        assert_eq!(out[0].tokens, legacy_generate(&e, &prompt, max_new));
+        // The wrap write first happens on the step that caches logical
+        // position max_seq, i.e. after max_seq − prompt + 1 tokens.
+        let boundary = max_seq - prompt.len() + 1;
+        let legacy = legacy_generate(&e, &prompt, boundary);
+        assert_eq!(out[0].tokens[..boundary], legacy[..], "pre-wrap prefix diverged from legacy");
+        let shift = engine().with_kv_layout(KvLayout::Shift);
+        let ref_out = shift.generate_batch(&[req]);
+        assert_eq!(out[0].tokens, ref_out[0].tokens, "ring diverged from shift reference");
     }
 
     #[test]
@@ -427,7 +455,8 @@ mod tests {
         let score_kn = e_kn.score(&[5, 6, 7, 8]);
         assert!(score_kn.rel_err(&score_ov) < 1e-4, "err {}", score_kn.rel_err(&score_ov));
         // And the kernel engine generates well-formed batches.
-        let out = e_kn.generate_batch(&[GenRequest { id: 1, prompt: vec![5, 6], max_new: 4, stop: None }]);
+        let req = GenRequest { id: 1, prompt: vec![5, 6], max_new: 4, stop: None };
+        let out = e_kn.generate_batch(&[req]);
         assert_eq!(out[0].tokens.len(), 4);
     }
 
@@ -504,12 +533,7 @@ mod tests {
         let s_f = e_f32.score(&prompt);
         let s_8 = e_fp8.score(&prompt);
         assert!(s_8.rel_err(&s_f) < 0.3, "fp8 score err {}", s_8.rel_err(&s_f));
-        let out = e_fp8.generate_batch(&[GenRequest {
-            id: 1,
-            prompt,
-            max_new: 4,
-            stop: None,
-        }]);
+        let out = e_fp8.generate_batch(&[GenRequest { id: 1, prompt, max_new: 4, stop: None }]);
         assert_eq!(out[0].tokens.len(), 4);
         assert!(out[0].tokens.iter().all(|&t| (t as usize) < 512));
     }
@@ -554,20 +578,12 @@ mod tests {
         let e = engine();
         // Discover what the model generates unconstrained, then stop at the
         // second token.
-        let free = e.generate_batch(&[GenRequest {
-            id: 1,
-            prompt: vec![5, 6, 7],
-            max_new: 6,
-            stop: None,
-        }]);
+        let free_req = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 6, stop: None };
+        let free = e.generate_batch(&[free_req]);
         assert_eq!(free[0].tokens.len(), 6);
         let stop = free[0].tokens[1];
-        let stopped = e.generate_batch(&[GenRequest {
-            id: 1,
-            prompt: vec![5, 6, 7],
-            max_new: 6,
-            stop: Some(stop),
-        }]);
+        let stop_req = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 6, stop: Some(stop) };
+        let stopped = e.generate_batch(&[stop_req]);
         // Output is the unconstrained prefix up to and including the FIRST
         // occurrence of the stop token (greedy decoding is deterministic,
         // so the prefix matches).

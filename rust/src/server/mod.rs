@@ -10,10 +10,16 @@
 //!   token in a single batched forward (`model::forward_slots`), and
 //!   `generate_batch` is the run-to-completion wrapper. Per-slot prefill
 //!   means no left-padding: batched greedy output is token-for-token
-//!   identical to solo output. Compressed engines dispatch every linear
-//!   matmul to packed kernels (`Engine::with_kernels` →
-//!   `kernels::LinearOp`) — the paper's Fig. 3/4 speedups at the
-//!   token-generation level.
+//!   identical to solo output. Cache slots are ring buffers with position
+//!   rebasing (logical position `L` lives at physical row `L % max_seq`,
+//!   its embedding at the window-relative index), so `decode_step` is
+//!   depth-independent — generation past the context length costs one KV
+//!   overwrite + one window attention pass, not a sliding-window
+//!   re-prefill (`benches/decode.rs` records the flat per-token curve;
+//!   the `model::KvLayout::Shift` reference pins the semantics).
+//!   Compressed engines dispatch every linear matmul to packed kernels
+//!   (`Engine::with_kernels` → `kernels::LinearOp`) — the paper's
+//!   Fig. 3/4 speedups at the token-generation level.
 //! * [`scheduler`] — the continuous-batching step-loop: admits queued
 //!   requests into the running decode batch as cache slots free up and
 //!   retires each sequence at its own `max_new`/stop token, so no request
@@ -40,7 +46,7 @@ pub mod metrics;
 pub mod router;
 pub mod scheduler;
 
-pub use crate::model::KvDtype;
+pub use crate::model::{KvDtype, KvLayout};
 pub use batcher::{BatchPolicy, Batcher, Pending};
 pub use engine::{Engine, GenRequest, GenResult, SeqState};
 pub use metrics::Metrics;

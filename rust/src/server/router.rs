@@ -216,12 +216,8 @@ mod tests {
         // output, token-identical to its (equally int8) solo reference.
         let out = r.generate("sim-125m", vec![3, 4, 5], 3).unwrap();
         assert_eq!(out.tokens.len(), 3);
-        let solo = engine().with_kv_dtype(KvDtype::Int8).generate_batch(&[GenRequest {
-            id: 1,
-            prompt: vec![3, 4, 5],
-            max_new: 3,
-            stop: None,
-        }]);
+        let req = GenRequest { id: 1, prompt: vec![3, 4, 5], max_new: 3, stop: None };
+        let solo = engine().with_kv_dtype(KvDtype::Int8).generate_batch(&[req]);
         assert_eq!(out.tokens, solo[0].tokens);
     }
 
@@ -281,7 +277,8 @@ mod tests {
         for i in 0..10u32 {
             let r2 = r.clone();
             handles.push(std::thread::spawn(move || {
-                let prompt: Vec<u32> = (0..1 + (i as usize % 4)).map(|j| 8 + i + j as u32).collect();
+                let plen = 1 + (i as usize % 4);
+                let prompt: Vec<u32> = (0..plen).map(|j| 8 + i + j as u32).collect();
                 let out = r2.generate("sim-125m", prompt, 1 + (i as usize % 3)).unwrap();
                 (i, out)
             }));

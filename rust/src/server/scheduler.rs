@@ -18,7 +18,17 @@
 //!   survive at scale.
 //! * **Retire** — a sequence leaves the moment it hits its own `max_new`
 //!   or stop token; its result is sent and its slot returns to the pool
-//!   free-list for the next admission.
+//!   free-list for the next admission. Slots are ring buffers
+//!   (`model::KvCachePool`), so a sequence that decoded past the context
+//!   length — wrapping its slot — retires and recycles exactly like a
+//!   short one: reallocation resets the slot's logical length, and the
+//!   next occupant's writes simply overwrite the wrapped stripes.
+//!
+//! Generation depth never stalls the loop: a sequence past `max_seq`
+//! costs the same one-token forward as any other (the ring overwrites its
+//! oldest cached position in place), so one very long generation no
+//! longer degrades every batchmate's step latency the way the old
+//! sliding-window re-prefill did.
 //!
 //! When nothing is in flight the loop parks untimed on the batcher condvar
 //! ([`Batcher::wait_pending`]) — an idle server burns no CPU. Greedy
@@ -87,10 +97,11 @@ impl Scheduler {
     /// (queued requests are still served after `close`; in-flight
     /// sequences always run to completion).
     pub fn run(&self, batcher: &Batcher, metrics: &Metrics) {
-        let mut pool = KvCachePool::with_dtype(
+        let mut pool = KvCachePool::with_layout(
             self.engine.config(),
             self.policy.max_slots,
             self.kv_dtype(),
+            self.engine.kv_layout(),
         );
         let mut flights: Vec<InFlight> = Vec::new();
         loop {
@@ -201,7 +212,12 @@ mod tests {
     /// each request's tokens, in request order. The serving pool inherits
     /// the engine's own KV dtype (policy `kv_dtype: None`), so solo
     /// `generate_batch` runs are the exact reference.
-    fn serve(engine: Arc<Engine>, reqs: &[GenRequest], max_slots: usize, stagger: &[u64]) -> Vec<Vec<u32>> {
+    fn serve(
+        engine: Arc<Engine>,
+        reqs: &[GenRequest],
+        max_slots: usize,
+        stagger: &[u64],
+    ) -> Vec<Vec<u32>> {
         let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
         let metrics = Arc::new(Metrics::new());
         let worker = {
@@ -288,6 +304,42 @@ mod tests {
                     .with_kv_dtype(dtype),
             );
             solo_equivalence(engine, 5);
+        }
+    }
+
+    /// Long generations wrap their ring slots inside the step-loop: a
+    /// request decoding past 2× the context length must still match its
+    /// solo reference exactly, batched with short requests, and its
+    /// wrapped slot must recycle cleanly for later admissions.
+    #[test]
+    fn wrapped_slots_decode_and_recycle_through_scheduler() {
+        let cfg = crate::model::ModelConfig {
+            name: "ring-sched".to_string(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff_ratio: 2,
+            vocab: 96,
+            max_seq: 8,
+            stands_for: "scheduler ring test".to_string(),
+        };
+        let mut rng = Pcg32::seeded(17);
+        let w = init(&cfg, &mut rng);
+        let engine = Arc::new(Engine::new("ring", cfg.clone(), Arc::new(w), None));
+        let long_new = 2 * cfg.max_seq + 3; // wraps the slot twice
+        let reqs = vec![
+            GenRequest { id: 0, prompt: vec![5, 6, 7], max_new: long_new, stop: None },
+            GenRequest { id: 1, prompt: vec![9], max_new: 2, stop: None },
+            GenRequest { id: 2, prompt: vec![11, 12], max_new: 3, stop: None },
+            GenRequest { id: 3, prompt: vec![13], max_new: long_new, stop: None },
+        ];
+        // 2 slots, 4 requests: the long sequences' wrapped slots must be
+        // reused by the later admissions.
+        let outs = serve(engine.clone(), &reqs, 2, &[]);
+        for (req, got) in reqs.iter().zip(outs.iter()) {
+            assert_eq!(got.len(), req.max_new, "request {} length", req.id);
+            let solo = engine.generate_batch(std::slice::from_ref(req));
+            assert_eq!(got, &solo[0].tokens, "request {} diverged", req.id);
         }
     }
 

@@ -124,7 +124,8 @@ impl Mask {
             while i < self.rows {
                 let end = (i + m).min(self.rows);
                 let kept: usize = (i..end).map(|r| self.get(r, j) as usize).sum();
-                let expect = if end - i == m { n } else { ((end - i) * n).div_ceil(m).min(end - i) };
+                let expect =
+                    if end - i == m { n } else { ((end - i) * n).div_ceil(m).min(end - i) };
                 if end - i == m && kept != expect {
                     return false;
                 }

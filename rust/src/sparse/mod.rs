@@ -106,7 +106,8 @@ mod tests {
     fn none_keeps_everything() {
         let mut rng = Pcg32::seeded(1);
         let w = Matrix::randn(8, 8, 1.0, &mut rng);
-        let (wp, mask) = prune(&w, PruneMethod::None, SparsityPattern::Unstructured(0.5), None, None);
+        let (wp, mask) =
+            prune(&w, PruneMethod::None, SparsityPattern::Unstructured(0.5), None, None);
         assert_eq!(wp, w);
         assert_eq!(mask.density(), 1.0);
     }

@@ -12,7 +12,9 @@ mod stats;
 
 pub use ops::{matmul, matmul_at_b, matmul_a_bt};
 pub(crate) use ops::{gemm, gemm_abt, num_threads, PAR_THRESHOLD};
-pub use stats::{histogram, histogram_with_bins, kurtosis, paper_bin_count, summary, Histogram, Summary};
+pub use stats::{
+    histogram, histogram_with_bins, kurtosis, paper_bin_count, summary, Histogram, Summary,
+};
 
 use crate::rng::Pcg32;
 

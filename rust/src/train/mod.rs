@@ -282,7 +282,12 @@ fn codes_matrix(layer: &crate::compress::CompressedLayer, r: usize, c: usize) ->
     layer.wc.map(|v| (v * levels / alpha).round())
 }
 
-fn adapter_part(layer: &crate::compress::CompressedLayer, left: bool, r: usize, c: usize) -> Matrix {
+fn adapter_part(
+    layer: &crate::compress::CompressedLayer,
+    left: bool,
+    r: usize,
+    c: usize,
+) -> Matrix {
     match &layer.adapters {
         Some(a) => {
             let m = if left { &a.l } else { &a.r };

@@ -50,6 +50,21 @@ pub fn log_level() -> u8 {
     std::env::var("SLIM_LOG").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
 }
 
+/// Where a bench artifact named `name` (e.g. `BENCH_decode.json`) should be
+/// written: `$BENCH_OUT_DIR/name` when the env var is set (the directory is
+/// created if needed — CI points it at its artifact staging dir), else
+/// `./name` so local runs keep writing next to the console table.
+pub fn bench_out_path(name: &str) -> std::path::PathBuf {
+    match std::env::var_os("BENCH_OUT_DIR") {
+        Some(dir) if !dir.is_empty() => {
+            let dir = std::path::PathBuf::from(dir);
+            let _ = std::fs::create_dir_all(&dir);
+            dir.join(name)
+        }
+        _ => std::path::PathBuf::from(name),
+    }
+}
+
 /// Log at info level.
 #[macro_export]
 macro_rules! info {
@@ -94,5 +109,15 @@ mod tests {
         let (v, s) = timed(|| 21 * 2);
         assert_eq!(v, 42);
         assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn bench_out_defaults_to_cwd_name() {
+        // Without BENCH_OUT_DIR the artifact lands next to the console
+        // table (the historical behavior). The env-var branch is exercised
+        // by CI itself.
+        if std::env::var_os("BENCH_OUT_DIR").is_none() {
+            assert_eq!(bench_out_path("BENCH_x.json"), std::path::PathBuf::from("BENCH_x.json"));
+        }
     }
 }

@@ -4,13 +4,16 @@
 
 use slim::compress::{compress_layer, CompressConfig, LayerCalib};
 use slim::lowrank::{naive, slim_lora, LoraMethod};
+use slim::model::{init, KvDtype, KvLayout, ModelConfig};
 use slim::quant::pack::{pack_int2, pack_int4, unpack_int2, unpack_int4};
 use slim::quant::{absmax, group_absmax, slim_quant, QuantMethod};
 use slim::rng::Pcg32;
+use slim::server::{Engine, GenRequest};
 use slim::sparse::mask::{mask_from_scores, SparsityPattern};
 use slim::sparse::PruneMethod;
 use slim::tensor::{histogram, Matrix};
 use slim::util::json::Json;
+use std::sync::Arc;
 
 fn rand_dims(rng: &mut Pcg32) -> (usize, usize) {
     (8 + 4 * rng.below_usize(24), 8 + rng.below_usize(96))
@@ -177,6 +180,51 @@ fn prop_pipeline_error_decomposition() {
         assert!(out.e_final <= raw * 1.05, "trial {trial}: {0} vs {raw}", out.e_final);
         assert!(out.mask.satisfies_nofm(2, 4));
         assert!(out.e_quant > 0.0 && out.e_sparse > 0.0);
+    }
+}
+
+#[test]
+fn prop_ring_decode_equals_sliding_window_reference() {
+    // Greedy equivalence across the context-overflow boundary: for random
+    // prompts and generation depths past 2× the context length, the O(1)
+    // ring-buffer KV cache must emit the exact token sequence of the
+    // legacy O(window)-per-token shift-buffer sliding window, for every
+    // KV storage dtype. The two layouts hold byte-identical windows, so
+    // any divergence means broken wrap addressing (rows or int8 scales)
+    // or broken position rebasing.
+    let cfg = ModelConfig {
+        name: "ring-prop".to_string(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff_ratio: 2,
+        vocab: 96,
+        max_seq: 10,
+        stands_for: "ring property test".to_string(),
+    };
+    for seed in [1u64, 2, 3] {
+        let mut rng = Pcg32::seeded(seed);
+        let weights = Arc::new(init(&cfg, &mut rng));
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let ring = Engine::new("ring", cfg.clone(), weights.clone(), None)
+                .with_kv_dtype(dtype);
+            let shift = Engine::new("shift", cfg.clone(), weights.clone(), None)
+                .with_kv_dtype(dtype)
+                .with_kv_layout(KvLayout::Shift);
+            let plen = 1 + rng.below_usize(cfg.max_seq - 1);
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.below(cfg.vocab as u32)).collect();
+            let max_new = 2 * cfg.max_seq + 1 + rng.below_usize(cfg.max_seq);
+            let req = GenRequest { id: 0, prompt, max_new, stop: None };
+            let out_ring = ring.generate_batch(std::slice::from_ref(&req));
+            let out_shift = shift.generate_batch(&[req]);
+            assert_eq!(out_ring[0].tokens.len(), max_new);
+            assert_eq!(
+                out_ring[0].tokens,
+                out_shift[0].tokens,
+                "seed {seed} dtype {} diverged across the overflow boundary",
+                dtype.name()
+            );
+        }
     }
 }
 

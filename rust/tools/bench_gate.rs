@@ -1,0 +1,184 @@
+//! Bench-regression gate for CI.
+//!
+//! Compares the bench summaries a CI run just produced (`BENCH_decode.json`
+//! / `BENCH_serve.json`, written by `cargo bench --bench decode|serve`)
+//! against the committed snapshots in `BENCH_baseline/`, and exits non-zero
+//! if a gated throughput metric regressed more than the allowed fraction
+//! (default 20%, override via `BENCH_GATE_MAX_REGRESSION`, e.g. `0.3`).
+//!
+//! Gated metrics (the two headline serving numbers):
+//!
+//! * int4-2:4 cached-decode tokens/sec (`BENCH_decode.json`,
+//!   `results.int4-2:4-cached.decode_tok_per_s`);
+//! * continuous-batching serve throughput on the int4-2:4 engine
+//!   (`BENCH_serve.json`, `results.int4-2:4-continuous.tok_per_s`).
+//!
+//! Informational metrics are printed alongside but never fail the gate
+//! (wall-clock noise on shared runners makes broad gating flaky; the two
+//! gated numbers are the ones the paper's serving claims rest on).
+//!
+//! A metric missing from the *current* run fails the gate (the bench broke
+//! or stopped recording it), and so does a baseline *file* that is missing
+//! or unparseable (a silently absent baseline would disable the gate
+//! without anyone noticing); only a metric missing from an otherwise
+//! loadable baseline document is skipped with a warning, so new metrics
+//! can land one commit before their baselines.
+//!
+//! Usage: `bench_gate [baseline_dir] [current_dir]`
+//! (defaults: `BENCH_baseline` and `.`; CI passes `$BENCH_OUT_DIR` as the
+//! current dir). Refresh baselines by re-running the benches with
+//! `BENCH_OUT_DIR=BENCH_baseline` on the reference machine and committing
+//! the result — see `BENCH_baseline/README.md`.
+
+use slim::util::json::Json;
+use std::path::Path;
+
+/// One metric to compare: (file, dotted JSON path, gated?).
+const METRICS: &[(&str, &[&str], bool)] = &[
+    ("BENCH_decode.json", &["results", "int4-2:4-cached", "decode_tok_per_s"], true),
+    ("BENCH_serve.json", &["results", "int4-2:4-continuous", "tok_per_s"], true),
+    ("BENCH_decode.json", &["results", "int4-cached", "decode_tok_per_s"], false),
+    ("BENCH_decode.json", &["results", "dense-cached", "decode_tok_per_s"], false),
+    ("BENCH_serve.json", &["results", "dense-continuous", "tok_per_s"], false),
+];
+
+/// Whether a higher-is-better metric passes the gate at `max_regression`
+/// (fractional drop allowed vs baseline).
+fn passes(baseline: f64, current: f64, max_regression: f64) -> bool {
+    current >= baseline * (1.0 - max_regression)
+}
+
+/// Fractional change vs baseline (positive = regression).
+fn regression(baseline: f64, current: f64) -> f64 {
+    if baseline <= 0.0 {
+        return 0.0;
+    }
+    1.0 - current / baseline
+}
+
+fn lookup(doc: &Json, path: &[&str]) -> Option<f64> {
+    let mut cur = doc;
+    for key in path {
+        cur = cur.get(key)?;
+    }
+    cur.as_f64()
+}
+
+fn load(dir: &Path, file: &str) -> Result<Json, String> {
+    let full = dir.join(file);
+    let text = std::fs::read_to_string(&full).map_err(|e| format!("{}: {e}", full.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", full.display()))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let baseline_dir = Path::new(args.get(1).map(String::as_str).unwrap_or("BENCH_baseline"));
+    let current_dir = Path::new(args.get(2).map(String::as_str).unwrap_or("."));
+    let max_regression: f64 = std::env::var("BENCH_GATE_MAX_REGRESSION")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.20);
+    if !baseline_dir.is_dir() {
+        eprintln!(
+            "bench gate: baseline dir {} does not exist — a missing baseline would \
+             silently disable the gate, refusing",
+            baseline_dir.display()
+        );
+        std::process::exit(1);
+    }
+
+    println!(
+        "bench gate: {} vs baseline {} (fail if a gated metric drops > {:.0}%)\n",
+        current_dir.display(),
+        baseline_dir.display(),
+        max_regression * 100.0
+    );
+    println!(
+        "{:<58} {:>10} {:>10} {:>8}  {}",
+        "metric", "baseline", "current", "change", "status"
+    );
+
+    let mut failed = false;
+    for &(file, path, gated) in METRICS {
+        let name = format!("{file}:{}", path.join("."));
+        let current_doc = load(current_dir, file);
+        let baseline_doc = load(baseline_dir, file);
+        // A gated metric requires both *files* to load; only a metric
+        // absent from a loadable baseline document is skippable.
+        if gated {
+            for (side, doc) in [("current", &current_doc), ("baseline", &baseline_doc)] {
+                if let Err(e) = doc {
+                    failed = true;
+                    println!("{name:<58} {side} side unreadable: {e}  FAIL");
+                }
+            }
+            if current_doc.is_err() || baseline_doc.is_err() {
+                continue;
+            }
+        }
+        let current = current_doc.ok().as_ref().and_then(|d| lookup(d, path));
+        let baseline = baseline_doc.ok().as_ref().and_then(|d| lookup(d, path));
+        match (baseline, current) {
+            (Some(b), Some(c)) => {
+                let ok = !gated || passes(b, c, max_regression);
+                if !ok {
+                    failed = true;
+                }
+                let status = match (gated, ok) {
+                    (true, true) => "ok",
+                    (true, false) => "FAIL",
+                    (false, _) => "info",
+                };
+                println!(
+                    "{name:<58} {b:>10.1} {c:>10.1} {:>+7.1}%  {status}",
+                    -regression(b, c) * 100.0
+                );
+            }
+            (None, Some(c)) => {
+                println!("{name:<58} {:>10} {c:>10.1} {:>8}  no baseline (skipped)", "-", "-");
+            }
+            (_, None) if gated => {
+                failed = true;
+                println!("{name:<58} {:>10} {:>10} {:>8}  MISSING (gated)", "-", "-", "-");
+            }
+            (_, None) => {
+                println!("{name:<58} {:>10} {:>10} {:>8}  missing (info)", "-", "-", "-");
+            }
+        }
+    }
+
+    if failed {
+        eprintln!(
+            "\nbench gate FAILED. If the regression is expected (e.g. a deliberate \
+             trade-off), refresh the snapshots: BENCH_OUT_DIR=BENCH_baseline \
+             cargo bench --bench decode -- --quick && BENCH_OUT_DIR=BENCH_baseline \
+             cargo bench --bench serve -- --quick, then commit BENCH_baseline/."
+        );
+        std::process::exit(1);
+    }
+    println!("\nbench gate passed.");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_decision() {
+        // 20% tolerance: 79 of 100 fails, 81 passes, improvements pass.
+        assert!(!passes(100.0, 79.0, 0.20));
+        assert!(passes(100.0, 81.0, 0.20));
+        assert!(passes(100.0, 250.0, 0.20));
+        assert!((regression(100.0, 80.0) - 0.2).abs() < 1e-12);
+        assert!(regression(0.0, 50.0) == 0.0);
+    }
+
+    #[test]
+    fn lookup_walks_nested_objects() {
+        let doc = Json::parse(r#"{"results":{"int4-2:4-cached":{"decode_tok_per_s":42.5}}}"#)
+            .unwrap();
+        let path = ["results", "int4-2:4-cached", "decode_tok_per_s"];
+        assert_eq!(lookup(&doc, &path), Some(42.5));
+        assert_eq!(lookup(&doc, &["results", "missing"]), None);
+    }
+}
