@@ -76,14 +76,14 @@ fn main() -> anyhow::Result<()> {
     // Invariant: continuous batching is solo-equivalent, whatever was
     // in flight alongside each request.
     for (prompt, max_new, toks) in &served {
-        let req = GenRequest { id: 0, prompt: prompt.clone(), max_new: *max_new, stop: None };
+        let req = GenRequest::new(0, prompt.clone(), *max_new);
         let solo = reference.generate_batch(&[req]);
         assert_eq!(toks, &solo[0].tokens, "continuous batching must match solo decode");
     }
     println!("[check] all {n_clients} outputs token-for-token equal to solo decode");
 
     // Early retirement: stop the generation at its own second token.
-    let probe_req = GenRequest { id: 0, prompt: vec![5, 6, 7], max_new: 8, stop: None };
+    let probe_req = GenRequest::new(0, vec![5, 6, 7], 8);
     let probe = reference.generate_batch(&[probe_req]);
     let stop = probe[0].tokens[1];
     let mut client = api::Client::connect(addr)?;

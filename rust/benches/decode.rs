@@ -321,7 +321,7 @@ fn ring_shift_token_match(cfg: &ModelConfig, w: &Weights, max_new: usize) -> boo
     let ring = Engine::new("bench-ring", cfg.clone(), weights.clone(), None);
     let shift =
         Engine::new("bench-shift", cfg.clone(), weights, None).with_kv_layout(KvLayout::Shift);
-    let req = GenRequest { id: 0, prompt: vec![5, 6, 7, 8], max_new, stop: None };
+    let req = GenRequest::new(0, vec![5, 6, 7, 8], max_new);
     let out_ring = ring.generate_batch(std::slice::from_ref(&req)).remove(0).tokens;
     let out_shift = shift.generate_batch(&[req]).remove(0).tokens;
     out_ring == out_shift
@@ -335,7 +335,7 @@ fn kv_token_match(cfg: &ModelConfig, w: &Weights, max_new: usize) -> (bool, i64)
     let e_f32 = Engine::with_kernels("bench-f32", cfg.clone(), weights.clone(), kernels.clone());
     let e_int8 = Engine::with_kernels("bench-int8", cfg.clone(), weights, kernels)
         .with_kv_dtype(KvDtype::Int8);
-    let req = GenRequest { id: 1, prompt: vec![5, 6, 7, 8, 9, 10, 11, 12], max_new, stop: None };
+    let req = GenRequest::new(1, vec![5, 6, 7, 8, 9, 10, 11, 12], max_new);
     let out_f = e_f32.generate_batch(std::slice::from_ref(&req)).remove(0).tokens;
     let out_8 = e_int8.generate_batch(&[req]).remove(0).tokens;
     match out_f.iter().zip(out_8.iter()).position(|(a, b)| a != b) {

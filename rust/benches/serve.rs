@@ -1,6 +1,8 @@
 //! Serving-throughput bench (cargo bench --bench serve [-- --quick]):
 //! Poisson arrivals of mixed-length requests against fixed-batch vs
-//! continuous scheduling, on dense f32 and kernel-backed int4-2:4 engines.
+//! continuous scheduling, on dense f32 and kernel-backed int4-2:4 engines —
+//! plus a head-of-line-blocking scenario measuring chunked vs monolithic
+//! prefill and the admission policies.
 //!
 //! Fixed batching (the pre-scheduler serving model) runs each batch to
 //! completion before admitting the next: a late arrival waits for the
@@ -13,15 +15,28 @@
 //! prefill/decode primitives, and TTFT is measured identically (submit →
 //! first token computed), so the comparison isolates scheduling.
 //!
+//! The head-of-line section replays one 4×-long prompt followed by a
+//! Poisson stream of short requests from three clients against the
+//! continuous scheduler in four configurations: monolithic prefill
+//! (`step_tokens = ∞`, the pre-chunking behavior), chunked prefill under
+//! a per-tick token budget, and chunked prefill under the SJF and
+//! fair-share admission policies. Per-request TTFT comes back in
+//! `GenResult::ttft_s`, so the short-request population's p50/p95 is
+//! separable from the long prompt's — the number chunking exists to
+//! protect (CI gates `hol-chunked.short_ttft_p95_ms` via
+//! `tools/bench_gate.rs`, lower-is-better).
+//!
 //! Writes a `BENCH_serve.json` summary (throughput tok/s, p50/p95 TTFT,
-//! p50 completion) next to the console table (or under `$BENCH_OUT_DIR`).
+//! p50 completion, head-of-line records) next to the console table (or
+//! under `$BENCH_OUT_DIR`).
 
 use slim::kernels::LinearOp;
 use slim::model::{init, CompressedWeights, KvCachePool, ModelConfig, Weights};
 use slim::quant::slim_quant;
 use slim::rng::Pcg32;
 use slim::server::{
-    BatchPolicy, Batcher, Engine, GenRequest, GenResult, Metrics, SchedPolicy, Scheduler, SeqState,
+    AdmitPolicy, BatchPolicy, Batcher, Engine, GenRequest, GenResult, Metrics, SchedPolicy,
+    Scheduler, SeqState,
 };
 use slim::sparse::{mask::SparsityPattern, wanda};
 use slim::util::json::{n, obj, s, Json};
@@ -73,12 +88,7 @@ fn workload(n_reqs: usize, mean_gap_ms: f64, vocab: usize) -> Vec<Arrival> {
             let prompt: Vec<u32> = (0..plen).map(|_| rng.below(vocab as u32)).collect();
             Arrival {
                 at: Duration::from_secs_f64(t_ms / 1e3),
-                req: GenRequest {
-                    id: i as u64,
-                    prompt,
-                    max_new: 4 + rng.below(28) as usize,
-                    stop: None,
-                },
+                req: GenRequest::new(i as u64, prompt, 4 + rng.below(28) as usize),
             }
         })
         .collect()
@@ -99,16 +109,26 @@ fn fixed_worker(engine: &Engine, batcher: &Batcher, metrics: &Metrics, cap: usiz
         let mut pool = KvCachePool::new(engine.config(), batch.len());
         let reqs: Vec<GenRequest> = batch.iter().map(|p| p.req.clone()).collect();
         let t0 = Instant::now();
+        for p in &batch {
+            metrics.record_queue_wait(p.wait_so_far().as_secs_f64());
+        }
         let mut states = engine.prefill_batch(&reqs, &mut pool);
         let prefilled = reqs.iter().filter(|r| r.max_new > 0).count();
         if prefilled > 0 {
             metrics.record_prefill(prefilled, t0.elapsed().as_secs_f64());
         }
-        for pending in &batch {
-            if pending.req.max_new > 0 {
-                metrics.record_ttft(pending.enqueued.elapsed().as_secs_f64());
-            }
-        }
+        let ttfts: Vec<Option<f64>> = batch
+            .iter()
+            .map(|pending| {
+                if pending.req.max_new > 0 {
+                    let t = pending.enqueued.elapsed().as_secs_f64();
+                    metrics.record_ttft(t);
+                    Some(t)
+                } else {
+                    None
+                }
+            })
+            .collect();
         // Lockstep decode to completion — no admission mid-batch.
         loop {
             let mut active: Vec<&mut SeqState> = states.iter_mut().filter(|s| !s.done).collect();
@@ -119,11 +139,13 @@ fn fixed_worker(engine: &Engine, batcher: &Batcher, metrics: &Metrics, cap: usiz
             let made = engine.decode_step(&mut active, &mut pool);
             metrics.record_decode_step(made, t0.elapsed().as_secs_f64());
         }
-        for (st, pending) in states.iter().zip(batch.iter()) {
+        for ((st, pending), ttft) in states.iter().zip(batch.iter()).zip(ttfts) {
             metrics.record_request(pending.enqueued.elapsed().as_secs_f64());
-            let _ = pending
-                .result_slot
-                .send(GenResult { id: st.id, tokens: st.generated().to_vec() });
+            let _ = pending.result_slot.send(GenResult {
+                id: st.id,
+                tokens: st.generated().to_vec(),
+                ttft_s: ttft,
+            });
         }
     }
 }
@@ -181,6 +203,89 @@ fn run_mode(engine: Arc<Engine>, arrivals: &[Arrival], continuous: bool, cap: us
     }
 }
 
+/// Head-of-line scenario: one 4×-long prompt at t = 0, then a Poisson
+/// stream of short requests from three clients (fair-share has ids to
+/// rotate over; FIFO/SJF ignore them).
+fn hol_workload(n_short: usize, vocab: usize) -> Vec<Arrival> {
+    let mut rng = Pcg32::seeded(0x401b10c);
+    let long_prompt: Vec<u32> = (0..96).map(|_| rng.below(vocab as u32)).collect();
+    let mut arrivals =
+        vec![Arrival { at: Duration::ZERO, req: GenRequest::new(0, long_prompt, 16) }];
+    let mut t_ms = 0.5f64;
+    for i in 0..n_short {
+        t_ms += -2.0 * (1.0 - rng.f64()).ln();
+        let plen = 4 + rng.below(20) as usize; // short prompts: 4–23 tokens
+        let prompt: Vec<u32> = (0..plen).map(|_| rng.below(vocab as u32)).collect();
+        arrivals.push(Arrival {
+            at: Duration::from_secs_f64(t_ms / 1e3),
+            req: GenRequest::new(1 + i as u64, prompt, 4 + rng.below(8) as usize)
+                .with_client(1 + (i % 3) as u64),
+        });
+    }
+    arrivals
+}
+
+struct HolResult {
+    short_ttft_p50_ms: f64,
+    short_ttft_p95_ms: f64,
+    long_ttft_ms: f64,
+    tok_per_s: f64,
+}
+
+/// Percentile over an unsorted sample set (same convention as Metrics).
+fn pct(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (samples.len() - 1) as f64).round() as usize;
+    samples[idx.min(samples.len() - 1)]
+}
+
+/// Replay the head-of-line schedule against a continuous scheduler under
+/// `policy`, splitting per-request TTFT (from `GenResult::ttft_s`) into
+/// the long prompt vs the short population.
+fn run_hol(engine: Arc<Engine>, arrivals: &[Arrival], policy: SchedPolicy) -> HolResult {
+    let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+    let metrics = Arc::new(Metrics::new());
+    let worker = {
+        let b = batcher.clone();
+        let m = metrics.clone();
+        let e = engine.clone();
+        std::thread::spawn(move || Scheduler::new(e, policy).run(&b, &m))
+    };
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(arrivals.len());
+    for a in arrivals {
+        if let Some(d) = a.at.checked_sub(t0.elapsed()) {
+            std::thread::sleep(d);
+        }
+        rxs.push(batcher.submit(a.req.clone()));
+    }
+    let mut tokens = 0usize;
+    let mut long_ttft_ms = 0.0f64;
+    let mut short_ttfts_ms: Vec<f64> = Vec::new();
+    for rx in rxs {
+        let out = rx.recv_timeout(Duration::from_secs(300)).expect("request lost");
+        tokens += out.tokens.len();
+        let ttft_ms = out.ttft_s.expect("scheduler reports ttft") * 1e3;
+        if out.id == 0 {
+            long_ttft_ms = ttft_ms;
+        } else {
+            short_ttfts_ms.push(ttft_ms);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    batcher.close();
+    worker.join().unwrap();
+    HolResult {
+        short_ttft_p50_ms: pct(&mut short_ttfts_ms, 50.0),
+        short_ttft_p95_ms: pct(&mut short_ttfts_ms, 95.0),
+        long_ttft_ms,
+        tok_per_s: tokens as f64 / wall_s,
+    }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let cfg = bench_cfg();
@@ -210,7 +315,7 @@ fn main() {
         ("dense-fixed", dense.clone(), false),
         ("dense-continuous", dense, true),
         ("int4-2:4-fixed", sp24.clone(), false),
-        ("int4-2:4-continuous", sp24, true),
+        ("int4-2:4-continuous", sp24.clone(), true),
     ];
 
     let mut json_rows: Vec<(&str, Json)> = Vec::new();
@@ -235,6 +340,65 @@ fn main() {
         table.push((name, r));
     }
 
+    // ── Head-of-line blocking: chunked vs monolithic prefill + policies ──
+    let n_short = if quick { 24 } else { 48 };
+    let hol_arrivals = hol_workload(n_short, cfg.vocab);
+    println!(
+        "\nhead-of-line — one 96-token prompt at t=0 (~4× the short mean) + {n_short} Poisson \
+         short requests (prompts 4-23, max_new 4-11), int4-2:4 continuous, cap {cap}\n"
+    );
+    println!(
+        "{:<20} {:>11} {:>14} {:>14} {:>12}",
+        "mode", "tok/s", "short_ttft_p50", "short_ttft_p95", "long_ttft"
+    );
+    let base = SchedPolicy { max_slots: cap, ..Default::default() };
+    let hol_variants: Vec<(&str, SchedPolicy)> = vec![
+        // Monolithic = unbounded budget: the long prompt prefills in one
+        // pass, stalling every concurrent short request (the pre-chunking
+        // scheduler's behavior).
+        (
+            "hol-monolithic",
+            SchedPolicy { step_tokens: usize::MAX, chunk_tokens: usize::MAX, ..base },
+        ),
+        ("hol-chunked", SchedPolicy { step_tokens: 24, chunk_tokens: 16, ..base }),
+        (
+            "hol-chunked-sjf",
+            SchedPolicy {
+                step_tokens: 24,
+                chunk_tokens: 16,
+                admit: AdmitPolicy::Sjf,
+                ..base
+            },
+        ),
+        (
+            "hol-chunked-fair",
+            SchedPolicy {
+                step_tokens: 24,
+                chunk_tokens: 16,
+                admit: AdmitPolicy::FairShare,
+                ..base
+            },
+        ),
+    ];
+    let mut hol_table: Vec<(&str, HolResult)> = Vec::new();
+    for (name, policy) in hol_variants {
+        let r = run_hol(sp24.clone(), &hol_arrivals, policy);
+        println!(
+            "{:<20} {:>11.1} {:>12.1}ms {:>12.1}ms {:>10.1}ms",
+            name, r.tok_per_s, r.short_ttft_p50_ms, r.short_ttft_p95_ms, r.long_ttft_ms
+        );
+        json_rows.push((
+            name,
+            obj(vec![
+                ("tok_per_s", n(r.tok_per_s)),
+                ("short_ttft_p50_ms", n(r.short_ttft_p50_ms)),
+                ("short_ttft_p95_ms", n(r.short_ttft_p95_ms)),
+                ("long_ttft_ms", n(r.long_ttft_ms)),
+            ]),
+        ));
+        hol_table.push((name, r));
+    }
+
     let doc = obj(vec![
         ("bench", s("serve")),
         ("d_model", n(cfg.d_model as f64)),
@@ -242,6 +406,7 @@ fn main() {
         ("batch_cap", n(cap as f64)),
         ("requests", n(n_reqs as f64)),
         ("mean_gap_ms", n(mean_gap_ms)),
+        ("hol_short_requests", n(n_short as f64)),
         ("results", obj(json_rows)),
     ]);
     let path = slim::util::bench_out_path("BENCH_serve.json");
@@ -263,8 +428,24 @@ fn main() {
             );
         }
     }
+    // Sanity: chunking exists to protect the short population's tail TTFT
+    // from the long prompt (the PR's acceptance bar).
+    if let (Some((_, mono)), Some((_, chunked))) = (
+        hol_table.iter().find(|(name, _)| *name == "hol-monolithic"),
+        hol_table.iter().find(|(name, _)| *name == "hol-chunked"),
+    ) {
+        let ok = chunked.short_ttft_p95_ms <= mono.short_ttft_p95_ms;
+        println!(
+            "{} hol-chunked vs hol-monolithic: short_ttft_p95 {:.1}ms vs {:.1}ms ({:+.1}%)",
+            if ok { "OK " } else { "WARN" },
+            chunked.short_ttft_p95_ms,
+            mono.short_ttft_p95_ms,
+            100.0 * (chunked.short_ttft_p95_ms / mono.short_ttft_p95_ms - 1.0),
+        );
+    }
     println!(
-        "(expect: continuous > fixed on tok/s and < on TTFT — late arrivals no longer wait\n\
-         for a lockstep batch to drain, and the decode batch never thins out early)"
+        "(expect: continuous > fixed on tok/s and < on TTFT; chunked ≤ monolithic on the short\n\
+         population's ttft_p95 — a long prompt now costs each tick one bounded chunk instead of\n\
+         stalling every in-flight decode for a whole monolithic prefill)"
     );
 }

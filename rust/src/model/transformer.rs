@@ -288,6 +288,17 @@ impl KvCachePool {
         self.live[slot]
     }
 
+    /// Tokens that can still be appended to `slot` before an append would
+    /// wrap the ring: `max_seq − len` while the slot is filling, 0 once
+    /// full. Chunked prefill clamps its spans to this, so a multi-token
+    /// continuation span never wraps (wrapping is reserved for the
+    /// single-token decode steps, which overwrite exactly one retained
+    /// row); during prefill the windowed prompt always fits, so the clamp
+    /// only guards misuse.
+    pub fn span_room(&self, slot: usize) -> usize {
+        self.max_seq.saturating_sub(self.lens[slot])
+    }
+
     /// Forget `slot`'s cached positions without freeing it (used by the
     /// legacy re-prefill baseline in `benches/decode.rs`; serving never
     /// resets — overflow wraps the ring instead).
@@ -388,11 +399,20 @@ impl KvCache {
 /// `seqs` is a list of `(slot, new_tokens)` entries: each sequence feeds
 /// its own span of new tokens (any length ≥ 1), occupying logical
 /// positions `pool.len(slot) .. pool.len(slot) + new_tokens.len()` within
-/// its slot. Mixed spans are fine — a long prompt prefill can share one
+/// its slot. Mixed spans are fine — a prompt-prefill chunk can share one
 /// batched pass with single-token decode steps of other sequences, which
-/// keeps the compressed kernels saturated across request churn. Returns
-/// logits for the new positions only, rows packed in `seqs` order (entry
-/// `i`'s rows start at the sum of earlier entries' span lengths).
+/// keeps the compressed kernels saturated across request churn. A
+/// multi-token span may start at any logical base below `max_seq` — this
+/// is what chunked prefill builds on: feeding a prompt as successive
+/// continuation spans writes exactly the K/V rows a one-shot span would
+/// (quantize-on-write is per row), and each query row attends over the
+/// same logical prefix in the same order, so the per-position logits are
+/// bit-identical to the one-shot pass for every chunk schedule (see
+/// `chunked_continuation_spans_match_oneshot` below and
+/// `tests/property.rs`). Callers size chunks with
+/// [`KvCachePool::span_room`] so a span never crosses the wrap boundary.
+/// Returns logits for the new positions only, rows packed in `seqs` order
+/// (entry `i`'s rows start at the sum of earlier entries' span lengths).
 ///
 /// Logical positions may exceed `max_seq`: the write wraps the slot's ring
 /// (overwriting the oldest retained position) and the token's learned
@@ -980,6 +1000,49 @@ mod tests {
             let want = Matrix::from_vec(1, cfg.vocab, full.row(ext.len() - 1).to_vec());
             assert!(got.rel_err(&want) < 1e-5, "decode seq {i}");
             assert_eq!(pool.len(entries[i].0), ext.len());
+        }
+    }
+
+    #[test]
+    fn chunked_continuation_spans_match_oneshot_bitwise() {
+        // Feeding a prompt as multi-token continuation spans at the slot's
+        // current logical base must reproduce the one-shot prefill logits
+        // BIT-exactly (f32): same K/V rows written, same logical attention
+        // prefix per query row, same accumulation order. Also checks
+        // span_room's countdown as the slot fills.
+        let (cfg, w, _) = setup();
+        let mut rng = Pcg32::seeded(31);
+        let prompt: Vec<u32> = (0..12).map(|_| rng.below(cfg.vocab as u32)).collect();
+        let mut one_pool = KvCachePool::new(&cfg, 1);
+        let s1 = one_pool.alloc().unwrap();
+        let oneshot =
+            forward_slots(&cfg, &w, &[(s1, &prompt[..])], &mut one_pool, &Linears::Dense);
+        for chunks in [vec![1usize; 12], vec![5, 4, 3], vec![3, 9], vec![12]] {
+            let mut pool = KvCachePool::new(&cfg, 1);
+            let slot = pool.alloc().unwrap();
+            let mut fed = 0usize;
+            for c in chunks {
+                assert!(pool.span_room(slot) >= c, "chunk must fit the ring");
+                assert_eq!(pool.span_room(slot), cfg.max_seq - fed);
+                let lg = forward_slots(
+                    &cfg,
+                    &w,
+                    &[(slot, &prompt[fed..fed + c])],
+                    &mut pool,
+                    &Linears::Dense,
+                );
+                for s in 0..c {
+                    assert_eq!(
+                        lg.row(s),
+                        oneshot.row(fed + s),
+                        "position {} diverged from one-shot",
+                        fed + s
+                    );
+                }
+                fed += c;
+            }
+            assert_eq!(fed, prompt.len());
+            assert_eq!(pool.len(slot), prompt.len());
         }
     }
 

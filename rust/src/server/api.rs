@@ -1,10 +1,19 @@
 //! TCP front-end: newline-delimited JSON over std::net.
 //!
-//! Request:  `{"model": "...", "prompt": [ints], "max_new": n, "stop": t?}`
+//! Request:  `{"model": "...", "prompt": [ints], "max_new": n, "stop": t?,
+//!           "priority": p?, "client_id": c?}`
 //!           (`stop` is optional: generation retires early once token `t`
-//!           is produced, included in the output)
-//! Response: `{"ok": true, "tokens": [ints]}` or `{"ok": false, "error": "..."}`
-//! Special:  `{"cmd": "metrics"}` → one-line summary;
+//!           is produced, included in the output. `priority` — higher is
+//!           admitted sooner — and `client_id` feed the route's admission
+//!           policy when it is fair-share (`SchedPolicy::admit`); both
+//!           default to 0 and never change the generated tokens, only who
+//!           waits when cache slots are scarce.)
+//! Response: `{"ok": true, "tokens": [ints], "ttft_ms": f?}` or
+//!           `{"ok": false, "error": "..."}` — `ttft_ms` is the
+//!           server-measured submit→first-token latency, present on
+//!           serving paths that observe one.
+//! Special:  `{"cmd": "metrics"}` → one-line summary (includes queue-wait
+//!           p50/p95 alongside TTFT and decode percentiles);
 //!           `{"cmd": "models"}` → `{"ok": true, "models": [{"name": "...",
 //!           "kv_dtype": "f32" | "int8" | "fp8-e4m3"}, ...]}` — `kv_dtype`
 //!           is the serving KV cache storage dtype the route was registered
@@ -14,7 +23,7 @@
 //! One thread per connection (the engines are the bottleneck, not the
 //! accept loop), with the router's batcher coalescing across connections.
 
-use super::router::Router;
+use super::router::{RequestOpts, Router};
 use crate::util::json::{n, obj, s, Json};
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -102,11 +111,19 @@ fn process(router: &Router, line: &str) -> Result<Json> {
         .collect::<Result<_>>()?;
     let max_new = req.get("max_new").and_then(Json::as_usize).unwrap_or(16);
     let stop = req.get("stop").and_then(Json::as_usize).map(|u| u as u32);
-    let result = router.generate_opts(model, prompt, max_new.min(256), stop)?;
-    Ok(obj(vec![
+    // Admission metadata (both optional, both inert under FIFO routes).
+    let priority = req.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i32;
+    let client_id = req.get("client_id").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let opts = RequestOpts { max_new: max_new.min(256), stop, priority, client_id };
+    let result = router.generate_with(model, prompt, opts)?;
+    let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("tokens", Json::Arr(result.tokens.iter().map(|&t| n(t as f64)).collect())),
-    ]))
+    ];
+    if let Some(ttft) = result.ttft_s {
+        fields.push(("ttft_ms", n(ttft * 1e3)));
+    }
+    Ok(obj(fields))
 }
 
 /// Minimal blocking client for examples/tests.
@@ -228,6 +245,36 @@ mod tests {
         assert!(text.contains("f32"));
         let resp = handle_line(&r, r#"{"cmd":"metrics"}"#);
         assert!(resp.to_string_compact().contains("requests="));
+    }
+
+    #[test]
+    fn priority_client_id_accepted_and_ttft_reported() {
+        // A fair-share continuous route accepts the admission fields and
+        // reports the server-measured TTFT; tokens are unchanged by the
+        // metadata (same greedy path).
+        use crate::server::batcher::AdmitPolicy;
+        use crate::server::scheduler::SchedPolicy;
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let w = init(&cfg, &mut rng);
+        let mut router = Router::new();
+        router.register_continuous(
+            Engine::new("sim-125m", cfg, Arc::new(w), None),
+            SchedPolicy { max_slots: 2, admit: AdmitPolicy::FairShare, ..Default::default() },
+        );
+        let r = Arc::new(router);
+        let line =
+            r#"{"model":"sim-125m","prompt":[5,6],"max_new":3,"priority":2,"client_id":9}"#;
+        let resp = handle_line(&r, line);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(resp.get("tokens").and_then(Json::as_arr).unwrap().len(), 3);
+        assert!(resp.get("ttft_ms").and_then(Json::as_f64).unwrap() > 0.0);
+        let plain = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":3}"#);
+        assert_eq!(
+            plain.get("tokens").and_then(Json::as_arr),
+            resp.get("tokens").and_then(Json::as_arr),
+            "admission metadata must not change tokens"
+        );
     }
 
     #[test]

@@ -6,16 +6,62 @@
 //!   requests are queued OR the oldest queued request has waited
 //!   `max_wait`; never dispatch empty. Small decode batches are the
 //!   paper's serving regime (§4 Speedup).
-//! * [`Batcher::try_take`] / [`Batcher::wait_pending`] — continuous
-//!   admission: the scheduler (`server::scheduler`) drains whatever is
-//!   queued up to its free cache slots between decode steps, and parks on
-//!   the condvar (untimed — submit/close notify it, so an idle server
-//!   does not wake on a poll interval) only when nothing is in flight.
+//! * [`Batcher::take_admit`] / [`Batcher::wait_pending`] — continuous
+//!   admission: the scheduler (`server::scheduler`) drains queued requests
+//!   up to its free cache slots between decode steps, choosing *which*
+//!   ones per a pluggable [`AdmitPolicy`] (FIFO arrival order, shortest
+//!   job first on `max_new`, or per-client fair share over
+//!   `GenRequest::client_id` with `priority`), and parks on the condvar
+//!   (untimed — submit/close notify it, so an idle server does not wake on
+//!   a poll interval) only when nothing is in flight.
+//!   [`Batcher::try_take`] is the FIFO special case.
 
 use super::engine::{GenRequest, GenResult};
+use std::cmp::Reverse;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// How continuous admission picks queued requests when more are waiting
+/// than there are free cache slots. Selection never affects tokens (greedy
+/// decode is batching-invariant) — only who waits.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmitPolicy {
+    /// Strict arrival order.
+    #[default]
+    Fifo,
+    /// Shortest job first on `max_new` — the cheapest decode commitment
+    /// admits first; ties go to the longest-waiting request. Cuts mean
+    /// queue wait under load at the cost of delaying long generations.
+    Sjf,
+    /// Per-client fair share: each pick takes the highest-priority
+    /// head-of-line request across clients, breaking priority ties by
+    /// round-robin rotation from the last-served client id; within one
+    /// client, higher `priority` first, then longest wait. One client
+    /// flooding the queue can no longer starve the others.
+    FairShare,
+}
+
+impl AdmitPolicy {
+    /// Display / JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmitPolicy::Fifo => "fifo",
+            AdmitPolicy::Sjf => "sjf",
+            AdmitPolicy::FairShare => "fair-share",
+        }
+    }
+}
+
+/// Carry-over state for admission policies that rotate across picks
+/// (fair-share round-robin). One per consumer loop; [`AdmitPolicy::Fifo`]
+/// and [`AdmitPolicy::Sjf`] ignore it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmitState {
+    /// Client id of the most recent fair-share pick; rotation resumes
+    /// strictly after it (wrapping to the smallest id).
+    last_client: Option<u64>,
+}
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -37,6 +83,16 @@ pub struct Pending {
     pub enqueued: Instant,
     /// Where the finished [`GenResult`] goes.
     pub result_slot: std::sync::mpsc::Sender<GenResult>,
+}
+
+impl Pending {
+    /// How long this request has been queued so far. Admission consumers
+    /// record it (queue-wait percentiles in `server::Metrics`) and
+    /// fairness policies can age on it — within a fair-share client,
+    /// longest wait breaks priority ties.
+    pub fn wait_so_far(&self) -> Duration {
+        self.enqueued.elapsed()
+    }
 }
 
 /// Thread-safe request queue with batch-forming semantics.
@@ -94,11 +150,53 @@ impl Batcher {
     }
 
     /// Pop up to `max` queued requests without blocking (continuous
-    /// admission between decode steps).
+    /// admission between decode steps), in strict arrival order —
+    /// [`Batcher::take_admit`] with [`AdmitPolicy::Fifo`].
     pub fn try_take(&self, max: usize) -> Vec<Pending> {
         let mut q = self.queue.lock().unwrap();
         let take = q.len().min(max);
         q.drain(..take).collect()
+    }
+
+    /// Pop up to `max` queued requests without blocking, chosen by
+    /// `policy` (see [`AdmitPolicy`]); requests not picked stay queued in
+    /// arrival order. `state` carries the fair-share rotation cursor
+    /// between calls.
+    pub fn take_admit(
+        &self,
+        max: usize,
+        policy: AdmitPolicy,
+        state: &mut AdmitState,
+    ) -> Vec<Pending> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut q = self.queue.lock().unwrap();
+        let take = q.len().min(max);
+        if take == 0 {
+            return Vec::new();
+        }
+        if policy == AdmitPolicy::Fifo {
+            return q.drain(..take).collect();
+        }
+        let picked: Vec<usize> = match policy {
+            AdmitPolicy::Fifo => unreachable!(),
+            AdmitPolicy::Sjf => {
+                // Cheapest decode commitment first; queue index breaks
+                // ties (older = smaller index = longer wait).
+                let mut idx: Vec<usize> = (0..q.len()).collect();
+                idx.sort_by_key(|&i| (q[i].req.max_new, i));
+                idx.truncate(take);
+                idx
+            }
+            AdmitPolicy::FairShare => fair_share_pick(&q, take, state),
+        };
+        // Extract the picked entries in pick order; everything else goes
+        // back in arrival order.
+        let mut items: Vec<Option<Pending>> = q.drain(..).map(Some).collect();
+        let out: Vec<Pending> = picked.iter().map(|&i| items[i].take().unwrap()).collect();
+        q.extend(items.into_iter().flatten());
+        out
     }
 
     /// Block until the queue is non-empty (true) or the batcher is closed
@@ -143,13 +241,65 @@ impl Batcher {
     }
 }
 
+/// Fair-share selection: queue indices of up to `take` requests. Each pick
+/// takes the highest-priority head-of-line request across clients; within
+/// a client, candidates are ordered by (priority desc, wait desc), and
+/// priority ties across clients go to the client nearest after the
+/// last-served id (round-robin, wrapping). With equal priorities this
+/// degenerates to pure round-robin over client ids; with one client it is
+/// priority-then-FIFO.
+fn fair_share_pick(q: &VecDeque<Pending>, take: usize, state: &mut AdmitState) -> Vec<usize> {
+    // Per-client candidate queues, best first. Clients sorted by id.
+    let mut clients: Vec<(u64, Vec<usize>)> = Vec::new();
+    for (i, p) in q.iter().enumerate() {
+        match clients.binary_search_by_key(&p.req.client_id, |c| c.0) {
+            Ok(k) => clients[k].1.push(i),
+            Err(k) => clients.insert(k, (p.req.client_id, vec![i])),
+        }
+    }
+    for (_, idxs) in clients.iter_mut() {
+        // Queue index ascending == enqueued earlier == waited longer.
+        idxs.sort_by_key(|&i| (Reverse(q[i].req.priority), i));
+    }
+    let mut heads = vec![0usize; clients.len()];
+    let mut picked = Vec::with_capacity(take);
+    while picked.len() < take {
+        // (Reverse(priority), after-cursor? 0 : 1, client id): the minimum
+        // is the highest-priority head of line, rotation breaking ties.
+        let mut best: Option<(usize, (Reverse<i32>, u8, u64))> = None;
+        for (k, (cid, idxs)) in clients.iter().enumerate() {
+            if heads[k] >= idxs.len() {
+                continue;
+            }
+            let wraps = match state.last_client {
+                Some(last) if *cid > last => 0u8,
+                None => 0u8,
+                Some(_) => 1u8,
+            };
+            let key = (Reverse(q[idxs[heads[k]]].req.priority), wraps, *cid);
+            let better = match best {
+                None => true,
+                Some((_, bk)) => key < bk,
+            };
+            if better {
+                best = Some((k, key));
+            }
+        }
+        let Some((k, _)) = best else { break };
+        picked.push(clients[k].1[heads[k]]);
+        heads[k] += 1;
+        state.last_client = Some(clients[k].0);
+    }
+    picked
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::Arc;
 
     fn req(id: u64) -> GenRequest {
-        GenRequest { id, prompt: vec![1], max_new: 1, stop: None }
+        GenRequest::new(id, vec![1], 1)
     }
 
     #[test]
@@ -219,6 +369,84 @@ mod tests {
     }
 
     #[test]
+    fn admit_fifo_matches_try_take() {
+        let b = Batcher::new(BatchPolicy::default());
+        for i in 0..4 {
+            let _rx = b.submit(req(i));
+        }
+        let mut st = AdmitState::default();
+        let got = b.take_admit(3, AdmitPolicy::Fifo, &mut st);
+        assert_eq!(got.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.depth(), 1);
+    }
+
+    #[test]
+    fn admit_sjf_orders_by_max_new_then_wait() {
+        let b = Batcher::new(BatchPolicy::default());
+        let submit = |id, max_new| {
+            let _rx = b.submit(GenRequest::new(id, vec![1], max_new));
+        };
+        submit(0, 5);
+        submit(1, 1);
+        submit(2, 3);
+        submit(3, 1); // same cost as id 1 — id 1 waited longer, goes first
+        let mut st = AdmitState::default();
+        let got = b.take_admit(3, AdmitPolicy::Sjf, &mut st);
+        assert_eq!(got.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![1, 3, 2]);
+        // The unpicked long job is still queued, in arrival order.
+        let rest = b.take_admit(4, AdmitPolicy::Sjf, &mut st);
+        assert_eq!(rest.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn admit_fair_share_round_robins_clients() {
+        let b = Batcher::new(BatchPolicy::default());
+        // Client 7 floods the queue before client 9's two requests arrive.
+        for i in 0..4u64 {
+            let _rx = b.submit(GenRequest::new(i, vec![1], 1).with_client(7));
+        }
+        for i in 4..6u64 {
+            let _rx = b.submit(GenRequest::new(i, vec![1], 1).with_client(9));
+        }
+        let mut st = AdmitState::default();
+        let got = b.take_admit(4, AdmitPolicy::FairShare, &mut st);
+        // Equal priorities → pure round-robin: 7, 9, 7, 9 — the late
+        // client is not starved behind the flood.
+        assert_eq!(got.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![0, 4, 1, 5]);
+        // Rotation state persists: the next pick resumes after client 9,
+        // wrapping back to client 7's remaining requests.
+        let rest = b.take_admit(4, AdmitPolicy::FairShare, &mut st);
+        assert_eq!(rest.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn admit_fair_share_priority_wins_across_and_within_clients() {
+        let b = Batcher::new(BatchPolicy::default());
+        let submit = |id, client, priority| {
+            let r = GenRequest::new(id, vec![1], 1).with_client(client).with_priority(priority);
+            let _rx = b.submit(r);
+        };
+        submit(0, 1, 0);
+        submit(1, 2, 5); // high-priority request jumps the whole queue
+        submit(2, 2, 0);
+        submit(3, 1, 3); // within client 1, priority 3 beats the older 0
+        let mut st = AdmitState::default();
+        let got = b.take_admit(4, AdmitPolicy::FairShare, &mut st);
+        // Priorities first (5 then 3); the remaining priority-0 tie goes to
+        // client 2 — rotation resumes after client 1, the last one served.
+        assert_eq!(got.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn wait_so_far_tracks_queue_age() {
+        let b = Batcher::new(BatchPolicy::default());
+        let _rx = b.submit(req(1));
+        std::thread::sleep(Duration::from_millis(5));
+        let p = b.try_take(1).pop().unwrap();
+        assert!(p.wait_so_far() >= Duration::from_millis(5));
+    }
+
+    #[test]
     fn no_request_lost_under_concurrency() {
         let b = Arc::new(Batcher::new(BatchPolicy {
             max_batch: 4,
@@ -235,7 +463,8 @@ mod tests {
             while served < n {
                 if let Some(batch) = b2.next_batch() {
                     for p in batch {
-                        let _ = p.result_slot.send(GenResult { id: p.req.id, tokens: vec![] });
+                        let res = GenResult { id: p.req.id, tokens: vec![], ttft_s: None };
+                        let _ = p.result_slot.send(res);
                         served += 1;
                     }
                 } else {

@@ -1,11 +1,21 @@
 //! Generation engine: greedy decoding over a (compressed) model, exposed
 //! as explicit serving phases.
 //!
-//! [`Engine::prefill`] admits one request into a [`KvCachePool`] slot
-//! (windowed prompt pass + first token); [`Engine::decode_step`] advances
-//! every in-flight sequence one token in a single batched forward
-//! ([`forward_slots`]) regardless of how long each has been running — the
-//! primitives the continuous scheduler (`server::scheduler`) drives.
+//! [`Engine::prefill_begin`] admits one request into a [`KvCachePool`]
+//! slot as a *resumable* [`PrefillState`]; [`Engine::step_chunked`] is the
+//! one batched forward every serving tick runs — it feeds each in-progress
+//! prefill a bounded chunk of its windowed prompt (≤ `chunk_tokens` per
+//! sequence, ≤ `prefill_budget` in total) *and* advances every in-flight
+//! decode sequence one token, all as mixed-length spans of a single
+//! [`forward_slots`] pass. A prefill emits its first token only on the
+//! chunk that completes its prompt, and chunked prefill is token-for-token
+//! (for f32 KV, bit-for-bit) identical to a one-shot prefill for every
+//! chunk size and KV dtype: each chunk writes exactly the K/V rows the
+//! one-shot pass would, and attention over the slot's prefix is
+//! batching-invariant. [`Engine::prefill`] / [`Engine::prefill_batch`] /
+//! [`Engine::decode_step`] are thin wrappers over the same primitive
+//! (one-shot prefill is just a single unbounded chunk) — the primitives
+//! the continuous scheduler (`server::scheduler`) drives.
 //! Context overflow is handled by the pool itself: each slot is a ring
 //! buffer with position rebasing (`model::KvCachePool`), so a sequence
 //! deeper than `max_seq` still costs one KV write + one window attention
@@ -30,7 +40,7 @@ use crate::tensor::Matrix;
 use std::sync::Arc;
 
 /// One generation request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<u32>,
@@ -38,6 +48,42 @@ pub struct GenRequest {
     /// Optional stop token: generation retires early the moment this token
     /// is produced (it is included in the output).
     pub stop: Option<u32>,
+    /// Admission priority: higher values are admitted sooner by policies
+    /// that consult it (`server::batcher::AdmitPolicy::FairShare`); 0 is
+    /// the neutral default. The engine itself ignores it.
+    pub priority: i32,
+    /// Originating client, for per-client fair-share admission (0 =
+    /// anonymous). The engine itself ignores it.
+    pub client_id: u64,
+}
+
+impl GenRequest {
+    /// Request `max_new` greedy tokens from `prompt` (no stop token,
+    /// neutral priority, anonymous client).
+    pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> Self {
+        GenRequest { id, prompt, max_new, ..Default::default() }
+    }
+
+    /// Retire early the moment `token` is produced (it is included in the
+    /// output).
+    pub fn with_stop(mut self, token: u32) -> Self {
+        self.stop = Some(token);
+        self
+    }
+
+    /// Set the admission priority (higher = admitted sooner under
+    /// fair-share admission).
+    pub fn with_priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Tag the request with its originating client (fair-share admission
+    /// round-robins across client ids).
+    pub fn with_client(mut self, client_id: u64) -> Self {
+        self.client_id = client_id;
+        self
+    }
 }
 
 /// Completed generation.
@@ -45,6 +91,12 @@ pub struct GenRequest {
 pub struct GenResult {
     pub id: u64,
     pub tokens: Vec<u32>,
+    /// Server-side submit→first-token latency, when the serving path
+    /// observed one (the continuous scheduler records it at first-token
+    /// time); `None` from paths with no enqueue time or no per-request
+    /// TTFT observation — [`Engine::generate_batch`] and the router's
+    /// legacy fixed-batch route.
+    pub ttft_s: Option<f64>,
 }
 
 /// One in-flight sequence: its cache slot, token history and stop state.
@@ -78,6 +130,71 @@ impl SeqState {
             self.done = true;
         }
     }
+}
+
+/// One request's resumable chunked prefill.
+///
+/// Produced by [`Engine::prefill_begin`] (which claims the cache slot),
+/// advanced by [`Engine::step_chunked`], which feeds up to `chunk_tokens`
+/// of the windowed prompt per call as a multi-token continuation span at
+/// the slot's current logical base. The first generated token is emitted
+/// only by the chunk that completes the prompt; until then the underlying
+/// [`SeqState`] has generated nothing. Once [`PrefillState::is_complete`],
+/// [`PrefillState::into_state`] yields the decode-ready [`SeqState`]
+/// (which may already be `done`, e.g. `max_new == 1` or an immediate stop
+/// token). Chunking never changes output: every chunk writes exactly the
+/// K/V rows a one-shot prefill would, so the completing chunk's logits are
+/// identical (bit-equal on f32 KV) for every chunk schedule.
+pub struct PrefillState {
+    state: SeqState,
+    /// Index of the windowed prompt's first token within `state.seq`
+    /// (prompts longer than `max_seq` feed only their trailing window).
+    win_start: usize,
+    /// Windowed prompt length — tokens to feed in total.
+    win: usize,
+    /// Windowed prompt tokens fed to the cache so far.
+    fed: usize,
+}
+
+impl PrefillState {
+    /// The underlying sequence state (id, slot, generated tokens).
+    pub fn state(&self) -> &SeqState {
+        &self.state
+    }
+
+    /// Windowed prompt tokens not yet fed to the cache (0 when complete,
+    /// and for `max_new == 0` requests, which never touch the forward
+    /// pass).
+    pub fn remaining(&self) -> usize {
+        if self.state.done {
+            0
+        } else {
+            self.win - self.fed
+        }
+    }
+
+    /// Whether the prompt is fully cached and the first token emitted (or
+    /// the request needed no forward at all).
+    pub fn is_complete(&self) -> bool {
+        self.state.done || self.fed == self.win
+    }
+
+    /// Finish the prefill phase, yielding the decode-ready state. Callers
+    /// should only invoke this once [`PrefillState::is_complete`].
+    pub fn into_state(self) -> SeqState {
+        self.state
+    }
+}
+
+/// What one [`Engine::step_chunked`] tick produced.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// Prompt tokens fed into the cache across all prefill chunks.
+    pub prefill_tokens: usize,
+    /// Prefills that completed this tick (each emitted its first token).
+    pub first_tokens: usize,
+    /// Decode sequences that each generated one token.
+    pub decode_tokens: usize,
 }
 
 /// A servable model: config + weights (+ compression overrides or packed
@@ -181,52 +298,142 @@ impl Engine {
         self.prefill_batch(std::slice::from_ref(req), pool).pop().unwrap()
     }
 
-    /// Admit several requests at once: every prompt prefills in ONE
-    /// batched forward pass ([`forward_slots`] packs the mixed-length
-    /// spans), claiming one cache slot each and generating each sequence's
-    /// first token. Panics if the pool lacks free slots for all of them.
-    pub fn prefill_batch(&self, reqs: &[GenRequest], pool: &mut KvCachePool) -> Vec<SeqState> {
-        let mut states: Vec<SeqState> = reqs
+    /// Claim a cache slot for `req` and return its resumable
+    /// [`PrefillState`] without running any forward pass yet — the chunked
+    /// admission path. Panics if the pool has no free slot — callers gate
+    /// admission on [`KvCachePool::free_slots`]. A `max_new == 0` request
+    /// comes back already complete (and `done`) with an untouched slot.
+    pub fn prefill_begin(&self, req: &GenRequest, pool: &mut KvCachePool) -> PrefillState {
+        let slot = pool.alloc().expect("no free KV cache slot");
+        let seq = if req.prompt.is_empty() { vec![0u32] } else { req.prompt.clone() };
+        let prompt_len = seq.len();
+        let win = prompt_len.min(self.cfg.max_seq);
+        PrefillState {
+            state: SeqState {
+                id: req.id,
+                slot,
+                max_new: req.max_new,
+                stop: req.stop,
+                done: req.max_new == 0,
+                seq,
+                prompt_len,
+            },
+            win_start: prompt_len - win,
+            win,
+            fed: 0,
+        }
+    }
+
+    /// One serving tick: a SINGLE batched forward that feeds every
+    /// in-progress prefill its next prompt chunk and every in-flight
+    /// decode sequence its latest token, as mixed-length [`forward_slots`]
+    /// spans. This is the token-budget primitive the continuous scheduler
+    /// runs — a long prompt no longer monopolizes a tick, it contributes
+    /// at most `chunk_tokens` of work while everyone else still advances.
+    ///
+    /// Each prefill feeds `min(chunk_tokens, remaining, budget left)`
+    /// prompt tokens, where `prefill_budget` caps the total across all
+    /// prefills this tick (prefills are served in slice order; later ones
+    /// may get 0 this tick). Chunks are additionally clamped to
+    /// [`KvCachePool::span_room`] so a span never wraps the ring — during
+    /// prefill the windowed prompt always fits, so the clamp only guards
+    /// misuse. A prefill that completes its prompt emits its first greedy
+    /// token from the chunk's last logits row; done/complete prefills and
+    /// done decode sequences are skipped. Chunking is invisible in the
+    /// output: every chunk writes exactly the K/V rows a one-shot prefill
+    /// would (quantize-on-write is per row) and per-row attention over the
+    /// slot's prefix is independent of span packing, so the completing
+    /// chunk's logits — and every token decoded after — are identical to
+    /// the one-shot pass (bit-equal on f32 KV; property-tested).
+    pub fn step_chunked(
+        &self,
+        prefills: &mut [&mut PrefillState],
+        decodes: &mut [&mut SeqState],
+        chunk_tokens: usize,
+        prefill_budget: usize,
+        pool: &mut KvCachePool,
+    ) -> StepStats {
+        // Chunk sizes first (pure reads): ≤ chunk_tokens each, ≤
+        // prefill_budget total, never wrapping the ring.
+        let mut budget = prefill_budget;
+        let chunks: Vec<usize> = prefills
             .iter()
-            .map(|req| {
-                let slot = pool.alloc().expect("no free KV cache slot");
-                let seq = if req.prompt.is_empty() { vec![0u32] } else { req.prompt.clone() };
-                let prompt_len = seq.len();
-                SeqState {
-                    id: req.id,
-                    slot,
-                    max_new: req.max_new,
-                    stop: req.stop,
-                    done: req.max_new == 0,
-                    seq,
-                    prompt_len,
-                }
+            .map(|p| {
+                let c = chunk_tokens
+                    .min(p.remaining())
+                    .min(budget)
+                    .min(pool.span_room(p.state.slot));
+                budget -= c;
+                c
             })
             .collect();
-        // Windowed prompt spans borrow straight from each state's token
-        // history — no per-request copies on the admission path.
-        let entries: Vec<(usize, &[u32])> = states
-            .iter()
-            .filter(|s| !s.done)
-            .map(|s| {
-                let win = s.seq.len().min(self.cfg.max_seq);
-                (s.slot, &s.seq[s.seq.len() - win..])
-            })
-            .collect();
-        if !entries.is_empty() {
-            let logits = forward_slots(&self.cfg, &self.weights, &entries, pool, &self.linears());
-            let span_lens: Vec<usize> = entries.iter().map(|e| e.1.len()).collect();
-            drop(entries); // release the immutable borrow of `states`
-            let mut row = 0usize;
-            // Same lazy filter as above: an element's `done` only flips via
-            // its own push_token after it has been yielded, so the order
-            // matches the spans'.
-            for (st, len) in states.iter_mut().filter(|s| !s.done).zip(span_lens) {
-                row += len;
-                st.push_token(argmax(logits.row(row - 1)) as u32);
+        // Spans borrow from each state's token history — the hot path
+        // allocates no token buffers. Prefill chunks pack first, then the
+        // one-token decode spans.
+        let mut entries: Vec<(usize, &[u32])> = Vec::new();
+        for (p, &c) in prefills.iter().zip(&chunks) {
+            if c > 0 {
+                let lo = p.win_start + p.fed;
+                entries.push((p.state.slot, &p.state.seq[lo..lo + c]));
             }
         }
-        states
+        let mut who: Vec<usize> = Vec::new();
+        for (i, st) in decodes.iter().enumerate() {
+            if st.done {
+                continue;
+            }
+            entries.push((st.slot, std::slice::from_ref(st.seq.last().unwrap())));
+            who.push(i);
+        }
+        let mut stats = StepStats::default();
+        if entries.is_empty() {
+            return stats;
+        }
+        let logits = forward_slots(&self.cfg, &self.weights, &entries, pool, &self.linears());
+        drop(entries); // release the immutable borrows of the state slices
+        let mut row = 0usize;
+        for (p, &c) in prefills.iter_mut().zip(&chunks) {
+            if c == 0 {
+                continue;
+            }
+            row += c;
+            p.fed += c;
+            stats.prefill_tokens += c;
+            if p.fed == p.win {
+                // The chunk that completes the prompt emits the first token.
+                p.state.push_token(argmax(logits.row(row - 1)) as u32);
+                stats.first_tokens += 1;
+            }
+        }
+        // Decode spans are one token each: entry j's logits are row j after
+        // the prefill rows.
+        for &i in &who {
+            decodes[i].push_token(argmax(logits.row(row)) as u32);
+            row += 1;
+            stats.decode_tokens += 1;
+        }
+        stats
+    }
+
+    /// Admit several requests at once: every prompt prefills in ONE
+    /// batched forward pass — a single unbounded [`Engine::step_chunked`]
+    /// tick, so the one-shot path and the chunked path are literally the
+    /// same code — claiming one cache slot each and generating each
+    /// sequence's first token. Panics if the pool lacks free slots for all
+    /// of them.
+    pub fn prefill_batch(&self, reqs: &[GenRequest], pool: &mut KvCachePool) -> Vec<SeqState> {
+        let mut pres: Vec<PrefillState> =
+            reqs.iter().map(|r| self.prefill_begin(r, pool)).collect();
+        loop {
+            let mut active: Vec<&mut PrefillState> =
+                pres.iter_mut().filter(|p| !p.is_complete()).collect();
+            if active.is_empty() {
+                break;
+            }
+            let stats = self.step_chunked(&mut active, &mut [], usize::MAX, usize::MAX, pool);
+            debug_assert!(stats.prefill_tokens > 0, "prefill made no progress");
+        }
+        pres.into_iter().map(PrefillState::into_state).collect()
     }
 
     /// One continuous decode step: feed every non-done sequence its latest
@@ -238,30 +445,9 @@ impl Engine {
     /// pass, so per-token cost stays flat instead of paying a sliding-
     /// window re-prefill every step. Marks sequences `done` when they
     /// reach `max_new` or their stop token; returns the number of tokens
-    /// generated.
+    /// generated. (A prefill-free [`Engine::step_chunked`] tick.)
     pub fn decode_step(&self, states: &mut [&mut SeqState], pool: &mut KvCachePool) -> usize {
-        // Token spans borrow from each state's history (a one-element slice
-        // of the latest token) — the per-step hot path allocates no token
-        // buffers.
-        let mut entries: Vec<(usize, &[u32])> = Vec::new();
-        let mut who: Vec<usize> = Vec::new();
-        for (i, st) in states.iter().enumerate() {
-            if st.done {
-                continue;
-            }
-            entries.push((st.slot, std::slice::from_ref(st.seq.last().unwrap())));
-            who.push(i);
-        }
-        if entries.is_empty() {
-            return 0;
-        }
-        let logits = forward_slots(&self.cfg, &self.weights, &entries, pool, &self.linears());
-        drop(entries); // release the immutable borrow of `states`
-        // Every span is one token, so entry j's logits are row j.
-        for (row, &i) in who.iter().enumerate() {
-            states[i].push_token(argmax(logits.row(row)) as u32);
-        }
-        who.len()
+        self.step_chunked(&mut [], states, 0, 0, pool).decode_tokens
     }
 
     /// Greedy-decode a batch of requests to completion: a thin wrapper that
@@ -288,7 +474,7 @@ impl Engine {
         }
         states
             .iter()
-            .map(|s| GenResult { id: s.id, tokens: s.generated().to_vec() })
+            .map(|s| GenResult { id: s.id, tokens: s.generated().to_vec(), ttft_s: None })
             .collect()
     }
 
@@ -354,8 +540,8 @@ mod tests {
     fn generates_requested_counts() {
         let e = engine();
         let reqs = vec![
-            GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 4, stop: None },
-            GenRequest { id: 2, prompt: vec![9], max_new: 4, stop: None },
+            GenRequest::new(1, vec![5, 6, 7], 4),
+            GenRequest::new(2, vec![9], 4),
         ];
         let out = e.generate_batch(&reqs);
         assert_eq!(out.len(), 2);
@@ -372,15 +558,15 @@ mod tests {
         // test pins it against the rewritten decode loop.)
         let e = engine();
         let reqs = vec![
-            GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 2, stop: None },
-            GenRequest { id: 2, prompt: vec![8, 9, 10], max_new: 6, stop: None },
+            GenRequest::new(1, vec![5, 6, 7], 2),
+            GenRequest::new(2, vec![8, 9, 10], 6),
         ];
         let out = e.generate_batch(&reqs);
         assert_eq!(out[0].tokens.len(), 2);
         assert_eq!(out[1].tokens.len(), 6);
         // The shorter request's tokens are a prefix of what it would have
         // produced alone.
-        let req = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 6, stop: None };
+        let req = GenRequest::new(1, vec![5, 6, 7], 6);
         let solo = e.generate_batch(&[req]);
         assert_eq!(solo[0].tokens[..2], out[0].tokens[..]);
     }
@@ -390,7 +576,7 @@ mod tests {
         let e = engine();
         let prompt = vec![5u32, 6, 7, 11];
         let want = legacy_generate(&e, &prompt, 6);
-        let req = GenRequest { id: 1, prompt: prompt.clone(), max_new: 6, stop: None };
+        let req = GenRequest::new(1, prompt.clone(), 6);
         let got = e.generate_batch(&[req]);
         assert_eq!(got[0].tokens, want);
     }
@@ -400,8 +586,8 @@ mod tests {
         // Greedy decoding must be batching-invariant when prompts share a
         // length (no padding effects).
         let e = engine();
-        let r1 = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 3, stop: None };
-        let r2 = GenRequest { id: 2, prompt: vec![8, 9, 10], max_new: 3, stop: None };
+        let r1 = GenRequest::new(1, vec![5, 6, 7], 3);
+        let r2 = GenRequest::new(2, vec![8, 9, 10], 3);
         let both = e.generate_batch(&[r1.clone(), r2.clone()]);
         let solo1 = e.generate_batch(&[r1]);
         let solo2 = e.generate_batch(&[r2]);
@@ -420,7 +606,7 @@ mod tests {
         let max_seq = e.config().max_seq;
         let prompt = vec![3u32, 4, 5];
         let max_new = 2 * max_seq + 5;
-        let req = GenRequest { id: 1, prompt: prompt.clone(), max_new, stop: None };
+        let req = GenRequest::new(1, prompt.clone(), max_new);
         let out = e.generate_batch(std::slice::from_ref(&req));
         assert_eq!(out[0].tokens.len(), max_new);
         // The wrap write first happens on the step that caches logical
@@ -455,7 +641,7 @@ mod tests {
         let score_kn = e_kn.score(&[5, 6, 7, 8]);
         assert!(score_kn.rel_err(&score_ov) < 1e-4, "err {}", score_kn.rel_err(&score_ov));
         // And the kernel engine generates well-formed batches.
-        let req = GenRequest { id: 1, prompt: vec![5, 6], max_new: 4, stop: None };
+        let req = GenRequest::new(1, vec![5, 6], 4);
         let out = e_kn.generate_batch(&[req]);
         assert_eq!(out[0].tokens.len(), 4);
     }
@@ -501,7 +687,7 @@ mod tests {
         let s_8 = e_int8.score(&prompt);
         assert!(s_8.rel_err(&s_f) < 0.1, "int8 score err {}", s_8.rel_err(&s_f));
         let max_new = 8usize;
-        let req = |id| GenRequest { id, prompt: prompt.clone(), max_new, stop: None };
+        let req = |id| GenRequest::new(id, prompt.clone(), max_new);
         let out_f = e_f32.generate_batch(&[req(1)]).remove(0).tokens;
         let out_8 = e_int8.generate_batch(&[req(2)]).remove(0).tokens;
         if out_8 != out_f {
@@ -533,7 +719,7 @@ mod tests {
         let s_f = e_f32.score(&prompt);
         let s_8 = e_fp8.score(&prompt);
         assert!(s_8.rel_err(&s_f) < 0.3, "fp8 score err {}", s_8.rel_err(&s_f));
-        let out = e_fp8.generate_batch(&[GenRequest { id: 1, prompt, max_new: 4, stop: None }]);
+        let out = e_fp8.generate_batch(&[GenRequest::new(1, prompt, 4)]);
         assert_eq!(out[0].tokens.len(), 4);
         assert!(out[0].tokens.iter().all(|&t| (t as usize) < 512));
     }
@@ -543,8 +729,8 @@ mod tests {
     #[test]
     fn int8_kv_batched_equals_solo() {
         let (_, e) = compressed_engine_pair(KvDtype::Int8);
-        let r1 = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 4, stop: None };
-        let r2 = GenRequest { id: 2, prompt: vec![8], max_new: 4, stop: None };
+        let r1 = GenRequest::new(1, vec![5, 6, 7], 4);
+        let r2 = GenRequest::new(2, vec![8], 4);
         let both = e.generate_batch(&[r1.clone(), r2.clone()]);
         assert_eq!(both[0].tokens, e.generate_batch(&[r1])[0].tokens);
         assert_eq!(both[1].tokens, e.generate_batch(&[r2])[0].tokens);
@@ -558,9 +744,9 @@ mod tests {
         // removes the padding entirely.
         let e = engine();
         let reqs = vec![
-            GenRequest { id: 1, prompt: vec![9], max_new: 4, stop: None },
-            GenRequest { id: 2, prompt: vec![5, 6, 7], max_new: 4, stop: None },
-            GenRequest { id: 3, prompt: vec![20, 21, 22, 23, 24, 25, 26], max_new: 4, stop: None },
+            GenRequest::new(1, vec![9], 4),
+            GenRequest::new(2, vec![5, 6, 7], 4),
+            GenRequest::new(3, vec![20, 21, 22, 23, 24, 25, 26], 4),
         ];
         let both = e.generate_batch(&reqs);
         for (req, got) in reqs.iter().zip(both.iter()) {
@@ -578,11 +764,11 @@ mod tests {
         let e = engine();
         // Discover what the model generates unconstrained, then stop at the
         // second token.
-        let free_req = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 6, stop: None };
+        let free_req = GenRequest::new(1, vec![5, 6, 7], 6);
         let free = e.generate_batch(&[free_req]);
         assert_eq!(free[0].tokens.len(), 6);
         let stop = free[0].tokens[1];
-        let stop_req = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 6, stop: Some(stop) };
+        let stop_req = GenRequest::new(1, vec![5, 6, 7], 6).with_stop(stop);
         let stopped = e.generate_batch(&[stop_req]);
         // Output is the unconstrained prefix up to and including the FIRST
         // occurrence of the stop token (greedy decoding is deterministic,
@@ -600,8 +786,8 @@ mod tests {
         // solo run.
         let e = engine();
         let mut pool = KvCachePool::new(e.config(), 1);
-        let r1 = GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 3, stop: None };
-        let r2 = GenRequest { id: 2, prompt: vec![40, 41], max_new: 4, stop: None };
+        let r1 = GenRequest::new(1, vec![5, 6, 7], 3);
+        let r2 = GenRequest::new(2, vec![40, 41], 4);
         let mut s1 = e.prefill(&r1, &mut pool);
         loop {
             let mut active: Vec<&mut SeqState> = vec![&mut s1];
@@ -626,12 +812,117 @@ mod tests {
     fn max_new_zero_is_done_without_forward() {
         let e = engine();
         let mut pool = KvCachePool::new(e.config(), 1);
-        let st = e.prefill(
-            &GenRequest { id: 7, prompt: vec![5], max_new: 0, stop: None },
-            &mut pool,
-        );
+        let st = e.prefill(&GenRequest::new(7, vec![5], 0), &mut pool);
         assert!(st.done);
         assert!(st.generated().is_empty());
         assert_eq!(pool.len(st.slot), 0);
+    }
+
+    #[test]
+    fn max_new_zero_prefill_begin_is_complete_untouched() {
+        let e = engine();
+        let mut pool = KvCachePool::new(e.config(), 1);
+        let pre = e.prefill_begin(&GenRequest::new(7, vec![5, 6], 0), &mut pool);
+        assert!(pre.is_complete());
+        assert_eq!(pre.remaining(), 0);
+        let st = pre.into_state();
+        assert!(st.done && st.generated().is_empty());
+        assert_eq!(pool.len(st.slot), 0);
+    }
+
+    /// Drive one request through the chunked prefill primitives (`chunk`
+    /// prompt tokens per tick) and then decode to completion.
+    fn chunked_generate(e: &Engine, req: &GenRequest, chunk: usize) -> Vec<u32> {
+        let mut pool = KvCachePool::with_dtype(e.config(), 1, e.kv_dtype());
+        let mut pre = e.prefill_begin(req, &mut pool);
+        while !pre.is_complete() {
+            let mut active = vec![&mut pre];
+            let stats = e.step_chunked(&mut active, &mut [], chunk, usize::MAX, &mut pool);
+            assert!(stats.prefill_tokens > 0, "chunked prefill stalled");
+            assert!(stats.prefill_tokens <= chunk, "chunk cap violated");
+        }
+        let mut st = pre.into_state();
+        while !st.done {
+            let mut active: Vec<&mut SeqState> = vec![&mut st];
+            e.decode_step(&mut active, &mut pool);
+        }
+        st.generated().to_vec()
+    }
+
+    #[test]
+    fn chunked_prefill_matches_oneshot_every_chunk_size() {
+        // Any chunk schedule must reproduce the one-shot prefill's tokens
+        // exactly — the correctness bar that lets the scheduler split long
+        // prompts across ticks.
+        let e = engine();
+        let prompt = vec![5u32, 6, 7, 11, 13, 2, 9, 40, 41];
+        let req = GenRequest::new(1, prompt, 6);
+        let want = e.generate_batch(std::slice::from_ref(&req))[0].tokens.clone();
+        for chunk in [1usize, 2, 3, 4, 16] {
+            assert_eq!(chunked_generate(&e, &req, chunk), want, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn step_chunked_interleaves_prefill_with_decode() {
+        // A prompt chunk and live decode steps share one batched tick; both
+        // sequences must still match their solo references token for token.
+        let e = engine();
+        let mut pool = KvCachePool::new(e.config(), 2);
+        let ra = GenRequest::new(1, vec![5, 6, 7], 4);
+        let rb = GenRequest::new(2, vec![20, 21, 22, 23, 24, 25, 26, 27], 3);
+        let mut sa = e.prefill(&ra, &mut pool);
+        let mut pre_b = e.prefill_begin(&rb, &mut pool);
+        while !pre_b.is_complete() {
+            let mut pres = vec![&mut pre_b];
+            let mut decs: Vec<&mut SeqState> = vec![&mut sa];
+            let stats = e.step_chunked(&mut pres, &mut decs, 3, usize::MAX, &mut pool);
+            assert!(stats.prefill_tokens > 0 && stats.prefill_tokens <= 3);
+        }
+        let mut sb = pre_b.into_state();
+        loop {
+            let mut decs: Vec<&mut SeqState> =
+                [&mut sa, &mut sb].into_iter().filter(|s| !s.done).collect();
+            if decs.is_empty() {
+                break;
+            }
+            e.decode_step(&mut decs, &mut pool);
+        }
+        assert_eq!(sa.generated(), &e.generate_batch(&[ra])[0].tokens[..], "decode seq");
+        assert_eq!(sb.generated(), &e.generate_batch(&[rb])[0].tokens[..], "chunked seq");
+    }
+
+    #[test]
+    fn prefill_budget_caps_total_chunk_tokens_per_tick() {
+        // Two prefills, per-sequence chunk 4 but a tick budget of 6: the
+        // first feeds 4, the second only 2, and nothing completes early.
+        let e = engine();
+        let mut pool = KvCachePool::new(e.config(), 2);
+        let ra = GenRequest::new(1, vec![5, 6, 7, 8, 9, 10], 2);
+        let rb = GenRequest::new(2, vec![30, 31, 32, 33, 34, 35], 2);
+        let mut pa = e.prefill_begin(&ra, &mut pool);
+        let mut pb = e.prefill_begin(&rb, &mut pool);
+        let mut pres = vec![&mut pa, &mut pb];
+        let stats = e.step_chunked(&mut pres, &mut [], 4, 6, &mut pool);
+        assert_eq!(stats.prefill_tokens, 6);
+        assert_eq!(stats.first_tokens, 0);
+        assert_eq!((pa.remaining(), pb.remaining()), (2, 4));
+        // A budget of 0 feeds nothing at all.
+        let mut pres = vec![&mut pa, &mut pb];
+        let stats = e.step_chunked(&mut pres, &mut [], 4, 0, &mut pool);
+        assert_eq!(stats.prefill_tokens, 0);
+        // Unbounded ticks finish both; tokens match the one-shot batch.
+        loop {
+            let mut pres: Vec<&mut PrefillState> =
+                [&mut pa, &mut pb].into_iter().filter(|p| !p.is_complete()).collect();
+            if pres.is_empty() {
+                break;
+            }
+            e.step_chunked(&mut pres, &mut [], usize::MAX, usize::MAX, &mut pool);
+        }
+        let (sa, sb) = (pa.into_state(), pb.into_state());
+        let solo = e.generate_batch(&[ra, rb]);
+        assert_eq!(sa.generated()[0], solo[0].tokens[0]);
+        assert_eq!(sb.generated()[0], solo[1].tokens[0]);
     }
 }

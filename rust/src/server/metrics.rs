@@ -1,6 +1,9 @@
 //! Serving metrics: request/batch counters, latency aggregates, and the
-//! continuous-scheduler gauges (queue depth, time-to-first-token and
-//! per-token decode latency percentiles).
+//! continuous-scheduler gauges (queue depth, queue wait, time-to-first-
+//! token and per-token decode latency percentiles). Queue wait
+//! (enqueue→admit) is recorded separately from TTFT so admission-policy
+//! effects — who gets a cache slot first under FIFO / SJF / fair-share —
+//! are visible on their own, not folded into prefill time.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -39,6 +42,8 @@ pub struct Metrics {
     latencies: Mutex<Vec<f64>>,
     /// Recent submit→first-token latencies (seconds), capped ring.
     ttfts: Mutex<Vec<f64>>,
+    /// Recent enqueue→admit waits (seconds), capped ring.
+    queue_waits: Mutex<Vec<f64>>,
     /// Recent decode-step durations (seconds) — the per-token decode
     /// latency every active sequence paid for that step.
     decode_steps: Mutex<Vec<f64>>,
@@ -56,6 +61,7 @@ impl Metrics {
             max_queue_depth: AtomicU64::new(0),
             latencies: Mutex::new(Vec::new()),
             ttfts: Mutex::new(Vec::new()),
+            queue_waits: Mutex::new(Vec::new()),
             decode_steps: Mutex::new(Vec::new()),
             busy: Mutex::new(0.0),
         }
@@ -82,6 +88,12 @@ impl Metrics {
     /// Record one request's submit→first-token latency.
     pub fn record_ttft(&self, ttft_s: f64) {
         push_capped(&self.ttfts, ttft_s);
+    }
+
+    /// Record one request's enqueue→admit wait (how long it sat in the
+    /// queue before an admission policy picked it).
+    pub fn record_queue_wait(&self, wait_s: f64) {
+        push_capped(&self.queue_waits, wait_s);
     }
 
     /// Record prefill work: tokens count toward throughput and the elapsed
@@ -142,6 +154,12 @@ impl Metrics {
         percentile(&self.ttfts, pct)
     }
 
+    /// Queue-wait (enqueue→admit) percentile (0..100) over the recent
+    /// window — the knob admission policies actually move.
+    pub fn queue_wait_pct(&self, pct: f64) -> f64 {
+        percentile(&self.queue_waits, pct)
+    }
+
     /// Per-token decode-latency percentile (0..100) over the recent window.
     pub fn decode_pct(&self, pct: f64) -> f64 {
         percentile(&self.decode_steps, pct)
@@ -160,7 +178,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} batches={} mean_batch={:.2} tokens={} queue={}(max {}) \
-             p50={:.1}ms p99={:.1}ms ttft_p50={:.1}ms ttft_p95={:.1}ms \
+             p50={:.1}ms p99={:.1}ms qwait_p50={:.1}ms qwait_p95={:.1}ms \
+             ttft_p50={:.1}ms ttft_p95={:.1}ms \
              decode_p50={:.2}ms decode_p95={:.2}ms tok/s={:.1}",
             self.requests(),
             self.batches(),
@@ -170,6 +189,8 @@ impl Metrics {
             self.max_queue_depth(),
             self.latency_pct(50.0) * 1e3,
             self.latency_pct(99.0) * 1e3,
+            self.queue_wait_pct(50.0) * 1e3,
+            self.queue_wait_pct(95.0) * 1e3,
             self.ttft_pct(50.0) * 1e3,
             self.ttft_pct(95.0) * 1e3,
             self.decode_pct(50.0) * 1e3,
@@ -209,9 +230,25 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.latency_pct(99.0), 0.0);
         assert_eq!(m.ttft_pct(50.0), 0.0);
+        assert_eq!(m.queue_wait_pct(95.0), 0.0);
         assert_eq!(m.decode_pct(95.0), 0.0);
         assert_eq!(m.tokens_per_busy_second(), 0.0);
         assert!(m.summary().contains("requests=0"));
+    }
+
+    #[test]
+    fn queue_wait_percentiles_track_admission() {
+        let m = Metrics::new();
+        m.record_queue_wait(0.002);
+        m.record_queue_wait(0.004);
+        m.record_queue_wait(0.050);
+        assert!((m.queue_wait_pct(50.0) - 0.004).abs() < 1e-12);
+        assert!((m.queue_wait_pct(95.0) - 0.050).abs() < 1e-12);
+        // Queue wait is its own histogram — TTFT stays untouched.
+        assert_eq!(m.ttft_pct(50.0), 0.0);
+        let s = m.summary();
+        assert!(s.contains("qwait_p50=4.0ms"), "{s}");
+        assert!(s.contains("qwait_p95=50.0ms"), "{s}");
     }
 
     #[test]

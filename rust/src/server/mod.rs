@@ -4,40 +4,53 @@
 //! flavored, std-thread based — the vendored crate set has no tokio):
 //!
 //! * [`engine`] — greedy-decode generation over a (compressed) model,
-//!   split into explicit serving phases: [`engine::Engine::prefill`]
-//!   admits one request into a per-sequence `model::KvCachePool` slot,
-//!   [`engine::Engine::decode_step`] advances every in-flight sequence one
-//!   token in a single batched forward (`model::forward_slots`), and
-//!   `generate_batch` is the run-to-completion wrapper. Per-slot prefill
-//!   means no left-padding: batched greedy output is token-for-token
-//!   identical to solo output. Cache slots are ring buffers with position
-//!   rebasing (logical position `L` lives at physical row `L % max_seq`,
-//!   its embedding at the window-relative index), so `decode_step` is
+//!   split into explicit serving phases: [`engine::Engine::prefill_begin`]
+//!   admits one request into a per-sequence `model::KvCachePool` slot as a
+//!   resumable [`engine::PrefillState`] (no forward yet), and
+//!   [`engine::Engine::step_chunked`] runs ONE batched forward
+//!   (`model::forward_slots`) per serving tick that both feeds each
+//!   in-progress prefill a bounded chunk of its prompt and advances every
+//!   in-flight decode sequence one token. `prefill`/`prefill_batch` (a
+//!   single unbounded chunk), `decode_step` (a prefill-free tick) and
+//!   `generate_batch` are wrappers over the same primitive. Chunked
+//!   prefill is token-for-token identical to one-shot prefill for every
+//!   chunk size and KV dtype (bit-equal logits on f32 — property-tested),
+//!   and per-slot prefill means no left-padding: batched greedy output is
+//!   token-for-token identical to solo output. Cache slots are ring
+//!   buffers with position rebasing, so `decode_step` is
 //!   depth-independent — generation past the context length costs one KV
 //!   overwrite + one window attention pass, not a sliding-window
-//!   re-prefill (`benches/decode.rs` records the flat per-token curve;
-//!   the `model::KvLayout::Shift` reference pins the semantics).
+//!   re-prefill (`benches/decode.rs` records the flat per-token curve).
 //!   Compressed engines dispatch every linear matmul to packed kernels
 //!   (`Engine::with_kernels` → `kernels::LinearOp`) — the paper's
 //!   Fig. 3/4 speedups at the token-generation level.
-//! * [`scheduler`] — the continuous-batching step-loop: admits queued
-//!   requests into the running decode batch as cache slots free up and
-//!   retires each sequence at its own `max_new`/stop token, so no request
-//!   pays for the slowest member of a lockstep batch. `benches/serve.rs`
-//!   measures it against the fixed-batch baseline under Poisson arrivals.
+//! * [`scheduler`] — the continuous-batching **token-budget step-loop**:
+//!   each tick admits queued requests into free cache slots per the
+//!   route's admission policy, then runs one `step_chunked` forward
+//!   bounded by `SchedPolicy::step_tokens` (live decodes first, prompt
+//!   chunks of ≤ `chunk_tokens` filling the rest). A long prompt
+//!   therefore never head-of-line-blocks the in-flight decodes — the
+//!   serve bench's head-of-line scenario measures chunked vs monolithic
+//!   TTFT directly. Sequences retire at their own `max_new`/stop token.
 //!   The serving KV cache pool's storage dtype follows the engine's
 //!   (`Engine::with_kv_dtype`) unless overridden per route via
 //!   `SchedPolicy::kv_dtype` (a `model::KvDtype`): int8 / fp8 cached K/V
 //!   holds ~4× fewer bytes per in-flight sequence while greedy output
 //!   stays batching-invariant.
 //! * [`batcher`] — the shared request queue: fixed batch formation under a
-//!   max-batch/max-wait policy for the legacy worker, non-blocking
-//!   `try_take` + untimed `wait_pending` admission for the scheduler.
+//!   max-batch/max-wait policy for the legacy worker; non-blocking
+//!   policy-driven `take_admit` + untimed `wait_pending` admission for
+//!   the scheduler. [`batcher::AdmitPolicy`] picks *which* queued
+//!   requests admit when slots are scarce: FIFO arrival order,
+//!   shortest-job-first on `max_new`, or per-client fair share
+//!   (round-robin over `GenRequest::client_id`, `priority` first).
 //! * [`router`] — routes requests to named engines (model registry), one
-//!   worker per engine in either serving mode.
-//! * [`api`] — newline-delimited-JSON TCP protocol + a blocking client.
-//! * [`metrics`] — counters, queue depth, TTFT and per-token decode
-//!   latency percentiles the benches read.
+//!   worker per engine in either serving mode; `submit_with` carries the
+//!   full `RequestOpts` (stop, priority, client id).
+//! * [`api`] — newline-delimited-JSON TCP protocol + a blocking client
+//!   (`priority`/`client_id` request fields, `ttft_ms` in responses).
+//! * [`metrics`] — counters, queue depth, queue-wait/TTFT/decode-latency
+//!   percentiles the benches read.
 
 pub mod api;
 pub mod batcher;
@@ -47,8 +60,8 @@ pub mod router;
 pub mod scheduler;
 
 pub use crate::model::{KvDtype, KvLayout};
-pub use batcher::{BatchPolicy, Batcher, Pending};
-pub use engine::{Engine, GenRequest, GenResult, SeqState};
+pub use batcher::{AdmitPolicy, AdmitState, BatchPolicy, Batcher, Pending};
+pub use engine::{Engine, GenRequest, GenResult, PrefillState, SeqState, StepStats};
 pub use metrics::Metrics;
-pub use router::Router;
+pub use router::{RequestOpts, Router};
 pub use scheduler::{SchedPolicy, Scheduler};

@@ -3,15 +3,21 @@
 //! The top of the L3 serving stack. Each registered engine gets its own
 //! [`Batcher`] queue and a worker thread, in one of two serving modes:
 //!
-//! * [`Router::register_continuous`] — a [`Scheduler`] step-loop with
-//!   per-sequence KV cache slots: requests are admitted into the running
-//!   decode batch and retire individually (the default for new deploys).
+//! * [`Router::register_continuous`] — a [`Scheduler`] token-budget
+//!   step-loop with per-sequence KV cache slots: requests are admitted
+//!   into the running decode batch per the route's admission policy
+//!   (`SchedPolicy::admit`), long prompts prefill in chunks interleaved
+//!   with decode steps, and sequences retire individually (the default
+//!   for new deploys).
 //! * [`Router::register`] — the legacy fixed-batch worker: batches drain
 //!   through [`Engine::generate_batch`] to completion before the next
 //!   batch forms (kept for comparison benches and compatibility).
 //!
-//! The router dispatches by model name; workers record per-request serve
-//! latency (queue wait + compute) in [`Metrics`].
+//! The router dispatches by model name; [`Router::submit_with`] /
+//! [`Router::generate_with`] carry the full [`RequestOpts`] (stop token,
+//! admission `priority`, `client_id`) down to the route's queue. Workers
+//! record per-request serve latency and enqueue→admit queue wait in
+//! [`Metrics`].
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{Engine, GenRequest, GenResult};
@@ -23,6 +29,28 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Per-request serving options beyond the prompt itself. `Default` gives
+/// 16 tokens, no stop, neutral priority, anonymous client.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestOpts {
+    /// Generation budget (tokens).
+    pub max_new: usize,
+    /// Optional early-stop token (included in the output).
+    pub stop: Option<u32>,
+    /// Admission priority — higher is admitted sooner under fair-share
+    /// admission (`server::batcher::AdmitPolicy::FairShare`).
+    pub priority: i32,
+    /// Originating client id; fair-share admission round-robins across
+    /// distinct ids so one client cannot starve the rest.
+    pub client_id: u64,
+}
+
+impl Default for RequestOpts {
+    fn default() -> Self {
+        RequestOpts { max_new: 16, stop: None, priority: 0, client_id: 0 }
+    }
+}
 
 struct Route {
     batcher: Arc<Batcher>,
@@ -64,6 +92,9 @@ impl Router {
         let worker = std::thread::spawn(move || {
             while let Some(batch) = worker_batcher.next_batch() {
                 let t0 = Instant::now();
+                for p in &batch {
+                    metrics.record_queue_wait(p.wait_so_far().as_secs_f64());
+                }
                 let reqs: Vec<GenRequest> = batch.iter().map(|p| p.req.clone()).collect();
                 let results = engine.generate_batch(&reqs);
                 let elapsed = t0.elapsed().as_secs_f64();
@@ -122,7 +153,18 @@ impl Router {
         max_new: usize,
         stop: Option<u32>,
     ) -> Result<GenResult> {
-        let rx = self.submit_opts(model, prompt, max_new, stop)?;
+        self.generate_with(model, prompt, RequestOpts { max_new, stop, ..Default::default() })
+    }
+
+    /// Blocking submit with the full per-request options (stop token,
+    /// admission priority, client id).
+    pub fn generate_with(
+        &self,
+        model: &str,
+        prompt: Vec<u32>,
+        opts: RequestOpts,
+    ) -> Result<GenResult> {
+        let rx = self.submit_with(model, prompt, opts)?;
         rx.recv_timeout(std::time::Duration::from_secs(120))
             .map_err(|_| anyhow!("generation timed out"))
     }
@@ -145,6 +187,19 @@ impl Router {
         max_new: usize,
         stop: Option<u32>,
     ) -> Result<std::sync::mpsc::Receiver<GenResult>> {
+        self.submit_with(model, prompt, RequestOpts { max_new, stop, ..Default::default() })
+    }
+
+    /// Non-blocking submit with the full per-request options — the one
+    /// place router requests become [`GenRequest`]s. `priority` and
+    /// `client_id` feed the route's admission policy
+    /// (`server::batcher::AdmitPolicy`); they are inert on FIFO routes.
+    pub fn submit_with(
+        &self,
+        model: &str,
+        prompt: Vec<u32>,
+        opts: RequestOpts,
+    ) -> Result<std::sync::mpsc::Receiver<GenResult>> {
         let route = self
             .routes
             .get(model)
@@ -153,7 +208,14 @@ impl Router {
             return Err(anyhow!("token {t} out of vocab (size {})", route.vocab));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        Ok(route.batcher.submit(GenRequest { id, prompt, max_new, stop }))
+        Ok(route.batcher.submit(GenRequest {
+            id,
+            prompt,
+            max_new: opts.max_new,
+            stop: opts.stop,
+            priority: opts.priority,
+            client_id: opts.client_id,
+        }))
     }
 
     /// Shut down all workers.
@@ -216,7 +278,7 @@ mod tests {
         // output, token-identical to its (equally int8) solo reference.
         let out = r.generate("sim-125m", vec![3, 4, 5], 3).unwrap();
         assert_eq!(out.tokens.len(), 3);
-        let req = GenRequest { id: 1, prompt: vec![3, 4, 5], max_new: 3, stop: None };
+        let req = GenRequest::new(1, vec![3, 4, 5], 3);
         let solo = engine().with_kv_dtype(KvDtype::Int8).generate_batch(&[req]);
         assert_eq!(out.tokens, solo[0].tokens);
     }
@@ -309,5 +371,29 @@ mod tests {
         let stopped = r.generate_opts("sim-125m", vec![5, 6, 7], 6, Some(stop)).unwrap();
         let cut = free.tokens.iter().position(|&t| t == stop).unwrap() + 1;
         assert_eq!(stopped.tokens, free.tokens[..cut].to_vec());
+    }
+
+    #[test]
+    fn priority_and_client_id_plumb_through_router() {
+        // A fair-share continuous route serves tagged requests correctly
+        // (admission metadata must never change tokens), and the
+        // continuous path reports a server-side TTFT.
+        let mut r = Router::new();
+        let policy = SchedPolicy {
+            max_slots: 2,
+            admit: crate::server::batcher::AdmitPolicy::FairShare,
+            chunk_tokens: 2,
+            step_tokens: 4,
+            ..Default::default()
+        };
+        r.register_continuous(engine(), policy);
+        let opts = RequestOpts { max_new: 3, priority: 2, client_id: 42, ..Default::default() };
+        let out = r.generate_with("sim-125m", vec![3, 4, 5], opts).unwrap();
+        assert_eq!(out.tokens.len(), 3);
+        assert!(out.ttft_s.unwrap() > 0.0);
+        let solo = engine().generate_batch(&[GenRequest::new(1, vec![3, 4, 5], 3)]);
+        assert_eq!(out.tokens, solo[0].tokens);
+        // Queue-wait metrics were recorded at admission.
+        assert!(r.metrics.queue_wait_pct(50.0) > 0.0);
     }
 }

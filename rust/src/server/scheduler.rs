@@ -1,43 +1,53 @@
-//! Continuous-batching scheduler: a step-loop over in-flight sequences
-//! with per-sequence KV cache slots.
+//! Continuous-batching scheduler: a token-budget step-loop over in-flight
+//! sequences with per-sequence KV cache slots and chunked prefill.
 //!
 //! The fixed-batch worker (`Router::register`) forms a batch, runs it to
 //! completion, and makes every request pay for the slowest one in its
-//! batch: late arrivals wait for the whole batch to drain, and short
-//! requests ride along to the batch's largest `max_new`. The scheduler
-//! removes the lockstep (vLLM-style):
+//! batch. The scheduler removes the lockstep (vLLM-style), and — since
+//! this revision — also removes the last head-of-line blocker: monolithic
+//! prompt prefill. Every tick is ONE batched forward
+//! ([`Engine::step_chunked`]) whose size is bounded by a **token budget**:
 //!
-//! * **Admit** — between decode steps it drains queued requests
-//!   ([`Batcher::try_take`]) into free [`KvCachePool`] slots and prefills
-//!   each one individually ([`Engine::prefill`]) — no left-padding, and a
-//!   new request waits one decode step, not one batch.
-//! * **Step** — every in-flight sequence advances one token in a single
-//!   batched forward ([`Engine::decode_step`]), whatever its depth; the
-//!   compressed kernels stay saturated across request churn, which is what
-//!   the paper's small-batch decode speedups (§4, Fig. 3/4) need to
-//!   survive at scale.
-//! * **Retire** — a sequence leaves the moment it hits its own `max_new`
-//!   or stop token; its result is sent and its slot returns to the pool
-//!   free-list for the next admission. Slots are ring buffers
-//!   (`model::KvCachePool`), so a sequence that decoded past the context
-//!   length — wrapping its slot — retires and recycles exactly like a
-//!   short one: reallocation resets the slot's logical length, and the
-//!   next occupant's writes simply overwrite the wrapped stripes.
+//! * **Admit** — between ticks it drains queued requests
+//!   ([`Batcher::take_admit`]) into free [`KvCachePool`] slots per the
+//!   route's [`AdmitPolicy`] — strict FIFO, shortest-job-first on
+//!   `max_new`, or per-client fair share over `GenRequest::client_id` /
+//!   `priority`. Admission claims the slot and creates a resumable
+//!   [`PrefillState`]; no forward pass runs yet, so admitting a long
+//!   prompt is O(1).
+//! * **Step** — the tick's forward interleaves work from both phases:
+//!   every in-flight decode sequence advances one token, and every
+//!   admitted-but-unprefilled prompt feeds its next chunk (≤
+//!   `chunk_tokens` per sequence; the tick's prefill total is capped at
+//!   `step_tokens − #decodes`). A 4×-long prompt therefore costs each
+//!   tick at most one chunk of extra work instead of stalling every
+//!   batchmate's decode for a whole monolithic prefill — TTFT for
+//!   concurrent short requests stays flat (measured by the head-of-line
+//!   scenario in `benches/serve.rs`). Chunking is invisible in the
+//!   output: chunked prefill is token-for-token identical to one-shot
+//!   prefill for every chunk size and KV dtype (bit-equal logits on f32
+//!   — see `tests/property.rs`), so greedy results still equal solo
+//!   decode exactly.
+//! * **Retire** — a prefill that finishes its prompt emits its first
+//!   token (that is when TTFT is recorded, and it is returned to the
+//!   client in `GenResult::ttft_s`) and joins the decode batch; a
+//!   sequence leaves the moment it hits its own `max_new` or stop token,
+//!   and its ring slot returns to the pool free-list for the next
+//!   admission.
 //!
-//! Generation depth never stalls the loop: a sequence past `max_seq`
-//! costs the same one-token forward as any other (the ring overwrites its
-//! oldest cached position in place), so one very long generation no
-//! longer degrades every batchmate's step latency the way the old
-//! sliding-window re-prefill did.
-//!
-//! When nothing is in flight the loop parks untimed on the batcher condvar
-//! ([`Batcher::wait_pending`]) — an idle server burns no CPU. Greedy
-//! decoding through per-sequence slots is batching-invariant, so any
-//! arrival order yields each request's solo-decode tokens (tested below
-//! for dense and kernel-backed engines).
+//! Generation depth never stalls the loop (ring slots make decode O(1)
+//! per token), and prompt *length* no longer stalls it either: per-tick
+//! forward cost is bounded by `max(step_tokens, live decodes)` — live
+//! decodes always advance, prompt chunks fill the remaining budget —
+//! whatever mix of phases is in flight. When nothing is in flight the loop parks untimed on the
+//! batcher condvar ([`Batcher::wait_pending`]) — an idle server burns no
+//! CPU. Greedy decoding through per-sequence slots is batching-invariant,
+//! so any arrival order, admission policy, and chunk schedule yields each
+//! request's solo-decode tokens (tested below for dense and kernel-backed
+//! engines, f32 and quantized KV).
 
-use super::batcher::Batcher;
-use super::engine::{Engine, GenResult, SeqState};
+use super::batcher::{AdmitPolicy, AdmitState, Batcher};
+use super::engine::{Engine, GenResult, PrefillState, SeqState};
 use super::metrics::Metrics;
 use crate::model::{KvCachePool, KvDtype};
 use std::sync::mpsc::Sender;
@@ -56,17 +66,50 @@ pub struct SchedPolicy {
     /// cache bytes per decode step, and greedy output stays
     /// batching-invariant (quantization is per sequence row).
     pub kv_dtype: Option<KvDtype>,
+    /// Per-tick token budget: each tick's batched forward processes every
+    /// live decode sequence (one token each — the tick's floor; keep
+    /// `step_tokens ≥ max_slots` or prefills stall whenever the decode
+    /// batch is full) plus at most `step_tokens − #decodes` prompt-chunk
+    /// tokens. Bounds the tick's latency — and therefore every
+    /// batchmate's per-token decode latency — whatever prompt lengths are
+    /// in flight. Setting this AND `chunk_tokens` to `usize::MAX`
+    /// restores monolithic prefill (the pre-chunking behavior, kept
+    /// measurable by the serve bench's head-of-line scenario).
+    pub step_tokens: usize,
+    /// Prompt tokens any ONE prefill may feed per tick (its chunk size).
+    /// Smaller chunks spread a long prompt across more ticks, trading its
+    /// own TTFT for everyone else's.
+    pub chunk_tokens: usize,
+    /// Which queued requests to admit when slots are scarce (FIFO /
+    /// shortest-job-first / per-client fair share).
+    pub admit: AdmitPolicy,
 }
 
 impl Default for SchedPolicy {
     fn default() -> Self {
-        SchedPolicy { max_slots: 8, kv_dtype: None }
+        SchedPolicy {
+            max_slots: 8,
+            kv_dtype: None,
+            step_tokens: 64,
+            chunk_tokens: 32,
+            admit: AdmitPolicy::Fifo,
+        }
     }
 }
 
-/// One admitted request: its decode state plus result/latency plumbing.
+/// One sequence in the decode phase: its state plus result plumbing.
 struct InFlight {
     state: SeqState,
+    result_slot: Sender<GenResult>,
+    enqueued: Instant,
+    /// Submit→first-token latency, set when the prefill completed
+    /// (returned to the client in [`GenResult::ttft_s`]).
+    ttft_s: Option<f64>,
+}
+
+/// One admitted sequence still feeding its prompt, chunk by chunk.
+struct Filling {
+    pre: PrefillState,
     result_slot: Sender<GenResult>,
     enqueued: Instant,
 }
@@ -80,6 +123,8 @@ pub struct Scheduler {
 impl Scheduler {
     pub fn new(engine: Arc<Engine>, policy: SchedPolicy) -> Self {
         assert!(policy.max_slots > 0, "scheduler needs at least one slot");
+        assert!(policy.step_tokens > 0, "token budget must be positive");
+        assert!(policy.chunk_tokens > 0, "chunk size must be positive");
         Scheduler { engine, policy }
     }
 
@@ -104,57 +149,106 @@ impl Scheduler {
             self.engine.kv_layout(),
         );
         let mut flights: Vec<InFlight> = Vec::new();
+        let mut filling: Vec<Filling> = Vec::new();
+        let mut admit_state = AdmitState::default();
         loop {
             // ── Admit ─────────────────────────────────────────────────
-            if flights.is_empty() && !batcher.wait_pending() {
+            if flights.is_empty() && filling.is_empty() && !batcher.wait_pending() {
                 return; // closed + drained + nothing in flight
             }
-            let free = self.policy.max_slots - flights.len();
-            let pendings = batcher.try_take(free);
+            let free = self.policy.max_slots - flights.len() - filling.len();
+            let pendings = batcher.take_admit(free, self.policy.admit, &mut admit_state);
             if !pendings.is_empty() {
                 // Backlog at admission time: what we just took plus what
                 // still waits behind it.
                 metrics.record_queue_depth(batcher.depth() + pendings.len());
-                // All admitted prompts prefill in ONE batched forward.
-                let reqs: Vec<_> = pendings.iter().map(|p| p.req.clone()).collect();
-                let t0 = Instant::now();
-                let states = self.engine.prefill_batch(&reqs, &mut pool);
-                let prefilled = reqs.iter().filter(|r| r.max_new > 0).count();
-                if prefilled > 0 {
-                    metrics.record_prefill(prefilled, t0.elapsed().as_secs_f64());
-                }
-                for (state, pending) in states.into_iter().zip(pendings) {
-                    if pending.req.max_new > 0 {
-                        metrics.record_ttft(pending.enqueued.elapsed().as_secs_f64());
+                for pending in pendings {
+                    metrics.record_queue_wait(pending.wait_so_far().as_secs_f64());
+                    // O(1): claims the slot, runs no forward — the prompt
+                    // feeds in chunks inside the regular ticks below.
+                    let pre = self.engine.prefill_begin(&pending.req, &mut pool);
+                    if pre.is_complete() {
+                        // max_new == 0: nothing to run, retire untouched.
+                        let flight = InFlight {
+                            state: pre.into_state(),
+                            result_slot: pending.result_slot,
+                            enqueued: pending.enqueued,
+                            ttft_s: None,
+                        };
+                        Self::retire(flight, &mut pool, metrics);
+                    } else {
+                        filling.push(Filling {
+                            pre,
+                            result_slot: pending.result_slot,
+                            enqueued: pending.enqueued,
+                        });
                     }
+                }
+            }
+            if flights.is_empty() && filling.is_empty() {
+                continue; // nothing admitted (e.g. only max_new=0 requests)
+            }
+
+            // ── Step: one budgeted batched forward ────────────────────
+            // Live decodes always advance (one token each); prompt chunks
+            // fill whatever budget remains. When only prefills are in
+            // flight the whole budget is theirs, so progress is
+            // guaranteed either way.
+            let budget = self.policy.step_tokens.saturating_sub(flights.len());
+            let t0 = Instant::now();
+            let stats = {
+                let mut pres: Vec<&mut PrefillState> =
+                    filling.iter_mut().map(|f| &mut f.pre).collect();
+                let mut active: Vec<&mut SeqState> =
+                    flights.iter_mut().map(|f| &mut f.state).collect();
+                self.engine.step_chunked(
+                    &mut pres,
+                    &mut active,
+                    self.policy.chunk_tokens,
+                    budget,
+                    &mut pool,
+                )
+            };
+            let elapsed = t0.elapsed().as_secs_f64();
+            // One forward, one busy accounting: the decode side claims the
+            // tick's elapsed time when any decode ran; otherwise the
+            // prefill side does — including mid-prompt ticks that
+            // completed nothing, which still ran a real forward (only
+            // first tokens count toward generated-token throughput).
+            if stats.decode_tokens > 0 {
+                metrics.record_decode_step(stats.decode_tokens, elapsed);
+                if stats.first_tokens > 0 {
+                    metrics.record_prefill(stats.first_tokens, 0.0);
+                }
+            } else if stats.prefill_tokens > 0 {
+                metrics.record_prefill(stats.first_tokens, elapsed);
+            }
+
+            // ── Retire / promote ──────────────────────────────────────
+            // Prefills that finished their prompt emitted their first
+            // token this tick: record TTFT and move them to the decode
+            // batch (or straight to retirement, e.g. max_new == 1).
+            let mut i = 0;
+            while i < filling.len() {
+                if filling[i].pre.is_complete() {
+                    let f = filling.swap_remove(i);
+                    let ttft = f.enqueued.elapsed().as_secs_f64();
+                    metrics.record_ttft(ttft);
                     let flight = InFlight {
-                        state,
-                        result_slot: pending.result_slot,
-                        enqueued: pending.enqueued,
+                        state: f.pre.into_state(),
+                        result_slot: f.result_slot,
+                        enqueued: f.enqueued,
+                        ttft_s: Some(ttft),
                     };
                     if flight.state.done {
                         Self::retire(flight, &mut pool, metrics);
                     } else {
                         flights.push(flight);
                     }
+                } else {
+                    i += 1;
                 }
             }
-            if flights.is_empty() {
-                continue; // nothing admitted (e.g. only max_new=0 requests)
-            }
-
-            // ── Step ──────────────────────────────────────────────────
-            let t0 = Instant::now();
-            let made = {
-                let mut active: Vec<&mut SeqState> =
-                    flights.iter_mut().map(|f| &mut f.state).collect();
-                self.engine.decode_step(&mut active, &mut pool)
-            };
-            if made > 0 {
-                metrics.record_decode_step(made, t0.elapsed().as_secs_f64());
-            }
-
-            // ── Retire ────────────────────────────────────────────────
             let mut i = 0;
             while i < flights.len() {
                 if flights[i].state.done {
@@ -174,6 +268,7 @@ impl Scheduler {
         let _ = flight.result_slot.send(GenResult {
             id: flight.state.id,
             tokens: flight.state.generated().to_vec(),
+            ttft_s: flight.ttft_s,
         });
     }
 }
@@ -208,14 +303,15 @@ mod tests {
         Arc::new(Engine::with_kernels("kn", cfg, Arc::new(w), Arc::new(cw)))
     }
 
-    /// Run `reqs` through a live scheduler (staggered arrivals) and return
-    /// each request's tokens, in request order. The serving pool inherits
-    /// the engine's own KV dtype (policy `kv_dtype: None`), so solo
-    /// `generate_batch` runs are the exact reference.
-    fn serve(
+    /// Run `reqs` through a live scheduler (staggered arrivals) under
+    /// `policy` and return each request's tokens, in request order. The
+    /// serving pool inherits the engine's own KV dtype unless the policy
+    /// overrides it, so solo `generate_batch` runs are the exact
+    /// reference.
+    fn serve_policy(
         engine: Arc<Engine>,
         reqs: &[GenRequest],
-        max_slots: usize,
+        policy: SchedPolicy,
         stagger: &[u64],
     ) -> Vec<Vec<u32>> {
         let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
@@ -224,7 +320,6 @@ mod tests {
             let b = batcher.clone();
             let m = metrics.clone();
             let e = engine.clone();
-            let policy = SchedPolicy { max_slots, kv_dtype: None };
             std::thread::spawn(move || Scheduler::new(e, policy).run(&b, &m))
         };
         let mut rxs = Vec::new();
@@ -246,25 +341,33 @@ mod tests {
         outs
     }
 
-    /// Acceptance property: for any arrival order of mixed-length requests,
-    /// the continuous scheduler's greedy tokens equal each request's solo
-    /// `generate_batch` tokens.
-    fn solo_equivalence(engine: Arc<Engine>, seed: u64) {
+    fn serve(
+        engine: Arc<Engine>,
+        reqs: &[GenRequest],
+        max_slots: usize,
+        stagger: &[u64],
+    ) -> Vec<Vec<u32>> {
+        let policy = SchedPolicy { max_slots, ..Default::default() };
+        serve_policy(engine, reqs, policy, stagger)
+    }
+
+    /// Acceptance property: for any arrival order of mixed-length requests
+    /// and any admission/chunking policy, the continuous scheduler's
+    /// greedy tokens equal each request's solo `generate_batch` tokens.
+    fn solo_equivalence_policy(engine: Arc<Engine>, seed: u64, policy: SchedPolicy) {
         let mut rng = Pcg32::seeded(seed);
         let n = 6u64;
         let reqs: Vec<GenRequest> = (0..n)
             .map(|i| {
                 let plen = 1 + rng.below(10) as usize;
-                GenRequest {
-                    id: i,
-                    prompt: (0..plen).map(|_| 2 + rng.below(120)).collect(),
-                    max_new: 1 + rng.below(6) as usize,
-                    stop: None,
-                }
+                let prompt = (0..plen).map(|_| 2 + rng.below(120)).collect();
+                GenRequest::new(i, prompt, 1 + rng.below(6) as usize)
+                    .with_client(rng.below(3) as u64)
+                    .with_priority(rng.below(3) as i32 - 1)
             })
             .collect();
         let stagger: Vec<u64> = (0..n).map(|_| rng.below(3) as u64).collect();
-        let outs = serve(engine.clone(), &reqs, 3, &stagger);
+        let outs = serve_policy(engine.clone(), &reqs, policy, &stagger);
         for (req, got) in reqs.iter().zip(outs.iter()) {
             let solo = engine.generate_batch(&[req.clone()]);
             assert_eq!(
@@ -275,6 +378,11 @@ mod tests {
                 req.max_new
             );
         }
+    }
+
+    fn solo_equivalence(engine: Arc<Engine>, seed: u64) {
+        let policy = SchedPolicy { max_slots: 3, ..Default::default() };
+        solo_equivalence_policy(engine, seed, policy);
     }
 
     #[test]
@@ -289,10 +397,30 @@ mod tests {
         solo_equivalence(kernel_engine(8), 4);
     }
 
+    /// Solo equivalence under every admission policy, with chunking tight
+    /// enough (chunk 3, budget 4) that prompts split across several ticks
+    /// and prefill chunks interleave with live decode steps — admission
+    /// order and chunk schedules must never change anyone's tokens.
+    #[test]
+    fn continuous_equals_solo_under_each_admit_policy() {
+        for admit in [AdmitPolicy::Fifo, AdmitPolicy::Sjf, AdmitPolicy::FairShare] {
+            let policy = SchedPolicy {
+                max_slots: 3,
+                chunk_tokens: 3,
+                step_tokens: 4,
+                admit,
+                ..Default::default()
+            };
+            solo_equivalence_policy(dense_engine(7), 5, policy);
+        }
+    }
+
     /// Solo-equivalence property with a QUANTIZED serving KV cache: the
-    /// scheduler pool and the solo reference both store int8 K/V, and
+    /// scheduler pool and the solo reference both store int8/fp8 K/V, and
     /// per-row quantization keeps greedy decode batching-invariant, so any
-    /// arrival order still reproduces each request's solo tokens exactly.
+    /// arrival order still reproduces each request's solo tokens exactly —
+    /// chunked prefill included (quantize-on-write is per row, so chunking
+    /// cannot perturb the stored codes).
     #[test]
     fn continuous_equals_solo_quantized_kv() {
         let cfg = by_name("sim-125m").unwrap();
@@ -303,7 +431,13 @@ mod tests {
                 Engine::new("dense-qkv", cfg.clone(), Arc::new(w.clone()), None)
                     .with_kv_dtype(dtype),
             );
-            solo_equivalence(engine, 5);
+            let policy = SchedPolicy {
+                max_slots: 3,
+                chunk_tokens: 4,
+                step_tokens: 6,
+                ..Default::default()
+            };
+            solo_equivalence_policy(engine, 5, policy);
         }
     }
 
@@ -328,14 +462,21 @@ mod tests {
         let engine = Arc::new(Engine::new("ring", cfg.clone(), Arc::new(w), None));
         let long_new = 2 * cfg.max_seq + 3; // wraps the slot twice
         let reqs = vec![
-            GenRequest { id: 0, prompt: vec![5, 6, 7], max_new: long_new, stop: None },
-            GenRequest { id: 1, prompt: vec![9], max_new: 2, stop: None },
-            GenRequest { id: 2, prompt: vec![11, 12], max_new: 3, stop: None },
-            GenRequest { id: 3, prompt: vec![13], max_new: long_new, stop: None },
+            GenRequest::new(0, vec![5, 6, 7], long_new),
+            GenRequest::new(1, vec![9], 2),
+            GenRequest::new(2, vec![11, 12], 3),
+            GenRequest::new(3, vec![13], long_new),
         ];
         // 2 slots, 4 requests: the long sequences' wrapped slots must be
-        // reused by the later admissions.
-        let outs = serve(engine.clone(), &reqs, 2, &[]);
+        // reused by the later admissions. Chunk 2 also exercises chunked
+        // prefill against the tiny context window.
+        let policy = SchedPolicy {
+            max_slots: 2,
+            chunk_tokens: 2,
+            step_tokens: 3,
+            ..Default::default()
+        };
+        let outs = serve_policy(engine.clone(), &reqs, policy, &[]);
         for (req, got) in reqs.iter().zip(outs.iter()) {
             assert_eq!(got.len(), req.max_new, "request {} length", req.id);
             let solo = engine.generate_batch(std::slice::from_ref(req));
@@ -349,12 +490,7 @@ mod tests {
         // reused by newly admitted requests.
         let engine = dense_engine(9);
         let reqs: Vec<GenRequest> = (0..6u64)
-            .map(|i| GenRequest {
-                id: i,
-                prompt: vec![3 + i as u32],
-                max_new: 2 + (i as usize % 3),
-                stop: None,
-            })
+            .map(|i| GenRequest::new(i, vec![3 + i as u32], 2 + (i as usize % 3)))
             .collect();
         let outs = serve(engine.clone(), &reqs, 2, &[]);
         for (req, got) in reqs.iter().zip(outs.iter()) {
@@ -367,17 +503,12 @@ mod tests {
     fn stop_token_frees_slot_early() {
         let engine = dense_engine(10);
         // Find the unconstrained second token, then use it as the stop.
-        let probe = engine.generate_batch(&[GenRequest {
-            id: 0,
-            prompt: vec![5, 6, 7],
-            max_new: 8,
-            stop: None,
-        }]);
+        let probe = engine.generate_batch(&[GenRequest::new(0, vec![5, 6, 7], 8)]);
         let stop = probe[0].tokens[1];
         let reqs = vec![
-            GenRequest { id: 1, prompt: vec![5, 6, 7], max_new: 8, stop: Some(stop) },
-            GenRequest { id: 2, prompt: vec![9, 10], max_new: 3, stop: None },
-            GenRequest { id: 3, prompt: vec![11], max_new: 3, stop: None },
+            GenRequest::new(1, vec![5, 6, 7], 8).with_stop(stop),
+            GenRequest::new(2, vec![9, 10], 3),
+            GenRequest::new(3, vec![11], 3),
         ];
         // One slot: the stopped sequence must retire (freeing its slot)
         // before the later requests can run at all.
@@ -396,12 +527,7 @@ mod tests {
         let metrics = Arc::new(Metrics::new());
         let mut rxs = Vec::new();
         for i in 0..3u64 {
-            rxs.push(batcher.submit(GenRequest {
-                id: i,
-                prompt: vec![4 + i as u32],
-                max_new: 2,
-                stop: None,
-            }));
+            rxs.push(batcher.submit(GenRequest::new(i, vec![4 + i as u32], 2)));
         }
         batcher.close(); // close BEFORE the scheduler even starts
         let worker = {
@@ -415,10 +541,41 @@ mod tests {
         for rx in rxs {
             let out = rx.recv_timeout(Duration::from_secs(60)).unwrap();
             assert_eq!(out.tokens.len(), 2);
+            // The scheduler reports each request's server-side TTFT.
+            assert!(out.ttft_s.unwrap() > 0.0);
         }
         worker.join().unwrap();
         assert_eq!(metrics.requests(), 3);
         assert!(metrics.ttft_pct(50.0) > 0.0);
+        // Queue wait (enqueue→admit) is recorded for every admission.
+        assert!(metrics.queue_wait_pct(50.0) > 0.0);
         assert!(metrics.tokens() >= 6);
+    }
+
+    /// One long prompt chunk-feeding while short requests decode: every
+    /// request must still match its solo reference token for token — the
+    /// interleaved tick must not perturb anyone. (Latency effects are the
+    /// serve bench's head-of-line scenario; this pins correctness.)
+    #[test]
+    fn long_prompt_interleaves_with_decodes_under_budget() {
+        let engine = dense_engine(12);
+        let long_prompt: Vec<u32> = (0..40).map(|i| 2 + (i % 60) as u32).collect();
+        let reqs = vec![
+            GenRequest::new(0, vec![5, 6], 6),
+            GenRequest::new(1, long_prompt, 2),
+            GenRequest::new(2, vec![9], 2),
+        ];
+        let policy = SchedPolicy {
+            max_slots: 3,
+            chunk_tokens: 4,
+            step_tokens: 6,
+            ..Default::default()
+        };
+        // Short request first so it is mid-decode while the long prompt
+        // chunk-feeds; all three must still match their solo references.
+        let outs = serve_policy(engine.clone(), &reqs, policy, &[0, 1, 1]);
+        for (req, got) in reqs.iter().zip(outs.iter()) {
+            assert_eq!(got, &engine.generate_batch(&[req.clone()])[0].tokens, "req {}", req.id);
+        }
     }
 }

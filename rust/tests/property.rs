@@ -214,7 +214,7 @@ fn prop_ring_decode_equals_sliding_window_reference() {
             let plen = 1 + rng.below_usize(cfg.max_seq - 1);
             let prompt: Vec<u32> = (0..plen).map(|_| rng.below(cfg.vocab as u32)).collect();
             let max_new = 2 * cfg.max_seq + 1 + rng.below_usize(cfg.max_seq);
-            let req = GenRequest { id: 0, prompt, max_new, stop: None };
+            let req = GenRequest::new(0, prompt, max_new);
             let out_ring = ring.generate_batch(std::slice::from_ref(&req));
             let out_shift = shift.generate_batch(&[req]);
             assert_eq!(out_ring[0].tokens.len(), max_new);
@@ -224,6 +224,106 @@ fn prop_ring_decode_equals_sliding_window_reference() {
                 "seed {seed} dtype {} diverged across the overflow boundary",
                 dtype.name()
             );
+        }
+    }
+}
+
+#[test]
+fn prop_chunked_prefill_equals_oneshot() {
+    // Chunked prefill must be indistinguishable from one-shot prefill for
+    // every chunk size {1, 3, 16, ≥prompt}, every KV storage dtype, and
+    // around the ring-wrap boundary: prompts longer than the context
+    // window feed their trailing window (same as one-shot), and the
+    // subsequent decode runs past max_seq so the ring wraps. Per-chunk
+    // K/V writes are identical to the one-shot rows (quantize-on-write is
+    // per row) and each query row attends over the same logical prefix in
+    // the same order, so greedy tokens must match EXACTLY — and on f32 KV
+    // the prefill logits are bit-equal (asserted at the forward_slots
+    // level below).
+    use slim::model::{forward_slots, KvCachePool, Linears};
+    let cfg = ModelConfig {
+        name: "chunk-prop".to_string(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff_ratio: 2,
+        vocab: 96,
+        max_seq: 10,
+        stands_for: "chunked prefill property test".to_string(),
+    };
+    let chunked_generate = |engine: &Engine, req: &GenRequest, chunk: usize| -> Vec<u32> {
+        let mut pool = KvCachePool::with_dtype(engine.config(), 1, engine.kv_dtype());
+        let mut pre = engine.prefill_begin(req, &mut pool);
+        while !pre.is_complete() {
+            let mut active = vec![&mut pre];
+            let stats = engine.step_chunked(&mut active, &mut [], chunk, usize::MAX, &mut pool);
+            assert!(stats.prefill_tokens > 0 && stats.prefill_tokens <= chunk);
+        }
+        let mut st = pre.into_state();
+        while !st.done {
+            let mut active = vec![&mut st];
+            engine.decode_step(&mut active, &mut pool);
+        }
+        st.generated().to_vec()
+    };
+    for seed in [1u64, 2, 3] {
+        let mut rng = Pcg32::seeded(seed);
+        let weights = Arc::new(init(&cfg, &mut rng));
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let engine =
+                Engine::new("chunk", cfg.clone(), weights.clone(), None).with_kv_dtype(dtype);
+            // One short prompt and one longer than the context window (its
+            // trailing window feeds; decode then wraps the ring).
+            for plen in [4usize, cfg.max_seq + 3] {
+                let prompt: Vec<u32> =
+                    (0..plen).map(|_| rng.below(cfg.vocab as u32)).collect();
+                let max_new = cfg.max_seq + 4; // decode wraps the ring
+                let req = GenRequest::new(0, prompt.clone(), max_new);
+                let want = engine.generate_batch(std::slice::from_ref(&req))[0].tokens.clone();
+                assert_eq!(want.len(), max_new);
+                for chunk in [1usize, 3, 16, plen] {
+                    let got = chunked_generate(&engine, &req, chunk);
+                    assert_eq!(
+                        got,
+                        want,
+                        "seed {seed} dtype {} plen {plen} chunk {chunk} diverged",
+                        dtype.name()
+                    );
+                }
+            }
+            // forward_slots-level logit equality for a random chunk
+            // partition of a window-filling prompt (bit-equal: exact
+            // assert_eq on every row, all dtypes — the stored codes and
+            // read order are identical however the prompt is split).
+            let prompt: Vec<u32> =
+                (0..cfg.max_seq).map(|_| rng.below(cfg.vocab as u32)).collect();
+            let mut one_pool = KvCachePool::with_dtype(&cfg, 1, dtype);
+            let s1 = one_pool.alloc().unwrap();
+            let oneshot =
+                forward_slots(&cfg, &weights, &[(s1, &prompt[..])], &mut one_pool, &Linears::Dense);
+            let mut pool = KvCachePool::with_dtype(&cfg, 1, dtype);
+            let slot = pool.alloc().unwrap();
+            let mut fed = 0usize;
+            while fed < prompt.len() {
+                let c = 1 + rng.below((prompt.len() - fed) as u32) as usize;
+                let lg = forward_slots(
+                    &cfg,
+                    &weights,
+                    &[(slot, &prompt[fed..fed + c])],
+                    &mut pool,
+                    &Linears::Dense,
+                );
+                for s in 0..c {
+                    assert_eq!(
+                        lg.row(s),
+                        oneshot.row(fed + s),
+                        "seed {seed} dtype {} row {} not bit-equal",
+                        dtype.name(),
+                        fed + s
+                    );
+                }
+                fed += c;
+            }
         }
     }
 }

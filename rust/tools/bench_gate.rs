@@ -6,15 +6,20 @@
 //! if a gated throughput metric regressed more than the allowed fraction
 //! (default 20%, override via `BENCH_GATE_MAX_REGRESSION`, e.g. `0.3`).
 //!
-//! Gated metrics (the two headline serving numbers):
+//! Gated metrics (the headline serving numbers):
 //!
 //! * int4-2:4 cached-decode tokens/sec (`BENCH_decode.json`,
-//!   `results.int4-2:4-cached.decode_tok_per_s`);
+//!   `results.int4-2:4-cached.decode_tok_per_s`) — higher is better;
 //! * continuous-batching serve throughput on the int4-2:4 engine
-//!   (`BENCH_serve.json`, `results.int4-2:4-continuous.tok_per_s`).
+//!   (`BENCH_serve.json`, `results.int4-2:4-continuous.tok_per_s`) —
+//!   higher is better;
+//! * head-of-line short-population TTFT p95 under chunked prefill
+//!   (`BENCH_serve.json`, `results.hol-chunked.short_ttft_p95_ms`) —
+//!   LOWER is better: this is the tail latency chunked prefill exists to
+//!   protect, so a >20% increase fails the gate.
 //!
 //! Informational metrics are printed alongside but never fail the gate
-//! (wall-clock noise on shared runners makes broad gating flaky; the two
+//! (wall-clock noise on shared runners makes broad gating flaky; the
 //! gated numbers are the ones the paper's serving claims rest on).
 //!
 //! A metric missing from the *current* run fails the gate (the bench broke
@@ -33,27 +38,40 @@
 use slim::util::json::Json;
 use std::path::Path;
 
-/// One metric to compare: (file, dotted JSON path, gated?).
-const METRICS: &[(&str, &[&str], bool)] = &[
-    ("BENCH_decode.json", &["results", "int4-2:4-cached", "decode_tok_per_s"], true),
-    ("BENCH_serve.json", &["results", "int4-2:4-continuous", "tok_per_s"], true),
-    ("BENCH_decode.json", &["results", "int4-cached", "decode_tok_per_s"], false),
-    ("BENCH_decode.json", &["results", "dense-cached", "decode_tok_per_s"], false),
-    ("BENCH_serve.json", &["results", "dense-continuous", "tok_per_s"], false),
+/// One metric to compare: (file, dotted JSON path, gated?, lower_is_better?).
+const METRICS: &[(&str, &[&str], bool, bool)] = &[
+    ("BENCH_decode.json", &["results", "int4-2:4-cached", "decode_tok_per_s"], true, false),
+    ("BENCH_serve.json", &["results", "int4-2:4-continuous", "tok_per_s"], true, false),
+    ("BENCH_serve.json", &["results", "hol-chunked", "short_ttft_p95_ms"], true, true),
+    ("BENCH_decode.json", &["results", "int4-cached", "decode_tok_per_s"], false, false),
+    ("BENCH_decode.json", &["results", "dense-cached", "decode_tok_per_s"], false, false),
+    ("BENCH_serve.json", &["results", "dense-continuous", "tok_per_s"], false, false),
+    ("BENCH_serve.json", &["results", "hol-monolithic", "short_ttft_p95_ms"], false, true),
+    ("BENCH_serve.json", &["results", "hol-chunked-fair", "short_ttft_p95_ms"], false, true),
 ];
 
-/// Whether a higher-is-better metric passes the gate at `max_regression`
-/// (fractional drop allowed vs baseline).
-fn passes(baseline: f64, current: f64, max_regression: f64) -> bool {
-    current >= baseline * (1.0 - max_regression)
+/// Whether a metric passes the gate at `max_regression` — the fractional
+/// move in the bad direction allowed vs baseline (drop for throughput
+/// metrics, rise for latency metrics).
+fn passes(baseline: f64, current: f64, max_regression: f64, lower_is_better: bool) -> bool {
+    if lower_is_better {
+        current <= baseline * (1.0 + max_regression)
+    } else {
+        current >= baseline * (1.0 - max_regression)
+    }
 }
 
-/// Fractional change vs baseline (positive = regression).
-fn regression(baseline: f64, current: f64) -> f64 {
+/// Fractional change vs baseline in the metric's bad direction
+/// (positive = regression, whichever direction "bad" is).
+fn regression(baseline: f64, current: f64, lower_is_better: bool) -> f64 {
     if baseline <= 0.0 {
         return 0.0;
     }
-    1.0 - current / baseline
+    if lower_is_better {
+        current / baseline - 1.0
+    } else {
+        1.0 - current / baseline
+    }
 }
 
 fn lookup(doc: &Json, path: &[&str]) -> Option<f64> {
@@ -99,7 +117,7 @@ fn main() {
     );
 
     let mut failed = false;
-    for &(file, path, gated) in METRICS {
+    for &(file, path, gated, lower_is_better) in METRICS {
         let name = format!("{file}:{}", path.join("."));
         let current_doc = load(current_dir, file);
         let baseline_doc = load(baseline_dir, file);
@@ -120,7 +138,7 @@ fn main() {
         let baseline = baseline_doc.ok().as_ref().and_then(|d| lookup(d, path));
         match (baseline, current) {
             (Some(b), Some(c)) => {
-                let ok = !gated || passes(b, c, max_regression);
+                let ok = !gated || passes(b, c, max_regression, lower_is_better);
                 if !ok {
                     failed = true;
                 }
@@ -129,9 +147,11 @@ fn main() {
                     (true, false) => "FAIL",
                     (false, _) => "info",
                 };
+                // Printed change is signed so positive = improvement,
+                // whichever direction the metric considers good.
                 println!(
                     "{name:<58} {b:>10.1} {c:>10.1} {:>+7.1}%  {status}",
-                    -regression(b, c) * 100.0
+                    -regression(b, c, lower_is_better) * 100.0
                 );
             }
             (None, Some(c)) => {
@@ -166,11 +186,18 @@ mod tests {
     #[test]
     fn gate_decision() {
         // 20% tolerance: 79 of 100 fails, 81 passes, improvements pass.
-        assert!(!passes(100.0, 79.0, 0.20));
-        assert!(passes(100.0, 81.0, 0.20));
-        assert!(passes(100.0, 250.0, 0.20));
-        assert!((regression(100.0, 80.0) - 0.2).abs() < 1e-12);
-        assert!(regression(0.0, 50.0) == 0.0);
+        assert!(!passes(100.0, 79.0, 0.20, false));
+        assert!(passes(100.0, 81.0, 0.20, false));
+        assert!(passes(100.0, 250.0, 0.20, false));
+        assert!((regression(100.0, 80.0, false) - 0.2).abs() < 1e-12);
+        assert!(regression(0.0, 50.0, false) == 0.0);
+        // Lower-is-better (latency): 121 of 100 fails, 119 passes, and an
+        // improvement (lower) passes; regression sign flips accordingly.
+        assert!(!passes(100.0, 121.0, 0.20, true));
+        assert!(passes(100.0, 119.0, 0.20, true));
+        assert!(passes(100.0, 40.0, 0.20, true));
+        assert!((regression(100.0, 120.0, true) - 0.2).abs() < 1e-12);
+        assert!((regression(100.0, 80.0, true) + 0.2).abs() < 1e-12);
     }
 
     #[test]
