@@ -18,6 +18,14 @@
 //! flat across the overflow boundary while re-prefill jumps to
 //! window-prefill cost every token. Writes a `BENCH_decode.json` summary
 //! next to the console table (or under `$BENCH_OUT_DIR`).
+//!
+//! A **speculative-decoding section** then pairs the dense f32 target with
+//! each compressed draft preset (int4, int4-2:4, group-int4) in a
+//! `SpecEngine`: the draft proposes `draft_k` tokens per sequence, the
+//! target verifies them in one batched forward, and the section reports
+//! tok/s, draft-acceptance rate, and speedup vs the dense-cached target
+//! decoding alone (output is asserted token-identical). Written separately
+//! as `BENCH_spec.json` so the CI gate can track it as its own surface.
 
 use slim::kernels::LinearOp;
 use slim::model::attention::{attend, attend_reference, AttnSpan, KvSlab, KvSource};
@@ -62,6 +70,17 @@ fn kernel_weights(cfg: &ModelConfig, w: &Weights, sparse: bool) -> CompressedWei
             LinearOp::int4(&q, None)
         };
         cw.insert(&name, op);
+    }
+    cw
+}
+
+/// Group-scale int4 packing for every linear layer (the group-kernel
+/// draft preset).
+fn group_kernel_weights(cfg: &ModelConfig, w: &Weights) -> CompressedWeights {
+    let mut cw = CompressedWeights::new();
+    for (name, _, _) in cfg.linear_layers() {
+        let q = slim_quant::quantize(w.expect(&name), 4);
+        cw.insert(&name, LinearOp::group_int4(&q, None));
     }
     cw
 }
@@ -344,6 +363,81 @@ fn kv_token_match(cfg: &ModelConfig, w: &Weights, max_new: usize) -> (bool, i64)
     }
 }
 
+/// Speculative-decoding section: the dense f32 target decodes a fixed
+/// request set alone (the baseline), then again inside a `SpecEngine`
+/// with each compressed draft preset. Output is asserted token-identical
+/// per preset — the draft buys tokens-per-step, never content — so the
+/// reported speedup is a pure serving-throughput delta.
+fn spec_bench(cfg: &ModelConfig, w: &Weights, quick: bool) -> Json {
+    use slim::server::SpecEngine;
+    let draft_k = 4usize;
+    let max_new = if quick { 24 } else { 48 };
+    let weights = Arc::new(w.clone());
+    let mut rng = Pcg32::seeded(0x5bec);
+    let reqs: Vec<GenRequest> = (0..4u64)
+        .map(|i| {
+            let prompt: Vec<u32> = (0..16).map(|_| rng.below(cfg.vocab as u32)).collect();
+            GenRequest::new(i, prompt, max_new)
+        })
+        .collect();
+    let target = Arc::new(Engine::new("spec-target", cfg.clone(), weights.clone(), None));
+
+    let t0 = std::time::Instant::now();
+    let want: Vec<Vec<u32>> =
+        target.generate_batch(&reqs).into_iter().map(|r| r.tokens).collect();
+    let dense_s = t0.elapsed().as_secs_f64();
+    let total_toks: usize = want.iter().map(Vec::len).sum();
+    let dense_tok_s = total_toks as f64 / dense_s.max(1e-9);
+
+    println!("\nspeculative decoding (draft_k={draft_k}, {total_toks} tokens per run):");
+    println!(
+        "  {:<16} {:>10} {:>10} {:>16}",
+        "draft preset", "tok/s", "accept", "vs dense-cached"
+    );
+    println!("  {:<16} {dense_tok_s:>10.1} {:>10} {:>15.2}x", "dense (no spec)", "-", 1.0);
+
+    let presets: Vec<(&str, CompressedWeights)> = vec![
+        ("spec-int4", kernel_weights(cfg, w, false)),
+        ("spec-int4-2:4", kernel_weights(cfg, w, true)),
+        ("spec-group-int4", group_kernel_weights(cfg, w)),
+    ];
+    let mut rows: Vec<(&str, Json)> = Vec::new();
+    for (name, cw) in presets {
+        let draft = Engine::with_kernels("spec-draft", cfg.clone(), weights.clone(), Arc::new(cw));
+        let spec = SpecEngine::new(target.clone(), Arc::new(draft), draft_k);
+        let t0 = std::time::Instant::now();
+        let results = spec.generate_batch(&reqs);
+        let spec_s = t0.elapsed().as_secs_f64();
+        let (mut drafted, mut accepted) = (0usize, 0usize);
+        for (res, want_toks) in results.iter().zip(&want) {
+            assert_eq!(&res.tokens, want_toks, "{name}: speculative output diverged from target");
+            let (d, a) = res.spec.expect("spec stats");
+            drafted += d;
+            accepted += a;
+        }
+        let tok_s = total_toks as f64 / spec_s.max(1e-9);
+        let accept = accepted as f64 / drafted.max(1) as f64;
+        let speedup = tok_s / dense_tok_s.max(1e-9);
+        println!("  {name:<16} {tok_s:>10.1} {accept:>10.2} {speedup:>15.2}x");
+        rows.push((
+            name,
+            obj(vec![
+                ("tok_per_s", n(tok_s)),
+                ("accept_rate", n(accept)),
+                ("speedup_vs_dense", n(speedup)),
+            ]),
+        ));
+    }
+    obj(vec![
+        ("bench", s("spec")),
+        ("draft_k", n(draft_k as f64)),
+        ("d_model", n(cfg.d_model as f64)),
+        ("max_new", n(max_new as f64)),
+        ("dense_tok_per_s", n(dense_tok_s)),
+        ("results", obj(rows)),
+    ])
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let cfg = bench_cfg(quick);
@@ -543,12 +637,22 @@ fn main() {
         Ok(()) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
     }
+
+    // ── speculative decoding: compressed draft + dense verify ────────
+    let spec_doc = spec_bench(&cfg, &w, quick);
+    let spec_path = slim::util::bench_out_path("BENCH_spec.json");
+    match std::fs::write(&spec_path, spec_doc.to_string_compact()) {
+        Ok(()) => println!("\nwrote {}", spec_path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", spec_path.display()),
+    }
     println!(
         "(expect: cached long/short ≈ 1 while dense-full grows with depth — the KV cache\n\
          removes the quadratic term; int4-2:4 > int4 > dense tok/s — Fig. 3/4's traffic\n\
          decomposition at the serving level; int8/fp8 KV ≈ f32-KV speed at ~4x fewer\n\
          cache bytes; blocked attention beats the scalar loops at depth ≥ 256; the ring\n\
          long-gen curve stays flat past max_seq while re-prefill pays a window prefill\n\
-         per token, and ring tokens equal the shift sliding-window reference exactly)"
+         per token, and ring tokens equal the shift sliding-window reference exactly;\n\
+         speculative decode beats dense-cached tok/s when the compressed twin's draft\n\
+         acceptance is high — identical tokens, fewer dense passes)"
     );
 }

@@ -137,7 +137,7 @@ fn fixed_worker(engine: &Engine, batcher: &Batcher, metrics: &Metrics, cap: usiz
             }
             let t0 = Instant::now();
             let made = engine.decode_step(&mut active, &mut pool);
-            metrics.record_decode_step(made, t0.elapsed().as_secs_f64());
+            metrics.record_decode_step(made, made, t0.elapsed().as_secs_f64());
         }
         for ((st, pending), ttft) in states.iter().zip(batch.iter()).zip(ttfts) {
             metrics.record_request(pending.enqueued.elapsed().as_secs_f64());
@@ -145,6 +145,7 @@ fn fixed_worker(engine: &Engine, batcher: &Batcher, metrics: &Metrics, cap: usiz
                 id: st.id,
                 tokens: st.generated().to_vec(),
                 ttft_s: ttft,
+                spec: None,
             });
         }
     }

@@ -12,8 +12,8 @@ pub use attention::{AttnSpan, KvDtype, KvLayout, KvSlab, KvSource};
 pub use compiled::CompressedWeights;
 pub use config::{by_name, family, quick_family, ModelConfig};
 pub use transformer::{
-    forward, forward_cached, forward_slots, nll, ActivationTap, Batch, KvCache, KvCachePool,
-    Linears, Overrides,
+    forward, forward_cached, forward_slots, greedy_pick, nll, ActivationTap, Batch, KvCache,
+    KvCachePool, Linears, Overrides,
 };
 pub use weights::{init, param_order, Weights};
 

@@ -306,6 +306,40 @@ impl KvCachePool {
         self.lens[slot] = 0;
     }
 
+    /// Rewind `slot` to `new_len` logical positions — the speculative-decode
+    /// rollback primitive: after a batched verify span is appended, the
+    /// rejected suffix is discarded by truncating back to the accepted
+    /// length, and the next append overwrites the stale rows (re-encoding
+    /// quantized dtypes row-by-row exactly as a first write would, since
+    /// int8/fp8 scales live per physical row and are recomputed on every
+    /// [`KvSlab::write_logical`]).
+    ///
+    /// Truncation is lossless only while no *discarded* position had
+    /// wrapped the ring: once `len > max_seq`, physical row `L % max_seq`
+    /// has been overwritten by logical position `L`, so rewinding past the
+    /// wrap would resurrect rows that no longer exist. Callers guarantee
+    /// this by clamping multi-token verify spans to [`span_room`]
+    /// (`KvCachePool::span_room`) — the same invariant chunked prefill
+    /// maintains — which keeps every speculative append, and therefore
+    /// every rewind, inside the un-wrapped region. The no-op case
+    /// (`new_len == len`) is always legal, wrapped or not.
+    pub fn truncate(&mut self, slot: usize, new_len: usize) {
+        assert!(self.live[slot], "truncate of non-live slot {slot}");
+        assert!(
+            new_len <= self.lens[slot],
+            "truncate({slot}) cannot grow: {new_len} > {}",
+            self.lens[slot]
+        );
+        assert!(
+            new_len == self.lens[slot] || self.lens[slot] <= self.max_seq,
+            "truncate({slot}) past the ring wrap would discard positions whose physical \
+             rows were already overwritten (len {} > max_seq {})",
+            self.lens[slot],
+            self.max_seq
+        );
+        self.lens[slot] = new_len;
+    }
+
     /// Attention geometry for appending a `span`-token entry to `slot`:
     /// `(p0, start)` where `p0` is the number of retained window positions
     /// preceding the span's first query and `start` is the physical row of
@@ -698,6 +732,25 @@ pub fn forward_iq(
     // Final LN + tied-embedding logits.
     let xf = layernorm(&x, w.expect("final_ln.g"), w.expect("final_ln.b"));
     matmul_a_bt(&xf, tok_emb)
+}
+
+/// Greedy token choice from one logits row: the argmax with a **documented
+/// lowest-index tie-break** (strict `>` comparison, so the first of any
+/// equal maxima wins). Every greedy consumer — the serving engine, the
+/// speculative draft AND its verifying target — must share this exact
+/// rule: if draft and target broke ties differently, speculative
+/// acceptance would silently degrade on tied logits even though the
+/// models agree.
+pub fn greedy_pick(row: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
 }
 
 /// Mean next-token negative log-likelihood over the batch (positions
@@ -1196,6 +1249,126 @@ mod tests {
         let slot2 = pool.alloc().unwrap();
         assert_eq!(slot2, slot);
         assert_eq!((pool.len(slot2), pool.window(slot2), pool.base(slot2)), (0, 0, 0));
+    }
+
+    /// `truncate` rewinds logical length (and therefore window and base)
+    /// while the slot is un-wrapped, and a rewound slot accepts appends at
+    /// the rewound position.
+    #[test]
+    fn truncate_rewinds_len_window_and_base() {
+        let cfg = ring_cfg();
+        let w = {
+            let mut rng = Pcg32::seeded(31);
+            init(&cfg, &mut rng)
+        };
+        let mut pool = KvCachePool::new(&cfg, 1);
+        let slot = pool.alloc().unwrap();
+        let prompt: Vec<u32> = (0..6u32).collect();
+        forward_slots(&cfg, &w, &[(slot, &prompt[..])], &mut pool, &Linears::Dense);
+        assert_eq!((pool.len(slot), pool.window(slot), pool.base(slot)), (6, 6, 0));
+        pool.truncate(slot, 4);
+        assert_eq!((pool.len(slot), pool.window(slot), pool.base(slot)), (4, 4, 0));
+        // The rewound slot keeps serving: span_room reopened and appends
+        // land at the rewound position.
+        assert_eq!(pool.span_room(slot), cfg.max_seq - 4);
+        forward_slots(&cfg, &w, &[(slot, &[7u32][..])], &mut pool, &Linears::Dense);
+        assert_eq!(pool.len(slot), 5);
+        // Truncating to the current length is a no-op.
+        pool.truncate(slot, 5);
+        assert_eq!(pool.len(slot), 5);
+    }
+
+    /// The speculative-decode rollback round-trip: append a verify span,
+    /// truncate back to the accepted prefix, re-append the corrected
+    /// continuation — logits must be bit-identical to a control slot that
+    /// never speculated, for every KV dtype (quantized dtypes re-encode the
+    /// overwritten rows and their scale entries exactly as a first write).
+    #[test]
+    fn truncate_then_reappend_matches_straight_run() {
+        let cfg = ring_cfg();
+        let mut rng = Pcg32::seeded(32);
+        let w = init(&cfg, &mut rng);
+        let prompt: Vec<u32> = (0..4).map(|_| rng.below(cfg.vocab as u32)).collect();
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let mut spec = KvCachePool::with_dtype(&cfg, 1, dtype);
+            let mut ctrl = KvCachePool::with_dtype(&cfg, 1, dtype);
+            let s = spec.alloc().unwrap();
+            let c = ctrl.alloc().unwrap();
+            forward_slots(&cfg, &w, &[(s, &prompt[..])], &mut spec, &Linears::Dense);
+            forward_slots(&cfg, &w, &[(c, &prompt[..])], &mut ctrl, &Linears::Dense);
+            // Speculative slot verifies a 3-token span [10, 11, 12], of
+            // which only the first token is "accepted".
+            forward_slots(&cfg, &w, &[(s, &[10u32, 11, 12][..])], &mut spec, &Linears::Dense);
+            spec.truncate(s, 5);
+            // Control slot only ever sees the accepted token.
+            forward_slots(&cfg, &w, &[(c, &[10u32][..])], &mut ctrl, &Linears::Dense);
+            // Both continue with the correction token; the rejected rows
+            // (and for int8 their per-row scales) are overwritten.
+            let a = forward_slots(&cfg, &w, &[(s, &[20u32, 21][..])], &mut spec, &Linears::Dense);
+            let b = forward_slots(&cfg, &w, &[(c, &[20u32, 21][..])], &mut ctrl, &Linears::Dense);
+            assert_eq!(a, b, "{} rollback round-trip", dtype.name());
+            assert_eq!(spec.len(s), ctrl.len(c));
+        }
+    }
+
+    /// Truncating to the current length stays legal after the ring wraps
+    /// (a fully-accepted speculation rolls back nothing), but an actual
+    /// rewind past the wrap is refused — those physical rows are gone.
+    #[test]
+    fn truncate_noop_legal_after_wrap() {
+        let cfg = ring_cfg();
+        let w = {
+            let mut rng = Pcg32::seeded(33);
+            init(&cfg, &mut rng)
+        };
+        let mut pool = KvCachePool::new(&cfg, 1);
+        let slot = pool.alloc().unwrap();
+        let prompt: Vec<u32> = (0..cfg.max_seq as u32).collect();
+        forward_slots(&cfg, &w, &[(slot, &prompt[..])], &mut pool, &Linears::Dense);
+        for i in 0..3u32 {
+            forward_slots(&cfg, &w, &[(slot, &[i][..])], &mut pool, &Linears::Dense);
+        }
+        assert!(pool.len(slot) > cfg.max_seq, "the ring must have wrapped");
+        pool.truncate(slot, pool.len(slot));
+        assert_eq!(pool.len(slot), cfg.max_seq + 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "past the ring wrap")]
+    fn truncate_rewind_refused_after_wrap() {
+        let cfg = ring_cfg();
+        let w = {
+            let mut rng = Pcg32::seeded(34);
+            init(&cfg, &mut rng)
+        };
+        let mut pool = KvCachePool::new(&cfg, 1);
+        let slot = pool.alloc().unwrap();
+        let prompt: Vec<u32> = (0..cfg.max_seq as u32).collect();
+        forward_slots(&cfg, &w, &[(slot, &prompt[..])], &mut pool, &Linears::Dense);
+        forward_slots(&cfg, &w, &[(slot, &[1u32][..])], &mut pool, &Linears::Dense);
+        // len 9 > max_seq 8: logical position 8 overwrote physical row 0,
+        // so rewinding to 8 cannot restore the original row.
+        pool.truncate(slot, cfg.max_seq);
+    }
+
+    #[test]
+    #[should_panic(expected = "truncate of non-live slot")]
+    fn truncate_non_live_slot_refused() {
+        let cfg = ring_cfg();
+        let mut pool = KvCachePool::new(&cfg, 1);
+        let slot = pool.alloc().unwrap();
+        pool.free(slot);
+        pool.truncate(slot, 0);
+    }
+
+    /// Greedy picks use a strict lowest-index tie-break — the rule draft
+    /// and target must share for speculative acceptance to be exact.
+    #[test]
+    fn greedy_pick_breaks_ties_toward_lowest_index() {
+        assert_eq!(greedy_pick(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(greedy_pick(&[5.0, 5.0]), 0);
+        assert_eq!(greedy_pick(&[-2.0, -1.0, -1.5]), 1);
+        assert_eq!(greedy_pick(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
     }
 
     /// Multi-token spans may not wrap (they would overwrite history their

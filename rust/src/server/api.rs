@@ -8,17 +8,28 @@
 //!           policy when it is fair-share (`SchedPolicy::admit`); both
 //!           default to 0 and never change the generated tokens, only who
 //!           waits when cache slots are scarce.)
-//! Response: `{"ok": true, "tokens": [ints], "ttft_ms": f?}` or
+//! Response: `{"ok": true, "tokens": [ints], "ttft_ms": f?, "drafted": n?,
+//!           "accepted": n?, "accept_rate": f?}` or
 //!           `{"ok": false, "error": "..."}` — `ttft_ms` is the
 //!           server-measured submit→first-token latency, present on
-//!           serving paths that observe one.
+//!           serving paths that observe one. The speculative-decoding
+//!           trio appears only on speculative routes
+//!           (`Router::register_speculative`): how many tokens the
+//!           compressed draft proposed for this request, how many the
+//!           dense target confirmed, and their ratio. They describe
+//!           speed, never content — tokens are identical to the plain
+//!           continuous route.
 //! Special:  `{"cmd": "metrics"}` → one-line summary (includes queue-wait
-//!           p50/p95 alongside TTFT and decode percentiles);
+//!           p50/p95 and the route-wide `spec_accept` rate alongside TTFT
+//!           and decode percentiles);
 //!           `{"cmd": "models"}` → `{"ok": true, "models": [{"name": "...",
-//!           "kv_dtype": "f32" | "int8" | "fp8-e4m3"}, ...]}` — `kv_dtype`
-//!           is the serving KV cache storage dtype the route was registered
-//!           with (`model::KvDtype`; quantized dtypes hold ~4× fewer cache
-//!           bytes per in-flight sequence).
+//!           "kv_dtype": "f32" | "int8" | "fp8-e4m3", "spec": bool,
+//!           "draft_k": n?}, ...]}` — `kv_dtype` is the serving KV cache
+//!           storage dtype the route was registered with
+//!           (`model::KvDtype`; quantized dtypes hold ~4× fewer cache
+//!           bytes per in-flight sequence); `spec` marks speculative
+//!           routes and `draft_k` (present only when `spec` is true) is
+//!           their configured draft depth.
 //!
 //! One thread per connection (the engines are the bottleneck, not the
 //! accept loop), with the router's batcher coalescing across connections.
@@ -86,10 +97,18 @@ fn process(router: &Router, line: &str) -> Result<Json> {
                     "models",
                     Json::Arr(
                         router
-                            .model_infos()
+                            .model_details()
                             .iter()
-                            .map(|(name, dt)| {
-                                obj(vec![("name", s(name)), ("kv_dtype", s(dt.name()))])
+                            .map(|(name, dt, draft_k)| {
+                                let mut fields = vec![
+                                    ("name", s(name)),
+                                    ("kv_dtype", s(dt.name())),
+                                    ("spec", Json::Bool(draft_k.is_some())),
+                                ];
+                                if let Some(k) = draft_k {
+                                    fields.push(("draft_k", n(*k as f64)));
+                                }
+                                obj(fields)
                             })
                             .collect(),
                     ),
@@ -122,6 +141,12 @@ fn process(router: &Router, line: &str) -> Result<Json> {
     ];
     if let Some(ttft) = result.ttft_s {
         fields.push(("ttft_ms", n(ttft * 1e3)));
+    }
+    if let Some((drafted, accepted)) = result.spec {
+        fields.push(("drafted", n(drafted as f64)));
+        fields.push(("accepted", n(accepted as f64)));
+        let rate = if drafted > 0 { accepted as f64 / drafted as f64 } else { 0.0 };
+        fields.push(("accept_rate", n(rate)));
     }
     Ok(obj(fields))
 }
@@ -240,11 +265,52 @@ mod tests {
         let resp = handle_line(&r, r#"{"cmd":"models"}"#);
         let text = resp.to_string_compact();
         assert!(text.contains("sim-125m"));
-        // Each model entry reports its serving KV cache dtype.
+        // Each model entry reports its serving KV cache dtype and whether
+        // the route decodes speculatively.
         assert!(text.contains("kv_dtype"), "missing kv_dtype in {text}");
         assert!(text.contains("f32"));
+        assert!(text.contains("\"spec\":false"), "missing spec flag in {text}");
         let resp = handle_line(&r, r#"{"cmd":"metrics"}"#);
         assert!(resp.to_string_compact().contains("requests="));
+    }
+
+    #[test]
+    fn speculative_route_reports_draft_stats() {
+        use crate::kernels::LinearOp;
+        use crate::model::CompressedWeights;
+        use crate::quant::slim_quant;
+        use crate::server::scheduler::SchedPolicy;
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let w = Arc::new(init(&cfg, &mut rng));
+        let mut cw = CompressedWeights::new();
+        for (name, _d_in, _d_out) in cfg.linear_layers() {
+            let q = slim_quant::quantize(w.expect(&name), 4);
+            cw.insert(&name, LinearOp::int4(&q, None));
+        }
+        let target = Engine::new("sim-125m", cfg.clone(), w.clone(), None);
+        let draft = Engine::with_kernels("sim-125m-draft", cfg, w, Arc::new(cw));
+        let mut router = Router::new();
+        let policy = SchedPolicy { max_slots: 2, draft_k: 3, ..Default::default() };
+        router.register_speculative(target, draft, policy);
+        let r = Arc::new(router);
+
+        // models advertises the route as speculative with its draft depth.
+        let models = handle_line(&r, r#"{"cmd":"models"}"#).to_string_compact();
+        assert!(models.contains("\"spec\":true"), "{models}");
+        assert!(models.contains("\"draft_k\":3"), "{models}");
+
+        let resp = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":6}"#);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(resp.get("tokens").and_then(Json::as_arr).unwrap().len(), 6);
+        let drafted = resp.get("drafted").and_then(Json::as_f64).unwrap();
+        let accepted = resp.get("accepted").and_then(Json::as_f64).unwrap();
+        let rate = resp.get("accept_rate").and_then(Json::as_f64).unwrap();
+        assert!(accepted <= drafted);
+        assert!((0.0..=1.0).contains(&rate));
+        // The route-wide metrics line carries the aggregate acceptance.
+        let m = handle_line(&r, r#"{"cmd":"metrics"}"#).to_string_compact();
+        assert!(m.contains("spec_accept"), "{m}");
     }
 
     #[test]

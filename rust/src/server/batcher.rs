@@ -463,7 +463,8 @@ mod tests {
             while served < n {
                 if let Some(batch) = b2.next_batch() {
                     for p in batch {
-                        let res = GenResult { id: p.req.id, tokens: vec![], ttft_s: None };
+                        let res =
+                            GenResult { id: p.req.id, tokens: vec![], ttft_s: None, spec: None };
                         let _ = p.result_slot.send(res);
                         served += 1;
                     }

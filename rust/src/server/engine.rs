@@ -33,8 +33,8 @@
 //! decode cache bytes ~4× on top of the weight compression.
 
 use crate::model::{
-    forward_cached, forward_slots, CompressedWeights, KvCache, KvCachePool, KvDtype, KvLayout,
-    Linears, ModelConfig, Overrides, Weights,
+    forward_cached, forward_slots, greedy_pick, CompressedWeights, KvCache, KvCachePool, KvDtype,
+    KvLayout, Linears, ModelConfig, Overrides, Weights,
 };
 use crate::tensor::Matrix;
 use std::sync::Arc;
@@ -97,6 +97,13 @@ pub struct GenResult {
     /// TTFT observation — [`Engine::generate_batch`] and the router's
     /// legacy fixed-batch route.
     pub ttft_s: Option<f64>,
+    /// Speculative-decode accounting `(drafted, accepted)` when the request
+    /// was served by a `server::spec::SpecEngine` route: how many draft
+    /// tokens were proposed for this sequence and how many the dense target
+    /// accepted (`accepted / drafted` is the per-request acceptance rate).
+    /// `None` on non-speculative paths. The tokens themselves are identical
+    /// either way — speculation only changes how fast they arrive.
+    pub spec: Option<(usize, usize)>,
 }
 
 /// One in-flight sequence: its cache slot, token history and stop state.
@@ -124,7 +131,19 @@ impl SeqState {
         &self.seq[self.prompt_len..]
     }
 
-    fn push_token(&mut self, t: u32) {
+    /// Full token history: prompt (BOS if empty) + generated tokens. The
+    /// speculative engine reads this to catch the draft cache up to the
+    /// target cache between steps.
+    pub(crate) fn history(&self) -> &[u32] {
+        &self.seq
+    }
+
+    /// Length of the prompt prefix of [`SeqState::history`].
+    pub(crate) fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    pub(crate) fn push_token(&mut self, t: u32) {
         self.seq.push(t);
         if self.seq.len() - self.prompt_len >= self.max_new || self.stop == Some(t) {
             self.done = true;
@@ -183,6 +202,31 @@ impl PrefillState {
     /// should only invoke this once [`PrefillState::is_complete`].
     pub fn into_state(self) -> SeqState {
         self.state
+    }
+
+    /// The next `c`-token prompt chunk as a `(slot, span)` forward entry.
+    /// Shared with the speculative engine, which packs prefill chunks into
+    /// the same target forward as its verify spans.
+    pub(crate) fn chunk_entry(&self, c: usize) -> (usize, &[u32]) {
+        let lo = self.win_start + self.fed;
+        (self.state.slot, &self.state.seq[lo..lo + c])
+    }
+
+    /// Record that `c` more prompt tokens were fed to the cache.
+    pub(crate) fn advance(&mut self, c: usize) {
+        self.fed += c;
+    }
+
+    /// Whether the windowed prompt is fully cached (the chunk that makes
+    /// this true emits the first token).
+    pub(crate) fn prompt_done(&self) -> bool {
+        self.fed == self.win
+    }
+
+    /// Emit the first generated token (from the completing chunk's last
+    /// logits row).
+    pub(crate) fn push_first(&mut self, t: u32) {
+        self.state.push_token(t);
     }
 }
 
@@ -276,6 +320,17 @@ impl Engine {
 
     pub fn config(&self) -> &ModelConfig {
         &self.cfg
+    }
+
+    /// One batched [`forward_slots`] pass over an external pool through
+    /// this engine's linear backend — the raw forward the speculative
+    /// engine uses to pack draft/verify spans itself.
+    pub(crate) fn forward_pool(
+        &self,
+        entries: &[(usize, &[u32])],
+        pool: &mut KvCachePool,
+    ) -> Matrix {
+        forward_slots(&self.cfg, &self.weights, entries, pool, &self.linears())
     }
 
     /// The linear-layer backend this engine serves with.
@@ -401,14 +456,14 @@ impl Engine {
             stats.prefill_tokens += c;
             if p.fed == p.win {
                 // The chunk that completes the prompt emits the first token.
-                p.state.push_token(argmax(logits.row(row - 1)) as u32);
+                p.state.push_token(greedy_pick(logits.row(row - 1)) as u32);
                 stats.first_tokens += 1;
             }
         }
         // Decode spans are one token each: entry j's logits are row j after
         // the prefill rows.
         for &i in &who {
-            decodes[i].push_token(argmax(logits.row(row)) as u32);
+            decodes[i].push_token(greedy_pick(logits.row(row)) as u32);
             row += 1;
             stats.decode_tokens += 1;
         }
@@ -474,7 +529,12 @@ impl Engine {
         }
         states
             .iter()
-            .map(|s| GenResult { id: s.id, tokens: s.generated().to_vec(), ttft_s: None })
+            .map(|s| GenResult {
+                id: s.id,
+                tokens: s.generated().to_vec(),
+                ttft_s: None,
+                spec: None,
+            })
             .collect()
     }
 
@@ -495,18 +555,6 @@ impl Engine {
             &self.linears(),
         )
     }
-}
-
-fn argmax(row: &[f32]) -> usize {
-    let mut best = 0;
-    let mut bv = f32::NEG_INFINITY;
-    for (i, &v) in row.iter().enumerate() {
-        if v > bv {
-            bv = v;
-            best = i;
-        }
-    }
-    best
 }
 
 #[cfg(test)]
@@ -531,7 +579,7 @@ mod tests {
             let cur = seq.len().min(cfg.max_seq);
             let batch = Batch::new(seq[seq.len() - cur..].to_vec(), 1, cur);
             let logits = forward(&cfg, &e.weights, &batch, None, None);
-            seq.push(argmax(logits.row(cur - 1)) as u32);
+            seq.push(greedy_pick(logits.row(cur - 1)) as u32);
         }
         seq[prompt.len()..].to_vec()
     }

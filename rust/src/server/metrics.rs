@@ -49,6 +49,12 @@ pub struct Metrics {
     decode_steps: Mutex<Vec<f64>>,
     /// Total engine-busy seconds.
     busy: Mutex<f64>,
+    /// Tokens drafted by the compressed twin on speculative routes.
+    spec_drafted: AtomicU64,
+    /// Drafted tokens the dense target confirmed.
+    spec_accepted: AtomicU64,
+    /// Per-request acceptance rates (accepted/drafted), capped ring.
+    spec_accepts: Mutex<Vec<f64>>,
 }
 
 impl Metrics {
@@ -64,6 +70,9 @@ impl Metrics {
             queue_waits: Mutex::new(Vec::new()),
             decode_steps: Mutex::new(Vec::new()),
             busy: Mutex::new(0.0),
+            spec_drafted: AtomicU64::new(0),
+            spec_accepted: AtomicU64::new(0),
+            spec_accepts: Mutex::new(Vec::new()),
         }
     }
 
@@ -104,12 +113,36 @@ impl Metrics {
         *self.busy.lock().unwrap() += elapsed_s;
     }
 
-    /// Record one continuous decode step: `new_tokens` sequences each got
-    /// one token, and each paid `elapsed_s` of per-token decode latency.
-    pub fn record_decode_step(&self, new_tokens: usize, elapsed_s: f64) {
+    /// Record one continuous decode step that emitted `new_tokens` tokens
+    /// across `seqs` active sequences. The per-token decode latency is
+    /// `elapsed_s * seqs / new_tokens`: each sequence waited `elapsed_s`
+    /// for the step, and a speculative step that lands several accepted
+    /// tokens per sequence amortises that wait across all of them (on the
+    /// classic one-token-per-sequence path `seqs == new_tokens` and this
+    /// reduces to `elapsed_s`, the old semantics).
+    pub fn record_decode_step(&self, new_tokens: usize, seqs: usize, elapsed_s: f64) {
+        if new_tokens == 0 {
+            return;
+        }
         self.tokens.fetch_add(new_tokens as u64, Ordering::Relaxed);
         *self.busy.lock().unwrap() += elapsed_s;
-        push_capped(&self.decode_steps, elapsed_s);
+        push_capped(&self.decode_steps, elapsed_s * seqs as f64 / new_tokens as f64);
+    }
+
+    /// Record one speculative verify step: the draft proposed `drafted`
+    /// tokens and the target accepted `accepted` of them.
+    pub fn record_spec_step(&self, drafted: usize, accepted: usize) {
+        self.spec_drafted.fetch_add(drafted as u64, Ordering::Relaxed);
+        self.spec_accepted.fetch_add(accepted as u64, Ordering::Relaxed);
+    }
+
+    /// Record one finished request's lifetime draft acceptance; no-op when
+    /// nothing was drafted (e.g. single-token or fallback-only requests).
+    pub fn record_spec_request(&self, drafted: usize, accepted: usize) {
+        if drafted == 0 {
+            return;
+        }
+        push_capped(&self.spec_accepts, accepted as f64 / drafted as f64);
     }
 
     pub fn requests(&self) -> u64 {
@@ -165,6 +198,32 @@ impl Metrics {
         percentile(&self.decode_steps, pct)
     }
 
+    /// Total tokens drafted on speculative routes.
+    pub fn spec_drafted(&self) -> u64 {
+        self.spec_drafted.load(Ordering::Relaxed)
+    }
+
+    /// Total drafted tokens the target confirmed.
+    pub fn spec_accepted(&self) -> u64 {
+        self.spec_accepted.load(Ordering::Relaxed)
+    }
+
+    /// Aggregate draft acceptance rate (accepted / drafted); 0 before any
+    /// speculative step ran.
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        let d = self.spec_drafted();
+        if d == 0 {
+            return 0.0;
+        }
+        self.spec_accepted() as f64 / d as f64
+    }
+
+    /// Per-request acceptance-rate percentile (0..100) over the recent
+    /// window.
+    pub fn spec_accept_pct(&self, pct: f64) -> f64 {
+        percentile(&self.spec_accepts, pct)
+    }
+
     /// Decode throughput: generated tokens per engine-busy second.
     pub fn tokens_per_busy_second(&self) -> f64 {
         let busy = *self.busy.lock().unwrap();
@@ -180,7 +239,8 @@ impl Metrics {
             "requests={} batches={} mean_batch={:.2} tokens={} queue={}(max {}) \
              p50={:.1}ms p99={:.1}ms qwait_p50={:.1}ms qwait_p95={:.1}ms \
              ttft_p50={:.1}ms ttft_p95={:.1}ms \
-             decode_p50={:.2}ms decode_p95={:.2}ms tok/s={:.1}",
+             decode_p50={:.2}ms decode_p95={:.2}ms tok/s={:.1} \
+             spec_accept={:.2} ({}/{})",
             self.requests(),
             self.batches(),
             self.mean_batch_size(),
@@ -196,6 +256,9 @@ impl Metrics {
             self.decode_pct(50.0) * 1e3,
             self.decode_pct(95.0) * 1e3,
             self.tokens_per_busy_second(),
+            self.spec_acceptance_rate(),
+            self.spec_accepted(),
+            self.spec_drafted(),
         )
     }
 }
@@ -270,9 +333,9 @@ mod tests {
         assert_eq!(m.tokens(), 1);
         assert_eq!(m.decode_pct(50.0), 0.0);
 
-        m.record_decode_step(4, 0.002);
-        m.record_decode_step(4, 0.004);
-        m.record_decode_step(2, 0.030);
+        m.record_decode_step(4, 4, 0.002);
+        m.record_decode_step(4, 4, 0.004);
+        m.record_decode_step(2, 2, 0.030);
         assert_eq!(m.tokens(), 11);
         assert!((m.decode_pct(50.0) - 0.004).abs() < 1e-12);
         assert!((m.decode_pct(95.0) - 0.030).abs() < 1e-12);
@@ -281,5 +344,38 @@ mod tests {
         assert!(s.contains("ttft_p50="), "{s}");
         assert!(s.contains("decode_p95="), "{s}");
         assert!(s.contains("queue=1(max 3)"), "{s}");
+    }
+
+    #[test]
+    fn decode_step_amortises_latency_across_accepted_tokens() {
+        let m = Metrics::new();
+        // One sequence landed 4 tokens in a 0.008s speculative step: each
+        // token cost 2ms, not 8ms.
+        m.record_decode_step(4, 1, 0.008);
+        assert_eq!(m.tokens(), 4);
+        assert!((m.decode_pct(50.0) - 0.002).abs() < 1e-12);
+        // A zero-token step records nothing.
+        m.record_decode_step(0, 3, 0.010);
+        assert_eq!(m.tokens(), 4);
+    }
+
+    #[test]
+    fn spec_counters_and_acceptance() {
+        let m = Metrics::new();
+        assert_eq!(m.spec_drafted(), 0);
+        assert_eq!(m.spec_acceptance_rate(), 0.0);
+
+        m.record_spec_step(4, 3);
+        m.record_spec_step(4, 1);
+        assert_eq!(m.spec_drafted(), 8);
+        assert_eq!(m.spec_accepted(), 4);
+        assert!((m.spec_acceptance_rate() - 0.5).abs() < 1e-12);
+
+        m.record_spec_request(8, 4);
+        m.record_spec_request(0, 0); // ignored: nothing drafted
+        assert!((m.spec_accept_pct(50.0) - 0.5).abs() < 1e-12);
+
+        let s = m.summary();
+        assert!(s.contains("spec_accept=0.50 (4/8)"), "{s}");
     }
 }

@@ -37,6 +37,18 @@
 //!   `SchedPolicy::kv_dtype` (a `model::KvDtype`): int8 / fp8 cached K/V
 //!   holds ~4× fewer bytes per in-flight sequence while greedy output
 //!   stays batching-invariant.
+//! * [`spec`] — self-speculative decoding: [`spec::SpecEngine`] pairs the
+//!   SLiM-compressed engine (draft) with the dense engine (target) over
+//!   twin lockstep KV pools. Each spec tick greedily drafts up to
+//!   `SchedPolicy::draft_k` tokens per sequence on the cheap kernels,
+//!   then verifies the whole batch of drafts in ONE batched target
+//!   forward (multi-token continuation spans packed alongside prefill
+//!   chunks); the longest agreeing prefix is accepted, the first
+//!   disagreement is replaced by the target's own pick, and both pools
+//!   roll back via `model::KvCachePool::truncate`. Output is
+//!   token-identical to target-only greedy by construction
+//!   (property-tested across KV dtypes and draft depths) — the draft
+//!   only decides how many target tokens land per step, never which.
 //! * [`batcher`] — the shared request queue: fixed batch formation under a
 //!   max-batch/max-wait policy for the legacy worker; non-blocking
 //!   policy-driven `take_admit` + untimed `wait_pending` admission for
@@ -48,7 +60,8 @@
 //!   worker per engine in either serving mode; `submit_with` carries the
 //!   full `RequestOpts` (stop, priority, client id).
 //! * [`api`] — newline-delimited-JSON TCP protocol + a blocking client
-//!   (`priority`/`client_id` request fields, `ttft_ms` in responses).
+//!   (`priority`/`client_id` request fields; `ttft_ms` plus speculative
+//!   `drafted`/`accepted`/`accept_rate` in responses).
 //! * [`metrics`] — counters, queue depth, queue-wait/TTFT/decode-latency
 //!   percentiles the benches read.
 
@@ -58,6 +71,7 @@ pub mod engine;
 pub mod metrics;
 pub mod router;
 pub mod scheduler;
+pub mod spec;
 
 pub use crate::model::{KvDtype, KvLayout};
 pub use batcher::{AdmitPolicy, AdmitState, BatchPolicy, Batcher, Pending};
@@ -65,3 +79,4 @@ pub use engine::{Engine, GenRequest, GenResult, PrefillState, SeqState, StepStat
 pub use metrics::Metrics;
 pub use router::{RequestOpts, Router};
 pub use scheduler::{SchedPolicy, Scheduler};
+pub use spec::{SpecEngine, SpecStepStats};

@@ -9,6 +9,13 @@
 //!   (`SchedPolicy::admit`), long prompts prefill in chunks interleaved
 //!   with decode steps, and sequences retire individually (the default
 //!   for new deploys).
+//! * [`Router::register_speculative`] — the same continuous step-loop,
+//!   but the scheduler drives a [`super::spec::SpecEngine`]: the
+//!   SLiM-compressed draft engine proposes up to `SchedPolicy::draft_k`
+//!   tokens per sequence per tick and the dense target verifies them in
+//!   one batched forward. Output stays token-identical to the plain
+//!   continuous route over the target engine; only tokens-per-step
+//!   changes.
 //! * [`Router::register`] — the legacy fixed-batch worker: batches drain
 //!   through [`Engine::generate_batch`] to completion before the next
 //!   batch forms (kept for comparison benches and compatibility).
@@ -60,6 +67,9 @@ struct Route {
     /// KV cache storage dtype this route serves with (reported by the JSON
     /// api's `models` command).
     kv_dtype: KvDtype,
+    /// Draft depth when this route decodes speculatively; `None` on
+    /// non-speculative routes.
+    draft_k: Option<usize>,
     _worker: std::thread::JoinHandle<()>,
 }
 
@@ -106,7 +116,8 @@ impl Router {
                 }
             }
         });
-        self.routes.insert(name, Route { batcher, vocab, kv_dtype, _worker: worker });
+        let route = Route { batcher, vocab, kv_dtype, draft_k: None, _worker: worker };
+        self.routes.insert(name, route);
     }
 
     /// Register an engine under its name with the continuous-batching
@@ -125,7 +136,33 @@ impl Router {
         let worker = std::thread::spawn(move || {
             scheduler.run(&worker_batcher, &metrics);
         });
-        self.routes.insert(name, Route { batcher, vocab, kv_dtype, _worker: worker });
+        let route = Route { batcher, vocab, kv_dtype, draft_k: None, _worker: worker };
+        self.routes.insert(name, route);
+    }
+
+    /// Register a **speculative** route under the target engine's name: a
+    /// continuous-batching [`Scheduler`] whose step loop drafts
+    /// `policy.draft_k` tokens per sequence on `draft` (typically the
+    /// SLiM-compressed, kernel-backed twin) and verifies them in one
+    /// batched forward on `target`. Tokens served are identical to
+    /// [`Router::register_continuous`] over `target` alone.
+    ///
+    /// Panics if `policy.draft_k == 0` — a speculative route with no draft
+    /// depth is a misconfiguration, not a fallback.
+    pub fn register_speculative(&mut self, target: Engine, draft: Engine, policy: SchedPolicy) {
+        let name = target.name.clone();
+        let vocab = target.config().vocab;
+        let kv_dtype = policy.kv_dtype.unwrap_or_else(|| target.kv_dtype());
+        let draft_k = Some(policy.draft_k);
+        let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+        let metrics = self.metrics.clone();
+        let worker_batcher = batcher.clone();
+        let scheduler = Scheduler::new_spec(Arc::new(target), Arc::new(draft), policy);
+        let worker = std::thread::spawn(move || {
+            scheduler.run(&worker_batcher, &metrics);
+        });
+        let route = Route { batcher, vocab, kv_dtype, draft_k, _worker: worker };
+        self.routes.insert(name, route);
     }
 
     /// Registered model names.
@@ -136,6 +173,16 @@ impl Router {
     /// Registered models with the KV cache dtype each route serves with.
     pub fn model_infos(&self) -> Vec<(&str, KvDtype)> {
         self.routes.iter().map(|(n, r)| (n.as_str(), r.kv_dtype)).collect()
+    }
+
+    /// Registered models with KV dtype and speculative draft depth
+    /// (`None` on non-speculative routes) — what the JSON api's `models`
+    /// command reports.
+    pub fn model_details(&self) -> Vec<(&str, KvDtype, Option<usize>)> {
+        self.routes
+            .iter()
+            .map(|(n, r)| (n.as_str(), r.kv_dtype, r.draft_k))
+            .collect()
     }
 
     /// Submit a request; blocks until the result arrives.
@@ -281,6 +328,37 @@ mod tests {
         let req = GenRequest::new(1, vec![3, 4, 5], 3);
         let solo = engine().with_kv_dtype(KvDtype::Int8).generate_batch(&[req]);
         assert_eq!(out.tokens, solo[0].tokens);
+    }
+
+    fn kernel_draft() -> Engine {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let w = init(&cfg, &mut rng);
+        let mut cw = crate::model::CompressedWeights::new();
+        for (name, _d_in, _d_out) in cfg.linear_layers() {
+            let q = crate::quant::slim_quant::quantize(w.expect(&name), 4);
+            cw.insert(&name, crate::kernels::LinearOp::int4(&q, None));
+        }
+        Engine::with_kernels("sim-125m-draft", cfg, Arc::new(w), Arc::new(cw))
+    }
+
+    #[test]
+    fn speculative_route_matches_continuous_and_reports_draft_k() {
+        let mut r = Router::new();
+        let policy = SchedPolicy { max_slots: 2, draft_k: 3, ..Default::default() };
+        r.register_speculative(engine(), kernel_draft(), policy);
+        // `models` reports the draft depth on speculative routes.
+        assert_eq!(r.model_details(), vec![("sim-125m", KvDtype::F32, Some(3))]);
+        // ...while non-speculative routes report None.
+        let plain = router_continuous();
+        assert_eq!(plain.model_details()[0].2, None);
+
+        let out = r.generate("sim-125m", vec![3, 4, 5], 4).unwrap();
+        let reference = plain.generate("sim-125m", vec![3, 4, 5], 4).unwrap();
+        assert_eq!(out.tokens, reference.tokens);
+        let (drafted, accepted) = out.spec.expect("speculative route reports draft stats");
+        assert!(accepted <= drafted);
+        assert!(r.metrics.spec_drafted() >= drafted as u64);
     }
 
     #[test]

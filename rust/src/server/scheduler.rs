@@ -35,6 +35,14 @@
 //!   and its ring slot returns to the pool free-list for the next
 //!   admission.
 //!
+//! A route can also serve **speculatively** ([`Scheduler::new_spec`]): the
+//! tick's decode side then drafts `SchedPolicy::draft_k` tokens per
+//! sequence on a compressed draft engine and verifies them all in the ONE
+//! batched target forward (see `server::spec` for the draft/verify/
+//! rollback step), emitting 1..=`draft_k`+1 verified tokens per sequence
+//! per tick — token-identical to the plain route, with the emitted tokens
+//! counted against the same `step_tokens` budget.
+//!
 //! Generation depth never stalls the loop (ring slots make decode O(1)
 //! per token), and prompt *length* no longer stalls it either: per-tick
 //! forward cost is bounded by `max(step_tokens, live decodes)` — live
@@ -49,6 +57,7 @@
 use super::batcher::{AdmitPolicy, AdmitState, Batcher};
 use super::engine::{Engine, GenResult, PrefillState, SeqState};
 use super::metrics::Metrics;
+use super::spec::{SpecEngine, SpecStepStats};
 use crate::model::{KvCachePool, KvDtype};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -83,6 +92,16 @@ pub struct SchedPolicy {
     /// Which queued requests to admit when slots are scarce (FIFO /
     /// shortest-job-first / per-client fair share).
     pub admit: AdmitPolicy,
+    /// Speculative draft depth: tokens the compressed draft model proposes
+    /// per sequence per tick on speculative routes
+    /// ([`Scheduler::new_spec`] / `Router::register_speculative`; must be
+    /// ≥ 1 there). 0 — the default — means the route decodes plainly and
+    /// the field is inert. Each speculative tick emits 1..=`draft_k`+1
+    /// verified tokens per sequence; emitted tokens count against
+    /// `step_tokens` (each in-flight sequence reserves `draft_k + 1`
+    /// budget), while the draft model's own forwards are off-budget extra
+    /// work — they are the cheap side of the pair.
+    pub draft_k: usize,
 }
 
 impl Default for SchedPolicy {
@@ -93,6 +112,7 @@ impl Default for SchedPolicy {
             step_tokens: 64,
             chunk_tokens: 32,
             admit: AdmitPolicy::Fifo,
+            draft_k: 0,
         }
     }
 }
@@ -105,6 +125,10 @@ struct InFlight {
     /// Submit→first-token latency, set when the prefill completed
     /// (returned to the client in [`GenResult::ttft_s`]).
     ttft_s: Option<f64>,
+    /// Draft tokens proposed for this sequence (speculative routes only).
+    drafted: usize,
+    /// Draft tokens the target confirmed (speculative routes only).
+    accepted: usize,
 }
 
 /// One admitted sequence still feeding its prompt, chunk by chunk.
@@ -118,6 +142,10 @@ struct Filling {
 pub struct Scheduler {
     engine: Arc<Engine>,
     policy: SchedPolicy,
+    /// Set on speculative routes ([`Scheduler::new_spec`]): the tick runs
+    /// draft/verify/rollback through this pair instead of a plain
+    /// `Engine::step_chunked`; `engine` is then the pair's dense target.
+    spec: Option<SpecEngine>,
 }
 
 impl Scheduler {
@@ -125,7 +153,19 @@ impl Scheduler {
         assert!(policy.max_slots > 0, "scheduler needs at least one slot");
         assert!(policy.step_tokens > 0, "token budget must be positive");
         assert!(policy.chunk_tokens > 0, "chunk size must be positive");
-        Scheduler { engine, policy }
+        Scheduler { engine, policy, spec: None }
+    }
+
+    /// Speculative scheduler: `draft` (compressed) proposes
+    /// `policy.draft_k` tokens per sequence per tick, `target` (dense)
+    /// verifies them in the tick's one batched forward — output stays
+    /// token-identical to a plain `target` route, only faster. The serving
+    /// pool follows `target` (plus `policy.kv_dtype` overrides, as usual);
+    /// the twin draft pool follows `draft`'s own dtype/layout.
+    pub fn new_spec(target: Arc<Engine>, draft: Arc<Engine>, policy: SchedPolicy) -> Self {
+        assert!(policy.draft_k >= 1, "speculative scheduler needs SchedPolicy::draft_k >= 1");
+        let spec = SpecEngine::new(Arc::clone(&target), draft, policy.draft_k);
+        Scheduler { spec: Some(spec), ..Self::new(target, policy) }
     }
 
     pub fn policy(&self) -> SchedPolicy {
@@ -148,6 +188,18 @@ impl Scheduler {
             self.kv_dtype(),
             self.engine.kv_layout(),
         );
+        // Speculative routes keep a twin pool for the draft model's cache.
+        // Slot allocation stays in lockstep with the serving pool (both
+        // free-lists start identical and every alloc/free is paired), so
+        // the same slot id addresses a sequence in both pools.
+        let mut draft_pool: Option<KvCachePool> = self.spec.as_ref().map(|s| {
+            KvCachePool::with_layout(
+                s.draft().config(),
+                self.policy.max_slots,
+                s.draft().kv_dtype(),
+                s.draft().kv_layout(),
+            )
+        });
         let mut flights: Vec<InFlight> = Vec::new();
         let mut filling: Vec<Filling> = Vec::new();
         let mut admit_state = AdmitState::default();
@@ -167,6 +219,10 @@ impl Scheduler {
                     // O(1): claims the slot, runs no forward — the prompt
                     // feeds in chunks inside the regular ticks below.
                     let pre = self.engine.prefill_begin(&pending.req, &mut pool);
+                    if let Some(dp) = draft_pool.as_mut() {
+                        let ds = dp.alloc().expect("draft pool out of slots");
+                        assert_eq!(ds, pre.state().slot, "twin pools must allocate in lockstep");
+                    }
                     if pre.is_complete() {
                         // max_new == 0: nothing to run, retire untouched.
                         let flight = InFlight {
@@ -174,8 +230,10 @@ impl Scheduler {
                             result_slot: pending.result_slot,
                             enqueued: pending.enqueued,
                             ttft_s: None,
+                            drafted: 0,
+                            accepted: 0,
                         };
-                        Self::retire(flight, &mut pool, metrics);
+                        Self::retire(flight, &mut pool, draft_pool.as_mut(), metrics);
                     } else {
                         filling.push(Filling {
                             pre,
@@ -190,24 +248,47 @@ impl Scheduler {
             }
 
             // ── Step: one budgeted batched forward ────────────────────
-            // Live decodes always advance (one token each); prompt chunks
-            // fill whatever budget remains. When only prefills are in
-            // flight the whole budget is theirs, so progress is
-            // guaranteed either way.
-            let budget = self.policy.step_tokens.saturating_sub(flights.len());
+            // Live decodes always advance; prompt chunks fill whatever
+            // budget remains. Each in-flight sequence reserves one budget
+            // token — or `draft_k + 1` on speculative routes, where a tick
+            // emits up to that many verified tokens per sequence (the
+            // draft model's own forwards stay off-budget). When only
+            // prefills are in flight the whole budget is theirs, so
+            // progress is guaranteed either way.
+            let per_flight = self.spec.as_ref().map_or(1, |s| s.draft_k() + 1);
+            let budget = self.policy.step_tokens.saturating_sub(flights.len() * per_flight);
             let t0 = Instant::now();
             let stats = {
                 let mut pres: Vec<&mut PrefillState> =
                     filling.iter_mut().map(|f| &mut f.pre).collect();
                 let mut active: Vec<&mut SeqState> =
                     flights.iter_mut().map(|f| &mut f.state).collect();
-                self.engine.step_chunked(
-                    &mut pres,
-                    &mut active,
-                    self.policy.chunk_tokens,
-                    budget,
-                    &mut pool,
-                )
+                match (&self.spec, draft_pool.as_mut()) {
+                    (Some(spec), Some(dp)) => spec.step_chunked(
+                        &mut pres,
+                        &mut active,
+                        self.policy.chunk_tokens,
+                        budget,
+                        &mut pool,
+                        dp,
+                    ),
+                    _ => {
+                        let st = self.engine.step_chunked(
+                            &mut pres,
+                            &mut active,
+                            self.policy.chunk_tokens,
+                            budget,
+                            &mut pool,
+                        );
+                        SpecStepStats {
+                            prefill_tokens: st.prefill_tokens,
+                            first_tokens: st.first_tokens,
+                            decode_tokens: st.decode_tokens,
+                            decode_seqs: st.decode_tokens,
+                            ..Default::default()
+                        }
+                    }
+                }
             };
             let elapsed = t0.elapsed().as_secs_f64();
             // One forward, one busy accounting: the decode side claims the
@@ -216,12 +297,21 @@ impl Scheduler {
             // completed nothing, which still ran a real forward (only
             // first tokens count toward generated-token throughput).
             if stats.decode_tokens > 0 {
-                metrics.record_decode_step(stats.decode_tokens, elapsed);
+                metrics.record_decode_step(stats.decode_tokens, stats.decode_seqs, elapsed);
+                if stats.drafted > 0 {
+                    metrics.record_spec_step(stats.drafted, stats.accepted);
+                }
                 if stats.first_tokens > 0 {
                     metrics.record_prefill(stats.first_tokens, 0.0);
                 }
             } else if stats.prefill_tokens > 0 {
                 metrics.record_prefill(stats.first_tokens, elapsed);
+            }
+            // Attribute speculation to its sequences: `active` was built
+            // from `flights` in order, so per_seq indices line up.
+            for &(j, d, a) in &stats.per_seq {
+                flights[j].drafted += d;
+                flights[j].accepted += a;
             }
 
             // ── Retire / promote ──────────────────────────────────────
@@ -239,9 +329,11 @@ impl Scheduler {
                         result_slot: f.result_slot,
                         enqueued: f.enqueued,
                         ttft_s: Some(ttft),
+                        drafted: 0,
+                        accepted: 0,
                     };
                     if flight.state.done {
-                        Self::retire(flight, &mut pool, metrics);
+                        Self::retire(flight, &mut pool, draft_pool.as_mut(), metrics);
                     } else {
                         flights.push(flight);
                     }
@@ -253,7 +345,7 @@ impl Scheduler {
             while i < flights.len() {
                 if flights[i].state.done {
                     let flight = flights.swap_remove(i);
-                    Self::retire(flight, &mut pool, metrics);
+                    Self::retire(flight, &mut pool, draft_pool.as_mut(), metrics);
                 } else {
                     i += 1;
                 }
@@ -261,14 +353,32 @@ impl Scheduler {
         }
     }
 
-    /// Free the sequence's cache slot and deliver its result.
-    fn retire(flight: InFlight, pool: &mut KvCachePool, metrics: &Metrics) {
+    /// Free the sequence's cache slot(s) and deliver its result. On
+    /// speculative routes the twin draft slot frees in the same breath
+    /// (keeping the pools' free-lists in lockstep) and the result carries
+    /// the request's `(drafted, accepted)` speculation totals.
+    fn retire(
+        flight: InFlight,
+        pool: &mut KvCachePool,
+        draft_pool: Option<&mut KvCachePool>,
+        metrics: &Metrics,
+    ) {
         pool.free(flight.state.slot);
+        let spec = draft_pool.map(|dp| {
+            dp.free(flight.state.slot);
+            (flight.drafted, flight.accepted)
+        });
         metrics.record_request(flight.enqueued.elapsed().as_secs_f64());
+        if let Some((d, a)) = spec {
+            if d > 0 {
+                metrics.record_spec_request(d, a);
+            }
+        }
         let _ = flight.result_slot.send(GenResult {
             id: flight.state.id,
             tokens: flight.state.generated().to_vec(),
             ttft_s: flight.ttft_s,
+            spec,
         });
     }
 }
@@ -550,6 +660,125 @@ mod tests {
         // Queue wait (enqueue→admit) is recorded for every admission.
         assert!(metrics.queue_wait_pct(50.0) > 0.0);
         assert!(metrics.tokens() >= 6);
+    }
+
+    /// Run `reqs` through a live SPECULATIVE scheduler and return the full
+    /// results (tokens + per-request speculation totals) plus the route's
+    /// metrics.
+    fn serve_spec(
+        target: Arc<Engine>,
+        draft: Arc<Engine>,
+        reqs: &[GenRequest],
+        policy: SchedPolicy,
+    ) -> (Vec<GenResult>, Arc<Metrics>) {
+        let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+        let metrics = Arc::new(Metrics::new());
+        let worker = {
+            let b = batcher.clone();
+            let m = metrics.clone();
+            std::thread::spawn(move || Scheduler::new_spec(target, draft, policy).run(&b, &m))
+        };
+        let rxs: Vec<_> = reqs.iter().map(|r| batcher.submit(r.clone())).collect();
+        let outs: Vec<GenResult> = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(60)).unwrap())
+            .collect();
+        batcher.close();
+        worker.join().unwrap();
+        (outs, metrics)
+    }
+
+    /// The speculative route's tokens equal each request's solo decode on
+    /// the TARGET engine (the draft can never change output, only speed),
+    /// with per-request and per-route acceptance recorded.
+    #[test]
+    fn speculative_route_equals_solo_target() {
+        let target = dense_engine(7);
+        let draft = kernel_engine(7); // same base weights, compressed
+        let reqs = vec![
+            GenRequest::new(0, vec![5, 6, 7], 6),
+            GenRequest::new(1, vec![9], 4),
+            GenRequest::new(2, vec![11, 12, 13, 14, 15], 5),
+            GenRequest::new(3, vec![40], 1), // remaining == 1: never drafts
+        ];
+        let policy =
+            SchedPolicy { max_slots: 3, draft_k: 4, chunk_tokens: 3, ..Default::default() };
+        let (outs, metrics) = serve_spec(target.clone(), draft, &reqs, policy);
+        for (req, got) in reqs.iter().zip(outs.iter()) {
+            let solo = target.generate_batch(std::slice::from_ref(req));
+            assert_eq!(got.tokens, solo[0].tokens, "request {} diverged", req.id);
+            let (d, a) = got.spec.expect("speculative route must report totals");
+            assert!(a <= d, "request {}: accepted {a} > drafted {d}", req.id);
+            if req.max_new >= 2 {
+                assert!(d > 0, "request {} never drafted", req.id);
+            } else {
+                assert_eq!((d, a), (0, 0));
+            }
+        }
+        assert!(metrics.spec_drafted() > 0);
+        assert!(metrics.spec_accepted() <= metrics.spec_drafted());
+        let rate = metrics.spec_acceptance_rate();
+        assert!((0.0..=1.0).contains(&rate), "acceptance rate {rate}");
+        assert!(metrics.summary().contains("spec_accept"));
+    }
+
+    /// Identical twin (draft == target weights): every draft is confirmed,
+    /// so route-level acceptance is 100%.
+    #[test]
+    fn speculative_identical_twin_accepts_all() {
+        let target = dense_engine(7);
+        let draft = dense_engine(7);
+        let reqs = vec![GenRequest::new(0, vec![5, 6, 7], 8), GenRequest::new(1, vec![9], 6)];
+        let policy = SchedPolicy { max_slots: 2, draft_k: 3, ..Default::default() };
+        let (outs, metrics) = serve_spec(target.clone(), draft, &reqs, policy);
+        for (req, got) in reqs.iter().zip(outs.iter()) {
+            assert_eq!(got.tokens, target.generate_batch(&[req.clone()])[0].tokens);
+            let (d, a) = got.spec.unwrap();
+            assert_eq!(d, a, "request {}: identical twin must accept all", req.id);
+        }
+        assert_eq!(metrics.spec_drafted(), metrics.spec_accepted());
+        assert!((metrics.spec_acceptance_rate() - 1.0).abs() < 1e-12);
+    }
+
+    /// Speculative serving with wrapped ring slots and slot recycling: the
+    /// fallback path takes over past the context length and retired twin
+    /// slots readmit cleanly (the draft pool frees in lockstep).
+    #[test]
+    fn speculative_wrapped_slots_recycle() {
+        let cfg = crate::model::ModelConfig {
+            name: "ring-spec-sched".to_string(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff_ratio: 2,
+            vocab: 96,
+            max_seq: 8,
+            stands_for: "speculative scheduler ring test".to_string(),
+        };
+        let mut rng = Pcg32::seeded(19);
+        let w = Arc::new(init(&cfg, &mut rng));
+        let target = Arc::new(Engine::new("t", cfg.clone(), w.clone(), None));
+        let draft = Arc::new(Engine::new("d", cfg.clone(), w, None));
+        let long_new = 2 * cfg.max_seq + 3;
+        let reqs = vec![
+            GenRequest::new(0, vec![5, 6, 7], long_new),
+            GenRequest::new(1, vec![9], 2),
+            GenRequest::new(2, vec![11, 12], 3),
+            GenRequest::new(3, vec![13], long_new),
+        ];
+        let policy = SchedPolicy {
+            max_slots: 2,
+            draft_k: 3,
+            chunk_tokens: 2,
+            step_tokens: 16,
+            ..Default::default()
+        };
+        let (outs, _) = serve_spec(target.clone(), draft, &reqs, policy);
+        for (req, got) in reqs.iter().zip(outs.iter()) {
+            assert_eq!(got.tokens.len(), req.max_new, "request {} length", req.id);
+            let solo = target.generate_batch(std::slice::from_ref(req));
+            assert_eq!(got.tokens, solo[0].tokens, "request {} diverged", req.id);
+        }
     }
 
     /// One long prompt chunk-feeding while short requests decode: every

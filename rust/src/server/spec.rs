@@ -1,0 +1,554 @@
+//! Self-speculative decoding: the SLiM-compressed twin drafts, the dense
+//! target verifies.
+//!
+//! A [`SpecEngine`] pairs two [`Engine`]s over the SAME token space — a
+//! *draft* (the compressed, kernel-backed model: cheap per forward) and a
+//! *target* (the dense f32 model: the quality bar) — and turns the
+//! compression speedup into end-to-end dense-output decode throughput:
+//!
+//! 1. **Draft**: each scheduled sequence greedily decodes `k` tokens on
+//!    the draft model (one catch-up span + `k−1` single-token forwards,
+//!    batched across sequences; the catch-up span replays the token
+//!    history the draft cache has not seen yet, so the draft needs no
+//!    prefill of its own).
+//! 2. **Verify**: ALL `k` draft tokens are checked in ONE batched target
+//!    forward — the verify span `[t0, d1..dk]` is an ordinary multi-token
+//!    continuation span at the slot's logical base, exactly the spans
+//!    chunked prefill already feeds through `model::forward_slots`, so row
+//!    `i` of the span's logits is the target's greedy choice after
+//!    consuming `t0, d1..d_i`. The longest prefix on which the target
+//!    agrees is accepted; the first disagreeing row IS the correction
+//!    token (and a fully-accepted span yields the last row as a free
+//!    bonus token). Every step therefore emits between 1 and `k+1`
+//!    tokens, each one the token target-only greedy decode would have
+//!    produced — speculation changes latency, never output.
+//! 3. **Rollback**: the rejected suffix of the verify span is discarded
+//!    from BOTH KV pools via [`KvCachePool::truncate`], the rewind
+//!    primitive this step introduced: the target keeps exactly the
+//!    context of every emitted token but the last (the next step's feed),
+//!    and the draft cache is capped at the target's new length so the
+//!    next catch-up span is well-defined. Eligibility clamps `k` so a
+//!    verify span never wraps the ring (`k ≤ max_seq − len − 1`), which
+//!    is precisely the regime where `truncate` is lossless; once a
+//!    sequence decodes past that point it permanently falls back to
+//!    plain single-token target steps (which may wrap, like any decode).
+//!
+//! Draft and target share [`greedy_pick`]'s lowest-index tie-break — with
+//! different tie-breaks, acceptance would silently degrade on tied logits
+//! even when the models agree.
+
+use super::engine::{Engine, GenRequest, GenResult, PrefillState, SeqState};
+use crate::model::{greedy_pick, KvCachePool};
+use std::sync::Arc;
+
+/// What one [`SpecEngine::step_chunked`] tick produced — the
+/// `engine::StepStats` counters plus speculative accounting.
+#[derive(Clone, Debug, Default)]
+pub struct SpecStepStats {
+    /// Prompt tokens fed into the target cache across all prefill chunks.
+    pub prefill_tokens: usize,
+    /// Prefills that completed this tick (each emitted its first token).
+    pub first_tokens: usize,
+    /// Tokens emitted across all decode sequences (1..=k+1 each).
+    pub decode_tokens: usize,
+    /// Decode sequences that advanced this tick (for dividing step latency
+    /// across multi-token emission in `Metrics`).
+    pub decode_seqs: usize,
+    /// Draft tokens proposed this tick.
+    pub drafted: usize,
+    /// Draft tokens the target confirmed this tick.
+    pub accepted: usize,
+    /// Per-sequence `(decodes-slice index, drafted, accepted)` for
+    /// sequences that speculated (fallback steps draft nothing and are
+    /// omitted) — the scheduler attributes these to in-flight requests.
+    pub per_seq: Vec<(usize, usize, usize)>,
+}
+
+/// One sequence's speculation plan for the current tick.
+struct Plan {
+    /// Index into the `decodes` slice.
+    idx: usize,
+    slot: usize,
+    /// Target pool length at tick start.
+    l_t: usize,
+    /// Draft depth this tick (≥ 1; clamped to ring room and `max_new`).
+    k: usize,
+    /// The `k` greedy draft tokens.
+    drafted: Vec<u32>,
+}
+
+/// A draft/target engine pair serving speculative greedy decode.
+///
+/// Both engines must share vocab and context length (asserted); they
+/// usually share weights-before-compression too, but nothing requires it —
+/// acceptance rate is simply how often the draft matches the target.
+pub struct SpecEngine {
+    target: Arc<Engine>,
+    draft: Arc<Engine>,
+    draft_k: usize,
+}
+
+impl SpecEngine {
+    /// Pair `draft` (compressed) with `target` (dense), drafting `k`
+    /// tokens per sequence per step. `draft_k` must be ≥ 1 — a route that
+    /// wants plain decoding uses a plain `Scheduler`, not a zero-depth
+    /// speculative one.
+    pub fn new(target: Arc<Engine>, draft: Arc<Engine>, draft_k: usize) -> Self {
+        assert!(draft_k >= 1, "speculative decoding needs draft_k >= 1");
+        assert_eq!(
+            target.config().vocab,
+            draft.config().vocab,
+            "draft and target must share a vocab"
+        );
+        assert_eq!(
+            target.config().max_seq,
+            draft.config().max_seq,
+            "draft and target must share a context length"
+        );
+        SpecEngine { target, draft, draft_k }
+    }
+
+    /// The dense verifying engine (its config/dtype drive pool creation).
+    pub fn target(&self) -> &Arc<Engine> {
+        &self.target
+    }
+
+    /// The compressed drafting engine.
+    pub fn draft(&self) -> &Arc<Engine> {
+        &self.draft
+    }
+
+    /// Draft depth per sequence per step.
+    pub fn draft_k(&self) -> usize {
+        self.draft_k
+    }
+
+    /// One speculative serving tick: prefill chunks and plain-decode
+    /// fallbacks ride the SAME single target forward as the verify spans
+    /// (the `Engine::step_chunked` contract, extended with draft/verify/
+    /// rollback). Prefill feeds the target pool only — the draft cache
+    /// catches up from token history once the sequence decodes.
+    ///
+    /// Draft forwards are extra (off-budget) work; callers budget on the
+    /// emitted tokens this returns.
+    pub fn step_chunked(
+        &self,
+        prefills: &mut [&mut PrefillState],
+        decodes: &mut [&mut SeqState],
+        chunk_tokens: usize,
+        prefill_budget: usize,
+        target_pool: &mut KvCachePool,
+        draft_pool: &mut KvCachePool,
+    ) -> SpecStepStats {
+        let max_seq = self.target.config().max_seq;
+        let mut stats = SpecStepStats::default();
+
+        // ── Plan prefill chunks (target pool only) ───────────────────────
+        let mut budget = prefill_budget;
+        let chunks: Vec<usize> = prefills
+            .iter()
+            .map(|p| {
+                let c = chunk_tokens
+                    .min(p.remaining())
+                    .min(budget)
+                    .min(target_pool.span_room(p.state().slot));
+                budget -= c;
+                c
+            })
+            .collect();
+
+        // ── Classify decode sequences ────────────────────────────────────
+        // Speculate when the k+1-token verify span still fits the
+        // un-wrapped ring AND ≥ 2 tokens remain (with 1 remaining a draft
+        // could never pay off — the single target row is the token);
+        // otherwise fall back to a plain single-token target step.
+        let mut plans: Vec<Plan> = Vec::new();
+        let mut fallback: Vec<usize> = Vec::new();
+        for (i, st) in decodes.iter().enumerate() {
+            if st.done {
+                continue;
+            }
+            let slot = st.slot;
+            let l_t = target_pool.len(slot);
+            let remaining = st.max_new - st.generated().len();
+            let k = self
+                .draft_k
+                .min(max_seq.saturating_sub(l_t + 1))
+                .min(remaining.saturating_sub(1));
+            if k == 0 {
+                fallback.push(i);
+            } else {
+                plans.push(Plan { idx: i, slot, l_t, k, drafted: Vec::with_capacity(k) });
+            }
+        }
+
+        // ── Draft phase: k greedy tokens per plan on the compressed model.
+        // First a batched catch-up forward replaying the history suffix
+        // the draft cache is missing (its last row yields d1), then up to
+        // k_max − 1 batched single-token rounds. The catch-up span never
+        // wraps: eligibility guarantees l_t + 1 ≤ max_seq − 1, and the
+        // draft cache never exceeds l_t + k ≤ max_seq − 1 while drafting.
+        if !plans.is_empty() {
+            let catchups: Vec<Vec<u32>> = plans
+                .iter()
+                .map(|p| {
+                    let st = &decodes[p.idx];
+                    let off = st.prompt_len().saturating_sub(max_seq);
+                    st.history()[off + draft_pool.len(p.slot)..].to_vec()
+                })
+                .collect();
+            {
+                let entries: Vec<(usize, &[u32])> =
+                    plans.iter().zip(&catchups).map(|(p, c)| (p.slot, &c[..])).collect();
+                let logits = self.draft.forward_pool(&entries, draft_pool);
+                let mut row = 0usize;
+                for (p, c) in plans.iter_mut().zip(&catchups) {
+                    row += c.len();
+                    p.drafted.push(greedy_pick(logits.row(row - 1)) as u32);
+                }
+            }
+            let k_max = plans.iter().map(|p| p.k).max().unwrap_or(0);
+            for round in 1..k_max {
+                let lasts: Vec<(usize, u32)> = plans
+                    .iter()
+                    .filter(|p| p.k > round)
+                    .map(|p| (p.slot, *p.drafted.last().unwrap()))
+                    .collect();
+                if lasts.is_empty() {
+                    break;
+                }
+                let entries: Vec<(usize, &[u32])> =
+                    lasts.iter().map(|(s, t)| (*s, std::slice::from_ref(t))).collect();
+                let logits = self.draft.forward_pool(&entries, draft_pool);
+                drop(entries);
+                let mut row = 0usize;
+                for p in plans.iter_mut().filter(|p| p.k > round) {
+                    p.drafted.push(greedy_pick(logits.row(row)) as u32);
+                    row += 1;
+                }
+            }
+        }
+
+        // ── Verify phase: ONE batched target forward over prefill chunks,
+        // verify spans [t0, d1..dk] and fallback single-token spans.
+        let spec_spans: Vec<Vec<u32>> = plans
+            .iter()
+            .map(|p| {
+                let st = &decodes[p.idx];
+                let mut span = Vec::with_capacity(p.k + 1);
+                span.push(*st.history().last().unwrap());
+                span.extend_from_slice(&p.drafted);
+                span
+            })
+            .collect();
+        let mut entries: Vec<(usize, &[u32])> = Vec::new();
+        for (p, &c) in prefills.iter().zip(&chunks) {
+            if c > 0 {
+                entries.push(p.chunk_entry(c));
+            }
+        }
+        for (p, span) in plans.iter().zip(&spec_spans) {
+            entries.push((p.slot, &span[..]));
+        }
+        for &i in &fallback {
+            let st = &decodes[i];
+            entries.push((st.slot, std::slice::from_ref(st.history().last().unwrap())));
+        }
+        if entries.is_empty() {
+            return stats;
+        }
+        let logits = self.target.forward_pool(&entries, target_pool);
+        drop(entries); // release the immutable borrows of the state slices
+
+        // ── Apply: prefill rows first (same walk as Engine::step_chunked).
+        let mut row = 0usize;
+        for (p, &c) in prefills.iter_mut().zip(&chunks) {
+            if c == 0 {
+                continue;
+            }
+            row += c;
+            p.advance(c);
+            stats.prefill_tokens += c;
+            if p.prompt_done() {
+                p.push_first(greedy_pick(logits.row(row - 1)) as u32);
+                stats.first_tokens += 1;
+            }
+        }
+        // Verify rows: row base+i is the target's greedy choice after
+        // consuming span[0..=i] = t0, d1..d_i — it either confirms
+        // drafted[i] or IS the correction token.
+        for p in &plans {
+            let base = row;
+            row += p.k + 1;
+            let mut emit: Vec<u32> = Vec::with_capacity(p.k + 1);
+            let mut agreed = 0usize;
+            for i in 0..p.k {
+                let g = greedy_pick(logits.row(base + i)) as u32;
+                emit.push(g);
+                if g != p.drafted[i] {
+                    break; // the correction token ends the step's emission
+                }
+                agreed += 1;
+            }
+            if agreed == p.k {
+                // Every draft confirmed: the last verify row is a free
+                // bonus token (the target's choice after d_k).
+                emit.push(greedy_pick(logits.row(base + p.k)) as u32);
+            }
+            let mut pushed = 0usize;
+            for &t in &emit {
+                decodes[p.idx].push_token(t);
+                pushed += 1;
+                if decodes[p.idx].done {
+                    break;
+                }
+            }
+            stats.decode_tokens += pushed;
+            stats.decode_seqs += 1;
+            stats.drafted += p.k;
+            stats.accepted += agreed;
+            stats.per_seq.push((p.idx, p.k, agreed));
+            // Rollback: keep exactly the context of every emitted token
+            // but the last (the next step's feed); rejected draft rows are
+            // discarded and overwritten by the next append. The draft
+            // cache is capped at the target's new length so the next
+            // catch-up span is non-empty.
+            let l_new = p.l_t + pushed;
+            target_pool.truncate(p.slot, l_new);
+            draft_pool.truncate(p.slot, draft_pool.len(p.slot).min(l_new));
+        }
+        // Fallback rows: plain single-token greedy steps (may wrap the
+        // ring like any decode; no rollback needed).
+        for &i in &fallback {
+            decodes[i].push_token(greedy_pick(logits.row(row)) as u32);
+            row += 1;
+            stats.decode_tokens += 1;
+            stats.decode_seqs += 1;
+        }
+        stats
+    }
+
+    /// Speculatively greedy-decode a batch to completion over private twin
+    /// pools — the run-to-completion wrapper mirroring
+    /// `Engine::generate_batch`, with `GenResult::spec` carrying each
+    /// request's `(drafted, accepted)` totals. Output tokens are identical
+    /// to `target.generate_batch` by construction.
+    pub fn generate_batch(&self, reqs: &[GenRequest]) -> Vec<GenResult> {
+        if reqs.is_empty() {
+            return vec![];
+        }
+        let tcfg = self.target.config();
+        let mut tpool = KvCachePool::with_layout(
+            tcfg,
+            reqs.len(),
+            self.target.kv_dtype(),
+            self.target.kv_layout(),
+        );
+        let mut dpool = KvCachePool::with_layout(
+            self.draft.config(),
+            reqs.len(),
+            self.draft.kv_dtype(),
+            self.draft.kv_layout(),
+        );
+        // Twin pools allocate in lockstep so slot ids line up.
+        let mut pres: Vec<PrefillState> = reqs
+            .iter()
+            .map(|r| {
+                let pre = self.target.prefill_begin(r, &mut tpool);
+                let ds = dpool.alloc().expect("draft pool out of slots");
+                assert_eq!(ds, pre.state().slot, "twin pools must allocate in lockstep");
+                pre
+            })
+            .collect();
+        loop {
+            let mut active: Vec<&mut PrefillState> =
+                pres.iter_mut().filter(|p| !p.is_complete()).collect();
+            if active.is_empty() {
+                break;
+            }
+            self.target.step_chunked(&mut active, &mut [], usize::MAX, usize::MAX, &mut tpool);
+        }
+        let mut states: Vec<SeqState> = pres.into_iter().map(PrefillState::into_state).collect();
+        let mut drafted = vec![0usize; states.len()];
+        let mut accepted = vec![0usize; states.len()];
+        loop {
+            let orig: Vec<usize> = states
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| !s.done)
+                .map(|(i, _)| i)
+                .collect();
+            if orig.is_empty() {
+                break;
+            }
+            let mut active: Vec<&mut SeqState> =
+                states.iter_mut().filter(|s| !s.done).collect();
+            let stats = self.step_chunked(&mut [], &mut active, 0, 0, &mut tpool, &mut dpool);
+            for &(j, d, a) in &stats.per_seq {
+                drafted[orig[j]] += d;
+                accepted[orig[j]] += a;
+            }
+        }
+        states
+            .iter()
+            .enumerate()
+            .map(|(i, s)| GenResult {
+                id: s.id,
+                tokens: s.generated().to_vec(),
+                ttft_s: None,
+                spec: Some((drafted[i], accepted[i])),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{by_name, init, KvDtype, ModelConfig};
+    use crate::rng::Pcg32;
+
+    fn dense_engine(seed: u64) -> Engine {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(seed);
+        let w = init(&cfg, &mut rng);
+        Engine::new("sim-125m", cfg, Arc::new(w), None)
+    }
+
+    /// Self-speculative pair: compressed kernel draft + dense target from
+    /// the SAME weights (the SLiM deployment shape).
+    fn slim_pair(draft_k: usize) -> SpecEngine {
+        use crate::compress::CompressConfig;
+        use crate::model::{
+            compress_model, forward, ActivationTap, Batch, CompressedWeights,
+        };
+        use crate::sparse::SparsityPattern;
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let w = init(&cfg, &mut rng);
+        let toks: Vec<u32> = (0..64).map(|_| rng.below(cfg.vocab as u32)).collect();
+        let batch = Batch::new(toks, 2, 32);
+        let mut taps = ActivationTap::new();
+        forward(&cfg, &w, &batch, Some(&mut taps), None);
+        let cm = compress_model(&cfg, &w, &taps, &CompressConfig::slim(SparsityPattern::TWO_FOUR));
+        let weights = Arc::new(w);
+        let cw = Arc::new(CompressedWeights::from_model(&cm));
+        let target = Arc::new(Engine::new("dense", cfg.clone(), weights.clone(), None));
+        let draft = Arc::new(Engine::with_kernels("int4-2:4", cfg, weights, cw));
+        SpecEngine::new(target, draft, draft_k)
+    }
+
+    #[test]
+    fn spec_output_identical_to_target_greedy() {
+        let spec = slim_pair(4);
+        let reqs = vec![
+            GenRequest::new(1, vec![5, 6, 7], 8),
+            GenRequest::new(2, vec![9], 6),
+            GenRequest::new(3, vec![20, 21, 22, 23, 24], 5),
+        ];
+        let got = spec.generate_batch(&reqs);
+        let want = spec.target().generate_batch(&reqs);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.tokens, w.tokens, "request {} diverged from target-only", g.id);
+            let (d, a) = g.spec.unwrap();
+            assert!(a <= d, "accepted {a} > drafted {d}");
+        }
+    }
+
+    #[test]
+    fn identical_twin_accepts_everything() {
+        // Draft == target (same dense engine twice): every draft token is
+        // confirmed, so each step emits k+1 tokens and acceptance is 100%.
+        let target = Arc::new(dense_engine(1));
+        let draft = Arc::new(dense_engine(1));
+        let spec = SpecEngine::new(target, draft, 3);
+        let reqs = vec![GenRequest::new(1, vec![5, 6, 7], 9)];
+        let got = spec.generate_batch(&reqs);
+        let want = spec.target().generate_batch(&reqs);
+        assert_eq!(got[0].tokens, want[0].tokens);
+        let (d, a) = got[0].spec.unwrap();
+        assert_eq!(d, a, "an identical twin must accept every draft");
+        assert!(d > 0);
+    }
+
+    #[test]
+    fn disagreeing_draft_still_matches_target() {
+        // A draft from DIFFERENT weights disagrees constantly; the output
+        // must still be the target's, token for token (rejections exercise
+        // the rollback path hard).
+        let target = Arc::new(dense_engine(1));
+        let draft = Arc::new(dense_engine(7));
+        let spec = SpecEngine::new(target, draft, 4);
+        let reqs =
+            vec![GenRequest::new(1, vec![5, 6, 7], 10), GenRequest::new(2, vec![40, 41], 7)];
+        let got = spec.generate_batch(&reqs);
+        let want = spec.target().generate_batch(&reqs);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.tokens, w.tokens, "request {} diverged from target-only", g.id);
+        }
+    }
+
+    #[test]
+    fn stop_token_retires_mid_speculation() {
+        let target = Arc::new(dense_engine(1));
+        let draft = Arc::new(dense_engine(1));
+        let spec = SpecEngine::new(target.clone(), draft, 4);
+        let free = target.generate_batch(&[GenRequest::new(1, vec![5, 6, 7], 8)]);
+        let stop = free[0].tokens[2];
+        let req = GenRequest::new(1, vec![5, 6, 7], 8).with_stop(stop);
+        let got = spec.generate_batch(std::slice::from_ref(&req));
+        let want = target.generate_batch(&[req]);
+        assert_eq!(got[0].tokens, want[0].tokens);
+        assert_eq!(*got[0].tokens.last().unwrap(), stop);
+    }
+
+    #[test]
+    fn deep_generation_falls_back_past_ring_room() {
+        // Generate past the context length: speculation stops once the
+        // verify span no longer fits the un-wrapped ring, and the fallback
+        // single-token path (which wraps like any decode) keeps the output
+        // identical to target-only greedy to any depth.
+        let cfg = ModelConfig {
+            name: "ring-spec".to_string(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff_ratio: 2,
+            vocab: 96,
+            max_seq: 8,
+            stands_for: "ring spec test".to_string(),
+        };
+        let mut rng = Pcg32::seeded(11);
+        let w = Arc::new(init(&cfg, &mut rng));
+        let target = Arc::new(Engine::new("t", cfg.clone(), w.clone(), None));
+        let draft = Arc::new(Engine::new("d", cfg, w, None));
+        let spec = SpecEngine::new(target, draft, 3);
+        let reqs = vec![GenRequest::new(1, vec![3, 4, 5], 2 * 8 + 5)];
+        let got = spec.generate_batch(&reqs);
+        let want = spec.target().generate_batch(&reqs);
+        assert_eq!(got[0].tokens, want[0].tokens, "deep spec decode diverged");
+        assert_eq!(got[0].tokens.len(), 2 * 8 + 5);
+    }
+
+    #[test]
+    fn max_new_one_never_drafts() {
+        // remaining == 1 clamps k to 0: the single token comes from a
+        // plain target step and no draft forward runs.
+        let target = Arc::new(dense_engine(1));
+        let draft = Arc::new(dense_engine(1));
+        let spec = SpecEngine::new(target, draft, 4);
+        let reqs = vec![GenRequest::new(1, vec![5, 6], 1)];
+        let got = spec.generate_batch(&reqs);
+        assert_eq!(got[0].tokens.len(), 1);
+        assert_eq!(got[0].spec, Some((0, 0)));
+        assert_eq!(got[0].tokens, spec.target().generate_batch(&reqs)[0].tokens);
+    }
+
+    #[test]
+    #[should_panic(expected = "draft_k >= 1")]
+    fn zero_draft_depth_refused() {
+        let target = Arc::new(dense_engine(1));
+        let draft = Arc::new(dense_engine(1));
+        SpecEngine::new(target, draft, 0);
+    }
+}

@@ -385,3 +385,72 @@ fn prop_histogram_integral_matches_direct_mse() {
         );
     }
 }
+
+#[test]
+fn prop_spec_decode_equals_target_greedy() {
+    // Self-speculative decoding must be OUTPUT-INVARIANT: for every draft
+    // depth k ∈ 1..=8, every KV storage dtype, prompts on both sides of
+    // the context window, and generation deep enough to wrap the ring
+    // twice, `SpecEngine::generate_batch` returns exactly the tokens the
+    // target engine produces alone. The draft only decides how many
+    // verified tokens land per step — never which. Both a same-weights
+    // draft (accepts nearly everything) and a different-seed draft
+    // (frequent disagreement → correction path) are exercised.
+    use slim::server::SpecEngine;
+    let cfg = ModelConfig {
+        name: "spec-prop".to_string(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff_ratio: 2,
+        vocab: 96,
+        max_seq: 10,
+        stands_for: "speculative decoding property test".to_string(),
+    };
+    for seed in [1u64, 2] {
+        let mut rng = Pcg32::seeded(seed);
+        let weights = Arc::new(init(&cfg, &mut rng));
+        let mut other_rng = Pcg32::seeded(seed + 100);
+        let other = Arc::new(init(&cfg, &mut other_rng));
+        // Prompts shorter and longer than the window; max_new wraps the
+        // ring twice so the permanent single-token fallback runs too.
+        let max_new = 2 * cfg.max_seq + 4;
+        let reqs: Vec<GenRequest> = [3usize, cfg.max_seq + 2]
+            .iter()
+            .enumerate()
+            .map(|(i, &plen)| {
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.below(cfg.vocab as u32)).collect();
+                GenRequest::new(i as u64, prompt, max_new)
+            })
+            .collect();
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let target = Arc::new(
+                Engine::new("target", cfg.clone(), weights.clone(), None).with_kv_dtype(dtype),
+            );
+            let want: Vec<Vec<u32>> = target
+                .generate_batch(&reqs)
+                .into_iter()
+                .map(|r| r.tokens)
+                .collect();
+            for (label, dw) in [("twin", weights.clone()), ("rival", other.clone())] {
+                let draft = Arc::new(
+                    Engine::new("draft", cfg.clone(), dw, None).with_kv_dtype(dtype),
+                );
+                for k in 1..=8usize {
+                    let spec = SpecEngine::new(target.clone(), draft.clone(), k);
+                    let results = spec.generate_batch(&reqs);
+                    for (res, want_toks) in results.iter().zip(&want) {
+                        assert_eq!(
+                            &res.tokens,
+                            want_toks,
+                            "seed {seed} dtype {} draft {label} k {k} diverged",
+                            dtype.name()
+                        );
+                        let (d, a) = res.spec.expect("spec stats present");
+                        assert!(a <= d, "accepted {a} > drafted {d}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -16,7 +16,14 @@
 //! * head-of-line short-population TTFT p95 under chunked prefill
 //!   (`BENCH_serve.json`, `results.hol-chunked.short_ttft_p95_ms`) —
 //!   LOWER is better: this is the tail latency chunked prefill exists to
-//!   protect, so a >20% increase fails the gate.
+//!   protect, so a >20% increase fails the gate;
+//! * speculative-decode speedup over the dense-cached target with the
+//!   int4-2:4 draft (`BENCH_spec.json`,
+//!   `results.spec-int4-2:4.speedup_vs_dense`) — higher is better; the
+//!   committed baseline floor and the gate tolerance together enforce
+//!   "speculative is at least as fast as the target decoding alone"
+//!   (floor 1.25 × 20% tolerance → 1.0), so a draft that stops paying
+//!   for itself fails CI.
 //!
 //! Informational metrics are printed alongside but never fail the gate
 //! (wall-clock noise on shared runners makes broad gating flaky; the
@@ -43,6 +50,12 @@ const METRICS: &[(&str, &[&str], bool, bool)] = &[
     ("BENCH_decode.json", &["results", "int4-2:4-cached", "decode_tok_per_s"], true, false),
     ("BENCH_serve.json", &["results", "int4-2:4-continuous", "tok_per_s"], true, false),
     ("BENCH_serve.json", &["results", "hol-chunked", "short_ttft_p95_ms"], true, true),
+    ("BENCH_spec.json", &["results", "spec-int4-2:4", "speedup_vs_dense"], true, false),
+    ("BENCH_spec.json", &["results", "spec-int4", "speedup_vs_dense"], false, false),
+    ("BENCH_spec.json", &["results", "spec-group-int4", "speedup_vs_dense"], false, false),
+    ("BENCH_spec.json", &["results", "spec-int4-2:4", "accept_rate"], false, false),
+    ("BENCH_spec.json", &["results", "spec-int4", "accept_rate"], false, false),
+    ("BENCH_spec.json", &["results", "spec-group-int4", "accept_rate"], false, false),
     ("BENCH_decode.json", &["results", "int4-cached", "decode_tok_per_s"], false, false),
     ("BENCH_decode.json", &["results", "dense-cached", "decode_tok_per_s"], false, false),
     ("BENCH_serve.json", &["results", "dense-continuous", "tok_per_s"], false, false),
@@ -172,7 +185,8 @@ fn main() {
             "\nbench gate FAILED. If the regression is expected (e.g. a deliberate \
              trade-off), refresh the snapshots: BENCH_OUT_DIR=BENCH_baseline \
              cargo bench --bench decode -- --quick && BENCH_OUT_DIR=BENCH_baseline \
-             cargo bench --bench serve -- --quick, then commit BENCH_baseline/."
+             cargo bench --bench serve -- --quick, then commit BENCH_baseline/ \
+             (the decode bench also rewrites BENCH_spec.json)."
         );
         std::process::exit(1);
     }
