@@ -94,7 +94,7 @@ fn main() -> anyhow::Result<()> {
     let stopped = resp.get("tokens").and_then(Json::as_arr).unwrap().len();
     println!("[stop ] stop={stop} retired after {stopped}/8 tokens, freeing its slot early");
 
-    println!("[stats] {}", router.metrics.summary());
+    println!("[stats] {}", router.registry.summary());
     router.shutdown();
     println!("\nOK: continuous batching served mixed-length traffic with solo-equivalent output.");
     Ok(())

@@ -1,0 +1,132 @@
+//! Observability example: serve a burst through a speculative route, then
+//! scrape all three export surfaces — structured JSON metrics, Prometheus
+//! text, and a Perfetto-loadable Chrome trace.
+//!
+//! ```bash
+//! cargo run --release --example observability
+//! ```
+//!
+//! Registers a speculative + chunked-prefill route (the busiest lifecycle:
+//! enqueue → admit → prefill chunks → draft/verify ticks → retire), fires
+//! concurrent clients over the TCP front-end, then:
+//!
+//! * `{"cmd":"metrics"}` — per-route structured metrics (counters,
+//!   per-stage busy seconds, histogram percentiles) + the legacy one-line
+//!   summary;
+//! * `{"cmd":"metrics_prom"}` — the same registry as Prometheus text
+//!   exposition;
+//! * `{"cmd":"trace"}` — the flight recorder's lifecycle ring as Chrome
+//!   trace-event JSON, written to `trace.json` (or
+//!   `$BENCH_OUT_DIR/trace.json`): open it in <https://ui.perfetto.dev>
+//!   or `chrome://tracing` to see each request as a timeline lane.
+//!
+//! Uses randomly initialized weights so it runs instantly; CI runs it as a
+//! smoke step and uploads the trace artifact.
+
+use slim::model::{by_name, init};
+use slim::rng::Pcg32;
+use slim::server::{api, Engine, Router, SchedPolicy};
+use slim::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let model = "sim-125m";
+    let cfg = by_name(model).expect("known config");
+    let mut rng = Pcg32::seeded(11);
+    let weights = Arc::new(init(&cfg, &mut rng));
+
+    // Speculative route: compressed-draft/dense-target twins over the same
+    // weights keep the example instant while exercising the full
+    // draft/verify lifecycle the trace is meant to show.
+    let target = Engine::new(model, cfg.clone(), weights.clone(), None);
+    let draft = Engine::new("sim-125m-draft", cfg.clone(), weights, None);
+    let mut router = Router::new();
+    let policy = SchedPolicy {
+        max_slots: 4,
+        draft_k: 3,
+        chunk_tokens: 8,
+        step_tokens: 24,
+        ..Default::default()
+    };
+    router.register_speculative(target, draft, policy);
+    let router = Arc::new(router);
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    {
+        let router = router.clone();
+        std::thread::spawn(move || {
+            let _ = api::serve(router, "127.0.0.1:0", move |addr| {
+                let _ = tx.send(addr);
+            });
+        });
+    }
+    let addr = rx.recv_timeout(Duration::from_secs(10))?;
+    println!("[serve] speculative route listening on {addr} (4 slots, draft_k 3)");
+
+    // A concurrent burst so the trace shows interleaved request lanes.
+    let n_clients = 8usize;
+    println!("[load ] {n_clients} clients, prompts 3-12 tokens, max_new 4-9");
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        handles.push(std::thread::spawn(move || {
+            let mut client = api::Client::connect(addr).expect("connect");
+            let plen = 3 + c % 10;
+            let prompt: Vec<u32> = (0..plen).map(|j| (8 + c * 11 + j * 5) as u32 % 500).collect();
+            let toks = client.generate("sim-125m", &prompt, 4 + c % 6).expect("generate");
+            toks.len()
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    println!("[done ] {total} tokens served");
+
+    let mut client = api::Client::connect(addr)?;
+
+    // 1. Structured JSON metrics, per route.
+    let resp = client.call(&Json::parse(r#"{"cmd":"metrics"}"#).unwrap())?;
+    let summary = resp.get("summary").and_then(Json::as_str).unwrap_or("?");
+    println!("[stats] {summary}");
+    let route = resp.get("routes").and_then(|r| r.get(model)).expect("route metrics");
+    for key in ["requests", "tokens", "spec"] {
+        println!(
+            "[json ] {model}.{key} = {}",
+            route.get(key).map(Json::to_string_compact).unwrap_or_default()
+        );
+    }
+    let p95 = route
+        .get("request_latency_seconds")
+        .and_then(|h| h.get("p95"))
+        .and_then(Json::as_f64)
+        .expect("latency p95");
+    println!("[json ] {model}.request_latency_seconds.p95 = {:.1}ms", p95 * 1e3);
+
+    // 2. Prometheus text exposition.
+    let prom = client.call(&Json::parse(r#"{"cmd":"metrics_prom"}"#).unwrap())?;
+    let text = prom.get("text").and_then(Json::as_str).expect("prom text");
+    let shown: Vec<&str> = text
+        .lines()
+        .filter(|l| l.starts_with("slim_requests_total") || l.starts_with("slim_stage_busy"))
+        .collect();
+    println!("[prom ] {} lines, e.g.:", text.lines().count());
+    for line in shown.iter().take(6) {
+        println!("[prom ]   {line}");
+    }
+
+    // 3. Perfetto trace of every request lifecycle.
+    let resp = client.call(&Json::parse(r#"{"cmd":"trace"}"#).unwrap())?;
+    let trace = resp.get("trace").expect("trace");
+    let n_events =
+        trace.get("traceEvents").and_then(Json::as_arr).map(<[Json]>::len).unwrap_or(0);
+    let path = slim::util::bench_out_path("trace.json");
+    std::fs::write(&path, trace.to_string_compact())?;
+    println!(
+        "[trace] {n_events} events → {} (load in https://ui.perfetto.dev)",
+        path.display()
+    );
+
+    assert!(n_events > 0, "flight recorder captured the burst");
+    assert!(p95 > 0.0, "latency histogram populated");
+    router.shutdown();
+    println!("\nOK: metrics JSON + Prometheus exposition + Perfetto trace all exported.");
+    Ok(())
+}

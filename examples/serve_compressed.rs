@@ -84,15 +84,16 @@ fn main() -> anyhow::Result<()> {
 
     let tok_per_s = total_tokens as f64 / wall;
     println!("[done ] {total_tokens} tokens in {wall:.2}s ({tok_per_s:.1} tok/s end-to-end)");
-    println!("[stats] {}", router.metrics.summary());
+    println!("[stats] {}", router.registry.summary());
 
     // Metrics over the wire too.
     let mut client = api::Client::connect(addr)?;
     let resp = client.call(&Json::parse(r#"{"cmd":"metrics"}"#).unwrap())?;
     println!("[wire ] {}", resp.to_string_compact());
 
-    assert!(router.metrics.mean_batch_size() > 1.0, "batching should coalesce requests");
-    let mean_batch = router.metrics.mean_batch_size();
+    let metrics = router.route_metrics(model).expect("route metrics");
+    assert!(metrics.mean_batch_size() > 1.0, "batching should coalesce requests");
+    let mean_batch = metrics.mean_batch_size();
     println!("\nOK: mean batch size {mean_batch:.2} > 1 — dynamic batching engaged.");
     router.shutdown();
     Ok(())

@@ -26,17 +26,27 @@
 //! protect (CI gates `hol-chunked.short_ttft_p95_ms` via
 //! `tools/bench_gate.rs`, lower-is-better).
 //!
+//! The metrics-overhead section saturates the int4-2:4 continuous route
+//! with an all-at-once burst (compute-bound — no arrival gaps to hide
+//! instrumentation cost in) twice per arm, interleaved: once with the
+//! flight recorder on (full event capture) and once against the no-op
+//! sink (`FlightRecorder::disabled`, capacity 0 — returns before any
+//! lock). Best-of throughput per arm feeds `overhead_ratio =
+//! recorder_off / recorder_on`, the number the CI gate holds at ≤ 1.05
+//! (tracing must cost under 5% of serve throughput to stay
+//! leave-on-in-production cheap).
+//!
 //! Writes a `BENCH_serve.json` summary (throughput tok/s, p50/p95 TTFT,
-//! p50 completion, head-of-line records) next to the console table (or
-//! under `$BENCH_OUT_DIR`).
+//! p50 completion, head-of-line + metrics-overhead records) next to the
+//! console table (or under `$BENCH_OUT_DIR`).
 
 use slim::kernels::LinearOp;
 use slim::model::{init, CompressedWeights, KvCachePool, ModelConfig, Weights};
 use slim::quant::slim_quant;
 use slim::rng::Pcg32;
 use slim::server::{
-    AdmitPolicy, BatchPolicy, Batcher, Engine, GenRequest, GenResult, Metrics, SchedPolicy,
-    Scheduler, SeqState,
+    AdmitPolicy, BatchPolicy, Batcher, Engine, GenRequest, GenResult, Metrics, RouteObs,
+    SchedPolicy, Scheduler, SeqState,
 };
 use slim::sparse::{mask::SparsityPattern, wanda};
 use slim::util::json::{n, obj, s, Json};
@@ -166,16 +176,17 @@ fn run_mode(engine: Arc<Engine>, arrivals: &[Arrival], continuous: bool, cap: us
         max_batch: cap,
         max_wait: Duration::from_millis(4),
     }));
-    let metrics = Arc::new(Metrics::new());
+    let obs = RouteObs::standalone("bench-serve");
+    let metrics = Arc::clone(&obs.metrics);
     let worker = {
         let b = batcher.clone();
-        let m = metrics.clone();
+        let o = obs.clone();
         let e = engine.clone();
         std::thread::spawn(move || {
             if continuous {
-                Scheduler::new(e, SchedPolicy { max_slots: cap, ..Default::default() }).run(&b, &m);
+                Scheduler::new(e, SchedPolicy { max_slots: cap, ..Default::default() }).run(&b, &o);
             } else {
-                fixed_worker(&e, &b, &m, cap);
+                fixed_worker(&e, &b, &o.metrics, cap);
             }
         })
     };
@@ -248,12 +259,12 @@ fn pct(samples: &mut [f64], p: f64) -> f64 {
 /// the long prompt vs the short population.
 fn run_hol(engine: Arc<Engine>, arrivals: &[Arrival], policy: SchedPolicy) -> HolResult {
     let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
-    let metrics = Arc::new(Metrics::new());
+    let obs = RouteObs::standalone("bench-hol");
     let worker = {
         let b = batcher.clone();
-        let m = metrics.clone();
+        let o = obs.clone();
         let e = engine.clone();
-        std::thread::spawn(move || Scheduler::new(e, policy).run(&b, &m))
+        std::thread::spawn(move || Scheduler::new(e, policy).run(&b, &o))
     };
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(arrivals.len());
@@ -285,6 +296,42 @@ fn run_hol(engine: Arc<Engine>, arrivals: &[Arrival], policy: SchedPolicy) -> Ho
         long_ttft_ms,
         tok_per_s: tokens as f64 / wall_s,
     }
+}
+
+/// Submit every request up front (no arrival pacing — the scheduler stays
+/// compute-bound, so instrumentation cost has nowhere to hide) and return
+/// serve throughput. The observability arm is whatever `obs` carries: a
+/// live flight recorder or the capacity-0 no-op sink.
+fn run_burst(engine: Arc<Engine>, arrivals: &[Arrival], obs: &RouteObs, cap: usize) -> f64 {
+    let batcher = Arc::new(Batcher::with_recorder(
+        BatchPolicy::default(),
+        Arc::clone(&obs.recorder),
+        obs.route,
+    ));
+    let worker = {
+        let b = batcher.clone();
+        let o = obs.clone();
+        let e = engine.clone();
+        std::thread::spawn(move || {
+            let policy = SchedPolicy {
+                max_slots: cap,
+                step_tokens: 24,
+                chunk_tokens: 16,
+                ..Default::default()
+            };
+            Scheduler::new(e, policy).run(&b, &o)
+        })
+    };
+    let t0 = Instant::now();
+    let rxs: Vec<_> = arrivals.iter().map(|a| batcher.submit(a.req.clone())).collect();
+    let mut tokens = 0usize;
+    for rx in rxs {
+        tokens += rx.recv_timeout(Duration::from_secs(300)).expect("request lost").tokens.len();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    batcher.close();
+    worker.join().unwrap();
+    tokens as f64 / wall_s
 }
 
 fn main() {
@@ -399,6 +446,34 @@ fn main() {
         ));
         hol_table.push((name, r));
     }
+
+    // ── Metrics overhead: full tracing vs no-op sink on a saturated route ──
+    let n_burst = if quick { 16 } else { 32 };
+    let burst = workload(n_burst, 0.0, cfg.vocab); // all arrivals at t=0
+    let mut tok_on = 0.0f64;
+    let mut tok_off = 0.0f64;
+    // Interleave the arms (on/off/on/off) and take best-of-2 per arm so a
+    // transient stall penalizes neither side.
+    for _ in 0..2 {
+        let on = RouteObs::standalone("overhead-on");
+        tok_on = tok_on.max(run_burst(sp24.clone(), &burst, &on, cap));
+        let off = RouteObs::standalone_disabled("overhead-off");
+        tok_off = tok_off.max(run_burst(sp24.clone(), &burst, &off, cap));
+    }
+    let overhead_ratio = tok_off / tok_on;
+    println!(
+        "\nmetrics-overhead — {n_burst}-request burst, int4-2:4 continuous, cap {cap}: \
+         recorder on {tok_on:.1} tok/s vs off {tok_off:.1} tok/s → ratio {overhead_ratio:.3} \
+         (gate: ≤ 1.05)"
+    );
+    json_rows.push((
+        "metrics-overhead",
+        obj(vec![
+            ("tok_per_s_recorder_on", n(tok_on)),
+            ("tok_per_s_recorder_off", n(tok_off)),
+            ("overhead_ratio", n(overhead_ratio)),
+        ]),
+    ));
 
     let doc = obj(vec![
         ("bench", s("serve")),

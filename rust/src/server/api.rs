@@ -19,9 +19,22 @@
 //!           dense target confirmed, and their ratio. They describe
 //!           speed, never content — tokens are identical to the plain
 //!           continuous route.
-//! Special:  `{"cmd": "metrics"}` → one-line summary (includes queue-wait
-//!           p50/p95 and the route-wide `spec_accept` rate alongside TTFT
-//!           and decode percentiles);
+//! Special:  `{"cmd": "metrics"}` → `{"ok": true, "summary": "...",
+//!           "routes": {route: {...}}}` — `summary` is the legacy one-line
+//!           cross-route aggregate (queue-wait p50/p95, route-wide
+//!           `spec_accept` rate, TTFT and decode percentiles); `routes`
+//!           maps each route name to its structured metrics (counters,
+//!           per-stage busy seconds, and each histogram as
+//!           `{count, sum, p50, p95, p99}` — see `Metrics::export_json`);
+//!           `{"cmd": "metrics_prom"}` → `{"ok": true, "text": "..."}` —
+//!           the same registry as Prometheus text exposition (counters /
+//!           gauges / summary-quantile families labelled by route), ready
+//!           for a scrape endpoint to relay verbatim;
+//!           `{"cmd": "trace", "last": n?}` → `{"ok": true, "trace":
+//!           {...}}` — the flight recorder's request-lifecycle ring
+//!           (optionally only the last `n` events) as Chrome trace-event
+//!           JSON (`traceEvents` with `ph`/`ts`/`dur`/`pid`/`tid`), ready
+//!           to save and load in Perfetto / `chrome://tracing`;
 //!           `{"cmd": "models"}` → `{"ok": true, "models": [{"name": "...",
 //!           "kv_dtype": "f32" | "int8" | "fp8-e4m3", "spec": bool,
 //!           "draft_k": n?}, ...]}` — `kv_dtype` is the serving KV cache
@@ -89,8 +102,20 @@ fn process(router: &Router, line: &str) -> Result<Json> {
         return match cmd {
             "metrics" => Ok(obj(vec![
                 ("ok", Json::Bool(true)),
-                ("metrics", s(&router.metrics.summary())),
+                ("summary", s(&router.registry.summary())),
+                ("routes", router.registry.to_json()),
             ])),
+            "metrics_prom" => Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("text", s(&router.registry.prometheus())),
+            ])),
+            "trace" => {
+                let last = req.get("last").and_then(Json::as_usize);
+                Ok(obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("trace", router.recorder.trace_json(last)),
+                ]))
+            }
             "models" => Ok(obj(vec![
                 ("ok", Json::Bool(true)),
                 (
@@ -270,8 +295,39 @@ mod tests {
         assert!(text.contains("kv_dtype"), "missing kv_dtype in {text}");
         assert!(text.contains("f32"));
         assert!(text.contains("\"spec\":false"), "missing spec flag in {text}");
+        // `metrics` keeps the legacy one-line aggregate under `summary`
+        // and adds the per-route structured export under `routes`.
+        let _ = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":2}"#);
         let resp = handle_line(&r, r#"{"cmd":"metrics"}"#);
-        assert!(resp.to_string_compact().contains("requests="));
+        assert!(resp.get("summary").and_then(Json::as_str).unwrap().contains("requests="));
+        let route = resp.get("routes").and_then(|rt| rt.get("sim-125m")).expect("route json");
+        assert!(route.get("requests").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert!(route
+            .get("request_latency_seconds")
+            .and_then(|h| h.get("p95"))
+            .and_then(Json::as_f64)
+            .is_some());
+        // `metrics_prom` returns Prometheus text exposition.
+        let prom = handle_line(&r, r#"{"cmd":"metrics_prom"}"#);
+        let text = prom.get("text").and_then(Json::as_str).unwrap();
+        assert!(text.contains("# TYPE slim_requests_total counter"), "{text}");
+        assert!(text.contains("slim_requests_total{route=\"sim-125m\"}"), "{text}");
+        // `trace` dumps the flight recorder as Chrome trace-event JSON,
+        // honoring the optional `last` cap.
+        let trace = handle_line(&r, r#"{"cmd":"trace"}"#);
+        let evs = trace
+            .get("trace")
+            .and_then(|t| t.get("traceEvents"))
+            .and_then(Json::as_arr)
+            .expect("traceEvents");
+        assert!(!evs.is_empty());
+        let capped = handle_line(&r, r#"{"cmd":"trace","last":1}"#);
+        let capped_evs = capped
+            .get("trace")
+            .and_then(|t| t.get("traceEvents"))
+            .and_then(Json::as_arr)
+            .expect("traceEvents");
+        assert!(capped_evs.len() <= evs.len());
     }
 
     #[test]
@@ -308,9 +364,9 @@ mod tests {
         let rate = resp.get("accept_rate").and_then(Json::as_f64).unwrap();
         assert!(accepted <= drafted);
         assert!((0.0..=1.0).contains(&rate));
-        // The route-wide metrics line carries the aggregate acceptance.
-        let m = handle_line(&r, r#"{"cmd":"metrics"}"#).to_string_compact();
-        assert!(m.contains("spec_accept"), "{m}");
+        // The route-wide summary line carries the aggregate acceptance.
+        let m = handle_line(&r, r#"{"cmd":"metrics"}"#);
+        assert!(m.get("summary").and_then(Json::as_str).unwrap().contains("spec_accept"));
     }
 
     #[test]

@@ -17,9 +17,10 @@
 //!   [`Batcher::try_take`] is the FIFO special case.
 
 use super::engine::{GenRequest, GenResult};
+use super::obs::{EventKind, FlightRecorder};
 use std::cmp::Reverse;
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// How continuous admission picks queued requests when more are waiting
@@ -101,6 +102,9 @@ pub struct Batcher {
     queue: Mutex<VecDeque<Pending>>,
     notify: Condvar,
     closed: Mutex<bool>,
+    /// Flight recorder + interned route id for `Enqueued` events; `None`
+    /// for plain [`Batcher::new`] queues (tests, ad-hoc drivers).
+    obs: Option<(Arc<FlightRecorder>, u16)>,
 }
 
 impl Batcher {
@@ -110,7 +114,16 @@ impl Batcher {
             queue: Mutex::new(VecDeque::new()),
             notify: Condvar::new(),
             closed: Mutex::new(false),
+            obs: None,
         }
+    }
+
+    /// A batcher that logs an [`EventKind::Enqueued`] lifecycle event for
+    /// every submitted request against `recorder` under route `route`.
+    pub fn with_recorder(policy: BatchPolicy, recorder: Arc<FlightRecorder>, route: u16) -> Self {
+        let mut b = Batcher::new(policy);
+        b.obs = Some((recorder, route));
+        b
     }
 
     pub fn policy(&self) -> BatchPolicy {
@@ -120,11 +133,24 @@ impl Batcher {
     /// Submit a request; returns a receiver for its result.
     pub fn submit(&self, req: GenRequest) -> std::sync::mpsc::Receiver<GenResult> {
         let (tx, rx) = std::sync::mpsc::channel();
-        {
+        let (id, prompt_len) = (req.id, req.prompt.len());
+        let depth = {
             let mut q = self.queue.lock().unwrap();
             q.push_back(Pending { req, enqueued: Instant::now(), result_slot: tx });
-        }
+            q.len()
+        };
         self.notify.notify_all();
+        if let Some((recorder, route)) = &self.obs {
+            recorder.record_now(
+                EventKind::Enqueued,
+                *route,
+                id,
+                0,
+                prompt_len.min(u32::MAX as usize) as u32,
+                0,
+                depth.min(u32::MAX as usize) as u32,
+            );
+        }
         rx
     }
 
@@ -435,6 +461,21 @@ mod tests {
         // Priorities first (5 then 3); the remaining priority-0 tie goes to
         // client 2 — rotation resumes after client 1, the last one served.
         assert_eq!(got.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn submit_records_enqueued_events() {
+        let recorder = Arc::new(FlightRecorder::new(64));
+        let route = recorder.register_route("q-test");
+        let b = Batcher::with_recorder(BatchPolicy::default(), Arc::clone(&recorder), route);
+        let _rx1 = b.submit(GenRequest::new(10, vec![1, 2, 3], 1));
+        let _rx2 = b.submit(GenRequest::new(11, vec![1], 1));
+        let snap = recorder.snapshot(None);
+        assert_eq!(snap.len(), 2);
+        assert!(snap.iter().all(|e| e.kind == EventKind::Enqueued && e.route == route));
+        assert_eq!(snap[0].req, 10);
+        assert_eq!(snap[0].tokens, 3); // prompt length
+        assert_eq!(snap[1].b, 2); // queue depth at second submit
     }
 
     #[test]

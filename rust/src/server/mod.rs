@@ -62,13 +62,41 @@
 //! * [`api`] — newline-delimited-JSON TCP protocol + a blocking client
 //!   (`priority`/`client_id` request fields; `ttft_ms` plus speculative
 //!   `drafted`/`accepted`/`accept_rate` in responses).
-//! * [`metrics`] — counters, queue depth, queue-wait/TTFT/decode-latency
-//!   percentiles the benches read.
+//! * [`metrics`] — per-route counters, queue depth, and
+//!   queue-wait/TTFT/decode-latency percentiles the benches read.
+//! * [`obs`] — the observability substrate the above emit into.
+//!
+//! # Observability
+//!
+//! Two structures, split by cost budget (`server::obs`):
+//!
+//! * **Metrics registry** ([`obs::Registry`]): every route owns a
+//!   [`Metrics`] whose distributions are lock-free log-bucketed
+//!   histograms ([`obs::Histogram`]) — the record path is a handful of
+//!   relaxed atomic adds (no `Mutex`, no allocation per sample), so the
+//!   scheduler can record from its hot tick loop; percentile queries walk
+//!   a fixed ~480-bucket array (O(buckets), ≤ ~4.5% relative error) and
+//!   never block recording. Busy seconds are attributed per
+//!   [`metrics::Stage`] (prefill / decode / spec-draft / spec-verify), so
+//!   a route's tok/s decomposes into where the time went.
+//! * **Flight recorder** ([`obs::FlightRecorder`]): a fixed-capacity
+//!   shared ring of structured lifecycle events (enqueued → admitted →
+//!   each prefill chunk → each decode/verify step → retired, with request
+//!   id, route, slot, token counts, monotonic µs timestamps). Recording
+//!   is one fixed-size slot write under a short mutex, a few events per
+//!   scheduler *tick* (not per token) — cheap enough to leave on; the
+//!   `metrics-overhead` bench gates the full-tracing serve-throughput
+//!   cost at ≤ 5%.
+//!
+//! Export surfaces (see [`api`]): `{"cmd":"metrics"}` structured JSON per
+//! route (+ legacy `"summary"` line), `{"cmd":"metrics_prom"}` Prometheus
+//! text, `{"cmd":"trace"}` Chrome trace-event JSON loadable in Perfetto.
 
 pub mod api;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod obs;
 pub mod router;
 pub mod scheduler;
 pub mod spec;
@@ -76,7 +104,8 @@ pub mod spec;
 pub use crate::model::{KvDtype, KvLayout};
 pub use batcher::{AdmitPolicy, AdmitState, BatchPolicy, Batcher, Pending};
 pub use engine::{Engine, GenRequest, GenResult, PrefillState, SeqState, StepStats};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, Stage};
+pub use obs::{FlightRecorder, Histogram, Registry, RouteObs, SampleRing};
 pub use router::{RequestOpts, Router};
 pub use scheduler::{SchedPolicy, Scheduler};
 pub use spec::{SpecEngine, SpecStepStats};

@@ -1,0 +1,310 @@
+//! Lock-free metric primitives: log-bucketed histograms and a raw-sample
+//! ring, both recordable from any thread with atomics only.
+//!
+//! [`Histogram`] is the percentile workhorse: a fixed array of
+//! [`AtomicU64`] buckets on a geometric grid ([`BUCKETS_PER_OCTAVE`]
+//! buckets per power of two, spanning [`HIST_MIN`]..[`HIST_MAX`]). The
+//! record path is one bucket-index computation plus three relaxed atomic
+//! adds — no `Mutex`, no allocation, no ordering stalls — so it can sit on
+//! the scheduler's per-tick hot path. A percentile query walks the bucket
+//! array once (O(buckets), independent of sample count) and returns the
+//! geometric midpoint of the bucket holding the requested rank, which is
+//! within one bucket's relative error (`2^(1/8) ≈ 9%`, typically half
+//! that) of the exact sorted-reference percentile — property-tested in
+//! `tests/property.rs` against bimodal, heavy-tail, and constant
+//! distributions.
+//!
+//! [`SampleRing`] keeps the *exact* most-recent values where a distribution
+//! summary is not enough (e.g. per-request speculative acceptance rates,
+//! which are ratios in [0, 1] — far below the histogram grid's resolution
+//! of interest). It is the fixed-capacity replacement for the old
+//! `Mutex<Vec<f64>>` + `Vec::remove(0)` window: one atomic cursor
+//! `fetch_add`, one indexed store, no memmove, no lock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Atomic `f64` accumulator over its bit pattern (CAS add loop).
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        AtomicF64(AtomicU64::new(v.to_bits()))
+    }
+
+    /// Lock-free `+=` via compare-exchange on the bit pattern.
+    pub fn add(&self, d: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Buckets per power of two: relative bucket width `2^(1/8) − 1 ≈ 9%`.
+pub const BUCKETS_PER_OCTAVE: usize = 8;
+/// Octaves spanned above [`HIST_MIN`].
+const OCTAVES: usize = 60;
+/// Values at or below this land in the underflow bucket (1 ns when the
+/// unit is seconds — below every duration the serving stack can resolve).
+pub const HIST_MIN: f64 = 1e-9;
+/// Values above `HIST_MIN · 2^60 ≈ 1.15e9` land in the overflow bucket.
+pub const HIST_MAX: f64 = HIST_MIN * (1u64 << OCTAVES) as f64;
+/// Geometric buckets plus underflow (index 0) and overflow (last).
+const SLOTS: usize = OCTAVES * BUCKETS_PER_OCTAVE + 2;
+
+/// Lock-free log-bucketed histogram of non-negative samples.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicF64,
+    buckets: Box<[AtomicU64]>,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicF64::new(0.0),
+            buckets: (0..SLOTS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Bucket index for `v`: 0 is underflow (`v ≤ HIST_MIN`, NaN, or
+    /// negative), `SLOTS-1` is overflow.
+    fn bucket_index(v: f64) -> usize {
+        if v.is_nan() || v <= HIST_MIN {
+            return 0;
+        }
+        let octs = (v / HIST_MIN).log2() * BUCKETS_PER_OCTAVE as f64;
+        (octs as usize + 1).min(SLOTS - 1)
+    }
+
+    /// Representative value reported for bucket `i`: the geometric midpoint
+    /// of its `[lo, lo·2^(1/8))` span, so the estimate is within
+    /// `2^(1/16) ≈ 4.4%` of any sample the bucket holds.
+    fn representative(i: usize) -> f64 {
+        if i == 0 {
+            return 0.0;
+        }
+        if i >= SLOTS - 1 {
+            return HIST_MAX;
+        }
+        HIST_MIN * 2f64.powf(((i - 1) as f64 + 0.5) / BUCKETS_PER_OCTAVE as f64)
+    }
+
+    /// Record one sample: three relaxed atomic adds, nothing else.
+    pub fn record(&self, v: f64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.add(if v.is_finite() && v > 0.0 { v } else { 0.0 });
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum.get()
+    }
+
+    /// Mean of all recorded samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() / c as f64
+        }
+    }
+
+    /// Percentile (0..100) estimate: one O(buckets) cumulative walk, same
+    /// rank convention as a sorted array (`round(pct/100 · (n−1))`), so it
+    /// lands in the same bucket as the exact reference sample. Returns 0
+    /// when empty.
+    pub fn percentile(&self, pct: f64) -> f64 {
+        // Snapshot the buckets once so the rank target and the walk agree
+        // even while other threads keep recording.
+        let mut counts = [0u64; SLOTS];
+        for (c, b) in counts.iter_mut().zip(self.buckets.iter()) {
+            *c = b.load(Ordering::Relaxed);
+        }
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((pct / 100.0) * (total - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return Self::representative(i);
+            }
+        }
+        Self::representative(SLOTS - 1)
+    }
+
+    /// Fold `other`'s samples into `self` (bucket layouts are identical by
+    /// construction) — how the registry aggregates routes.
+    pub fn absorb(&self, other: &Histogram) {
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.add(other.sum());
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fixed-capacity lock-free ring of the most recent raw samples.
+pub struct SampleRing {
+    slots: Box<[AtomicU64]>,
+    next: AtomicU64,
+}
+
+impl SampleRing {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "sample ring needs capacity >= 1");
+        SampleRing {
+            slots: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+            next: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample, overwriting the oldest once full: a cursor
+    /// `fetch_add` plus one indexed store — the O(1) replacement for the
+    /// old `Vec::remove(0)` window, which memmoved 10k entries per push.
+    pub fn push(&self, v: f64) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
+        self.slots[i].store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Samples currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        (self.next.load(Ordering::Relaxed) as usize).min(self.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy of the held samples (unordered — the window is a ring).
+    pub fn snapshot(&self) -> Vec<f64> {
+        (0..self.len())
+            .map(|i| f64::from_bits(self.slots[i].load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Exact percentile (0..100) over the held window (sort-on-query; the
+    /// query path may allocate, the record path never does).
+    pub fn percentile(&self, pct: f64) -> f64 {
+        let mut l = self.snapshot();
+        if l.is_empty() {
+            return 0.0;
+        }
+        l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((pct / 100.0) * (l.len() - 1) as f64).round() as usize;
+        l[idx.min(l.len() - 1)]
+    }
+
+    /// Fold `other`'s held samples into `self`.
+    pub fn absorb(&self, other: &SampleRing) {
+        for v in other.snapshot() {
+            self.push(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_f64_accumulates() {
+        let a = AtomicF64::new(0.0);
+        a.add(1.5);
+        a.add(2.25);
+        assert!((a.get() - 3.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_estimates_within_bucket_error() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(0.004);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - 0.4).abs() < 1e-9);
+        for pct in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            let e = h.percentile(pct);
+            assert!((e / 0.004 - 1.0).abs() < 0.05, "p{pct} estimate {e}");
+        }
+    }
+
+    #[test]
+    fn histogram_rank_walk_matches_sorted_convention() {
+        let h = Histogram::new();
+        // 3 samples, widely separated: p50 must come from the middle one.
+        for v in [0.002, 0.004, 0.050] {
+            h.record(v);
+        }
+        assert!((h.percentile(50.0) / 0.004 - 1.0).abs() < 0.05);
+        assert!((h.percentile(95.0) / 0.050 - 1.0).abs() < 0.05);
+        assert!((h.percentile(0.0) / 0.002 - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn histogram_edge_values() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(50.0), 0.0); // empty
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(f64::NAN);
+        assert_eq!(h.percentile(99.0), 0.0); // all in the underflow bucket
+        h.record(1e12); // beyond HIST_MAX
+        assert_eq!(h.percentile(100.0), HIST_MAX);
+        assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn histogram_absorb_merges_counts() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(1.0);
+        b.record(100.0);
+        b.record(100.0);
+        a.absorb(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.sum() - 201.0).abs() < 1e-9);
+        assert!((a.percentile(99.0) / 100.0 - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn sample_ring_overwrites_oldest() {
+        let r = SampleRing::new(4);
+        assert!(r.is_empty());
+        for i in 0..6 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 4);
+        let mut snap = r.snapshot();
+        snap.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(snap, vec![2.0, 3.0, 4.0, 5.0]); // 0 and 1 overwritten
+        assert!((r.percentile(0.0) - 2.0).abs() < 1e-12);
+        assert!((r.percentile(100.0) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,297 @@
+//! Observability subsystem: per-route metrics registry + request-lifecycle
+//! flight recorder.
+//!
+//! Two halves, split by cost budget:
+//!
+//! * **[`Registry`]** — named routes, each owning a lock-free [`Metrics`]
+//!   instance (`server::metrics`) built on the log-bucketed [`Histogram`]
+//!   from [`hist`]. The registry's own lock is only taken on
+//!   register/export, never on the sample record path. Exports: structured
+//!   JSON (route → metric → `{count, sum, p50, p95, p99}`), Prometheus
+//!   text exposition, and the legacy one-line summary aggregated across
+//!   routes.
+//! * **[`FlightRecorder`]** — a shared fixed-capacity ring of structured
+//!   lifecycle events ([`recorder`]) exported as Chrome trace-event JSON
+//!   for Perfetto. One recorder serves all routes (events carry an
+//!   interned route id) so a trace shows cross-route interleaving.
+//!
+//! [`RouteObs`] bundles one route's metrics handle with the shared
+//! recorder — it is what the scheduler and workers take, so call sites
+//! never juggle the two halves separately.
+
+pub mod hist;
+pub mod recorder;
+
+pub use hist::{AtomicF64, Histogram, SampleRing};
+pub use recorder::{Event, EventKind, FlightRecorder, DEFAULT_CAPACITY};
+
+use super::metrics::Metrics;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+/// Named per-route [`Metrics`] instances plus cross-route aggregation and
+/// export. Route lookup/creation locks briefly; recording against a route
+/// handle never touches the registry again.
+pub struct Registry {
+    routes: Mutex<Vec<(String, Arc<Metrics>)>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { routes: Mutex::new(Vec::new()) }
+    }
+
+    /// Get or create the metrics for `name`.
+    pub fn route(&self, name: &str) -> Arc<Metrics> {
+        let mut routes = self.routes.lock().unwrap();
+        if let Some((_, m)) = routes.iter().find(|(r, _)| r == name) {
+            return Arc::clone(m);
+        }
+        let m = Arc::new(Metrics::new());
+        routes.push((name.to_string(), Arc::clone(&m)));
+        m
+    }
+
+    /// The metrics for `name`, if the route exists.
+    pub fn get(&self, name: &str) -> Option<Arc<Metrics>> {
+        let routes = self.routes.lock().unwrap();
+        routes.iter().find(|(r, _)| r == name).map(|(_, m)| Arc::clone(m))
+    }
+
+    /// Registered `(route, metrics)` pairs in registration order.
+    pub fn routes(&self) -> Vec<(String, Arc<Metrics>)> {
+        self.routes.lock().unwrap().clone()
+    }
+
+    /// A fresh [`Metrics`] holding every route's samples folded together.
+    pub fn aggregate(&self) -> Metrics {
+        let agg = Metrics::new();
+        for (_, m) in self.routes() {
+            agg.absorb(&m);
+        }
+        agg
+    }
+
+    /// Legacy one-line summary over the cross-route aggregate (same format
+    /// the old single global `Metrics` printed).
+    pub fn summary(&self) -> String {
+        self.aggregate().summary()
+    }
+
+    /// Structured export: route name → that route's
+    /// [`Metrics::export_json`] object.
+    pub fn to_json(&self) -> Json {
+        let map: BTreeMap<String, Json> =
+            self.routes().into_iter().map(|(name, m)| (name, m.export_json())).collect();
+        Json::Obj(map)
+    }
+
+    /// Prometheus text exposition. Families are emitted once each with
+    /// routes as label values; histograms use summary-style quantile
+    /// series (`{quantile="0.5|0.95|0.99"}` + `_sum` + `_count`) rather
+    /// than 482 `le` buckets.
+    pub fn prometheus(&self) -> String {
+        let routes = self.routes();
+        let mut out = String::new();
+        let counters: [(&str, fn(&Metrics) -> f64); 5] = [
+            ("slim_requests_total", |m| m.requests() as f64),
+            ("slim_batches_total", |m| m.batches() as f64),
+            ("slim_tokens_total", |m| m.tokens() as f64),
+            ("slim_spec_drafted_total", |m| m.spec_drafted() as f64),
+            ("slim_spec_accepted_total", |m| m.spec_accepted() as f64),
+        ];
+        for (name, get) in counters {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for (route, m) in &routes {
+                let _ = writeln!(out, "{name}{{route=\"{route}\"}} {}", get(m));
+            }
+        }
+        let gauges: [(&str, fn(&Metrics) -> f64); 2] = [
+            ("slim_queue_depth", |m| m.queue_depth() as f64),
+            ("slim_queue_depth_max", |m| m.max_queue_depth() as f64),
+        ];
+        for (name, get) in gauges {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            for (route, m) in &routes {
+                let _ = writeln!(out, "{name}{{route=\"{route}\"}} {}", get(m));
+            }
+        }
+        let _ = writeln!(out, "# TYPE slim_busy_seconds_total counter");
+        for (route, m) in &routes {
+            let _ =
+                writeln!(out, "slim_busy_seconds_total{{route=\"{route}\"}} {}", m.busy_seconds());
+        }
+        let _ = writeln!(out, "# TYPE slim_stage_busy_seconds_total counter");
+        for (route, m) in &routes {
+            for stage in super::metrics::Stage::ALL {
+                let _ = writeln!(
+                    out,
+                    "slim_stage_busy_seconds_total{{route=\"{route}\",stage=\"{}\"}} {}",
+                    stage.name(),
+                    m.stage_busy_s(stage)
+                );
+            }
+        }
+        // Histogram families, as Prometheus summaries. The family list is
+        // identical for every route, so take it from the first.
+        let n_families = routes.first().map(|(_, m)| m.histograms().len()).unwrap_or(0);
+        for fam in 0..n_families {
+            let fam_name = routes[0].1.histograms()[fam].0;
+            let _ = writeln!(out, "# TYPE slim_{fam_name} summary");
+            for (route, m) in &routes {
+                let (_, h) = m.histograms()[fam];
+                for (q, pct) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+                    let _ = writeln!(
+                        out,
+                        "slim_{fam_name}{{route=\"{route}\",quantile=\"{q}\"}} {}",
+                        h.percentile(pct)
+                    );
+                }
+                let _ = writeln!(out, "slim_{fam_name}_sum{{route=\"{route}\"}} {}", h.sum());
+                let _ = writeln!(out, "slim_{fam_name}_count{{route=\"{route}\"}} {}", h.count());
+            }
+        }
+        out
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One route's observability bundle: its [`Metrics`] handle, the shared
+/// [`FlightRecorder`], and the route's interned id for events. This is
+/// what scheduler/worker loops take.
+#[derive(Clone)]
+pub struct RouteObs {
+    pub metrics: Arc<Metrics>,
+    pub recorder: Arc<FlightRecorder>,
+    pub route: u16,
+}
+
+impl RouteObs {
+    pub fn new(metrics: Arc<Metrics>, recorder: Arc<FlightRecorder>, route_name: &str) -> Self {
+        let route = recorder.register_route(route_name);
+        RouteObs { metrics, recorder, route }
+    }
+
+    /// Fresh metrics + recorder for one route — tests and benches that
+    /// drive a scheduler without a router.
+    pub fn standalone(route_name: &str) -> Self {
+        Self::new(
+            Arc::new(Metrics::new()),
+            Arc::new(FlightRecorder::new(DEFAULT_CAPACITY)),
+            route_name,
+        )
+    }
+
+    /// Like [`RouteObs::standalone`] but with event recording compiled to
+    /// a no-op sink (the overhead bench's "off" arm).
+    pub fn standalone_disabled(route_name: &str) -> Self {
+        Self::new(Arc::new(Metrics::new()), Arc::new(FlightRecorder::disabled()), route_name)
+    }
+
+    /// Record a point lifecycle event on this route.
+    pub fn event(&self, kind: EventKind, req: u64, slot: u32, tokens: u32, a: u32, b: u32) {
+        self.recorder.record_now(kind, self.route, req, slot, tokens, a, b);
+    }
+
+    /// Record a spanned lifecycle event on this route (`ts_us` from
+    /// [`FlightRecorder::now_us`], `dur_us` the span length).
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &self,
+        kind: EventKind,
+        ts_us: u64,
+        dur_us: u64,
+        req: u64,
+        slot: u32,
+        tokens: u32,
+        a: u32,
+        b: u32,
+    ) {
+        self.recorder.record(Event {
+            ts_us,
+            dur_us,
+            kind,
+            route: self.route,
+            req,
+            slot,
+            tokens,
+            a,
+            b,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_routes_are_distinct_and_stable() {
+        let reg = Registry::new();
+        let a = reg.route("alpha");
+        let b = reg.route("beta");
+        a.record_request(0.010);
+        b.record_request(0.030);
+        b.record_request(0.031);
+        assert!(Arc::ptr_eq(&reg.route("alpha"), &a));
+        assert_eq!(reg.get("alpha").unwrap().requests(), 1);
+        assert_eq!(reg.get("beta").unwrap().requests(), 2);
+        assert!(reg.get("missing").is_none());
+        assert_eq!(reg.routes().len(), 2);
+        // Aggregate folds both routes; summary keeps the legacy shape.
+        assert_eq!(reg.aggregate().requests(), 3);
+        assert!(reg.summary().contains("requests=3"));
+    }
+
+    #[test]
+    fn registry_json_is_keyed_by_route() {
+        let reg = Registry::new();
+        reg.route("m").record_request(0.010);
+        let j = reg.to_json();
+        let m = j.get("m").expect("route key");
+        assert_eq!(m.get("requests").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn prometheus_exposition_is_line_valid() {
+        let reg = Registry::new();
+        let m = reg.route("sim-125m");
+        m.record_request(0.010);
+        m.record_ttft(0.004);
+        m.record_batch(2, 8, 0.020);
+        let text = reg.prometheus();
+        assert!(text.contains("# TYPE slim_requests_total counter"));
+        assert!(text.contains("slim_requests_total{route=\"sim-125m\"} 1"));
+        assert!(text.contains("quantile=\"0.95\""));
+        // Each TYPE family declared exactly once even with several routes.
+        reg.route("other");
+        let text = reg.prometheus();
+        assert_eq!(text.matches("# TYPE slim_requests_total ").count(), 1);
+        // Every non-comment line is `name{labels} value` with a float value.
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (head, value) = line.rsplit_once(' ').expect("metric line");
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+            assert!(head.contains("{route="), "missing route label in {line:?}");
+        }
+    }
+
+    #[test]
+    fn route_obs_records_against_shared_recorder() {
+        let recorder = Arc::new(FlightRecorder::new(64));
+        let reg = Registry::new();
+        let a = RouteObs::new(reg.route("a"), Arc::clone(&recorder), "a");
+        let b = RouteObs::new(reg.route("b"), Arc::clone(&recorder), "b");
+        a.event(EventKind::Enqueued, 1, 0, 5, 0, 0);
+        b.event(EventKind::Enqueued, 2, 0, 7, 0, 0);
+        let snap = recorder.snapshot(None);
+        assert_eq!(snap.len(), 2);
+        assert_ne!(snap[0].route, snap[1].route);
+    }
+}

@@ -22,13 +22,17 @@
 //!
 //! The router dispatches by model name; [`Router::submit_with`] /
 //! [`Router::generate_with`] carry the full [`RequestOpts`] (stop token,
-//! admission `priority`, `client_id`) down to the route's queue. Workers
-//! record per-request serve latency and enqueue→admit queue wait in
-//! [`Metrics`].
+//! admission `priority`, `client_id`) down to the route's queue. Each
+//! route owns a [`Metrics`] instance in the router's
+//! [`Registry`](super::obs::Registry) (`Router::registry`), and every
+//! route's queue + worker log lifecycle events into one shared
+//! [`FlightRecorder`](super::obs::FlightRecorder) (`Router::recorder`), so
+//! a trace shows cross-route interleaving.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{Engine, GenRequest, GenResult};
 use super::metrics::Metrics;
+use super::obs::{EventKind, FlightRecorder, Registry, RouteObs, DEFAULT_CAPACITY};
 use super::scheduler::{SchedPolicy, Scheduler};
 use crate::model::KvDtype;
 use anyhow::{anyhow, Result};
@@ -76,7 +80,10 @@ struct Route {
 /// Routes generation requests to named engines.
 pub struct Router {
     routes: HashMap<String, Route>,
-    pub metrics: Arc<Metrics>,
+    /// Per-route metrics, keyed by model name.
+    pub registry: Arc<Registry>,
+    /// Lifecycle event ring shared by every route.
+    pub recorder: Arc<FlightRecorder>,
     next_id: AtomicU64,
 }
 
@@ -84,9 +91,21 @@ impl Router {
     pub fn new() -> Self {
         Router {
             routes: HashMap::new(),
-            metrics: Arc::new(Metrics::new()),
+            registry: Arc::new(Registry::new()),
+            recorder: Arc::new(FlightRecorder::new(DEFAULT_CAPACITY)),
             next_id: AtomicU64::new(1),
         }
+    }
+
+    /// The metrics instance for a registered model's route.
+    pub fn route_metrics(&self, model: &str) -> Option<Arc<Metrics>> {
+        self.registry.get(model)
+    }
+
+    /// This route's observability bundle: its registry metrics plus the
+    /// shared recorder, under the model name.
+    fn route_obs(&self, name: &str) -> RouteObs {
+        RouteObs::new(self.registry.route(name), Arc::clone(&self.recorder), name)
     }
 
     /// Register an engine under its name with the legacy fixed-batch
@@ -96,22 +115,41 @@ impl Router {
         let name = engine.name.clone();
         let vocab = engine.config().vocab;
         let kv_dtype = engine.kv_dtype();
-        let batcher = Arc::new(Batcher::new(policy));
-        let metrics = self.metrics.clone();
+        let obs = self.route_obs(&name);
+        let batcher =
+            Arc::new(Batcher::with_recorder(policy, Arc::clone(&self.recorder), obs.route));
         let worker_batcher = batcher.clone();
         let worker = std::thread::spawn(move || {
+            let metrics = &obs.metrics;
             while let Some(batch) = worker_batcher.next_batch() {
                 let t0 = Instant::now();
-                for p in &batch {
-                    metrics.record_queue_wait(p.wait_so_far().as_secs_f64());
+                for (slot, p) in batch.iter().enumerate() {
+                    let wait_s = p.wait_so_far().as_secs_f64();
+                    metrics.record_queue_wait(wait_s);
+                    obs.event(
+                        EventKind::Admitted,
+                        p.req.id,
+                        slot as u32,
+                        p.req.prompt.len().min(u32::MAX as usize) as u32,
+                        (wait_s * 1e6).min(u32::MAX as f64) as u32,
+                        batch.len() as u32,
+                    );
                 }
                 let reqs: Vec<GenRequest> = batch.iter().map(|p| p.req.clone()).collect();
                 let results = engine.generate_batch(&reqs);
                 let elapsed = t0.elapsed().as_secs_f64();
                 let new_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
                 metrics.record_batch(batch.len(), new_tokens, elapsed);
-                for (res, pending) in results.into_iter().zip(batch) {
+                for (slot, (res, pending)) in results.into_iter().zip(batch).enumerate() {
                     metrics.record_request(pending.enqueued.elapsed().as_secs_f64());
+                    obs.event(
+                        EventKind::Retired,
+                        res.id,
+                        slot as u32,
+                        res.tokens.len().min(u32::MAX as usize) as u32,
+                        0,
+                        0,
+                    );
                     let _ = pending.result_slot.send(res);
                 }
             }
@@ -129,12 +167,16 @@ impl Router {
         // Policy override, else the engine's own dtype — the same
         // resolution the scheduler applies to its pool.
         let kv_dtype = policy.kv_dtype.unwrap_or_else(|| engine.kv_dtype());
-        let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
-        let metrics = self.metrics.clone();
+        let obs = self.route_obs(&name);
+        let batcher = Arc::new(Batcher::with_recorder(
+            BatchPolicy::default(),
+            Arc::clone(&self.recorder),
+            obs.route,
+        ));
         let worker_batcher = batcher.clone();
         let scheduler = Scheduler::new(Arc::new(engine), policy);
         let worker = std::thread::spawn(move || {
-            scheduler.run(&worker_batcher, &metrics);
+            scheduler.run(&worker_batcher, &obs);
         });
         let route = Route { batcher, vocab, kv_dtype, draft_k: None, _worker: worker };
         self.routes.insert(name, route);
@@ -154,12 +196,16 @@ impl Router {
         let vocab = target.config().vocab;
         let kv_dtype = policy.kv_dtype.unwrap_or_else(|| target.kv_dtype());
         let draft_k = Some(policy.draft_k);
-        let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
-        let metrics = self.metrics.clone();
+        let obs = self.route_obs(&name);
+        let batcher = Arc::new(Batcher::with_recorder(
+            BatchPolicy::default(),
+            Arc::clone(&self.recorder),
+            obs.route,
+        ));
         let worker_batcher = batcher.clone();
         let scheduler = Scheduler::new_spec(Arc::new(target), Arc::new(draft), policy);
         let worker = std::thread::spawn(move || {
-            scheduler.run(&worker_batcher, &metrics);
+            scheduler.run(&worker_batcher, &obs);
         });
         let route = Route { batcher, vocab, kv_dtype, draft_k, _worker: worker };
         self.routes.insert(name, route);
@@ -310,6 +356,11 @@ mod tests {
         r
     }
 
+    /// The registered route's metrics (every test registers one model).
+    fn m(r: &Router) -> Arc<Metrics> {
+        r.route_metrics("sim-125m").expect("route metrics")
+    }
+
     #[test]
     fn model_infos_report_kv_dtype() {
         let mut r = Router::new();
@@ -358,7 +409,7 @@ mod tests {
         assert_eq!(out.tokens, reference.tokens);
         let (drafted, accepted) = out.spec.expect("speculative route reports draft stats");
         assert!(accepted <= drafted);
-        assert!(r.metrics.spec_drafted() >= drafted as u64);
+        assert!(m(&r).spec_drafted() >= drafted as u64);
     }
 
     #[test]
@@ -366,7 +417,7 @@ mod tests {
         let r = router();
         let out = r.generate("sim-125m", vec![3, 4, 5], 4).unwrap();
         assert_eq!(out.tokens.len(), 4);
-        assert!(r.metrics.requests() >= 1);
+        assert!(m(&r).requests() >= 1);
     }
 
     #[test]
@@ -393,7 +444,7 @@ mod tests {
         }
         assert_eq!(ok, 12);
         // Batching should have coalesced at least some requests.
-        assert!(r.metrics.batches() <= 12);
+        assert!(m(&r).batches() <= 12);
     }
 
     #[test]
@@ -405,9 +456,14 @@ mod tests {
         // (both are solo-equivalent).
         let fixed = router().generate("sim-125m", vec![3, 4, 5], 4).unwrap();
         assert_eq!(out.tokens, fixed.tokens);
-        assert!(r.metrics.requests() >= 1);
-        assert!(r.metrics.ttft_pct(50.0) > 0.0);
-        assert!(r.metrics.tokens() >= 4);
+        let metrics = m(&r);
+        assert!(metrics.requests() >= 1);
+        assert!(metrics.ttft_pct(50.0) > 0.0);
+        assert!(metrics.tokens() >= 4);
+        // The shared recorder captured this request's lifecycle.
+        let events = r.recorder.snapshot(None);
+        assert!(events.iter().any(|e| e.kind == super::EventKind::Enqueued));
+        assert!(events.iter().any(|e| e.kind == super::EventKind::Retired));
     }
 
     #[test]
@@ -427,7 +483,7 @@ mod tests {
             let (i, out) = h.join().unwrap();
             assert_eq!(out.tokens.len(), 1 + (i as usize % 3));
         }
-        assert_eq!(r.metrics.requests(), 10);
+        assert_eq!(m(&r).requests(), 10);
     }
 
     #[test]
@@ -472,6 +528,6 @@ mod tests {
         let solo = engine().generate_batch(&[GenRequest::new(1, vec![3, 4, 5], 3)]);
         assert_eq!(out.tokens, solo[0].tokens);
         // Queue-wait metrics were recorded at admission.
-        assert!(r.metrics.queue_wait_pct(50.0) > 0.0);
+        assert!(m(&r).queue_wait_pct(50.0) > 0.0);
     }
 }

@@ -56,7 +56,7 @@
 
 use super::batcher::{AdmitPolicy, AdmitState, Batcher};
 use super::engine::{Engine, GenResult, PrefillState, SeqState};
-use super::metrics::Metrics;
+use super::obs::{EventKind, RouteObs};
 use super::spec::{SpecEngine, SpecStepStats};
 use crate::model::{KvCachePool, KvDtype};
 use std::sync::mpsc::Sender;
@@ -180,8 +180,11 @@ impl Scheduler {
 
     /// Run the step-loop until the batcher is closed and fully drained
     /// (queued requests are still served after `close`; in-flight
-    /// sequences always run to completion).
-    pub fn run(&self, batcher: &Batcher, metrics: &Metrics) {
+    /// sequences always run to completion). `obs` carries the route's
+    /// metrics plus the shared flight recorder: every admission, prefill
+    /// chunk, decode/verify step, and retirement lands in both.
+    pub fn run(&self, batcher: &Batcher, obs: &RouteObs) {
+        let metrics = &obs.metrics;
         let mut pool = KvCachePool::with_layout(
             self.engine.config(),
             self.policy.max_slots,
@@ -213,9 +216,11 @@ impl Scheduler {
             if !pendings.is_empty() {
                 // Backlog at admission time: what we just took plus what
                 // still waits behind it.
-                metrics.record_queue_depth(batcher.depth() + pendings.len());
+                let depth = batcher.depth() + pendings.len();
+                metrics.record_queue_depth(depth);
                 for pending in pendings {
-                    metrics.record_queue_wait(pending.wait_so_far().as_secs_f64());
+                    let wait_s = pending.wait_so_far().as_secs_f64();
+                    metrics.record_queue_wait(wait_s);
                     // O(1): claims the slot, runs no forward — the prompt
                     // feeds in chunks inside the regular ticks below.
                     let pre = self.engine.prefill_begin(&pending.req, &mut pool);
@@ -223,6 +228,14 @@ impl Scheduler {
                         let ds = dp.alloc().expect("draft pool out of slots");
                         assert_eq!(ds, pre.state().slot, "twin pools must allocate in lockstep");
                     }
+                    obs.event(
+                        EventKind::Admitted,
+                        pre.state().id,
+                        pre.state().slot as u32,
+                        pending.req.prompt.len().min(u32::MAX as usize) as u32,
+                        (wait_s * 1e6).min(u32::MAX as f64) as u32,
+                        depth.min(u32::MAX as usize) as u32,
+                    );
                     if pre.is_complete() {
                         // max_new == 0: nothing to run, retire untouched.
                         let flight = InFlight {
@@ -233,7 +246,7 @@ impl Scheduler {
                             drafted: 0,
                             accepted: 0,
                         };
-                        Self::retire(flight, &mut pool, draft_pool.as_mut(), metrics);
+                        Self::retire(flight, &mut pool, draft_pool.as_mut(), obs);
                     } else {
                         filling.push(Filling {
                             pre,
@@ -257,6 +270,23 @@ impl Scheduler {
             // progress is guaranteed either way.
             let per_flight = self.spec.as_ref().map_or(1, |s| s.draft_k() + 1);
             let budget = self.policy.step_tokens.saturating_sub(flights.len() * per_flight);
+            metrics.record_step_occupancy(flights.len() + filling.len());
+            // Flight-recorder pre-tick snapshot: per-prefill remaining
+            // prompt and per-decode generated length, so post-tick deltas
+            // become chunk/step events. Skipped entirely when the recorder
+            // is a no-op sink.
+            let rec_on = obs.recorder.enabled();
+            let fill_before: Vec<usize> = if rec_on {
+                filling.iter().map(|f| f.pre.remaining()).collect()
+            } else {
+                Vec::new()
+            };
+            let gen_before: Vec<usize> = if rec_on {
+                flights.iter().map(|f| f.state.generated().len()).collect()
+            } else {
+                Vec::new()
+            };
+            let t0_us = if rec_on { obs.recorder.now_us() } else { 0 };
             let t0 = Instant::now();
             let stats = {
                 let mut pres: Vec<&mut PrefillState> =
@@ -297,7 +327,18 @@ impl Scheduler {
             // completed nothing, which still ran a real forward (only
             // first tokens count toward generated-token throughput).
             if stats.decode_tokens > 0 {
-                metrics.record_decode_step(stats.decode_tokens, stats.decode_seqs, elapsed);
+                if self.spec.is_some() {
+                    // Split the tick into draft (compressed twin) and
+                    // verify (dense target) busy stages.
+                    metrics.record_spec_decode_step(
+                        stats.decode_tokens,
+                        stats.decode_seqs,
+                        elapsed,
+                        stats.draft_s,
+                    );
+                } else {
+                    metrics.record_decode_step(stats.decode_tokens, stats.decode_seqs, elapsed);
+                }
                 if stats.drafted > 0 {
                     metrics.record_spec_step(stats.drafted, stats.accepted);
                 }
@@ -312,6 +353,17 @@ impl Scheduler {
             for &(j, d, a) in &stats.per_seq {
                 flights[j].drafted += d;
                 flights[j].accepted += a;
+            }
+            if rec_on {
+                self.record_tick_events(
+                    obs,
+                    &filling,
+                    &flights,
+                    &fill_before,
+                    &gen_before,
+                    &stats,
+                    t0_us,
+                );
             }
 
             // ── Retire / promote ──────────────────────────────────────
@@ -333,7 +385,7 @@ impl Scheduler {
                         accepted: 0,
                     };
                     if flight.state.done {
-                        Self::retire(flight, &mut pool, draft_pool.as_mut(), metrics);
+                        Self::retire(flight, &mut pool, draft_pool.as_mut(), obs);
                     } else {
                         flights.push(flight);
                     }
@@ -345,11 +397,88 @@ impl Scheduler {
             while i < flights.len() {
                 if flights[i].state.done {
                     let flight = flights.swap_remove(i);
-                    Self::retire(flight, &mut pool, draft_pool.as_mut(), metrics);
+                    Self::retire(flight, &mut pool, draft_pool.as_mut(), obs);
                 } else {
                     i += 1;
                 }
             }
+        }
+    }
+
+    /// Translate one tick's state deltas into flight-recorder events:
+    /// a `PrefillChunk` span per prefill that fed tokens, a
+    /// `DecodeStep`/`SpecVerify` span per decode sequence that emitted,
+    /// and one engine-wide `SpecDraft` span when the tick drafted. All
+    /// spans share the tick's `[t0_us, t0_us + dur]` window (the tick is
+    /// ONE batched forward — per-sequence splits would be fiction).
+    #[allow(clippy::too_many_arguments)]
+    fn record_tick_events(
+        &self,
+        obs: &RouteObs,
+        filling: &[Filling],
+        flights: &[InFlight],
+        fill_before: &[usize],
+        gen_before: &[usize],
+        stats: &SpecStepStats,
+        t0_us: u64,
+    ) {
+        let dur_us = obs.recorder.now_us().saturating_sub(t0_us);
+        for (f, &before) in filling.iter().zip(fill_before) {
+            let fed = before.saturating_sub(f.pre.remaining());
+            if fed > 0 {
+                obs.span(
+                    EventKind::PrefillChunk,
+                    t0_us,
+                    dur_us,
+                    f.pre.state().id,
+                    f.pre.state().slot as u32,
+                    fed as u32,
+                    f.pre.is_complete() as u32,
+                    0,
+                );
+            }
+        }
+        for (j, (f, &before)) in flights.iter().zip(gen_before).enumerate() {
+            let emitted = f.state.generated().len().saturating_sub(before);
+            if emitted == 0 {
+                continue;
+            }
+            // Fallback (non-speculating) sequences are absent from per_seq
+            // and show as plain decode steps even on speculative routes.
+            match stats.per_seq.iter().find(|&&(i, _, _)| i == j) {
+                Some(&(_, d, a)) => obs.span(
+                    EventKind::SpecVerify,
+                    t0_us,
+                    dur_us,
+                    f.state.id,
+                    f.state.slot as u32,
+                    emitted as u32,
+                    d as u32,
+                    a as u32,
+                ),
+                None => obs.span(
+                    EventKind::DecodeStep,
+                    t0_us,
+                    dur_us,
+                    f.state.id,
+                    f.state.slot as u32,
+                    emitted as u32,
+                    0,
+                    0,
+                ),
+            }
+        }
+        if stats.drafted > 0 {
+            obs.span(
+                EventKind::SpecDraft,
+                t0_us,
+                (stats.draft_s * 1e6) as u64,
+                0, // engine-wide lane, not one request
+                0,
+                stats.drafted as u32,
+                0,
+                0,
+            );
         }
     }
 
@@ -361,19 +490,27 @@ impl Scheduler {
         flight: InFlight,
         pool: &mut KvCachePool,
         draft_pool: Option<&mut KvCachePool>,
-        metrics: &Metrics,
+        obs: &RouteObs,
     ) {
         pool.free(flight.state.slot);
         let spec = draft_pool.map(|dp| {
             dp.free(flight.state.slot);
             (flight.drafted, flight.accepted)
         });
-        metrics.record_request(flight.enqueued.elapsed().as_secs_f64());
+        obs.metrics.record_request(flight.enqueued.elapsed().as_secs_f64());
         if let Some((d, a)) = spec {
             if d > 0 {
-                metrics.record_spec_request(d, a);
+                obs.metrics.record_spec_request(d, a);
             }
         }
+        obs.event(
+            EventKind::Retired,
+            flight.state.id,
+            flight.state.slot as u32,
+            flight.state.generated().len().min(u32::MAX as usize) as u32,
+            flight.drafted.min(u32::MAX as usize) as u32,
+            flight.accepted.min(u32::MAX as usize) as u32,
+        );
         let _ = flight.result_slot.send(GenResult {
             id: flight.state.id,
             tokens: flight.state.generated().to_vec(),
@@ -425,12 +562,12 @@ mod tests {
         stagger: &[u64],
     ) -> Vec<Vec<u32>> {
         let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
-        let metrics = Arc::new(Metrics::new());
+        let obs = RouteObs::standalone("sched-test");
         let worker = {
             let b = batcher.clone();
-            let m = metrics.clone();
+            let o = obs.clone();
             let e = engine.clone();
-            std::thread::spawn(move || Scheduler::new(e, policy).run(&b, &m))
+            std::thread::spawn(move || Scheduler::new(e, policy).run(&b, &o))
         };
         let mut rxs = Vec::new();
         for (i, r) in reqs.iter().enumerate() {
@@ -447,7 +584,7 @@ mod tests {
             .collect();
         batcher.close();
         worker.join().unwrap();
-        assert!(metrics.requests() >= reqs.len() as u64);
+        assert!(obs.metrics.requests() >= reqs.len() as u64);
         outs
     }
 
@@ -634,7 +771,7 @@ mod tests {
     fn close_still_drains_queued_requests() {
         let engine = dense_engine(11);
         let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
-        let metrics = Arc::new(Metrics::new());
+        let obs = RouteObs::standalone("drain-test");
         let mut rxs = Vec::new();
         for i in 0..3u64 {
             rxs.push(batcher.submit(GenRequest::new(i, vec![4 + i as u32], 2)));
@@ -642,10 +779,10 @@ mod tests {
         batcher.close(); // close BEFORE the scheduler even starts
         let worker = {
             let b = batcher.clone();
-            let m = metrics.clone();
+            let o = obs.clone();
             let e = engine.clone();
             std::thread::spawn(move || {
-                Scheduler::new(e, SchedPolicy { max_slots: 2, ..Default::default() }).run(&b, &m)
+                Scheduler::new(e, SchedPolicy { max_slots: 2, ..Default::default() }).run(&b, &o)
             })
         };
         for rx in rxs {
@@ -655,11 +792,24 @@ mod tests {
             assert!(out.ttft_s.unwrap() > 0.0);
         }
         worker.join().unwrap();
+        let metrics = &obs.metrics;
         assert_eq!(metrics.requests(), 3);
         assert!(metrics.ttft_pct(50.0) > 0.0);
         // Queue wait (enqueue→admit) is recorded for every admission.
         assert!(metrics.queue_wait_pct(50.0) > 0.0);
         assert!(metrics.tokens() >= 6);
+        // Occupancy and stage attribution land as the ticks run.
+        assert!(metrics.mean_step_occupancy() > 0.0);
+        assert!(metrics.stage_busy_s(crate::server::Stage::Prefill) > 0.0);
+        // The flight recorder saw every lifecycle stage: one admission and
+        // one retirement per request, prefill chunks and decode steps in
+        // between.
+        let events = obs.recorder.snapshot(None);
+        let count = |k: EventKind| events.iter().filter(|e| e.kind == k).count();
+        assert_eq!(count(EventKind::Admitted), 3);
+        assert_eq!(count(EventKind::Retired), 3);
+        assert!(count(EventKind::PrefillChunk) >= 3);
+        assert!(count(EventKind::DecodeStep) >= 3);
     }
 
     /// Run `reqs` through a live SPECULATIVE scheduler and return the full
@@ -670,13 +820,13 @@ mod tests {
         draft: Arc<Engine>,
         reqs: &[GenRequest],
         policy: SchedPolicy,
-    ) -> (Vec<GenResult>, Arc<Metrics>) {
+    ) -> (Vec<GenResult>, RouteObs) {
         let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
-        let metrics = Arc::new(Metrics::new());
+        let obs = RouteObs::standalone("spec-test");
         let worker = {
             let b = batcher.clone();
-            let m = metrics.clone();
-            std::thread::spawn(move || Scheduler::new_spec(target, draft, policy).run(&b, &m))
+            let o = obs.clone();
+            std::thread::spawn(move || Scheduler::new_spec(target, draft, policy).run(&b, &o))
         };
         let rxs: Vec<_> = reqs.iter().map(|r| batcher.submit(r.clone())).collect();
         let outs: Vec<GenResult> = rxs
@@ -685,7 +835,7 @@ mod tests {
             .collect();
         batcher.close();
         worker.join().unwrap();
-        (outs, metrics)
+        (outs, obs)
     }
 
     /// The speculative route's tokens equal each request's solo decode on
@@ -703,7 +853,8 @@ mod tests {
         ];
         let policy =
             SchedPolicy { max_slots: 3, draft_k: 4, chunk_tokens: 3, ..Default::default() };
-        let (outs, metrics) = serve_spec(target.clone(), draft, &reqs, policy);
+        let (outs, obs) = serve_spec(target.clone(), draft, &reqs, policy);
+        let metrics = &obs.metrics;
         for (req, got) in reqs.iter().zip(outs.iter()) {
             let solo = target.generate_batch(std::slice::from_ref(req));
             assert_eq!(got.tokens, solo[0].tokens, "request {} diverged", req.id);
@@ -720,6 +871,13 @@ mod tests {
         let rate = metrics.spec_acceptance_rate();
         assert!((0.0..=1.0).contains(&rate), "acceptance rate {rate}");
         assert!(metrics.summary().contains("spec_accept"));
+        // Busy time splits into draft + verify stages on speculative ticks.
+        assert!(metrics.stage_busy_s(crate::server::Stage::SpecDraft) > 0.0);
+        assert!(metrics.stage_busy_s(crate::server::Stage::SpecVerify) > 0.0);
+        // Verify steps and draft phases appear in the flight recorder.
+        let events = obs.recorder.snapshot(None);
+        assert!(events.iter().any(|e| e.kind == EventKind::SpecVerify));
+        assert!(events.iter().any(|e| e.kind == EventKind::SpecDraft));
     }
 
     /// Identical twin (draft == target weights): every draft is confirmed,
@@ -730,7 +888,8 @@ mod tests {
         let draft = dense_engine(7);
         let reqs = vec![GenRequest::new(0, vec![5, 6, 7], 8), GenRequest::new(1, vec![9], 6)];
         let policy = SchedPolicy { max_slots: 2, draft_k: 3, ..Default::default() };
-        let (outs, metrics) = serve_spec(target.clone(), draft, &reqs, policy);
+        let (outs, obs) = serve_spec(target.clone(), draft, &reqs, policy);
+        let metrics = &obs.metrics;
         for (req, got) in reqs.iter().zip(outs.iter()) {
             assert_eq!(got.tokens, target.generate_batch(&[req.clone()])[0].tokens);
             let (d, a) = got.spec.unwrap();

@@ -62,6 +62,10 @@ pub struct SpecStepStats {
     /// sequences that speculated (fallback steps draft nothing and are
     /// omitted) — the scheduler attributes these to in-flight requests.
     pub per_seq: Vec<(usize, usize, usize)>,
+    /// Wall seconds the draft phase (compressed-twin forwards) took this
+    /// tick — the rest of the tick is target verify + prefill. Metrics use
+    /// it to split busy time into spec-draft vs spec-verify stages.
+    pub draft_s: f64,
 }
 
 /// One sequence's speculation plan for the current tick.
@@ -189,6 +193,7 @@ impl SpecEngine {
         // wraps: eligibility guarantees l_t + 1 ≤ max_seq − 1, and the
         // draft cache never exceeds l_t + k ≤ max_seq − 1 while drafting.
         if !plans.is_empty() {
+            let draft_t0 = std::time::Instant::now();
             let catchups: Vec<Vec<u32>> = plans
                 .iter()
                 .map(|p| {
@@ -227,6 +232,7 @@ impl SpecEngine {
                     row += 1;
                 }
             }
+            stats.draft_s = draft_t0.elapsed().as_secs_f64();
         }
 
         // ── Verify phase: ONE batched target forward over prefill chunks,

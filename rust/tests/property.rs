@@ -329,6 +329,180 @@ fn prop_chunked_prefill_equals_oneshot() {
 }
 
 #[test]
+fn prop_obs_histogram_percentiles_match_exact_sorted() {
+    // The log-bucketed serving histogram (server::obs) must agree with the
+    // exact sorted-sample percentile to within one bucket's relative width
+    // (2^(1/16) − 1 ≈ 4.5%; asserted at 10%) for any latency shape. Three
+    // adversarial shapes: constant (every sample one bucket), bimodal
+    // (fast-path µs vs slow-path hundreds of ms — percentiles straddle the
+    // modes), heavy tail (log-uniform over six decades).
+    use slim::server::Histogram;
+    let mut rng = Pcg32::seeded(1111);
+    for trial in 0..30 {
+        let n = 500 + rng.below_usize(3000);
+        let mode = trial % 3;
+        let samples: Vec<f64> = (0..n)
+            .map(|_| match mode {
+                0 => 0.042,
+                1 => {
+                    if rng.below(4) == 0 {
+                        0.5 + rng.f64() * 0.2
+                    } else {
+                        0.002 + rng.f64() * 0.001
+                    }
+                }
+                _ => 1e-6 * 10f64.powf(rng.f64() * 6.0),
+            })
+            .collect();
+        let h = Histogram::new();
+        for &v in &samples {
+            h.record(v);
+        }
+        assert_eq!(h.count(), n as u64);
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for pct in [50.0, 95.0, 99.0] {
+            let rank = ((pct / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+            let exact = sorted[rank];
+            let got = h.percentile(pct);
+            assert!(
+                (got / exact - 1.0).abs() < 0.10,
+                "trial {trial} mode {mode} p{pct}: histogram {got} vs exact {exact}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_obs_histogram_concurrent_records_conserve_counts() {
+    // The lock-free record path must not lose samples under contention:
+    // 8 threads hammering one histogram leave exactly threads × per-thread
+    // samples behind, and the percentile stays inside the recorded range.
+    use slim::server::Histogram;
+    let h = Histogram::new();
+    let threads = 8u64;
+    let per = 5_000u64;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let h = &h;
+            scope.spawn(move || {
+                let mut rng = Pcg32::seeded(42 + t);
+                for _ in 0..per {
+                    h.record(1e-4 * (1.0 + rng.f64()));
+                }
+            });
+        }
+    });
+    assert_eq!(h.count(), threads * per);
+    let p50 = h.percentile(50.0);
+    assert!((0.9e-4..=2.3e-4).contains(&p50), "p50 {p50} outside recorded range");
+}
+
+#[test]
+fn prop_trace_reconstructs_request_lifecycles() {
+    // Serve a burst through a speculative + chunked-prefill route, then
+    // assert the flight recorder's Chrome-trace export reconstructs every
+    // request's full lifecycle: the export reparses as valid JSON, each
+    // request lane's timestamps are monotonically non-decreasing, every
+    // "B" begin has a matching "E" end (queued → request, properly
+    // nested), and the lanes contain the expected chunked-prefill and
+    // speculative-verify slices.
+    use slim::server::scheduler::SchedPolicy;
+    use slim::server::Router;
+    let cfg = ModelConfig {
+        name: "trace-prop".to_string(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff_ratio: 2,
+        vocab: 96,
+        max_seq: 16,
+        stands_for: "trace lifecycle property test".to_string(),
+    };
+    let mut rng = Pcg32::seeded(2222);
+    let weights = Arc::new(init(&cfg, &mut rng));
+    let target = Engine::new("trace-m", cfg.clone(), weights.clone(), None);
+    let draft = Engine::new("trace-m-draft", cfg.clone(), weights, None);
+    let mut router = Router::new();
+    let policy = SchedPolicy {
+        max_slots: 2,
+        draft_k: 3,
+        chunk_tokens: 2,
+        step_tokens: 6,
+        ..Default::default()
+    };
+    router.register_speculative(target, draft, policy);
+    let rxs: Vec<_> = (0..3)
+        .map(|i| {
+            let prompt: Vec<u32> = (0..5).map(|j| 8 + i + j as u32).collect();
+            router.submit("trace-m", prompt, 6).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let out = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(out.tokens.len(), 6);
+    }
+    let trace = router.recorder.trace_json(None);
+    // Valid JSON end to end.
+    let text = trace.to_string_compact();
+    let reparsed = Json::parse(&text).unwrap_or_else(|e| panic!("invalid trace JSON: {e}"));
+    let evs = reparsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    assert!(!evs.is_empty());
+    // Group by request lane (tid); router request ids start at 1, tid 0 is
+    // the engine-wide spec-draft lane.
+    let mut lanes: std::collections::BTreeMap<u64, Vec<&Json>> = std::collections::BTreeMap::new();
+    for e in evs {
+        let tid = e.get("tid").and_then(Json::as_f64).expect("tid") as u64;
+        lanes.entry(tid).or_default().push(e);
+    }
+    let mut verify_slices = 0usize;
+    for (tid, lane) in &lanes {
+        // Timestamps never go backwards within a lane.
+        let ts: Vec<f64> =
+            lane.iter().map(|e| e.get("ts").and_then(Json::as_f64).expect("ts")).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "lane {tid} ts regressed: {ts:?}");
+        let phs: Vec<&str> =
+            lane.iter().map(|e| e.get("ph").and_then(Json::as_str).expect("ph")).collect();
+        let names: Vec<&str> =
+            lane.iter().map(|e| e.get("name").and_then(Json::as_str).expect("name")).collect();
+        verify_slices +=
+            names.iter().filter(|&&nm| nm == "spec_verify" || nm == "spec_draft").count();
+        if *tid == 0 {
+            // Engine-wide spec-draft lane: complete slices only.
+            assert!(phs.iter().all(|&p| p == "X"), "lane 0 must be X slices: {phs:?}");
+            continue;
+        }
+        // Begin/end events pair up per span name, opened before closed.
+        for span in ["queued", "request"] {
+            let opens = phs
+                .iter()
+                .zip(&names)
+                .filter(|&(&p, &nm)| p == "B" && nm == span)
+                .count();
+            let closes = phs
+                .iter()
+                .zip(&names)
+                .filter(|&(&p, &nm)| p == "E" && nm == span)
+                .count();
+            assert_eq!(opens, 1, "lane {tid}: {span} opens");
+            assert_eq!(closes, 1, "lane {tid}: {span} closes");
+        }
+        // Full lifecycle in order: enqueue, admit (ends the queue span),
+        // chunked prefill slices, then retire closing the request span.
+        assert_eq!((phs[0], names[0]), ("B", "queued"), "lane {tid} starts queued");
+        assert_eq!(
+            (*phs.last().unwrap(), *names.last().unwrap()),
+            ("E", "request"),
+            "lane {tid} ends retired"
+        );
+        let prefills = names.iter().filter(|&&nm| nm == "prefill_chunk").count();
+        assert!(prefills >= 2, "lane {tid}: 5-token prompt at chunk 2 needs ≥2 chunks");
+    }
+    assert!(lanes.len() >= 4, "3 request lanes + spec-draft lane, got {}", lanes.len());
+    assert!(verify_slices >= 1, "speculative route must log verify/draft slices");
+}
+
+#[test]
 fn prop_json_round_trip_fuzz() {
     // Generate random JSON values, serialize, reparse, compare.
     let mut rng = Pcg32::seeded(808);

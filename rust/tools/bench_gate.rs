@@ -23,7 +23,14 @@
 //!   committed baseline floor and the gate tolerance together enforce
 //!   "speculative is at least as fast as the target decoding alone"
 //!   (floor 1.25 × 20% tolerance → 1.0), so a draft that stops paying
-//!   for itself fails CI.
+//!   for itself fails CI;
+//! * observability overhead on the saturated int4-2:4 continuous route
+//!   (`BENCH_serve.json`, `results.metrics-overhead.overhead_ratio`,
+//!   recorder-off ÷ recorder-on throughput) — an ABSOLUTE budget, not a
+//!   baseline-relative one: the run fails if the ratio exceeds 1.05
+//!   (`abs_max`), i.e. full tracing may cost at most 5% of serve
+//!   throughput no matter what the committed snapshot says. Absolute
+//!   budgets ignore `BENCH_GATE_MAX_REGRESSION`.
 //!
 //! Informational metrics are printed alongside but never fail the gate
 //! (wall-clock noise on shared runners makes broad gating flaky; the
@@ -45,22 +52,61 @@
 use slim::util::json::Json;
 use std::path::Path;
 
-/// One metric to compare: (file, dotted JSON path, gated?, lower_is_better?).
-const METRICS: &[(&str, &[&str], bool, bool)] = &[
-    ("BENCH_decode.json", &["results", "int4-2:4-cached", "decode_tok_per_s"], true, false),
-    ("BENCH_serve.json", &["results", "int4-2:4-continuous", "tok_per_s"], true, false),
-    ("BENCH_serve.json", &["results", "hol-chunked", "short_ttft_p95_ms"], true, true),
-    ("BENCH_spec.json", &["results", "spec-int4-2:4", "speedup_vs_dense"], true, false),
-    ("BENCH_spec.json", &["results", "spec-int4", "speedup_vs_dense"], false, false),
-    ("BENCH_spec.json", &["results", "spec-group-int4", "speedup_vs_dense"], false, false),
-    ("BENCH_spec.json", &["results", "spec-int4-2:4", "accept_rate"], false, false),
-    ("BENCH_spec.json", &["results", "spec-int4", "accept_rate"], false, false),
-    ("BENCH_spec.json", &["results", "spec-group-int4", "accept_rate"], false, false),
-    ("BENCH_decode.json", &["results", "int4-cached", "decode_tok_per_s"], false, false),
-    ("BENCH_decode.json", &["results", "dense-cached", "decode_tok_per_s"], false, false),
-    ("BENCH_serve.json", &["results", "dense-continuous", "tok_per_s"], false, false),
-    ("BENCH_serve.json", &["results", "hol-monolithic", "short_ttft_p95_ms"], false, true),
-    ("BENCH_serve.json", &["results", "hol-chunked-fair", "short_ttft_p95_ms"], false, true),
+/// One metric to compare against its baseline (or an absolute budget).
+struct MetricSpec {
+    file: &'static str,
+    path: &'static [&'static str],
+    gated: bool,
+    lower_is_better: bool,
+    /// Absolute ceiling: when set, a gated metric passes iff
+    /// `current <= abs_max`, independent of the baseline value and of
+    /// `BENCH_GATE_MAX_REGRESSION` — used for fixed-budget ratios.
+    abs_max: Option<f64>,
+}
+
+const fn rel(
+    file: &'static str,
+    path: &'static [&'static str],
+    gated: bool,
+    lower_is_better: bool,
+) -> MetricSpec {
+    MetricSpec { file, path, gated, lower_is_better, abs_max: None }
+}
+
+const METRICS: &[MetricSpec] = &[
+    rel("BENCH_decode.json", &["results", "int4-2:4-cached", "decode_tok_per_s"], true, false),
+    rel("BENCH_serve.json", &["results", "int4-2:4-continuous", "tok_per_s"], true, false),
+    rel("BENCH_serve.json", &["results", "hol-chunked", "short_ttft_p95_ms"], true, true),
+    rel("BENCH_spec.json", &["results", "spec-int4-2:4", "speedup_vs_dense"], true, false),
+    MetricSpec {
+        file: "BENCH_serve.json",
+        path: &["results", "metrics-overhead", "overhead_ratio"],
+        gated: true,
+        lower_is_better: true,
+        abs_max: Some(1.05),
+    },
+    rel("BENCH_spec.json", &["results", "spec-int4", "speedup_vs_dense"], false, false),
+    rel("BENCH_spec.json", &["results", "spec-group-int4", "speedup_vs_dense"], false, false),
+    rel("BENCH_spec.json", &["results", "spec-int4-2:4", "accept_rate"], false, false),
+    rel("BENCH_spec.json", &["results", "spec-int4", "accept_rate"], false, false),
+    rel("BENCH_spec.json", &["results", "spec-group-int4", "accept_rate"], false, false),
+    rel("BENCH_decode.json", &["results", "int4-cached", "decode_tok_per_s"], false, false),
+    rel("BENCH_decode.json", &["results", "dense-cached", "decode_tok_per_s"], false, false),
+    rel("BENCH_serve.json", &["results", "dense-continuous", "tok_per_s"], false, false),
+    rel("BENCH_serve.json", &["results", "hol-monolithic", "short_ttft_p95_ms"], false, true),
+    rel("BENCH_serve.json", &["results", "hol-chunked-fair", "short_ttft_p95_ms"], false, true),
+    rel(
+        "BENCH_serve.json",
+        &["results", "metrics-overhead", "tok_per_s_recorder_on"],
+        false,
+        false,
+    ),
+    rel(
+        "BENCH_serve.json",
+        &["results", "metrics-overhead", "tok_per_s_recorder_off"],
+        false,
+        false,
+    ),
 ];
 
 /// Whether a metric passes the gate at `max_regression` — the fractional
@@ -85,6 +131,12 @@ fn regression(baseline: f64, current: f64, lower_is_better: bool) -> f64 {
     } else {
         1.0 - current / baseline
     }
+}
+
+/// Absolute-budget check: pass iff the current value is within the fixed
+/// ceiling. Baseline drift and `BENCH_GATE_MAX_REGRESSION` do not apply.
+fn passes_abs(current: f64, cap: f64) -> bool {
+    current <= cap
 }
 
 fn lookup(doc: &Json, path: &[&str]) -> Option<f64> {
@@ -130,7 +182,8 @@ fn main() {
     );
 
     let mut failed = false;
-    for &(file, path, gated, lower_is_better) in METRICS {
+    for m in METRICS {
+        let (file, path, gated) = (m.file, m.path, m.gated);
         let name = format!("{file}:{}", path.join("."));
         let current_doc = load(current_dir, file);
         let baseline_doc = load(baseline_dir, file);
@@ -150,8 +203,24 @@ fn main() {
         let current = current_doc.ok().as_ref().and_then(|d| lookup(d, path));
         let baseline = baseline_doc.ok().as_ref().and_then(|d| lookup(d, path));
         match (baseline, current) {
+            // Absolute budget: current vs the fixed ceiling, baseline
+            // printed for context only.
+            (b, Some(c)) if m.abs_max.is_some() => {
+                let cap = m.abs_max.unwrap();
+                let ok = !gated || passes_abs(c, cap);
+                if !ok {
+                    failed = true;
+                }
+                let status = match (gated, ok) {
+                    (true, true) => "ok",
+                    (true, false) => "FAIL",
+                    (false, _) => "info",
+                };
+                let b_txt = b.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".to_string());
+                println!("{name:<58} {b_txt:>10} {c:>10.3} {:>7}≤{cap}  {status}", "abs");
+            }
             (Some(b), Some(c)) => {
-                let ok = !gated || passes(b, c, max_regression, lower_is_better);
+                let ok = !gated || passes(b, c, max_regression, m.lower_is_better);
                 if !ok {
                     failed = true;
                 }
@@ -164,7 +233,7 @@ fn main() {
                 // whichever direction the metric considers good.
                 println!(
                     "{name:<58} {b:>10.1} {c:>10.1} {:>+7.1}%  {status}",
-                    -regression(b, c, lower_is_better) * 100.0
+                    -regression(b, c, m.lower_is_better) * 100.0
                 );
             }
             (None, Some(c)) => {
@@ -212,6 +281,21 @@ mod tests {
         assert!(passes(100.0, 40.0, 0.20, true));
         assert!((regression(100.0, 120.0, true) - 0.2).abs() < 1e-12);
         assert!((regression(100.0, 80.0, true) + 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absolute_budget_ignores_baseline() {
+        // The overhead-ratio budget is a hard ceiling: 1.049 passes and
+        // 1.051 fails whatever the baseline said, including a baseline
+        // that was itself worse than the current run.
+        assert!(passes_abs(1.049, 1.05));
+        assert!(!passes_abs(1.051, 1.05));
+        assert!(passes_abs(0.97, 1.05)); // recorder-on faster than off: fine
+        // The spec table carries the budget on the overhead metric only.
+        let with_abs: Vec<_> = super::METRICS.iter().filter(|m| m.abs_max.is_some()).collect();
+        assert_eq!(with_abs.len(), 1);
+        assert!(with_abs[0].gated);
+        assert_eq!(with_abs[0].path.last(), Some(&"overhead_ratio"));
     }
 
     #[test]
