@@ -2,7 +2,13 @@
 //! end-to-end token generation — prefill ms + decode tokens/sec — for the
 //! dense f32 path vs kernel-backed int4 and int4-2:4, plus the legacy
 //! full-reforward decode as the quadratic baseline; int4 additionally at
-//! f32 / int8 / fp8 KV cache dtypes.
+//! f32 / f16 / bf16 / int8 / fp8 KV cache dtypes, the int4-2:4 kernels
+//! with an f16 KV cache (the full-compression serving preset the CI gate
+//! tracks), and a dense-f16 variant whose linear layers stream
+//! half-precision weights through the inline-decode GEMMs. The one-shot
+//! kernel autotuner runs first and its pick — tile shapes plus the
+//! tuned-vs-default probe timings (`slowdown_ratio` ≤ 1.05 is gated) — is
+//! recorded under `results.autotune`.
 //!
 //! This is the paper's Fig. 3/4 speedup decomposition measured at the
 //! serving level instead of the single-matmul level: the KV cache removes
@@ -27,12 +33,13 @@
 //! decoding alone (output is asserted token-identical). Written separately
 //! as `BENCH_spec.json` so the CI gate can track it as its own surface.
 
-use slim::kernels::LinearOp;
+use slim::kernels::{tune, LinearOp};
 use slim::model::attention::{attend, attend_reference, AttnSpan, KvSlab, KvSource};
 use slim::model::{
     forward, forward_cached, forward_slots, Batch, CompressedWeights, KvCache, KvCachePool,
     KvDtype, KvLayout, Linears, ModelConfig, Weights,
 };
+use slim::quant::half::HalfKind;
 use slim::quant::slim_quant;
 use slim::rng::Pcg32;
 use slim::server::{Engine, GenRequest};
@@ -70,6 +77,16 @@ fn kernel_weights(cfg: &ModelConfig, w: &Weights, sparse: bool) -> CompressedWei
             LinearOp::int4(&q, None)
         };
         cw.insert(&name, op);
+    }
+    cw
+}
+
+/// Every linear layer stored as f16/bf16 codes, decoded inline by the
+/// half GEMMs — the half-compute dense preset (2× less weight traffic).
+fn half_dense_weights(cfg: &ModelConfig, w: &Weights, kind: HalfKind) -> CompressedWeights {
+    let mut cw = CompressedWeights::new();
+    for (name, _, _) in cfg.linear_layers() {
+        cw.insert(&name, LinearOp::dense_half(w.expect(&name), kind));
     }
     cw
 }
@@ -448,6 +465,23 @@ fn main() {
     let (l1, l2) = (32usize, 256usize);
     let meas = if quick { 8 } else { 16 };
 
+    // One-shot microkernel autotune (what Engine construction runs): pick
+    // the packed-kernel / attention tile shapes for this machine before
+    // any timed section, and record the pick next to the throughputs.
+    let tuned = tune::ensure_tuned(cfg.d_model);
+    match tuned {
+        Some(c) => println!(
+            "autotune: kt={} gt={} attn_tile={} (default {:.0}µs -> tuned {:.0}µs{})\n",
+            c.kt,
+            c.gt,
+            if c.attn_tile == usize::MAX { "off".to_string() } else { c.attn_tile.to_string() },
+            c.default_us,
+            c.tuned_us,
+            if c.from_cache { ", cached" } else { "" },
+        ),
+        None => println!("autotune: off (SLIM_TUNE=off) — hard-coded default tiles\n"),
+    }
+
     println!(
         "decode bench — d_model={} layers={} batch={} (prefill {} + decode, \
          per-token cost at depth ~{} vs ~{})\n",
@@ -460,14 +494,27 @@ fn main() {
 
     let int4 = kernel_weights(&cfg, &w, false);
     let sp24 = kernel_weights(&cfg, &w, true);
+    let half = half_dense_weights(&cfg, &w, HalfKind::F16);
     let f32kv = KvDtype::F32;
     let variants: Vec<(&str, Measurement)> = vec![
         ("dense-full", run_legacy(&cfg, &w, bsz, l1, l2, meas)),
         ("dense-cached", run_cached(&cfg, &w, &Linears::Dense, f32kv, bsz, l1, l2, meas)),
+        (
+            "dense-f16-cached",
+            run_cached(&cfg, &w, &Linears::Kernels(&half), f32kv, bsz, l1, l2, meas),
+        ),
         ("int4-cached", run_cached(&cfg, &w, &Linears::Kernels(&int4), f32kv, bsz, l1, l2, meas)),
         (
             "int4-2:4-cached",
             run_cached(&cfg, &w, &Linears::Kernels(&sp24), f32kv, bsz, l1, l2, meas),
+        ),
+        (
+            "int4-kv-f16",
+            run_cached(&cfg, &w, &Linears::Kernels(&int4), KvDtype::F16, bsz, l1, l2, meas),
+        ),
+        (
+            "int4-kv-bf16",
+            run_cached(&cfg, &w, &Linears::Kernels(&int4), KvDtype::Bf16, bsz, l1, l2, meas),
         ),
         (
             "int4-kv-int8",
@@ -476,6 +523,10 @@ fn main() {
         (
             "int4-kv-fp8",
             run_cached(&cfg, &w, &Linears::Kernels(&int4), KvDtype::Fp8E4M3, bsz, l1, l2, meas),
+        ),
+        (
+            "int4-2:4-kv-f16",
+            run_cached(&cfg, &w, &Linears::Kernels(&sp24), KvDtype::F16, bsz, l1, l2, meas),
         ),
     ];
 
@@ -510,13 +561,42 @@ fn main() {
         ));
     }
 
+    // The autotuner's pick rides along with the throughput rows so the
+    // gate can budget tuned-vs-default (never-slower guard ⇒ ratio ≤ 1).
+    let autotune_json = match tuned {
+        Some(c) => obj(vec![
+            ("kt", n(c.kt as f64)),
+            ("gt", n(c.gt as f64)),
+            ("attn_tile", n(if c.attn_tile == usize::MAX { 0.0 } else { c.attn_tile as f64 })),
+            ("default_us", n(c.default_us)),
+            ("tuned_us", n(c.tuned_us)),
+            ("slowdown_ratio", n(c.tuned_us / c.default_us.max(1e-9))),
+            ("from_cache", Json::Bool(c.from_cache)),
+        ]),
+        None => obj(vec![
+            ("kt", n(slim::kernels::DEFAULT_KT as f64)),
+            ("gt", n(slim::kernels::DEFAULT_GT as f64)),
+            ("attn_tile", n(0.0)),
+            ("default_us", n(0.0)),
+            ("tuned_us", n(0.0)),
+            ("slowdown_ratio", n(1.0)),
+            ("from_cache", Json::Bool(false)),
+        ]),
+    };
+    json_rows.push(("autotune", autotune_json));
+
     // ── KV cache bytes per dtype (pool-level accounting) ─────────────
     let bytes_of = |dt: KvDtype| KvCachePool::with_dtype(&cfg, bsz, dt).cache_bytes();
-    let (b_f32, b_i8, b_fp8) =
-        (bytes_of(KvDtype::F32), bytes_of(KvDtype::Int8), bytes_of(KvDtype::Fp8E4M3));
+    let (b_f32, b_f16, b_i8, b_fp8) = (
+        bytes_of(KvDtype::F32),
+        bytes_of(KvDtype::F16),
+        bytes_of(KvDtype::Int8),
+        bytes_of(KvDtype::Fp8E4M3),
+    );
     println!(
-        "\nkv cache bytes ({bsz} slots): f32 {b_f32}  int8 {b_i8} ({:.2}x smaller)  \
-         fp8 {b_fp8} ({:.2}x smaller)",
+        "\nkv cache bytes ({bsz} slots): f32 {b_f32}  f16/bf16 {b_f16} ({:.2}x smaller)  \
+         int8 {b_i8} ({:.2}x smaller)  fp8 {b_fp8} ({:.2}x smaller)",
+        b_f32 as f64 / b_f16 as f64,
         b_f32 as f64 / b_i8 as f64,
         b_f32 as f64 / b_fp8 as f64
     );
@@ -612,8 +692,10 @@ fn main() {
             "kv_cache",
             obj(vec![
                 ("f32_bytes", n(b_f32 as f64)),
+                ("f16_bytes", n(b_f16 as f64)),
                 ("int8_bytes", n(b_i8 as f64)),
                 ("fp8_bytes", n(b_fp8 as f64)),
+                ("f16_ratio", n(b_f32 as f64 / b_f16 as f64)),
                 ("int8_ratio", n(b_f32 as f64 / b_i8 as f64)),
                 ("int8_tokens_match_f32", Json::Bool(kv_match)),
                 ("int8_first_divergence", n(kv_div as f64)),
@@ -649,7 +731,9 @@ fn main() {
         "(expect: cached long/short ≈ 1 while dense-full grows with depth — the KV cache\n\
          removes the quadratic term; int4-2:4 > int4 > dense tok/s — Fig. 3/4's traffic\n\
          decomposition at the serving level; int8/fp8 KV ≈ f32-KV speed at ~4x fewer\n\
-         cache bytes; blocked attention beats the scalar loops at depth ≥ 256; the ring\n\
+         cache bytes and f16/bf16 KV at 2x fewer via the half attention fast path; the\n\
+         autotuned tiles are never slower than the hard-coded defaults (slowdown ≤ 1);\n\
+         blocked attention beats the scalar loops at depth ≥ 256; the ring\n\
          long-gen curve stays flat past max_seq while re-prefill pays a window prefill\n\
          per token, and ring tokens equal the shift sliding-window reference exactly;\n\
          speculative decode beats dense-cached tok/s when the compressed twin's draft\n\

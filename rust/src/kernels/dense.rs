@@ -1,8 +1,11 @@
 //! Dense f32 baseline kernel (what the paper's "dense unquantized" bars
-//! measure against).
+//! measure against) — plus the half-storage variant
+//! ([`HalfDenseKernel`]) that keeps the weights as f16/bf16 codes and
+//! streams half the bytes on the bandwidth-bound decode path.
 
 use super::MatmulKernel;
-use crate::tensor::Matrix;
+use crate::quant::half::{encode_vec, HalfKind};
+use crate::tensor::{matmul_half, Matrix};
 
 /// Plain dense matmul over an owned f32 weight matrix.
 pub struct DenseKernel {
@@ -39,6 +42,65 @@ impl MatmulKernel for DenseKernel {
     }
 }
 
+/// Dense matmul over half-precision (f16 or bf16) weight storage: the
+/// d_in×d_out weight matrix is kept as 16-bit codes and decoded inline by
+/// `tensor::ops::matmul_half` (f32 accumulation), so a forward streams half
+/// the weight bytes of [`DenseKernel`] at near-f32 fidelity — the
+/// bandwidth story for the dense fallback layers the packed int4 kernels
+/// don't cover.
+pub struct HalfDenseKernel {
+    bits: Vec<u16>,
+    kind: HalfKind,
+    d_in: usize,
+    d_out: usize,
+}
+
+impl HalfDenseKernel {
+    /// Encode an f32 weight matrix into half storage.
+    pub fn new(w: &Matrix, kind: HalfKind) -> Self {
+        HalfDenseKernel {
+            bits: encode_vec(kind, w.data()),
+            kind,
+            d_in: w.rows(),
+            d_out: w.cols(),
+        }
+    }
+
+    /// Which half format backs this kernel.
+    pub fn kind(&self) -> HalfKind {
+        self.kind
+    }
+
+    /// Decode the stored weights back to f32 (the effective weight this
+    /// kernel multiplies by — for parity tests and the accuracy path).
+    pub fn decode(&self) -> Matrix {
+        let dec = self.kind.decoder();
+        Matrix::from_vec(self.d_in, self.d_out, self.bits.iter().map(|&h| dec(h)).collect())
+    }
+}
+
+impl MatmulKernel for HalfDenseKernel {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            HalfKind::F16 => "dense-f16",
+            HalfKind::Bf16 => "dense-bf16",
+        }
+    }
+
+    fn matmul_fused(&self, x: &Matrix, lowrank: Option<(&Matrix, &Matrix)>) -> Matrix {
+        let mut y = matmul_half(x, &self.bits, self.d_in, self.d_out, self.kind.decoder());
+        if let Some((xl, r)) = lowrank {
+            let n = y.cols();
+            super::add_lowrank_block(xl, r, 0, n, y.data_mut());
+        }
+        y
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.bits.len() * 2
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -52,5 +114,23 @@ mod tests {
         let k = DenseKernel::new(w.clone());
         assert_eq!(k.matmul(&x), x.matmul(&w));
         assert_eq!(k.weight_bytes(), 64 * 48 * 4);
+    }
+
+    /// The half kernel must equal the dense kernel run on its own decoded
+    /// (rounded) weights exactly, sit within half-precision tolerance of
+    /// the f32 original, and stream half the bytes.
+    #[test]
+    fn half_kernel_matches_rounded_dense() {
+        let mut rng = Pcg32::seeded(2);
+        let w = Matrix::randn(64, 48, 1.0, &mut rng);
+        let x = Matrix::randn(4, 64, 1.0, &mut rng);
+        let dense = DenseKernel::new(w.clone());
+        for (kind, tol) in [(HalfKind::F16, 1e-3), (HalfKind::Bf16, 8e-3)] {
+            let k = HalfDenseKernel::new(&w, kind);
+            assert_eq!(k.matmul(&x), x.matmul(&k.decode()), "{kind:?} exactness");
+            let err = k.matmul(&x).rel_err(&dense.matmul(&x));
+            assert!(err < tol, "{kind:?} err {err}");
+            assert_eq!(k.weight_bytes() * 2, dense.weight_bytes());
+        }
     }
 }

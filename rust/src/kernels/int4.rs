@@ -48,15 +48,17 @@ impl Int4Kernel {
     /// [KT × bw] tile of codes into an f32 scratch once, then run m
     /// vectorizable axpys over it. The decode cost amortizes over the
     /// batch (1 unpack per m FMAs) and the packed bytes stream at ⅛ the
-    /// dense f32 traffic.
+    /// dense f32 traffic. The k-tile size comes from the shared
+    /// [`super::TILES`] config (autotuned; blocking-only, bit-exact for
+    /// any value).
     fn decode_block(&self, x: &Matrix, j0: usize, j1: usize, out: &mut [f32]) {
         let (m, d_in) = x.shape();
         let n = self.d_out;
         let bw = j1 - j0;
-        const KT: usize = 32;
-        let mut scratch = vec![0.0f32; KT * bw];
-        for k0 in (0..d_in).step_by(KT) {
-            let kt = KT.min(d_in - k0);
+        let kt_tile = super::TILES.kt();
+        let mut scratch = vec![0.0f32; kt_tile * bw];
+        for k0 in (0..d_in).step_by(kt_tile) {
+            let kt = kt_tile.min(d_in - k0);
             for kk in 0..kt {
                 super::unpack_int4_row(
                     &self.packed.bytes,
@@ -138,15 +140,16 @@ impl GroupInt4Kernel {
     /// Same tile-decode structure as the per-tensor kernel, but the
     /// per-(group, column) scale must be folded in *during decode* —
     /// one extra multiply + scale load per weight element. That is the
-    /// measured group-quantization overhead Table 23 reports.
+    /// measured group-quantization overhead Table 23 reports. The k-tile
+    /// size comes from the shared [`super::TILES`] config.
     fn decode_block(&self, x: &Matrix, j0: usize, j1: usize, out: &mut [f32]) {
         let (m, d_in) = x.shape();
         let n = self.d_out;
         let bw = j1 - j0;
-        const KT: usize = 32;
-        let mut scratch = vec![0.0f32; KT * bw];
-        for k0 in (0..d_in).step_by(KT) {
-            let kt = KT.min(d_in - k0);
+        let kt_tile = super::TILES.kt();
+        let mut scratch = vec![0.0f32; kt_tile * bw];
+        for k0 in (0..d_in).step_by(kt_tile) {
+            let kt = kt_tile.min(d_in - k0);
             for kk in 0..kt {
                 let k = k0 + kk;
                 let g = k / self.group_size;

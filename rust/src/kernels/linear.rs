@@ -12,9 +12,16 @@
 //! * per-tensor int4                  → [`Int4Kernel`]
 //! * group-scale int4                 → [`GroupInt4Kernel`]
 //! * anything else (fp32, odd bits)   → [`DenseKernel`] fallback
+//!
+//! Half-precision options: [`LinearOp::dense_half`] builds a dense layer on
+//! f16/bf16 weight storage ([`HalfDenseKernel`], half the dense f32
+//! traffic), and [`LinearOp::half_adapters`] re-encodes an existing op's
+//! low-rank down-projection factor in half precision.
 
 use super::{DenseKernel, GroupInt4Kernel, Int4Kernel, LowRankApply, MatmulKernel, Sparse24Kernel};
 use crate::compress::CompressedLayer;
+use crate::kernels::HalfDenseKernel;
+use crate::quant::half::HalfKind;
 use crate::quant::Quantized;
 use crate::sparse::Mask;
 use crate::tensor::Matrix;
@@ -22,6 +29,7 @@ use crate::tensor::Matrix;
 /// The kernel backing one linear layer.
 pub enum KernelKind {
     Dense(DenseKernel),
+    HalfDense(HalfDenseKernel),
     Int4(Int4Kernel),
     GroupInt4(GroupInt4Kernel),
     Sparse24(Sparse24Kernel),
@@ -31,6 +39,7 @@ impl KernelKind {
     fn as_kernel(&self) -> &dyn MatmulKernel {
         match self {
             KernelKind::Dense(k) => k,
+            KernelKind::HalfDense(k) => k,
             KernelKind::Int4(k) => k,
             KernelKind::GroupInt4(k) => k,
             KernelKind::Sparse24(k) => k,
@@ -48,6 +57,19 @@ impl LinearOp {
     /// Plain dense layer (baseline / fallback).
     pub fn dense(w: Matrix) -> Self {
         LinearOp { kernel: KernelKind::Dense(DenseKernel::new(w)), adapter: None }
+    }
+
+    /// Dense layer on half-precision (f16/bf16) weight storage — half the
+    /// streamed bytes of [`Self::dense`] at near-f32 fidelity.
+    pub fn dense_half(w: &Matrix, kind: HalfKind) -> Self {
+        LinearOp { kernel: KernelKind::HalfDense(HalfDenseKernel::new(w, kind)), adapter: None }
+    }
+
+    /// Re-encode this op's low-rank adapter down-projection factor in half
+    /// precision (no-op if the op has no adapter).
+    pub fn half_adapters(mut self, kind: HalfKind) -> Self {
+        self.adapter = self.adapter.take().map(|a| a.into_half(kind));
+        self
     }
 
     /// Per-tensor packed int4 layer.
@@ -233,6 +255,35 @@ mod tests {
         let mut want = LinearOp::from_compressed(&bare).matmul(&x);
         adapter.apply(&x, &mut want);
         assert!(fused.rel_err(&want) < 1e-6, "err {}", fused.rel_err(&want));
+    }
+
+    /// Half-precision dense storage and half adapters stay within
+    /// half-precision tolerance of their f32 twins and stream fewer bytes.
+    #[test]
+    fn half_paths_close_to_f32_and_cheaper() {
+        use crate::quant::half::HalfKind;
+        let mut rng = Pcg32::seeded(9);
+        let w = Matrix::randn(64, 48, 0.5, &mut rng);
+        let x = Matrix::randn(5, 64, 1.0, &mut rng);
+        let f32_op = LinearOp::dense(w.clone());
+        for kind in [HalfKind::F16, HalfKind::Bf16] {
+            let h = LinearOp::dense_half(&w, kind);
+            let err = h.matmul(&x).rel_err(&f32_op.matmul(&x));
+            assert!(err < 8e-3, "{kind:?} dense err {err}");
+            assert_eq!(h.weight_bytes() * 2, f32_op.weight_bytes());
+        }
+
+        // Adapter path on the flagship compressed preset.
+        let slim = CompressConfig::slim(SparsityPattern::TWO_FOUR);
+        let (out, x) = layer(10, &slim);
+        let f32_op = LinearOp::from_compressed(&out);
+        assert!(f32_op.rank() > 0);
+        let want = f32_op.matmul(&x);
+        let f32_bytes = f32_op.weight_bytes();
+        let h = LinearOp::from_compressed(&out).half_adapters(HalfKind::F16);
+        let err = h.matmul(&x).rel_err(&want);
+        assert!(err < 1e-3, "half-adapter err {err}");
+        assert!(h.weight_bytes() < f32_bytes);
     }
 
     #[test]

@@ -6,19 +6,43 @@
 //! output-column loop (`MatmulKernel::matmul_fused`), so y is written in a
 //! single pass; [`LowRankApply::apply`] keeps the standalone two-matmul
 //! form for reference and tests.
+//!
+//! The wide d_in×rank down-projection factor L — the adapter's dominant
+//! weight traffic — can optionally be stored as f16/bf16 codes
+//! ([`LowRankApply::into_half`]): `project` then decodes inline through
+//! `tensor::ops::matmul_half`, halving the streamed L bytes. The skinny
+//! rank×d_out factor R stays f32 because the fused column loop
+//! (`kernels::add_lowrank_block`) borrows it as a `&Matrix`, and its
+//! traffic is already rank/d_in of L's.
 
 use crate::lowrank::Adapters;
-use crate::tensor::Matrix;
+use crate::quant::half::{encode_vec, HalfKind};
+use crate::tensor::{matmul_half, Matrix};
 
 /// Prepared adapter applier.
 pub struct LowRankApply {
     l: Matrix,
+    /// When set, `project` reads these 16-bit codes of L instead of the f32
+    /// matrix (which is kept only as the shape/reference copy).
+    l_half: Option<(HalfKind, Vec<u16>)>,
     r: Matrix,
 }
 
 impl LowRankApply {
     pub fn new(adapters: &Adapters) -> Self {
-        LowRankApply { l: adapters.l.clone(), r: adapters.r.clone() }
+        LowRankApply { l: adapters.l.clone(), l_half: None, r: adapters.r.clone() }
+    }
+
+    /// Re-encode the down-projection factor L in half precision; the
+    /// projection decodes inline from the 16-bit codes from then on.
+    pub fn into_half(mut self, kind: HalfKind) -> Self {
+        self.l_half = Some((kind, encode_vec(kind, self.l.data())));
+        self
+    }
+
+    /// Which half format L is stored in (None = f32).
+    pub fn half_kind(&self) -> Option<HalfKind> {
+        self.l_half.as_ref().map(|(k, _)| *k)
     }
 
     /// rank of the adapters.
@@ -26,15 +50,21 @@ impl LowRankApply {
         self.l.cols()
     }
 
-    /// Adapter weight bytes (f32).
+    /// Adapter weight bytes (L at its stored width + f32 R).
     pub fn weight_bytes(&self) -> usize {
-        (self.l.len() + self.r.len()) * 4
+        let l_bytes = if self.l_half.is_some() { self.l.len() * 2 } else { self.l.len() * 4 };
+        l_bytes + self.r.len() * 4
     }
 
     /// The skinny down-projection `x·L` (m × rank), computed once per call
     /// and handed to the kernel's fused column loop.
     pub fn project(&self, x: &Matrix) -> Matrix {
-        x.matmul(&self.l)
+        match &self.l_half {
+            None => x.matmul(&self.l),
+            Some((kind, bits)) => {
+                matmul_half(x, bits, self.l.rows(), self.l.cols(), kind.decoder())
+            }
+        }
     }
 
     /// The up-projection factor `R` (rank × d_out).
@@ -42,9 +72,10 @@ impl LowRankApply {
         &self.r
     }
 
-    /// y += (x·L)·R, in place — the unfused reference form.
+    /// y += (x·L)·R, in place — the unfused reference form (routes through
+    /// [`Self::project`] so it reads the same L storage as the fused path).
     pub fn apply(&self, x: &Matrix, y: &mut Matrix) {
-        let xl = x.matmul(&self.l);
+        let xl = self.project(x);
         let corr = xl.matmul(&self.r);
         y.axpy(1.0, &corr);
     }
@@ -68,5 +99,31 @@ mod tests {
         let want = x.matmul(&l).matmul(&r);
         assert!(y.rel_err(&want) < 1e-6);
         assert_eq!(applier.rank(), 4);
+    }
+
+    /// Half-L projection: exact vs the decoded (rounded) L, close to the
+    /// f32 original, and half the L bytes.
+    #[test]
+    fn half_projection_matches_rounded_l() {
+        let mut rng = Pcg32::seeded(2);
+        let l = Matrix::randn(48, 6, 0.1, &mut rng);
+        let r = Matrix::randn(6, 32, 0.1, &mut rng);
+        let x = Matrix::randn(5, 48, 1.0, &mut rng);
+        let a = Adapters { l: l.clone(), r: r.clone() };
+        let f32_bytes = LowRankApply::new(&a).weight_bytes();
+        for (kind, tol) in [(HalfKind::F16, 1e-3), (HalfKind::Bf16, 8e-3)] {
+            let h = LowRankApply::new(&a).into_half(kind);
+            assert_eq!(h.half_kind(), Some(kind));
+            let dec = kind.decoder();
+            let l_rounded = Matrix::from_vec(
+                48,
+                6,
+                encode_vec(kind, l.data()).iter().map(|&b| dec(b)).collect(),
+            );
+            assert_eq!(h.project(&x), x.matmul(&l_rounded), "{kind:?} exactness");
+            let err = h.project(&x).rel_err(&x.matmul(&l));
+            assert!(err < tol, "{kind:?} err {err}");
+            assert_eq!(f32_bytes - h.weight_bytes(), l.len() * 2);
+        }
     }
 }

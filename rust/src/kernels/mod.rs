@@ -10,10 +10,12 @@
 //! Two layers of API:
 //!
 //! * [`MatmulKernel`] — raw packed matmuls ([`DenseKernel`], [`Int4Kernel`],
-//!   [`GroupInt4Kernel`], [`Sparse24Kernel`]). The packed kernels partition
-//!   their output columns across `std::thread::scope` workers (each worker
-//!   tile-decodes into private scratch), so they scale with cores like the
-//!   dense `tensor::ops::matmul` baseline they are benchmarked against.
+//!   [`GroupInt4Kernel`], [`Sparse24Kernel`], plus the half-storage
+//!   [`HalfDenseKernel`] that streams f16/bf16 weights at half the dense
+//!   f32 traffic). The packed kernels partition their output columns across
+//!   `std::thread::scope` workers (each worker tile-decodes into private
+//!   scratch), so they scale with cores like the dense `tensor::ops::matmul`
+//!   baseline they are benchmarked against.
 //! * [`LinearOp`] — one servable linear layer: a kernel plus the optional
 //!   low-rank adapter term `x·L·R`, with the skinny `x·L` projection
 //!   computed once and the `(x·L)·R` correction fused into each worker's
@@ -27,20 +29,102 @@
 //!   (the Fig. 3/4 decomposition, now at the token-generation level).
 //!
 //! All kernels compute `y = x · W (+ x·L·R)` for row-major `x: m×d_in`.
+//!
+//! Blocking parameters (the int4 k-tile, the 2:4 group tile, and the
+//! attention query tile) live in the shared [`TileConfig`] ([`TILES`]) and
+//! are picked once per process by the one-shot autotuner ([`tune`]) at
+//! engine build time; every knob is blocking-only, so any setting produces
+//! bit-identical results.
 
 pub mod dense;
 pub mod int4;
 pub mod linear;
 pub mod lowrank;
 pub mod sparse24;
+pub mod tune;
 
-pub use dense::DenseKernel;
+pub use dense::{DenseKernel, HalfDenseKernel};
 pub use int4::{GroupInt4Kernel, Int4Kernel};
 pub use linear::{KernelKind, LinearOp};
 pub use lowrank::LowRankApply;
 pub use sparse24::Sparse24Kernel;
 
 use crate::tensor::Matrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default int4 k-tile (input dims decoded per scratch refill) — the value
+/// the hard-coded kernels shipped with.
+pub const DEFAULT_KT: usize = 32;
+/// Default 2:4 group tile (groups of 4 input dims per scratch refill).
+pub const DEFAULT_GT: usize = 8;
+/// Default attention query-tile rows — `usize::MAX` means "don't split",
+/// the pre-autotuner behavior.
+pub const DEFAULT_ATTN_TILE: usize = usize::MAX;
+
+/// Shared kernel blocking parameters — the knobs the one-shot autotuner
+/// ([`tune`]) populates at engine build time.
+///
+/// Previously `kernels/int4.rs` hard-coded `const KT: usize = 32` twice and
+/// `kernels/sparse24.rs` hard-coded `GT = 8`; those reads now come from the
+/// process-wide [`TILES`] instance. Every knob here is **blocking-only**:
+/// changing it regroups the loops but never reorders any per-element
+/// k-summation (k still ascends within and across tiles, attention query
+/// rows are independent), so results are bit-identical for every setting —
+/// which is what makes a relaxed-atomic global safe: a concurrent reader
+/// mid-retune can only ever observe some valid blocking. The defaults
+/// reproduce the old constants bit-for-bit.
+pub struct TileConfig {
+    kt: AtomicUsize,
+    gt: AtomicUsize,
+    attn_tile: AtomicUsize,
+}
+
+impl TileConfig {
+    /// int4 kernels: input dims decoded per scratch tile.
+    #[inline]
+    pub fn kt(&self) -> usize {
+        self.kt.load(Ordering::Relaxed)
+    }
+
+    /// 2:4 kernel: groups (of 4 input dims) decoded per scratch tile.
+    #[inline]
+    pub fn gt(&self) -> usize {
+        self.gt.load(Ordering::Relaxed)
+    }
+
+    /// Blocked attention: max query rows per work item
+    /// (`usize::MAX` = unlimited).
+    #[inline]
+    pub fn attn_tile(&self) -> usize {
+        self.attn_tile.load(Ordering::Relaxed)
+    }
+
+    /// Install a new blocking choice (the autotuner's pick).
+    pub fn set(&self, kt: usize, gt: usize, attn_tile: usize) {
+        assert!(kt > 0 && gt > 0 && attn_tile > 0, "tile sizes must be nonzero");
+        self.kt.store(kt, Ordering::Relaxed);
+        self.gt.store(gt, Ordering::Relaxed);
+        self.attn_tile.store(attn_tile, Ordering::Relaxed);
+    }
+
+    /// Restore the pre-autotuner defaults.
+    pub fn reset(&self) {
+        self.set(DEFAULT_KT, DEFAULT_GT, DEFAULT_ATTN_TILE);
+    }
+
+    /// Current (kt, gt, attn_tile).
+    pub fn snapshot(&self) -> (usize, usize, usize) {
+        (self.kt(), self.gt(), self.attn_tile())
+    }
+}
+
+/// The process-wide tile configuration every packed kernel and the blocked
+/// attention read their blocking from.
+pub static TILES: TileConfig = TileConfig {
+    kt: AtomicUsize::new(DEFAULT_KT),
+    gt: AtomicUsize::new(DEFAULT_GT),
+    attn_tile: AtomicUsize::new(DEFAULT_ATTN_TILE),
+};
 
 /// Common interface so the bench harness can sweep kernels uniformly.
 pub trait MatmulKernel {
@@ -231,6 +315,36 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Every tile setting must produce *bit-identical* kernel output — the
+    /// invariant that makes the autotuner (and the relaxed-atomic global
+    /// [`TILES`]) safe to run at all. Exercises odd tile sizes that don't
+    /// divide d_in.
+    #[test]
+    fn tile_config_is_bit_exact() {
+        let mut rng = Pcg32::seeded(7);
+        let (d_in, d_out, m) = (128, 64, 4);
+        let w = Matrix::from_fn(d_in, d_out, |_, _| rng.laplace(0.05));
+        let x = Matrix::randn(m, d_in, 1.0, &mut rng);
+        let q = slim_quant::quantize(&w, 4);
+        let k_int4 = Int4Kernel::from_quantized(&q);
+        let x_l2 = vec![1.0f32; d_in];
+        let (_, mask) = wanda::prune(&q.wq, &x_l2, SparsityPattern::TWO_FOUR);
+        let k_sp = Sparse24Kernel::from_parts(&q, &mask);
+
+        TILES.reset();
+        let want_int4 = k_int4.matmul(&x);
+        let want_sp = k_sp.matmul(&x);
+        for (kt, gt) in [(1usize, 1usize), (16, 4), (48, 16), (129, 33), (7, 5)] {
+            TILES.set(kt, gt, DEFAULT_ATTN_TILE);
+            assert_eq!(k_int4.matmul(&x), want_int4, "int4 kt={kt}");
+            assert_eq!(k_sp.matmul(&x), want_sp, "sparse24 gt={gt}");
+        }
+        // NOTE: no assertion on TILES' *values* — other tests (and the
+        // autotuner's own tests) mutate the global concurrently, which is
+        // safe exactly because every setting is bit-exact.
+        TILES.reset();
     }
 
     #[test]

@@ -92,12 +92,14 @@ impl Sparse24Kernel {
         let n = self.d_out;
         let bw = j1 - j0;
         let n_groups = d_in / 4;
-        const GT: usize = 8; // groups per tile → 32 scratch rows
-        let mut scratch = vec![0.0f32; GT * 4 * bw];
+        // Groups per tile (default 8 → 32 scratch rows); from the shared
+        // autotuned [`super::TILES`] config, blocking-only and bit-exact.
+        let gt_tile = super::TILES.gt();
+        let mut scratch = vec![0.0f32; gt_tile * 4 * bw];
         let mut c0row = vec![0.0f32; bw];
         let mut c1row = vec![0.0f32; bw];
-        for g0 in (0..n_groups).step_by(GT) {
-            let gt = GT.min(n_groups - g0);
+        for g0 in (0..n_groups).step_by(gt_tile) {
+            let gt = gt_tile.min(n_groups - g0);
             scratch[..gt * 4 * bw].fill(0.0);
             for gg in 0..gt {
                 let g = g0 + gg;

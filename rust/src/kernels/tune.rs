@@ -1,0 +1,388 @@
+//! One-shot microkernel autotuner — picks the [`super::TILES`] blocking at
+//! engine build time.
+//!
+//! The packed kernels and the blocked attention read three blocking knobs
+//! (int4 k-tile, 2:4 group tile, attention query tile) from the shared
+//! [`super::TileConfig`]. Every knob is blocking-only — any setting is
+//! bit-exact — so the only question is speed, and the best answer depends
+//! on the machine (cache sizes, core count) and the model width. Rather
+//! than ship one hard-coded guess, [`ensure_tuned`] runs a tiny one-shot
+//! search the first time an engine is built: it times a probe suite (an
+//! int4 matmul, a 2:4 matmul, and a blocked-attention call at the actual
+//! `d_model` and thread count) over a small grid of candidates, installs
+//! the winner in [`super::TILES`], and memoizes the outcome for the rest of
+//! the process. The whole search budgets tens of milliseconds — noise next
+//! to engine construction, amortized over every subsequent decode step.
+//!
+//! A never-slower guard re-times the winning triple against the defaults
+//! and keeps the defaults unless the tuned pick is at least as fast on the
+//! probe suite — the acceptance bar (`tuned/default ≤ 1.05`) that
+//! `benches/decode.rs` records and `tools/bench_gate.rs` gates.
+//!
+//! Environment knobs:
+//!
+//! * `SLIM_TUNE=off`   — skip tuning entirely (defaults stay in place).
+//! * `SLIM_TUNE=force` — re-run the search even when the disk cache has a
+//!   matching entry (the cache file is rewritten with the fresh result).
+//! * `SLIM_TUNE_CACHE=<path>` — persist the choice as a
+//!   [`crate::runtime::manifest`]-format JSON file; later processes with a
+//!   matching (d_model, threads) skip the search and just apply the cached
+//!   tiles. Unset = in-memory only.
+//!
+//! The memo is process-global ([`std::sync::OnceLock`]): the first engine's
+//! `d_model` decides the tiles for the whole process, which matches how the
+//! server runs (routes share one kernel substrate) and keeps the global
+//! [`super::TILES`] coherent.
+
+use super::{Int4Kernel, MatmulKernel, Sparse24Kernel, DEFAULT_ATTN_TILE, DEFAULT_GT, DEFAULT_KT};
+use crate::model::attention::{attend, AttnSpan, KvSource};
+use crate::quant::absmax;
+use crate::rng::Pcg32;
+use crate::runtime::manifest::Manifest;
+use crate::sparse::{mask::SparsityPattern, wanda};
+use crate::tensor::Matrix;
+use crate::util::json::{n, obj, s, Json};
+use std::path::Path;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Candidate int4 k-tiles (input dims decoded per scratch refill).
+const KT_GRID: [usize; 3] = [16, 32, 64];
+/// Candidate 2:4 group tiles (groups of 4 input dims per refill).
+const GT_GRID: [usize; 3] = [4, 8, 16];
+/// Candidate attention query tiles (`usize::MAX` = never split).
+const ATTN_GRID: [usize; 4] = [16, 32, 64, usize::MAX];
+
+/// The autotuner's pick (or cache hit) for this process.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneChoice {
+    pub kt: usize,
+    pub gt: usize,
+    pub attn_tile: usize,
+    /// Model width the probe suite ran at.
+    pub d_model: usize,
+    /// Worker threads the probe suite ran with.
+    pub threads: usize,
+    /// Probe-suite microseconds at the default tiles.
+    pub default_us: f64,
+    /// Probe-suite microseconds at the chosen tiles.
+    pub tuned_us: f64,
+    /// True when the tiles came from the `SLIM_TUNE_CACHE` manifest
+    /// instead of a fresh search.
+    pub from_cache: bool,
+}
+
+static CHOICE: OnceLock<Option<TuneChoice>> = OnceLock::new();
+
+/// Tune once per process (the first caller's `d_model` wins) and install
+/// the chosen tiles in [`super::TILES`]. Returns `None` when tuning is
+/// disabled via `SLIM_TUNE=off`.
+pub fn ensure_tuned(d_model: usize) -> Option<&'static TuneChoice> {
+    CHOICE
+        .get_or_init(|| {
+            let mode = std::env::var("SLIM_TUNE").unwrap_or_default();
+            if mode == "off" {
+                return None;
+            }
+            let cache = std::env::var("SLIM_TUNE_CACHE").ok().filter(|p| !p.is_empty());
+            if mode != "force" {
+                if let Some(p) = &cache {
+                    if let Some(c) = load_cached(Path::new(p), d_model) {
+                        apply(&c);
+                        crate::info!(
+                            "tune: cached tiles kt={} gt={} attn={} ({})",
+                            c.kt,
+                            c.gt,
+                            c.attn_tile,
+                            p
+                        );
+                        return Some(c);
+                    }
+                }
+            }
+            let c = run_search(d_model);
+            apply(&c);
+            crate::info!(
+                "tune: picked kt={} gt={} attn={} ({:.0}us vs {:.0}us default)",
+                c.kt,
+                c.gt,
+                c.attn_tile,
+                c.tuned_us,
+                c.default_us
+            );
+            if let Some(p) = &cache {
+                if let Err(e) = save_cache(Path::new(p), &c) {
+                    crate::info!("tune: cache write failed: {e}");
+                }
+            }
+            Some(c)
+        })
+        .as_ref()
+}
+
+/// The outcome recorded by [`ensure_tuned`], if it has run.
+pub fn outcome() -> Option<&'static TuneChoice> {
+    CHOICE.get().and_then(|c| c.as_ref())
+}
+
+/// Install a choice in the process-wide [`super::TILES`].
+pub fn apply(c: &TuneChoice) {
+    super::TILES.set(c.kt, c.gt, c.attn_tile);
+}
+
+/// Probe timer: one warm-up call, then best-of-two wall-clock (µs). Min is
+/// the right statistic for a one-shot search — scheduling noise only ever
+/// inflates a sample.
+fn probe_us(mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    best
+}
+
+/// Probe fixture sized from the engine's `d_model`: a packed int4 kernel,
+/// a 2:4 kernel, and a single-span attention problem, all at decode-like
+/// batch sizes. Width is clamped so tuning a huge model still budgets
+/// tens of milliseconds; the blocking sweet spot tracks cache footprint,
+/// which saturates well before that clamp.
+struct Probe {
+    int4: Int4Kernel,
+    sp24: Sparse24Kernel,
+    x: Matrix,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    spans: [AttnSpan; 1],
+    n_heads: usize,
+    dh: usize,
+}
+
+impl Probe {
+    fn new(d_model: usize) -> Self {
+        // Multiple of 64 in [64, 384]: satisfies the 2:4 kernel's d_in % 4
+        // and keeps the search cheap at large widths.
+        let d = (d_model.clamp(64, 384) / 64) * 64;
+        let mut rng = Pcg32::seeded(0x511A);
+        let w = Matrix::from_fn(d, d, |_, _| rng.laplace(0.05));
+        let q4 = absmax::quantize(&w, 4);
+        let int4 = Int4Kernel::from_quantized(&q4);
+        let x_l2 = vec![1.0f32; d];
+        let (_, mask) = wanda::prune(&q4.wq, &x_l2, SparsityPattern::TWO_FOUR);
+        let sp24 = Sparse24Kernel::from_parts(&q4, &mask);
+        let x = Matrix::randn(4, d, 1.0, &mut rng);
+
+        // Attention probe: a prefill-like span, the regime the query tile
+        // actually affects (decode spans are single-row).
+        let (n_heads, dh, seq) = (4usize, 32usize, 64usize);
+        let q = Matrix::randn(seq, n_heads * dh, 1.0, &mut rng);
+        let k = Matrix::randn(seq, n_heads * dh, 1.0, &mut rng);
+        let v = Matrix::randn(seq, n_heads * dh, 1.0, &mut rng);
+        let spans = [AttnSpan { q_base: 0, span: seq, p0: 0, kv: 0, start: 0 }];
+        Probe { int4, sp24, x, q, k, v, spans, n_heads, dh }
+    }
+
+    fn time_int4(&self) -> f64 {
+        probe_us(|| {
+            std::hint::black_box(self.int4.matmul(&self.x));
+        })
+    }
+
+    fn time_sp24(&self) -> f64 {
+        probe_us(|| {
+            std::hint::black_box(self.sp24.matmul(&self.x));
+        })
+    }
+
+    fn time_attn(&self) -> f64 {
+        let scale = 1.0 / (self.dh as f32).sqrt();
+        let kv = KvSource::Fresh { k: &self.k, v: &self.v };
+        probe_us(|| {
+            std::hint::black_box(attend(self.n_heads, self.dh, scale, &self.spans, &self.q, &kv));
+        })
+    }
+
+    /// Full suite at the current [`super::TILES`] setting.
+    fn time_suite(&self) -> f64 {
+        self.time_int4() + self.time_sp24() + self.time_attn()
+    }
+}
+
+/// Time the candidate grid at `d_model` and return the winning triple. The
+/// three knobs are independent (each touches a different kernel), so each
+/// axis is swept alone against its own probe, then the combined winner is
+/// re-timed against the defaults and discarded if slower — the tuned pick
+/// is never worse than the shipped constants on the probe suite.
+pub fn run_search(d_model: usize) -> TuneChoice {
+    let probe = Probe::new(d_model);
+    let threads = crate::tensor::num_threads();
+
+    let sweep = |grid: &[usize], set: &dyn Fn(usize), time: &dyn Fn() -> f64| {
+        let mut best = (grid[0], f64::INFINITY);
+        for &cand in grid {
+            set(cand);
+            let us = time();
+            if us < best.1 {
+                best = (cand, us);
+            }
+        }
+        best.0
+    };
+    let kt = sweep(
+        &KT_GRID,
+        &|c| super::TILES.set(c, DEFAULT_GT, DEFAULT_ATTN_TILE),
+        &|| probe.time_int4(),
+    );
+    let gt = sweep(
+        &GT_GRID,
+        &|c| super::TILES.set(DEFAULT_KT, c, DEFAULT_ATTN_TILE),
+        &|| probe.time_sp24(),
+    );
+    let attn_tile = sweep(
+        &ATTN_GRID,
+        &|c| super::TILES.set(DEFAULT_KT, DEFAULT_GT, c),
+        &|| probe.time_attn(),
+    );
+
+    // Never-slower guard: re-time the combined triple against the defaults.
+    super::TILES.reset();
+    let default_us = probe.time_suite();
+    super::TILES.set(kt, gt, attn_tile);
+    let tuned_us = probe.time_suite();
+    super::TILES.reset();
+    let (kt, gt, attn_tile, tuned_us) = if tuned_us <= default_us {
+        (kt, gt, attn_tile, tuned_us)
+    } else {
+        (DEFAULT_KT, DEFAULT_GT, DEFAULT_ATTN_TILE, default_us)
+    };
+    TuneChoice { kt, gt, attn_tile, d_model, threads, default_us, tuned_us, from_cache: false }
+}
+
+/// JSON sentinel for `attn_tile = usize::MAX` ("never split") — 0 is not a
+/// legal tile, so it round-trips unambiguously through f64.
+fn attn_to_json(t: usize) -> f64 {
+    if t == usize::MAX {
+        0.0
+    } else {
+        t as f64
+    }
+}
+
+fn attn_from_json(t: usize) -> usize {
+    if t == 0 {
+        usize::MAX
+    } else {
+        t
+    }
+}
+
+fn entry_name(d_model: usize, threads: usize) -> String {
+    format!("tune-d{d_model}-t{threads}")
+}
+
+/// Look up a cached choice matching (`d_model`, current threads) in a
+/// [`Manifest`]-format file. Any parse or shape problem just misses.
+fn load_cached(path: &Path, d_model: usize) -> Option<TuneChoice> {
+    let threads = crate::tensor::num_threads();
+    let man = Manifest::load(path).ok()?;
+    for e in man.entries_of_kind("tune") {
+        if e.meta_usize("d_model") == Some(d_model) && e.meta_usize("threads") == Some(threads) {
+            let kt = e.meta_usize("kt")?;
+            let gt = e.meta_usize("gt")?;
+            let attn_tile = attn_from_json(e.meta_usize("attn_tile")?);
+            if kt == 0 || gt == 0 {
+                return None;
+            }
+            let us = |k: &str| e.meta.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            return Some(TuneChoice {
+                kt,
+                gt,
+                attn_tile,
+                d_model,
+                threads,
+                default_us: us("default_us"),
+                tuned_us: us("tuned_us"),
+                from_cache: true,
+            });
+        }
+    }
+    None
+}
+
+/// Persist a choice as a single-entry manifest (overwrites: one tune file
+/// holds one machine+model pick; `file: "-"` — there is no tensor payload).
+fn save_cache(path: &Path, c: &TuneChoice) -> std::io::Result<()> {
+    let meta = obj(vec![
+        ("kind", s("tune")),
+        ("kt", n(c.kt as f64)),
+        ("gt", n(c.gt as f64)),
+        ("attn_tile", n(attn_to_json(c.attn_tile))),
+        ("d_model", n(c.d_model as f64)),
+        ("threads", n(c.threads as f64)),
+        ("default_us", n(c.default_us)),
+        ("tuned_us", n(c.tuned_us)),
+    ]);
+    let entry = obj(vec![
+        ("name", s(&entry_name(c.d_model, c.threads))),
+        ("file", s("-")),
+        ("meta", meta),
+    ]);
+    let doc = obj(vec![("version", n(1.0)), ("entries", Json::Arr(vec![entry]))]);
+    std::fs::write(path, doc.to_string_compact())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The search must return legal tiles and, by construction of the
+    /// never-slower guard, a tuned time no worse than the default time.
+    #[test]
+    fn search_returns_legal_never_slower_tiles() {
+        let c = run_search(128);
+        assert!(c.kt > 0 && c.gt > 0 && c.attn_tile > 0);
+        assert!(KT_GRID.contains(&c.kt) || c.kt == DEFAULT_KT);
+        assert!(GT_GRID.contains(&c.gt) || c.gt == DEFAULT_GT);
+        assert!(ATTN_GRID.contains(&c.attn_tile) || c.attn_tile == DEFAULT_ATTN_TILE);
+        assert!(c.tuned_us <= c.default_us, "{} > {}", c.tuned_us, c.default_us);
+        assert_eq!((c.d_model, c.from_cache), (128, false));
+        super::super::TILES.reset();
+    }
+
+    /// Cache round trip: save → load must reproduce the choice (with
+    /// `from_cache` flipped), including the `usize::MAX` attn sentinel;
+    /// mismatched d_model must miss.
+    #[test]
+    fn cache_round_trips_through_manifest() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("slim_tune_test_{}.json", std::process::id()));
+        let c = TuneChoice {
+            kt: 64,
+            gt: 4,
+            attn_tile: usize::MAX,
+            d_model: 256,
+            threads: crate::tensor::num_threads(),
+            default_us: 120.5,
+            tuned_us: 98.25,
+            from_cache: false,
+        };
+        save_cache(&path, &c).unwrap();
+        let got = load_cached(&path, 256).expect("cache hit");
+        assert_eq!(got, TuneChoice { from_cache: true, ..c.clone() });
+        assert!(load_cached(&path, 512).is_none(), "d_model mismatch must miss");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A corrupt cache file must miss, not panic.
+    #[test]
+    fn corrupt_cache_is_a_miss() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("slim_tune_bad_{}.json", std::process::id()));
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(load_cached(&path, 128).is_none());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -25,9 +25,15 @@
 //! Behind the attention kernel sits [`KvSlab`], the pluggable cache storage:
 //! K/V rows are laid out head-major (each (slot, head) owns a contiguous
 //! `max_seq × dh` stripe, so score/value tiles read contiguous memory) and
-//! are stored in one of three dtypes ([`KvDtype`]):
+//! are stored in one of five dtypes ([`KvDtype`]):
 //!
 //! * `F32` — full precision, zero-copy stripe borrows;
+//! * `F16` / `Bf16` — half-precision 16-bit codes (`quant::half`), 2× fewer
+//!   cache bytes at near-f32 fidelity. Unwrapped windows skip the f32
+//!   scratch entirely: the score and value tiles run on the half-operand
+//!   GEMMs (`tensor::ops::{gemm_abt_half, gemm_half}`), which decode inline
+//!   and accumulate in f32 — bit-identical to dequantize-then-f32-GEMM,
+//!   without the materialization traffic;
 //! * `Int8` — symmetric AbsMax int8 with one scale per (row, head), built on
 //!   the `quant` AbsMax machinery (`quant::quant_code`); ~4× fewer cache
 //!   bytes than f32;
@@ -36,9 +42,16 @@
 //!
 //! Quantized rows are encoded once on [`KvSlab::write`] and dequantized
 //! stripe-block-wise inside the attention kernel — decode-time cache
-//! traffic, the dominant cost of serving long contexts, drops ~4×
+//! traffic, the dominant cost of serving long contexts, drops 2–4×
 //! (SqueezeLLM, arxiv 2306.07629, shows generation is memory-bandwidth
 //! bound; the paper's input-quantization appendix supplies the formats).
+//!
+//! Long prefill spans are split into query tiles of at most
+//! `kernels::TILES.attn_tile()` rows before work partitioning (query rows
+//! are independent — per-row softmax, row-independent GEMMs — so the split
+//! is bit-exact for every tile size); the tile size is picked by the
+//! one-shot autotuner (`kernels::tune`), with the `usize::MAX` default
+//! reproducing the unsplit behavior.
 //!
 //! ## Ring addressing (logical vs physical positions)
 //!
@@ -65,8 +78,12 @@
 //! greedy-equivalence tests assert.
 
 use crate::quant::fp8::{e4m3_from_bits, e4m3_to_bits};
+use crate::quant::half::{encode_slice, HalfKind};
 use crate::quant::quant_code;
-use crate::tensor::{gemm, gemm_abt, num_threads, Matrix, PAR_THRESHOLD};
+use crate::tensor::{gemm, gemm_abt, gemm_abt_half, gemm_half, num_threads, Matrix, PAR_THRESHOLD};
+
+/// The dtype names [`KvDtype::parse`] accepts, for error messages and docs.
+pub const KV_DTYPE_NAMES: &str = "f32, fp32, f16, fp16, bf16, int8, fp8, fp8-e4m3";
 
 /// Storage dtype for cached K/V rows.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -74,6 +91,10 @@ pub enum KvDtype {
     /// f32 rows (bit-exact with the uncached forward).
     #[default]
     F32,
+    /// IEEE binary16 codes — 2× fewer bytes, near-f32 fidelity.
+    F16,
+    /// bfloat16 codes — 2× fewer bytes, f32's exponent range.
+    Bf16,
     /// Symmetric AbsMax int8 codes + one f32 scale per (row, head).
     Int8,
     /// FP8 E4M3 bytes (no scales).
@@ -81,22 +102,37 @@ pub enum KvDtype {
 }
 
 impl KvDtype {
-    /// Parse from a CLI / config string.
-    pub fn parse(s: &str) -> Option<KvDtype> {
-        Some(match s {
-            "f32" | "fp32" => KvDtype::F32,
-            "int8" => KvDtype::Int8,
-            "fp8" | "fp8-e4m3" => KvDtype::Fp8E4M3,
-            _ => return None,
-        })
+    /// Parse from a CLI / config string. Unknown names are a hard error
+    /// listing the accepted spellings ([`KV_DTYPE_NAMES`]) — a typo'd
+    /// dtype must never silently fall back to another store.
+    pub fn parse(s: &str) -> Result<KvDtype, String> {
+        match s {
+            "f32" | "fp32" => Ok(KvDtype::F32),
+            "f16" | "fp16" => Ok(KvDtype::F16),
+            "bf16" => Ok(KvDtype::Bf16),
+            "int8" => Ok(KvDtype::Int8),
+            "fp8" | "fp8-e4m3" => Ok(KvDtype::Fp8E4M3),
+            _ => Err(format!("unknown kv dtype {s:?} (valid: {KV_DTYPE_NAMES})")),
+        }
     }
 
     /// Display / JSON name.
     pub fn name(&self) -> &'static str {
         match self {
             KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Bf16 => "bf16",
             KvDtype::Int8 => "int8",
             KvDtype::Fp8E4M3 => "fp8-e4m3",
+        }
+    }
+
+    /// The half codec backing this dtype (None for f32 / byte-coded).
+    pub fn half_kind(&self) -> Option<HalfKind> {
+        match self {
+            KvDtype::F16 => Some(HalfKind::F16),
+            KvDtype::Bf16 => Some(HalfKind::Bf16),
+            _ => None,
         }
     }
 }
@@ -148,6 +184,8 @@ pub struct KvSlab {
     dh: usize,
     /// F32 storage (empty for quantized dtypes).
     f32s: Vec<f32>,
+    /// f16 / bf16 codes, same head-major layout (empty otherwise).
+    halfs: Vec<u16>,
     /// Int8 codes (as raw bytes) or FP8 E4M3 bytes, same head-major layout.
     codes: Vec<u8>,
     /// Int8 AbsMax scales, one per (slot·position, head).
@@ -159,12 +197,18 @@ impl KvSlab {
     /// `n_heads × dh` values each.
     pub fn new(dtype: KvDtype, slots: usize, max_seq: usize, n_heads: usize, dh: usize) -> Self {
         let elems = slots * max_seq * n_heads * dh;
-        let (f32s, codes, scales) = match dtype {
-            KvDtype::F32 => (vec![0.0; elems], Vec::new(), Vec::new()),
-            KvDtype::Int8 => (Vec::new(), vec![0u8; elems], vec![0.0; slots * max_seq * n_heads]),
-            KvDtype::Fp8E4M3 => (Vec::new(), vec![0u8; elems], Vec::new()),
+        let (f32s, halfs, codes, scales) = match dtype {
+            KvDtype::F32 => (vec![0.0; elems], Vec::new(), Vec::new(), Vec::new()),
+            KvDtype::F16 | KvDtype::Bf16 => (Vec::new(), vec![0u16; elems], Vec::new(), Vec::new()),
+            KvDtype::Int8 => (
+                Vec::new(),
+                Vec::new(),
+                vec![0u8; elems],
+                vec![0.0; slots * max_seq * n_heads],
+            ),
+            KvDtype::Fp8E4M3 => (Vec::new(), Vec::new(), vec![0u8; elems], Vec::new()),
         };
-        KvSlab { dtype, slots, max_seq, n_heads, dh, f32s, codes, scales }
+        KvSlab { dtype, slots, max_seq, n_heads, dh, f32s, halfs, codes, scales }
     }
 
     /// Storage dtype.
@@ -172,10 +216,15 @@ impl KvSlab {
         self.dtype
     }
 
+    /// The half codec backing this slab (None unless dtype is F16/Bf16).
+    pub fn half_kind(&self) -> Option<HalfKind> {
+        self.dtype.half_kind()
+    }
+
     /// Bytes of cache storage held (codes + scales) — the traffic model the
     /// decode bench reports.
     pub fn bytes(&self) -> usize {
-        self.f32s.len() * 4 + self.codes.len() + self.scales.len() * 4
+        self.f32s.len() * 4 + self.halfs.len() * 2 + self.codes.len() + self.scales.len() * 4
     }
 
     #[inline]
@@ -194,6 +243,10 @@ impl KvSlab {
             let base = self.stripe_base(slot, h) + pos * dh;
             match self.dtype {
                 KvDtype::F32 => self.f32s[base..base + dh].copy_from_slice(seg),
+                KvDtype::F16 | KvDtype::Bf16 => {
+                    let kind = self.dtype.half_kind().unwrap();
+                    encode_slice(kind, seg, &mut self.halfs[base..base + dh]);
+                }
                 KvDtype::Int8 => {
                     let alpha = seg.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
                     self.scales[(slot * self.max_seq + pos) * self.n_heads + h] = alpha;
@@ -240,6 +293,9 @@ impl KvSlab {
             let base = self.stripe_base(slot, h);
             match self.dtype {
                 KvDtype::F32 => self.f32s.copy_within(base + dh..base + s * dh, base),
+                KvDtype::F16 | KvDtype::Bf16 => {
+                    self.halfs.copy_within(base + dh..base + s * dh, base)
+                }
                 KvDtype::Int8 | KvDtype::Fp8E4M3 => {
                     self.codes.copy_within(base + dh..base + s * dh, base)
                 }
@@ -277,6 +333,25 @@ impl KvSlab {
         &scratch[..]
     }
 
+    /// Zero-copy borrow of an *unwrapped* window of a half-precision
+    /// stripe, as raw 16-bit codes — the fast path [`run_item`] feeds
+    /// straight into the half-operand GEMMs, skipping f32 materialization.
+    /// Returns `None` for non-half dtypes and for wrapped windows (those
+    /// fall back to the two-arc [`KvSlab::tile`] dequant path).
+    pub(crate) fn tile_half(
+        &self,
+        slot: usize,
+        head: usize,
+        start: usize,
+        len: usize,
+    ) -> Option<&[u16]> {
+        if self.half_kind().is_none() || start + len > self.max_seq {
+            return None;
+        }
+        let base = self.stripe_base(slot, head) + start * self.dh;
+        Some(&self.halfs[base..base + len * self.dh])
+    }
+
     /// Append `n` rows starting at physical row `pos0` of the (`slot`,
     /// `head`) stripe to `out`, dequantized to f32.
     fn fill_rows(&self, slot: usize, head: usize, pos0: usize, n: usize, out: &mut Vec<f32>) {
@@ -287,6 +362,10 @@ impl KvSlab {
         let base = self.stripe_base(slot, head) + pos0 * dh;
         match self.dtype {
             KvDtype::F32 => out.extend_from_slice(&self.f32s[base..base + n * dh]),
+            KvDtype::F16 | KvDtype::Bf16 => {
+                let dec = self.half_kind().unwrap().decoder();
+                out.extend(self.halfs[base..base + n * dh].iter().map(|&h| dec(h)));
+            }
             KvDtype::Int8 => {
                 for t in 0..n {
                     let alpha = self.scales[(slot * self.max_seq + pos0 + t) * self.n_heads + head];
@@ -369,6 +448,22 @@ fn fill_cols(m: &Matrix, row0: usize, len: usize, c0: usize, dh: usize, out: &mu
     }
 }
 
+/// Scale, causally mask, and row-softmax a `span × kvlen` score tile in
+/// place. The mask is expressed in logical window positions: entry
+/// `p0 + r` is query row `r` itself, later entries are its span-mates'
+/// rows.
+fn mask_softmax(sc: &mut [f32], p0: usize, kvlen: usize, scale: f32) {
+    for (r, row) in sc.chunks_exact_mut(kvlen).enumerate() {
+        for v2 in row.iter_mut() {
+            *v2 *= scale;
+        }
+        for v2 in row[p0 + r + 1..].iter_mut() {
+            *v2 = f32::NEG_INFINITY;
+        }
+        softmax_inplace(row);
+    }
+}
+
 /// Compute one (span, head) context tile (`span × dh`, zero-initialized)
 /// via blocked Q·Kᵀ → mask → softmax → P·V.
 #[allow(clippy::too_many_arguments)]
@@ -390,6 +485,24 @@ fn run_item(
     for r in 0..span {
         s.qt.extend_from_slice(&q.row(sp.q_base + r)[c0..c0 + dh]);
     }
+    // Half-width fast path: an unwrapped f16/bf16 pool window feeds its raw
+    // 16-bit codes straight into the half-operand GEMMs (inline decode,
+    // f32 accumulation in the same order) — bit-identical to the
+    // dequantize-to-scratch fallback below, at half the tile traffic.
+    if let KvSource::Pool { k, v } = kv {
+        if let (Some(kind), Some(kht), Some(vht)) = (
+            k.half_kind(),
+            k.tile_half(sp.kv, head, sp.start, kvlen),
+            v.tile_half(sp.kv, head, sp.start, kvlen),
+        ) {
+            let dec = kind.decoder();
+            s.sc.resize(span * kvlen, 0.0);
+            gemm_abt_half(&s.qt, kht, span, dh, kvlen, dec, &mut s.sc);
+            mask_softmax(&mut s.sc, sp.p0, kvlen, scale);
+            gemm_half(&s.sc, vht, span, kvlen, dh, dec, out);
+            return;
+        }
+    }
     let (kt, vt): (&[f32], &[f32]) = match kv {
         KvSource::Fresh { k, v } => {
             fill_cols(k, sp.kv, kvlen, c0, dh, &mut s.kt);
@@ -402,19 +515,9 @@ fn run_item(
         ),
     };
     // Scores: span × kvlen blocked Q·Kᵀ, then causal mask + row softmax.
-    // The mask is expressed in logical window positions: entry `p0 + r`
-    // is query row `r` itself, later entries are its span-mates' rows.
     s.sc.resize(span * kvlen, 0.0);
     gemm_abt(&s.qt, kt, span, dh, kvlen, &mut s.sc);
-    for (r, row) in s.sc.chunks_exact_mut(kvlen).enumerate() {
-        for v2 in row.iter_mut() {
-            *v2 *= scale;
-        }
-        for v2 in row[sp.p0 + r + 1..].iter_mut() {
-            *v2 = f32::NEG_INFINITY;
-        }
-        softmax_inplace(row);
-    }
+    mask_softmax(&mut s.sc, sp.p0, kvlen, scale);
     // Context tile: span × dh blocked P·V (masked positions have exact-zero
     // probability and are skipped by the kernel).
     gemm(&s.sc, vt, span, kvlen, dh, out);
@@ -444,6 +547,32 @@ pub fn attend(
     if spans.is_empty() {
         return ctx;
     }
+    // Split long prefill spans into query tiles of at most
+    // `TILES.attn_tile()` rows (more, finer work items → better balance
+    // across workers and a bounded score-tile footprint). Bit-exact:
+    // query rows are independent — sub-span row `r'` at offset `t` keeps
+    // causal prefix `p0 + t + r' = p0 + r`, per-row softmax and the
+    // row-independent GEMMs are untouched. The `usize::MAX` default
+    // never splits.
+    let tile = crate::kernels::TILES.attn_tile();
+    let split: Vec<AttnSpan>;
+    let spans: &[AttnSpan] = if spans.iter().any(|sp| sp.span > tile) {
+        split = spans
+            .iter()
+            .flat_map(|sp| {
+                (0..sp.span).step_by(tile).map(move |t| AttnSpan {
+                    q_base: sp.q_base + t,
+                    span: tile.min(sp.span - t),
+                    p0: sp.p0 + t,
+                    kv: sp.kv,
+                    start: sp.start,
+                })
+            })
+            .collect();
+        &split
+    } else {
+        spans
+    };
     // One work item per (span, head), costed in multiply-adds.
     let mut items: Vec<(usize, usize)> = Vec::with_capacity(spans.len() * n_heads);
     let mut total_cost = 0usize;
@@ -702,6 +831,145 @@ mod tests {
         assert_eq!(f32s.bytes(), 4 * fp8.bytes());
     }
 
+    /// F16/Bf16 slabs: exactly 2× fewer cache bytes than f32 (no scale
+    /// overhead) and sub-percent row fidelity.
+    #[test]
+    fn half_slab_small_error_and_2x_fewer_bytes() {
+        let mut rng = Pcg32::seeded(8);
+        let (n_heads, dh, max_seq) = (4usize, 32usize, 16usize);
+        let d = n_heads * dh;
+        let mut f32s = KvSlab::new(KvDtype::F32, 1, max_seq, n_heads, dh);
+        let mut f16s = KvSlab::new(KvDtype::F16, 1, max_seq, n_heads, dh);
+        let mut bf16s = KvSlab::new(KvDtype::Bf16, 1, max_seq, n_heads, dh);
+        for pos in 0..max_seq {
+            let row: Vec<f32> = (0..d).map(|_| rng.gauss()).collect();
+            f32s.write(0, pos, &row);
+            f16s.write(0, pos, &row);
+            bf16s.write(0, pos, &row);
+        }
+        let (mut sf, mut sh, mut sb) = (Vec::new(), Vec::new(), Vec::new());
+        for h in 0..n_heads {
+            let exact = f32s.tile(0, h, 0, max_seq, &mut sf).to_vec();
+            let f16t = f16s.tile(0, h, 0, max_seq, &mut sh);
+            let bf16t = bf16s.tile(0, h, 0, max_seq, &mut sb);
+            let norm: f32 = exact.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let errh: f32 =
+                exact.iter().zip(f16t.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+            let errb: f32 =
+                exact.iter().zip(bf16t.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+            assert!(errh / norm < 1e-3, "f16 head {h}: rel err {}", errh / norm);
+            assert!(errb / norm < 8e-3, "bf16 head {h}: rel err {}", errb / norm);
+        }
+        // Exactly half the bytes — no scale storage.
+        assert_eq!(f32s.bytes(), 2 * f16s.bytes());
+        assert_eq!(f32s.bytes(), 2 * bf16s.bytes());
+    }
+
+    /// The half GEMM fast path (raw u16 tiles) must be bit-identical to
+    /// forcing the dequantize-to-scratch fallback on the same slabs, and
+    /// within half tolerance of full-f32 attention — for unwrapped AND
+    /// wrapped (two-arc, fallback) windows.
+    #[test]
+    fn half_pool_attention_fast_path_matches_scratch_fallback() {
+        let (n_heads, dh, max_seq) = (2usize, 16usize, 24usize);
+        let d = n_heads * dh;
+        for dtype in [KvDtype::F16, KvDtype::Bf16] {
+            let mut rng = Pcg32::seeded(9);
+            let mut rng2 = Pcg32::seeded(9);
+            let depth = max_seq; // unwrapped, full window
+            let (kf, vf) = filled_slabs(KvDtype::F32, &[depth], max_seq, n_heads, dh, &mut rng);
+            let (kh, vh) = filled_slabs(dtype, &[depth], max_seq, n_heads, dh, &mut rng2);
+            let q = Matrix::randn(2, d, 1.0, &mut rng);
+            let spans = [AttnSpan { q_base: 0, span: 2, p0: depth - 2, kv: 0, start: 0 }];
+            let scale = 1.0 / (dh as f32).sqrt();
+            let exact = attend(n_heads, dh, scale, &spans, &q, &KvSource::Pool { k: &kf, v: &vf });
+            let half = attend(n_heads, dh, scale, &spans, &q, &KvSource::Pool { k: &kh, v: &vh });
+            let tol = if dtype == KvDtype::F16 { 2e-3 } else { 2e-2 };
+            assert!(half.rel_err(&exact) < tol, "{} err {}", dtype.name(), half.rel_err(&exact));
+
+            // Scratch reference: run the same math on a manually dequantized
+            // f32 copy of the half slabs — the fast path must match it
+            // bit-for-bit (inline decode preserves accumulation order).
+            let mut kd = KvSlab::new(KvDtype::F32, 1, max_seq, n_heads, dh);
+            let mut vd = KvSlab::new(KvDtype::F32, 1, max_seq, n_heads, dh);
+            let (mut sk, mut sv) = (Vec::new(), Vec::new());
+            for pos in 0..depth {
+                let mut krow = vec![0.0f32; d];
+                let mut vrow = vec![0.0f32; d];
+                for h in 0..n_heads {
+                    let kt = kh.tile(0, h, pos, 1, &mut sk);
+                    krow[h * dh..(h + 1) * dh].copy_from_slice(kt);
+                    let vt = vh.tile(0, h, pos, 1, &mut sv);
+                    vrow[h * dh..(h + 1) * dh].copy_from_slice(vt);
+                }
+                kd.write(0, pos, &krow);
+                vd.write(0, pos, &vrow);
+            }
+            let deq = attend(n_heads, dh, scale, &spans, &q, &KvSource::Pool { k: &kd, v: &vd });
+            assert_eq!(half, deq, "{} fast path != scratch path", dtype.name());
+
+            // Wrapped window: write past max_seq so the ring wraps; the
+            // fast path declines (tile_half → None) and the two-arc decode
+            // fallback must agree with a straight slab of the same window.
+            let mut rng3 = Pcg32::seeded(10);
+            let depth2 = max_seq + 5;
+            let rows: Vec<Vec<f32>> =
+                (0..depth2).map(|_| (0..d).map(|_| rng3.gauss()).collect()).collect();
+            let mut ring = KvSlab::new(dtype, 1, max_seq, n_heads, dh);
+            let mut straight = KvSlab::new(dtype, 1, max_seq, n_heads, dh);
+            for (logical, row) in rows.iter().enumerate() {
+                ring.write_logical(0, logical, row, KvLayout::Ring);
+            }
+            for (pos, row) in rows[depth2 - max_seq..].iter().enumerate() {
+                straight.write(0, pos, row);
+            }
+            let start = depth2 % max_seq;
+            assert!(ring.tile_half(0, 0, start, max_seq).is_none(), "wrapped must decline");
+            let sp_ring = [AttnSpan { q_base: 0, span: 1, p0: max_seq - 1, kv: 0, start }];
+            let sp_str = [AttnSpan { q_base: 0, span: 1, p0: max_seq - 1, kv: 0, start: 0 }];
+            let q1 = Matrix::randn(1, d, 1.0, &mut rng3);
+            let a_ring =
+                attend(n_heads, dh, scale, &sp_ring, &q1, &KvSource::Pool { k: &ring, v: &ring });
+            let a_str = attend(
+                n_heads,
+                dh,
+                scale,
+                &sp_str,
+                &q1,
+                &KvSource::Pool { k: &straight, v: &straight },
+            );
+            assert_eq!(a_ring, a_str, "{} wrapped window", dtype.name());
+        }
+    }
+
+    /// Splitting spans into query tiles must be bit-exact for every tile
+    /// size, on both fresh and pool sources.
+    #[test]
+    fn attn_tile_split_is_bit_exact() {
+        use crate::kernels::{DEFAULT_ATTN_TILE, DEFAULT_GT, DEFAULT_KT, TILES};
+        let mut rng = Pcg32::seeded(11);
+        let (n_heads, dh, seq, batch) = (2usize, 8usize, 13usize, 2usize);
+        let d = n_heads * dh;
+        let n = batch * seq;
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let spans: Vec<AttnSpan> = (0..batch)
+            .map(|b| AttnSpan { q_base: b * seq, span: seq, p0: 0, kv: b * seq, start: 0 })
+            .collect();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let src = KvSource::Fresh { k: &k, v: &v };
+        TILES.set(DEFAULT_KT, DEFAULT_GT, DEFAULT_ATTN_TILE);
+        let want = attend(n_heads, dh, scale, &spans, &q, &src);
+        let reference = attend_reference(n_heads, dh, scale, &spans, &q, &src);
+        assert_eq!(want, reference);
+        for tile in [1usize, 2, 4, 5, 13, 64] {
+            TILES.set(DEFAULT_KT, DEFAULT_GT, tile);
+            assert_eq!(attend(n_heads, dh, scale, &spans, &q, &src), want, "tile {tile}");
+        }
+        TILES.reset();
+    }
+
     #[test]
     fn quantized_pool_attention_close_to_f32() {
         let mut rng = Pcg32::seeded(5);
@@ -721,11 +989,16 @@ mod tests {
 
     #[test]
     fn dtype_parsing() {
-        assert_eq!(KvDtype::parse("f32"), Some(KvDtype::F32));
-        assert_eq!(KvDtype::parse("int8"), Some(KvDtype::Int8));
-        assert_eq!(KvDtype::parse("fp8"), Some(KvDtype::Fp8E4M3));
-        assert_eq!(KvDtype::parse("bf16"), None);
+        assert_eq!(KvDtype::parse("f32"), Ok(KvDtype::F32));
+        assert_eq!(KvDtype::parse("f16"), Ok(KvDtype::F16));
+        assert_eq!(KvDtype::parse("fp16"), Ok(KvDtype::F16));
+        assert_eq!(KvDtype::parse("bf16"), Ok(KvDtype::Bf16));
+        assert_eq!(KvDtype::parse("int8"), Ok(KvDtype::Int8));
+        assert_eq!(KvDtype::parse("fp8"), Ok(KvDtype::Fp8E4M3));
         assert_eq!(KvDtype::default(), KvDtype::F32);
+        // Unknown names are a hard error that lists the valid spellings.
+        let err = KvDtype::parse("float8").unwrap_err();
+        assert!(err.contains("float8") && err.contains(KV_DTYPE_NAMES), "{err}");
     }
 
     /// Wrap-aware addressing: writing `depth > max_seq` logical rows
@@ -736,7 +1009,9 @@ mod tests {
     fn ring_tile_matches_logical_rewrite_all_dtypes() {
         let (n_heads, dh, max_seq) = (3usize, 8usize, 16usize);
         let d = n_heads * dh;
-        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in
+            [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::Int8, KvDtype::Fp8E4M3]
+        {
             let mut rng = Pcg32::seeded(7);
             let depth = 2 * max_seq + 5; // wraps twice, lands mid-stripe
             let rows: Vec<Vec<f32>> =

@@ -25,8 +25,10 @@
 //! in [`super::attention`] (`attend`): per-(sequence, head) Q·Kᵀ / P·V
 //! tiles over contiguous cache stripes, threaded across spans×heads. The
 //! K/V cache itself ([`KvCachePool`]) has a pluggable storage dtype
-//! ([`KvDtype`]): f32 (bit-exact), or int8 / FP8-E4M3 quantized rows at
-//! ~4× fewer cache bytes (quantized on write, dequantized block-wise
+//! ([`KvDtype`]): f32 (bit-exact), f16 / bf16 half-precision rows at 2×
+//! fewer cache bytes (near-f32 fidelity; attention reads the 16-bit codes
+//! directly through its half fast path), or int8 / FP8-E4M3 quantized rows
+//! at ~4× fewer cache bytes (quantized on write, dequantized block-wise
 //! inside the attention kernel). Each slot is a **ring buffer** over
 //! `max_seq` physical rows with a logical per-slot base: generation past
 //! the context length overwrites the oldest retained position and rebases
@@ -1132,10 +1134,11 @@ mod tests {
         assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
     }
 
-    /// Cached decode with a quantized KV store must track the f32 full
-    /// forward within a small logit tolerance (the quantization noise), at
-    /// ~4× fewer cache bytes.
-    fn assert_quantized_kv_close(dtype: KvDtype, tol: f32) {
+    /// Cached decode with a quantized (or half-precision) KV store must
+    /// track the f32 full forward within a small logit tolerance (the
+    /// rounding noise), at `min_ratio`× fewer cache bytes (~4 for the
+    /// 8-bit dtypes, ~2 for f16/bf16).
+    fn assert_quantized_kv_close(dtype: KvDtype, tol: f32, min_ratio: f64) {
         let (cfg, w, batch) = setup();
         let full = forward(&cfg, &w, &batch, None, None);
         let mut cache = KvCache::with_dtype(&cfg, batch.batch, dtype);
@@ -1163,11 +1166,11 @@ mod tests {
                 assert!(err < tol, "{} decode b{b} s{s}: err {err}", dtype.name());
             }
         }
-        // The quantized pool really holds ~4× fewer bytes than f32.
+        // The compressed pool really holds `min_ratio`× fewer bytes.
         let f32_bytes = KvCache::new(&cfg, batch.batch).pool().cache_bytes();
         let q_bytes = cache.pool().cache_bytes();
         assert!(
-            f32_bytes as f64 / q_bytes as f64 > 3.5,
+            f32_bytes as f64 / q_bytes as f64 > min_ratio,
             "{}: {f32_bytes} / {q_bytes}",
             dtype.name()
         );
@@ -1175,12 +1178,25 @@ mod tests {
 
     #[test]
     fn int8_kv_decode_tracks_full_forward() {
-        assert_quantized_kv_close(KvDtype::Int8, 0.1);
+        assert_quantized_kv_close(KvDtype::Int8, 0.1, 3.5);
     }
 
     #[test]
     fn fp8_kv_decode_tracks_full_forward() {
-        assert_quantized_kv_close(KvDtype::Fp8E4M3, 0.3);
+        assert_quantized_kv_close(KvDtype::Fp8E4M3, 0.3, 3.5);
+    }
+
+    /// f16 rows carry 11 significand bits — an order of magnitude tighter
+    /// than int8's per-row grid — so the tolerance is 5× stricter, at
+    /// exactly 2× fewer cache bytes (no scale sidecar).
+    #[test]
+    fn f16_kv_decode_tracks_full_forward() {
+        assert_quantized_kv_close(KvDtype::F16, 0.02, 1.99);
+    }
+
+    #[test]
+    fn bf16_kv_decode_tracks_full_forward() {
+        assert_quantized_kv_close(KvDtype::Bf16, 0.05, 1.99);
     }
 
     /// A small config whose ring wraps cheaply in tests.
@@ -1207,7 +1223,9 @@ mod tests {
         let cfg = ring_cfg();
         let mut rng = Pcg32::seeded(21);
         let w = init(&cfg, &mut rng);
-        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in
+            [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::Int8, KvDtype::Fp8E4M3]
+        {
             let mut ring = KvCache::with_layout(&cfg, 1, dtype, KvLayout::Ring);
             let mut shift = KvCache::with_layout(&cfg, 1, dtype, KvLayout::Shift);
             // Prefill 3 tokens, then decode to 2.5× the context length.
@@ -1289,7 +1307,9 @@ mod tests {
         let mut rng = Pcg32::seeded(32);
         let w = init(&cfg, &mut rng);
         let prompt: Vec<u32> = (0..4).map(|_| rng.below(cfg.vocab as u32)).collect();
-        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in
+            [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::Int8, KvDtype::Fp8E4M3]
+        {
             let mut spec = KvCachePool::with_dtype(&cfg, 1, dtype);
             let mut ctrl = KvCachePool::with_dtype(&cfg, 1, dtype);
             let s = spec.alloc().unwrap();

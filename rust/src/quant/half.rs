@@ -1,0 +1,334 @@
+//! Half-precision (f16 / bf16) storage codecs.
+//!
+//! Two 16-bit formats, both decoded exactly back to f32 (every half value
+//! is representable in f32, so decode is lossless and encode∘decode is
+//! idempotent):
+//!
+//! * **f16** — IEEE 754 binary16 (1 sign, 5 exponent, 10 mantissa bits):
+//!   ~3 decimal digits of precision over ±65504, with gradual underflow
+//!   through subnormals below 2⁻¹⁴. The near-f32-fidelity choice for KV
+//!   cache rows and adapter weights, whose magnitudes are O(1).
+//! * **bf16** — bfloat16 (1 sign, 8 exponent, 7 mantissa bits): f32's full
+//!   exponent range at ~2 decimal digits. The drop-in-range choice when
+//!   values may be large (it never saturates where f32 doesn't).
+//!
+//! Encoding rounds to nearest-even, like the hardware conversions. Out of
+//! deliberate parallel with the FP8 codec ([`crate::quant::fp8`]), non-finite
+//! and overflowing inputs **saturate to the largest finite value** instead
+//! of producing ±∞/NaN — a cache row must never inject an infinity into an
+//! attention score.
+//!
+//! These bit codecs back the half-width KV cache store
+//! (`model::attention::KvDtype::{F16, Bf16}`) and the half-storage dense /
+//! adapter kernels (`kernels::dense`, `kernels::lowrank`), whose GEMMs read
+//! `u16` operands through [`f16_from_bits`] / [`bf16_from_bits`] and
+//! accumulate in f32 (`tensor::ops::{gemm_half, gemm_abt_half}`).
+
+/// Largest finite f16 value ((2 − 2⁻¹⁰) × 2¹⁵ = 65504).
+pub const F16_MAX: f32 = 65504.0;
+/// Largest finite bf16 value ((2 − 2⁻⁷) × 2¹²⁷ ≈ 3.39 × 10³⁸).
+pub const BF16_MAX: f32 = f32::from_bits(0x7F7F_0000);
+
+/// Encode an f32 into its IEEE binary16 bit pattern (round to nearest,
+/// ties to even). Values that would round past ±[`F16_MAX`] — including
+/// ±∞ and NaN — saturate to the largest finite half of the same sign.
+pub fn f16_to_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let max = sign | 0x7BFF; // largest finite magnitude
+    if !x.is_finite() {
+        return max;
+    }
+    let exp = ((b >> 23) & 0xFF) as i32 - 127;
+    let mant = b & 0x007F_FFFF;
+    if exp >= 16 {
+        return max; // ≥ 2¹⁶ > F16_MAX even before rounding
+    }
+    if exp >= -14 {
+        // Normal half: keep 10 mantissa bits, round-to-nearest-even on the
+        // 13 dropped bits.
+        let keep = mant >> 13;
+        let rest = mant & 0x1FFF;
+        let mut h = (((exp + 15) as u32) << 10) | keep;
+        if rest > 0x1000 || (rest == 0x1000 && h & 1 == 1) {
+            h += 1;
+        }
+        if h >= 0x7C00 {
+            return max; // rounded up into the infinity encoding
+        }
+        return sign | h as u16;
+    }
+    if exp < -25 {
+        return sign; // below half the smallest subnormal → ±0
+    }
+    // Subnormal half: value = m · 2⁻²⁴ with m in 0..1024. Shift the f32
+    // significand (with its implicit bit restored) into place and round
+    // ties-to-even on the dropped bits.
+    let sig = mant | 0x0080_0000;
+    let sh = (13 + (-14 - exp)) as u32; // 14..=24 for exp in -25..=-15
+    let keep = sig >> sh;
+    let rest = sig & ((1u32 << sh) - 1);
+    let half = 1u32 << (sh - 1);
+    let mut h = keep;
+    if rest > half || (rest == half && h & 1 == 1) {
+        h += 1;
+    }
+    sign | h as u16
+}
+
+/// Decode an IEEE binary16 bit pattern to f32 (exact). Exponent 31
+/// patterns — never produced by [`f16_to_bits`] — decode to ±[`F16_MAX`]
+/// for the same never-inject-∞ policy the encoder follows.
+pub fn f16_from_bits(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((h >> 10) & 0x1F) as i32;
+    let m = (h & 0x3FF) as f32;
+    match e {
+        0 => sign * m * (-24.0f32).exp2(),
+        31 => sign * F16_MAX,
+        _ => sign * (1.0 + m / 1024.0) * ((e - 15) as f32).exp2(),
+    }
+}
+
+/// Encode an f32 into its bfloat16 bit pattern (round to nearest, ties to
+/// even on the 16 dropped mantissa bits). ±∞ / NaN and values that round
+/// into the infinity encoding saturate to ±[`BF16_MAX`].
+pub fn bf16_to_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = (b >> 16) & 0x8000;
+    if !x.is_finite() {
+        return (sign | 0x7F7F) as u16;
+    }
+    let round = ((b >> 16) & 1) + 0x7FFF;
+    let r = (b.wrapping_add(round)) >> 16;
+    if (r & 0x7FFF) >= 0x7F80 {
+        return (sign | 0x7F7F) as u16; // rounded up into the infinity encoding
+    }
+    r as u16
+}
+
+/// Decode a bfloat16 bit pattern to f32 (exact: bf16 is f32's top half).
+/// Non-finite patterns — never produced by [`bf16_to_bits`] — decode to
+/// ±[`BF16_MAX`].
+pub fn bf16_from_bits(h: u16) -> f32 {
+    if (h & 0x7FFF) >= 0x7F80 {
+        return if h & 0x8000 != 0 { -BF16_MAX } else { BF16_MAX };
+    }
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Which half format a half-storage kernel or slab uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HalfKind {
+    /// IEEE binary16 (1-5-10).
+    F16,
+    /// bfloat16 (1-8-7).
+    Bf16,
+}
+
+impl HalfKind {
+    /// Display / JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            HalfKind::F16 => "f16",
+            HalfKind::Bf16 => "bf16",
+        }
+    }
+
+    /// Scalar encoder for this format.
+    #[inline]
+    pub fn encode(&self, x: f32) -> u16 {
+        match self {
+            HalfKind::F16 => f16_to_bits(x),
+            HalfKind::Bf16 => bf16_to_bits(x),
+        }
+    }
+
+    /// Scalar decoder for this format, as a plain `fn` pointer — the shape
+    /// the generic half GEMMs (`tensor::ops::gemm_half`) take, so the
+    /// format dispatch happens once per call, not once per element.
+    #[inline]
+    pub fn decoder(&self) -> fn(u16) -> f32 {
+        match self {
+            HalfKind::F16 => f16_from_bits,
+            HalfKind::Bf16 => bf16_from_bits,
+        }
+    }
+}
+
+/// Encode a slice (`dst[i] = kind.encode(src[i])`; lengths must match).
+pub fn encode_slice(kind: HalfKind, src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len(), "half encode length mismatch");
+    match kind {
+        HalfKind::F16 => {
+            for (d, &x) in dst.iter_mut().zip(src) {
+                *d = f16_to_bits(x);
+            }
+        }
+        HalfKind::Bf16 => {
+            for (d, &x) in dst.iter_mut().zip(src) {
+                *d = bf16_to_bits(x);
+            }
+        }
+    }
+}
+
+/// Decode a slice (`dst[i] = kind.decode(src[i])`; lengths must match).
+pub fn decode_slice(kind: HalfKind, src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "half decode length mismatch");
+    let dec = kind.decoder();
+    for (d, &h) in dst.iter_mut().zip(src) {
+        *d = dec(h);
+    }
+}
+
+/// Encode a whole f32 slice into a fresh bit vector.
+pub fn encode_vec(kind: HalfKind, src: &[f32]) -> Vec<u16> {
+    let mut out = vec![0u16; src.len()];
+    encode_slice(kind, src, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn roundtrip_f16(x: f32) -> f32 {
+        f16_from_bits(f16_to_bits(x))
+    }
+
+    fn roundtrip_bf16(x: f32) -> f32 {
+        bf16_from_bits(bf16_to_bits(x))
+    }
+
+    #[test]
+    fn f16_exact_values() {
+        // Powers of two, small integers and 10-bit dyadics are exact.
+        for &v in &[0.0f32, 1.0, -1.0, 2.0, 0.5, 1.5, 1.25, -4.0, 65504.0, 0.099975586] {
+            assert_eq!(roundtrip_f16(v), v, "v={v}");
+        }
+        // Known bit patterns.
+        assert_eq!(f16_to_bits(1.0), 0x3C00);
+        assert_eq!(f16_to_bits(-2.0), 0xC000);
+        assert_eq!(f16_to_bits(65504.0), 0x7BFF);
+        assert_eq!(f16_to_bits(0.0), 0x0000);
+    }
+
+    #[test]
+    fn f16_relative_error_half_ulp() {
+        // Round-to-nearest ⇒ rel err ≤ 2⁻¹¹ for normal halfs.
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..4000 {
+            let v = rng.range_f32(-1000.0, 1000.0);
+            let r = roundtrip_f16(v);
+            if v.abs() > 1e-3 {
+                assert!(((r - v) / v).abs() <= 2.0f32.powi(-11) + 1e-7, "v={v} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_subnormals_and_underflow() {
+        let min_sub = (-24.0f32).exp2(); // 2⁻²⁴, the smallest subnormal
+        assert_eq!(roundtrip_f16(min_sub), min_sub);
+        assert_eq!(roundtrip_f16(3.0 * min_sub), 3.0 * min_sub);
+        let min_norm = (-14.0f32).exp2();
+        assert_eq!(roundtrip_f16(min_norm), min_norm);
+        // Below half the smallest subnormal → ±0; exactly half → even (0).
+        assert_eq!(roundtrip_f16(min_sub / 4.0), 0.0);
+        assert_eq!(roundtrip_f16(min_sub / 2.0), 0.0);
+        assert_eq!(roundtrip_f16(-min_sub / 4.0), -0.0);
+        // Just above half rounds up to the smallest subnormal.
+        assert_eq!(roundtrip_f16(min_sub * 0.6), min_sub);
+    }
+
+    #[test]
+    fn f16_saturates_never_inf() {
+        assert_eq!(roundtrip_f16(1e9), F16_MAX);
+        assert_eq!(roundtrip_f16(-1e9), -F16_MAX);
+        assert_eq!(roundtrip_f16(f32::INFINITY), F16_MAX);
+        assert_eq!(roundtrip_f16(f32::NEG_INFINITY), -F16_MAX);
+        // 65520 would round to +∞ under IEEE; the codec clamps instead.
+        assert_eq!(roundtrip_f16(65520.0), F16_MAX);
+        assert!(roundtrip_f16(f32::NAN).is_finite());
+    }
+
+    #[test]
+    fn bf16_exact_values_and_error() {
+        for &v in &[0.0f32, 1.0, -1.0, 2.0, 0.5, 1.5, -4.0, 3.0e38] {
+            let r = roundtrip_bf16(v);
+            assert!(((r - v) / v.abs().max(1e-30)).abs() <= 2.0f32.powi(-8), "v={v} r={r}");
+        }
+        assert_eq!(bf16_to_bits(1.0), 0x3F80);
+        assert_eq!(roundtrip_bf16(1.0), 1.0);
+        // bf16 keeps f32's exponent range: huge values survive.
+        assert_eq!(roundtrip_bf16(1e38), bf16_from_bits(bf16_to_bits(1e38)));
+        let mut rng = Pcg32::seeded(2);
+        for _ in 0..4000 {
+            let v = rng.range_f32(-1e6, 1e6);
+            let r = roundtrip_bf16(v);
+            if v.abs() > 1e-3 {
+                assert!(((r - v) / v).abs() <= 2.0f32.powi(-8) + 1e-7, "v={v} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_saturates_never_inf() {
+        assert_eq!(roundtrip_bf16(f32::INFINITY), BF16_MAX);
+        assert_eq!(roundtrip_bf16(f32::NEG_INFINITY), -BF16_MAX);
+        assert_eq!(roundtrip_bf16(f32::MAX), BF16_MAX); // rounds up → clamped
+        assert!(roundtrip_bf16(f32::NAN).is_finite());
+    }
+
+    #[test]
+    fn round_trip_is_idempotent_both_formats() {
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..2000 {
+            let v = rng.range_f32(-500.0, 500.0);
+            let f = roundtrip_f16(v);
+            assert_eq!(roundtrip_f16(f), f, "f16 v={v}");
+            let b = roundtrip_bf16(v);
+            assert_eq!(roundtrip_bf16(b), b, "bf16 v={v}");
+        }
+    }
+
+    #[test]
+    fn rounding_is_monotone() {
+        // x ≤ y ⇒ round(x) ≤ round(y): sort random draws and check the
+        // decoded sequence never decreases (the property the KV store
+        // relies on — quantization must not reorder score magnitudes).
+        let mut rng = Pcg32::seeded(4);
+        let mut xs: Vec<f32> = (0..3000).map(|_| rng.range_f32(-2000.0, 2000.0)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in xs.windows(2) {
+            assert!(roundtrip_f16(w[0]) <= roundtrip_f16(w[1]), "f16 {} {}", w[0], w[1]);
+            assert!(roundtrip_bf16(w[0]) <= roundtrip_bf16(w[1]), "bf16 {} {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn slice_codecs_match_scalar() {
+        let mut rng = Pcg32::seeded(5);
+        let src: Vec<f32> = (0..257).map(|_| rng.gauss()).collect();
+        for kind in [HalfKind::F16, HalfKind::Bf16] {
+            let bits = encode_vec(kind, &src);
+            for (b, &x) in bits.iter().zip(&src) {
+                assert_eq!(*b, kind.encode(x));
+            }
+            let mut back = vec![0.0f32; src.len()];
+            decode_slice(kind, &bits, &mut back);
+            let dec = kind.decoder();
+            for (got, b) in back.iter().zip(&bits) {
+                assert_eq!(*got, dec(*b));
+            }
+        }
+    }
+
+    #[test]
+    fn kind_names() {
+        assert_eq!(HalfKind::F16.name(), "f16");
+        assert_eq!(HalfKind::Bf16.name(), "bf16");
+    }
+}

@@ -19,10 +19,15 @@
 //!   the E4M3 byte codec (`e4m3_to_bits`/`e4m3_from_bits`) also backs the
 //!   quantized KV cache store (`model::attention::KvDtype::Fp8E4M3`).
 //! * [`pack`] — int4/int2 bit-packing for the runtime kernels.
+//! * [`half`] — f16/bf16 bit codecs (round-to-nearest-even, saturating)
+//!   backing the half-width KV cache store
+//!   (`model::attention::KvDtype::{F16, Bf16}`) and the half-storage
+//!   dense/adapter kernels.
 
 pub mod absmax;
 pub mod fp8;
 pub mod group_absmax;
+pub mod half;
 pub mod optq;
 pub mod pack;
 pub mod slim_quant;

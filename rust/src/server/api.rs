@@ -1,13 +1,18 @@
 //! TCP front-end: newline-delimited JSON over std::net.
 //!
 //! Request:  `{"model": "...", "prompt": [ints], "max_new": n, "stop": t?,
-//!           "priority": p?, "client_id": c?}`
+//!           "priority": p?, "client_id": c?, "kv_dtype": "..."?}`
 //!           (`stop` is optional: generation retires early once token `t`
 //!           is produced, included in the output. `priority` — higher is
 //!           admitted sooner — and `client_id` feed the route's admission
 //!           policy when it is fair-share (`SchedPolicy::admit`); both
 //!           default to 0 and never change the generated tokens, only who
-//!           waits when cache slots are scarce.)
+//!           waits when cache slots are scarce. `kv_dtype` is an optional
+//!           assertion on the route's serving KV cache dtype — one of
+//!           "f32", "f16"/"fp16", "bf16", "int8", "fp8"/"fp8-e4m3"; an
+//!           unknown name errors listing the valid dtypes, and a known
+//!           name that differs from what the route was registered with
+//!           errors naming the route's actual dtype.)
 //! Response: `{"ok": true, "tokens": [ints], "ttft_ms": f?, "drafted": n?,
 //!           "accepted": n?, "accept_rate": f?}` or
 //!           `{"ok": false, "error": "..."}` — `ttft_ms` is the
@@ -36,11 +41,13 @@
 //!           JSON (`traceEvents` with `ph`/`ts`/`dur`/`pid`/`tid`), ready
 //!           to save and load in Perfetto / `chrome://tracing`;
 //!           `{"cmd": "models"}` → `{"ok": true, "models": [{"name": "...",
-//!           "kv_dtype": "f32" | "int8" | "fp8-e4m3", "spec": bool,
+//!           "kv_dtype": "f32" | "f16" | "bf16" | "int8" | "fp8-e4m3",
+//!           "spec": bool,
 //!           "draft_k": n?}, ...]}` — `kv_dtype` is the serving KV cache
 //!           storage dtype the route was registered with
-//!           (`model::KvDtype`; quantized dtypes hold ~4× fewer cache
-//!           bytes per in-flight sequence); `spec` marks speculative
+//!           (`model::KvDtype`; the 8-bit dtypes hold ~4× fewer cache
+//!           bytes per in-flight sequence, f16/bf16 2×); `spec` marks
+//!           speculative
 //!           routes and `draft_k` (present only when `spec` is true) is
 //!           their configured draft depth.
 //!
@@ -48,6 +55,7 @@
 //! accept loop), with the router's batcher coalescing across connections.
 
 use super::router::{RequestOpts, Router};
+use crate::model::KvDtype;
 use crate::util::json::{n, obj, s, Json};
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -146,6 +154,24 @@ fn process(router: &Router, line: &str) -> Result<Json> {
         .get("model")
         .and_then(Json::as_str)
         .ok_or_else(|| anyhow!("missing model"))?;
+    // Optional KV-dtype assertion: an unknown name errors with the valid
+    // list; a known name must match what the route was registered with.
+    if let Some(want) = req.get("kv_dtype").and_then(Json::as_str) {
+        let want = KvDtype::parse(want).map_err(|e| anyhow!("{e}"))?;
+        let have = router
+            .model_infos()
+            .into_iter()
+            .find(|&(name, _)| name == model)
+            .map(|(_, dt)| dt)
+            .ok_or_else(|| anyhow!("unknown model {model}"))?;
+        if want != have {
+            return Err(anyhow!(
+                "model {model} serves kv_dtype {}, not {}",
+                have.name(),
+                want.name()
+            ));
+        }
+    }
     let prompt: Vec<u32> = req
         .get("prompt")
         .and_then(Json::as_arr)
@@ -255,6 +281,31 @@ mod tests {
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
         let resp = handle_line(&r, r#"{"model":"nope","prompt":[1]}"#);
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    /// The optional `kv_dtype` request field: a matching name passes, an
+    /// unknown name errors listing every valid dtype, and a valid-but-
+    /// mismatched name errors naming the route's actual dtype.
+    #[test]
+    fn kv_dtype_field_validated_against_route() {
+        let r = router(); // registered with the default f32 KV store
+        let ok = handle_line(
+            &r,
+            r#"{"model":"sim-125m","prompt":[5,6],"max_new":2,"kv_dtype":"f32"}"#,
+        );
+        assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+        let bad = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"kv_dtype":"float8"}"#);
+        assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+        let msg = bad.get("error").and_then(Json::as_str).unwrap();
+        assert!(
+            msg.contains(crate::model::attention::KV_DTYPE_NAMES),
+            "error must list valid dtypes: {msg}"
+        );
+        let mismatch =
+            handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"kv_dtype":"bf16"}"#);
+        assert_eq!(mismatch.get("ok").and_then(Json::as_bool), Some(false));
+        let msg = mismatch.get("error").and_then(Json::as_str).unwrap();
+        assert!(msg.contains("serves kv_dtype f32"), "{msg}");
     }
 
     #[test]

@@ -30,7 +30,15 @@
 //! kernel speedups reach end-to-end token throughput (measured by
 //! `benches/decode.rs` and `benches/serve.rs`). The KV cache storage dtype
 //! is pluggable too ([`Engine::with_kv_dtype`]): int8 / fp8 cached K/V cuts
-//! decode cache bytes ~4× on top of the weight compression.
+//! decode cache bytes ~4×, and f16 / bf16 cuts them 2× at near-f32
+//! fidelity (attention then runs the half fast path — scores and context
+//! GEMMs decode the 16-bit codes inline, no f32 scratch slab).
+//!
+//! Constructing an engine also triggers the one-shot kernel autotuner
+//! ([`crate::kernels::tune::ensure_tuned`]) for the model's `d_model`:
+//! the first engine built in a process times a small grid of kernel tile
+//! shapes and installs the winner in [`crate::kernels::TILES`]
+//! (`SLIM_TUNE=off` skips, `SLIM_TUNE_CACHE=<path>` persists the pick).
 
 use crate::model::{
     forward_cached, forward_slots, greedy_pick, CompressedWeights, KvCache, KvCachePool, KvDtype,
@@ -260,6 +268,7 @@ impl Engine {
         weights: Arc<Weights>,
         overrides: Option<Arc<Overrides>>,
     ) -> Self {
+        crate::kernels::tune::ensure_tuned(cfg.d_model);
         Engine {
             name: name.to_string(),
             cfg,
@@ -279,6 +288,7 @@ impl Engine {
         weights: Arc<Weights>,
         kernels: Arc<CompressedWeights>,
     ) -> Self {
+        crate::kernels::tune::ensure_tuned(cfg.d_model);
         Engine {
             name: name.to_string(),
             cfg,
@@ -768,6 +778,56 @@ mod tests {
         let s_8 = e_fp8.score(&prompt);
         assert!(s_8.rel_err(&s_f) < 0.3, "fp8 score err {}", s_8.rel_err(&s_f));
         let out = e_fp8.generate_batch(&[GenRequest::new(1, prompt, 4)]);
+        assert_eq!(out[0].tokens.len(), 4);
+        assert!(out[0].tokens.iter().all(|&t| (t as usize) < 512));
+    }
+
+    /// f16 KV is finer than int8, so it must clear the int8 bar: logit
+    /// tolerance within the int8 regime and any greedy divergence only
+    /// across a near-tie in the f32 logits.
+    #[test]
+    fn f16_kv_greedy_matches_f32_on_compressed_model() {
+        let (e_f32, e_f16) = compressed_engine_pair(KvDtype::F16);
+        assert_eq!(e_f16.kv_dtype(), KvDtype::F16);
+        let prompt = vec![5u32, 6, 7, 8];
+        let s_f = e_f32.score(&prompt);
+        let s_h = e_f16.score(&prompt);
+        assert!(s_h.rel_err(&s_f) < 0.1, "f16 score err {}", s_h.rel_err(&s_f));
+        let max_new = 8usize;
+        let req = |id| GenRequest::new(id, prompt.clone(), max_new);
+        let out_f = e_f32.generate_batch(&[req(1)]).remove(0).tokens;
+        let out_h = e_f16.generate_batch(&[req(2)]).remove(0).tokens;
+        if out_h != out_f {
+            let div = out_f.iter().zip(out_h.iter()).position(|(a, b)| a != b).unwrap();
+            let mut prefix = prompt.clone();
+            prefix.extend_from_slice(&out_f[..div]);
+            let lg = e_f32.score(&prefix);
+            let row = lg.row(lg.rows() - 1);
+            let mut sorted = row.to_vec();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let gap = sorted[0] - sorted[1];
+            let mean = row.iter().sum::<f32>() / row.len() as f32;
+            let spread = (row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+                / row.len() as f32)
+                .sqrt();
+            assert!(
+                gap < 0.05 * spread,
+                "f16 KV diverged at step {div} despite a clear greedy margin \
+                 (top-2 gap {gap}, logit spread {spread})"
+            );
+        }
+    }
+
+    /// bf16 KV: coarser mantissa than f16 but still well inside the int8
+    /// tolerance regime on the scoring path.
+    #[test]
+    fn bf16_kv_decode_close_on_compressed_model() {
+        let (e_f32, e_bf) = compressed_engine_pair(KvDtype::Bf16);
+        let prompt = vec![9u32, 10, 11];
+        let s_f = e_f32.score(&prompt);
+        let s_b = e_bf.score(&prompt);
+        assert!(s_b.rel_err(&s_f) < 0.1, "bf16 score err {}", s_b.rel_err(&s_f));
+        let out = e_bf.generate_batch(&[GenRequest::new(1, prompt, 4)]);
         assert_eq!(out[0].tokens.len(), 4);
         assert!(out[0].tokens.iter().all(|&t| (t as usize) < 512));
     }

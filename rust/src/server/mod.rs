@@ -35,8 +35,13 @@
 //!   The serving KV cache pool's storage dtype follows the engine's
 //!   (`Engine::with_kv_dtype`) unless overridden per route via
 //!   `SchedPolicy::kv_dtype` (a `model::KvDtype`): int8 / fp8 cached K/V
-//!   holds ~4× fewer bytes per in-flight sequence while greedy output
-//!   stays batching-invariant.
+//!   holds ~4× fewer bytes per in-flight sequence, and f16 / bf16 holds
+//!   2× fewer at near-f32 fidelity (attention reads the 16-bit rows
+//!   directly through its half fast path — no f32 decode slab), while
+//!   greedy output stays batching-invariant either way. Engine
+//!   construction also runs the one-shot kernel autotuner
+//!   (`kernels::tune`), which picks the packed-kernel and attention tile
+//!   shapes for this machine once per process.
 //! * [`spec`] — self-speculative decoding: [`spec::SpecEngine`] pairs the
 //!   SLiM-compressed engine (draft) with the dense engine (target) over
 //!   twin lockstep KV pools. Each spec tick greedily drafts up to
@@ -60,8 +65,8 @@
 //!   worker per engine in either serving mode; `submit_with` carries the
 //!   full `RequestOpts` (stop, priority, client id).
 //! * [`api`] — newline-delimited-JSON TCP protocol + a blocking client
-//!   (`priority`/`client_id` request fields; `ttft_ms` plus speculative
-//!   `drafted`/`accepted`/`accept_rate` in responses).
+//!   (`priority`/`client_id`/`kv_dtype` request fields; `ttft_ms` plus
+//!   speculative `drafted`/`accepted`/`accept_rate` in responses).
 //! * [`metrics`] — per-route counters, queue depth, and
 //!   queue-wait/TTFT/decode-latency percentiles the benches read.
 //! * [`obs`] — the observability substrate the above emit into.

@@ -662,18 +662,18 @@ mod tests {
         }
     }
 
-    /// Solo-equivalence property with a QUANTIZED serving KV cache: the
-    /// scheduler pool and the solo reference both store int8/fp8 K/V, and
-    /// per-row quantization keeps greedy decode batching-invariant, so any
-    /// arrival order still reproduces each request's solo tokens exactly —
-    /// chunked prefill included (quantize-on-write is per row, so chunking
-    /// cannot perturb the stored codes).
+    /// Solo-equivalence property with a compressed serving KV cache: the
+    /// scheduler pool and the solo reference both store f16/int8/fp8 K/V,
+    /// and per-row encode-on-write keeps greedy decode batching-invariant,
+    /// so any arrival order still reproduces each request's solo tokens
+    /// exactly — chunked prefill included (encoding is per row, so
+    /// chunking cannot perturb the stored codes).
     #[test]
     fn continuous_equals_solo_quantized_kv() {
         let cfg = by_name("sim-125m").unwrap();
         let mut rng = Pcg32::seeded(13);
         let w = init(&cfg, &mut rng);
-        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in [KvDtype::F16, KvDtype::Int8, KvDtype::Fp8E4M3] {
             let engine = Arc::new(
                 Engine::new("dense-qkv", cfg.clone(), Arc::new(w.clone()), None)
                     .with_kv_dtype(dtype),

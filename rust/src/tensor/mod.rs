@@ -10,8 +10,8 @@
 mod ops;
 mod stats;
 
-pub use ops::{matmul, matmul_at_b, matmul_a_bt};
-pub(crate) use ops::{gemm, gemm_abt, num_threads, PAR_THRESHOLD};
+pub use ops::{matmul, matmul_at_b, matmul_a_bt, matmul_half};
+pub(crate) use ops::{gemm, gemm_abt, gemm_abt_half, gemm_half, num_threads, PAR_THRESHOLD};
 pub use stats::{
     histogram, histogram_with_bins, kurtosis, paper_bin_count, summary, Histogram, Summary,
 };

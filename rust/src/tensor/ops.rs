@@ -1,10 +1,19 @@
-//! Matrix products: blocked, threaded, f32.
+//! Matrix products: blocked, threaded, f32 — plus half-operand variants.
 //!
 //! Loop order (i, k, j) keeps the B-row and C-row accesses contiguous so the
 //! compiler auto-vectorizes the inner loop; rows of the output are
 //! partitioned across `std::thread::scope` workers. These serve both the
 //! compression pipeline (Hessians, saliency, SVD steps) and the measured
 //! dense baseline in the speedup experiments.
+//!
+//! The `*_half` variants ([`gemm_half`], [`gemm_abt_half`], [`matmul_half`])
+//! read the B operand as 16-bit half-precision codes (f16 or bf16 — the
+//! caller passes the scalar decoder, keeping this module independent of
+//! `quant`) and **accumulate in f32**, in exactly the same loop order as
+//! their f32 twins. Decoding inline halves the memory traffic on the
+//! bandwidth-bound decode path (half-width KV tiles, half-storage dense and
+//! adapter weights) while producing bit-identical results to
+//! decode-to-scratch followed by the f32 kernel.
 
 use super::Matrix;
 
@@ -61,6 +70,117 @@ pub(crate) fn gemm_abt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: 
             out[i * n + j] = acc;
         }
     }
+}
+
+/// [`gemm`] with a half-width B: `out = A·decode(B)` (`a`: m×k f32, `b`:
+/// k×n 16-bit codes, `out`: m×n f32, assumed zero-initialized). Same
+/// (i, k, j) loop order and zero-`A` skip as [`gemm`]; B elements are
+/// decoded inline (each code is touched once per A-row), so the result is
+/// bit-identical to decoding B to a scratch f32 buffer and calling [`gemm`]
+/// — without the scratch traffic. Backs the half-precision P·V attention
+/// tiles and the half-storage dense kernel.
+pub(crate) fn gemm_half(
+    a: &[f32],
+    b: &[u16],
+    m: usize,
+    k: usize,
+    n: usize,
+    decode: impl Fn(u16) -> f32 + Copy,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += aik * decode(bv);
+            }
+        }
+    }
+}
+
+/// [`gemm_abt`] with a half-width B: `out = A·decode(B)ᵀ` (`a`: m×k f32,
+/// `b`: n×k 16-bit codes, `out`: m×n f32). Dot-product form with inline
+/// decode; bit-identical to decode-then-[`gemm_abt`]. Backs the
+/// half-precision Q·Kᵀ attention score tiles.
+pub(crate) fn gemm_abt_half(
+    a: &[f32],
+    b: &[u16],
+    m: usize,
+    k: usize,
+    n: usize,
+    decode: impl Fn(u16) -> f32 + Copy,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (av, &bv) in arow.iter().zip(brow.iter()) {
+                acc += av * decode(bv);
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+/// C = A · decode(B) where B is a k×n row-major slice of 16-bit half codes
+/// — the threaded entry point for half-storage weight matrices
+/// (`kernels::dense::HalfDenseKernel`). Mirrors [`matmul`]'s row-chunk
+/// partitioning; `decode` is a plain `fn` pointer so dispatch happens once
+/// per call.
+pub fn matmul_half(a: &Matrix, b: &[u16], k: usize, n: usize, decode: fn(u16) -> f32) -> Matrix {
+    assert_eq!(a.cols(), k, "matmul_half shape mismatch: {:?} x {k}x{n}", a.shape());
+    assert_eq!(b.len(), k * n, "matmul_half B len {} vs {k}x{n}", b.len());
+    let m = a.rows();
+    let mut c = Matrix::zeros(m, n);
+    let flops = m * k * n;
+    let a_data = a.data();
+
+    let kernel = |rows: std::ops::Range<usize>, out: &mut [f32]| {
+        gemm_half(
+            &a_data[rows.start * k..rows.end * k],
+            b,
+            rows.end - rows.start,
+            k,
+            n,
+            decode,
+            out,
+        );
+    };
+
+    if flops < PAR_THRESHOLD || m < 2 {
+        kernel(0..m, c.data_mut());
+        return c;
+    }
+
+    let nt = num_threads().min(m);
+    let chunk = m.div_ceil(nt);
+    let cdata = c.data_mut();
+    std::thread::scope(|s| {
+        let mut rest = cdata;
+        let mut start = 0usize;
+        while start < m {
+            let end = (start + chunk).min(m);
+            let (head, tail) = rest.split_at_mut((end - start) * n);
+            rest = tail;
+            let range = start..end;
+            s.spawn(move || kernel(range, head));
+            start = end;
+        }
+    });
+    c
 }
 
 /// C = A · B.
@@ -243,6 +363,52 @@ mod tests {
         let c = matmul_a_bt(&a, &b);
         let r = matmul(&a, &b.transpose());
         assert!(c.rel_err(&r) < 1e-5);
+    }
+
+    #[test]
+    fn half_gemms_match_decode_then_f32() {
+        use crate::quant::half::{encode_vec, HalfKind};
+        let mut rng = Pcg32::seeded(47);
+        for kind in [HalfKind::F16, HalfKind::Bf16] {
+            let dec = kind.decoder();
+            let (m, k, n) = (7usize, 13usize, 9usize);
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let bf: Vec<f32> = (0..k * n).map(|_| rng.gauss()).collect();
+            let bits = encode_vec(kind, &bf);
+            // Decode-to-scratch reference.
+            let scratch: Vec<f32> = bits.iter().map(|&h| dec(h)).collect();
+
+            let mut want = vec![0.0f32; m * n];
+            gemm(a.data(), &scratch, m, k, n, &mut want);
+            let mut got = vec![0.0f32; m * n];
+            gemm_half(a.data(), &bits, m, k, n, dec, &mut got);
+            assert_eq!(got, want, "gemm_half {kind:?}");
+
+            // ABᵀ form: reinterpret the same bits as n×k.
+            let mut want_t = vec![0.0f32; m * n];
+            gemm_abt(a.data(), &scratch[..n * k], m, k, n, &mut want_t);
+            let mut got_t = vec![0.0f32; m * n];
+            gemm_abt_half(a.data(), &bits[..n * k], m, k, n, dec, &mut got_t);
+            assert_eq!(got_t, want_t, "gemm_abt_half {kind:?}");
+        }
+    }
+
+    #[test]
+    fn matmul_half_matches_threaded_f32() {
+        use crate::quant::half::{encode_vec, HalfKind};
+        let mut rng = Pcg32::seeded(48);
+        // Big enough to cross PAR_THRESHOLD so the threaded path runs.
+        let (m, k, n) = (96usize, 80usize, 64usize);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let bf: Vec<f32> = (0..k * n).map(|_| rng.gauss()).collect();
+        for kind in [HalfKind::F16, HalfKind::Bf16] {
+            let bits = encode_vec(kind, &bf);
+            let dec = kind.decoder();
+            let scratch: Vec<f32> = bits.iter().map(|&h| dec(h)).collect();
+            let want = matmul(&a, &Matrix::from_vec(k, n, scratch));
+            let got = matmul_half(&a, &bits, k, n, dec);
+            assert_eq!(got.data(), want.data(), "{kind:?}");
+        }
     }
 
     #[test]

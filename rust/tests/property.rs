@@ -184,6 +184,58 @@ fn prop_pipeline_error_decomposition() {
 }
 
 #[test]
+fn prop_half_codecs_round_trip_and_monotone() {
+    // f16/bf16 codec invariants over random magnitudes spanning 8 decades:
+    // decode∘encode stays within half a ULP of the format (2^-11 for f16's
+    // 10-bit significand, 2^-8 for bf16's 7-bit one), re-encoding a decoded
+    // value is idempotent (decoded values are exactly representable),
+    // rounding is monotone (sorted inputs decode to non-decreasing
+    // outputs), and out-of-range values saturate to the max finite value
+    // rather than producing ±∞.
+    use slim::quant::half::{HalfKind, F16_MAX};
+    let mut rng = Pcg32::seeded(1212);
+    for kind in [HalfKind::F16, HalfKind::Bf16] {
+        let max_rel = match kind {
+            HalfKind::F16 => 1.0 / 2048.0,
+            HalfKind::Bf16 => 1.0 / 256.0,
+        };
+        let dec = kind.decoder();
+        let mut vals: Vec<f32> = (0..4000)
+            .map(|_| {
+                let mag = 10f32.powf(rng.range_f32(-4.0, 4.0));
+                if rng.below(2) == 0 {
+                    mag
+                } else {
+                    -mag
+                }
+            })
+            .collect();
+        for &x in &vals {
+            let bits = kind.encode(x);
+            let y = dec(bits);
+            assert!(
+                (y - x).abs() <= max_rel * x.abs(),
+                "{kind:?}: {x} -> {y} exceeds half-ULP bound"
+            );
+            assert_eq!(kind.encode(y), bits, "{kind:?}: re-encode of {y} not idempotent");
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let decoded: Vec<f32> = vals.iter().map(|&v| dec(kind.encode(v))).collect();
+        assert!(
+            decoded.windows(2).all(|w| w[0] <= w[1]),
+            "{kind:?}: rounding must be monotone"
+        );
+        // Saturation: far out of f16 range, still finite, pinned at max.
+        let sat = dec(kind.encode(1e30));
+        assert!(sat.is_finite(), "{kind:?} must never emit inf");
+        if kind == HalfKind::F16 {
+            assert_eq!(sat, F16_MAX);
+            assert_eq!(dec(kind.encode(-1e30)), -F16_MAX);
+        }
+    }
+}
+
+#[test]
 fn prop_ring_decode_equals_sliding_window_reference() {
     // Greedy equivalence across the context-overflow boundary: for random
     // prompts and generation depths past 2× the context length, the O(1)
@@ -205,7 +257,9 @@ fn prop_ring_decode_equals_sliding_window_reference() {
     for seed in [1u64, 2, 3] {
         let mut rng = Pcg32::seeded(seed);
         let weights = Arc::new(init(&cfg, &mut rng));
-        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in
+            [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::Int8, KvDtype::Fp8E4M3]
+        {
             let ring = Engine::new("ring", cfg.clone(), weights.clone(), None)
                 .with_kv_dtype(dtype);
             let shift = Engine::new("shift", cfg.clone(), weights.clone(), None)
@@ -269,7 +323,9 @@ fn prop_chunked_prefill_equals_oneshot() {
     for seed in [1u64, 2, 3] {
         let mut rng = Pcg32::seeded(seed);
         let weights = Arc::new(init(&cfg, &mut rng));
-        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in
+            [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::Int8, KvDtype::Fp8E4M3]
+        {
             let engine =
                 Engine::new("chunk", cfg.clone(), weights.clone(), None).with_kv_dtype(dtype);
             // One short prompt and one longer than the context window (its
