@@ -1,0 +1,200 @@
+//! Chat session example: a multi-turn conversation over the TCP wire
+//! protocol, with streamed token delivery and seeded sampling.
+//!
+//! ```bash
+//! cargo run --release --example chat_session
+//! ```
+//!
+//! Exercises the v2 protocol end to end (see `docs/PROTOCOL.md`):
+//!
+//! * `{"cmd":"models"}` — the route advertises its session capacity and
+//!   streaming support;
+//! * `{"cmd":"session_open"}` → three `session_append` turns with
+//!   `"stream":true` and temperature/top-k/top-p/seed sampling — each
+//!   turn prefills only its new tokens because the server keeps the
+//!   conversation's KV cache slot parked between turns;
+//! * a fresh one-shot generate over the full transcript reproduces the
+//!   last turn's reply exactly (same seed ⇒ same tokens, resumed or not);
+//! * `session_drop`, after which the session id fails typed
+//!   (`unknown_session`).
+//!
+//! Uses randomly initialized weights so it runs instantly; CI runs it as
+//! a smoke step.
+
+use slim::model::{by_name, init};
+use slim::rng::Pcg32;
+use slim::server::{api, Engine, Router, SchedPolicy};
+use slim::util::json::{n, obj, s, Json};
+use std::sync::Arc;
+use std::time::Duration;
+
+const MODEL: &str = "sim-125m";
+const MAX_NEW: usize = 6;
+const SEED: u64 = 42;
+
+fn tokens_json(tokens: &[u32]) -> Json {
+    Json::Arr(tokens.iter().map(|&t| n(t as f64)).collect())
+}
+
+fn sampling_fields(fields: &mut Vec<(&'static str, Json)>) {
+    fields.push(("temperature", n(0.8)));
+    fields.push(("top_k", n(40.0)));
+    fields.push(("top_p", n(0.95)));
+    fields.push(("seed", n(SEED as f64)));
+}
+
+/// Read streamed frames until the terminal one; returns the reply tokens.
+fn drain_stream(client: &mut api::Client) -> anyhow::Result<Vec<u32>> {
+    let mut streamed: Vec<u32> = Vec::new();
+    loop {
+        let frame = client.recv()?;
+        match frame.get("event").and_then(Json::as_str) {
+            Some("token") => {
+                let tok = frame.get("token").and_then(Json::as_usize).expect("token id");
+                print!(" {tok}");
+                streamed.push(tok as u32);
+            }
+            Some("done") => {
+                println!();
+                let done: Vec<u32> = frame
+                    .get("tokens")
+                    .and_then(Json::as_arr)
+                    .expect("tokens")
+                    .iter()
+                    .filter_map(|v| v.as_usize().map(|u| u as u32))
+                    .collect();
+                assert_eq!(done, streamed, "token frames must equal the final result");
+                return Ok(streamed);
+            }
+            _ => anyhow::bail!("stream failed: {}", frame.to_string_compact()),
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = by_name(MODEL).expect("known config");
+    let mut rng = Pcg32::seeded(7);
+    let weights = Arc::new(init(&cfg, &mut rng));
+    let engine = Engine::new(MODEL, cfg, weights, None);
+    let mut router = Router::new();
+    let policy = SchedPolicy { max_slots: 4, max_sessions: 4, ..Default::default() };
+    router.register_continuous(engine, policy);
+    let router = Arc::new(router);
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    {
+        let router = router.clone();
+        std::thread::spawn(move || {
+            let _ = api::serve(router, "127.0.0.1:0", move |addr| {
+                let _ = tx.send(addr);
+            });
+        });
+    }
+    let addr = rx.recv_timeout(Duration::from_secs(10))?;
+    println!("[serve] continuous route listening on {addr} (4 slots, 4 sessions)");
+
+    let mut client = api::Client::connect(addr)?;
+
+    // The route advertises its session + streaming capability.
+    let models = client.call(&Json::parse(r#"{"v":2,"cmd":"models"}"#).unwrap())?;
+    let entry = models.get("models").and_then(Json::as_arr).expect("models")[0].clone();
+    println!(
+        "[route] mode={} admit={} sessions={} streaming={}",
+        entry.get("mode").and_then(Json::as_str).unwrap_or("?"),
+        entry.get("admit").and_then(Json::as_str).unwrap_or("?"),
+        entry.get("sessions").and_then(Json::as_usize).unwrap_or(0),
+        entry.get("streaming").and_then(Json::as_bool).unwrap_or(false),
+    );
+    assert!(entry.get("sessions").and_then(Json::as_usize).unwrap_or(0) > 0);
+
+    // Open the conversation.
+    let req = obj(vec![("v", n(2.0)), ("cmd", s("session_open")), ("model", s(MODEL))]);
+    let opened = client.call(&req)?;
+    let sid = opened.get("session").and_then(Json::as_usize).expect("session id");
+    println!("[sess ] opened session {sid}");
+
+    // Three streamed turns; the transcript accumulates user tokens and
+    // sampled replies.
+    let turns: [Vec<u32>; 3] = [vec![5, 6, 7], vec![30, 31], vec![90]];
+    let mut transcript: Vec<u32> = Vec::new();
+    let mut last_reply: Vec<u32> = Vec::new();
+    for (i, user) in turns.iter().enumerate() {
+        let mut fields = vec![
+            ("v", n(2.0)),
+            ("cmd", s("session_append")),
+            ("model", s(MODEL)),
+            ("session", n(sid as f64)),
+            ("tokens", tokens_json(user)),
+            ("max_new", n(MAX_NEW as f64)),
+            ("stream", Json::Bool(true)),
+        ];
+        sampling_fields(&mut fields);
+        client.send(&obj(fields))?;
+        print!("[turn{}] user {user:?} →", i + 1);
+        let reply = drain_stream(&mut client)?;
+        assert_eq!(reply.len(), MAX_NEW);
+        transcript.extend_from_slice(user);
+        last_reply = reply.clone();
+        transcript.extend_from_slice(&reply);
+    }
+
+    // Seeded sampling is path-invariant: a fresh one-shot request over
+    // the transcript (minus the last reply) reproduces the last turn's
+    // reply token-for-token, even though the session turns resumed a
+    // parked KV slot and prefilled only their new tokens.
+    let prompt = &transcript[..transcript.len() - last_reply.len()];
+    let mut fields = vec![
+        ("v", n(2.0)),
+        ("model", s(MODEL)),
+        ("prompt", tokens_json(prompt)),
+        ("max_new", n(MAX_NEW as f64)),
+    ];
+    sampling_fields(&mut fields);
+    let resp = client.call(&obj(fields))?;
+    let solo: Vec<u32> = resp
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .expect("tokens")
+        .iter()
+        .filter_map(|v| v.as_usize().map(|u| u as u32))
+        .collect();
+    assert_eq!(solo, last_reply, "session-resumed turn must match the one-shot replay");
+    println!("[check] one-shot replay over {} prompt tokens matches turn 3", prompt.len());
+
+    // Drop the session; the id fails typed afterwards.
+    let req = obj(vec![
+        ("v", n(2.0)),
+        ("cmd", s("session_drop")),
+        ("model", s(MODEL)),
+        ("session", n(sid as f64)),
+    ]);
+    let dropped = client.call(&req)?;
+    assert_eq!(dropped.get("dropped").and_then(Json::as_usize), Some(sid));
+    let fields = vec![
+        ("v", n(2.0)),
+        ("cmd", s("session_append")),
+        ("model", s(MODEL)),
+        ("session", n(sid as f64)),
+        ("tokens", tokens_json(&[4])),
+    ];
+    let gone = client.call(&obj(fields))?;
+    let code = gone.get("error").and_then(|e| e.get("code")).and_then(Json::as_str);
+    assert_eq!(code, Some("unknown_session"));
+    println!("[sess ] dropped session {sid}; further appends fail with unknown_session");
+
+    // Streamed delivery fed the inter-token latency histogram.
+    let m = client.call(&Json::parse(r#"{"cmd":"metrics"}"#).unwrap())?;
+    let gaps = m
+        .get("routes")
+        .and_then(|r| r.get(MODEL))
+        .and_then(|r| r.get("inter_token_seconds"))
+        .and_then(|h| h.get("count"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    println!("[stats] {gaps} inter-token gaps recorded across the streamed turns");
+    assert!(gaps > 0.0, "streamed turns must record inter-token latency");
+
+    router.shutdown();
+    println!("\nOK: streamed multi-turn session with seeded sampling served and verified.");
+    Ok(())
+}

@@ -26,6 +26,13 @@
 //! protect (CI gates `hol-chunked.short_ttft_p95_ms` via
 //! `tools/bench_gate.rs`, lower-is-better).
 //!
+//! The streamed section replays the same Poisson schedule through
+//! `Batcher::submit_stream`, each request drained by its own client
+//! thread, and records the *client-observed* streamed TTFT — submit to
+//! first `StreamEvent::Token` received, including channel hop — plus the
+//! invariant that the concatenated token frames equal the final
+//! `GenResult` (the wire contract `docs/PROTOCOL.md` documents).
+//!
 //! The metrics-overhead section saturates the int4-2:4 continuous route
 //! with an all-at-once burst (compute-bound — no arrival gaps to hide
 //! instrumentation cost in) twice per arm, interleaved: once with the
@@ -37,8 +44,8 @@
 //! leave-on-in-production cheap).
 //!
 //! Writes a `BENCH_serve.json` summary (throughput tok/s, p50/p95 TTFT,
-//! p50 completion, head-of-line + metrics-overhead records) next to the
-//! console table (or under `$BENCH_OUT_DIR`).
+//! p50 completion, head-of-line + streamed + metrics-overhead records)
+//! next to the console table (or under `$BENCH_OUT_DIR`).
 
 use slim::kernels::LinearOp;
 use slim::model::{init, CompressedWeights, KvCachePool, ModelConfig, Weights};
@@ -46,7 +53,7 @@ use slim::quant::slim_quant;
 use slim::rng::Pcg32;
 use slim::server::{
     AdmitPolicy, BatchPolicy, Batcher, Engine, GenRequest, GenResult, Metrics, RouteObs,
-    SchedPolicy, Scheduler, SeqState,
+    SchedPolicy, Scheduler, SeqState, StreamEvent,
 };
 use slim::sparse::{mask::SparsityPattern, wanda};
 use slim::util::json::{n, obj, s, Json};
@@ -298,6 +305,78 @@ fn run_hol(engine: Arc<Engine>, arrivals: &[Arrival], policy: SchedPolicy) -> Ho
     }
 }
 
+struct StreamResult {
+    tok_per_s: f64,
+    first_frame_p50_ms: f64,
+    first_frame_p95_ms: f64,
+    tokens: usize,
+    wall_s: f64,
+}
+
+/// Replay the arrival schedule with streamed delivery: every request goes
+/// through [`Batcher::submit_stream`] and is drained by its own client
+/// thread, so the recorded first-frame latency is the *client-observed*
+/// streamed TTFT (submit → first [`StreamEvent::Token`] received,
+/// including the channel hop) rather than the engine-side compute time.
+/// Each drain also asserts the streaming contract: concatenated token
+/// frames equal the `Done` frame's tokens.
+fn run_streamed(engine: Arc<Engine>, arrivals: &[Arrival], cap: usize) -> StreamResult {
+    let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+    let obs = RouteObs::standalone("bench-stream");
+    let worker = {
+        let b = batcher.clone();
+        let o = obs.clone();
+        let e = engine.clone();
+        std::thread::spawn(move || {
+            Scheduler::new(e, SchedPolicy { max_slots: cap, ..Default::default() }).run(&b, &o)
+        })
+    };
+    let t0 = Instant::now();
+    let mut drains = Vec::with_capacity(arrivals.len());
+    for a in arrivals {
+        if let Some(d) = a.at.checked_sub(t0.elapsed()) {
+            std::thread::sleep(d);
+        }
+        let rx = batcher.submit_stream(a.req.clone());
+        drains.push(std::thread::spawn(move || {
+            let sent = Instant::now();
+            let mut first_ms = None;
+            let mut streamed: Vec<u32> = Vec::new();
+            loop {
+                match rx.recv_timeout(Duration::from_secs(300)).expect("stream lost") {
+                    StreamEvent::Token { token, .. } => {
+                        if first_ms.is_none() {
+                            first_ms = Some(sent.elapsed().as_secs_f64() * 1e3);
+                        }
+                        streamed.push(token);
+                    }
+                    StreamEvent::Done(res) => {
+                        assert_eq!(streamed, res.tokens, "token frames must equal the result");
+                        return (first_ms.unwrap_or(0.0), res.tokens.len());
+                    }
+                }
+            }
+        }));
+    }
+    let mut first_ms: Vec<f64> = Vec::new();
+    let mut tokens = 0usize;
+    for d in drains {
+        let (ms, n_tok) = d.join().expect("drain thread");
+        first_ms.push(ms);
+        tokens += n_tok;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    batcher.close();
+    worker.join().unwrap();
+    StreamResult {
+        tok_per_s: tokens as f64 / wall_s,
+        first_frame_p50_ms: pct(&mut first_ms, 50.0),
+        first_frame_p95_ms: pct(&mut first_ms, 95.0),
+        tokens,
+        wall_s,
+    }
+}
+
 /// Submit every request up front (no arrival pacing — the scheduler stays
 /// compute-bound, so instrumentation cost has nowhere to hide) and return
 /// serve throughput. The observability arm is whatever `obs` carries: a
@@ -447,6 +526,30 @@ fn main() {
         hol_table.push((name, r));
     }
 
+    // ── Streamed delivery: client-observed first-frame latency ──
+    let sr = run_streamed(sp24.clone(), &arrivals, cap);
+    println!(
+        "\nstreamed — same {n_reqs} Poisson arrivals via submit_stream, int4-2:4 continuous, \
+         cap {cap}, one drain thread per request:\n\
+         {:<20} {:>11.1} {:>10.1}ms {:>10.1}ms {:>23} {:>6.2}s",
+        "int4-2:4-streamed",
+        sr.tok_per_s,
+        sr.first_frame_p50_ms,
+        sr.first_frame_p95_ms,
+        format!("({} tokens)", sr.tokens),
+        sr.wall_s
+    );
+    json_rows.push((
+        "int4-2:4-streamed",
+        obj(vec![
+            ("tok_per_s", n(sr.tok_per_s)),
+            ("first_frame_p50_ms", n(sr.first_frame_p50_ms)),
+            ("first_frame_p95_ms", n(sr.first_frame_p95_ms)),
+            ("tokens", n(sr.tokens as f64)),
+            ("wall_s", n(sr.wall_s)),
+        ]),
+    ));
+
     // ── Metrics overhead: full tracing vs no-op sink on a saturated route ──
     let n_burst = if quick { 16 } else { 32 };
     let burst = workload(n_burst, 0.0, cfg.vocab); // all arrivals at t=0
@@ -503,6 +606,17 @@ fn main() {
                 100.0 * (cont.ttft_p50_ms / fixed.ttft_p50_ms - 1.0),
             );
         }
+    }
+    // Sanity: streamed delivery rides the same scheduler — its throughput
+    // should track int4-2:4-continuous (a frame is one channel send per
+    // token, not a serving-path change).
+    if let Some((_, cont)) = table.iter().find(|(name, _)| *name == "int4-2:4-continuous") {
+        let ratio = sr.tok_per_s / cont.tok_per_s;
+        println!(
+            "{} int4-2:4-streamed vs int4-2:4-continuous: {:+.1}% tok/s",
+            if ratio >= 0.8 { "OK " } else { "WARN" },
+            100.0 * (ratio - 1.0),
+        );
     }
     // Sanity: chunking exists to protect the short population's tail TTFT
     // from the long prompt (the PR's acceptance bar).

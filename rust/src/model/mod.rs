@@ -4,6 +4,7 @@
 pub mod attention;
 pub mod compiled;
 pub mod config;
+pub mod sample;
 pub mod size;
 pub mod transformer;
 pub mod weights;
@@ -11,6 +12,7 @@ pub mod weights;
 pub use attention::{AttnSpan, KvDtype, KvLayout, KvSlab, KvSource};
 pub use compiled::CompressedWeights;
 pub use config::{by_name, family, quick_family, ModelConfig};
+pub use sample::{SampleParams, Sampler};
 pub use transformer::{
     forward, forward_cached, forward_slots, greedy_pick, nll, ActivationTap, Batch, KvCache,
     KvCachePool, Linears, Overrides,

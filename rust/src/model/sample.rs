@@ -1,0 +1,257 @@
+//! Token sampling: temperature / top-k / top-p over a logits row, driven
+//! by a per-request seeded RNG.
+//!
+//! [`SampleParams`] travels with every `server::engine::GenRequest`; the
+//! default (`temperature == 0`) is greedy argmax — exactly
+//! [`greedy_pick`], with its documented lowest-index tie-break — and
+//! consumes **zero** RNG draws, so greedy requests stay bit-compatible
+//! with the pre-sampling serving stack. A non-greedy pick consumes
+//! **exactly one** `f64` draw per emitted token, whatever the filter
+//! settings. That fixed draw budget is a correctness contract, not a
+//! detail: the speculative engine proposes draft tokens from a *clone* of
+//! the sequence's RNG (one draw per proposal) and the target verifies by
+//! sampling with the real RNG (one draw per emitted token), so clone draw
+//! `i` and real draw `i` line up and speculative output is token-identical
+//! to the non-speculative path for any seed — the sampling analogue of the
+//! greedy "verify must match" argument.
+//!
+//! The sampled distribution is `softmax(logits / temperature)` restricted
+//! to the top-k most probable tokens (0 = unrestricted) intersected with
+//! the smallest nucleus whose mass reaches `top_p` (1.0 = unrestricted),
+//! renormalized, then inverse-CDF sampled. Candidate order is probability
+//! descending with index-ascending tie-break, so the pick is a pure
+//! function of `(logits, params, draw)` on every platform.
+
+use super::transformer::greedy_pick;
+use crate::rng::Pcg32;
+
+/// Sampling knobs carried per request. `Default` is greedy decoding.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleParams {
+    /// Softmax temperature; `<= 0` means greedy argmax (no RNG draws).
+    pub temperature: f32,
+    /// Keep only the `top_k` most probable tokens (0 = no limit).
+    pub top_k: usize,
+    /// Keep the smallest set of tokens whose probability mass reaches
+    /// `top_p` (1.0 = no limit).
+    pub top_p: f32,
+    /// Seed for the per-request RNG stream; same seed ⇒ same tokens on
+    /// every serving path (solo, batched, streamed, session-resumed,
+    /// speculative).
+    pub seed: u64,
+}
+
+impl Default for SampleParams {
+    fn default() -> Self {
+        SampleParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl SampleParams {
+    /// Greedy argmax decoding (the default).
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    /// Whether these params reduce to greedy argmax (no RNG use).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// Validate ranges: temperature must be finite and ≥ 0, `top_p` in
+    /// (0, 1]. Servers call this at the protocol boundary so a bad knob is
+    /// a request error, not a NaN-shaped distribution later.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            return Err(format!("temperature must be finite and >= 0, got {}", self.temperature));
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 || self.top_p > 1.0 {
+            return Err(format!("top_p must be in (0, 1], got {}", self.top_p));
+        }
+        Ok(())
+    }
+}
+
+/// One sequence's sampling state: the knobs plus the seeded RNG stream.
+/// Cloning yields an independent stream at the current position — how the
+/// speculative draft proposes tokens without advancing the real stream.
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    params: SampleParams,
+    rng: Pcg32,
+}
+
+impl Sampler {
+    pub fn new(params: SampleParams) -> Self {
+        Sampler { params, rng: Pcg32::seeded(params.seed) }
+    }
+
+    pub fn params(&self) -> SampleParams {
+        self.params
+    }
+
+    /// Pick the next token from a logits row. Greedy params call
+    /// [`greedy_pick`] and draw nothing; otherwise exactly one RNG draw is
+    /// consumed, whatever the filters select.
+    pub fn pick(&mut self, row: &[f32]) -> usize {
+        if self.params.is_greedy() {
+            return greedy_pick(row);
+        }
+        let u = self.rng.f64();
+        sample_from(row, &self.params, u)
+    }
+}
+
+/// The deterministic sampling core: given a logits row, non-greedy params
+/// and a uniform draw `u ∈ [0, 1)`, return the sampled token index.
+/// Factored out of [`Sampler::pick`] so tests can sweep `u` directly.
+pub fn sample_from(row: &[f32], params: &SampleParams, u: f64) -> usize {
+    debug_assert!(!params.is_greedy());
+    debug_assert!(!row.is_empty());
+    // Temperature-scaled softmax with max-subtraction for stability.
+    let inv_t = 1.0 / params.temperature;
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut cand: Vec<(usize, f64)> = row
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (i, (((v - max) * inv_t) as f64).exp()))
+        .collect();
+    // Probability descending, index ascending on ties — a total order, so
+    // the candidate list (and therefore the pick) is deterministic.
+    cand.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    if params.top_k > 0 {
+        cand.truncate(params.top_k.max(1));
+    }
+    if params.top_p < 1.0 {
+        let total: f64 = cand.iter().map(|&(_, w)| w).sum();
+        let mut cum = 0.0;
+        let mut keep = cand.len();
+        for (j, &(_, w)) in cand.iter().enumerate() {
+            cum += w;
+            if cum >= params.top_p as f64 * total {
+                keep = j + 1;
+                break;
+            }
+        }
+        cand.truncate(keep);
+    }
+    // Inverse-CDF over the renormalized candidates.
+    let total: f64 = cand.iter().map(|&(_, w)| w).sum();
+    let target = u * total;
+    let mut cum = 0.0;
+    for &(i, w) in &cand {
+        cum += w;
+        if cum > target {
+            return i;
+        }
+    }
+    cand.last().unwrap().0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_greedy_and_draws_nothing() {
+        let p = SampleParams::default();
+        assert!(p.is_greedy());
+        let mut a = Sampler::new(p);
+        let mut b = Sampler::new(p);
+        let row = [0.1f32, 2.0, -1.0, 2.0];
+        // Greedy pick is the documented lowest-index argmax...
+        assert_eq!(a.pick(&row), 1);
+        // ...and consumes no RNG: both streams still agree after many picks
+        // on a non-greedy re-parameterization of the same state.
+        for _ in 0..10 {
+            a.pick(&row);
+        }
+        a.params.temperature = 1.0;
+        b.params.temperature = 1.0;
+        for _ in 0..5 {
+            assert_eq!(a.pick(&row), b.pick(&row));
+        }
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let p = SampleParams { temperature: 0.8, top_k: 8, top_p: 0.9, seed: 42 };
+        let mut a = Sampler::new(p);
+        let mut b = Sampler::new(p);
+        let row: Vec<f32> = (0..64).map(|i| ((i * 37) % 11) as f32 * 0.3).collect();
+        let sa: Vec<usize> = (0..32).map(|_| a.pick(&row)).collect();
+        let sb: Vec<usize> = (0..32).map(|_| b.pick(&row)).collect();
+        assert_eq!(sa, sb);
+        let mut c = Sampler::new(SampleParams { seed: 43, ..p });
+        let sc: Vec<usize> = (0..32).map(|_| c.pick(&row)).collect();
+        assert_ne!(sa, sc, "different seeds should diverge on a spread distribution");
+    }
+
+    #[test]
+    fn clone_matches_original_stream() {
+        // The speculative-draft contract: a cloned sampler's draw i equals
+        // the original's draw i.
+        let p = SampleParams { temperature: 1.3, top_k: 0, top_p: 1.0, seed: 7 };
+        let mut real = Sampler::new(p);
+        let row: Vec<f32> = (0..32).map(|i| (i % 7) as f32 * 0.5).collect();
+        real.pick(&row); // advance past the first token
+        let mut clone = real.clone();
+        let proposed: Vec<usize> = (0..4).map(|_| clone.pick(&row)).collect();
+        let actual: Vec<usize> = (0..4).map(|_| real.pick(&row)).collect();
+        assert_eq!(proposed, actual);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let p = SampleParams { temperature: 1.0, top_k: 2, top_p: 1.0, seed: 0 };
+        let row = [5.0f32, 4.0, -50.0, -50.0, 3.9];
+        for i in 0..100 {
+            let u = i as f64 / 100.0;
+            let pick = sample_from(&row, &p, u);
+            assert!(pick == 0 || pick == 1, "top-2 must exclude index {pick}");
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_smallest_nucleus() {
+        // One dominant token (~99.99% mass): any top_p below that keeps
+        // only it.
+        let p = SampleParams { temperature: 1.0, top_k: 0, top_p: 0.5, seed: 0 };
+        let row = [10.0f32, 0.0, 0.0, 0.0];
+        for i in 0..50 {
+            assert_eq!(sample_from(&row, &p, i as f64 / 50.0), 0);
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let p = SampleParams { temperature: 1e-4, top_k: 0, top_p: 1.0, seed: 0 };
+        let row = [0.5f32, 1.5, 1.0, -0.2];
+        for i in 0..20 {
+            assert_eq!(sample_from(&row, &p, i as f64 / 20.0), greedy_pick(&row));
+        }
+    }
+
+    #[test]
+    fn inverse_cdf_tracks_probabilities() {
+        // Two equally likely tokens: u below 0.5 takes the first (index
+        // tie-break puts index 0 first), above takes the second.
+        let p = SampleParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 0 };
+        let row = [1.0f32, 1.0, -60.0];
+        assert_eq!(sample_from(&row, &p, 0.25), 0);
+        assert_eq!(sample_from(&row, &p, 0.75), 1);
+        // u → 1 still lands inside the candidate set.
+        assert_eq!(sample_from(&row, &p, 0.999_999), 1);
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(SampleParams::default().validate().is_ok());
+        assert!(SampleParams { temperature: -1.0, ..Default::default() }.validate().is_err());
+        assert!(SampleParams { temperature: f32::NAN, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(SampleParams { top_p: 0.0, ..Default::default() }.validate().is_err());
+        assert!(SampleParams { top_p: 1.5, ..Default::default() }.validate().is_err());
+    }
+}

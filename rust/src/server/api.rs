@@ -1,66 +1,38 @@
 //! TCP front-end: newline-delimited JSON over std::net.
 //!
-//! Request:  `{"model": "...", "prompt": [ints], "max_new": n, "stop": t?,
-//!           "priority": p?, "client_id": c?, "kv_dtype": "..."?}`
-//!           (`stop` is optional: generation retires early once token `t`
-//!           is produced, included in the output. `priority` — higher is
-//!           admitted sooner — and `client_id` feed the route's admission
-//!           policy when it is fair-share (`SchedPolicy::admit`); both
-//!           default to 0 and never change the generated tokens, only who
-//!           waits when cache slots are scarce. `kv_dtype` is an optional
-//!           assertion on the route's serving KV cache dtype — one of
-//!           "f32", "f16"/"fp16", "bf16", "int8", "fp8"/"fp8-e4m3"; an
-//!           unknown name errors listing the valid dtypes, and a known
-//!           name that differs from what the route was registered with
-//!           errors naming the route's actual dtype.)
-//! Response: `{"ok": true, "tokens": [ints], "ttft_ms": f?, "drafted": n?,
-//!           "accepted": n?, "accept_rate": f?}` or
-//!           `{"ok": false, "error": "..."}` — `ttft_ms` is the
-//!           server-measured submit→first-token latency, present on
-//!           serving paths that observe one. The speculative-decoding
-//!           trio appears only on speculative routes
-//!           (`Router::register_speculative`): how many tokens the
-//!           compressed draft proposed for this request, how many the
-//!           dense target confirmed, and their ratio. They describe
-//!           speed, never content — tokens are identical to the plain
-//!           continuous route.
-//! Special:  `{"cmd": "metrics"}` → `{"ok": true, "summary": "...",
-//!           "routes": {route: {...}}}` — `summary` is the legacy one-line
-//!           cross-route aggregate (queue-wait p50/p95, route-wide
-//!           `spec_accept` rate, TTFT and decode percentiles); `routes`
-//!           maps each route name to its structured metrics (counters,
-//!           per-stage busy seconds, and each histogram as
-//!           `{count, sum, p50, p95, p99}` — see `Metrics::export_json`);
-//!           `{"cmd": "metrics_prom"}` → `{"ok": true, "text": "..."}` —
-//!           the same registry as Prometheus text exposition (counters /
-//!           gauges / summary-quantile families labelled by route), ready
-//!           for a scrape endpoint to relay verbatim;
-//!           `{"cmd": "trace", "last": n?}` → `{"ok": true, "trace":
-//!           {...}}` — the flight recorder's request-lifecycle ring
-//!           (optionally only the last `n` events) as Chrome trace-event
-//!           JSON (`traceEvents` with `ph`/`ts`/`dur`/`pid`/`tid`), ready
-//!           to save and load in Perfetto / `chrome://tracing`;
-//!           `{"cmd": "models"}` → `{"ok": true, "models": [{"name": "...",
-//!           "kv_dtype": "f32" | "f16" | "bf16" | "int8" | "fp8-e4m3",
-//!           "spec": bool,
-//!           "draft_k": n?}, ...]}` — `kv_dtype` is the serving KV cache
-//!           storage dtype the route was registered with
-//!           (`model::KvDtype`; the 8-bit dtypes hold ~4× fewer cache
-//!           bytes per in-flight sequence, f16/bf16 2×); `spec` marks
-//!           speculative
-//!           routes and `draft_k` (present only when `spec` is true) is
-//!           their configured draft depth.
+//! The full wire grammar — request/response shapes, the v1/v2 envelope
+//! rules, streaming frames, session commands, error codes, and example
+//! transcripts — is documented in `docs/PROTOCOL.md`. Parsing lives in
+//! [`super::proto`]; this module binds parsed requests to a [`Router`]
+//! and shapes responses.
+//!
+//! In brief: one JSON object per line in, one or more JSON frames per
+//! line out. Non-streaming commands answer with exactly one frame.
+//! A generate or session_append with `"stream": true` answers with one
+//! `{"event":"token","index":i,"token":t}` frame per generated token
+//! followed by a terminal `{"event":"done","ok":true,...}` frame carrying
+//! the complete result. Errors are flat `{"ok":false,"error":"..."}` for
+//! v1 requests and structured `{"ok":false,"v":2,"error":{"code",
+//! "message"}}` for `"v":2` requests.
 //!
 //! One thread per connection (the engines are the bottleneck, not the
 //! accept loop), with the router's batcher coalescing across connections.
 
+use super::engine::{GenResult, StreamEvent};
+use super::proto::{self, codes, Append, Envelope, Generate, ProtoError, Request};
 use super::router::{RequestOpts, Router};
+use super::session::SessionError;
 use crate::model::KvDtype;
 use crate::util::json::{n, obj, s, Json};
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
+use std::time::Duration;
+
+/// How long one request may generate before the api abandons it.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Serve until the listener errors. Binds to `addr` ("127.0.0.1:0" picks a
 /// free port); returns the bound address via callback before blocking.
@@ -90,106 +62,250 @@ fn handle_conn(router: Arc<Router>, stream: TcpStream) -> Result<()> {
         if reader.read_line(&mut line)? == 0 {
             return Ok(());
         }
-        let response = handle_line(&router, line.trim());
-        writer.write_all(response.to_string_compact().as_bytes())?;
-        writer.write_all(b"\n")?;
-    }
-}
-
-/// Process one request line (exposed for tests).
-pub fn handle_line(router: &Router, line: &str) -> Json {
-    match process(router, line) {
-        Ok(v) => v,
-        Err(e) => obj(vec![("ok", Json::Bool(false)), ("error", s(&e.to_string()))]),
-    }
-}
-
-fn process(router: &Router, line: &str) -> Result<Json> {
-    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
-    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
-        return match cmd {
-            "metrics" => Ok(obj(vec![
-                ("ok", Json::Bool(true)),
-                ("summary", s(&router.registry.summary())),
-                ("routes", router.registry.to_json()),
-            ])),
-            "metrics_prom" => Ok(obj(vec![
-                ("ok", Json::Bool(true)),
-                ("text", s(&router.registry.prometheus())),
-            ])),
-            "trace" => {
-                let last = req.get("last").and_then(Json::as_usize);
-                Ok(obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("trace", router.recorder.trace_json(last)),
-                ]))
+        let mut io_err = None;
+        handle_request(&router, line.trim(), &mut |frame| {
+            if io_err.is_some() {
+                return;
             }
-            "models" => Ok(obj(vec![
-                ("ok", Json::Bool(true)),
-                (
-                    "models",
-                    Json::Arr(
-                        router
-                            .model_details()
-                            .iter()
-                            .map(|(name, dt, draft_k)| {
-                                let mut fields = vec![
-                                    ("name", s(name)),
-                                    ("kv_dtype", s(dt.name())),
-                                    ("spec", Json::Bool(draft_k.is_some())),
-                                ];
-                                if let Some(k) = draft_k {
-                                    fields.push(("draft_k", n(*k as f64)));
-                                }
-                                obj(fields)
-                            })
-                            .collect(),
-                    ),
-                ),
-            ])),
-            other => Err(anyhow!("unknown cmd {other}")),
-        };
+            let res = writer
+                .write_all(frame.to_string_compact().as_bytes())
+                .and_then(|_| writer.write_all(b"\n"))
+                .and_then(|_| writer.flush());
+            if let Err(e) = res {
+                io_err = Some(e);
+            }
+        });
+        if let Some(e) = io_err {
+            return Err(e.into());
+        }
     }
-    let model = req
-        .get("model")
-        .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("missing model"))?;
+}
+
+/// Process one request line, delivering each response frame through
+/// `sink`. Non-streaming requests produce exactly one frame; streaming
+/// requests produce token frames then a terminal done (or error) frame.
+pub fn handle_request(router: &Router, line: &str, sink: &mut dyn FnMut(Json)) {
+    let Envelope { v, req } = match proto::parse(line) {
+        Ok(env) => env,
+        Err((v, err)) => {
+            sink(proto::error_json(v, &err));
+            return;
+        }
+    };
+    if let Err(err) = dispatch(router, v, req, sink) {
+        sink(proto::error_json(v, &err));
+    }
+}
+
+/// Process one request line and collect every response frame (exposed
+/// for tests and tools that don't want the sink callback shape).
+pub fn handle_frames(router: &Router, line: &str) -> Vec<Json> {
+    let mut frames = Vec::new();
+    handle_request(router, line, &mut |f| frames.push(f));
+    frames
+}
+
+/// Process one request line, returning the FINAL response frame — the
+/// whole response for non-streaming commands, the terminal `done` /
+/// error frame for streaming ones (exposed for tests).
+pub fn handle_line(router: &Router, line: &str) -> Json {
+    handle_frames(router, line).pop().expect("every request produces at least one frame")
+}
+
+fn dispatch(
+    router: &Router,
+    v: u64,
+    req: Request,
+    sink: &mut dyn FnMut(Json),
+) -> Result<(), ProtoError> {
+    match req {
+        Request::Generate(g) => generate(router, v, g, sink),
+        Request::SessionAppend(a) => session_append(router, v, a, sink),
+        Request::SessionOpen { model } => {
+            require_model(router, &model)?;
+            let sid = router.session_open(&model).map_err(session_err)?;
+            sink(ok_obj(v, vec![("session", n(sid as f64))]));
+            Ok(())
+        }
+        Request::SessionDrop { model, session } => {
+            require_model(router, &model)?;
+            router.session_drop(&model, session).map_err(session_err)?;
+            sink(ok_obj(v, vec![("dropped", n(session as f64))]));
+            Ok(())
+        }
+        Request::Metrics => {
+            sink(ok_obj(
+                v,
+                vec![
+                    ("summary", s(&router.registry.summary())),
+                    ("routes", router.registry.to_json()),
+                ],
+            ));
+            Ok(())
+        }
+        Request::MetricsProm => {
+            sink(ok_obj(v, vec![("text", s(&router.registry.prometheus()))]));
+            Ok(())
+        }
+        Request::Trace { last } => {
+            sink(ok_obj(v, vec![("trace", router.recorder.trace_json(last))]));
+            Ok(())
+        }
+        Request::Models => {
+            let models = router
+                .route_infos()
+                .iter()
+                .map(|info| {
+                    let mut fields = vec![
+                        ("name", s(&info.name)),
+                        ("kv_dtype", s(info.kv_dtype.name())),
+                        ("mode", s(info.mode)),
+                        ("admit", s(info.admit)),
+                        ("spec", Json::Bool(info.draft_k.is_some())),
+                        ("sessions", n(info.max_sessions as f64)),
+                        ("streaming", Json::Bool(info.streaming)),
+                    ];
+                    if let Some(k) = info.draft_k {
+                        fields.push(("draft_k", n(k as f64)));
+                    }
+                    obj(fields)
+                })
+                .collect();
+            sink(ok_obj(v, vec![("models", Json::Arr(models))]));
+            Ok(())
+        }
+    }
+}
+
+fn generate(
+    router: &Router,
+    v: u64,
+    g: Generate,
+    sink: &mut dyn FnMut(Json),
+) -> Result<(), ProtoError> {
+    require_model(router, &g.model)?;
     // Optional KV-dtype assertion: an unknown name errors with the valid
     // list; a known name must match what the route was registered with.
-    if let Some(want) = req.get("kv_dtype").and_then(Json::as_str) {
-        let want = KvDtype::parse(want).map_err(|e| anyhow!("{e}"))?;
+    if let Some(want) = &g.kv_dtype {
+        let want = KvDtype::parse(want).map_err(|e| ProtoError::new(codes::BAD_DTYPE, e))?;
         let have = router
             .model_infos()
             .into_iter()
-            .find(|&(name, _)| name == model)
+            .find(|&(name, _)| name == g.model)
             .map(|(_, dt)| dt)
-            .ok_or_else(|| anyhow!("unknown model {model}"))?;
+            .expect("model checked above");
         if want != have {
-            return Err(anyhow!(
-                "model {model} serves kv_dtype {}, not {}",
+            let msg = format!(
+                "model {} serves kv_dtype {}, not {}",
+                g.model,
                 have.name(),
                 want.name()
-            ));
+            );
+            return Err(ProtoError::new(codes::BAD_DTYPE, msg));
         }
     }
-    let prompt: Vec<u32> = req
-        .get("prompt")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("missing prompt"))?
-        .iter()
-        .map(|v| v.as_usize().map(|u| u as u32).ok_or_else(|| anyhow!("bad token")))
-        .collect::<Result<_>>()?;
-    let max_new = req.get("max_new").and_then(Json::as_usize).unwrap_or(16);
-    let stop = req.get("stop").and_then(Json::as_usize).map(|u| u as u32);
-    // Admission metadata (both optional, both inert under FIFO routes).
-    let priority = req.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i32;
-    let client_id = req.get("client_id").and_then(Json::as_usize).unwrap_or(0) as u64;
-    let opts = RequestOpts { max_new: max_new.min(256), stop, priority, client_id };
-    let result = router.generate_with(model, prompt, opts)?;
-    let mut fields = vec![
-        ("ok", Json::Bool(true)),
-        ("tokens", Json::Arr(result.tokens.iter().map(|&t| n(t as f64)).collect())),
-    ];
+    let opts = RequestOpts {
+        max_new: g.max_new,
+        stop: g.stop,
+        priority: g.priority,
+        client_id: g.client_id,
+        sample: g.sample,
+    };
+    if g.stream {
+        let rx = router
+            .submit_stream_with(&g.model, g.prompt, opts)
+            .map_err(|e| ProtoError::bad_request(e.to_string()))?;
+        pump_stream(rx, v, None, sink)
+    } else {
+        let rx = router
+            .submit_with(&g.model, g.prompt, opts)
+            .map_err(|e| ProtoError::bad_request(e.to_string()))?;
+        let result = rx
+            .recv_timeout(REQUEST_TIMEOUT)
+            .map_err(|_| ProtoError::new(codes::INTERNAL, "generation timed out"))?;
+        sink(obj(result_fields(v, &result, None)));
+        Ok(())
+    }
+}
+
+fn session_append(
+    router: &Router,
+    v: u64,
+    a: Append,
+    sink: &mut dyn FnMut(Json),
+) -> Result<(), ProtoError> {
+    require_model(router, &a.model)?;
+    let opts = RequestOpts {
+        max_new: a.max_new,
+        stop: a.stop,
+        priority: a.priority,
+        client_id: a.client_id,
+        sample: a.sample,
+    };
+    let rx = router
+        .session_append_stream(&a.model, a.session, a.tokens, opts)
+        .map_err(session_err)?;
+    if a.stream {
+        pump_stream(rx, v, Some(a.session), sink)
+    } else {
+        // Same submission path as streamed turns; only delivery differs.
+        loop {
+            match rx.recv_timeout(REQUEST_TIMEOUT) {
+                Ok(StreamEvent::Token { .. }) => continue,
+                Ok(StreamEvent::Done(result)) => {
+                    sink(obj(result_fields(v, &result, Some(a.session))));
+                    return Ok(());
+                }
+                Err(_) => {
+                    return Err(ProtoError::new(codes::INTERNAL, "generation timed out"))
+                }
+            }
+        }
+    }
+}
+
+/// Relay a stream: one `token` frame per generated token, then the
+/// terminal `done` frame with the full result.
+fn pump_stream(
+    rx: Receiver<StreamEvent>,
+    v: u64,
+    session: Option<u64>,
+    sink: &mut dyn FnMut(Json),
+) -> Result<(), ProtoError> {
+    loop {
+        match rx.recv_timeout(REQUEST_TIMEOUT) {
+            Ok(StreamEvent::Token { index, token }) => {
+                sink(obj(vec![
+                    ("event", s("token")),
+                    ("index", n(index as f64)),
+                    ("token", n(token as f64)),
+                ]));
+            }
+            Ok(StreamEvent::Done(result)) => {
+                let mut fields = vec![("event", s("done"))];
+                fields.extend(result_fields(v, &result, session));
+                sink(obj(fields));
+                return Ok(());
+            }
+            Err(_) => return Err(ProtoError::new(codes::INTERNAL, "generation timed out")),
+        }
+    }
+}
+
+/// The success-response fields for one finished generation.
+fn result_fields(
+    v: u64,
+    result: &GenResult,
+    session: Option<u64>,
+) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![("ok", Json::Bool(true))];
+    if v >= 2 {
+        fields.push(("v", n(2.0)));
+    }
+    if let Some(sid) = session {
+        fields.push(("session", n(sid as f64)));
+    }
+    fields.push(("tokens", Json::Arr(result.tokens.iter().map(|&t| n(t as f64)).collect())));
     if let Some(ttft) = result.ttft_s {
         fields.push(("ttft_ms", n(ttft * 1e3)));
     }
@@ -199,7 +315,38 @@ fn process(router: &Router, line: &str) -> Result<Json> {
         let rate = if drafted > 0 { accepted as f64 / drafted as f64 } else { 0.0 };
         fields.push(("accept_rate", n(rate)));
     }
-    Ok(obj(fields))
+    fields
+}
+
+/// A single-frame success response: `{"ok":true, ...}` plus the version
+/// stamp on v2.
+fn ok_obj(v: u64, mut fields: Vec<(&'static str, Json)>) -> Json {
+    let mut all = vec![("ok", Json::Bool(true))];
+    if v >= 2 {
+        all.push(("v", n(2.0)));
+    }
+    all.append(&mut fields);
+    obj(all)
+}
+
+fn require_model(router: &Router, model: &str) -> Result<(), ProtoError> {
+    if router.models().iter().any(|m| *m == model) {
+        Ok(())
+    } else {
+        Err(ProtoError::new(codes::UNKNOWN_MODEL, format!("unknown model {model}")))
+    }
+}
+
+/// Session failures keep their typed identity on the wire.
+fn session_err(e: SessionError) -> ProtoError {
+    let code = match &e {
+        SessionError::Disabled => codes::SESSIONS_DISABLED,
+        SessionError::Unknown(_) => codes::UNKNOWN_SESSION,
+        SessionError::Busy(_) => codes::SESSION_BUSY,
+        SessionError::TableFull(_) => codes::SESSION_LIMIT,
+        SessionError::Invalid(_) => codes::BAD_REQUEST,
+    };
+    ProtoError::new(code, e.to_string())
 }
 
 /// Minimal blocking client for examples/tests.
@@ -214,13 +361,28 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
-    /// Send one JSON request, get one JSON response.
-    pub fn call(&mut self, req: &Json) -> Result<Json> {
+    /// Send one JSON request line without waiting for the response.
+    pub fn send(&mut self, req: &Json) -> Result<()> {
         self.writer.write_all(req.to_string_compact().as_bytes())?;
         self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read one response frame (streaming responses deliver several per
+    /// request — read until a frame with `"event":"done"` or `"ok":false`).
+    pub fn recv(&mut self) -> Result<Json> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("connection closed"));
+        }
         Json::parse(line.trim()).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    /// Send one JSON request, get one JSON response.
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.send(req)?;
+        self.recv()
     }
 
     /// Convenience generate call.
@@ -252,18 +414,36 @@ mod tests {
     use super::*;
     use crate::model::{by_name, init};
     use crate::rng::Pcg32;
+    use crate::server::scheduler::SchedPolicy;
     use crate::server::{BatchPolicy, Engine};
 
-    fn router() -> Arc<Router> {
+    fn engine() -> Engine {
         let cfg = by_name("sim-125m").unwrap();
         let mut rng = Pcg32::seeded(1);
         let w = init(&cfg, &mut rng);
+        Engine::new("sim-125m", cfg, Arc::new(w), None)
+    }
+
+    fn router() -> Arc<Router> {
         let mut r = Router::new();
-        r.register(
-            Engine::new("sim-125m", cfg, Arc::new(w), None),
-            BatchPolicy::default(),
-        );
+        r.register(engine(), BatchPolicy::default());
         Arc::new(r)
+    }
+
+    fn session_router() -> Arc<Router> {
+        let mut r = Router::new();
+        let policy = SchedPolicy { max_slots: 2, max_sessions: 2, ..Default::default() };
+        r.register_continuous(engine(), policy);
+        Arc::new(r)
+    }
+
+    fn toks(resp: &Json) -> Vec<usize> {
+        resp.get("tokens")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect()
     }
 
     #[test]
@@ -272,15 +452,33 @@ mod tests {
         let resp = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":3}"#);
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
         assert_eq!(resp.get("tokens").and_then(Json::as_arr).unwrap().len(), 3);
+        // The legacy v1 success carries no version stamp; v2 does.
+        assert!(resp.get("v").is_none());
+        let resp =
+            handle_line(&r, r#"{"v":2,"model":"sim-125m","prompt":[5,6],"max_new":3}"#);
+        assert_eq!(resp.get("v").and_then(Json::as_f64), Some(2.0));
     }
 
     #[test]
     fn handle_line_errors() {
         let r = router();
+        // v1 errors keep the legacy flat string shape.
         let resp = handle_line(&r, "not json");
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(resp.get("error").and_then(Json::as_str).is_some());
         let resp = handle_line(&r, r#"{"model":"nope","prompt":[1]}"#);
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        // v2 errors are structured with a stable machine-readable code.
+        let resp = handle_line(&r, r#"{"v":2,"model":"nope","prompt":[1]}"#);
+        let err = resp.get("error").expect("structured error");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(codes::UNKNOWN_MODEL));
+        assert!(err.get("message").and_then(Json::as_str).unwrap().contains("nope"));
+        let resp = handle_line(&r, r#"{"v":2,"model":"sim-125m","prompt":[1],"oops":3}"#);
+        let err = resp.get("error").expect("structured error");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(codes::BAD_REQUEST));
+        let resp = handle_line(&r, r#"{"v":2,"cmd":"nope"}"#);
+        let err = resp.get("error").expect("structured error");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(codes::UNKNOWN_CMD));
     }
 
     /// The optional `kv_dtype` request field: a matching name passes, an
@@ -306,46 +504,119 @@ mod tests {
         assert_eq!(mismatch.get("ok").and_then(Json::as_bool), Some(false));
         let msg = mismatch.get("error").and_then(Json::as_str).unwrap();
         assert!(msg.contains("serves kv_dtype f32"), "{msg}");
+        // v2 carries the same failures under the bad_dtype code.
+        let resp = handle_line(
+            &r,
+            r#"{"v":2,"model":"sim-125m","prompt":[5,6],"kv_dtype":"bf16"}"#,
+        );
+        let err = resp.get("error").expect("structured error");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(codes::BAD_DTYPE));
     }
 
     #[test]
     fn stop_field_retires_generation_early() {
         let r = router();
         let free = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":5}"#);
-        let free_toks: Vec<usize> = free
-            .get("tokens")
-            .and_then(Json::as_arr)
-            .unwrap()
-            .iter()
-            .filter_map(Json::as_usize)
-            .collect();
+        let free_toks = toks(&free);
         let stop = free_toks[1];
         let resp = handle_line(
             &r,
             &format!(r#"{{"model":"sim-125m","prompt":[5,6],"max_new":5,"stop":{stop}}}"#),
         );
-        let got: Vec<usize> = resp
-            .get("tokens")
-            .and_then(Json::as_arr)
-            .unwrap()
-            .iter()
-            .filter_map(Json::as_usize)
-            .collect();
+        let got = toks(&resp);
         let cut = free_toks.iter().position(|&t| t == stop).unwrap() + 1;
         assert_eq!(got, free_toks[..cut].to_vec());
     }
 
+    /// A `"stream":true` generate yields one token frame per generated
+    /// token then a done frame whose tokens equal the concatenation —
+    /// and equal the non-streamed response for the same request.
+    #[test]
+    fn streamed_generate_frames_concatenate_to_plain_response() {
+        for r in [router(), session_router()] {
+            let plain = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":4}"#);
+            let frames = handle_frames(
+                &r,
+                r#"{"v":2,"model":"sim-125m","prompt":[5,6],"max_new":4,"stream":true}"#,
+            );
+            assert_eq!(frames.len(), 5, "4 token frames + done");
+            let mut streamed = Vec::new();
+            for (i, f) in frames[..4].iter().enumerate() {
+                assert_eq!(f.get("event").and_then(Json::as_str), Some("token"));
+                assert_eq!(f.get("index").and_then(Json::as_usize), Some(i));
+                streamed.push(f.get("token").and_then(Json::as_usize).unwrap());
+            }
+            let done = &frames[4];
+            assert_eq!(done.get("event").and_then(Json::as_str), Some("done"));
+            assert_eq!(done.get("ok").and_then(Json::as_bool), Some(true));
+            assert_eq!(done.get("v").and_then(Json::as_f64), Some(2.0));
+            assert_eq!(toks(done), streamed);
+            assert_eq!(toks(done), toks(&plain));
+        }
+    }
+
+    /// One v2 `session_append` request line for the test route: `rest` is
+    /// the trailing fields after the session id (starting with a comma).
+    fn append_line(sid: usize, rest: &str) -> String {
+        let head = r#""v":2,"cmd":"session_append","model":"sim-125m""#;
+        format!(r#"{{{head},"session":{sid}{rest}}}"#)
+    }
+
+    /// The full session lifecycle over the wire: open, two appended turns
+    /// (one streamed), drop, and typed errors afterwards.
+    #[test]
+    fn session_commands_over_the_wire() {
+        let r = session_router();
+        let opened = handle_line(&r, r#"{"v":2,"cmd":"session_open","model":"sim-125m"}"#);
+        assert_eq!(opened.get("ok").and_then(Json::as_bool), Some(true));
+        let sid = opened.get("session").and_then(Json::as_usize).expect("session id");
+        let t1 = handle_line(&r, &append_line(sid, r#","tokens":[5,6],"max_new":3"#));
+        assert_eq!(t1.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(t1.get("session").and_then(Json::as_usize), Some(sid));
+        let t1_toks = toks(&t1);
+        assert_eq!(t1_toks.len(), 3);
+        // Turn 2 streams; its done frame carries the session id too.
+        let turn2 = append_line(sid, r#","tokens":[9],"max_new":3,"stream":true"#);
+        let frames = handle_frames(&r, &turn2);
+        let done = frames.last().unwrap();
+        assert_eq!(done.get("event").and_then(Json::as_str), Some("done"));
+        assert_eq!(done.get("session").and_then(Json::as_usize), Some(sid));
+        // Reference: fresh request over the full conversation so far.
+        let mid: Vec<u32> = t1_toks.iter().map(|&t| t as u32).collect();
+        let full = [vec![5u32, 6], mid, vec![9u32]].concat();
+        let solo = r.generate("sim-125m", full, 3).unwrap();
+        let got: Vec<u32> = toks(done).iter().map(|&t| t as u32).collect();
+        assert_eq!(got, solo.tokens);
+        let dropped = handle_line(
+            &r,
+            &format!(r#"{{"v":2,"cmd":"session_drop","model":"sim-125m","session":{sid}}}"#),
+        );
+        assert_eq!(dropped.get("dropped").and_then(Json::as_usize), Some(sid));
+        let gone = handle_line(&r, &append_line(sid, r#","tokens":[4]"#));
+        let err = gone.get("error").expect("structured error");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(codes::UNKNOWN_SESSION));
+        // Session commands on a session-less route fail typed too.
+        let plain = router();
+        let resp = handle_line(&plain, r#"{"v":2,"cmd":"session_open","model":"sim-125m"}"#);
+        let err = resp.get("error").expect("structured error");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(codes::SESSIONS_DISABLED));
+    }
+
     #[test]
     fn metrics_and_models_cmds() {
-        let r = router();
+        let r = session_router();
         let resp = handle_line(&r, r#"{"cmd":"models"}"#);
         let text = resp.to_string_compact();
         assert!(text.contains("sim-125m"));
-        // Each model entry reports its serving KV cache dtype and whether
-        // the route decodes speculatively.
+        // Each model entry reports its serving KV cache dtype, mode,
+        // admission policy, session capacity, and streaming support.
         assert!(text.contains("kv_dtype"), "missing kv_dtype in {text}");
         assert!(text.contains("f32"));
         assert!(text.contains("\"spec\":false"), "missing spec flag in {text}");
+        assert!(text.contains("\"mode\":\"continuous\""), "missing mode in {text}");
+        assert!(text.contains("\"admit\":\"fifo\""), "missing admit in {text}");
+        assert!(text.contains("\"sessions\":2"), "missing sessions in {text}");
+        assert!(text.contains("\"streaming\":true"), "missing streaming in {text}");
         // `metrics` keeps the legacy one-line aggregate under `summary`
         // and adds the per-route structured export under `routes`.
         let _ = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":2}"#);
@@ -386,7 +657,6 @@ mod tests {
         use crate::kernels::LinearOp;
         use crate::model::CompressedWeights;
         use crate::quant::slim_quant;
-        use crate::server::scheduler::SchedPolicy;
         let cfg = by_name("sim-125m").unwrap();
         let mut rng = Pcg32::seeded(1);
         let w = Arc::new(init(&cfg, &mut rng));
@@ -406,6 +676,7 @@ mod tests {
         let models = handle_line(&r, r#"{"cmd":"models"}"#).to_string_compact();
         assert!(models.contains("\"spec\":true"), "{models}");
         assert!(models.contains("\"draft_k\":3"), "{models}");
+        assert!(models.contains("\"mode\":\"speculative\""), "{models}");
 
         let resp = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":6}"#);
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
@@ -426,7 +697,6 @@ mod tests {
         // reports the server-measured TTFT; tokens are unchanged by the
         // metadata (same greedy path).
         use crate::server::batcher::AdmitPolicy;
-        use crate::server::scheduler::SchedPolicy;
         let cfg = by_name("sim-125m").unwrap();
         let mut rng = Pcg32::seeded(1);
         let w = init(&cfg, &mut rng);
@@ -450,6 +720,21 @@ mod tests {
         );
     }
 
+    /// Sampling knobs flow through the wire: same seed reproduces, and a
+    /// temperature-sampled response differs from greedy for some seed.
+    #[test]
+    fn sampling_fields_flow_through_the_wire() {
+        let r = router();
+        let base = r#"{"model":"sim-125m","prompt":[5,6],"max_new":6"#;
+        let line = format!(r#"{base},"temperature":0.9,"top_k":12,"top_p":0.95,"seed":7}}"#);
+        let a = handle_line(&r, &line);
+        let b = handle_line(&r, &line);
+        assert_eq!(toks(&a), toks(&b), "same seed must reproduce over the wire");
+        // Out-of-range knobs are rejected at the protocol boundary.
+        let bad = handle_line(&r, r#"{"model":"sim-125m","prompt":[5],"top_p":1.5}"#);
+        assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
     #[test]
     fn tcp_round_trip() {
         let r = router();
@@ -464,5 +749,47 @@ mod tests {
         let mut client = Client::connect(addr).unwrap();
         let tokens = client.generate("sim-125m", &[9, 10, 11], 4).unwrap();
         assert_eq!(tokens.len(), 4);
+    }
+
+    /// Streaming over a real TCP connection: frames arrive one per line,
+    /// terminated by the done frame.
+    #[test]
+    fn tcp_streaming_round_trip() {
+        let r = session_router();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let r2 = r.clone();
+        std::thread::spawn(move || {
+            let _ = serve(r2, "127.0.0.1:0", move |addr| {
+                let _ = tx.send(addr);
+            });
+        });
+        let addr = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        let mut client = Client::connect(addr).unwrap();
+        let req = obj(vec![
+            ("v", n(2.0)),
+            ("model", s("sim-125m")),
+            ("prompt", Json::Arr(vec![n(9.0), n(10.0)])),
+            ("max_new", n(4.0)),
+            ("stream", Json::Bool(true)),
+        ]);
+        client.send(&req).unwrap();
+        let mut streamed = Vec::new();
+        let done = loop {
+            let frame = client.recv().unwrap();
+            match frame.get("event").and_then(Json::as_str) {
+                Some("token") => {
+                    assert_eq!(
+                        frame.get("index").and_then(Json::as_usize),
+                        Some(streamed.len())
+                    );
+                    streamed.push(frame.get("token").and_then(Json::as_usize).unwrap());
+                }
+                Some("done") => break frame,
+                other => panic!("unexpected frame {other:?}"),
+            }
+        };
+        assert_eq!(done.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(toks(&done), streamed);
+        assert_eq!(streamed.len(), 4);
     }
 }

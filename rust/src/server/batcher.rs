@@ -16,7 +16,7 @@
 //!   a poll interval) only when nothing is in flight.
 //!   [`Batcher::try_take`] is the FIFO special case.
 
-use super::engine::{GenRequest, GenResult};
+use super::engine::{GenRequest, GenResult, StreamEvent};
 use super::obs::{EventKind, FlightRecorder};
 use std::cmp::Reverse;
 use std::collections::VecDeque;
@@ -84,6 +84,10 @@ pub struct Pending {
     pub enqueued: Instant,
     /// Where the finished [`GenResult`] goes.
     pub result_slot: std::sync::mpsc::Sender<GenResult>,
+    /// Set on streamed submissions ([`Batcher::submit_stream`]): the
+    /// consumer pushes a [`StreamEvent::Token`] per emitted token as it is
+    /// generated and a final [`StreamEvent::Done`] with the full result.
+    pub stream: Option<std::sync::mpsc::Sender<StreamEvent>>,
 }
 
 impl Pending {
@@ -133,10 +137,35 @@ impl Batcher {
     /// Submit a request; returns a receiver for its result.
     pub fn submit(&self, req: GenRequest) -> std::sync::mpsc::Receiver<GenResult> {
         let (tx, rx) = std::sync::mpsc::channel();
+        self.enqueue(req, tx, None);
+        rx
+    }
+
+    /// Submit a request for streamed delivery: the returned receiver yields
+    /// one [`StreamEvent::Token`] per generated token *as the scheduler
+    /// emits it* (a tick may emit several) and ends with a
+    /// [`StreamEvent::Done`] carrying the same [`GenResult`] a plain
+    /// [`Batcher::submit`] would have returned.
+    pub fn submit_stream(&self, req: GenRequest) -> std::sync::mpsc::Receiver<StreamEvent> {
+        // The result channel still exists so every consumer can treat
+        // `result_slot` uniformly; its receiver is dropped here because the
+        // `Done` frame carries the result (sends are always `let _ =`).
+        let (res_tx, _res_rx) = std::sync::mpsc::channel();
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.enqueue(req, res_tx, Some(tx));
+        rx
+    }
+
+    fn enqueue(
+        &self,
+        req: GenRequest,
+        result_slot: std::sync::mpsc::Sender<GenResult>,
+        stream: Option<std::sync::mpsc::Sender<StreamEvent>>,
+    ) {
         let (id, prompt_len) = (req.id, req.prompt.len());
         let depth = {
             let mut q = self.queue.lock().unwrap();
-            q.push_back(Pending { req, enqueued: Instant::now(), result_slot: tx });
+            q.push_back(Pending { req, enqueued: Instant::now(), result_slot, stream });
             q.len()
         };
         self.notify.notify_all();
@@ -151,7 +180,6 @@ impl Batcher {
                 depth.min(u32::MAX as usize) as u32,
             );
         }
-        rx
     }
 
     /// Stop the batcher; pending `next_batch`/`wait_pending` calls return

@@ -41,8 +41,8 @@
 //! (`SLIM_TUNE=off` skips, `SLIM_TUNE_CACHE=<path>` persists the pick).
 
 use crate::model::{
-    forward_cached, forward_slots, greedy_pick, CompressedWeights, KvCache, KvCachePool, KvDtype,
-    KvLayout, Linears, ModelConfig, Overrides, Weights,
+    forward_cached, forward_slots, CompressedWeights, KvCache, KvCachePool, KvDtype, KvLayout,
+    Linears, ModelConfig, Overrides, SampleParams, Sampler, Weights,
 };
 use crate::tensor::Matrix;
 use std::sync::Arc;
@@ -63,6 +63,15 @@ pub struct GenRequest {
     /// Originating client, for per-client fair-share admission (0 =
     /// anonymous). The engine itself ignores it.
     pub client_id: u64,
+    /// Sampling knobs (temperature / top-k / top-p / seed). The default is
+    /// greedy argmax, which consumes no RNG and reproduces the
+    /// pre-sampling serving stack token for token.
+    pub sample: SampleParams,
+    /// Serving session this request extends (`server::session`): the
+    /// scheduler resumes the session's parked KV slot instead of
+    /// re-prefilling history, and parks it again at retirement. The engine
+    /// itself ignores it.
+    pub session: Option<u64>,
 }
 
 impl GenRequest {
@@ -92,6 +101,20 @@ impl GenRequest {
         self.client_id = client_id;
         self
     }
+
+    /// Sample with `params` instead of greedy argmax (the seed makes the
+    /// output deterministic across serving paths).
+    pub fn with_sample(mut self, params: SampleParams) -> Self {
+        self.sample = params;
+        self
+    }
+
+    /// Attach the request to a serving session (turn N+1 of a multi-turn
+    /// conversation; the scheduler resumes the session's parked KV slot).
+    pub fn with_session(mut self, session: u64) -> Self {
+        self.session = Some(session);
+        self
+    }
 }
 
 /// Completed generation.
@@ -114,6 +137,18 @@ pub struct GenResult {
     pub spec: Option<(usize, usize)>,
 }
 
+/// One frame of a streamed generation: the scheduler pushes a `Token` the
+/// tick it is emitted and a final `Done` carrying the same [`GenResult`]
+/// a non-streaming submit would have returned — so a streamed request's
+/// concatenated `Token` frames always equal its `Done.tokens`.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// `token` is the `index`-th generated token (0-based).
+    Token { index: usize, token: u32 },
+    /// Generation finished; carries the complete result.
+    Done(GenResult),
+}
+
 /// One in-flight sequence: its cache slot, token history and stop state.
 ///
 /// Produced by [`Engine::prefill`], advanced by [`Engine::decode_step`];
@@ -131,6 +166,9 @@ pub struct SeqState {
     /// Prompt (BOS if empty) + generated tokens.
     seq: Vec<u32>,
     prompt_len: usize,
+    /// Per-sequence sampling state (knobs + seeded RNG stream); greedy
+    /// params never touch the RNG.
+    sampler: Sampler,
 }
 
 impl SeqState {
@@ -156,6 +194,19 @@ impl SeqState {
         if self.seq.len() - self.prompt_len >= self.max_new || self.stop == Some(t) {
             self.done = true;
         }
+    }
+
+    /// Sample this sequence's next token from a logits row, advancing the
+    /// per-sequence RNG (greedy params draw nothing).
+    pub(crate) fn pick(&mut self, row: &[f32]) -> u32 {
+        self.sampler.pick(row) as u32
+    }
+
+    /// A snapshot of the sampling stream at its current position — the
+    /// speculative draft proposes from this clone so real draws stay
+    /// aligned with the tokens the target actually emits.
+    pub(crate) fn sampler_clone(&self) -> Sampler {
+        self.sampler.clone()
     }
 }
 
@@ -235,6 +286,12 @@ impl PrefillState {
     /// logits row).
     pub(crate) fn push_first(&mut self, t: u32) {
         self.state.push_token(t);
+    }
+
+    /// Sample the first token from the completing chunk's logits row,
+    /// advancing the sequence's RNG.
+    pub(crate) fn pick(&mut self, row: &[f32]) -> u32 {
+        self.state.pick(row)
     }
 }
 
@@ -382,10 +439,54 @@ impl Engine {
                 done: req.max_new == 0,
                 seq,
                 prompt_len,
+                sampler: Sampler::new(req.sample),
             },
             win_start: prompt_len - win,
             win,
             fed: 0,
+        }
+    }
+
+    /// Resume a multi-turn session onto its parked cache slot: the prompt
+    /// is the FULL conversation (history + new tokens) but `slot` already
+    /// caches its first `pool.len(slot)` rows from previous turns, so only
+    /// the uncached suffix is fed — turn N+1 prefills the new tokens, not
+    /// the whole history. The caller (the scheduler's session path)
+    /// guarantees the cached rows are a prefix of the windowed prompt:
+    /// sessions resume only while the full conversation fits `max_seq`
+    /// (deeper conversations fall back to a fresh windowed prefill) and
+    /// the parked cache always ends one row short of the history (the last
+    /// emitted token is never fed back), so at least one token remains.
+    pub fn prefill_resume(
+        &self,
+        req: &GenRequest,
+        pool: &KvCachePool,
+        slot: usize,
+    ) -> PrefillState {
+        let seq = req.prompt.clone();
+        let prompt_len = seq.len();
+        let win = prompt_len.min(self.cfg.max_seq);
+        let win_start = prompt_len - win;
+        let cached = pool.len(slot);
+        assert!(
+            win_start <= cached && cached < prompt_len,
+            "resume: cached rows {cached} not a proper prefix of windowed prompt \
+             ({win_start}..{prompt_len})"
+        );
+        PrefillState {
+            state: SeqState {
+                id: req.id,
+                slot,
+                max_new: req.max_new,
+                stop: req.stop,
+                done: req.max_new == 0,
+                seq,
+                prompt_len,
+                sampler: Sampler::new(req.sample),
+            },
+            win_start,
+            win,
+            fed: cached - win_start,
         }
     }
 
@@ -466,14 +567,16 @@ impl Engine {
             stats.prefill_tokens += c;
             if p.fed == p.win {
                 // The chunk that completes the prompt emits the first token.
-                p.state.push_token(greedy_pick(logits.row(row - 1)) as u32);
+                let t = p.state.pick(logits.row(row - 1));
+                p.state.push_token(t);
                 stats.first_tokens += 1;
             }
         }
         // Decode spans are one token each: entry j's logits are row j after
         // the prefill rows.
         for &i in &who {
-            decodes[i].push_token(greedy_pick(logits.row(row)) as u32);
+            let t = decodes[i].pick(logits.row(row));
+            decodes[i].push_token(t);
             row += 1;
             stats.decode_tokens += 1;
         }
@@ -570,7 +673,7 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{by_name, forward, init, Batch};
+    use crate::model::{by_name, forward, greedy_pick, init, Batch};
     use crate::rng::Pcg32;
 
     fn engine() -> Engine {

@@ -82,6 +82,12 @@ pub struct Metrics {
     /// Per-token decode-step durations (seconds) — the per-token decode
     /// latency every active sequence paid for that step.
     decode_steps: Histogram,
+    /// Per-sequence inter-token gaps (seconds): the wall time between two
+    /// consecutive emission events of one sequence — what a streaming
+    /// client actually observes between token frames. Distinct from
+    /// `decode_steps` (engine time per token): a sequence's gap also
+    /// includes ticks spent on other sequences' prefill chunks.
+    inter_tokens: Histogram,
     /// Fixed-route batch sizes (requests per generate_batch call).
     batch_sizes: Histogram,
     /// Continuous-route step occupancy (active slots per scheduler tick).
@@ -110,6 +116,7 @@ impl Metrics {
             ttfts: Histogram::new(),
             queue_waits: Histogram::new(),
             decode_steps: Histogram::new(),
+            inter_tokens: Histogram::new(),
             batch_sizes: Histogram::new(),
             occupancy: Histogram::new(),
             busy: AtomicF64::new(0.0),
@@ -208,6 +215,20 @@ impl Metrics {
         self.stage_busy[Stage::SpecDraft.idx()].add(draft);
         self.stage_busy[Stage::SpecVerify.idx()].add(elapsed_s - draft);
         self.decode_steps.record(elapsed_s * seqs as f64 / new_tokens as f64);
+    }
+
+    /// Record one sequence's gap between two consecutive token-emission
+    /// events (the cadence a streaming client sees between frames). The
+    /// scheduler records one observation per sequence per emitting tick,
+    /// starting from the second emission — the first gap is TTFT and lands
+    /// in its own histogram.
+    pub fn record_inter_token(&self, gap_s: f64) {
+        self.inter_tokens.record(gap_s);
+    }
+
+    /// Inter-token gap percentile (0..100).
+    pub fn inter_token_pct(&self, pct: f64) -> f64 {
+        self.inter_tokens.percentile(pct)
     }
 
     /// Record one speculative verify step: the draft proposed `drafted`
@@ -341,12 +362,13 @@ impl Metrics {
     }
 
     /// Histogram families exported per route, as `(family name, histogram)`.
-    pub fn histograms(&self) -> [(&'static str, &Histogram); 6] {
+    pub fn histograms(&self) -> [(&'static str, &Histogram); 7] {
         [
             ("request_latency_seconds", &self.latencies),
             ("ttft_seconds", &self.ttfts),
             ("queue_wait_seconds", &self.queue_waits),
             ("decode_step_seconds", &self.decode_steps),
+            ("inter_token_seconds", &self.inter_tokens),
             ("batch_size", &self.batch_sizes),
             ("step_occupancy", &self.occupancy),
         ]
@@ -365,6 +387,7 @@ impl Metrics {
         self.ttfts.absorb(&other.ttfts);
         self.queue_waits.absorb(&other.queue_waits);
         self.decode_steps.absorb(&other.decode_steps);
+        self.inter_tokens.absorb(&other.inter_tokens);
         self.batch_sizes.absorb(&other.batch_sizes);
         self.occupancy.absorb(&other.occupancy);
         self.busy.add(other.busy.get());
@@ -540,6 +563,26 @@ mod tests {
         assert!(s.contains("ttft_p50="), "{s}");
         assert!(s.contains("decode_p95="), "{s}");
         assert!(s.contains("queue=1(max 3)"), "{s}");
+    }
+
+    #[test]
+    fn inter_token_gaps_recorded_and_exported() {
+        let m = Metrics::new();
+        assert_eq!(m.inter_token_pct(50.0), 0.0);
+        m.record_inter_token(0.002);
+        m.record_inter_token(0.004);
+        m.record_inter_token(0.050);
+        assert!(close(m.inter_token_pct(50.0), 0.004));
+        assert!(close(m.inter_token_pct(95.0), 0.050));
+        // Inter-token gaps are their own export family, separate from the
+        // engine-time decode_step histogram.
+        let j = m.export_json();
+        let fam = j.get("inter_token_seconds").expect("inter_token_seconds family");
+        assert_eq!(fam.get("count").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(
+            j.get("decode_step_seconds").unwrap().get("count").and_then(Json::as_f64),
+            Some(0.0)
+        );
     }
 
     #[test]

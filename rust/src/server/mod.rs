@@ -63,10 +63,19 @@
 //!   (round-robin over `GenRequest::client_id`, `priority` first).
 //! * [`router`] — routes requests to named engines (model registry), one
 //!   worker per engine in either serving mode; `submit_with` carries the
-//!   full `RequestOpts` (stop, priority, client id).
-//! * [`api`] — newline-delimited-JSON TCP protocol + a blocking client
-//!   (`priority`/`client_id`/`kv_dtype` request fields; `ttft_ms` plus
-//!   speculative `drafted`/`accepted`/`accept_rate` in responses).
+//!   full `RequestOpts` (stop, priority, client id, sampling knobs), and
+//!   `submit_stream_with` / the `session_*` methods expose streamed
+//!   delivery and stateful multi-turn sessions on scheduler routes.
+//! * [`session`] — the per-route session table behind multi-turn serving:
+//!   each open session keeps its conversation history and a parked KV
+//!   cache slot between turns (LRU-evictable under slot pressure), so
+//!   turn N+1 prefills only its new tokens.
+//! * [`proto`] — the typed wire protocol: `Request`/`Envelope` parsing
+//!   with strict unknown-field rejection, the v1/v2 version rules, and
+//!   the stable error codes (`proto::codes`) — see `docs/PROTOCOL.md`.
+//! * [`api`] — newline-delimited-JSON TCP front-end over [`proto`] + a
+//!   blocking client: generate (one-shot or `"stream":true` incremental
+//!   frames), session commands, metrics/trace/models introspection.
 //! * [`metrics`] — per-route counters, queue depth, and
 //!   queue-wait/TTFT/decode-latency percentiles the benches read.
 //! * [`obs`] — the observability substrate the above emit into.
@@ -102,15 +111,19 @@ pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod obs;
+pub mod proto;
 pub mod router;
 pub mod scheduler;
+pub mod session;
 pub mod spec;
 
-pub use crate::model::{KvDtype, KvLayout};
+pub use crate::model::{KvDtype, KvLayout, SampleParams};
 pub use batcher::{AdmitPolicy, AdmitState, BatchPolicy, Batcher, Pending};
-pub use engine::{Engine, GenRequest, GenResult, PrefillState, SeqState, StepStats};
+pub use engine::{Engine, GenRequest, GenResult, PrefillState, SeqState, StepStats, StreamEvent};
 pub use metrics::{Metrics, Stage};
 pub use obs::{FlightRecorder, Histogram, Registry, RouteObs, SampleRing};
-pub use router::{RequestOpts, Router};
+pub use proto::ProtoError;
+pub use router::{RequestOpts, RouteInfo, Router};
 pub use scheduler::{SchedPolicy, Scheduler};
+pub use session::{SessionError, SessionTable};
 pub use spec::{SpecEngine, SpecStepStats};

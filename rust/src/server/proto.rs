@@ -1,0 +1,505 @@
+//! Typed wire protocol for the TCP JSON api (`server::api`).
+//!
+//! One request line parses into an [`Envelope`] — a protocol version plus
+//! a typed [`Request`] — or a typed [`ProtoError`] with a stable
+//! machine-readable code from [`codes`]. The full grammar, with example
+//! transcripts, lives in `docs/PROTOCOL.md`; this module is the single
+//! source of truth for what parses.
+//!
+//! Versioning: a request carrying `"v": 2` opts into the structured v2
+//! surface (`{"ok":false,"v":2,"error":{"code","message"}}` errors and
+//! `"v":2` stamped on success frames). A request with no `"v"` field (or
+//! an explicit `"v": 1`) is legacy v1: same commands, but errors stay the
+//! original flat string shape `{"ok":false,"error":"..."}`. Unknown
+//! versions are rejected. Unknown *fields* are rejected in both versions —
+//! a misspelled knob must fail loudly, not silently fall back to a
+//! default.
+
+use crate::model::SampleParams;
+use crate::util::json::{obj, s, Json};
+use std::collections::BTreeMap;
+
+/// Current protocol version. Requests without a `"v"` field speak v1.
+pub const VERSION: u64 = 2;
+
+/// Stable error codes carried in v2 error envelopes. Tests and clients
+/// match on these, never on message text.
+pub mod codes {
+    /// The line was not valid JSON (or not a JSON object).
+    pub const BAD_JSON: &str = "bad_json";
+    /// Structurally valid but semantically malformed request: missing or
+    /// mistyped field, unknown field, out-of-range knob, bad token.
+    pub const BAD_REQUEST: &str = "bad_request";
+    /// Unknown `"cmd"` value.
+    pub const UNKNOWN_CMD: &str = "unknown_cmd";
+    /// No route registered under the requested model name.
+    pub const UNKNOWN_MODEL: &str = "unknown_model";
+    /// Bad `kv_dtype` assertion: unknown dtype name, or a known name that
+    /// differs from the route's serving dtype.
+    pub const BAD_DTYPE: &str = "bad_dtype";
+    /// No live session with the given id on this route.
+    pub const UNKNOWN_SESSION: &str = "unknown_session";
+    /// The session already has a turn in flight.
+    pub const SESSION_BUSY: &str = "session_busy";
+    /// The route does not serve sessions.
+    pub const SESSIONS_DISABLED: &str = "sessions_disabled";
+    /// The route's session table is at `max_sessions`.
+    pub const SESSION_LIMIT: &str = "session_limit";
+    /// Server-side failure (timeout, route worker gone).
+    pub const INTERNAL: &str = "internal";
+}
+
+/// A typed protocol error: stable `code` + human-readable `message`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProtoError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ProtoError {
+    pub fn new(code: &'static str, message: impl Into<String>) -> Self {
+        ProtoError { code, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> Self {
+        Self::new(codes::BAD_REQUEST, message)
+    }
+}
+
+/// A parsed generate command (streaming is a flag, not a separate shape).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Generate {
+    pub model: String,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub stop: Option<u32>,
+    pub priority: i32,
+    pub client_id: u64,
+    /// Optional assertion on the route's serving KV cache dtype.
+    pub kv_dtype: Option<String>,
+    pub sample: SampleParams,
+    /// Deliver incrementally as `token`/`done` frames instead of one
+    /// response line.
+    pub stream: bool,
+}
+
+/// A parsed session-append command: one conversation turn.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Append {
+    pub model: String,
+    pub session: u64,
+    /// The turn's NEW tokens only; the server prepends the history.
+    pub tokens: Vec<u32>,
+    pub max_new: usize,
+    pub stop: Option<u32>,
+    pub priority: i32,
+    pub client_id: u64,
+    pub sample: SampleParams,
+    pub stream: bool,
+}
+
+/// Every request the wire protocol understands.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Generate(Generate),
+    SessionOpen { model: String },
+    SessionAppend(Append),
+    SessionDrop { model: String, session: u64 },
+    Metrics,
+    MetricsProm,
+    Trace { last: Option<usize> },
+    Models,
+}
+
+/// A parsed request plus the protocol version it arrived under (the
+/// version shapes the response, error frames especially).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Envelope {
+    pub v: u64,
+    pub req: Request,
+}
+
+/// Parse one request line. On failure the error carries the version the
+/// reply should speak — v1 when the line was too broken to tell.
+pub fn parse(line: &str) -> Result<Envelope, (u64, ProtoError)> {
+    let json = Json::parse(line)
+        .map_err(|e| (1, ProtoError::new(codes::BAD_JSON, format!("bad json: {e}"))))?;
+    let Json::Obj(map) = &json else {
+        return Err((1, ProtoError::new(codes::BAD_JSON, "request must be a JSON object")));
+    };
+    let v = match map.get("v") {
+        None => 1,
+        Some(x) => match x.as_f64() {
+            Some(f) if f == 1.0 => 1,
+            Some(f) if f == 2.0 => 2,
+            _ => {
+                let err = ProtoError::bad_request(format!(
+                    "unsupported protocol version {} (this server speaks 1 and 2)",
+                    x.to_string_compact()
+                ));
+                return Err((1, err));
+            }
+        },
+    };
+    parse_request(map).map(|req| Envelope { v, req }).map_err(|e| (v, e))
+}
+
+fn parse_request(map: &BTreeMap<String, Json>) -> Result<Request, ProtoError> {
+    let mut f = Fields::new(map);
+    f.take("v"); // consumed above
+    let cmd = match f.take("cmd") {
+        None => None,
+        Some(c) => Some(
+            c.as_str()
+                .ok_or_else(|| ProtoError::bad_request("field \"cmd\" must be a string"))?,
+        ),
+    };
+    let req = match cmd {
+        // A bare `{"model": ..., "prompt": ...}` line is an implicit
+        // generate — the v1 shape, still valid in v2.
+        None | Some("generate") => Request::Generate(parse_generate(&mut f)?),
+        Some("session_open") => Request::SessionOpen { model: take_model(&mut f)? },
+        Some("session_append") => Request::SessionAppend(parse_append(&mut f)?),
+        Some("session_drop") => {
+            let model = take_model(&mut f)?;
+            let session = as_u64(f.require("session")?, "session")?;
+            Request::SessionDrop { model, session }
+        }
+        Some("metrics") => Request::Metrics,
+        Some("metrics_prom") => Request::MetricsProm,
+        Some("trace") => {
+            let last = match f.take("last") {
+                None => None,
+                Some(x) => Some(as_u64(x, "last")? as usize),
+            };
+            Request::Trace { last }
+        }
+        Some("models") => Request::Models,
+        Some(other) => {
+            return Err(ProtoError::new(codes::UNKNOWN_CMD, format!("unknown cmd {other}")))
+        }
+    };
+    f.finish()?;
+    Ok(req)
+}
+
+fn parse_generate(f: &mut Fields<'_>) -> Result<Generate, ProtoError> {
+    let model = take_model(f)?;
+    let prompt = as_tokens(f.require("prompt")?, "prompt")?;
+    let kv_dtype = match f.take("kv_dtype") {
+        None => None,
+        Some(x) => Some(
+            x.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| ProtoError::bad_request("field \"kv_dtype\" must be a string"))?,
+        ),
+    };
+    let common = parse_gen_common(f)?;
+    Ok(Generate {
+        model,
+        prompt,
+        max_new: common.max_new,
+        stop: common.stop,
+        priority: common.priority,
+        client_id: common.client_id,
+        kv_dtype,
+        sample: common.sample,
+        stream: common.stream,
+    })
+}
+
+fn parse_append(f: &mut Fields<'_>) -> Result<Append, ProtoError> {
+    let model = take_model(f)?;
+    let session = as_u64(f.require("session")?, "session")?;
+    let tokens = as_tokens(f.require("tokens")?, "tokens")?;
+    let common = parse_gen_common(f)?;
+    Ok(Append {
+        model,
+        session,
+        tokens,
+        max_new: common.max_new,
+        stop: common.stop,
+        priority: common.priority,
+        client_id: common.client_id,
+        sample: common.sample,
+        stream: common.stream,
+    })
+}
+
+/// Generation knobs shared by `generate` and `session_append`.
+struct GenCommon {
+    max_new: usize,
+    stop: Option<u32>,
+    priority: i32,
+    client_id: u64,
+    sample: SampleParams,
+    stream: bool,
+}
+
+/// Server-side cap on any one request's generation budget.
+pub const MAX_NEW_CAP: usize = 256;
+
+fn parse_gen_common(f: &mut Fields<'_>) -> Result<GenCommon, ProtoError> {
+    let max_new = match f.take("max_new") {
+        None => 16,
+        Some(x) => (as_u64(x, "max_new")? as usize).min(MAX_NEW_CAP),
+    };
+    let stop = match f.take("stop") {
+        None => None,
+        Some(x) => Some(as_u64(x, "stop")? as u32),
+    };
+    let priority = match f.take("priority") {
+        None => 0,
+        Some(x) => x
+            .as_f64()
+            .map(|p| p as i32)
+            .ok_or_else(|| ProtoError::bad_request("field \"priority\" must be a number"))?,
+    };
+    let client_id = match f.take("client_id") {
+        None => 0,
+        Some(x) => as_u64(x, "client_id")?,
+    };
+    let mut sample = SampleParams::greedy();
+    if let Some(x) = f.take("temperature") {
+        sample.temperature = x
+            .as_f64()
+            .ok_or_else(|| ProtoError::bad_request("field \"temperature\" must be a number"))?
+            as f32;
+    }
+    if let Some(x) = f.take("top_k") {
+        sample.top_k = as_u64(x, "top_k")? as usize;
+    }
+    if let Some(x) = f.take("top_p") {
+        sample.top_p = x
+            .as_f64()
+            .ok_or_else(|| ProtoError::bad_request("field \"top_p\" must be a number"))?
+            as f32;
+    }
+    if let Some(x) = f.take("seed") {
+        sample.seed = as_u64(x, "seed")?;
+    }
+    sample.validate().map_err(ProtoError::bad_request)?;
+    let stream = match f.take("stream") {
+        None => false,
+        Some(x) => x
+            .as_bool()
+            .ok_or_else(|| ProtoError::bad_request("field \"stream\" must be a boolean"))?,
+    };
+    Ok(GenCommon { max_new, stop, priority, client_id, sample, stream })
+}
+
+/// Field cursor: `take` marks a key as understood; `finish` rejects any
+/// key the command never consumed, so typos fail loudly.
+struct Fields<'a> {
+    map: &'a BTreeMap<String, Json>,
+    used: Vec<&'static str>,
+}
+
+impl<'a> Fields<'a> {
+    fn new(map: &'a BTreeMap<String, Json>) -> Self {
+        Fields { map, used: Vec::new() }
+    }
+
+    fn take(&mut self, key: &'static str) -> Option<&'a Json> {
+        self.used.push(key);
+        self.map.get(key)
+    }
+
+    fn require(&mut self, key: &'static str) -> Result<&'a Json, ProtoError> {
+        self.take(key)
+            .ok_or_else(|| ProtoError::bad_request(format!("missing field \"{key}\"")))
+    }
+
+    fn finish(self) -> Result<(), ProtoError> {
+        for k in self.map.keys() {
+            if !self.used.contains(&k.as_str()) {
+                return Err(ProtoError::bad_request(format!("unknown field \"{k}\"")));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn take_model(f: &mut Fields<'_>) -> Result<String, ProtoError> {
+    f.require("model")?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| ProtoError::bad_request("field \"model\" must be a string"))
+}
+
+fn as_u64(v: &Json, key: &str) -> Result<u64, ProtoError> {
+    match v.as_f64() {
+        Some(x) if x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64 => Ok(x as u64),
+        _ => Err(ProtoError::bad_request(format!(
+            "field \"{key}\" must be a non-negative integer"
+        ))),
+    }
+}
+
+fn as_tokens(v: &Json, key: &str) -> Result<Vec<u32>, ProtoError> {
+    let arr = v.as_arr().ok_or_else(|| {
+        ProtoError::bad_request(format!("field \"{key}\" must be an array of token ids"))
+    })?;
+    arr.iter()
+        .map(|t| as_u64(t, key).map(|u| u as u32))
+        .collect::<Result<Vec<u32>, ProtoError>>()
+        .map_err(|_| {
+            ProtoError::bad_request(format!("field \"{key}\" must contain integer token ids"))
+        })
+}
+
+/// Shape an error for the wire: v1 keeps the legacy flat string, v2
+/// carries the structured `{code, message}` object plus the version stamp.
+pub fn error_json(v: u64, err: &ProtoError) -> Json {
+    if v >= 2 {
+        obj(vec![
+            ("ok", Json::Bool(false)),
+            ("v", crate::util::json::n(2.0)),
+            ("error", obj(vec![("code", s(err.code)), ("message", s(&err.message))])),
+        ])
+    } else {
+        obj(vec![("ok", Json::Bool(false)), ("error", s(&err.message))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(line: &str) -> Envelope {
+        parse(line).expect(line)
+    }
+
+    fn perr(line: &str) -> (u64, ProtoError) {
+        parse(line).expect_err(line)
+    }
+
+    #[test]
+    fn v1_generate_shape_parses_with_defaults() {
+        let env = p(r#"{"model":"m","prompt":[1,2,3]}"#);
+        assert_eq!(env.v, 1);
+        let Request::Generate(g) = env.req else { panic!("not generate") };
+        assert_eq!(g.model, "m");
+        assert_eq!(g.prompt, vec![1, 2, 3]);
+        assert_eq!(g.max_new, 16);
+        assert_eq!(g.stop, None);
+        assert!(g.sample.is_greedy());
+        assert!(!g.stream);
+        assert_eq!(g.kv_dtype, None);
+    }
+
+    #[test]
+    fn v2_generate_with_all_knobs() {
+        let env = p(
+            r#"{"v":2,"cmd":"generate","model":"m","prompt":[5],"max_new":4,"stop":9,
+                "priority":-1,"client_id":3,"kv_dtype":"f32","temperature":0.7,"top_k":40,
+                "top_p":0.9,"seed":123,"stream":true}"#,
+        );
+        assert_eq!(env.v, 2);
+        let Request::Generate(g) = env.req else { panic!("not generate") };
+        assert_eq!(g.max_new, 4);
+        assert_eq!(g.stop, Some(9));
+        assert_eq!(g.priority, -1);
+        assert_eq!(g.client_id, 3);
+        assert_eq!(g.kv_dtype.as_deref(), Some("f32"));
+        assert!((g.sample.temperature - 0.7).abs() < 1e-6);
+        assert_eq!((g.sample.top_k, g.sample.seed), (40, 123));
+        assert!(g.stream);
+    }
+
+    #[test]
+    fn max_new_is_capped() {
+        let env = p(r#"{"model":"m","prompt":[1],"max_new":100000}"#);
+        let Request::Generate(g) = env.req else { panic!() };
+        assert_eq!(g.max_new, MAX_NEW_CAP);
+    }
+
+    #[test]
+    fn session_commands_roundtrip() {
+        let env = p(r#"{"v":2,"cmd":"session_open","model":"m"}"#);
+        assert_eq!(env.req, Request::SessionOpen { model: "m".into() });
+        let env = p(r#"{"v":2,"cmd":"session_append","model":"m","session":7,"tokens":[4,5]}"#);
+        let Request::SessionAppend(a) = env.req else { panic!("not append") };
+        assert_eq!((a.session, a.tokens.clone()), (7, vec![4, 5]));
+        assert!(!a.stream);
+        let env = p(r#"{"v":2,"cmd":"session_drop","model":"m","session":7}"#);
+        assert_eq!(env.req, Request::SessionDrop { model: "m".into(), session: 7 });
+    }
+
+    #[test]
+    fn admin_commands_roundtrip() {
+        assert_eq!(p(r#"{"cmd":"metrics"}"#).req, Request::Metrics);
+        assert_eq!(p(r#"{"cmd":"metrics_prom"}"#).req, Request::MetricsProm);
+        assert_eq!(p(r#"{"cmd":"trace"}"#).req, Request::Trace { last: None });
+        assert_eq!(p(r#"{"cmd":"trace","last":5}"#).req, Request::Trace { last: Some(5) });
+        assert_eq!(p(r#"{"cmd":"models","v":2}"#).req, Request::Models);
+    }
+
+    #[test]
+    fn malformed_lines_fail_typed() {
+        // Truncated / non-JSON input.
+        assert_eq!(perr("{\"model\":").1.code, codes::BAD_JSON);
+        assert_eq!(perr("not json").1.code, codes::BAD_JSON);
+        assert_eq!(perr("[1,2]").1.code, codes::BAD_JSON);
+        // Wrong field types.
+        assert_eq!(perr(r#"{"model":7,"prompt":[1]}"#).1.code, codes::BAD_REQUEST);
+        assert_eq!(perr(r#"{"model":"m","prompt":"hi"}"#).1.code, codes::BAD_REQUEST);
+        assert_eq!(perr(r#"{"model":"m","prompt":[1.5]}"#).1.code, codes::BAD_REQUEST);
+        assert_eq!(perr(r#"{"model":"m","prompt":[-3]}"#).1.code, codes::BAD_REQUEST);
+        assert_eq!(
+            perr(r#"{"model":"m","prompt":[1],"stream":"yes"}"#).1.code,
+            codes::BAD_REQUEST
+        );
+        assert_eq!(perr(r#"{"cmd":7}"#).1.code, codes::BAD_REQUEST);
+        // Missing required fields.
+        assert_eq!(perr(r#"{"model":"m"}"#).1.code, codes::BAD_REQUEST);
+        assert_eq!(perr(r#"{"cmd":"session_append","model":"m"}"#).1.code, codes::BAD_REQUEST);
+        assert_eq!(perr(r#"{"cmd":"session_drop","model":"m"}"#).1.code, codes::BAD_REQUEST);
+        assert_eq!(perr(r#"{"cmd":"session_open"}"#).1.code, codes::BAD_REQUEST);
+        // Unknown command.
+        assert_eq!(perr(r#"{"cmd":"shutdown"}"#).1.code, codes::UNKNOWN_CMD);
+        // Out-of-range sampling knobs die at the protocol boundary.
+        assert_eq!(
+            perr(r#"{"model":"m","prompt":[1],"temperature":-2}"#).1.code,
+            codes::BAD_REQUEST
+        );
+        assert_eq!(perr(r#"{"model":"m","prompt":[1],"top_p":0}"#).1.code, codes::BAD_REQUEST);
+    }
+
+    #[test]
+    fn unknown_fields_rejected_in_both_versions() {
+        for line in [
+            r#"{"model":"m","prompt":[1],"max_tokens":5}"#,
+            r#"{"v":2,"model":"m","prompt":[1],"max_tokens":5}"#,
+            r#"{"cmd":"metrics","extra":1}"#,
+            r#"{"v":2,"cmd":"session_open","model":"m","prompt":[1]}"#,
+        ] {
+            let (_, err) = perr(line);
+            assert_eq!(err.code, codes::BAD_REQUEST, "{line}");
+            assert!(err.message.contains("unknown field"), "{line}: {}", err.message);
+        }
+    }
+
+    #[test]
+    fn version_handling() {
+        assert_eq!(p(r#"{"v":1,"cmd":"models"}"#).v, 1);
+        assert_eq!(p(r#"{"v":2,"cmd":"models"}"#).v, 2);
+        // Unsupported or mistyped versions are rejected, answered in v1.
+        let (v, err) = perr(r#"{"v":3,"cmd":"models"}"#);
+        assert_eq!((v, err.code), (1, codes::BAD_REQUEST));
+        let (v, _) = perr(r#"{"v":"2","cmd":"models"}"#);
+        assert_eq!(v, 1);
+    }
+
+    #[test]
+    fn error_json_shapes_by_version() {
+        let err = ProtoError::new(codes::UNKNOWN_MODEL, "unknown model x");
+        let v1 = error_json(1, &err);
+        assert_eq!(v1.get("error").and_then(Json::as_str), Some("unknown model x"));
+        let v2 = error_json(2, &err);
+        assert_eq!(v2.get("v").and_then(Json::as_f64), Some(2.0));
+        let e = v2.get("error").expect("structured error");
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("unknown_model"));
+        assert_eq!(e.get("message").and_then(Json::as_str), Some("unknown model x"));
+    }
+}

@@ -22,19 +22,29 @@
 //!
 //! The router dispatches by model name; [`Router::submit_with`] /
 //! [`Router::generate_with`] carry the full [`RequestOpts`] (stop token,
-//! admission `priority`, `client_id`) down to the route's queue. Each
+//! admission `priority`, `client_id`, sampling knobs) down to the route's
+//! queue. [`Router::submit_stream_with`] delivers the same generation as
+//! incremental [`StreamEvent`] frames — native per-tick emission on
+//! continuous/speculative routes, emulated at batch completion on fixed
+//! routes, identical token content either way. Routes registered with
+//! `SchedPolicy::max_sessions > 0` also serve stateful multi-turn
+//! sessions ([`Router::session_open`] / [`Router::session_append`] /
+//! [`Router::session_drop`]): the route's `server::session::SessionTable`
+//! keeps each conversation's KV slot parked between turns so turn N+1
+//! prefills only its new tokens. Each
 //! route owns a [`Metrics`] instance in the router's
 //! [`Registry`](super::obs::Registry) (`Router::registry`), and every
 //! route's queue + worker log lifecycle events into one shared
 //! [`FlightRecorder`](super::obs::FlightRecorder) (`Router::recorder`), so
 //! a trace shows cross-route interleaving.
 
-use super::batcher::{BatchPolicy, Batcher};
-use super::engine::{Engine, GenRequest, GenResult};
+use super::batcher::{AdmitPolicy, BatchPolicy, Batcher};
+use super::engine::{Engine, GenRequest, GenResult, StreamEvent};
 use super::metrics::Metrics;
 use super::obs::{EventKind, FlightRecorder, Registry, RouteObs, DEFAULT_CAPACITY};
 use super::scheduler::{SchedPolicy, Scheduler};
-use crate::model::KvDtype;
+use super::session::{SessionError, SessionTable};
+use crate::model::{KvDtype, SampleParams};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -55,11 +65,20 @@ pub struct RequestOpts {
     /// Originating client id; fair-share admission round-robins across
     /// distinct ids so one client cannot starve the rest.
     pub client_id: u64,
+    /// Sampling knobs (temperature / top-k / top-p / seed). The default is
+    /// greedy argmax — byte-identical to the pre-sampling stack.
+    pub sample: SampleParams,
 }
 
 impl Default for RequestOpts {
     fn default() -> Self {
-        RequestOpts { max_new: 16, stop: None, priority: 0, client_id: 0 }
+        RequestOpts {
+            max_new: 16,
+            stop: None,
+            priority: 0,
+            client_id: 0,
+            sample: SampleParams::greedy(),
+        }
     }
 }
 
@@ -74,7 +93,33 @@ struct Route {
     /// Draft depth when this route decodes speculatively; `None` on
     /// non-speculative routes.
     draft_k: Option<usize>,
+    /// Serving mode: "fixed" / "continuous" / "speculative".
+    mode: &'static str,
+    /// Admission policy the route's consumer applies (fixed-batch routes
+    /// dispatch in arrival order — FIFO by construction).
+    admit: AdmitPolicy,
+    /// Session registry shared with the route's scheduler; `None` when the
+    /// route does not serve sessions (fixed routes, `max_sessions == 0`).
+    sessions: Option<Arc<SessionTable>>,
     _worker: std::thread::JoinHandle<()>,
+}
+
+/// Everything the JSON api's `models` command reports about one route.
+#[derive(Clone, Debug)]
+pub struct RouteInfo {
+    pub name: String,
+    pub kv_dtype: KvDtype,
+    /// "fixed" / "continuous" / "speculative".
+    pub mode: &'static str,
+    /// Admission policy name ("fifo" / "sjf" / "fair-share").
+    pub admit: &'static str,
+    /// Speculative draft depth; `None` on non-speculative routes.
+    pub draft_k: Option<usize>,
+    /// Max concurrent multi-turn sessions; 0 = sessions unsupported.
+    pub max_sessions: usize,
+    /// Whether streamed delivery is available (all routes: native on
+    /// continuous/speculative, emulated on fixed).
+    pub streaming: bool,
 }
 
 /// Routes generation requests to named engines.
@@ -150,11 +195,29 @@ impl Router {
                         0,
                         0,
                     );
+                    // Fixed batches run to completion, so streamed
+                    // delivery is emulated: every token frame lands at
+                    // once, then the same Done a scheduler would send.
+                    if let Some(tx) = &pending.stream {
+                        for (index, &token) in res.tokens.iter().enumerate() {
+                            let _ = tx.send(StreamEvent::Token { index, token });
+                        }
+                        let _ = tx.send(StreamEvent::Done(res.clone()));
+                    }
                     let _ = pending.result_slot.send(res);
                 }
             }
         });
-        let route = Route { batcher, vocab, kv_dtype, draft_k: None, _worker: worker };
+        let route = Route {
+            batcher,
+            vocab,
+            kv_dtype,
+            draft_k: None,
+            mode: "fixed",
+            admit: AdmitPolicy::Fifo,
+            sessions: None,
+            _worker: worker,
+        };
         self.routes.insert(name, route);
     }
 
@@ -175,10 +238,20 @@ impl Router {
         ));
         let worker_batcher = batcher.clone();
         let scheduler = Scheduler::new(Arc::new(engine), policy);
+        let sessions = scheduler.sessions().enabled().then(|| scheduler.sessions());
         let worker = std::thread::spawn(move || {
             scheduler.run(&worker_batcher, &obs);
         });
-        let route = Route { batcher, vocab, kv_dtype, draft_k: None, _worker: worker };
+        let route = Route {
+            batcher,
+            vocab,
+            kv_dtype,
+            draft_k: None,
+            mode: "continuous",
+            admit: policy.admit,
+            sessions,
+            _worker: worker,
+        };
         self.routes.insert(name, route);
     }
 
@@ -204,10 +277,20 @@ impl Router {
         ));
         let worker_batcher = batcher.clone();
         let scheduler = Scheduler::new_spec(Arc::new(target), Arc::new(draft), policy);
+        let sessions = scheduler.sessions().enabled().then(|| scheduler.sessions());
         let worker = std::thread::spawn(move || {
             scheduler.run(&worker_batcher, &obs);
         });
-        let route = Route { batcher, vocab, kv_dtype, draft_k, _worker: worker };
+        let route = Route {
+            batcher,
+            vocab,
+            kv_dtype,
+            draft_k,
+            mode: "speculative",
+            admit: policy.admit,
+            sessions,
+            _worker: worker,
+        };
         self.routes.insert(name, route);
     }
 
@@ -222,12 +305,29 @@ impl Router {
     }
 
     /// Registered models with KV dtype and speculative draft depth
-    /// (`None` on non-speculative routes) — what the JSON api's `models`
-    /// command reports.
+    /// (`None` on non-speculative routes).
     pub fn model_details(&self) -> Vec<(&str, KvDtype, Option<usize>)> {
         self.routes
             .iter()
             .map(|(n, r)| (n.as_str(), r.kv_dtype, r.draft_k))
+            .collect()
+    }
+
+    /// Full per-route capability report — what the JSON api's `models`
+    /// command serves: serving mode, admission policy, speculative draft
+    /// depth, session capacity, and streaming support.
+    pub fn route_infos(&self) -> Vec<RouteInfo> {
+        self.routes
+            .iter()
+            .map(|(n, r)| RouteInfo {
+                name: n.clone(),
+                kv_dtype: r.kv_dtype,
+                mode: r.mode,
+                admit: r.admit.name(),
+                draft_k: r.draft_k,
+                max_sessions: r.sessions.as_ref().map_or(0, |t| t.max_sessions()),
+                streaming: true,
+            })
             .collect()
     }
 
@@ -293,6 +393,33 @@ impl Router {
         prompt: Vec<u32>,
         opts: RequestOpts,
     ) -> Result<std::sync::mpsc::Receiver<GenResult>> {
+        let (route, req) = self.build_request(model, prompt, &opts, None)?;
+        Ok(route.batcher.submit(req))
+    }
+
+    /// Streamed submit: the returned receiver yields one
+    /// [`StreamEvent::Token`] per generated token as the route emits it,
+    /// then a [`StreamEvent::Done`] with the full [`GenResult`] — the
+    /// concatenated frames always equal the result's tokens.
+    pub fn submit_stream_with(
+        &self,
+        model: &str,
+        prompt: Vec<u32>,
+        opts: RequestOpts,
+    ) -> Result<std::sync::mpsc::Receiver<StreamEvent>> {
+        let (route, req) = self.build_request(model, prompt, &opts, None)?;
+        Ok(route.batcher.submit_stream(req))
+    }
+
+    /// Validate and assemble one [`GenRequest`] against a route (model
+    /// exists, tokens in vocab, sampling knobs in range).
+    fn build_request(
+        &self,
+        model: &str,
+        prompt: Vec<u32>,
+        opts: &RequestOpts,
+        session: Option<u64>,
+    ) -> Result<(&Route, GenRequest)> {
         let route = self
             .routes
             .get(model)
@@ -300,15 +427,106 @@ impl Router {
         if let Some(&t) = prompt.iter().find(|&&t| t as usize >= route.vocab) {
             return Err(anyhow!("token {t} out of vocab (size {})", route.vocab));
         }
+        opts.sample.validate().map_err(|e| anyhow!(e))?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        Ok(route.batcher.submit(GenRequest {
+        let req = GenRequest {
             id,
             prompt,
             max_new: opts.max_new,
             stop: opts.stop,
             priority: opts.priority,
             client_id: opts.client_id,
-        }))
+            sample: opts.sample,
+            session,
+        };
+        Ok((route, req))
+    }
+
+    /// Open a multi-turn session on `model`; returns the session id.
+    /// Errors if the model is unknown, the route does not serve sessions,
+    /// or the route's session table is full.
+    pub fn session_open(&self, model: &str) -> Result<u64, SessionError> {
+        self.route_sessions(model)?.open()
+    }
+
+    /// Append one turn to a session and submit it: `tokens` are the
+    /// turn's NEW tokens only — the route's session table prepends the
+    /// conversation history, and the scheduler resumes the parked KV slot
+    /// so only the new tokens prefill. Blocks until the turn's result.
+    pub fn session_append(
+        &self,
+        model: &str,
+        session: u64,
+        tokens: Vec<u32>,
+        opts: RequestOpts,
+    ) -> Result<GenResult, SessionError> {
+        let (route, req) = self.build_session_request(model, session, tokens, &opts)?;
+        route
+            .batcher
+            .submit(req)
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .map_err(|_| SessionError::Invalid("generation timed out".into()))
+    }
+
+    /// Streamed [`Router::session_append`]: the turn's tokens arrive as
+    /// [`StreamEvent`] frames.
+    pub fn session_append_stream(
+        &self,
+        model: &str,
+        session: u64,
+        tokens: Vec<u32>,
+        opts: RequestOpts,
+    ) -> Result<std::sync::mpsc::Receiver<StreamEvent>, SessionError> {
+        let (route, req) = self.build_session_request(model, session, tokens, &opts)?;
+        Ok(route.batcher.submit_stream(req))
+    }
+
+    /// Drop a session, releasing its parked KV slot (lazily, on the
+    /// scheduler's next tick). A turn in flight finishes first.
+    pub fn session_drop(&self, model: &str, session: u64) -> Result<(), SessionError> {
+        self.route_sessions(model)?.drop_session(session)
+    }
+
+    fn route_sessions(&self, model: &str) -> Result<&Arc<SessionTable>, SessionError> {
+        self.routes
+            .get(model)
+            .ok_or(SessionError::Disabled)?
+            .sessions
+            .as_ref()
+            .ok_or(SessionError::Disabled)
+    }
+
+    fn build_session_request(
+        &self,
+        model: &str,
+        session: u64,
+        tokens: Vec<u32>,
+        opts: &RequestOpts,
+    ) -> Result<(&Route, GenRequest), SessionError> {
+        let table = self.route_sessions(model)?;
+        let route = &self.routes[model];
+        if let Some(&t) = tokens.iter().find(|&&t| t as usize >= route.vocab) {
+            return Err(SessionError::Invalid(format!(
+                "token {t} out of vocab (size {})",
+                route.vocab
+            )));
+        }
+        opts.sample.validate().map_err(SessionError::Invalid)?;
+        // This stakes the turn (marks the session busy) — the submit
+        // below cannot fail, so the turn always retires and un-busies.
+        let prompt = table.append_begin(session, &tokens)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = GenRequest {
+            id,
+            prompt,
+            max_new: opts.max_new,
+            stop: opts.stop,
+            priority: opts.priority,
+            client_id: opts.client_id,
+            sample: opts.sample,
+            session: Some(session),
+        };
+        Ok((route, req))
     }
 
     /// Shut down all workers.
@@ -495,6 +713,89 @@ mod tests {
             let ok = r.generate("sim-125m", vec![5, 6], 2).unwrap();
             assert_eq!(ok.tokens.len(), 2);
         }
+    }
+
+    fn drain(rx: std::sync::mpsc::Receiver<StreamEvent>) -> GenResult {
+        let mut tokens: Vec<u32> = Vec::new();
+        loop {
+            let ev = rx
+                .recv_timeout(std::time::Duration::from_secs(60))
+                .expect("stream ended without Done");
+            match ev {
+                StreamEvent::Token { index, token } => {
+                    assert_eq!(index, tokens.len());
+                    tokens.push(token);
+                }
+                StreamEvent::Done(res) => {
+                    assert_eq!(tokens, res.tokens);
+                    return res;
+                }
+            }
+        }
+    }
+
+    /// Streamed submits yield the same tokens as plain submits on every
+    /// serving mode — native frames on continuous routes, emulated on the
+    /// fixed-batch worker.
+    #[test]
+    fn streamed_submit_matches_plain_on_all_modes() {
+        for r in [router(), router_continuous()] {
+            let plain = r.generate("sim-125m", vec![3, 4, 5], 4).unwrap();
+            let rx = r
+                .submit_stream_with(
+                    "sim-125m",
+                    vec![3, 4, 5],
+                    RequestOpts { max_new: 4, ..Default::default() },
+                )
+                .unwrap();
+            assert_eq!(drain(rx).tokens, plain.tokens);
+        }
+    }
+
+    #[test]
+    fn sampling_plumbs_and_validates_through_router() {
+        let r = router_continuous();
+        let sample = SampleParams { temperature: 0.8, top_k: 16, top_p: 0.9, seed: 11 };
+        let opts = RequestOpts { max_new: 5, sample, ..Default::default() };
+        let a = r.generate_with("sim-125m", vec![3, 4, 5], opts).unwrap();
+        let b = r.generate_with("sim-125m", vec![3, 4, 5], opts).unwrap();
+        assert_eq!(a.tokens, b.tokens, "same seed must reproduce");
+        // Out-of-range knobs are rejected at submit, not deep in a worker.
+        let bad = RequestOpts {
+            sample: SampleParams { top_p: 0.0, ..SampleParams::greedy() },
+            ..Default::default()
+        };
+        assert!(r.generate_with("sim-125m", vec![3], bad).is_err());
+    }
+
+    #[test]
+    fn session_api_roundtrip_and_capabilities() {
+        let mut r = Router::new();
+        let policy = SchedPolicy { max_slots: 2, max_sessions: 2, ..Default::default() };
+        r.register_continuous(engine(), policy);
+        let infos = r.route_infos();
+        let info = &infos[0];
+        assert_eq!((info.mode, info.admit), ("continuous", "fifo"));
+        assert_eq!(info.max_sessions, 2);
+        assert!(info.streaming);
+        assert_eq!(info.draft_k, None);
+
+        let sid = r.session_open("sim-125m").unwrap();
+        let opts = RequestOpts { max_new: 3, ..Default::default() };
+        let t1 = r.session_append("sim-125m", sid, vec![5, 6], opts).unwrap();
+        assert_eq!(t1.tokens.len(), 3);
+        // Turn 2 resumes the conversation; the streamed variant works too.
+        let rx = r.session_append_stream("sim-125m", sid, vec![9], opts).unwrap();
+        let t2 = drain(rx);
+        // Reference: fresh request over the full conversation so far.
+        let full = [vec![5, 6], t1.tokens.clone(), vec![9]].concat();
+        let solo = r.generate("sim-125m", full, 3).unwrap();
+        assert_eq!(t2.tokens, solo.tokens);
+        r.session_drop("sim-125m", sid).unwrap();
+        assert!(r.session_append("sim-125m", sid, vec![4], opts).is_err());
+        // Session calls on a session-less route fail typed.
+        let plain = router();
+        assert!(matches!(plain.session_open("sim-125m"), Err(SessionError::Disabled)));
     }
 
     #[test]

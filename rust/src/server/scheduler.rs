@@ -43,6 +43,21 @@
 //! per tick — token-identical to the plain route, with the emitted tokens
 //! counted against the same `step_tokens` budget.
 //!
+//! Two delivery upgrades ride the same tick structure. **Streaming**
+//! ([`Batcher::submit_stream`]): after every tick the scheduler pushes
+//! each flight's newly generated tokens to its client as
+//! [`StreamEvent::Token`] frames — tokens leave the moment they exist
+//! instead of at retirement — and the final [`StreamEvent::Done`] carries
+//! the exact [`GenResult`] a plain submit would have returned. The
+//! emission cadence lands in the route's inter-token-gap histogram for
+//! every flight, streamed or not. **Sessions**
+//! (`SchedPolicy::max_sessions`, `server::session`): a retiring session
+//! turn parks its KV slot in the route's [`SessionTable`] instead of
+//! freeing it, and the next turn resumes onto the cached rows
+//! ([`Engine::prefill_resume`]) so only the conversation's *new* tokens
+//! prefill. Parked slots are a cache, not a reservation: plain admissions
+//! reclaim them LRU-first whenever the pool runs dry.
+//!
 //! Generation depth never stalls the loop (ring slots make decode O(1)
 //! per token), and prompt *length* no longer stalls it either: per-tick
 //! forward cost is bounded by `max(step_tokens, live decodes)` — live
@@ -55,8 +70,10 @@
 //! engines, f32 and quantized KV).
 
 use super::batcher::{AdmitPolicy, AdmitState, Batcher};
-use super::engine::{Engine, GenResult, PrefillState, SeqState};
+use super::engine::{Engine, GenRequest, GenResult, PrefillState, SeqState, StreamEvent};
+use super::metrics::Metrics;
 use super::obs::{EventKind, RouteObs};
+use super::session::SessionTable;
 use super::spec::{SpecEngine, SpecStepStats};
 use crate::model::{KvCachePool, KvDtype};
 use std::sync::mpsc::Sender;
@@ -102,6 +119,14 @@ pub struct SchedPolicy {
     /// budget), while the draft model's own forwards are off-budget extra
     /// work — they are the cheap side of the pair.
     pub draft_k: usize,
+    /// Concurrent multi-turn sessions this route may keep open
+    /// (`server::session`). 0 — the default — disables sessions. Between
+    /// turns a session parks its KV cache slot so the next turn prefills
+    /// only its new tokens; parked slots are reclaimed LRU-first whenever
+    /// plain admissions find the pool dry, so sessions never shrink the
+    /// route's effective capacity (an evicted session re-prefills from
+    /// scratch on its next turn).
+    pub max_sessions: usize,
 }
 
 impl Default for SchedPolicy {
@@ -113,6 +138,7 @@ impl Default for SchedPolicy {
             chunk_tokens: 32,
             admit: AdmitPolicy::Fifo,
             draft_k: 0,
+            max_sessions: 0,
         }
     }
 }
@@ -129,6 +155,18 @@ struct InFlight {
     drafted: usize,
     /// Draft tokens the target confirmed (speculative routes only).
     accepted: usize,
+    /// Streamed submission: each tick's newly generated tokens go here as
+    /// [`StreamEvent::Token`] frames the moment they exist.
+    stream: Option<Sender<StreamEvent>>,
+    /// Generated tokens already pushed to `stream` (and already counted
+    /// by the emission-cadence metrics).
+    streamed: usize,
+    /// Wall-clock of the previous emission event, for the per-sequence
+    /// inter-token-gap histogram. `None` until the first token.
+    last_emit: Option<Instant>,
+    /// Session this turn belongs to, if any: retirement parks the slot in
+    /// the route's [`SessionTable`] instead of freeing it.
+    session: Option<u64>,
 }
 
 /// One admitted sequence still feeding its prompt, chunk by chunk.
@@ -136,6 +174,8 @@ struct Filling {
     pre: PrefillState,
     result_slot: Sender<GenResult>,
     enqueued: Instant,
+    stream: Option<Sender<StreamEvent>>,
+    session: Option<u64>,
 }
 
 /// Drives an [`Engine`] continuously over a [`Batcher`] queue.
@@ -146,6 +186,11 @@ pub struct Scheduler {
     /// draft/verify/rollback through this pair instead of a plain
     /// `Engine::step_chunked`; `engine` is then the pair's dense target.
     spec: Option<SpecEngine>,
+    /// Multi-turn session registry (`SchedPolicy::max_sessions`; inert
+    /// when 0). Shared with the router front-end, which opens sessions and
+    /// builds their prompts; the scheduler resumes, parks, evicts and
+    /// reaps the underlying cache slots.
+    sessions: Arc<SessionTable>,
 }
 
 impl Scheduler {
@@ -153,7 +198,8 @@ impl Scheduler {
         assert!(policy.max_slots > 0, "scheduler needs at least one slot");
         assert!(policy.step_tokens > 0, "token budget must be positive");
         assert!(policy.chunk_tokens > 0, "chunk size must be positive");
-        Scheduler { engine, policy, spec: None }
+        let sessions = Arc::new(SessionTable::new(policy.max_sessions));
+        Scheduler { engine, policy, spec: None, sessions }
     }
 
     /// Speculative scheduler: `draft` (compressed) proposes
@@ -176,6 +222,14 @@ impl Scheduler {
     /// engine's own dtype).
     pub fn kv_dtype(&self) -> KvDtype {
         self.policy.kv_dtype.unwrap_or_else(|| self.engine.kv_dtype())
+    }
+
+    /// This route's session registry (inert unless
+    /// `SchedPolicy::max_sessions > 0`). The router clones the handle so
+    /// its front-end threads can open/append/drop sessions while the
+    /// scheduler thread moves the slots.
+    pub fn sessions(&self) -> Arc<SessionTable> {
+        Arc::clone(&self.sessions)
     }
 
     /// Run the step-loop until the batcher is closed and fully drained
@@ -211,6 +265,17 @@ impl Scheduler {
             if flights.is_empty() && filling.is_empty() && !batcher.wait_pending() {
                 return; // closed + drained + nothing in flight
             }
+            // Slots surrendered by dropped sessions since the last tick:
+            // only this thread may touch the pools, so drops are lazy.
+            for slot in self.sessions.take_reaped() {
+                pool.free(slot);
+                if let Some(dp) = draft_pool.as_mut() {
+                    dp.free(slot);
+                }
+            }
+            // Capacity check counts live work only: parked session slots
+            // are reclaimable on demand (resume or LRU eviction below), so
+            // they never block admission.
             let free = self.policy.max_slots - flights.len() - filling.len();
             let pendings = batcher.take_admit(free, self.policy.admit, &mut admit_state);
             if !pendings.is_empty() {
@@ -223,11 +288,7 @@ impl Scheduler {
                     metrics.record_queue_wait(wait_s);
                     // O(1): claims the slot, runs no forward — the prompt
                     // feeds in chunks inside the regular ticks below.
-                    let pre = self.engine.prefill_begin(&pending.req, &mut pool);
-                    if let Some(dp) = draft_pool.as_mut() {
-                        let ds = dp.alloc().expect("draft pool out of slots");
-                        assert_eq!(ds, pre.state().slot, "twin pools must allocate in lockstep");
-                    }
+                    let pre = self.admit_one(&pending.req, &mut pool, draft_pool.as_mut());
                     obs.event(
                         EventKind::Admitted,
                         pre.state().id,
@@ -236,6 +297,7 @@ impl Scheduler {
                         (wait_s * 1e6).min(u32::MAX as f64) as u32,
                         depth.min(u32::MAX as usize) as u32,
                     );
+                    let session = pending.req.session;
                     if pre.is_complete() {
                         // max_new == 0: nothing to run, retire untouched.
                         let flight = InFlight {
@@ -245,13 +307,19 @@ impl Scheduler {
                             ttft_s: None,
                             drafted: 0,
                             accepted: 0,
+                            stream: pending.stream,
+                            streamed: 0,
+                            last_emit: None,
+                            session,
                         };
-                        Self::retire(flight, &mut pool, draft_pool.as_mut(), obs);
+                        self.retire(flight, &mut pool, draft_pool.as_mut(), obs);
                     } else {
                         filling.push(Filling {
                             pre,
                             result_slot: pending.result_slot,
                             enqueued: pending.enqueued,
+                            stream: pending.stream,
+                            session,
                         });
                     }
                 }
@@ -383,26 +451,100 @@ impl Scheduler {
                         ttft_s: Some(ttft),
                         drafted: 0,
                         accepted: 0,
+                        stream: f.stream,
+                        streamed: 0,
+                        last_emit: None,
+                        session: f.session,
                     };
-                    if flight.state.done {
-                        Self::retire(flight, &mut pool, draft_pool.as_mut(), obs);
-                    } else {
-                        flights.push(flight);
-                    }
+                    // Even a flight done at promotion (max_new == 1, or a
+                    // stop on the first token) joins the decode batch for
+                    // one beat: the emit pass below streams its token(s)
+                    // before the retire scan reclaims it.
+                    flights.push(flight);
                 } else {
                     i += 1;
                 }
+            }
+            // Push this tick's freshly generated tokens to every streamed
+            // client and record the emission cadence (inter-token gaps).
+            for flight in flights.iter_mut() {
+                Self::emit_stream(flight, metrics);
             }
             let mut i = 0;
             while i < flights.len() {
                 if flights[i].state.done {
                     let flight = flights.swap_remove(i);
-                    Self::retire(flight, &mut pool, draft_pool.as_mut(), obs);
+                    self.retire(flight, &mut pool, draft_pool.as_mut(), obs);
                 } else {
                     i += 1;
                 }
             }
         }
+    }
+
+    /// Claim cache slot(s) for one admitted request and build its
+    /// resumable prefill. Session turns resume onto their parked slot when
+    /// the full conversation still fits the context window — prefilling
+    /// only the uncached suffix ([`Engine::prefill_resume`]); otherwise
+    /// (deep conversation, or the slot was evicted) they fall back to a
+    /// fresh windowed prefill. Fresh prefills that find the pool dry evict
+    /// the LRU parked session slot — parked capacity is a cache, never a
+    /// reservation.
+    fn admit_one(
+        &self,
+        req: &GenRequest,
+        pool: &mut KvCachePool,
+        mut draft_pool: Option<&mut KvCachePool>,
+    ) -> PrefillState {
+        if let Some(slot) = req.session.and_then(|sid| self.sessions.resume_slot(sid)) {
+            if req.prompt.len() <= self.engine.config().max_seq {
+                return self.engine.prefill_resume(req, pool, slot);
+            }
+            // The conversation outgrew the window: the parked prefix is no
+            // longer a prefix of the windowed prompt, so start over.
+            pool.free(slot);
+            if let Some(dp) = draft_pool.as_deref_mut() {
+                dp.free(slot);
+            }
+        }
+        if pool.free_slots() == 0 {
+            let evicted = self.sessions.evict_lru().expect("admission overran pool capacity");
+            pool.free(evicted);
+            if let Some(dp) = draft_pool.as_deref_mut() {
+                dp.free(evicted);
+            }
+        }
+        let pre = self.engine.prefill_begin(req, pool);
+        if let Some(dp) = draft_pool {
+            let ds = dp.alloc().expect("draft pool out of slots");
+            assert_eq!(ds, pre.state().slot, "twin pools must allocate in lockstep");
+        }
+        pre
+    }
+
+    /// Push `flight`'s tokens generated since the last call to its stream
+    /// (if any) and record the route's emission cadence: one
+    /// inter-token-gap sample per (sequence, emitting tick) after the
+    /// first — the gap before the first emission is TTFT, already its own
+    /// histogram. Cadence is recorded for streamed and plain flights
+    /// alike; a speculative tick emitting several tokens at once is ONE
+    /// emission event (that burstiness is exactly what the histogram is
+    /// for).
+    fn emit_stream(flight: &mut InFlight, metrics: &Metrics) {
+        let generated = flight.state.generated();
+        if flight.streamed >= generated.len() {
+            return;
+        }
+        if let Some(prev) = flight.last_emit {
+            metrics.record_inter_token(prev.elapsed().as_secs_f64());
+        }
+        flight.last_emit = Some(Instant::now());
+        if let Some(tx) = &flight.stream {
+            for (index, &token) in generated.iter().enumerate().skip(flight.streamed) {
+                let _ = tx.send(StreamEvent::Token { index, token });
+            }
+        }
+        flight.streamed = generated.len();
     }
 
     /// Translate one tick's state deltas into flight-recorder events:
@@ -482,21 +624,34 @@ impl Scheduler {
         }
     }
 
-    /// Free the sequence's cache slot(s) and deliver its result. On
-    /// speculative routes the twin draft slot frees in the same breath
-    /// (keeping the pools' free-lists in lockstep) and the result carries
-    /// the request's `(drafted, accepted)` speculation totals.
+    /// Reclaim the sequence's cache slot(s) and deliver its result. A
+    /// session turn *parks* the slot in the [`SessionTable`] instead of
+    /// freeing it — the next turn resumes onto the cached rows — unless
+    /// the session was dropped mid-turn. On speculative routes the twin
+    /// draft slot follows the serving slot's fate in the same breath
+    /// (keeping the pools' free-lists in lockstep; a parked slot stays
+    /// allocated in both pools) and the result carries the request's
+    /// `(drafted, accepted)` speculation totals. Streamed flights get a
+    /// final [`StreamEvent::Done`] after their last `Token` frame.
     fn retire(
+        &self,
         flight: InFlight,
         pool: &mut KvCachePool,
         draft_pool: Option<&mut KvCachePool>,
         obs: &RouteObs,
     ) {
-        pool.free(flight.state.slot);
-        let spec = draft_pool.map(|dp| {
-            dp.free(flight.state.slot);
-            (flight.drafted, flight.accepted)
-        });
+        let parked = flight
+            .session
+            .map(|sid| self.sessions.finish(sid, flight.state.generated(), flight.state.slot))
+            .unwrap_or(false);
+        let is_spec = draft_pool.is_some();
+        if !parked {
+            pool.free(flight.state.slot);
+            if let Some(dp) = draft_pool {
+                dp.free(flight.state.slot);
+            }
+        }
+        let spec = is_spec.then_some((flight.drafted, flight.accepted));
         obs.metrics.record_request(flight.enqueued.elapsed().as_secs_f64());
         if let Some((d, a)) = spec {
             if d > 0 {
@@ -511,12 +666,16 @@ impl Scheduler {
             flight.drafted.min(u32::MAX as usize) as u32,
             flight.accepted.min(u32::MAX as usize) as u32,
         );
-        let _ = flight.result_slot.send(GenResult {
+        let result = GenResult {
             id: flight.state.id,
             tokens: flight.state.generated().to_vec(),
             ttft_s: flight.ttft_s,
             spec,
-        });
+        };
+        if let Some(tx) = &flight.stream {
+            let _ = tx.send(StreamEvent::Done(result.clone()));
+        }
+        let _ = flight.result_slot.send(result);
     }
 }
 
@@ -965,5 +1124,224 @@ mod tests {
         for (req, got) in reqs.iter().zip(outs.iter()) {
             assert_eq!(got, &engine.generate_batch(&[req.clone()])[0].tokens, "req {}", req.id);
         }
+    }
+
+    type Spawned = (
+        Arc<Batcher>,
+        RouteObs,
+        Arc<crate::server::session::SessionTable>,
+        std::thread::JoinHandle<()>,
+    );
+
+    /// Spawn a scheduler over a fresh batcher; returns the pieces a test
+    /// needs to drive it directly (batcher, obs, session handle, worker).
+    fn spawn_sched(engine: Arc<Engine>, policy: SchedPolicy, name: &str) -> Spawned {
+        let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+        let obs = RouteObs::standalone(name);
+        let sched = Arc::new(Scheduler::new(engine, policy));
+        let sessions = sched.sessions();
+        let worker = {
+            let b = batcher.clone();
+            let o = obs.clone();
+            std::thread::spawn(move || sched.run(&b, &o))
+        };
+        (batcher, obs, sessions, worker)
+    }
+
+    /// Drain one stream to completion, asserting frame order: `index` must
+    /// count up from 0 and the concatenated tokens must equal `Done`'s.
+    fn drain_stream(rx: std::sync::mpsc::Receiver<StreamEvent>) -> GenResult {
+        let mut tokens: Vec<u32> = Vec::new();
+        loop {
+            match rx.recv_timeout(Duration::from_secs(60)).expect("stream ended without Done") {
+                StreamEvent::Token { index, token } => {
+                    assert_eq!(index, tokens.len(), "token frames must arrive in order");
+                    tokens.push(token);
+                }
+                StreamEvent::Done(res) => {
+                    assert_eq!(tokens, res.tokens, "streamed frames must concatenate to result");
+                    return res;
+                }
+            }
+        }
+    }
+
+    /// Tentpole acceptance: a streamed request's token frames arrive in
+    /// order, concatenate to exactly the non-streamed result, and match
+    /// the solo reference; emission cadence lands in the inter-token-gap
+    /// histogram.
+    #[test]
+    fn streamed_frames_equal_plain_result() {
+        let engine = dense_engine(21);
+        let policy = SchedPolicy { max_slots: 2, ..Default::default() };
+        let (batcher, obs, _sessions, worker) = spawn_sched(engine.clone(), policy, "stream-t");
+        let req = GenRequest::new(0, vec![5, 6, 7], 6);
+        let plain = batcher.submit(req.clone());
+        let streamed = batcher.submit_stream(GenRequest { id: 1, ..req.clone() });
+        let plain_res = plain.recv_timeout(Duration::from_secs(60)).unwrap();
+        let stream_res = drain_stream(streamed);
+        assert_eq!(stream_res.tokens, plain_res.tokens);
+        assert_eq!(stream_res.tokens, engine.generate_batch(&[req])[0].tokens);
+        assert!(stream_res.ttft_s.unwrap() > 0.0);
+        batcher.close();
+        worker.join().unwrap();
+        // 6 tokens each = 5 post-first emissions per sequence, recorded
+        // for streamed and plain flights alike.
+        let gaps = obs
+            .metrics
+            .histograms()
+            .iter()
+            .find(|(name, _)| *name == "inter_token_seconds")
+            .map(|(_, h)| h.count())
+            .unwrap();
+        assert!(gaps >= 10, "expected >= 10 inter-token gap samples, got {gaps}");
+        assert!(obs.metrics.inter_token_pct(50.0) >= 0.0);
+    }
+
+    /// Sampled requests stream identically too: same seed ⇒ the streamed
+    /// frames equal the plain submit's tokens.
+    #[test]
+    fn streamed_sampling_matches_plain() {
+        let engine = dense_engine(22);
+        let sample =
+            crate::model::SampleParams { temperature: 0.9, top_k: 12, top_p: 0.95, seed: 7 };
+        let policy = SchedPolicy { max_slots: 2, ..Default::default() };
+        let (batcher, _obs, _sessions, worker) = spawn_sched(engine.clone(), policy, "stream-s");
+        let req = GenRequest::new(0, vec![9, 10], 8).with_sample(sample);
+        let plain = batcher.submit(req.clone()).recv_timeout(Duration::from_secs(60)).unwrap();
+        let streamed = drain_stream(batcher.submit_stream(GenRequest { id: 1, ..req }));
+        assert_eq!(streamed.tokens, plain.tokens);
+        batcher.close();
+        worker.join().unwrap();
+    }
+
+    /// Session turns resume their parked slot (prefilling only the new
+    /// tokens) and each turn's output equals a fresh request over the same
+    /// full conversation prompt.
+    #[test]
+    fn session_turns_resume_and_match_solo() {
+        let engine = dense_engine(23);
+        let policy = SchedPolicy { max_slots: 2, max_sessions: 2, ..Default::default() };
+        let (batcher, _obs, sessions, worker) = spawn_sched(engine.clone(), policy, "sess-t");
+        let sid = sessions.open().unwrap();
+        let mut expected_len = 0;
+        for (turn, new_tokens) in [vec![5u32, 6], vec![9], vec![11, 12]].into_iter().enumerate() {
+            let prompt = sessions.append_begin(sid, &new_tokens).unwrap();
+            let req = GenRequest::new(turn as u64, prompt.clone(), 3).with_session(sid);
+            let res = batcher.submit(req).recv_timeout(Duration::from_secs(60)).unwrap();
+            let solo = engine.generate_batch(&[GenRequest::new(99, prompt.clone(), 3)]);
+            assert_eq!(res.tokens, solo[0].tokens, "turn {turn} diverged on resume");
+            expected_len = prompt.len() + res.tokens.len();
+            assert_eq!(sessions.history_len(sid), Some(expected_len));
+        }
+        assert!(expected_len > 0);
+        sessions.drop_session(sid).unwrap();
+        batcher.close();
+        worker.join().unwrap();
+    }
+
+    /// Parked slots are a cache, not a reservation: with every slot parked
+    /// by idle sessions, a burst of plain requests still serves (evicting
+    /// LRU slots), and the evicted session's next turn still matches solo
+    /// via the full re-prefill fallback.
+    #[test]
+    fn parked_slots_evict_for_fresh_admissions() {
+        let engine = dense_engine(25);
+        let policy = SchedPolicy { max_slots: 2, max_sessions: 2, ..Default::default() };
+        let (batcher, _obs, sessions, worker) = spawn_sched(engine.clone(), policy, "sess-evict");
+        let sids = [sessions.open().unwrap(), sessions.open().unwrap()];
+        for (i, &sid) in sids.iter().enumerate() {
+            let prompt = sessions.append_begin(sid, &[4 + i as u32]).unwrap();
+            let req = GenRequest::new(i as u64, prompt, 2).with_session(sid);
+            let _ = batcher.submit(req).recv_timeout(Duration::from_secs(60)).unwrap();
+        }
+        // Both slots are now parked. Plain requests must still serve.
+        let reqs: Vec<GenRequest> =
+            (0..3u64).map(|i| GenRequest::new(10 + i, vec![20 + i as u32], 2)).collect();
+        let rxs: Vec<_> = reqs.iter().map(|r| batcher.submit(r.clone())).collect();
+        for (req, rx) in reqs.iter().zip(rxs) {
+            let res = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(res.tokens, engine.generate_batch(&[req.clone()])[0].tokens);
+        }
+        // The evicted sessions live on: their next turns re-prefill from
+        // scratch and still match a fresh run over the full conversation.
+        for (i, &sid) in sids.iter().enumerate() {
+            let prompt = sessions.append_begin(sid, &[40 + i as u32]).unwrap();
+            let req = GenRequest::new(30 + i as u64, prompt.clone(), 2).with_session(sid);
+            let res = batcher.submit(req).recv_timeout(Duration::from_secs(60)).unwrap();
+            let solo = engine.generate_batch(&[GenRequest::new(99, prompt, 2)]);
+            assert_eq!(res.tokens, solo[0].tokens, "evicted session {i} diverged");
+        }
+        batcher.close();
+        worker.join().unwrap();
+    }
+
+    /// A conversation that outgrows the context window falls back to a
+    /// fresh *windowed* prefill — same tokens as a fresh request over the
+    /// full history, turn after turn.
+    #[test]
+    fn deep_session_falls_back_to_windowed_prefill() {
+        let cfg = crate::model::ModelConfig {
+            name: "ring-sess".to_string(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff_ratio: 2,
+            vocab: 96,
+            max_seq: 8,
+            stands_for: "session window-overflow test".to_string(),
+        };
+        let mut rng = Pcg32::seeded(27);
+        let w = init(&cfg, &mut rng);
+        let engine = Arc::new(Engine::new("ring-sess", cfg, Arc::new(w), None));
+        let policy = SchedPolicy { max_slots: 2, max_sessions: 1, ..Default::default() };
+        let (batcher, _obs, sessions, worker) = spawn_sched(engine.clone(), policy, "sess-deep");
+        let sid = sessions.open().unwrap();
+        // 4 turns × (2 new + 2 generated) tokens: the history passes
+        // max_seq = 8 by turn 2 and keeps growing.
+        for turn in 0..4u64 {
+            let new = [5 + turn as u32, 6 + turn as u32];
+            let prompt = sessions.append_begin(sid, &new).unwrap();
+            let req = GenRequest::new(turn, prompt.clone(), 2).with_session(sid);
+            let res = batcher.submit(req).recv_timeout(Duration::from_secs(60)).unwrap();
+            let solo = engine.generate_batch(&[GenRequest::new(99, prompt, 2)]);
+            assert_eq!(res.tokens, solo[0].tokens, "turn {turn} diverged past the window");
+        }
+        batcher.close();
+        worker.join().unwrap();
+    }
+
+    /// Speculative routes serve sessions too: the twin draft slot parks
+    /// and resumes in lockstep with the serving slot, and every turn still
+    /// matches the TARGET's solo output over the full conversation.
+    #[test]
+    fn speculative_sessions_park_twin_slots() {
+        let target = dense_engine(7);
+        let draft = kernel_engine(7);
+        let policy = SchedPolicy {
+            max_slots: 2,
+            draft_k: 3,
+            max_sessions: 2,
+            ..Default::default()
+        };
+        let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+        let obs = RouteObs::standalone("spec-sess");
+        let sched = Arc::new(Scheduler::new_spec(target.clone(), draft, policy));
+        let sessions = sched.sessions();
+        let worker = {
+            let b = batcher.clone();
+            let o = obs.clone();
+            std::thread::spawn(move || sched.run(&b, &o))
+        };
+        let sid = sessions.open().unwrap();
+        for (turn, new_tokens) in [vec![5u32, 6, 7], vec![9, 10]].into_iter().enumerate() {
+            let prompt = sessions.append_begin(sid, &new_tokens).unwrap();
+            let req = GenRequest::new(turn as u64, prompt.clone(), 4).with_session(sid);
+            let res = batcher.submit(req).recv_timeout(Duration::from_secs(60)).unwrap();
+            let solo = target.generate_batch(&[GenRequest::new(99, prompt, 4)]);
+            assert_eq!(res.tokens, solo[0].tokens, "spec session turn {turn} diverged");
+        }
+        batcher.close();
+        worker.join().unwrap();
     }
 }

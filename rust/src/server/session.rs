@@ -1,0 +1,341 @@
+//! Stateful multi-turn sessions: KV cache slots stay resident between
+//! turns so turn N+1 prefills only its *new* tokens.
+//!
+//! A [`SessionTable`] tracks per-session token history and, between turns,
+//! the **parked** KV cache slot the previous turn left behind. The
+//! scheduler owns the actual pools; the table only brokers slot custody:
+//!
+//! * `open` creates a session (bounded by `max_sessions`).
+//! * `append_begin` stakes a turn: it appends the client's new tokens to
+//!   the history, marks the session busy (one turn in flight at a time),
+//!   and returns the full prompt (history so far) for the request.
+//! * `resume_slot` hands the parked slot — holding `history.len() − 1`
+//!   cached rows from the previous turn — back to the scheduler, which
+//!   resumes prefill from row `cached` instead of row 0
+//!   (`Engine::prefill_resume`).
+//! * `finish` returns the slot at retirement: the table parks it (and
+//!   folds the generated tokens into history) unless the session was
+//!   dropped mid-turn, in which case the caller frees it.
+//! * `evict_lru` reclaims the least-recently-used *idle* parked slot when
+//!   the pool runs dry — the session survives (history intact) and its
+//!   next turn simply pays a full re-prefill.
+//! * `drop_session` ends a session; a slot parked by a dropped session
+//!   lands on the reap list ([`SessionTable::take_reaped`]) because only
+//!   the scheduler thread may touch the pools.
+//!
+//! Recency uses a logical clock (bumped on every touch), not wall time —
+//! deterministic and free of `Instant` plumbing.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Why a session operation failed. Typed (not stringly) so the protocol
+/// layer can map each case to a stable wire error code.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionError {
+    /// The route was not configured with sessions
+    /// (`SchedPolicy::max_sessions == 0`, or a fixed-batch route).
+    Disabled,
+    /// No live session with this id (never opened, or already dropped).
+    Unknown(u64),
+    /// The session already has a turn in flight.
+    Busy(u64),
+    /// `open` would exceed the table's `max_sessions` cap.
+    TableFull(usize),
+    /// The request itself was malformed (empty append, bad token, ...).
+    Invalid(String),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Disabled => write!(f, "model does not serve sessions"),
+            SessionError::Unknown(id) => write!(f, "unknown session {id}"),
+            SessionError::Busy(id) => write!(f, "session {id} already has a turn in flight"),
+            SessionError::TableFull(max) => write!(f, "session table full (max {max})"),
+            SessionError::Invalid(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+struct Session {
+    /// Every token of the conversation: prompts and generations, in order.
+    history: Vec<u32>,
+    /// KV cache slot parked between turns, caching `history.len() − 1`
+    /// rows (the last emitted token is never fed). `None` while a turn is
+    /// in flight, after LRU eviction, or before the first turn finishes.
+    parked_slot: Option<usize>,
+    /// Logical-clock stamp of the last touch (LRU order).
+    last_used: u64,
+    /// A turn is in flight: appends are rejected until it retires.
+    busy: bool,
+    /// Dropped mid-turn: `finish` reaps it instead of parking.
+    dropped: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    next_id: u64,
+    sessions: HashMap<u64, Session>,
+    /// Logical LRU clock; bumped on every touch.
+    clock: u64,
+    /// Slots surrendered by dropped sessions, awaiting the scheduler tick
+    /// (only the scheduler thread may free pool slots).
+    reap: Vec<usize>,
+}
+
+/// Thread-safe session registry for one route. Created by the scheduler
+/// (which owns the KV pools) and shared with the router front-end.
+pub struct SessionTable {
+    inner: Mutex<Inner>,
+    max_sessions: usize,
+}
+
+impl SessionTable {
+    pub fn new(max_sessions: usize) -> Self {
+        SessionTable { inner: Mutex::new(Inner { next_id: 1, ..Default::default() }), max_sessions }
+    }
+
+    /// Whether this route serves sessions at all.
+    pub fn enabled(&self) -> bool {
+        self.max_sessions > 0
+    }
+
+    pub fn max_sessions(&self) -> usize {
+        self.max_sessions
+    }
+
+    /// Live (open, not dropped) session count.
+    pub fn live(&self) -> usize {
+        self.inner.lock().unwrap().sessions.values().filter(|s| !s.dropped).count()
+    }
+
+    /// Open a new session and return its id.
+    pub fn open(&self) -> Result<u64, SessionError> {
+        if !self.enabled() {
+            return Err(SessionError::Disabled);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.sessions.values().filter(|s| !s.dropped).count() >= self.max_sessions {
+            return Err(SessionError::TableFull(self.max_sessions));
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.clock += 1;
+        let stamp = inner.clock;
+        inner.sessions.insert(
+            id,
+            Session {
+                history: Vec::new(),
+                parked_slot: None,
+                last_used: stamp,
+                busy: false,
+                dropped: false,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Begin a turn: append `new_tokens` to the session history, mark the
+    /// session busy, and return the full prompt (the whole history). The
+    /// turn MUST be completed with [`SessionTable::finish`] once the
+    /// request retires, or the session stays busy forever.
+    pub fn append_begin(&self, id: u64, new_tokens: &[u32]) -> Result<Vec<u32>, SessionError> {
+        if new_tokens.is_empty() {
+            return Err(SessionError::Invalid("session append needs at least one token".into()));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let stamp = inner.clock;
+        let sess = match inner.sessions.get_mut(&id) {
+            Some(s) if !s.dropped => s,
+            _ => return Err(SessionError::Unknown(id)),
+        };
+        if sess.busy {
+            return Err(SessionError::Busy(id));
+        }
+        sess.busy = true;
+        sess.last_used = stamp;
+        sess.history.extend_from_slice(new_tokens);
+        Ok(sess.history.clone())
+    }
+
+    /// Take the session's parked slot for resumption, if one survived
+    /// since the last turn. Called by the scheduler at admission; the slot
+    /// holds the previous turn's cached rows.
+    pub fn resume_slot(&self, id: u64) -> Option<usize> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let stamp = inner.clock;
+        let sess = inner.sessions.get_mut(&id)?;
+        sess.last_used = stamp;
+        sess.parked_slot.take()
+    }
+
+    /// Complete a turn: fold the generated tokens into the history and
+    /// park `slot` for the next turn. Returns `true` if the table took
+    /// custody of the slot; `false` means the session was dropped mid-turn
+    /// (its entry is reaped here) and the caller must free the slot.
+    pub fn finish(&self, id: u64, generated: &[u32], slot: usize) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let stamp = inner.clock;
+        let Some(sess) = inner.sessions.get_mut(&id) else {
+            return false;
+        };
+        if sess.dropped {
+            inner.sessions.remove(&id);
+            return false;
+        }
+        sess.busy = false;
+        sess.last_used = stamp;
+        sess.history.extend_from_slice(generated);
+        sess.parked_slot = Some(slot);
+        true
+    }
+
+    /// Drop a session. Idle sessions release their parked slot onto the
+    /// reap list (freed by the scheduler next tick); a session with a turn
+    /// in flight is marked dropped and reaped when that turn finishes.
+    pub fn drop_session(&self, id: u64) -> Result<(), SessionError> {
+        let mut inner = self.inner.lock().unwrap();
+        let sess = match inner.sessions.get_mut(&id) {
+            Some(s) if !s.dropped => s,
+            _ => return Err(SessionError::Unknown(id)),
+        };
+        if sess.busy {
+            sess.dropped = true;
+            return Ok(());
+        }
+        let parked = sess.parked_slot.take();
+        inner.sessions.remove(&id);
+        if let Some(slot) = parked {
+            inner.reap.push(slot);
+        }
+        Ok(())
+    }
+
+    /// Slots surrendered by dropped sessions since the last call. The
+    /// scheduler drains this each tick and frees them in its pools.
+    pub fn take_reaped(&self) -> Vec<usize> {
+        std::mem::take(&mut self.inner.lock().unwrap().reap)
+    }
+
+    /// Reclaim the least-recently-used parked slot, or `None` if no
+    /// session is parked. The evicted session stays live with its history
+    /// intact — its next turn (even one already queued: a busy session's
+    /// slot is parked until admission actually resumes it) re-prefills
+    /// from scratch. The slot goes straight back to the caller (the
+    /// scheduler, mid-admission), not the reap list.
+    pub fn evict_lru(&self) -> Option<usize> {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.parked_slot.is_some())
+            .min_by_key(|(_, s)| s.last_used)
+            .map(|(&id, _)| id)?;
+        inner.sessions.get_mut(&id).unwrap().parked_slot.take()
+    }
+
+    /// Token count of the session's history (for tests / introspection).
+    pub fn history_len(&self, id: u64) -> Option<usize> {
+        let inner = self.inner.lock().unwrap();
+        inner.sessions.get(&id).filter(|s| !s.dropped).map(|s| s.history.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_append_finish_roundtrip() {
+        let t = SessionTable::new(4);
+        assert!(t.enabled());
+        let id = t.open().unwrap();
+        let prompt = t.append_begin(id, &[1, 2, 3]).unwrap();
+        assert_eq!(prompt, vec![1, 2, 3]);
+        // First turn: nothing parked yet.
+        assert_eq!(t.resume_slot(id), None);
+        assert!(t.finish(id, &[7, 8], 5));
+        assert_eq!(t.history_len(id), Some(5));
+        // Second turn resumes the parked slot and sees the full history.
+        let prompt = t.append_begin(id, &[9]).unwrap();
+        assert_eq!(prompt, vec![1, 2, 3, 7, 8, 9]);
+        assert_eq!(t.resume_slot(id), Some(5));
+    }
+
+    #[test]
+    fn busy_and_unknown_are_rejected() {
+        let t = SessionTable::new(2);
+        assert_eq!(t.append_begin(99, &[1]), Err(SessionError::Unknown(99)));
+        let id = t.open().unwrap();
+        assert!(matches!(t.append_begin(id, &[]).unwrap_err(), SessionError::Invalid(_)));
+        t.append_begin(id, &[1]).unwrap();
+        assert_eq!(t.append_begin(id, &[2]), Err(SessionError::Busy(id)));
+        assert!(t.finish(id, &[3], 0));
+        assert!(t.append_begin(id, &[2]).is_ok());
+    }
+
+    #[test]
+    fn table_caps_and_disabled() {
+        let t = SessionTable::new(0);
+        assert!(!t.enabled());
+        assert_eq!(t.open(), Err(SessionError::Disabled));
+        let t = SessionTable::new(2);
+        let a = t.open().unwrap();
+        let _b = t.open().unwrap();
+        assert_eq!(t.open(), Err(SessionError::TableFull(2)));
+        // Dropping one frees a seat.
+        t.drop_session(a).unwrap();
+        assert!(t.open().is_ok());
+        assert_eq!(t.live(), 2);
+    }
+
+    #[test]
+    fn drop_reaps_parked_slot_lazily() {
+        let t = SessionTable::new(4);
+        let id = t.open().unwrap();
+        t.append_begin(id, &[1]).unwrap();
+        assert!(t.finish(id, &[2], 3));
+        t.drop_session(id).unwrap();
+        assert_eq!(t.take_reaped(), vec![3]);
+        assert!(t.take_reaped().is_empty());
+        assert_eq!(t.drop_session(id), Err(SessionError::Unknown(id)));
+    }
+
+    #[test]
+    fn drop_mid_turn_defers_to_finish() {
+        let t = SessionTable::new(4);
+        let id = t.open().unwrap();
+        t.append_begin(id, &[1]).unwrap();
+        t.drop_session(id).unwrap(); // turn in flight: deferred
+        assert!(t.take_reaped().is_empty());
+        // finish refuses custody: the scheduler frees the slot directly.
+        assert!(!t.finish(id, &[2], 7));
+        assert_eq!(t.history_len(id), None);
+    }
+
+    #[test]
+    fn evict_lru_takes_oldest_idle_slot() {
+        let t = SessionTable::new(4);
+        let a = t.open().unwrap();
+        let b = t.open().unwrap();
+        for (id, slot) in [(a, 0), (b, 1)] {
+            t.append_begin(id, &[1]).unwrap();
+            assert!(t.finish(id, &[2], slot));
+        }
+        // Touch a: b becomes the LRU.
+        let _ = t.append_begin(a, &[5]).unwrap();
+        assert!(t.finish(a, &[6], 0));
+        assert_eq!(t.evict_lru(), Some(1));
+        // b survives eviction with history intact — next turn re-prefills.
+        assert_eq!(t.history_len(b), Some(3));
+        assert_eq!(t.resume_slot(b), None);
+        assert_eq!(t.evict_lru(), Some(0));
+        assert_eq!(t.evict_lru(), None);
+    }
+}

@@ -6,8 +6,8 @@
 //! *target* (the dense f32 model: the quality bar) — and turns the
 //! compression speedup into end-to-end dense-output decode throughput:
 //!
-//! 1. **Draft**: each scheduled sequence greedily decodes `k` tokens on
-//!    the draft model (one catch-up span + `k−1` single-token forwards,
+//! 1. **Draft**: each scheduled sequence decodes `k` tokens on the draft
+//!    model (one catch-up span + `k−1` single-token forwards,
 //!    batched across sequences; the catch-up span replays the token
 //!    history the draft cache has not seen yet, so the draft needs no
 //!    prefill of its own).
@@ -15,13 +15,13 @@
 //!    forward — the verify span `[t0, d1..dk]` is an ordinary multi-token
 //!    continuation span at the slot's logical base, exactly the spans
 //!    chunked prefill already feeds through `model::forward_slots`, so row
-//!    `i` of the span's logits is the target's greedy choice after
-//!    consuming `t0, d1..d_i`. The longest prefix on which the target
-//!    agrees is accepted; the first disagreeing row IS the correction
-//!    token (and a fully-accepted span yields the last row as a free
-//!    bonus token). Every step therefore emits between 1 and `k+1`
-//!    tokens, each one the token target-only greedy decode would have
-//!    produced — speculation changes latency, never output.
+//!    `i` of the span's logits is the target's choice after consuming
+//!    `t0, d1..d_i`. The longest prefix on which the target agrees is
+//!    accepted; the first disagreeing row IS the correction token (and a
+//!    fully-accepted span yields the last row as a free bonus token).
+//!    Every step therefore emits between 1 and `k+1` tokens, each one the
+//!    token target-only decode would have produced — speculation changes
+//!    latency, never output.
 //! 3. **Rollback**: the rejected suffix of the verify span is discarded
 //!    from BOTH KV pools via [`KvCachePool::truncate`], the rewind
 //!    primitive this step introduced: the target keeps exactly the
@@ -33,12 +33,23 @@
 //!    sequence decodes past that point it permanently falls back to
 //!    plain single-token target steps (which may wrap, like any decode).
 //!
-//! Draft and target share [`greedy_pick`]'s lowest-index tie-break — with
+//! Draft and target share the sampling rule: greedy requests use
+//! `model::greedy_pick`'s lowest-index tie-break on both sides (with
 //! different tie-breaks, acceptance would silently degrade on tied logits
-//! even when the models agree.
+//! even when the models agree), and sampled requests
+//! (`GenRequest::sample`, temperature > 0) **sample-match** rather than
+//! argmax-match — the draft proposes by sampling its own logits with a
+//! *clone* of the sequence's seeded RNG (one draw per proposed token),
+//! and the target verifies by sampling its logits with the *real* RNG
+//! (one draw per emitted token), so clone draw `i` and real draw `i`
+//! consume the same stream position. Every emitted token is therefore the
+//! target's own sampled choice under the exact RNG state the non-
+//! speculative path would have had, which makes speculative output
+//! token-identical to plain decoding for any seed by construction; the
+//! draft's proposals only decide how many of those tokens land per step.
 
 use super::engine::{Engine, GenRequest, GenResult, PrefillState, SeqState};
-use crate::model::{greedy_pick, KvCachePool};
+use crate::model::{KvCachePool, Sampler};
 use std::sync::Arc;
 
 /// What one [`SpecEngine::step_chunked`] tick produced — the
@@ -77,11 +88,15 @@ struct Plan {
     l_t: usize,
     /// Draft depth this tick (≥ 1; clamped to ring room and `max_new`).
     k: usize,
-    /// The `k` greedy draft tokens.
+    /// The `k` proposed draft tokens.
     drafted: Vec<u32>,
+    /// Clone of the sequence's sampler taken at plan time: draft proposals
+    /// draw from this copy so clone draw `i` matches the real stream's
+    /// draw `i` during verify (greedy params draw nothing on either side).
+    sampler: Sampler,
 }
 
-/// A draft/target engine pair serving speculative greedy decode.
+/// A draft/target engine pair serving speculative decode.
 ///
 /// Both engines must share vocab and context length (asserted); they
 /// usually share weights-before-compression too, but nothing requires it —
@@ -182,11 +197,20 @@ impl SpecEngine {
             if k == 0 {
                 fallback.push(i);
             } else {
-                plans.push(Plan { idx: i, slot, l_t, k, drafted: Vec::with_capacity(k) });
+                plans.push(Plan {
+                    idx: i,
+                    slot,
+                    l_t,
+                    k,
+                    drafted: Vec::with_capacity(k),
+                    sampler: st.sampler_clone(),
+                });
             }
         }
 
-        // ── Draft phase: k greedy tokens per plan on the compressed model.
+        // ── Draft phase: k proposed tokens per plan on the compressed
+        // model, picked by each plan's cloned sampler (greedy argmax for
+        // default params; one cloned-RNG draw per proposal otherwise).
         // First a batched catch-up forward replaying the history suffix
         // the draft cache is missing (its last row yields d1), then up to
         // k_max − 1 batched single-token rounds. The catch-up span never
@@ -209,7 +233,8 @@ impl SpecEngine {
                 let mut row = 0usize;
                 for (p, c) in plans.iter_mut().zip(&catchups) {
                     row += c.len();
-                    p.drafted.push(greedy_pick(logits.row(row - 1)) as u32);
+                    let t = p.sampler.pick(logits.row(row - 1)) as u32;
+                    p.drafted.push(t);
                 }
             }
             let k_max = plans.iter().map(|p| p.k).max().unwrap_or(0);
@@ -228,7 +253,8 @@ impl SpecEngine {
                 drop(entries);
                 let mut row = 0usize;
                 for p in plans.iter_mut().filter(|p| p.k > round) {
-                    p.drafted.push(greedy_pick(logits.row(row)) as u32);
+                    let t = p.sampler.pick(logits.row(row)) as u32;
+                    p.drafted.push(t);
                     row += 1;
                 }
             }
@@ -276,38 +302,40 @@ impl SpecEngine {
             p.advance(c);
             stats.prefill_tokens += c;
             if p.prompt_done() {
-                p.push_first(greedy_pick(logits.row(row - 1)) as u32);
+                let t = p.pick(logits.row(row - 1));
+                p.push_first(t);
                 stats.first_tokens += 1;
             }
         }
-        // Verify rows: row base+i is the target's greedy choice after
-        // consuming span[0..=i] = t0, d1..d_i — it either confirms
-        // drafted[i] or IS the correction token.
+        // Verify rows: row base+i is the target's sampled choice (real
+        // sequence RNG; greedy argmax for default params) after consuming
+        // span[0..=i] = t0, d1..d_i — it either confirms drafted[i] or IS
+        // the correction token. Picking and pushing go together so the
+        // real RNG draws exactly once per emitted token, never for rows a
+        // retired sequence would not have reached.
         for p in &plans {
             let base = row;
             row += p.k + 1;
-            let mut emit: Vec<u32> = Vec::with_capacity(p.k + 1);
+            let mut pushed = 0usize;
             let mut agreed = 0usize;
             for i in 0..p.k {
-                let g = greedy_pick(logits.row(base + i)) as u32;
-                emit.push(g);
+                let g = decodes[p.idx].pick(logits.row(base + i));
+                decodes[p.idx].push_token(g);
+                pushed += 1;
                 if g != p.drafted[i] {
                     break; // the correction token ends the step's emission
                 }
                 agreed += 1;
+                if decodes[p.idx].done {
+                    break; // stop token confirmed mid-span retires the seq
+                }
             }
-            if agreed == p.k {
+            if agreed == p.k && !decodes[p.idx].done {
                 // Every draft confirmed: the last verify row is a free
                 // bonus token (the target's choice after d_k).
-                emit.push(greedy_pick(logits.row(base + p.k)) as u32);
-            }
-            let mut pushed = 0usize;
-            for &t in &emit {
-                decodes[p.idx].push_token(t);
+                let g = decodes[p.idx].pick(logits.row(base + p.k));
+                decodes[p.idx].push_token(g);
                 pushed += 1;
-                if decodes[p.idx].done {
-                    break;
-                }
             }
             stats.decode_tokens += pushed;
             stats.decode_seqs += 1;
@@ -323,10 +351,11 @@ impl SpecEngine {
             target_pool.truncate(p.slot, l_new);
             draft_pool.truncate(p.slot, draft_pool.len(p.slot).min(l_new));
         }
-        // Fallback rows: plain single-token greedy steps (may wrap the
+        // Fallback rows: plain single-token sampled steps (may wrap the
         // ring like any decode; no rollback needed).
         for &i in &fallback {
-            decodes[i].push_token(greedy_pick(logits.row(row)) as u32);
+            let t = decodes[i].pick(logits.row(row));
+            decodes[i].push_token(t);
             row += 1;
             stats.decode_tokens += 1;
             stats.decode_seqs += 1;
@@ -334,7 +363,7 @@ impl SpecEngine {
         stats
     }
 
-    /// Speculatively greedy-decode a batch to completion over private twin
+    /// Speculatively decode a batch to completion over private twin
     /// pools — the run-to-completion wrapper mirroring
     /// `Engine::generate_batch`, with `GenResult::spec` carrying each
     /// request's `(drafted, accepted)` totals. Output tokens are identical
@@ -491,6 +520,47 @@ mod tests {
         let want = spec.target().generate_batch(&reqs);
         for (g, w) in got.iter().zip(&want) {
             assert_eq!(g.tokens, w.tokens, "request {} diverged from target-only", g.id);
+        }
+    }
+
+    #[test]
+    fn sampled_identical_twin_accepts_everything() {
+        // Identical twin + non-greedy sampling: the draft proposes with a
+        // CLONE of the sequence RNG on the same logits the target will
+        // sample with the REAL RNG, so every proposal is confirmed — this
+        // is the clone-draw-i == real-draw-i alignment contract.
+        use crate::model::SampleParams;
+        let target = Arc::new(dense_engine(1));
+        let draft = Arc::new(dense_engine(1));
+        let spec = SpecEngine::new(target, draft, 3);
+        let sample = SampleParams { temperature: 0.9, top_k: 16, top_p: 0.95, seed: 99 };
+        let reqs = vec![GenRequest::new(1, vec![5, 6, 7], 9).with_sample(sample)];
+        let got = spec.generate_batch(&reqs);
+        let want = spec.target().generate_batch(&reqs);
+        assert_eq!(got[0].tokens, want[0].tokens);
+        let (d, a) = got[0].spec.unwrap();
+        assert_eq!(d, a, "an identical twin must accept every sampled draft");
+        assert!(d > 0);
+    }
+
+    #[test]
+    fn sampled_disagreeing_draft_still_matches_target() {
+        // A draft from different weights proposes garbage; rejections and
+        // corrections must leave the emitted stream token-identical to
+        // target-only sampling with the same seed (rollback + RNG resync).
+        use crate::model::SampleParams;
+        let target = Arc::new(dense_engine(1));
+        let draft = Arc::new(dense_engine(7));
+        let spec = SpecEngine::new(target, draft, 4);
+        let sample = SampleParams { temperature: 1.1, top_k: 0, top_p: 1.0, seed: 42 };
+        let reqs = vec![
+            GenRequest::new(1, vec![5, 6, 7], 10).with_sample(sample),
+            GenRequest::new(2, vec![40, 41], 7).with_sample(SampleParams { seed: 5, ..sample }),
+        ];
+        let got = spec.generate_batch(&reqs);
+        let want = spec.target().generate_batch(&reqs);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.tokens, w.tokens, "sampled request {} diverged from target-only", g.id);
         }
     }
 

@@ -617,6 +617,105 @@ fn prop_histogram_integral_matches_direct_mse() {
 }
 
 #[test]
+fn prop_seeded_sampling_is_path_invariant() {
+    // The wire contract `docs/PROTOCOL.md` promises: same request + same
+    // seed ⇒ identical tokens on EVERY serving path. Swept over sampling
+    // configs, the same seeded request must produce the same tokens solo,
+    // batched among unrelated requests, streamed (with the concatenated
+    // token frames equal to the final result), and as a session-resumed
+    // turn that prefills only its new tokens — and temperature 0 must
+    // reduce exactly to greedy argmax (zero RNG draws).
+    use slim::model::SampleParams;
+    use slim::server::scheduler::SchedPolicy;
+    use slim::server::{RequestOpts, Router, StreamEvent};
+    let cfg = ModelConfig {
+        name: "sample-prop".to_string(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff_ratio: 2,
+        vocab: 96,
+        max_seq: 32,
+        stands_for: "seeded sampling property test".to_string(),
+    };
+    let mut rng = Pcg32::seeded(3333);
+    let weights = Arc::new(init(&cfg, &mut rng));
+    let solo = Engine::new("solo", cfg.clone(), weights.clone(), None);
+    let mut router = Router::new();
+    let policy = SchedPolicy { max_slots: 2, max_sessions: 2, ..Default::default() };
+    router.register_continuous(Engine::new("routed", cfg.clone(), weights.clone(), None), policy);
+    let max_new = 6usize;
+    for trial in 0..6usize {
+        let sample = SampleParams {
+            temperature: 0.7 + 0.2 * (trial % 3) as f32,
+            top_k: [0usize, 8, 24][trial % 3],
+            top_p: [1.0f32, 0.9, 0.7][(trial + 1) % 3],
+            seed: 1000 + trial as u64,
+        };
+        let turn1: Vec<u32> = (0..4).map(|_| rng.below(cfg.vocab as u32)).collect();
+        let turn2: Vec<u32> = (0..3).map(|_| rng.below(cfg.vocab as u32)).collect();
+
+        // Solo reference.
+        let req = GenRequest::new(0, turn1.clone(), max_new).with_sample(sample);
+        let want = solo.generate_batch(std::slice::from_ref(&req))[0].tokens.clone();
+        assert_eq!(want.len(), max_new, "trial {trial}");
+
+        // Batched among unrelated requests (different seeds and budgets):
+        // per-request RNG streams must not interact.
+        let decoy = SampleParams { seed: 9 + trial as u64, ..sample };
+        let batch = vec![
+            GenRequest::new(10, vec![1, 2, 3], max_new).with_sample(decoy),
+            req.clone(),
+            GenRequest::new(11, vec![4], max_new + 2),
+        ];
+        assert_eq!(solo.generate_batch(&batch)[1].tokens, want, "trial {trial}: batched");
+
+        // Streamed through the continuous scheduler: frames concatenate
+        // to the Done result, which equals the solo tokens.
+        let opts = RequestOpts { max_new, sample, ..Default::default() };
+        let rx = router.submit_stream_with("routed", turn1.clone(), opts).unwrap();
+        let mut streamed: Vec<u32> = Vec::new();
+        let mut done = None;
+        for ev in rx.iter() {
+            match ev {
+                StreamEvent::Token { index, token } => {
+                    assert_eq!(index, streamed.len(), "trial {trial}: frame order");
+                    streamed.push(token);
+                }
+                StreamEvent::Done(res) => {
+                    done = Some(res);
+                    break;
+                }
+            }
+        }
+        let done = done.expect("stream must end with Done");
+        assert_eq!(streamed, done.tokens, "trial {trial}: frames vs result");
+        assert_eq!(streamed, want, "trial {trial}: streamed");
+
+        // Session-resumed: turn 1 equals the solo run, and turn 2 (which
+        // resumes the parked KV slot, prefilling only its new tokens)
+        // equals a fresh one-shot replay over the concatenated history.
+        let sid = router.session_open("routed").unwrap();
+        let r1 = router.session_append("routed", sid, turn1.clone(), opts).unwrap();
+        assert_eq!(r1.tokens, want, "trial {trial}: session turn 1");
+        let r2 = router.session_append("routed", sid, turn2.clone(), opts).unwrap();
+        let full = [turn1.clone(), r1.tokens, turn2.clone()].concat();
+        let replay_req = GenRequest::new(1, full, max_new).with_sample(sample);
+        let replay = solo.generate_batch(&[replay_req]);
+        assert_eq!(r2.tokens, replay[0].tokens, "trial {trial}: session-resumed");
+        router.session_drop("routed", sid).unwrap();
+
+        // temperature 0 with the other knobs set is exactly greedy.
+        let zero = SampleParams { temperature: 0.0, ..sample };
+        let greedy = solo.generate_batch(&[GenRequest::new(2, turn1.clone(), max_new)]);
+        let zeroed =
+            solo.generate_batch(&[GenRequest::new(3, turn1, max_new).with_sample(zero)]);
+        assert_eq!(zeroed[0].tokens, greedy[0].tokens, "trial {trial}: temp 0 == greedy");
+    }
+    router.shutdown();
+}
+
+#[test]
 fn prop_spec_decode_equals_target_greedy() {
     // Self-speculative decoding must be OUTPUT-INVARIANT: for every draft
     // depth k ∈ 1..=8, every KV storage dtype, prompts on both sides of

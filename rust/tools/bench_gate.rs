@@ -17,6 +17,12 @@
 //!   (`BENCH_serve.json`, `results.hol-chunked.short_ttft_p95_ms`) —
 //!   LOWER is better: this is the tail latency chunked prefill exists to
 //!   protect, so a >20% increase fails the gate;
+//! * streamed-delivery first-frame latency p95 on the int4-2:4
+//!   continuous route (`BENCH_serve.json`,
+//!   `results.int4-2:4-streamed.first_frame_p95_ms`) — LOWER is better:
+//!   the client-observed streamed TTFT (submit → first token frame) the
+//!   wire protocol's `"stream":true` mode exists to deliver; streamed
+//!   throughput and first-frame p50 ride along as info rows;
 //! * speculative-decode speedup over the dense-cached target with the
 //!   int4-2:4 draft (`BENCH_spec.json`,
 //!   `results.spec-int4-2:4.speedup_vs_dense`) — higher is better; the
@@ -89,6 +95,7 @@ const METRICS: &[MetricSpec] = &[
     rel("BENCH_decode.json", &["results", "int4-2:4-kv-f16", "decode_tok_per_s"], true, false),
     rel("BENCH_serve.json", &["results", "int4-2:4-continuous", "tok_per_s"], true, false),
     rel("BENCH_serve.json", &["results", "hol-chunked", "short_ttft_p95_ms"], true, true),
+    rel("BENCH_serve.json", &["results", "int4-2:4-streamed", "first_frame_p95_ms"], true, true),
     rel("BENCH_spec.json", &["results", "spec-int4-2:4", "speedup_vs_dense"], true, false),
     MetricSpec {
         file: "BENCH_serve.json",
@@ -120,6 +127,8 @@ const METRICS: &[MetricSpec] = &[
     rel("BENCH_decode.json", &["results", "dense-f16-cached", "decode_tok_per_s"], false, false),
     rel("BENCH_decode.json", &["results", "dense-cached", "decode_tok_per_s"], false, false),
     rel("BENCH_serve.json", &["results", "dense-continuous", "tok_per_s"], false, false),
+    rel("BENCH_serve.json", &["results", "int4-2:4-streamed", "tok_per_s"], false, false),
+    rel("BENCH_serve.json", &["results", "int4-2:4-streamed", "first_frame_p50_ms"], false, true),
     rel("BENCH_serve.json", &["results", "hol-monolithic", "short_ttft_p95_ms"], false, true),
     rel("BENCH_serve.json", &["results", "hol-chunked-fair", "short_ttft_p95_ms"], false, true),
     rel(
