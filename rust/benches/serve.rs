@@ -33,6 +33,22 @@
 //! invariant that the concatenated token frames equal the final
 //! `GenResult` (the wire contract `docs/PROTOCOL.md` documents).
 //!
+//! The prefix-shared section replays groups of requests that share a
+//! 64-token system prompt (4 full 16-row KV pages) sequentially against
+//! the paged continuous scheduler: the first request of a group prefills
+//! and registers the prefix pages, the rest map them straight out of the
+//! prefix cache and prefill only an 8-token tail. The hit population's
+//! TTFT p95 is the CI-gated `prefix-shared.short_ttft_p95_ms`
+//! (lower-is-better); the cold p95 and the pool's prefill-tokens-saved
+//! counter ride along to show the spread is real skipped compute.
+//!
+//! The preemption section saturates every slot with long-budget bulk
+//! requests, then trickles in short interactive ones — once at priority 1
+//! (the scheduler preempts a bulk victim: frees its pages, requeues it as
+//! a resumable prefill) and once at priority 0 (pure FIFO queueing).
+//! Contrast of the two interactive TTFT p95s shows what preemption buys
+//! and bulk-completion time shows what it costs.
+//!
 //! The metrics-overhead section saturates the int4-2:4 continuous route
 //! with an all-at-once burst (compute-bound — no arrival gaps to hide
 //! instrumentation cost in) twice per arm, interleaved: once with the
@@ -377,6 +393,146 @@ fn run_streamed(engine: Arc<Engine>, arrivals: &[Arrival], cap: usize) -> Stream
     }
 }
 
+struct PrefixResult {
+    /// TTFT p95 over the prefix-HIT population (the CI-gated number).
+    short_ttft_p95_ms: f64,
+    cold_ttft_p95_ms: f64,
+    prefill_tokens_saved: u64,
+    prefix_hits: u64,
+}
+
+/// Shared-system-prompt scenario: groups of requests share a 64-token
+/// prefix (4 full 16-row KV pages on the bench config). The first request
+/// of each group prefills and registers those pages; every later request
+/// maps them from the prefix cache and prefills only its short tail.
+/// Requests run sequentially (blocking), so each TTFT is pure serve
+/// latency with no queue-wait contamination — the hit-vs-cold spread is
+/// exactly the skipped prefill compute.
+fn run_prefix_shared(
+    engine: Arc<Engine>,
+    groups: usize,
+    hits_per: usize,
+    cap: usize,
+) -> PrefixResult {
+    let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+    let obs = RouteObs::standalone("bench-prefix");
+    let worker = {
+        let b = batcher.clone();
+        let o = obs.clone();
+        let e = engine.clone();
+        std::thread::spawn(move || {
+            let policy = SchedPolicy {
+                max_slots: cap,
+                step_tokens: 24,
+                chunk_tokens: 16,
+                ..Default::default()
+            };
+            Scheduler::new(e, policy).run(&b, &o)
+        })
+    };
+    let vocab = engine.config().vocab as u32;
+    let mut rng = Pcg32::seeded(0x9f1e5);
+    let mut cold_ms: Vec<f64> = Vec::new();
+    let mut hit_ms: Vec<f64> = Vec::new();
+    let mut id = 0u64;
+    for _ in 0..groups {
+        let prefix: Vec<u32> = (0..64).map(|_| rng.below(vocab)).collect();
+        for j in 0..(1 + hits_per) {
+            let tail: Vec<u32> = (0..8).map(|_| rng.below(vocab)).collect();
+            let prompt = [prefix.clone(), tail].concat();
+            let rx = batcher.submit(GenRequest::new(id, prompt, 8));
+            id += 1;
+            let out = rx.recv_timeout(Duration::from_secs(300)).expect("request lost");
+            let ttft_ms = out.ttft_s.expect("scheduler reports ttft") * 1e3;
+            if j == 0 {
+                cold_ms.push(ttft_ms);
+            } else {
+                hit_ms.push(ttft_ms);
+            }
+        }
+    }
+    let kp = obs.metrics.kv_pages();
+    batcher.close();
+    worker.join().unwrap();
+    PrefixResult {
+        short_ttft_p95_ms: pct(&mut hit_ms, 95.0),
+        cold_ttft_p95_ms: pct(&mut cold_ms, 95.0),
+        prefill_tokens_saved: kp.prefix_saved_tokens,
+        prefix_hits: kp.prefix_hits,
+    }
+}
+
+struct PreemptResult {
+    interactive_ttft_p95_ms: f64,
+    bulk_done_ms: f64,
+    tok_per_s: f64,
+}
+
+/// Bulk-vs-interactive scenario: `cap` long-budget bulk requests saturate
+/// every slot at t = 0, then short interactive requests trickle in. With
+/// `interactive_priority > 0` the scheduler preempts a bulk sequence
+/// (releasing its pages, requeueing it as a resumable prefill) the moment
+/// a strictly more urgent request waits on a full route; at priority 0
+/// the interactive population queues behind bulk completions instead.
+fn run_preemption(
+    engine: Arc<Engine>,
+    n_inter: usize,
+    interactive_priority: i32,
+    cap: usize,
+) -> PreemptResult {
+    let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+    let obs = RouteObs::standalone("bench-preempt");
+    let worker = {
+        let b = batcher.clone();
+        let o = obs.clone();
+        let e = engine.clone();
+        std::thread::spawn(move || {
+            let policy = SchedPolicy {
+                max_slots: cap,
+                step_tokens: 24,
+                chunk_tokens: 16,
+                ..Default::default()
+            };
+            Scheduler::new(e, policy).run(&b, &o)
+        })
+    };
+    let vocab = engine.config().vocab as u32;
+    let mut rng = Pcg32::seeded(0xb01d);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..cap {
+        let prompt: Vec<u32> = (0..32).map(|_| rng.below(vocab)).collect();
+        rxs.push(batcher.submit(GenRequest::new(i as u64, prompt, 48)));
+    }
+    for i in 0..n_inter {
+        std::thread::sleep(Duration::from_millis(3));
+        let prompt: Vec<u32> = (0..8).map(|_| rng.below(vocab)).collect();
+        rxs.push(batcher.submit(
+            GenRequest::new((cap + i) as u64, prompt, 4).with_priority(interactive_priority),
+        ));
+    }
+    let mut inter_ms: Vec<f64> = Vec::new();
+    let mut bulk_done_ms = 0.0f64;
+    let mut tokens = 0usize;
+    for rx in rxs {
+        let out = rx.recv_timeout(Duration::from_secs(300)).expect("request lost");
+        tokens += out.tokens.len();
+        if out.id < cap as u64 {
+            bulk_done_ms = bulk_done_ms.max(t0.elapsed().as_secs_f64() * 1e3);
+        } else {
+            inter_ms.push(out.ttft_s.expect("scheduler reports ttft") * 1e3);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    batcher.close();
+    worker.join().unwrap();
+    PreemptResult {
+        interactive_ttft_p95_ms: pct(&mut inter_ms, 95.0),
+        bulk_done_ms,
+        tok_per_s: tokens as f64 / wall_s,
+    }
+}
+
 /// Submit every request up front (no arrival pacing — the scheduler stays
 /// compute-bound, so instrumentation cost has nowhere to hide) and return
 /// serve throughput. The observability arm is whatever `obs` carries: a
@@ -550,6 +706,50 @@ fn main() {
         ]),
     ));
 
+    // ── Shared prefix: prefix-cache hit vs cold TTFT ──
+    let (groups, hits_per) = if quick { (2, 3) } else { (4, 3) };
+    let pr = run_prefix_shared(sp24.clone(), groups, hits_per, cap);
+    println!(
+        "\nprefix-shared — {groups} groups × (1 cold + {hits_per} hits) sharing a 64-token \
+         prefix (4 KV pages), int4-2:4 continuous, cap {cap}:\n\
+         hit ttft_p95 {:.1}ms vs cold ttft_p95 {:.1}ms | {} prefill tokens saved over {} hits",
+        pr.short_ttft_p95_ms, pr.cold_ttft_p95_ms, pr.prefill_tokens_saved, pr.prefix_hits
+    );
+    json_rows.push((
+        "prefix-shared",
+        obj(vec![
+            ("short_ttft_p95_ms", n(pr.short_ttft_p95_ms)),
+            ("cold_ttft_p95_ms", n(pr.cold_ttft_p95_ms)),
+            ("prefill_tokens_saved", n(pr.prefill_tokens_saved as f64)),
+            ("prefix_hits", n(pr.prefix_hits as f64)),
+        ]),
+    ));
+
+    // ── Preemption: interactive tail latency with bulk saturating slots ──
+    let n_inter = if quick { 6 } else { 12 };
+    let pre = run_preemption(sp24.clone(), n_inter, 1, cap);
+    let fifo = run_preemption(sp24.clone(), n_inter, 0, cap);
+    println!(
+        "\npreemption — {cap} bulk (32-token prompts, max_new 48) saturate the route, then \
+         {n_inter} interactive shorts arrive:\n\
+         interactive ttft_p95 {:.1}ms with priority preemption vs {:.1}ms queued FIFO \
+         (bulk done {:.0}ms vs {:.0}ms)",
+        pre.interactive_ttft_p95_ms,
+        fifo.interactive_ttft_p95_ms,
+        pre.bulk_done_ms,
+        fifo.bulk_done_ms
+    );
+    json_rows.push((
+        "preemption",
+        obj(vec![
+            ("interactive_ttft_p95_ms", n(pre.interactive_ttft_p95_ms)),
+            ("interactive_ttft_p95_ms_fifo", n(fifo.interactive_ttft_p95_ms)),
+            ("bulk_done_ms", n(pre.bulk_done_ms)),
+            ("bulk_done_ms_fifo", n(fifo.bulk_done_ms)),
+            ("tok_per_s", n(pre.tok_per_s)),
+        ]),
+    ));
+
     // ── Metrics overhead: full tracing vs no-op sink on a saturated route ──
     let n_burst = if quick { 16 } else { 32 };
     let burst = workload(n_burst, 0.0, cfg.vocab); // all arrivals at t=0
@@ -633,9 +833,34 @@ fn main() {
             100.0 * (chunked.short_ttft_p95_ms / mono.short_ttft_p95_ms - 1.0),
         );
     }
+    // Sanity: prefix hits must actually skip prefill — hit TTFT p95 under
+    // the cold population's, with a nonzero saved-token counter (the PR's
+    // shared-prefix acceptance bar).
+    {
+        let ok = pr.short_ttft_p95_ms < pr.cold_ttft_p95_ms && pr.prefill_tokens_saved > 0;
+        println!(
+            "{} prefix-shared: hit ttft_p95 {:.1}ms vs cold {:.1}ms, {} prefill tokens saved",
+            if ok { "OK " } else { "WARN" },
+            pr.short_ttft_p95_ms,
+            pr.cold_ttft_p95_ms,
+            pr.prefill_tokens_saved,
+        );
+    }
+    // Sanity: priority preemption should cut interactive tail latency vs
+    // letting the same shorts queue behind the bulk population.
+    {
+        let ok = pre.interactive_ttft_p95_ms <= fifo.interactive_ttft_p95_ms;
+        println!(
+            "{} preemption: interactive ttft_p95 {:.1}ms preempting vs {:.1}ms FIFO",
+            if ok { "OK " } else { "WARN" },
+            pre.interactive_ttft_p95_ms,
+            fifo.interactive_ttft_p95_ms,
+        );
+    }
     println!(
         "(expect: continuous > fixed on tok/s and < on TTFT; chunked ≤ monolithic on the short\n\
          population's ttft_p95 — a long prompt now costs each tick one bounded chunk instead of\n\
-         stalling every in-flight decode for a whole monolithic prefill)"
+         stalling every in-flight decode for a whole monolithic prefill; prefix hits < cold —\n\
+         shared pages skip their prefill; preempting ≤ FIFO on interactive ttft_p95)"
     );
 }

@@ -168,35 +168,91 @@ impl KvLayout {
     }
 }
 
-/// One layer's K (or V) cache storage: `slots` sequence slots of `max_seq`
-/// positions each, laid out head-major — `stripe(slot, head)` is a
-/// contiguous `max_seq × dh` block, which is what lets the attention tiles
-/// run as blocked matmuls over (and, for f32, borrow directly from) cache
-/// memory. Rows are quantized on [`KvSlab::write`] per the slab's
-/// [`KvDtype`] and dequantized block-wise by the attention kernel.
-/// Positions past `max_seq` are addressed through [`KvSlab::write_logical`]
-/// per a [`KvLayout`] (ring wrap or reference shift).
+/// Rows per KV cache page: the allocation granule of the paged cache.
+/// Each (head, frame) pair is a contiguous `PAGE_ROWS × dh` block, so a
+/// page is the unit of sharing (prefix cache), refcounting and
+/// copy-on-write in `model::KvCachePool`.
+pub const PAGE_ROWS: usize = 16;
+
+/// Effective page size for a context of `max_seq` rows — a page never
+/// exceeds the context, so tiny test configs get single-page slots.
+pub fn page_rows_for(max_seq: usize) -> usize {
+    PAGE_ROWS.min(max_seq).max(1)
+}
+
+/// Page-table sentinel: logical page backed by no physical frame yet.
+pub(crate) const UNMAPPED: u32 = u32::MAX;
+
+/// One layer's K (or V) cache storage, at **page** granularity: a pool of
+/// `n_frames` physical page frames of [`page_rows_for`]`(max_seq)` rows
+/// each, addressed per slot through a page table (`pps = ⌈max_seq/page⌉`
+/// entries per slot). Storage is (head, frame, row)-major — for one head,
+/// consecutive frames are contiguous `page × dh` blocks — so a window
+/// whose frames were allocated consecutively reads back as ONE contiguous
+/// stripe, preserving the zero-copy f32 borrow and the half fast path of
+/// the old slot-striped layout; shared / fragmented windows degrade to a
+/// per-page gather into scratch. Rows are quantized on [`KvSlab::write`]
+/// per the slab's [`KvDtype`] and dequantized block-wise by the attention
+/// kernel. Positions past `max_seq` are addressed through
+/// [`KvSlab::write_logical`] per a [`KvLayout`] (ring wrap or reference
+/// shift).
+///
+/// The slab's page table mirrors the authoritative one in
+/// `model::KvCachePool` (which owns refcounts and copy-on-write); the
+/// standalone constructor [`KvSlab::new`] installs an identity mapping
+/// (frame `slot·pps + i` backs logical page `i` of `slot`), reproducing
+/// the old slot-striped behavior exactly.
 pub struct KvSlab {
     dtype: KvDtype,
-    slots: usize,
     max_seq: usize,
     n_heads: usize,
     dh: usize,
+    /// Rows per page frame.
+    page: usize,
+    /// Page-table entries per slot (`⌈max_seq/page⌉`).
+    pps: usize,
+    /// Physical page frames in storage.
+    n_frames: usize,
+    /// Per-slot page tables: entry `slot·pps + i` maps logical page `i`
+    /// to a frame index, or [`UNMAPPED`].
+    tables: Vec<u32>,
     /// F32 storage (empty for quantized dtypes).
     f32s: Vec<f32>,
-    /// f16 / bf16 codes, same head-major layout (empty otherwise).
+    /// f16 / bf16 codes, same layout (empty otherwise).
     halfs: Vec<u16>,
-    /// Int8 codes (as raw bytes) or FP8 E4M3 bytes, same head-major layout.
+    /// Int8 codes (as raw bytes) or FP8 E4M3 bytes, same layout.
     codes: Vec<u8>,
-    /// Int8 AbsMax scales, one per (slot·position, head).
+    /// Int8 AbsMax scales, one per (frame·row, head).
     scales: Vec<f32>,
 }
 
 impl KvSlab {
     /// Zeroed slab for `slots` sequences of up to `max_seq` positions of
-    /// `n_heads × dh` values each.
+    /// `n_heads × dh` values each, with an identity page mapping (one
+    /// private frame run per slot — the unpaged reference behavior).
     pub fn new(dtype: KvDtype, slots: usize, max_seq: usize, n_heads: usize, dh: usize) -> Self {
-        let elems = slots * max_seq * n_heads * dh;
+        let pps = max_seq.div_ceil(page_rows_for(max_seq));
+        let mut slab = Self::paged(dtype, slots, max_seq, n_heads, dh, slots * pps);
+        for (e, t) in slab.tables.iter_mut().enumerate() {
+            *t = e as u32;
+        }
+        slab
+    }
+
+    /// Zeroed slab with `n_frames` physical frames and every page table
+    /// entry unmapped — the pool constructor; `model::KvCachePool` maps
+    /// pages explicitly as sequences allocate, share and copy-on-write.
+    pub fn paged(
+        dtype: KvDtype,
+        slots: usize,
+        max_seq: usize,
+        n_heads: usize,
+        dh: usize,
+        n_frames: usize,
+    ) -> Self {
+        let page = page_rows_for(max_seq);
+        let pps = max_seq.div_ceil(page);
+        let elems = n_frames * page * n_heads * dh;
         let (f32s, halfs, codes, scales) = match dtype {
             KvDtype::F32 => (vec![0.0; elems], Vec::new(), Vec::new(), Vec::new()),
             KvDtype::F16 | KvDtype::Bf16 => (Vec::new(), vec![0u16; elems], Vec::new(), Vec::new()),
@@ -204,11 +260,24 @@ impl KvSlab {
                 Vec::new(),
                 Vec::new(),
                 vec![0u8; elems],
-                vec![0.0; slots * max_seq * n_heads],
+                vec![0.0; n_frames * page * n_heads],
             ),
             KvDtype::Fp8E4M3 => (Vec::new(), Vec::new(), vec![0u8; elems], Vec::new()),
         };
-        KvSlab { dtype, slots, max_seq, n_heads, dh, f32s, halfs, codes, scales }
+        KvSlab {
+            dtype,
+            max_seq,
+            n_heads,
+            dh,
+            page,
+            pps,
+            n_frames,
+            tables: vec![UNMAPPED; slots * pps],
+            f32s,
+            halfs,
+            codes,
+            scales,
+        }
     }
 
     /// Storage dtype.
@@ -227,20 +296,111 @@ impl KvSlab {
         self.f32s.len() * 4 + self.halfs.len() * 2 + self.codes.len() + self.scales.len() * 4
     }
 
+    /// Number of slots addressed by the page tables.
     #[inline]
-    fn stripe_base(&self, slot: usize, head: usize) -> usize {
-        (slot * self.n_heads + head) * self.max_seq * self.dh
+    fn slots(&self) -> usize {
+        self.tables.len() / self.pps
+    }
+
+    /// Rows per page frame.
+    pub fn page_rows(&self) -> usize {
+        self.page
+    }
+
+    /// Page-table entries per slot.
+    pub fn pages_per_slot(&self) -> usize {
+        self.pps
+    }
+
+    /// Map logical page `idx` of `slot` to physical frame `frame`. Called
+    /// by `model::KvCachePool` (the refcount owner) to mirror its
+    /// authoritative table into this slab.
+    pub fn set_page(&mut self, slot: usize, idx: usize, frame: u32) {
+        debug_assert!((frame as usize) < self.n_frames, "kv frame out of range");
+        self.tables[slot * self.pps + idx] = frame;
+    }
+
+    /// Unmap logical page `idx` of `slot`.
+    pub fn clear_page(&mut self, slot: usize, idx: usize) {
+        self.tables[slot * self.pps + idx] = UNMAPPED;
+    }
+
+    /// Copy frame `src`'s rows (all heads, plus int8 scales) into frame
+    /// `dst` — the storage half of a pool copy-on-write split.
+    pub fn copy_frame(&mut self, src: usize, dst: usize) {
+        let n = self.page * self.dh;
+        for h in 0..self.n_heads {
+            let (s, d) = (self.head_base(h) + src * n, self.head_base(h) + dst * n);
+            match self.dtype {
+                KvDtype::F32 => self.f32s.copy_within(s..s + n, d),
+                KvDtype::F16 | KvDtype::Bf16 => self.halfs.copy_within(s..s + n, d),
+                KvDtype::Int8 | KvDtype::Fp8E4M3 => self.codes.copy_within(s..s + n, d),
+            }
+        }
+        if self.dtype == KvDtype::Int8 {
+            let n = self.page * self.n_heads;
+            self.scales.copy_within(src * n..(src + 1) * n, dst * n);
+        }
+    }
+
+    /// Start of head `head`'s frame storage: frames are (head, frame,
+    /// row)-major, so for one head, consecutive frames are contiguous
+    /// `page × dh` blocks.
+    #[inline]
+    fn head_base(&self, head: usize) -> usize {
+        head * self.n_frames * self.page * self.dh
+    }
+
+    /// Storage row backing physical row `prow` of `slot`, through the page
+    /// table. The element offset for head `h` is
+    /// `head_base(h) + srow·dh`; the int8 scale index is
+    /// `srow·n_heads + h`.
+    #[inline]
+    fn srow(&self, slot: usize, prow: usize) -> usize {
+        let f = self.tables[slot * self.pps + prow / self.page];
+        debug_assert!(f != UNMAPPED, "kv access to unmapped page (slot {slot}, row {prow})");
+        (f as usize) * self.page + prow % self.page
+    }
+
+    /// Storage row of the window's first row if the whole `len`-row window
+    /// starting at physical row `start` is one contiguous storage run
+    /// (frames backing it were allocated consecutively), else `None`.
+    /// Wrapped windows always decline — the second arc is logically older
+    /// than the first, so it must be re-ordered through the gather path.
+    fn run_extent(&self, slot: usize, start: usize, len: usize) -> Option<usize> {
+        if start + len > self.max_seq {
+            return None;
+        }
+        let first = self.srow(slot, start);
+        let head = (self.page - start % self.page).min(len);
+        let mut expect = first + head;
+        let mut done = head;
+        while done < len {
+            let r = self.srow(slot, start + done);
+            if r != expect {
+                return None;
+            }
+            let n = (len - done).min(self.page);
+            expect = r + n;
+            done += n;
+        }
+        Some(first)
     }
 
     /// Encode one position's row (`n_heads·dh` f32 values, head-major like
     /// the model's hidden dim) into the slab at physical row (`slot`, `pos`).
+    /// The page backing `pos` must be mapped (identity mapping for
+    /// standalone slabs; `KvCachePool::prepare_span` for pooled ones).
     pub fn write(&mut self, slot: usize, pos: usize, row: &[f32]) {
         assert_eq!(row.len(), self.n_heads * self.dh, "kv row width mismatch");
-        assert!(slot < self.slots && pos < self.max_seq, "kv write out of range");
+        assert!(slot < self.slots() && pos < self.max_seq, "kv write out of range");
+        let f = self.tables[slot * self.pps + pos / self.page];
+        assert!(f != UNMAPPED, "kv write to unmapped page (slot {slot}, row {pos})");
+        let r = (f as usize) * self.page + pos % self.page;
         let dh = self.dh;
         for h in 0..self.n_heads {
             let seg = &row[h * dh..(h + 1) * dh];
-            let base = self.stripe_base(slot, h) + pos * dh;
+            let base = self.head_base(h) + r * dh;
             match self.dtype {
                 KvDtype::F32 => self.f32s[base..base + dh].copy_from_slice(seg),
                 KvDtype::F16 | KvDtype::Bf16 => {
@@ -249,7 +409,7 @@ impl KvSlab {
                 }
                 KvDtype::Int8 => {
                     let alpha = seg.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-                    self.scales[(slot * self.max_seq + pos) * self.n_heads + h] = alpha;
+                    self.scales[r * self.n_heads + h] = alpha;
                     for (dst, &x) in self.codes[base..base + dh].iter_mut().zip(seg.iter()) {
                         *dst = quant_code(x, alpha, 8) as u8;
                     }
@@ -285,33 +445,46 @@ impl KvSlab {
 
     /// Drop physical row 0 of `slot` by moving rows `1..max_seq` (codes or
     /// f32 values, and int8 scales) down one row — the [`KvLayout::Shift`]
-    /// eviction. Scales move with their rows, preserving the (row, head)
-    /// pairing.
+    /// eviction. Rows move *through the page table* one at a time (source
+    /// and destination may live in different frames), O(window) — the slow
+    /// reference layout only. Scales move with their rows, preserving the
+    /// (row, head) pairing.
     fn evict_front(&mut self, slot: usize) {
-        let (s, dh) = (self.max_seq, self.dh);
+        for prow in 1..self.max_seq {
+            let (s, d) = (self.srow(slot, prow), self.srow(slot, prow - 1));
+            self.copy_row(s, d);
+        }
+    }
+
+    /// Copy one storage row (all heads + int8 scales) to another.
+    fn copy_row(&mut self, src: usize, dst: usize) {
+        if src == dst {
+            return;
+        }
+        let dh = self.dh;
         for h in 0..self.n_heads {
-            let base = self.stripe_base(slot, h);
+            let (s, d) = (self.head_base(h) + src * dh, self.head_base(h) + dst * dh);
             match self.dtype {
-                KvDtype::F32 => self.f32s.copy_within(base + dh..base + s * dh, base),
-                KvDtype::F16 | KvDtype::Bf16 => {
-                    self.halfs.copy_within(base + dh..base + s * dh, base)
-                }
-                KvDtype::Int8 | KvDtype::Fp8E4M3 => {
-                    self.codes.copy_within(base + dh..base + s * dh, base)
-                }
+                KvDtype::F32 => self.f32s.copy_within(s..s + dh, d),
+                KvDtype::F16 | KvDtype::Bf16 => self.halfs.copy_within(s..s + dh, d),
+                KvDtype::Int8 | KvDtype::Fp8E4M3 => self.codes.copy_within(s..s + dh, d),
             }
         }
         if self.dtype == KvDtype::Int8 {
-            let sb = slot * s * self.n_heads;
-            self.scales.copy_within(sb + self.n_heads..sb + s * self.n_heads, sb);
+            let n = self.n_heads;
+            self.scales.copy_within(src * n..src * n + n, dst * n);
         }
     }
 
     /// The `len`-row window of the (`slot`, `head`) stripe beginning at
     /// physical row `start`, in logical order, as a contiguous `len × dh`
     /// f32 tile. A window that reaches `max_seq` wraps to row 0 (the ring's
-    /// second arc). Unwrapped f32 windows are zero-copy borrows; wrapped or
-    /// quantized windows are copied/dequantized into `scratch` arc by arc.
+    /// second arc). Unwrapped f32 windows whose frames form one contiguous
+    /// storage run ([`KvSlab::run_extent`] — always true for identity
+    /// mappings, and for pooled slots whose frames were allocated
+    /// consecutively) are zero-copy borrows; wrapped, quantized, or
+    /// fragmented windows are copied/dequantized into `scratch` page arc by
+    /// page arc.
     pub(crate) fn tile<'a>(
         &'a self,
         slot: usize,
@@ -321,23 +494,29 @@ impl KvSlab {
         scratch: &'a mut Vec<f32>,
     ) -> &'a [f32] {
         debug_assert!(len <= self.max_seq && start < self.max_seq);
-        let dh = self.dh;
-        if self.dtype == KvDtype::F32 && start + len <= self.max_seq {
-            let base = self.stripe_base(slot, head) + start * dh;
-            return &self.f32s[base..base + len * dh];
+        if self.dtype == KvDtype::F32 {
+            if let Some(r0) = self.run_extent(slot, start, len) {
+                let base = self.head_base(head) + r0 * self.dh;
+                return &self.f32s[base..base + len * self.dh];
+            }
         }
         scratch.clear();
-        let first = len.min(self.max_seq - start);
-        self.fill_rows(slot, head, start, first, scratch);
-        self.fill_rows(slot, head, 0, len - first, scratch);
+        let mut done = 0;
+        while done < len {
+            let prow = (start + done) % self.max_seq;
+            let n = (len - done).min(self.page - prow % self.page).min(self.max_seq - prow);
+            self.fill_rows(head, self.srow(slot, prow), n, scratch);
+            done += n;
+        }
         &scratch[..]
     }
 
-    /// Zero-copy borrow of an *unwrapped* window of a half-precision
-    /// stripe, as raw 16-bit codes — the fast path [`run_item`] feeds
-    /// straight into the half-operand GEMMs, skipping f32 materialization.
-    /// Returns `None` for non-half dtypes and for wrapped windows (those
-    /// fall back to the two-arc [`KvSlab::tile`] dequant path).
+    /// Zero-copy borrow of an *unwrapped*, storage-contiguous window of a
+    /// half-precision stripe, as raw 16-bit codes — the fast path
+    /// [`run_item`] feeds straight into the half-operand GEMMs, skipping
+    /// f32 materialization. Returns `None` for non-half dtypes, wrapped
+    /// windows, and windows whose frames are not one contiguous run (those
+    /// fall back to the per-page [`KvSlab::tile`] dequant path).
     pub(crate) fn tile_half(
         &self,
         slot: usize,
@@ -345,21 +524,23 @@ impl KvSlab {
         start: usize,
         len: usize,
     ) -> Option<&[u16]> {
-        if self.half_kind().is_none() || start + len > self.max_seq {
+        if self.half_kind().is_none() {
             return None;
         }
-        let base = self.stripe_base(slot, head) + start * self.dh;
+        let r0 = self.run_extent(slot, start, len)?;
+        let base = self.head_base(head) + r0 * self.dh;
         Some(&self.halfs[base..base + len * self.dh])
     }
 
-    /// Append `n` rows starting at physical row `pos0` of the (`slot`,
-    /// `head`) stripe to `out`, dequantized to f32.
-    fn fill_rows(&self, slot: usize, head: usize, pos0: usize, n: usize, out: &mut Vec<f32>) {
+    /// Append `n` rows starting at *storage* row `r0` (contiguous within
+    /// one frame by construction) of `head`'s storage to `out`, dequantized
+    /// to f32.
+    fn fill_rows(&self, head: usize, r0: usize, n: usize, out: &mut Vec<f32>) {
         if n == 0 {
             return;
         }
         let dh = self.dh;
-        let base = self.stripe_base(slot, head) + pos0 * dh;
+        let base = self.head_base(head) + r0 * dh;
         match self.dtype {
             KvDtype::F32 => out.extend_from_slice(&self.f32s[base..base + n * dh]),
             KvDtype::F16 | KvDtype::Bf16 => {
@@ -368,7 +549,7 @@ impl KvSlab {
             }
             KvDtype::Int8 => {
                 for t in 0..n {
-                    let alpha = self.scales[(slot * self.max_seq + pos0 + t) * self.n_heads + head];
+                    let alpha = self.scales[(r0 + t) * self.n_heads + head];
                     let dq = alpha / 127.0;
                     let src = &self.codes[base + t * dh..base + (t + 1) * dh];
                     out.extend(src.iter().map(|&c| (c as i8) as f32 * dq));

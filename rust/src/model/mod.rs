@@ -9,13 +9,13 @@ pub mod size;
 pub mod transformer;
 pub mod weights;
 
-pub use attention::{AttnSpan, KvDtype, KvLayout, KvSlab, KvSource};
+pub use attention::{page_rows_for, AttnSpan, KvDtype, KvLayout, KvSlab, KvSource, PAGE_ROWS};
 pub use compiled::CompressedWeights;
 pub use config::{by_name, family, quick_family, ModelConfig};
 pub use sample::{SampleParams, Sampler};
 pub use transformer::{
-    forward, forward_cached, forward_slots, greedy_pick, nll, ActivationTap, Batch, KvCache,
-    KvCachePool, Linears, Overrides,
+    forward, forward_cached, forward_slots, greedy_pick, nll, prefix_page_hashes, ActivationTap,
+    Batch, KvCache, KvCachePool, KvPageStats, Linears, Overrides,
 };
 pub use weights::{init, param_order, Weights};
 

@@ -41,7 +41,9 @@
 
 use std::collections::HashMap;
 
-use super::attention::{attend, AttnSpan, KvDtype, KvLayout, KvSlab, KvSource};
+use super::attention::{
+    attend, page_rows_for, AttnSpan, KvDtype, KvLayout, KvSlab, KvSource, UNMAPPED,
+};
 use super::compiled::CompressedWeights;
 use super::config::ModelConfig;
 use super::weights::Weights;
@@ -134,16 +136,44 @@ impl Linears<'_> {
     }
 }
 
-/// Slot-based per-layer K/V storage for continuous batching.
+/// **Paged** per-layer K/V storage for continuous batching — the vLLM
+/// PagedAttention design.
 ///
-/// The pool owns one [`KvSlab`] pair (K and V) per layer: `n_slots`
-/// head-major sequence stripes of `max_seq` positions each, stored in the
-/// pool's [`KvDtype`] (f32, int8, or FP8-E4M3 — quantized dtypes cut cache
-/// bytes ~4×). Each slot has its own cached length, so sequences of
-/// different lengths coexist in one pool: a scheduler allocates a slot per
-/// admitted request ([`KvCachePool::alloc`]), [`forward_slots`] appends new
-/// K/V rows and attends over each slot's own prefix, and retiring a
-/// sequence returns its slot to the free-list ([`KvCachePool::free`]) for
+/// The pool owns one [`KvSlab`] pair (K and V) per layer, each a pool of
+/// ref-counted physical **page frames** of [`page_rows_for`]`(max_seq)`
+/// rows, stored in the pool's [`KvDtype`] (f32, f16/bf16, int8, or
+/// FP8-E4M3 — quantized dtypes cut cache bytes 2–4×). A sequence slot is
+/// a **page table**: logical position `L` resolves to physical row
+/// `L % max_seq`, whose page `(L % max_seq) / page` maps to a frame. The
+/// pool is the single refcount owner (frame mappings are mirrored into
+/// every slab so the attention kernel reads through them without pool
+/// access):
+///
+/// * **Allocation** is lazy and page-granular: [`KvCachePool::prepare_span`]
+///   maps frames just before [`forward_slots`] writes a span. The frame
+///   free-list is LIFO, so a sequence's frames are normally consecutive
+///   and its windows read back as single contiguous runs (preserving the
+///   zero-copy f32 / half-GEMM fast paths).
+/// * **Sharing + copy-on-write:** frames may back pages of several slots
+///   at once (`refs > 1`). Writing a shared page first splits it
+///   ([`KvSlab::copy_frame`] into a fresh frame), so
+///   [`KvCachePool::fork`] — a page-table copy plus refcount bumps — is
+///   O(pages), and a fork's writes can never alter its parent's rows.
+/// * **Prefix caching:** full prompt-prefix pages are content-addressed by
+///   a chained token hash ([`prefix_page_hashes`]). When enabled
+///   ([`KvCachePool::set_prefix_cache`] — serving routes only; off by
+///   default), a new request whose windowed prompt prefix is already
+///   resident maps the cached frames instead of re-prefilling them
+///   ([`KvCachePool::lookup_prefix`]), so a cache hit skips that prefill
+///   compute entirely. Retired frames stay resident (refs 0, still on the
+///   free-list) until reallocation evicts their hash entry — lazy
+///   eviction, so a shared system prompt survives request churn.
+///
+/// Each slot has its own cached length, so sequences of different lengths
+/// coexist in one pool: a scheduler allocates a slot per admitted request
+/// ([`KvCachePool::alloc`]), [`forward_slots`] appends new K/V rows and
+/// attends over each slot's own prefix, and retiring a sequence unmaps its
+/// pages and returns its slot to the free-list ([`KvCachePool::free`]) for
 /// the next request — no lockstep batches, no left-padding.
 ///
 /// ## Ring slots: logical vs physical positions
@@ -173,12 +203,62 @@ pub struct KvCachePool {
     dtype: KvDtype,
     layout: KvLayout,
     /// Logical positions appended per slot (may exceed `max_seq`; only the
-    /// trailing `min(len, max_seq)` are retained in the stripes).
+    /// trailing `min(len, max_seq)` are retained in the mapped pages).
     lens: Vec<usize>,
     /// Slot occupancy (true between `alloc` and `free`).
     live: Vec<bool>,
     /// LIFO free-list, so retired slots are reused first.
     free_list: Vec<usize>,
+    /// Rows per page frame (`page_rows_for(max_seq)`).
+    page: usize,
+    /// Page-table entries per slot (`⌈max_seq/page⌉`).
+    pps: usize,
+    /// Physical frames per layer slab (`n_slots · pps` — every slot can
+    /// always map a private frame for each of its pages, so frame
+    /// allocation can never fail while slot allocation succeeds; sharing
+    /// only adds slack).
+    n_frames: usize,
+    /// Authoritative page tables, slot-major (`slot·pps + i`), mirrored
+    /// into every slab. [`UNMAPPED`] = no frame.
+    tables: Vec<u32>,
+    /// Mappings per frame (table entries across all slots pointing at it).
+    refs: Vec<u32>,
+    /// LIFO frame free-list — frames with `refs == 0`. Retired
+    /// prefix-cache frames stay here *and* hash-resident until reallocated
+    /// (lazy eviction).
+    free_frames: Vec<u32>,
+    /// Content hash a frame is registered under in `hash_index`, if any.
+    frame_hash: Vec<Option<u64>>,
+    /// Prefix-cache index: chained page hash → resident frame.
+    hash_index: HashMap<u64, u32>,
+    /// Prefix lookup/registration gate — off by default (private pools,
+    /// unit tests); serving schedulers turn it on per route.
+    prefix_enabled: bool,
+    /// Prefix-cache counters (cumulative; exported via `page_stats`).
+    prefix_hits: u64,
+    prefix_misses: u64,
+    prefix_evictions: u64,
+    prefix_saved_tokens: u64,
+}
+
+/// Point-in-time page-pool occupancy + prefix-cache counters, for the
+/// scheduler's metrics tick.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvPageStats {
+    /// Physical frames per layer slab.
+    pub pages_total: usize,
+    /// Frames currently mapped by at least one slot.
+    pub pages_used: usize,
+    /// Frames mapped by more than one slot (prefix / fork sharing).
+    pub pages_shared: usize,
+    /// Admissions that mapped ≥ 1 resident prefix page.
+    pub prefix_hits: u64,
+    /// Admissions that found no resident prefix page.
+    pub prefix_misses: u64,
+    /// Hash entries dropped (reallocation or divergent write).
+    pub prefix_evictions: u64,
+    /// Prompt tokens whose prefill compute was skipped via prefix hits.
+    pub prefix_saved_tokens: u64,
 }
 
 impl KvCachePool {
@@ -196,9 +276,14 @@ impl KvCachePool {
     /// the slow reference; serving uses the default ring).
     pub fn with_layout(cfg: &ModelConfig, slots: usize, dtype: KvDtype, layout: KvLayout) -> Self {
         assert!(slots > 0, "KvCachePool needs at least one slot");
+        let page = page_rows_for(cfg.max_seq);
+        let pps = cfg.max_seq.div_ceil(page);
+        let n_frames = slots * pps;
         let mk = || -> Vec<KvSlab> {
             (0..cfg.n_layers)
-                .map(|_| KvSlab::new(dtype, slots, cfg.max_seq, cfg.n_heads, cfg.d_head()))
+                .map(|_| {
+                    KvSlab::paged(dtype, slots, cfg.max_seq, cfg.n_heads, cfg.d_head(), n_frames)
+                })
                 .collect()
         };
         KvCachePool {
@@ -211,6 +296,19 @@ impl KvCachePool {
             lens: vec![0; slots],
             live: vec![false; slots],
             free_list: (0..slots).rev().collect(),
+            page,
+            pps,
+            n_frames,
+            tables: vec![UNMAPPED; slots * pps],
+            refs: vec![0; n_frames],
+            free_frames: (0..n_frames as u32).rev().collect(),
+            frame_hash: vec![None; n_frames],
+            hash_index: HashMap::new(),
+            prefix_enabled: false,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_evictions: 0,
+            prefix_saved_tokens: 0,
         }
     }
 
@@ -251,7 +349,8 @@ impl KvCachePool {
         self.max_seq
     }
 
-    /// Claim a free slot (empty, length 0), or `None` if the pool is full.
+    /// Claim a free slot (empty, length 0, no pages mapped), or `None` if
+    /// the pool is full.
     pub fn alloc(&mut self) -> Option<usize> {
         let slot = self.free_list.pop()?;
         self.lens[slot] = 0;
@@ -259,12 +358,116 @@ impl KvCachePool {
         Some(slot)
     }
 
-    /// Return a slot to the free-list. Its rows are overwritten by the next
-    /// occupant's appends.
+    /// Return a slot to the free-list, unmapping (and unreferencing) every
+    /// page it held. Frames dropping to zero refs go back on the frame
+    /// free-list but keep their prefix-hash registration until reallocated,
+    /// so a later identical prompt can still revive them.
     pub fn free(&mut self, slot: usize) {
         assert!(self.live[slot], "free of non-live slot {slot}");
+        self.unmap_slot(slot);
         self.live[slot] = false;
         self.free_list.push(slot);
+    }
+
+    /// Drop every page mapping of `slot` (refcounts decremented; slab
+    /// tables cleared).
+    fn unmap_slot(&mut self, slot: usize) {
+        for idx in 0..self.pps {
+            self.unmap_page(slot, idx);
+        }
+    }
+
+    /// Unmap logical page `idx` of `slot`, if mapped.
+    fn unmap_page(&mut self, slot: usize, idx: usize) {
+        let e = slot * self.pps + idx;
+        let f = self.tables[e];
+        if f == UNMAPPED {
+            return;
+        }
+        self.tables[e] = UNMAPPED;
+        for slab in self.k.iter_mut().chain(self.v.iter_mut()) {
+            slab.clear_page(slot, idx);
+        }
+        self.refs[f as usize] -= 1;
+        if self.refs[f as usize] == 0 {
+            self.free_frames.push(f);
+        }
+    }
+
+    /// Map logical page `idx` of `slot` to `frame` in the authoritative
+    /// table and every layer slab.
+    fn map_page(&mut self, slot: usize, idx: usize, frame: u32) {
+        self.tables[slot * self.pps + idx] = frame;
+        for slab in self.k.iter_mut().chain(self.v.iter_mut()) {
+            slab.set_page(slot, idx, frame);
+        }
+    }
+
+    /// Pop a free frame. Reallocating a hash-resident frame evicts its
+    /// prefix-cache entry (lazy eviction). Never fails: the pool holds
+    /// `pps` frames per slot, so live slots can always map privately —
+    /// sharing only adds slack.
+    fn alloc_frame(&mut self) -> u32 {
+        let f = self.free_frames.pop().expect("kv page pool exhausted");
+        debug_assert_eq!(self.refs[f as usize], 0);
+        self.unregister_frame(f);
+        f
+    }
+
+    /// Drop frame `f`'s prefix-hash registration, if any (reallocation, or
+    /// a refs==1 write about to diverge its contents).
+    fn unregister_frame(&mut self, f: u32) {
+        if let Some(h) = self.frame_hash[f as usize].take() {
+            if self.hash_index.get(&h) == Some(&f) {
+                self.hash_index.remove(&h);
+            }
+            self.prefix_evictions += 1;
+        }
+    }
+
+    /// Make logical page `idx` of `slot` privately writable: map a fresh
+    /// frame if unmapped, split via copy-on-write if shared, and
+    /// unregister its hash if its contents are about to diverge.
+    fn prepare_page(&mut self, slot: usize, idx: usize) {
+        let f = self.tables[slot * self.pps + idx];
+        if f == UNMAPPED {
+            let nf = self.alloc_frame();
+            self.refs[nf as usize] = 1;
+            self.map_page(slot, idx, nf);
+        } else if self.refs[f as usize] > 1 {
+            let nf = self.alloc_frame();
+            for slab in self.k.iter_mut().chain(self.v.iter_mut()) {
+                slab.copy_frame(f as usize, nf as usize);
+            }
+            self.refs[f as usize] -= 1;
+            self.refs[nf as usize] = 1;
+            self.map_page(slot, idx, nf);
+        } else if self.frame_hash[f as usize].is_some() {
+            self.unregister_frame(f);
+        }
+    }
+
+    /// Map / CoW-split every page a `span`-token append to `slot` will
+    /// write, *before* [`forward_slots`] starts writing — the allocation
+    /// edge of the paged pool. Shift-layout appends past capacity memmove
+    /// every retained row, so they make all mapped pages writable first.
+    pub(crate) fn prepare_span(&mut self, slot: usize, span: usize) {
+        let p0 = self.lens[slot];
+        if self.layout == KvLayout::Shift && p0 + span > self.max_seq {
+            for idx in 0..self.pps {
+                if self.tables[slot * self.pps + idx] != UNMAPPED {
+                    self.prepare_page(slot, idx);
+                }
+            }
+        }
+        let mut prev = usize::MAX;
+        for s in 0..span {
+            let idx = ((p0 + s) % self.max_seq) / self.page;
+            if idx != prev {
+                self.prepare_page(slot, idx);
+                prev = idx;
+            }
+        }
     }
 
     /// Logical positions appended to `slot` so far (keeps growing past
@@ -303,8 +506,10 @@ impl KvCachePool {
 
     /// Forget `slot`'s cached positions without freeing it (used by the
     /// legacy re-prefill baseline in `benches/decode.rs`; serving never
-    /// resets — overflow wraps the ring instead).
+    /// resets — overflow wraps the ring instead). Unmaps the slot's pages;
+    /// the next prefill maps fresh frames.
     pub fn reset_slot(&mut self, slot: usize) {
+        self.unmap_slot(slot);
         self.lens[slot] = 0;
     }
 
@@ -339,7 +544,35 @@ impl KvCachePool {
             self.lens[slot],
             self.max_seq
         );
+        // Pages wholly past the new length are dropped (unmapped and, if
+        // shared, simply unreferenced — a CoW sibling keeps the frame).
+        // The boundary page is kept; re-appends CoW-split it if shared.
+        if new_len < self.lens[slot] {
+            for idx in new_len.div_ceil(self.page)..self.pps {
+                self.unmap_page(slot, idx);
+            }
+        }
         self.lens[slot] = new_len;
+    }
+
+    /// Fork `src` into a fresh slot sharing every one of its pages — a
+    /// page-table copy plus refcount bumps, no row copies. Writes on
+    /// either side copy-on-write split the affected page, so neither
+    /// sequence can ever alter the other's rows. Returns `None` if no
+    /// slot is free.
+    pub fn fork(&mut self, src: usize) -> Option<usize> {
+        assert!(self.live[src], "fork of non-live slot {src}");
+        let dst = self.free_list.pop()?;
+        self.live[dst] = true;
+        self.lens[dst] = self.lens[src];
+        for idx in 0..self.pps {
+            let f = self.tables[src * self.pps + idx];
+            if f != UNMAPPED {
+                self.refs[f as usize] += 1;
+                self.map_page(dst, idx, f);
+            }
+        }
+        Some(dst)
     }
 
     /// Attention geometry for appending a `span`-token entry to `slot`:
@@ -362,6 +595,144 @@ impl KvCachePool {
         self.k[blk].write_logical(slot, pos, krow, self.layout);
         self.v[blk].write_logical(slot, pos, vrow, self.layout);
     }
+
+    /// Rows per page frame.
+    pub fn page_rows(&self) -> usize {
+        self.page
+    }
+
+    /// Page-table entries per slot.
+    pub fn pages_per_slot(&self) -> usize {
+        self.pps
+    }
+
+    /// Enable / disable the prefix cache (off by default; serving
+    /// schedulers turn it on for non-speculative routes).
+    pub fn set_prefix_cache(&mut self, on: bool) {
+        self.prefix_enabled = on;
+    }
+
+    /// Whether prefix lookup / registration is active.
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix_enabled
+    }
+
+    /// Map every *leading* page of `hashes` that is already resident into
+    /// freshly-allocated `slot` (which must be empty) and advance its
+    /// length past them — the prefill compute for those tokens is skipped
+    /// entirely. `hashes` come from [`prefix_page_hashes`] over the
+    /// windowed prompt; the caller caps the slice so at least one prompt
+    /// token remains to feed (the completing forward needs a query row).
+    /// Returns the number of prompt tokens satisfied from cache.
+    pub fn lookup_prefix(&mut self, slot: usize, hashes: &[u64]) -> usize {
+        if !self.prefix_enabled {
+            return 0;
+        }
+        assert!(self.live[slot] && self.lens[slot] == 0, "prefix lookup needs a fresh slot");
+        let mut matched = 0;
+        for (idx, h) in hashes.iter().enumerate() {
+            let Some(&f) = self.hash_index.get(h) else { break };
+            if self.refs[f as usize] == 0 {
+                // Revive a retired frame off the free-list.
+                let at = self.free_frames.iter().rposition(|&x| x == f).unwrap();
+                self.free_frames.swap_remove(at);
+            }
+            self.refs[f as usize] += 1;
+            self.map_page(slot, idx, f);
+            matched += 1;
+        }
+        if matched > 0 {
+            self.prefix_hits += 1;
+            self.prefix_saved_tokens += (matched * self.page) as u64;
+        } else {
+            self.prefix_misses += 1;
+        }
+        self.lens[slot] = matched * self.page;
+        self.lens[slot]
+    }
+
+    /// Register `slot`'s leading pages (full windowed-prompt pages only —
+    /// the caller hashes exactly those) in the prefix-cache index, called
+    /// once when a prefill completes its prompt. Pages already registered,
+    /// or whose hash another frame holds, are skipped.
+    pub fn register_prefix(&mut self, slot: usize, hashes: &[u64]) {
+        if !self.prefix_enabled {
+            return;
+        }
+        for (idx, &h) in hashes.iter().enumerate() {
+            let f = self.tables[slot * self.pps + idx];
+            if f == UNMAPPED {
+                break;
+            }
+            if self.frame_hash[f as usize].is_some() || self.hash_index.contains_key(&h) {
+                continue;
+            }
+            self.frame_hash[f as usize] = Some(h);
+            self.hash_index.insert(h, f);
+        }
+    }
+
+    /// Occupancy + prefix-cache counters for the metrics exporters.
+    pub fn page_stats(&self) -> KvPageStats {
+        KvPageStats {
+            pages_total: self.n_frames,
+            pages_used: self.refs.iter().filter(|&&r| r > 0).count(),
+            pages_shared: self.refs.iter().filter(|&&r| r > 1).count(),
+            prefix_hits: self.prefix_hits,
+            prefix_misses: self.prefix_misses,
+            prefix_evictions: self.prefix_evictions,
+            prefix_saved_tokens: self.prefix_saved_tokens,
+        }
+    }
+
+    /// Leak check: every frame's refcount equals the number of live-slot
+    /// table entries mapping it, and the frame free-list holds exactly the
+    /// zero-ref frames. Cheap enough for a per-shutdown `debug_assert!`.
+    pub fn refs_balanced(&self) -> bool {
+        let mut counts = vec![0u32; self.n_frames];
+        for (e, &f) in self.tables.iter().enumerate() {
+            if f != UNMAPPED {
+                if !self.live[e / self.pps] {
+                    return false;
+                }
+                counts[f as usize] += 1;
+            }
+        }
+        counts == self.refs
+            && self.free_frames.len() == self.refs.iter().filter(|&&r| r == 0).count()
+    }
+
+    /// Assert the pool is fully quiescent — no live slots, every frame
+    /// refcount back at zero, every slot and frame on its free-list. The
+    /// leak check the property suites run after all sequences retire.
+    pub fn assert_quiescent(&self) {
+        assert!(!self.live.iter().any(|&l| l), "quiescent pool has live slots");
+        assert!(self.refs.iter().all(|&r| r == 0), "quiescent pool has referenced frames");
+        assert_eq!(self.free_frames.len(), self.n_frames, "frame leak: free-list short");
+        assert_eq!(self.free_list.len(), self.n_slots, "slot leak: free-list short");
+        assert!(self.refs_balanced(), "refcounts out of balance");
+    }
+}
+
+/// Chained content hash of each successive *full* `page`-row block of
+/// `tokens` (FNV-1a over the token bytes, carried across pages) — the
+/// prefix-cache key. Page `i`'s hash commits to every token in pages
+/// `0..=i`, so equal hashes ⇒ equal windowed token prefixes ⇒ equal K/V
+/// rows (rows depend only on window-relative positions and the tokens at
+/// or before them, regardless of the chunk schedule that fed them).
+pub fn prefix_page_hashes(tokens: &[u32], page: usize) -> Vec<u64> {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut out = Vec::with_capacity(tokens.len() / page);
+    for (i, &t) in tokens.iter().enumerate() {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        if (i + 1) % page == 0 {
+            out.push(h);
+        }
+    }
+    out
 }
 
 /// Fixed-batch KV cache: `batch` pool slots advanced in lockstep.
@@ -496,6 +867,10 @@ pub fn forward_slots(
             toks.len(),
             cfg.max_seq
         );
+        // Map (or CoW-split) the pages this span will write before any
+        // layer touches them — geometry and frame mappings are then fixed
+        // for the whole pass.
+        pool.prepare_span(*slot, toks.len());
         bases.push(n);
         n += toks.len();
     }
@@ -1421,5 +1796,97 @@ mod tests {
         let b = forward_cached(&cfg, &w, &toks, &mut c2, &Linears::Dense);
         assert_eq!(a, b);
         assert_eq!(c2.pool().dtype(), KvDtype::F32);
+    }
+
+    /// Forked slots share pages until a write splits them: while the fork
+    /// decodes a divergent continuation over the shared prefix, the
+    /// parent's subsequent logits stay bit-identical to a never-forked
+    /// control pool.
+    #[test]
+    fn fork_cow_isolation_bitwise() {
+        let cfg = ring_cfg();
+        let mut rng = Pcg32::seeded(41);
+        let w = init(&cfg, &mut rng);
+        for dtype in [KvDtype::F32, KvDtype::Int8] {
+            let mut pool = KvCachePool::with_dtype(&cfg, 2, dtype);
+            let mut ctrl = KvCachePool::with_dtype(&cfg, 1, dtype);
+            let parent = pool.alloc().unwrap();
+            let c = ctrl.alloc().unwrap();
+            let prompt: Vec<u32> = (0..4).map(|_| rng.below(cfg.vocab as u32)).collect();
+            forward_slots(&cfg, &w, &[(parent, &prompt[..])], &mut pool, &Linears::Dense);
+            forward_slots(&cfg, &w, &[(c, &prompt[..])], &mut ctrl, &Linears::Dense);
+            let child = pool.fork(parent).unwrap();
+            assert!(pool.page_stats().pages_shared > 0, "fork must share pages");
+            forward_slots(&cfg, &w, &[(child, &[7u32][..])], &mut pool, &Linears::Dense);
+            forward_slots(&cfg, &w, &[(child, &[9u32][..])], &mut pool, &Linears::Dense);
+            let a = forward_slots(&cfg, &w, &[(parent, &[3u32][..])], &mut pool, &Linears::Dense);
+            let b = forward_slots(&cfg, &w, &[(c, &[3u32][..])], &mut ctrl, &Linears::Dense);
+            assert_eq!(a, b, "{}: fork writes leaked into parent pages", dtype.name());
+            pool.free(child);
+            pool.free(parent);
+            pool.assert_quiescent();
+        }
+    }
+
+    /// Prefix round-trip: a retired sequence's full prompt pages are
+    /// revived off the free list by an identical later prompt, which
+    /// skips that prefill compute yet reproduces bit-equal logits; a
+    /// different prompt misses.
+    #[test]
+    fn prefix_pages_revive_and_match_cold_logits() {
+        let (cfg, w, _) = setup(); // sim-125m: max_seq 64, 16-row pages
+        let mut rng = Pcg32::seeded(43);
+        let prompt: Vec<u32> = (0..20).map(|_| rng.below(cfg.vocab as u32)).collect();
+        let mut pool = KvCachePool::new(&cfg, 2);
+        pool.set_prefix_cache(true);
+        let page = pool.page_rows();
+        let hashes = prefix_page_hashes(&prompt, page);
+        assert_eq!(hashes.len(), 1, "20-token prompt fills one 16-row page");
+        let a = pool.alloc().unwrap();
+        let cold = forward_slots(&cfg, &w, &[(a, &prompt[..])], &mut pool, &Linears::Dense);
+        pool.register_prefix(a, &hashes);
+        pool.free(a);
+        let b = pool.alloc().unwrap();
+        assert_eq!(pool.lookup_prefix(b, &hashes), page);
+        let warm = forward_slots(&cfg, &w, &[(b, &prompt[page..])], &mut pool, &Linears::Dense);
+        for (i, s) in (page..prompt.len()).enumerate() {
+            assert_eq!(warm.row(i), cold.row(s), "row {s} not bit-equal over shared prefix");
+        }
+        let stats = pool.page_stats();
+        assert_eq!(stats.prefix_hits, 1);
+        assert_eq!(stats.prefix_saved_tokens, page as u64);
+        pool.free(b);
+        let other: Vec<u32> = prompt.iter().map(|&t| (t + 1) % cfg.vocab as u32).collect();
+        let c = pool.alloc().unwrap();
+        assert_eq!(pool.lookup_prefix(c, &prefix_page_hashes(&other, page)), 0);
+        assert_eq!(pool.page_stats().prefix_misses, 1);
+        pool.free(c);
+        // Hash-resident frames sit on the free list at refcount zero.
+        pool.assert_quiescent();
+    }
+
+    /// Alloc / fork / free churn in shuffled order always returns the
+    /// pool to a fully quiescent state — the leak check behind the
+    /// scheduler's shutdown assert.
+    #[test]
+    fn pool_quiescent_after_fork_churn() {
+        let cfg = ring_cfg();
+        let mut rng = Pcg32::seeded(44);
+        let w = init(&cfg, &mut rng);
+        let mut pool = KvCachePool::new(&cfg, 4);
+        for round in 0..8u32 {
+            let a = pool.alloc().unwrap();
+            let toks: Vec<u32> =
+                (0..1 + rng.below_usize(5)).map(|_| rng.below(cfg.vocab as u32)).collect();
+            forward_slots(&cfg, &w, &[(a, &toks[..])], &mut pool, &Linears::Dense);
+            let b = pool.fork(a).unwrap();
+            let c = pool.fork(b).unwrap();
+            forward_slots(&cfg, &w, &[(c, &[round][..])], &mut pool, &Linears::Dense);
+            assert!(pool.refs_balanced(), "round {round}");
+            for s in [a, c, b] {
+                pool.free(s);
+            }
+        }
+        pool.assert_quiescent();
     }
 }

@@ -164,6 +164,8 @@ fn dispatch(
                         ("spec", Json::Bool(info.draft_k.is_some())),
                         ("sessions", n(info.max_sessions as f64)),
                         ("streaming", Json::Bool(info.streaming)),
+                        ("page_size", n(info.page_size as f64)),
+                        ("prefix_cache", Json::Bool(info.prefix_cache)),
                     ];
                     if let Some(k) = info.draft_k {
                         fields.push(("draft_k", n(k as f64)));
@@ -617,6 +619,10 @@ mod tests {
         assert!(text.contains("\"admit\":\"fifo\""), "missing admit in {text}");
         assert!(text.contains("\"sessions\":2"), "missing sessions in {text}");
         assert!(text.contains("\"streaming\":true"), "missing streaming in {text}");
+        // Paged-KV capabilities: page granularity plus prefix sharing
+        // (on for continuous routes).
+        assert!(text.contains("\"page_size\":16"), "missing page_size in {text}");
+        assert!(text.contains("\"prefix_cache\":true"), "missing prefix_cache in {text}");
         // `metrics` keeps the legacy one-line aggregate under `summary`
         // and adds the per-route structured export under `routes`.
         let _ = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":2}"#);
@@ -677,6 +683,9 @@ mod tests {
         assert!(models.contains("\"spec\":true"), "{models}");
         assert!(models.contains("\"draft_k\":3"), "{models}");
         assert!(models.contains("\"mode\":\"speculative\""), "{models}");
+        // Speculative routes run twin pools in lockstep — no prefix
+        // sharing there.
+        assert!(models.contains("\"prefix_cache\":false"), "{models}");
 
         let resp = handle_line(&r, r#"{"model":"sim-125m","prompt":[5,6],"max_new":6}"#);
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));

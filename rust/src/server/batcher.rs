@@ -203,6 +203,13 @@ impl Batcher {
         self.queue.lock().unwrap().len()
     }
 
+    /// Highest `GenRequest::priority` among queued requests, if any — the
+    /// scheduler's preemption probe: a full route preempts a lower-priority
+    /// running sequence only when something strictly more urgent waits.
+    pub fn peek_priority(&self) -> Option<i32> {
+        self.queue.lock().unwrap().iter().map(|p| p.req.priority).max()
+    }
+
     /// Pop up to `max` queued requests without blocking (continuous
     /// admission between decode steps), in strict arrival order —
     /// [`Batcher::take_admit`] with [`AdmitPolicy::Fifo`].

@@ -41,8 +41,8 @@
 //! (`SLIM_TUNE=off` skips, `SLIM_TUNE_CACHE=<path>` persists the pick).
 
 use crate::model::{
-    forward_cached, forward_slots, CompressedWeights, KvCache, KvCachePool, KvDtype, KvLayout,
-    Linears, ModelConfig, Overrides, SampleParams, Sampler, Weights,
+    forward_cached, forward_slots, prefix_page_hashes, CompressedWeights, KvCache, KvCachePool,
+    KvDtype, KvLayout, Linears, ModelConfig, Overrides, SampleParams, Sampler, Weights,
 };
 use crate::tensor::Matrix;
 use std::sync::Arc;
@@ -425,11 +425,21 @@ impl Engine {
     /// admission path. Panics if the pool has no free slot — callers gate
     /// admission on [`KvCachePool::free_slots`]. A `max_new == 0` request
     /// comes back already complete (and `done`) with an untouched slot.
+    /// When the pool's prefix cache is enabled, a prompt whose windowed
+    /// prefix pages are already resident starts with those pages mapped
+    /// (`fed > 0`) — their prefill compute is skipped entirely, so a
+    /// cache-hit TTFT is one partial-page prefill plus decode.
     pub fn prefill_begin(&self, req: &GenRequest, pool: &mut KvCachePool) -> PrefillState {
         let slot = pool.alloc().expect("no free KV cache slot");
         let seq = if req.prompt.is_empty() { vec![0u32] } else { req.prompt.clone() };
         let prompt_len = seq.len();
         let win = prompt_len.min(self.cfg.max_seq);
+        let win_start = prompt_len - win;
+        let fed = if req.max_new == 0 {
+            0
+        } else {
+            self.prefix_seed(pool, slot, &seq[win_start..prompt_len])
+        };
         PrefillState {
             state: SeqState {
                 id: req.id,
@@ -441,10 +451,47 @@ impl Engine {
                 prompt_len,
                 sampler: Sampler::new(req.sample),
             },
-            win_start: prompt_len - win,
+            win_start,
             win,
-            fed: 0,
+            fed,
         }
+    }
+
+    /// Map any resident prefix-cache pages of windowed prompt `window`
+    /// into freshly-allocated `slot`, returning how many of its tokens are
+    /// now cached. Matches are capped so at least one windowed token
+    /// remains to feed — the completing chunk needs a query row to emit
+    /// the first token from.
+    fn prefix_seed(&self, pool: &mut KvCachePool, slot: usize, window: &[u32]) -> usize {
+        if !pool.prefix_cache_enabled() || window.len() < 2 {
+            return 0;
+        }
+        let page = pool.page_rows();
+        let hashes = prefix_page_hashes(window, page);
+        let cap = ((window.len() - 1) / page).min(hashes.len());
+        pool.lookup_prefix(slot, &hashes[..cap])
+    }
+
+    /// Re-admit a previously **preempted** sequence: claim a fresh slot
+    /// and return a [`PrefillState`] that re-feeds the sequence's FULL
+    /// windowed history (prompt + tokens already generated) as an ordinary
+    /// chunked prefill. Re-prefill is write-for-write identical to the
+    /// original pass (chunking never changes K/V contents), and the
+    /// completing chunk's last logits row belongs to the latest generated
+    /// token, so generation resumes exactly where it left off; the
+    /// sampler/stop/max_new state rides along untouched. Callers only
+    /// preempt un-wrapped sequences (`history().len() ≤ max_seq`) — past
+    /// the wrap, evicted rows could not be reconstructed. Prefix-cache
+    /// hits (the released pages are usually still hash-resident) make the
+    /// resume cheap.
+    pub fn prefill_reprise(&self, mut state: SeqState, pool: &mut KvCachePool) -> PrefillState {
+        let slot = pool.alloc().expect("no free KV cache slot");
+        state.slot = slot;
+        let total = state.seq.len();
+        let win = total.min(self.cfg.max_seq);
+        let win_start = total - win;
+        let fed = self.prefix_seed(pool, slot, &state.seq[win_start..total]);
+        PrefillState { state, win_start, win, fed }
     }
 
     /// Resume a multi-turn session onto its parked cache slot: the prompt
@@ -566,6 +613,15 @@ impl Engine {
             p.fed += c;
             stats.prefill_tokens += c;
             if p.fed == p.win {
+                // Publish the completed window's full pages to the prefix
+                // cache, so concurrent identical prompts map them instead
+                // of re-prefilling (no-op unless the pool enables it).
+                if pool.prefix_cache_enabled() {
+                    let lo = p.win_start;
+                    let hashes =
+                        prefix_page_hashes(&p.state.seq[lo..lo + p.win], pool.page_rows());
+                    pool.register_prefix(p.state.slot, &hashes);
+                }
                 // The chunk that completes the prompt emits the first token.
                 let t = p.state.pick(logits.row(row - 1));
                 p.state.push_token(t);

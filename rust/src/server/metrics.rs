@@ -20,6 +20,7 @@
 //! registry and export surfaces live in `server::obs`.
 
 use super::obs::{AtomicF64, Histogram, SampleRing};
+use crate::model::KvPageStats;
 use crate::util::json::{n, obj, Json};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -102,6 +103,16 @@ pub struct Metrics {
     spec_accepted: AtomicU64,
     /// Per-request acceptance rates (accepted/drafted), exact recent ring.
     spec_accepts: SampleRing,
+    /// Paged-KV pool snapshot, refreshed by the scheduler each tick
+    /// ([`Metrics::record_kv_pages`]): occupancy gauges (frames total /
+    /// mapped / shared) and the cumulative prefix-cache counters.
+    kv_pages_total: AtomicU64,
+    kv_pages_used: AtomicU64,
+    kv_pages_shared: AtomicU64,
+    prefix_hits: AtomicU64,
+    prefix_misses: AtomicU64,
+    prefix_evictions: AtomicU64,
+    prefix_saved_tokens: AtomicU64,
 }
 
 impl Metrics {
@@ -129,6 +140,13 @@ impl Metrics {
             spec_drafted: AtomicU64::new(0),
             spec_accepted: AtomicU64::new(0),
             spec_accepts: SampleRing::new(WINDOW),
+            kv_pages_total: AtomicU64::new(0),
+            kv_pages_used: AtomicU64::new(0),
+            kv_pages_shared: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            prefix_misses: AtomicU64::new(0),
+            prefix_evictions: AtomicU64::new(0),
+            prefix_saved_tokens: AtomicU64::new(0),
         }
     }
 
@@ -245,6 +263,33 @@ impl Metrics {
             return;
         }
         self.spec_accepts.push(accepted as f64 / drafted as f64);
+    }
+
+    /// Refresh the paged-KV pool snapshot. The pool lives on the scheduler
+    /// thread; this copies its point-in-time occupancy gauges and
+    /// monotonic prefix-cache counters (plain stores — the pool's own
+    /// counters are the source of truth, so the last tick wins).
+    pub fn record_kv_pages(&self, s: KvPageStats) {
+        self.kv_pages_total.store(s.pages_total as u64, Ordering::Relaxed);
+        self.kv_pages_used.store(s.pages_used as u64, Ordering::Relaxed);
+        self.kv_pages_shared.store(s.pages_shared as u64, Ordering::Relaxed);
+        self.prefix_hits.store(s.prefix_hits, Ordering::Relaxed);
+        self.prefix_misses.store(s.prefix_misses, Ordering::Relaxed);
+        self.prefix_evictions.store(s.prefix_evictions, Ordering::Relaxed);
+        self.prefix_saved_tokens.store(s.prefix_saved_tokens, Ordering::Relaxed);
+    }
+
+    /// Most recent paged-KV pool snapshot (zeros before any tick ran).
+    pub fn kv_pages(&self) -> KvPageStats {
+        KvPageStats {
+            pages_total: self.kv_pages_total.load(Ordering::Relaxed) as usize,
+            pages_used: self.kv_pages_used.load(Ordering::Relaxed) as usize,
+            pages_shared: self.kv_pages_shared.load(Ordering::Relaxed) as usize,
+            prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
+            prefix_misses: self.prefix_misses.load(Ordering::Relaxed),
+            prefix_evictions: self.prefix_evictions.load(Ordering::Relaxed),
+            prefix_saved_tokens: self.prefix_saved_tokens.load(Ordering::Relaxed),
+        }
     }
 
     fn add_busy(&self, stage: Stage, elapsed_s: f64) {
@@ -397,6 +442,16 @@ impl Metrics {
         self.spec_drafted.fetch_add(other.spec_drafted(), Ordering::Relaxed);
         self.spec_accepted.fetch_add(other.spec_accepted(), Ordering::Relaxed);
         self.spec_accepts.absorb(&other.spec_accepts);
+        // Page gauges and prefix counters sum across routes (each route
+        // owns its own pool).
+        let kp = other.kv_pages();
+        self.kv_pages_total.fetch_add(kp.pages_total as u64, Ordering::Relaxed);
+        self.kv_pages_used.fetch_add(kp.pages_used as u64, Ordering::Relaxed);
+        self.kv_pages_shared.fetch_add(kp.pages_shared as u64, Ordering::Relaxed);
+        self.prefix_hits.fetch_add(kp.prefix_hits, Ordering::Relaxed);
+        self.prefix_misses.fetch_add(kp.prefix_misses, Ordering::Relaxed);
+        self.prefix_evictions.fetch_add(kp.prefix_evictions, Ordering::Relaxed);
+        self.prefix_saved_tokens.fetch_add(kp.prefix_saved_tokens, Ordering::Relaxed);
     }
 
     /// Structured JSON export: counters/gauges as numbers, each histogram
@@ -436,6 +491,23 @@ impl Metrics {
                     ("accepted", n(self.spec_accepted() as f64)),
                     ("acceptance_rate", n(self.spec_acceptance_rate())),
                     ("accept_p50", n(self.spec_accept_pct(50.0))),
+                ]),
+            ),
+            (
+                "kv_pages",
+                obj(vec![
+                    ("total", n(self.kv_pages().pages_total as f64)),
+                    ("used", n(self.kv_pages().pages_used as f64)),
+                    ("shared", n(self.kv_pages().pages_shared as f64)),
+                ]),
+            ),
+            (
+                "prefix_cache",
+                obj(vec![
+                    ("hits", n(self.kv_pages().prefix_hits as f64)),
+                    ("misses", n(self.kv_pages().prefix_misses as f64)),
+                    ("evictions", n(self.kv_pages().prefix_evictions as f64)),
+                    ("saved_tokens", n(self.kv_pages().prefix_saved_tokens as f64)),
                 ]),
             ),
         ];
@@ -673,6 +745,40 @@ mod tests {
         assert_eq!(agg.max_queue_depth(), 5);
         assert_eq!(agg.spec_drafted(), 4);
         assert!(close(agg.latency_pct(99.0), 0.030));
+    }
+
+    #[test]
+    fn kv_page_snapshot_stores_and_absorbs() {
+        let m = Metrics::new();
+        assert_eq!(m.kv_pages().pages_total, 0);
+        let snap = KvPageStats {
+            pages_total: 32,
+            pages_used: 10,
+            pages_shared: 3,
+            prefix_hits: 4,
+            prefix_misses: 2,
+            prefix_evictions: 1,
+            prefix_saved_tokens: 64,
+        };
+        m.record_kv_pages(snap);
+        // Last-tick-wins store semantics, not accumulation.
+        m.record_kv_pages(snap);
+        let got = m.kv_pages();
+        assert_eq!(got.pages_used, 10);
+        assert_eq!(got.prefix_hits, 4);
+        assert_eq!(got.prefix_saved_tokens, 64);
+        let agg = Metrics::new();
+        agg.absorb(&m);
+        agg.absorb(&m);
+        // Routes sum in the aggregate.
+        assert_eq!(agg.kv_pages().pages_total, 64);
+        assert_eq!(agg.kv_pages().prefix_hits, 8);
+        let j = m.export_json();
+        assert_eq!(j.get("kv_pages").unwrap().get("used").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(
+            j.get("prefix_cache").unwrap().get("saved_tokens").and_then(Json::as_f64),
+            Some(64.0)
+        );
     }
 
     #[test]

@@ -38,7 +38,18 @@
 //!   holds ~4× fewer bytes per in-flight sequence, and f16 / bf16 holds
 //!   2× fewer at near-f32 fidelity (attention reads the 16-bit rows
 //!   directly through its half fast path — no f32 decode slab), while
-//!   greedy output stays batching-invariant either way. Engine
+//!   greedy output stays batching-invariant either way. The pool itself
+//!   is **page-granular** (fixed `model::PAGE_ROWS`-row pages, a global
+//!   ref-counted frame pool, per-sequence page tables with copy-on-write
+//!   `fork`), which buys the scheduler two more moves: **preemption** —
+//!   when a strictly higher-priority request waits on a full route, a
+//!   lowest-priority victim's pages are freed and the victim requeued as
+//!   a resumable prefill (token-identical to never having been paused;
+//!   `SchedPolicy::preempt_every` forces it for tests) — and **prefix
+//!   caching** — full prompt-prefix pages are content-hashed and shared
+//!   across requests, so a repeated system prompt prefills once and
+//!   every later hit maps the pages and skips that compute (the serve
+//!   bench's `prefix-shared` scenario gates the hit TTFT p95). Engine
 //!   construction also runs the one-shot kernel autotuner
 //!   (`kernels::tune`), which picks the packed-kernel and attention tile
 //!   shapes for this machine once per process.
@@ -76,8 +87,11 @@
 //! * [`api`] — newline-delimited-JSON TCP front-end over [`proto`] + a
 //!   blocking client: generate (one-shot or `"stream":true` incremental
 //!   frames), session commands, metrics/trace/models introspection.
-//! * [`metrics`] — per-route counters, queue depth, and
-//!   queue-wait/TTFT/decode-latency percentiles the benches read.
+//! * [`metrics`] — per-route counters, queue depth,
+//!   queue-wait/TTFT/decode-latency percentiles the benches read, and
+//!   the KV page-pool occupancy gauges + prefix-cache counters
+//!   (`Metrics::kv_pages`) exported as `slim_kv_pages_*` /
+//!   `slim_prefix_cache_*` in the Prometheus exposition.
 //! * [`obs`] — the observability substrate the above emit into.
 //!
 //! # Observability

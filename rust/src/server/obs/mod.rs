@@ -95,12 +95,16 @@ impl Registry {
     pub fn prometheus(&self) -> String {
         let routes = self.routes();
         let mut out = String::new();
-        let counters: [(&str, fn(&Metrics) -> f64); 5] = [
+        let counters: [(&str, fn(&Metrics) -> f64); 9] = [
             ("slim_requests_total", |m| m.requests() as f64),
             ("slim_batches_total", |m| m.batches() as f64),
             ("slim_tokens_total", |m| m.tokens() as f64),
             ("slim_spec_drafted_total", |m| m.spec_drafted() as f64),
             ("slim_spec_accepted_total", |m| m.spec_accepted() as f64),
+            ("slim_prefix_cache_hits_total", |m| m.kv_pages().prefix_hits as f64),
+            ("slim_prefix_cache_misses_total", |m| m.kv_pages().prefix_misses as f64),
+            ("slim_prefix_cache_evictions_total", |m| m.kv_pages().prefix_evictions as f64),
+            ("slim_prefix_cache_saved_tokens_total", |m| m.kv_pages().prefix_saved_tokens as f64),
         ];
         for (name, get) in counters {
             let _ = writeln!(out, "# TYPE {name} counter");
@@ -108,9 +112,12 @@ impl Registry {
                 let _ = writeln!(out, "{name}{{route=\"{route}\"}} {}", get(m));
             }
         }
-        let gauges: [(&str, fn(&Metrics) -> f64); 2] = [
+        let gauges: [(&str, fn(&Metrics) -> f64); 5] = [
             ("slim_queue_depth", |m| m.queue_depth() as f64),
             ("slim_queue_depth_max", |m| m.max_queue_depth() as f64),
+            ("slim_kv_pages_total", |m| m.kv_pages().pages_total as f64),
+            ("slim_kv_pages_used", |m| m.kv_pages().pages_used as f64),
+            ("slim_kv_pages_shared", |m| m.kv_pages().pages_shared as f64),
         ];
         for (name, get) in gauges {
             let _ = writeln!(out, "# TYPE {name} gauge");
@@ -269,6 +276,8 @@ mod tests {
         let text = reg.prometheus();
         assert!(text.contains("# TYPE slim_requests_total counter"));
         assert!(text.contains("slim_requests_total{route=\"sim-125m\"} 1"));
+        assert!(text.contains("# TYPE slim_kv_pages_used gauge"));
+        assert!(text.contains("# TYPE slim_prefix_cache_hits_total counter"));
         assert!(text.contains("quantile=\"0.95\""));
         // Each TYPE family declared exactly once even with several routes.
         reg.route("other");

@@ -473,6 +473,10 @@ mod tests {
             r#"{"v":2,"model":"m","prompt":[1],"max_tokens":5}"#,
             r#"{"cmd":"metrics","extra":1}"#,
             r#"{"v":2,"cmd":"session_open","model":"m","prompt":[1]}"#,
+            // `page_size` / `prefix_cache` are response-only capability
+            // fields on the `models` reply — never request knobs.
+            r#"{"v":2,"cmd":"models","page_size":16}"#,
+            r#"{"v":2,"model":"m","prompt":[1],"prefix_cache":true}"#,
         ] {
             let (_, err) = perr(line);
             assert_eq!(err.code, codes::BAD_REQUEST, "{line}");

@@ -44,7 +44,7 @@ use super::metrics::Metrics;
 use super::obs::{EventKind, FlightRecorder, Registry, RouteObs, DEFAULT_CAPACITY};
 use super::scheduler::{SchedPolicy, Scheduler};
 use super::session::{SessionError, SessionTable};
-use crate::model::{KvDtype, SampleParams};
+use crate::model::{page_rows_for, KvDtype, SampleParams};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -101,6 +101,11 @@ struct Route {
     /// Session registry shared with the route's scheduler; `None` when the
     /// route does not serve sessions (fixed routes, `max_sessions == 0`).
     sessions: Option<Arc<SessionTable>>,
+    /// KV page granularity (rows per page) of the route's paged pool.
+    page_size: usize,
+    /// Whether the route's scheduler shares prompt-prefix pages across
+    /// requests (continuous routes only; off on fixed and speculative).
+    prefix_cache: bool,
     _worker: std::thread::JoinHandle<()>,
 }
 
@@ -120,6 +125,10 @@ pub struct RouteInfo {
     /// Whether streamed delivery is available (all routes: native on
     /// continuous/speculative, emulated on fixed).
     pub streaming: bool,
+    /// KV page granularity (rows per page) of the route's paged pool.
+    pub page_size: usize,
+    /// Whether the route shares prompt-prefix KV pages across requests.
+    pub prefix_cache: bool,
 }
 
 /// Routes generation requests to named engines.
@@ -160,6 +169,7 @@ impl Router {
         let name = engine.name.clone();
         let vocab = engine.config().vocab;
         let kv_dtype = engine.kv_dtype();
+        let page_size = page_rows_for(engine.config().max_seq);
         let obs = self.route_obs(&name);
         let batcher =
             Arc::new(Batcher::with_recorder(policy, Arc::clone(&self.recorder), obs.route));
@@ -216,6 +226,8 @@ impl Router {
             mode: "fixed",
             admit: AdmitPolicy::Fifo,
             sessions: None,
+            page_size,
+            prefix_cache: false,
             _worker: worker,
         };
         self.routes.insert(name, route);
@@ -227,6 +239,7 @@ impl Router {
     pub fn register_continuous(&mut self, engine: Engine, policy: SchedPolicy) {
         let name = engine.name.clone();
         let vocab = engine.config().vocab;
+        let page_size = page_rows_for(engine.config().max_seq);
         // Policy override, else the engine's own dtype — the same
         // resolution the scheduler applies to its pool.
         let kv_dtype = policy.kv_dtype.unwrap_or_else(|| engine.kv_dtype());
@@ -250,6 +263,8 @@ impl Router {
             mode: "continuous",
             admit: policy.admit,
             sessions,
+            page_size,
+            prefix_cache: true,
             _worker: worker,
         };
         self.routes.insert(name, route);
@@ -267,6 +282,7 @@ impl Router {
     pub fn register_speculative(&mut self, target: Engine, draft: Engine, policy: SchedPolicy) {
         let name = target.name.clone();
         let vocab = target.config().vocab;
+        let page_size = page_rows_for(target.config().max_seq);
         let kv_dtype = policy.kv_dtype.unwrap_or_else(|| target.kv_dtype());
         let draft_k = Some(policy.draft_k);
         let obs = self.route_obs(&name);
@@ -289,6 +305,8 @@ impl Router {
             mode: "speculative",
             admit: policy.admit,
             sessions,
+            page_size,
+            prefix_cache: false,
             _worker: worker,
         };
         self.routes.insert(name, route);
@@ -327,6 +345,8 @@ impl Router {
                 draft_k: r.draft_k,
                 max_sessions: r.sessions.as_ref().map_or(0, |t| t.max_sessions()),
                 streaming: true,
+                page_size: r.page_size,
+                prefix_cache: r.prefix_cache,
             })
             .collect()
     }
@@ -779,6 +799,10 @@ mod tests {
         assert_eq!(info.max_sessions, 2);
         assert!(info.streaming);
         assert_eq!(info.draft_k, None);
+        // sim-125m has max_seq 64 → 16-row pages; continuous routes share
+        // prompt-prefix pages.
+        assert_eq!(info.page_size, 16);
+        assert!(info.prefix_cache);
 
         let sid = r.session_open("sim-125m").unwrap();
         let opts = RequestOpts { max_new: 3, ..Default::default() };

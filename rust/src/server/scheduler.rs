@@ -58,6 +58,28 @@
 //! prefill. Parked slots are a cache, not a reservation: plain admissions
 //! reclaim them LRU-first whenever the pool runs dry.
 //!
+//! The serving pool is **paged** (`model::KvCachePool`: fixed-size pages,
+//! ref-counted frames, per-sequence page tables), which buys the loop two
+//! more moves. **Prefix caching**: non-speculative routes hash each
+//! admitted prompt's full prefix pages; a later request whose prompt
+//! starts with an already-resident prefix maps those shared frames
+//! (refcount bump, zero copies) and prefills only the tail — its TTFT is
+//! one partial prefill instead of the whole prompt, and the pool's
+//! hit/miss/saved-token counters land in the route metrics
+//! (`slim_prefix_cache_*`). **Preemption**: when every slot is busy and a
+//! strictly higher-priority request waits, the scheduler releases the
+//! lowest-priority running sequence's pages ([`KvCachePool::free`] —
+//! shared frames survive under their refcounts) and parks it as a
+//! resumable entry; freed capacity admits the urgent
+//! arrival immediately, and the victim re-enters through
+//! [`Engine::prefill_reprise`] (a windowed re-prefill over prompt +
+//! generated-so-far, chunked like any admission — token-identical, see
+//! the forced-preemption tests). Only un-wrapped plain sequences are
+//! eligible: a ring slot past `max_seq` keeps write-time rotary bases a
+//! re-prefill would rebase, and speculative routes must keep their twin
+//! draft pool in slot lockstep. `SchedPolicy::preempt_every` forces a
+//! preemption every k ticks for tests and benches.
+//!
 //! Generation depth never stalls the loop (ring slots make decode O(1)
 //! per token), and prompt *length* no longer stalls it either: per-tick
 //! forward cost is bounded by `max(step_tokens, live decodes)` — live
@@ -76,6 +98,7 @@ use super::obs::{EventKind, RouteObs};
 use super::session::SessionTable;
 use super::spec::{SpecEngine, SpecStepStats};
 use crate::model::{KvCachePool, KvDtype};
+use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
@@ -127,6 +150,12 @@ pub struct SchedPolicy {
     /// route's effective capacity (an evicted session re-prefills from
     /// scratch on its next turn).
     pub max_sessions: usize,
+    /// Forced-preemption cadence for tests and benches: every k-th tick,
+    /// preempt one eligible in-flight sequence (release its pages, requeue
+    /// it as a resumable prefill) even without slot pressure, rotating the
+    /// victim. 0 — the default — disables forcing; priority-driven
+    /// preemption under a full pool is always on for plain routes.
+    pub preempt_every: usize,
 }
 
 impl Default for SchedPolicy {
@@ -139,6 +168,7 @@ impl Default for SchedPolicy {
             admit: AdmitPolicy::Fifo,
             draft_k: 0,
             max_sessions: 0,
+            preempt_every: 0,
         }
     }
 }
@@ -167,6 +197,9 @@ struct InFlight {
     /// Session this turn belongs to, if any: retirement parks the slot in
     /// the route's [`SessionTable`] instead of freeing it.
     session: Option<u64>,
+    /// Admission priority (`GenRequest::priority`), kept so a full pool
+    /// can pick its lowest-priority flight as the preemption victim.
+    priority: i32,
 }
 
 /// One admitted sequence still feeding its prompt, chunk by chunk.
@@ -176,6 +209,36 @@ struct Filling {
     enqueued: Instant,
     stream: Option<Sender<StreamEvent>>,
     session: Option<u64>,
+    priority: i32,
+    /// Set when this prefill is a preempted sequence re-feeding its window
+    /// ([`Engine::prefill_reprise`]): promotion restores the carried
+    /// delivery state instead of starting fresh (TTFT was already
+    /// recorded; streamed clients must not see their tokens twice).
+    carry: Option<ResumeCarry>,
+}
+
+/// Delivery state that survives a preemption: everything the original
+/// [`InFlight`] had already told the client or the metrics.
+struct ResumeCarry {
+    ttft_s: Option<f64>,
+    drafted: usize,
+    accepted: usize,
+    streamed: usize,
+    last_emit: Option<Instant>,
+}
+
+/// A preempted sequence waiting for a free slot: its pages are released
+/// (shared frames live on under their refcounts) and its full state —
+/// prompt, generated tokens, sampler position — rides along, so resuming
+/// is an ordinary windowed re-prefill that continues the exact token
+/// stream.
+struct Preempted {
+    state: SeqState,
+    result_slot: Sender<GenResult>,
+    enqueued: Instant,
+    priority: i32,
+    stream: Option<Sender<StreamEvent>>,
+    carry: ResumeCarry,
 }
 
 /// Drives an [`Engine`] continuously over a [`Batcher`] queue.
@@ -257,13 +320,31 @@ impl Scheduler {
                 s.draft().kv_layout(),
             )
         });
+        // Prefix caching shares prompt-prefix pages across requests via
+        // refcount bumps in the serving pool. Speculative routes opt out:
+        // their twin draft pool must allocate in slot lockstep, and shared
+        // frames in one pool but not the other would break the pairing.
+        if self.spec.is_none() {
+            pool.set_prefix_cache(true);
+        }
         let mut flights: Vec<InFlight> = Vec::new();
         let mut filling: Vec<Filling> = Vec::new();
+        let mut preempted: VecDeque<Preempted> = VecDeque::new();
         let mut admit_state = AdmitState::default();
+        let mut tick: u64 = 0;
         loop {
             // ── Admit ─────────────────────────────────────────────────
-            if flights.is_empty() && filling.is_empty() && !batcher.wait_pending() {
-                return; // closed + drained + nothing in flight
+            if flights.is_empty()
+                && filling.is_empty()
+                && preempted.is_empty()
+                && !batcher.wait_pending()
+            {
+                // Closed + drained + nothing in flight. Every non-session
+                // retirement returned its pages; whatever is still mapped
+                // belongs to parked session slots, and the refcount
+                // bookkeeping must balance exactly (the leak check).
+                assert!(pool.refs_balanced(), "kv page refcounts out of balance at shutdown");
+                return;
             }
             // Slots surrendered by dropped sessions since the last tick:
             // only this thread may touch the pools, so drops are lazy.
@@ -276,7 +357,25 @@ impl Scheduler {
             // Capacity check counts live work only: parked session slots
             // are reclaimable on demand (resume or LRU eviction below), so
             // they never block admission.
-            let free = self.policy.max_slots - flights.len() - filling.len();
+            let mut free = self.policy.max_slots - flights.len() - filling.len();
+            // Priority preemption: a full pool with a strictly more urgent
+            // request waiting evicts its lowest-priority eligible flight —
+            // interactive arrivals never wait behind bulk work.
+            if free == 0 && self.spec.is_none() {
+                if let Some(top) = batcher.peek_priority() {
+                    let victim = flights
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, f)| self.preemptible(f) && f.priority < top)
+                        .min_by_key(|&(_, f)| f.priority)
+                        .map(|(i, _)| i);
+                    if let Some(i) = victim {
+                        let f = flights.swap_remove(i);
+                        self.preempt(f, &mut pool, &mut preempted);
+                        free = 1;
+                    }
+                }
+            }
             let pendings = batcher.take_admit(free, self.policy.admit, &mut admit_state);
             if !pendings.is_empty() {
                 // Backlog at admission time: what we just took plus what
@@ -311,6 +410,7 @@ impl Scheduler {
                             streamed: 0,
                             last_emit: None,
                             session,
+                            priority: pending.req.priority,
                         };
                         self.retire(flight, &mut pool, draft_pool.as_mut(), obs);
                     } else {
@@ -320,9 +420,30 @@ impl Scheduler {
                             enqueued: pending.enqueued,
                             stream: pending.stream,
                             session,
+                            priority: pending.req.priority,
+                            carry: None,
                         });
                     }
                 }
+            }
+            // Resume preempted sequences into whatever capacity admission
+            // left over, oldest first: each re-enters as a chunked windowed
+            // re-prefill over prompt + generated-so-far and picks up its
+            // carried delivery state at promotion.
+            let mut free = self.policy.max_slots - flights.len() - filling.len();
+            while free > 0 {
+                let Some(p) = preempted.pop_front() else { break };
+                let pre = self.engine.prefill_reprise(p.state, &mut pool);
+                filling.push(Filling {
+                    pre,
+                    result_slot: p.result_slot,
+                    enqueued: p.enqueued,
+                    stream: p.stream,
+                    session: None,
+                    priority: p.priority,
+                    carry: Some(p.carry),
+                });
+                free -= 1;
             }
             if flights.is_empty() && filling.is_empty() {
                 continue; // nothing admitted (e.g. only max_new=0 requests)
@@ -339,6 +460,7 @@ impl Scheduler {
             let per_flight = self.spec.as_ref().map_or(1, |s| s.draft_k() + 1);
             let budget = self.policy.step_tokens.saturating_sub(flights.len() * per_flight);
             metrics.record_step_occupancy(flights.len() + filling.len());
+            metrics.record_kv_pages(pool.page_stats());
             // Flight-recorder pre-tick snapshot: per-prefill remaining
             // prompt and per-decode generated length, so post-tick deltas
             // become chunk/step events. Skipped entirely when the recorder
@@ -442,19 +564,30 @@ impl Scheduler {
             while i < filling.len() {
                 if filling[i].pre.is_complete() {
                     let f = filling.swap_remove(i);
-                    let ttft = f.enqueued.elapsed().as_secs_f64();
-                    metrics.record_ttft(ttft);
+                    // A resumed (previously preempted) prefill restores its
+                    // carried delivery state: TTFT was recorded when the
+                    // sequence first promoted, streamed clients already
+                    // hold its first `streamed` tokens.
+                    let (ttft_s, drafted, accepted, streamed, last_emit) = match f.carry {
+                        Some(c) => (c.ttft_s, c.drafted, c.accepted, c.streamed, c.last_emit),
+                        None => {
+                            let ttft = f.enqueued.elapsed().as_secs_f64();
+                            metrics.record_ttft(ttft);
+                            (Some(ttft), 0, 0, 0, None)
+                        }
+                    };
                     let flight = InFlight {
                         state: f.pre.into_state(),
                         result_slot: f.result_slot,
                         enqueued: f.enqueued,
-                        ttft_s: Some(ttft),
-                        drafted: 0,
-                        accepted: 0,
+                        ttft_s,
+                        drafted,
+                        accepted,
                         stream: f.stream,
-                        streamed: 0,
-                        last_emit: None,
+                        streamed,
+                        last_emit,
                         session: f.session,
+                        priority: f.priority,
                     };
                     // Even a flight done at promotion (max_new == 1, or a
                     // stop on the first token) joins the decode batch for
@@ -479,7 +612,59 @@ impl Scheduler {
                     i += 1;
                 }
             }
+            // ── Forced preemption (tests / benches) ───────────────────
+            // Runs after the retire scan so a finished flight is never
+            // parked past its result delivery; the victim index rotates so
+            // repeated forcing spreads across the batch.
+            tick += 1;
+            if self.policy.preempt_every > 0
+                && self.spec.is_none()
+                && tick % self.policy.preempt_every as u64 == 0
+                && !flights.is_empty()
+            {
+                let start = ((tick / self.policy.preempt_every as u64) as usize) % flights.len();
+                let victim = (0..flights.len())
+                    .map(|d| (start + d) % flights.len())
+                    .find(|&i| self.preemptible(&flights[i]));
+                if let Some(i) = victim {
+                    let f = flights.swap_remove(i);
+                    self.preempt(f, &mut pool, &mut preempted);
+                }
+            }
         }
+    }
+
+    /// Whether a flight may be preempted and later resumed token-identically.
+    /// Session turns are excluded (their slot custody belongs to the
+    /// [`SessionTable`] lifecycle), and so are sequences whose history has
+    /// outgrown the context window: a wrapped ring slot keeps each retained
+    /// row's write-time position embedding, which the windowed re-prefill
+    /// would rebase — resuming one would change its tokens. (Exactly
+    /// `max_seq` is still fine: every retained row was written at base 0.)
+    fn preemptible(&self, f: &InFlight) -> bool {
+        f.session.is_none() && f.state.history().len() <= self.engine.config().max_seq
+    }
+
+    /// Release `f`'s pages back to the pool (shared frames survive under
+    /// their refcounts) and park its sequence + delivery state for resume.
+    /// Never called on speculative routes — the twin draft pool's slot
+    /// must stay paired with the serving slot.
+    fn preempt(&self, f: InFlight, pool: &mut KvCachePool, out: &mut VecDeque<Preempted>) {
+        pool.free(f.state.slot);
+        out.push_back(Preempted {
+            state: f.state,
+            result_slot: f.result_slot,
+            enqueued: f.enqueued,
+            priority: f.priority,
+            stream: f.stream,
+            carry: ResumeCarry {
+                ttft_s: f.ttft_s,
+                drafted: f.drafted,
+                accepted: f.accepted,
+                streamed: f.streamed,
+                last_emit: f.last_emit,
+            },
+        });
     }
 
     /// Claim cache slot(s) for one admitted request and build its
@@ -1343,5 +1528,149 @@ mod tests {
         }
         batcher.close();
         worker.join().unwrap();
+    }
+
+    /// Tentpole acceptance: forcing a preemption every k ticks (victim
+    /// rotating across the batch) must never change anyone's tokens — each
+    /// parked sequence resumes through a chunked windowed re-prefill that
+    /// is bit-identical to having never been preempted. The shutdown
+    /// refcount-balance assert inside `run` doubles as the leak check.
+    #[test]
+    fn forced_preemption_preserves_solo_equivalence() {
+        for k in [1usize, 2, 3] {
+            let policy = SchedPolicy {
+                max_slots: 3,
+                chunk_tokens: 3,
+                step_tokens: 4,
+                preempt_every: k,
+                ..Default::default()
+            };
+            solo_equivalence_policy(dense_engine(7), 5, policy);
+        }
+    }
+
+    /// Forced preemption with quantized serving KV: release/re-prefill
+    /// round-trips the window through the f16/int8/fp8 encoders exactly as
+    /// solo decode would, so tokens still match the solo reference.
+    #[test]
+    fn forced_preemption_quantized_kv() {
+        let cfg = by_name("sim-125m").unwrap();
+        let mut rng = Pcg32::seeded(31);
+        let w = init(&cfg, &mut rng);
+        for dtype in [KvDtype::F16, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let engine = Arc::new(
+                Engine::new("qkv-pre", cfg.clone(), Arc::new(w.clone()), None)
+                    .with_kv_dtype(dtype),
+            );
+            let policy = SchedPolicy {
+                max_slots: 3,
+                chunk_tokens: 4,
+                step_tokens: 6,
+                preempt_every: 2,
+                ..Default::default()
+            };
+            solo_equivalence_policy(engine, 5, policy);
+        }
+    }
+
+    /// Sequences whose history outgrew the ring window are preemption-
+    /// INELIGIBLE (their retained rows keep write-time position bases a
+    /// re-prefill would rebase): under forced preemption, wrapped long
+    /// sequences run untouched while short batchmates preempt and resume,
+    /// and everyone still matches solo.
+    #[test]
+    fn forced_preemption_skips_wrapped_slots() {
+        let cfg = crate::model::ModelConfig {
+            name: "ring-preempt".to_string(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff_ratio: 2,
+            vocab: 96,
+            max_seq: 8,
+            stands_for: "preemption eligibility test".to_string(),
+        };
+        let mut rng = Pcg32::seeded(37);
+        let w = init(&cfg, &mut rng);
+        let engine = Arc::new(Engine::new("ring-pre", cfg.clone(), Arc::new(w), None));
+        let long_new = 2 * cfg.max_seq + 3;
+        let reqs = vec![
+            GenRequest::new(0, vec![5, 6, 7], long_new),
+            GenRequest::new(1, vec![9], 2),
+            GenRequest::new(2, vec![11, 12], 3),
+            GenRequest::new(3, vec![13], long_new),
+        ];
+        let policy = SchedPolicy {
+            max_slots: 2,
+            chunk_tokens: 2,
+            step_tokens: 3,
+            preempt_every: 2,
+            ..Default::default()
+        };
+        let outs = serve_policy(engine.clone(), &reqs, policy, &[]);
+        for (req, got) in reqs.iter().zip(outs.iter()) {
+            assert_eq!(got.len(), req.max_new, "request {} length", req.id);
+            let solo = engine.generate_batch(std::slice::from_ref(req));
+            assert_eq!(got, &solo[0].tokens, "request {} diverged", req.id);
+        }
+    }
+
+    /// A full pool preempts its lowest-priority flight the moment a
+    /// strictly higher-priority request waits: with ONE slot, the bulk
+    /// sequence parks mid-decode, the interactive request runs to
+    /// completion first, and the bulk sequence resumes — both
+    /// token-identical to their solo runs. (Both requests are queued
+    /// before the loop starts, so the preemption is deterministic, not a
+    /// timing accident.)
+    #[test]
+    fn priority_preemption_interactive_overtakes_bulk() {
+        let engine = dense_engine(33);
+        let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+        let obs = RouteObs::standalone("preempt-prio");
+        let bulk = GenRequest::new(0, vec![5, 6, 7], 24).with_priority(0);
+        let inter = GenRequest::new(1, vec![9, 10], 3).with_priority(1);
+        let rx_bulk = batcher.submit(bulk.clone());
+        let rx_inter = batcher.submit(inter.clone());
+        batcher.close();
+        let worker = {
+            let b = batcher.clone();
+            let o = obs.clone();
+            let e = engine.clone();
+            std::thread::spawn(move || {
+                Scheduler::new(e, SchedPolicy { max_slots: 1, ..Default::default() }).run(&b, &o)
+            })
+        };
+        let bulk_out = rx_bulk.recv_timeout(Duration::from_secs(60)).unwrap();
+        let inter_out = rx_inter.recv_timeout(Duration::from_secs(60)).unwrap();
+        worker.join().unwrap();
+        assert_eq!(bulk_out.tokens, engine.generate_batch(&[bulk])[0].tokens);
+        assert_eq!(inter_out.tokens, engine.generate_batch(&[inter])[0].tokens);
+    }
+
+    /// Prefix caching: a second request with an identical prompt revives
+    /// the first one's registered prefix pages instead of re-prefilling
+    /// them — same greedy tokens (shared pages are the same bytes), pool
+    /// hit counters up, and the skipped prefill tokens counted.
+    #[test]
+    fn shared_prefix_reuses_pages_and_matches_solo() {
+        let engine = dense_engine(35);
+        let policy = SchedPolicy { max_slots: 2, ..Default::default() };
+        let (batcher, obs, _sessions, worker) = spawn_sched(engine.clone(), policy, "prefix-t");
+        // 36 tokens = 2 full 16-row pages (hashed + shareable) + a tail.
+        let prompt: Vec<u32> = (0..36u32).map(|i| 2 + (i % 60)).collect();
+        let a = GenRequest::new(0, prompt.clone(), 4);
+        let first = batcher.submit(a.clone()).recv_timeout(Duration::from_secs(60)).unwrap();
+        let b = GenRequest::new(1, prompt, 4);
+        let second = batcher.submit(b).recv_timeout(Duration::from_secs(60)).unwrap();
+        batcher.close();
+        worker.join().unwrap();
+        assert_eq!(first.tokens, second.tokens, "prefix hit changed tokens");
+        assert_eq!(first.tokens, engine.generate_batch(&[a])[0].tokens);
+        let pages = obs.metrics.kv_pages();
+        assert!(pages.prefix_hits >= 1, "no prefix hit recorded: {pages:?}");
+        // Two full pages revived on the hit: 32 prompt tokens never
+        // re-prefilled.
+        assert!(pages.prefix_saved_tokens >= 32, "saved {}", pages.prefix_saved_tokens);
+        assert!(pages.pages_total > 0 && pages.pages_used <= pages.pages_total);
     }
 }

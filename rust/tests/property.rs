@@ -716,6 +716,142 @@ fn prop_seeded_sampling_is_path_invariant() {
 }
 
 #[test]
+fn prop_forced_preemption_serving_equals_solo() {
+    // Paged-KV preemption must be OUTPUT-INVARIANT: with the scheduler
+    // forced to preempt a running sequence every k ticks (releasing its
+    // non-shared pages and requeueing it as a resumable prefill over its
+    // token history), every request still gets exactly the greedy tokens
+    // its solo reference produces — across KV storage dtypes, and with
+    // one budget long enough to wrap the ring (a wrapped sequence turns
+    // ineligible for preemption but must keep decoding correctly beside
+    // the churn). The scheduler's shutdown path asserts the page
+    // refcounts balanced after all sequences retire.
+    use slim::server::scheduler::SchedPolicy;
+    use slim::server::Router;
+    let cfg = ModelConfig {
+        name: "preempt-prop".to_string(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff_ratio: 2,
+        vocab: 96,
+        max_seq: 8,
+        stands_for: "forced preemption property test".to_string(),
+    };
+    for (seed, k) in [(1u64, 1usize), (2, 2), (3, 3)] {
+        let mut rng = Pcg32::seeded(seed);
+        let weights = Arc::new(init(&cfg, &mut rng));
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let solo =
+                Engine::new("solo", cfg.clone(), weights.clone(), None).with_kv_dtype(dtype);
+            let mut router = Router::new();
+            let policy = SchedPolicy {
+                max_slots: 2,
+                chunk_tokens: 2,
+                step_tokens: 4,
+                preempt_every: k,
+                ..Default::default()
+            };
+            router.register_continuous(
+                Engine::new("routed", cfg.clone(), weights.clone(), None).with_kv_dtype(dtype),
+                policy,
+            );
+            let reqs: Vec<(Vec<u32>, usize)> = (0..5usize)
+                .map(|i| {
+                    let plen = 1 + rng.below_usize(cfg.max_seq - 2);
+                    let prompt: Vec<u32> =
+                        (0..plen).map(|_| rng.below(cfg.vocab as u32)).collect();
+                    // Request 0 decodes past the ring wrap; the rest stay
+                    // short (and preemptible) their whole lifetime.
+                    let max_new =
+                        if i == 0 { 2 * cfg.max_seq + 3 } else { 2 + rng.below_usize(4) };
+                    (prompt, max_new)
+                })
+                .collect();
+            let rxs: Vec<_> = reqs
+                .iter()
+                .map(|(p, m)| router.submit("routed", p.clone(), *m).unwrap())
+                .collect();
+            for ((prompt, max_new), rx) in reqs.iter().zip(rxs) {
+                let out = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+                let want =
+                    solo.generate_batch(&[GenRequest::new(0, prompt.clone(), *max_new)]);
+                assert_eq!(
+                    out.tokens,
+                    want[0].tokens,
+                    "seed {seed} k {k} dtype {} diverged under forced preemption",
+                    dtype.name()
+                );
+            }
+            router.shutdown();
+        }
+    }
+}
+
+#[test]
+fn prop_shared_prefix_serving_is_token_identical_and_saves_prefill() {
+    // Prefix sharing must never change content: requests whose prompts
+    // share full KV pages through a continuous route map the earlier
+    // request's cached pages (skipping that prefill compute) yet produce
+    // exactly their solo greedy tokens — the cached rows are bit-equal
+    // to freshly computed ones by content addressing. The route's
+    // prefix counters must witness the hits and saved tokens.
+    use slim::server::scheduler::SchedPolicy;
+    use slim::server::Router;
+    let cfg = ModelConfig {
+        name: "prefix-prop".to_string(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff_ratio: 2,
+        vocab: 96,
+        max_seq: 32, // 16-row pages, two per slot
+        stands_for: "shared prefix property test".to_string(),
+    };
+    for seed in [1u64, 2, 3] {
+        let mut rng = Pcg32::seeded(seed);
+        let weights = Arc::new(init(&cfg, &mut rng));
+        for dtype in [KvDtype::F32, KvDtype::Int8] {
+            let solo =
+                Engine::new("solo", cfg.clone(), weights.clone(), None).with_kv_dtype(dtype);
+            let mut router = Router::new();
+            let policy = SchedPolicy {
+                max_slots: 2,
+                chunk_tokens: 4,
+                step_tokens: 8,
+                ..Default::default()
+            };
+            router.register_continuous(
+                Engine::new("routed", cfg.clone(), weights.clone(), None).with_kv_dtype(dtype),
+                policy,
+            );
+            // A 16-token common prefix (one full page) with per-request
+            // tails; the cold request runs first so its pages are
+            // registered before the others look them up.
+            let common: Vec<u32> = (0..16).map(|_| rng.below(cfg.vocab as u32)).collect();
+            for tail_len in [4usize, 7, 2] {
+                let tail: Vec<u32> =
+                    (0..tail_len).map(|_| rng.below(cfg.vocab as u32)).collect();
+                let prompt = [common.clone(), tail].concat();
+                let out = router.generate("routed", prompt.clone(), 5).unwrap();
+                let want = solo.generate_batch(&[GenRequest::new(0, prompt, 5)]);
+                assert_eq!(
+                    out.tokens,
+                    want[0].tokens,
+                    "seed {seed} dtype {} diverged over shared prefix",
+                    dtype.name()
+                );
+            }
+            let kp = router.route_metrics("routed").unwrap().kv_pages();
+            assert!(kp.prefix_hits >= 2, "later requests must hit: {kp:?}");
+            assert!(kp.prefix_saved_tokens >= 32, "two hits save ≥32 tokens: {kp:?}");
+            assert!(kp.pages_total > 0 && kp.pages_used <= kp.pages_total);
+            router.shutdown();
+        }
+    }
+}
+
+#[test]
 fn prop_spec_decode_equals_target_greedy() {
     // Self-speculative decoding must be OUTPUT-INVARIANT: for every draft
     // depth k ∈ 1..=8, every KV storage dtype, prompts on both sides of

@@ -23,6 +23,14 @@
 //!   the client-observed streamed TTFT (submit → first token frame) the
 //!   wire protocol's `"stream":true` mode exists to deliver; streamed
 //!   throughput and first-frame p50 ride along as info rows;
+//! * prefix-cache hit TTFT p95 in the shared-system-prompt scenario
+//!   (`BENCH_serve.json`, `results.prefix-shared.short_ttft_p95_ms`) —
+//!   LOWER is better: requests whose prompt reuses a cached 64-token
+//!   prefix must keep skipping that prefill, so a >20% rise means the
+//!   page-sharing fast path stopped paying. The cold-population p95,
+//!   prefill-tokens-saved and hit counts ride along as info rows, as do
+//!   the preemption scenario's interactive-TTFT and bulk-completion
+//!   numbers;
 //! * speculative-decode speedup over the dense-cached target with the
 //!   int4-2:4 draft (`BENCH_spec.json`,
 //!   `results.spec-int4-2:4.speedup_vs_dense`) — higher is better; the
@@ -95,6 +103,7 @@ const METRICS: &[MetricSpec] = &[
     rel("BENCH_decode.json", &["results", "int4-2:4-kv-f16", "decode_tok_per_s"], true, false),
     rel("BENCH_serve.json", &["results", "int4-2:4-continuous", "tok_per_s"], true, false),
     rel("BENCH_serve.json", &["results", "hol-chunked", "short_ttft_p95_ms"], true, true),
+    rel("BENCH_serve.json", &["results", "prefix-shared", "short_ttft_p95_ms"], true, true),
     rel("BENCH_serve.json", &["results", "int4-2:4-streamed", "first_frame_p95_ms"], true, true),
     rel("BENCH_spec.json", &["results", "spec-int4-2:4", "speedup_vs_dense"], true, false),
     MetricSpec {
@@ -131,6 +140,17 @@ const METRICS: &[MetricSpec] = &[
     rel("BENCH_serve.json", &["results", "int4-2:4-streamed", "first_frame_p50_ms"], false, true),
     rel("BENCH_serve.json", &["results", "hol-monolithic", "short_ttft_p95_ms"], false, true),
     rel("BENCH_serve.json", &["results", "hol-chunked-fair", "short_ttft_p95_ms"], false, true),
+    rel("BENCH_serve.json", &["results", "prefix-shared", "cold_ttft_p95_ms"], false, true),
+    rel("BENCH_serve.json", &["results", "prefix-shared", "prefill_tokens_saved"], false, false),
+    rel("BENCH_serve.json", &["results", "prefix-shared", "prefix_hits"], false, false),
+    rel("BENCH_serve.json", &["results", "preemption", "interactive_ttft_p95_ms"], false, true),
+    rel(
+        "BENCH_serve.json",
+        &["results", "preemption", "interactive_ttft_p95_ms_fifo"],
+        false,
+        true,
+    ),
+    rel("BENCH_serve.json", &["results", "preemption", "bulk_done_ms"], false, true),
     rel(
         "BENCH_serve.json",
         &["results", "metrics-overhead", "tok_per_s_recorder_on"],
